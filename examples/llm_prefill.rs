@@ -1,0 +1,119 @@
+//! End-to-end driver: LLaMA-70B-style transformer-layer prefill on
+//! BestArch, composing every layer of the stack:
+//!
+//! 1. *Functional*: attention numerics run through the full three-layer
+//!    path — the Rust group dataflow moves real data and the per-tile
+//!    compute is the AOT-compiled Pallas `block_step` kernel executed via
+//!    PJRT — and are checked against the golden reference.
+//! 2. *Performance*: the same layer's compute (MHA via FlatAttention +
+//!    QKV/O/FFN GEMMs via collective SUMMA) is simulated on the Table I /
+//!    BestArch accelerator, reporting per-kernel and full-prefill runtime,
+//!    utilization, and HBM traffic — the paper's headline metrics.
+//!
+//!     make artifacts && cargo run --release --example llm_prefill
+
+use flatattention::arch::presets;
+use flatattention::coordinator::best_group;
+use flatattention::dataflow::summa::{summa_program, GemmWorkload};
+use flatattention::dataflow::{Dataflow, Workload};
+use flatattention::functional::{attention_golden, run_flat_group_functional, RuntimeCompute};
+use flatattention::runtime::{default_artifact_dir, Runtime};
+use flatattention::sim::execute;
+use flatattention::util::{pool, Rng, Tensor};
+
+fn main() {
+    let arch = presets::best_arch();
+    println!("=== end-to-end LLaMA-70B-style prefill on {} ===\n", arch.name);
+
+    // ---------------------------------------------------------------
+    // Part 1 — functional validation through PJRT (small real workload).
+    // ---------------------------------------------------------------
+    let dir = default_artifact_dir();
+    if Runtime::available(&dir) {
+        let rt = Runtime::new(dir).expect("PJRT runtime");
+        println!("[functional] PJRT platform: {}", rt.platform());
+        let (s, d, g) = (256usize, 64usize, 2usize);
+        let mut rng = Rng::new(0xE2E);
+        let q = Tensor::randn(s, d, &mut rng);
+        let k = Tensor::randn(s, d, &mut rng);
+        let v = Tensor::randn(s, d, &mut rng);
+        let compute = RuntimeCompute { runtime: &rt };
+        let res = run_flat_group_functional(&q, &k, &v, g, &compute).expect("group run");
+        let diff = res.output.max_abs_diff(&attention_golden(&q, &k, &v));
+        println!(
+            "[functional] FlatAttention group {g}x{g} over S={s}, D={d}: {} compiled block steps, max |diff| vs golden = {diff:.2e}",
+            res.block_steps
+        );
+        assert!(diff < 2e-3, "functional validation failed");
+        println!("[functional] OK — Rust dataflow + AOT Pallas kernel reproduce attention\n");
+    } else {
+        println!("[functional] artifacts missing — run `make artifacts` first (skipping PJRT check)\n");
+    }
+
+    // ---------------------------------------------------------------
+    // Part 2 — full prefill performance on the simulated accelerator.
+    // LLaMA-70B: hidden 8192, ffn 28672, 64 heads (D=128), 80 layers,
+    // GQA ignored (worst case), prefill S=4096, B=1.
+    // ---------------------------------------------------------------
+    let (hidden, ffn, s, heads, d) = (8192u64, 28672u64, 4096u64, 64u64, 128u64);
+    let threads = pool::default_threads();
+
+    // MHA via FlatAttention with the optimal group.
+    let mha = Workload::new(s, d, heads, 1);
+    let mha_best = best_group(&arch, &mha, Dataflow::FlatAsyn, threads);
+
+    // Projections + FFN via collective SUMMA.
+    let gemms = [
+        GemmWorkload::new(s, hidden, 3 * hidden, "qkv-proj"),
+        GemmWorkload::new(s, hidden, hidden, "o-proj"),
+        GemmWorkload::new(s, hidden, 2 * ffn, "ffn-up+gate"),
+        GemmWorkload::new(s, ffn, hidden, "ffn-down"),
+    ];
+
+    println!("[prefill] per-kernel results (S={s}, hidden={hidden}, ffn={ffn}):");
+    println!(
+        "  {:<12} {:>12} {:>9} {:>10}",
+        "kernel", "runtime", "util", "HBM"
+    );
+    let mut total_cycles = mha_best.makespan;
+    let mut total_bytes = mha_best.hbm_bytes;
+    let mut total_flops = mha.matmul_flops();
+    println!(
+        "  {:<12} {:>9.3} ms {:>8.1}% {:>7.2} GB   (FlatAsyn, group {}x{})",
+        "attention",
+        mha_best.runtime_ms,
+        mha_best.utilization * 100.0,
+        mha_best.hbm_bytes as f64 / 1e9,
+        mha_best.group,
+        mha_best.group
+    );
+    for g in &gemms {
+        let stats = execute(&summa_program(&arch, g), 0);
+        let util = stats.compute_utilization(arch.peak_flops_per_cycle());
+        println!(
+            "  {:<12} {:>9.3} ms {:>8.1}% {:>7.2} GB   (SUMMA)",
+            g.label,
+            stats.runtime_ms(arch.freq_ghz),
+            util * 100.0,
+            stats.hbm_bytes as f64 / 1e9
+        );
+        total_cycles += stats.makespan;
+        total_bytes += stats.hbm_bytes;
+        total_flops += g.flops();
+    }
+
+    let layers = 80u64;
+    let layer_ms = total_cycles as f64 / (arch.freq_ghz * 1e9) * 1e3;
+    let layer_util = total_flops as f64 / (total_cycles as f64 * arch.peak_flops_per_cycle() as f64);
+    println!("\n[prefill] one transformer layer: {layer_ms:.3} ms, {:.1}% utilization, {:.2} GB HBM traffic", layer_util * 100.0, total_bytes as f64 / 1e9);
+    println!(
+        "[prefill] {layers}-layer model prefill: {:.1} ms, {:.1} TFLOP total, {:.0} TFLOPS sustained",
+        layer_ms * layers as f64,
+        total_flops as f64 * layers as f64 / 1e12,
+        total_flops as f64 / (total_cycles as f64 / (arch.freq_ghz * 1e9)) / 1e12
+    );
+    println!(
+        "[prefill] headline: attention utilization {:.1}% (paper: up to 89.3%)",
+        mha_best.utilization * 100.0
+    );
+}

@@ -1,0 +1,47 @@
+//! Quickstart: simulate one MHA layer with FlatAttention on the paper's
+//! Table I accelerator and print the runtime breakdown.
+//!
+//!     cargo run --release --example quickstart
+
+use flatattention::arch::presets;
+use flatattention::dataflow::{run, Dataflow, FlatTiling, Workload};
+use flatattention::sim::breakdown::ALL_COMPONENTS;
+
+fn main() {
+    // The paper's headline layer: S=4096, D=128, H=32, B=2.
+    let arch = presets::table1();
+    let wl = Workload::new(4096, 128, 32, 2);
+    let group = 32; // one group spanning the whole 32×32 mesh
+
+    println!("architecture : {} ({} tiles, {:.0} TFLOPS peak)", arch.name, arch.num_tiles(), arch.peak_tflops());
+    println!("workload     : {} (H={}, B={})", wl.label(), wl.heads, wl.batch);
+
+    let tiling = FlatTiling::resolve(&arch, wl.head_dim, wl.seq, group, true);
+    println!(
+        "tiling       : {}x{} slice per tile, group block {}, T_r={}, T_c={}",
+        tiling.slice, tiling.slice, tiling.block, tiling.t_r, tiling.t_c
+    );
+
+    let stats = run(&arch, &wl, Dataflow::FlatAsyn, group);
+    println!("\nruntime      : {:.3} ms ({} cycles @ {} GHz)", stats.runtime_ms(arch.freq_ghz), stats.makespan, arch.freq_ghz);
+    println!(
+        "utilization  : {:.1}% of peak ({:.0} TFLOPS achieved)",
+        stats.compute_utilization(arch.peak_flops_per_cycle()) * 100.0,
+        stats.compute_utilization(arch.peak_flops_per_cycle()) * arch.peak_tflops()
+    );
+    println!(
+        "HBM traffic  : {:.2} GB ({:.1}% of peak bandwidth)",
+        stats.hbm_bytes as f64 / 1e9,
+        stats.hbm_bw_utilization(arch.hbm.peak_bytes_per_cycle()) * 100.0
+    );
+    println!("\nper-component breakdown on the critical tile:");
+    for c in ALL_COMPONENTS {
+        let cycles = stats.breakdown.get(c);
+        println!(
+            "  {:<10} {:>12} cycles  {:>5.1}%",
+            c.label(),
+            cycles,
+            cycles as f64 / stats.makespan as f64 * 100.0
+        );
+    }
+}

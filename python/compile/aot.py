@@ -1,0 +1,115 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (not `HloModuleProto.serialize()`) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out-dir, default ../artifacts):
+  block_step_r{Br}_c{Bc}_d{D}.hlo.txt   per-tile FlatAttention block step
+                                        (the Rust functional simulator's
+                                        tile compute), several slice shapes
+  mha_b{B}_h{H}_s{S}_d{D}.hlo.txt       full multi-head attention forward
+                                        (end-to-end golden model)
+  manifest.json                         shape metadata for the Rust loader
+
+Usage: python -m compile.aot [--out-dir DIR] [--quick]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.flash_kernel import block_step
+from .model import mha
+
+# Per-tile slice shapes (Br, Bc, D) exported for the functional simulator.
+# These cover the slice sizes the Table-I architecture produces for the
+# paper's workloads (S/G for G in {4..32}, D in {64, 128}).
+BLOCK_STEP_SHAPES = [
+    (16, 16, 128),
+    (32, 32, 128),
+    (64, 64, 64),
+    (64, 64, 128),
+    (128, 128, 64),
+    (128, 128, 128),
+]
+
+# Full-MHA golden models (kept small: they execute at validation time).
+MHA_SHAPES = [
+    # (B, H, S, D)
+    (1, 4, 256, 64),
+    (1, 2, 256, 128),
+]
+
+QUICK_BLOCK_STEP_SHAPES = BLOCK_STEP_SHAPES[:2]
+QUICK_MHA_SHAPES = MHA_SHAPES[:1]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_block_step(br: int, bc: int, d: int) -> str:
+    args = (f32(br, d), f32(d, bc), f32(bc, d), f32(br), f32(br), f32(br, d))
+    return to_hlo_text(jax.jit(block_step).lower(*args))
+
+
+def lower_mha(b: int, h: int, s: int, d: int, block: int = 128) -> str:
+    def fn(q, k, v):
+        return (mha(q, k, v, block_q=min(block, s), block_kv=min(block, s)),)
+
+    spec = f32(b, h, s, d)
+    return to_hlo_text(jax.jit(fn).lower(spec, spec, spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    here = os.path.dirname(os.path.abspath(__file__))
+    default_out = os.path.normpath(os.path.join(here, "..", "..", "artifacts"))
+    ap.add_argument("--out-dir", default=default_out)
+    ap.add_argument("--quick", action="store_true", help="emit a reduced artifact set")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    bs_shapes = QUICK_BLOCK_STEP_SHAPES if args.quick else BLOCK_STEP_SHAPES
+    mha_shapes = QUICK_MHA_SHAPES if args.quick else MHA_SHAPES
+
+    manifest = {"block_step": [], "mha": []}
+
+    for br, bc, d in bs_shapes:
+        name = f"block_step_r{br}_c{bc}_d{d}.hlo.txt"
+        text = lower_block_step(br, bc, d)
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        manifest["block_step"].append({"br": br, "bc": bc, "d": d, "file": name})
+        print(f"wrote {name} ({len(text)} chars)")
+
+    for b, h, s, d in mha_shapes:
+        name = f"mha_b{b}_h{h}_s{s}_d{d}.hlo.txt"
+        text = lower_mha(b, h, s, d)
+        with open(os.path.join(args.out_dir, name), "w") as f:
+            f.write(text)
+        manifest["mha"].append({"b": b, "h": h, "s": s, "d": d, "file": name})
+        print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""L1: Pallas FlashAttention forward kernel (online softmax).
+
+Hardware adaptation (DESIGN.md §3): the paper's per-tile slice maps to a
+VMEM-resident Q block selected by the grid's BlockSpec; the Kᵀ/V stream the
+paper moves with DMA + column multicast becomes a `fori_loop` over
+VMEM-visible K/V blocks; RedMulE's output-stationary GEMM maps to the MXU
+`jnp.dot`; the row statistics (m, l) of Algorithm 1/2 live in registers/
+VMEM scratch. No warp-level constructs are needed — the tile L1 of the
+paper *is* the VMEM of the Pallas model.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and correctness (vs `ref.py`) is the build-time signal. The
+real-hardware performance story lives in the Rust simulator.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_KV = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_kv, scale, causal, skv_off):
+    """One grid step: a Q block against the full (VMEM-visible) K/V.
+
+    q_ref: [Bq, D]; k_ref, v_ref: [Skv, D]; o_ref: [Bq, D].
+
+    With ``causal=True`` the loop stops after the diagonal K/V block and
+    masks it (the same block-skipping the Rust dataflow builders model);
+    ``skv_off = Skv - Sq`` right-aligns the mask for cross-attention.
+    """
+    q = q_ref[...]
+    bq, d = q.shape
+    skv = k_ref.shape[0]
+    n_kv = skv // block_kv
+    qi0 = pl.program_id(0) * bq  # global row offset of this Q block
+
+    m0 = jnp.full((bq,), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((bq,), dtype=jnp.float32)
+    o0 = jnp.zeros((bq, d), dtype=jnp.float32)
+
+    def body(j, carry):
+        m, l, o = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[...], j * block_kv, block_kv, axis=0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[...], j * block_kv, block_kv, axis=0)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qi = qi0 + jnp.arange(bq)[:, None] + skv_off
+            kj = j * block_kv + jnp.arange(block_kv)[None, :]
+            s = jnp.where(kj <= qi, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        # Rows that are still fully masked keep m = -inf; exp(-inf - -inf)
+        # would be NaN, so alpha is forced to 0 there.
+        alpha = jnp.where(m == -jnp.inf, 0.0, jnp.exp(m - m_new))
+        p = jnp.where(jnp.isnan(p), 0.0, p)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        o_new = alpha[:, None] * o + jnp.dot(p, v, preferred_element_type=jnp.float32)
+        return m_new, l_new, o_new
+
+    if causal:
+        # Stop after the diagonal block of this Q block.
+        last = (qi0 + bq - 1 + skv_off) // block_kv + 1
+        n_iter = jnp.minimum(n_kv, last)
+    else:
+        n_iter = n_kv
+    _, l, o = jax.lax.fori_loop(0, n_iter, body, (m0, l0, o0))
+    o_ref[...] = (o / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, block_q=DEFAULT_BLOCK_Q, block_kv=DEFAULT_BLOCK_KV, causal=False):
+    """Single-head FlashAttention forward: q [Sq, D], k/v [Skv, D].
+
+    Blocks are clamped to the sequence lengths; sequence lengths must be
+    multiples of the (clamped) block sizes.
+    """
+    sq, d = q.shape
+    skv = k.shape[0]
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, skv)
+    if sq % block_q or skv % block_kv:
+        raise ValueError(f"S ({sq},{skv}) must be divisible by blocks ({block_q},{block_kv})")
+    scale = 1.0 / float(d) ** 0.5
+
+    kernel = functools.partial(
+        _flash_kernel, block_kv=block_kv, scale=scale, causal=causal, skv_off=skv - sq
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(sq // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),  # Q block per step
+            pl.BlockSpec((skv, d), lambda i: (0, 0)),      # full K stream
+            pl.BlockSpec((skv, d), lambda i: (0, 0)),      # full V stream
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((sq, d), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+def _block_step_kernel(q_ref, kt_ref, v_ref, m_ref, l_ref, o_ref,
+                       m_out, l_out, o_out, *, scale):
+    """FlatAttention per-tile block step (Algorithm 2 lines 10-25).
+
+    This is exactly the computation one tile performs per inner iteration
+    between the NoC collectives; the Rust functional simulator executes
+    the AOT-compiled version of this kernel as its tile compute.
+    """
+    q = q_ref[...]
+    s = jnp.dot(q, kt_ref[...], preferred_element_type=jnp.float32) * scale
+    m = m_ref[...]
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m - m_new)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1)
+    o_new = alpha[:, None] * o_ref[...] + jnp.dot(p, v_ref[...], preferred_element_type=jnp.float32)
+    m_out[...] = m_new
+    l_out[...] = l_new
+    o_out[...] = o_new
+
+
+def block_step(q, kt, v, m, l, o):
+    """Online-softmax block update as a Pallas kernel.
+
+    q: [Br, D], kt: [D, Bc], v: [Bc, D], m/l: [Br], o: [Br, D]
+    -> (m', l', o').
+    """
+    br, d = q.shape
+    scale = 1.0 / float(d) ** 0.5
+    kernel = functools.partial(_block_step_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((br,), jnp.float32),
+            jax.ShapeDtypeStruct((br,), jnp.float32),
+            jax.ShapeDtypeStruct((br, d), jnp.float32),
+        ),
+        interpret=True,
+    )(q, kt, v, m, l, o)

@@ -1,0 +1,95 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the mathematical definitions the kernels must match (up to float
+tolerance): plain softmax attention for the flash kernel, and the textbook
+online-softmax block update (Algorithm 1 lines 7-18 of the paper) for the
+FlatAttention per-tile block step.
+"""
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, scale=None, causal=False):
+    """softmax(Q Kᵀ · scale) V for a single head.
+
+    q: [Sq, D], k: [Skv, D], v: [Skv, D] -> [Sq, D]
+
+    With ``causal=True``, query i attends to keys j ≤ i + (Skv - Sq)
+    (right-aligned causal mask).
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    s = (q @ k.T) * scale
+    if causal:
+        sq, skv = q.shape[0], k.shape[0]
+        qi = jnp.arange(sq)[:, None] + (skv - sq)
+        kj = jnp.arange(skv)[None, :]
+        s = jnp.where(kj <= qi, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p @ v
+
+
+def mha_ref(q, k, v):
+    """Batched multi-head attention.
+
+    q, k, v: [B, H, S, D] -> [B, H, S, D]
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def block_step_ref(q, kt, v, m, l, o, scale=None):
+    """One online-softmax update step (unnormalized O accumulator).
+
+    Given running statistics (m: row max, l: row denominator) and the
+    unnormalized output accumulator o, fold in one K/V block:
+
+        S    = (q @ kt) * scale
+        m'   = max(m, rowmax(S))
+        P    = exp(S - m')
+        l'   = exp(m - m') * l + rowsum(P)
+        o'   = diag(exp(m - m')) @ o + P @ v
+
+    q: [Br, D], kt: [D, Bc], v: [Bc, D], m, l: [Br], o: [Br, D].
+    Returns (m', l', o'). The caller normalizes by diag(l)^-1 at the end.
+    """
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    s = (q @ kt) * scale
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m - m_new)
+    l_new = alpha * l + jnp.sum(p, axis=-1)
+    o_new = alpha[:, None] * o + p @ v
+    return m_new, l_new, o_new
+
+
+def attention_via_block_steps(q, k, v, br, bc):
+    """Reference composition: full attention out of block_step_ref calls.
+
+    Validates that iterating the online-softmax block update over all K/V
+    blocks reproduces plain attention — the invariant both the Pallas
+    flash kernel and the Rust functional simulator rely on.
+    """
+    sq, d = q.shape
+    skv = k.shape[0]
+    assert sq % br == 0 and skv % bc == 0
+    out = jnp.zeros_like(q)
+    for i in range(0, sq, br):
+        qi = q[i : i + br]
+        m = jnp.full((br,), -jnp.inf, dtype=q.dtype)
+        l = jnp.zeros((br,), dtype=q.dtype)
+        o = jnp.zeros((br, d), dtype=q.dtype)
+        for j in range(0, skv, bc):
+            kt = k[j : j + bc].T
+            vj = v[j : j + bc]
+            m, l, o = block_step_ref(qi, kt, vj, m, l, o)
+        out = out.at[i : i + br].set(o / l[:, None])
+    return out

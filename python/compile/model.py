@@ -1,0 +1,48 @@
+"""L2: JAX model layer — batched multi-head attention over the L1 kernel.
+
+Build-time only. `mha` composes the Pallas flash kernel over batch and
+heads with `vmap`; `aot.py` lowers it (plus the per-tile `block_step`) to
+HLO text for the Rust runtime. Python never runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.flash_kernel import block_step, flash_attention
+
+
+def mha(q, k, v, block_q=128, block_kv=128):
+    """Multi-head attention forward.
+
+    q, k, v: [B, H, S, D] -> [B, H, S, D]
+    """
+    single = lambda q_, k_, v_: flash_attention(q_, k_, v_, block_q, block_kv)
+    per_head = jax.vmap(single)       # over H
+    per_batch = jax.vmap(per_head)    # over B
+    return per_batch(q, k, v)
+
+
+def mha_with_pretranspose(q, k, v, block_q=128, block_kv=128):
+    """MHA including the K pre-transposition the paper accounts for when
+    comparing against H100 (§III footnote 2, §V-C): K is stored
+    pre-transposed in HBM; the transposition cost is charged to the layer.
+    In the compute graph this is a layout round-trip the compiler may fuse;
+    the simulator charges its HBM traffic separately."""
+    kt = jnp.swapaxes(k, -1, -2)
+    return mha(q, jnp.swapaxes(kt, -1, -2), v, block_q, block_kv)
+
+
+def flat_block_step(q, kt, v, m, l, o):
+    """Per-tile FlatAttention block update (Algorithm 2 inner loop) —
+    exported per slice shape for the Rust functional simulator."""
+    return block_step(q, kt, v, m, l, o)
+
+
+def transformer_layer_shapes(hidden=8192, ffn=28672, seq=4096):
+    """GEMM shapes of a LLaMA-70B-style layer (Fig. 5c workloads)."""
+    return {
+        "qkv_proj": (seq, hidden, 3 * hidden // 8 * 8),
+        "o_proj": (seq, hidden, hidden),
+        "ffn_up_gate": (seq, hidden, 2 * ffn),
+        "ffn_down": (seq, ffn, hidden),
+    }

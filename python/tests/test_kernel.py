@@ -1,0 +1,199 @@
+"""Pallas kernel vs pure-jnp oracle — the core correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.flash_kernel import block_step, flash_attention
+from compile.kernels.ref import (
+    attention_ref,
+    attention_via_block_steps,
+    block_step_ref,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def randn(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("s,d,bq,bkv", [
+        (128, 64, 64, 64),
+        (256, 64, 128, 128),
+        (256, 128, 128, 64),
+        (512, 64, 128, 128),
+        (128, 128, 128, 128),  # single block (degenerate grid)
+    ])
+    def test_matches_reference(self, s, d, bq, bkv):
+        kq, kk, kv = keys(s * 7 + d, 3)
+        q, k, v = randn(kq, s, d), randn(kk, s, d), randn(kv, s, d)
+        out = flash_attention(q, k, v, block_q=bq, block_kv=bkv)
+        ref = attention_ref(q, k, v)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_cross_attention_lengths(self):
+        # Sq != Skv exercises independent block clamping.
+        kq, kk, kv = keys(11, 3)
+        q, k, v = randn(kq, 128, 64), randn(kk, 256, 64), randn(kv, 256, 64)
+        out = flash_attention(q, k, v, block_q=64, block_kv=128)
+        np.testing.assert_allclose(out, attention_ref(q, k, v), rtol=2e-5, atol=2e-5)
+
+    def test_rejects_ragged_blocks(self):
+        kq, kk, kv = keys(1, 3)
+        q, k, v = randn(kq, 100, 64), randn(kk, 100, 64), randn(kv, 100, 64)
+        with pytest.raises(ValueError, match="divisible"):
+            flash_attention(q, k, v, block_q=64, block_kv=64)
+
+    def test_block_size_invariance(self):
+        # The output must not depend on the block decomposition.
+        kq, kk, kv = keys(3, 3)
+        q, k, v = randn(kq, 256, 64), randn(kk, 256, 64), randn(kv, 256, 64)
+        o1 = flash_attention(q, k, v, block_q=256, block_kv=256)
+        o2 = flash_attention(q, k, v, block_q=64, block_kv=32)
+        np.testing.assert_allclose(o1, o2, rtol=2e-5, atol=2e-5)
+
+    def test_softmax_rows_bounded(self):
+        # Output rows are convex combinations of V rows.
+        kq, kk, kv = keys(5, 3)
+        q, k, v = randn(kq, 128, 64), randn(kk, 128, 64), randn(kv, 128, 64)
+        out = np.asarray(flash_attention(q, k, v))
+        vmin, vmax = np.min(np.asarray(v), axis=0), np.max(np.asarray(v), axis=0)
+        assert (out >= vmin - 1e-4).all()
+        assert (out <= vmax + 1e-4).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        s_exp=st.integers(min_value=5, max_value=9),
+        d=st.sampled_from([32, 64, 128]),
+        bq_exp=st.integers(min_value=4, max_value=7),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, s_exp, d, bq_exp, seed):
+        s = 2**s_exp
+        bq = min(2**bq_exp, s)
+        kq, kk, kv = keys(seed, 3)
+        q, k, v = randn(kq, s, d), randn(kk, s, d), randn(kv, s, d)
+        out = flash_attention(q, k, v, block_q=bq, block_kv=bq)
+        np.testing.assert_allclose(out, attention_ref(q, k, v), rtol=3e-5, atol=3e-5)
+
+
+class TestBlockStep:
+    @pytest.mark.parametrize("br,bc,d", [(16, 16, 128), (64, 64, 64), (128, 128, 128), (32, 64, 64)])
+    def test_matches_reference(self, br, bc, d):
+        ks = keys(br * 131 + bc * 7 + d, 6)
+        q, kt, v = randn(ks[0], br, d), randn(ks[1], d, bc), randn(ks[2], bc, d)
+        m = randn(ks[3], br)
+        l = jnp.abs(randn(ks[4], br)) + 0.5
+        o = randn(ks[5], br, d)
+        got = block_step(q, kt, v, m, l, o)
+        want = block_step_ref(q, kt, v, m, l, o)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=2e-5, atol=2e-5)
+
+    def test_initial_state_neg_inf(self):
+        # First step from (m=-inf, l=0, o=0) must be finite.
+        ks = keys(42, 3)
+        br, bc, d = 32, 32, 64
+        q, kt, v = randn(ks[0], br, d), randn(ks[1], d, bc), randn(ks[2], bc, d)
+        m = jnp.full((br,), -jnp.inf)
+        l = jnp.zeros((br,))
+        o = jnp.zeros((br, d))
+        m2, l2, o2 = block_step(q, kt, v, m, l, o)
+        assert np.isfinite(m2).all()
+        assert (np.asarray(l2) > 0).all()
+        assert np.isfinite(o2).all()
+
+    def test_composition_equals_attention(self):
+        # Iterating block_step over all K/V blocks == plain attention.
+        ks = keys(7, 3)
+        s, d, br, bc = 256, 64, 64, 64
+        q, k, v = randn(ks[0], s, d), randn(ks[1], s, d), randn(ks[2], s, d)
+        via_steps = attention_via_block_steps(q, k, v, br, bc)
+        np.testing.assert_allclose(via_steps, attention_ref(q, k, v), rtol=2e-5, atol=2e-5)
+
+    def test_permutation_invariance(self):
+        # Online softmax must be invariant to K/V block order — the
+        # property FlatAttention's group-parallel reduction relies on.
+        ks = keys(9, 3)
+        s, d, bc = 128, 64, 32
+        q, k, v = randn(ks[0], 32, d), randn(ks[1], s, d), randn(ks[2], s, d)
+        perm = np.random.RandomState(0).permutation(s // bc)
+
+        def run(order):
+            m = jnp.full((32,), -jnp.inf)
+            l = jnp.zeros((32,))
+            o = jnp.zeros((32, d))
+            for j in order:
+                kt = k[j * bc : (j + 1) * bc].T
+                vj = v[j * bc : (j + 1) * bc]
+                m, l, o = block_step(q, kt, vj, m, l, o)
+            return o / l[:, None]
+
+        o_fwd = run(range(s // bc))
+        o_perm = run(perm)
+        np.testing.assert_allclose(o_fwd, o_perm, rtol=3e-5, atol=3e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        br=st.sampled_from([16, 32, 64]),
+        bc=st.sampled_from([16, 32, 64]),
+        d=st.sampled_from([32, 64, 128]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_hypothesis_block_step(self, br, bc, d, seed):
+        ks = keys(seed, 6)
+        q, kt, v = randn(ks[0], br, d), randn(ks[1], d, bc), randn(ks[2], bc, d)
+        m = randn(ks[3], br) * 0.5
+        l = jnp.abs(randn(ks[4], br)) + 0.1
+        o = randn(ks[5], br, d)
+        got = block_step(q, kt, v, m, l, o)
+        want = block_step_ref(q, kt, v, m, l, o)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=3e-5, atol=3e-5)
+
+
+class TestCausal:
+    @pytest.mark.parametrize("s,d,bq,bkv", [
+        (128, 64, 64, 64),
+        (256, 64, 64, 32),
+        (256, 128, 128, 128),
+    ])
+    def test_causal_matches_reference(self, s, d, bq, bkv):
+        kq, kk, kv = keys(s * 3 + d + 1, 3)
+        q, k, v = randn(kq, s, d), randn(kk, s, d), randn(kv, s, d)
+        out = flash_attention(q, k, v, block_q=bq, block_kv=bkv, causal=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_causal_first_row_attends_self_only(self):
+        kq, kk, kv = keys(77, 3)
+        s, d = 128, 64
+        q, k, v = randn(kq, s, d), randn(kk, s, d), randn(kv, s, d)
+        out = flash_attention(q, k, v, block_q=64, block_kv=64, causal=True)
+        # Row 0 can only attend to key 0 -> output row 0 == v[0].
+        np.testing.assert_allclose(out[0], v[0], rtol=1e-5, atol=1e-5)
+
+    def test_causal_cross_attention_right_aligned(self):
+        kq, kk, kv = keys(78, 3)
+        q, k, v = randn(kq, 64, 32), randn(kk, 128, 32), randn(kv, 128, 32)
+        out = flash_attention(q, k, v, block_q=32, block_kv=32, causal=True)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+    def test_causal_differs_from_noncausal(self):
+        kq, kk, kv = keys(79, 3)
+        s, d = 128, 64
+        q, k, v = randn(kq, s, d), randn(kk, s, d), randn(kv, s, d)
+        c = flash_attention(q, k, v, causal=True)
+        nc = flash_attention(q, k, v, causal=False)
+        assert not np.allclose(c, nc)
+        # Last row sees everything: identical in both.
+        np.testing.assert_allclose(c[-1], nc[-1], rtol=1e-5, atol=1e-5)

@@ -1,0 +1,55 @@
+"""L2 model vs reference: batched MHA shapes and numerics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import mha_ref
+from compile.model import mha, mha_with_pretranspose, transformer_layer_shapes
+
+
+def rand(seed, *shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32)
+
+
+@pytest.mark.parametrize("b,h,s,d", [
+    (1, 1, 128, 64),
+    (1, 4, 256, 64),
+    (2, 2, 128, 128),
+    (1, 2, 256, 128),
+])
+def test_mha_matches_reference(b, h, s, d):
+    q, k, v = rand(1, b, h, s, d), rand(2, b, h, s, d), rand(3, b, h, s, d)
+    out = mha(q, k, v)
+    np.testing.assert_allclose(out, mha_ref(q, k, v), rtol=3e-5, atol=3e-5)
+
+
+def test_mha_output_shape_and_dtype():
+    q = k = v = rand(4, 1, 2, 128, 64)
+    out = mha(q, k, v)
+    assert out.shape == (1, 2, 128, 64)
+    assert out.dtype == jnp.float32
+
+
+def test_pretranspose_variant_identical():
+    q, k, v = rand(5, 1, 2, 128, 64), rand(6, 1, 2, 128, 64), rand(7, 1, 2, 128, 64)
+    np.testing.assert_allclose(
+        mha_with_pretranspose(q, k, v), mha(q, k, v), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_heads_are_independent():
+    # Changing head 1's inputs must not affect head 0's output.
+    q, k, v = rand(8, 1, 2, 128, 64), rand(9, 1, 2, 128, 64), rand(10, 1, 2, 128, 64)
+    base = mha(q, k, v)
+    q2 = q.at[:, 1].set(q[:, 1] * 2.0)
+    out = mha(q2, k, v)
+    np.testing.assert_allclose(out[:, 0], base[:, 0], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(out[:, 1], base[:, 1])
+
+
+def test_llama_layer_shapes():
+    shapes = transformer_layer_shapes()
+    assert shapes["ffn_down"] == (4096, 28672, 8192)
+    assert shapes["o_proj"] == (4096, 8192, 8192)

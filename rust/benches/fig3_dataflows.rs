@@ -1,0 +1,24 @@
+//! Bench: regenerate the paper's Fig. 3 (runtime breakdown + HBM BW
+//! utilization for FA-2/FA-3/Flat/FlatColl/FlatAsyn over six MHA layers)
+//! and time the simulation itself.
+//!
+//!     cargo bench --bench fig3_dataflows
+
+#[path = "harness.rs"]
+mod harness;
+
+use flatattention::report::{fig3, ReportOpts};
+use flatattention::util::pool;
+
+fn main() {
+    let opts = ReportOpts { quick: false, threads: pool::default_threads() };
+
+    harness::section("Fig. 3 regeneration (paper output)");
+    let text = fig3::render(&opts, None);
+    println!("{text}");
+
+    harness::section("simulation cost");
+    harness::bench("fig3 full grid (30 simulations)", 3, || fig3::run(&opts));
+    let quick = ReportOpts { quick: true, ..opts };
+    harness::bench("fig3 quick grid (5 simulations)", 5, || fig3::run(&quick));
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerate the paper's Fig. 4 (group-scale trade-off /
+//! over-flattening) and time the sweep.
+//!
+//!     cargo bench --bench fig4_group_scale
+
+#[path = "harness.rs"]
+mod harness;
+
+use flatattention::report::{fig4, ReportOpts};
+use flatattention::util::pool;
+
+fn main() {
+    let opts = ReportOpts { quick: false, threads: pool::default_threads() };
+
+    harness::section("Fig. 4 regeneration (paper output)");
+    println!("{}", fig4::render(&opts, None));
+
+    harness::section("simulation cost");
+    harness::bench("fig4 full sweep (16 simulations)", 3, || fig4::run(&opts));
+}

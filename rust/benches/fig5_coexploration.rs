@@ -1,0 +1,33 @@
+//! Bench: regenerate the paper's Fig. 5 — (a) architecture co-exploration
+//! heatmap, (b) BestArch vs FA-3-on-H100, (c) SUMMA GEMM vs H100 — and the
+//! §V-C die-area estimate.
+//!
+//!     cargo bench --bench fig5_coexploration
+
+#[path = "harness.rs"]
+mod harness;
+
+use flatattention::report::{fig5a, fig5b, fig5c, section2, ReportOpts};
+use flatattention::util::pool;
+
+fn main() {
+    let opts = ReportOpts { quick: false, threads: pool::default_threads() };
+
+    harness::section("Fig. 5a regeneration");
+    println!("{}", fig5a::render(&opts, None));
+
+    harness::section("Fig. 5b regeneration");
+    println!("{}", fig5b::render(&opts, None));
+
+    harness::section("Fig. 5c regeneration");
+    println!("{}", fig5c::render(&opts, None));
+
+    harness::section("§V-C die area");
+    println!("{}", section2::render_area());
+
+    harness::section("simulation cost");
+    let quick = ReportOpts { quick: true, ..opts };
+    harness::bench("fig5a heatmap (quick, 9 cells)", 2, || fig5a::run(&quick));
+    harness::bench("fig5b comparison (quick)", 3, || fig5b::run(&quick));
+    harness::bench("fig5c GEMMs (quick)", 3, || fig5c::run(&quick));
+}

@@ -1,0 +1,34 @@
+//! Shared micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Each bench target is `harness = false` with its own `main`; this module
+//! provides wall-clock measurement with warmup, min/mean/max reporting,
+//! and a simple table printer compatible with `cargo bench` output.
+
+use std::time::Instant;
+
+/// Measure `f` for `iters` iterations after one warmup; prints a
+/// `test ... bench:` style line and returns the mean seconds per iter.
+pub fn bench<R>(name: &str, iters: usize, mut f: impl FnMut() -> R) -> f64 {
+    std::hint::black_box(f()); // warmup
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = times.iter().cloned().fold(0.0, f64::max);
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    println!(
+        "bench {name:<52} {:>10.3} ms/iter (min {:.3}, max {:.3}, n={iters})",
+        mean * 1e3,
+        min * 1e3,
+        max * 1e3
+    );
+    mean
+}
+
+/// Pretty section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,54 @@
+//! Bench: the §II collective-latency model — regenerates the paper's
+//! hardware-vs-software multicast comparison (6.1× at N=7) across message
+//! sizes and chain lengths, plus an ablation over link widths.
+//!
+//!     cargo bench --bench noc_collectives
+
+#[path = "harness.rs"]
+mod harness;
+
+use flatattention::arch::NocConfig;
+use flatattention::noc::{collective_time, CollectiveKind};
+use flatattention::report::section2;
+
+fn noc(hw: bool, link: u64) -> NocConfig {
+    NocConfig {
+        link_bytes_per_cycle: link,
+        router_latency: 4,
+        inject_latency: 10,
+        hw_collectives: hw,
+    }
+}
+
+fn main() {
+    harness::section("§II worked example (paper output)");
+    println!("{}", section2::render_section2());
+
+    harness::section("hw/sw reduction across message sizes (N=31, 1024-bit links)");
+    println!("  {:>10}  {:>12}  {:>12}  {:>9}", "bytes", "sw (cyc)", "hw (cyc)", "reduction");
+    for kib in [1u64, 4, 16, 64] {
+        let bytes = kib * 1024;
+        let sw = collective_time(&noc(false, 128), bytes, 31, CollectiveKind::Multicast).total();
+        let hw = collective_time(&noc(true, 128), bytes, 31, CollectiveKind::Multicast).total();
+        println!("  {:>8}KB  {:>12}  {:>12}  {:>8.1}x", kib, sw, hw, sw as f64 / hw as f64);
+    }
+
+    harness::section("link-width ablation (16 KB multicast, N=31)");
+    for link in [32u64, 64, 128, 256] {
+        let hw = collective_time(&noc(true, link), 16 * 1024, 31, CollectiveKind::Multicast).total();
+        println!("  {:>4}-bit link: {hw} cycles", link * 8);
+    }
+
+    harness::section("model evaluation cost");
+    harness::bench("collective_time x 1M evals", 5, || {
+        let c = noc(true, 128);
+        let mut acc = 0u64;
+        for i in 0..1_000_000u64 {
+            acc = acc.wrapping_add(
+                collective_time(&c, 1 + (i % 65536), 1 + (i % 31), CollectiveKind::Multicast)
+                    .total(),
+            );
+        }
+        acc
+    });
+}

@@ -1,0 +1,45 @@
+//! Bench: the simulator's own hot path (program build + DES execution) —
+//! the §Perf optimization target. Reports events/second at several scales.
+//!
+//!     cargo bench --bench sim_hotpath
+
+#[path = "harness.rs"]
+mod harness;
+
+use flatattention::arch::presets;
+use flatattention::dataflow::{build_program, Dataflow, Workload};
+use flatattention::sim::execute;
+
+fn main() {
+    let arch = presets::table1();
+
+    harness::section("program construction");
+    for (label, wl, df, g) in [
+        ("flat  S4096 D128 H32 B2 G32", Workload::new(4096, 128, 32, 2), Dataflow::FlatAsyn, 32),
+        ("flat  S2048 D128 H32 B4 G8 ", Workload::new(2048, 128, 32, 4), Dataflow::FlatAsyn, 8),
+        ("flash S4096 D128 H32 B2    ", Workload::new(4096, 128, 32, 2), Dataflow::Flash3, 1),
+    ] {
+        let p = build_program(&arch, &wl, df, g);
+        println!("  {label}: {} ops, {} resources", p.num_ops(), p.num_resources());
+        harness::bench(&format!("build   {label}"), 5, || build_program(&arch, &wl, df, g));
+    }
+
+    harness::section("DES execution");
+    for (label, wl, df, g) in [
+        ("flat  S4096 D128 H32 B2 G32", Workload::new(4096, 128, 32, 2), Dataflow::FlatAsyn, 32),
+        ("flat  S2048 D128 H32 B4 G8 ", Workload::new(2048, 128, 32, 4), Dataflow::FlatAsyn, 8),
+        ("flash S4096 D128 H32 B2    ", Workload::new(4096, 128, 32, 2), Dataflow::Flash3, 1),
+    ] {
+        let p = build_program(&arch, &wl, df, g);
+        let n = p.num_ops();
+        let mean = harness::bench(&format!("execute {label}"), 5, || execute(&p, 0));
+        println!("    -> {:.2} M ops/s", n as f64 / mean / 1e6);
+    }
+
+    harness::section("end-to-end (build + execute)");
+    let wl = Workload::new(4096, 128, 32, 2);
+    harness::bench("full run flatasyn S4096 D128", 5, || {
+        let p = build_program(&arch, &wl, Dataflow::FlatAsyn, 32);
+        execute(&p, 0)
+    });
+}

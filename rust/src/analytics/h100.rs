@@ -1,0 +1,101 @@
+//! Published H100 reference numbers for the Fig. 5b/5c comparisons.
+//!
+//! The paper compares BestArch+FlatAttention against FlashAttention-3 *as
+//! published* ("based on the H100 performance numbers in Shah et al. [6]",
+//! arXiv v1, FP16 forward, no causal mask) and against the SemiAnalysis
+//! H100 GEMM benchmarks [26] for the LLaMA-70B FFN shapes. The tables
+//! below are digitized from those sources; values are achieved TFLOPS.
+
+/// H100 SXM FP16/BF16 dense peak (no sparsity), TFLOPS.
+pub const H100_PEAK_TFLOPS: f64 = 989.0;
+
+/// H100 HBM3 peak bandwidth, GB/s (for the 40%-less-bandwidth claim).
+pub const H100_HBM_GBPS: f64 = 3350.0;
+
+/// FlashAttention-3 achieved TFLOPS on H100 (FP16 forward, non-causal),
+/// digitized from Shah et al. arXiv v1 Fig. 5/6. Returns `None` for
+/// shapes outside the published sweep.
+pub fn h100_fa3_tflops(head_dim: u64, seq: u64) -> Option<f64> {
+    let table: &[(u64, u64, f64)] = &[
+        // (D, S, TFLOPS)
+        (64, 512, 340.0),
+        (64, 1024, 420.0),
+        (64, 2048, 490.0),
+        (64, 4096, 533.0),
+        (64, 8192, 560.0),
+        (64, 16384, 570.0),
+        (128, 512, 480.0),
+        (128, 1024, 560.0),
+        (128, 2048, 620.0),
+        (128, 4096, 660.0),
+        (128, 8192, 690.0),
+        (128, 16384, 700.0),
+    ];
+    table
+        .iter()
+        .find(|&&(d, s, _)| d == head_dim && s == seq)
+        .map(|&(_, _, t)| t)
+}
+
+/// FA-3 utilization on H100 for a shape.
+pub fn h100_fa3_utilization(head_dim: u64, seq: u64) -> Option<f64> {
+    h100_fa3_tflops(head_dim, seq).map(|t| t / H100_PEAK_TFLOPS)
+}
+
+/// H100 BF16 GEMM utilization for LLaMA-70B-style shapes, digitized from
+/// the SemiAnalysis benchmark the paper cites [26].
+pub fn h100_gemm_utilization(m: u64, k: u64, n: u64) -> f64 {
+    let table: &[(u64, u64, u64, f64)] = &[
+        (4096, 8192, 28672, 760.0), // FFN up/gate
+        (4096, 28672, 8192, 730.0), // FFN down
+        (4096, 8192, 8192, 720.0),  // attention out-proj
+        (8192, 8192, 8192, 750.0),  // square reference
+    ];
+    let t = table
+        .iter()
+        .find(|&&(tm, tk, tn, _)| tm == m && tk == k && tn == n)
+        .map(|&(_, _, _, t)| t)
+        // Fallback: interpolate as the mean of published points.
+        .unwrap_or(740.0);
+    t / H100_PEAK_TFLOPS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fa3_peaks_below_75_percent() {
+        // The paper's §I footnote: FA-3 (arXiv v1) reaches no more than
+        // ~75% utilization on H100.
+        for &(d, s) in &[(64u64, 4096u64), (128, 4096), (128, 16384)] {
+            let u = h100_fa3_utilization(d, s).unwrap();
+            assert!(u < 0.75, "D{d} S{s}: {u}");
+            assert!(u > 0.3);
+        }
+    }
+
+    #[test]
+    fn fa3_monotone_in_seq() {
+        for d in [64u64, 128] {
+            let mut prev = 0.0;
+            for s in [512u64, 1024, 2048, 4096, 8192, 16384] {
+                let t = h100_fa3_tflops(d, s).unwrap();
+                assert!(t >= prev);
+                prev = t;
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_shape_is_none() {
+        assert!(h100_fa3_tflops(96, 4096).is_none());
+        assert!(h100_fa3_tflops(128, 3000).is_none());
+    }
+
+    #[test]
+    fn gemm_utilization_range() {
+        let u = h100_gemm_utilization(4096, 8192, 28672);
+        assert!((0.7..0.8).contains(&u));
+    }
+}

@@ -1,0 +1,62 @@
+//! HBM I/O complexity (paper §III-A).
+//!
+//! FlashAttention with block size `M` on independent tiles:
+//! `IO = 2·H·B·D·S·(1 + S/M)` elements.
+//!
+//! FlatAttention grouping `N = G²` tiles (block `√N·M` per group):
+//! `IO = 2·H·B·D·S·(1 + S/(√N·M))` elements.
+
+use crate::dataflow::Workload;
+
+/// FlashAttention HBM traffic in bytes for block size `m`.
+pub fn flash_io_bytes(wl: &Workload, m: u64) -> u64 {
+    let elems = 2 * wl.heads * wl.batch * wl.head_dim * wl.seq * (1 + wl.seq.div_ceil(m));
+    elems * Workload::BYTES_PER_ELEM
+}
+
+/// FlatAttention HBM traffic in bytes for group-level block size `block`
+/// (= slice × G).
+pub fn flat_io_bytes(wl: &Workload, block: u64) -> u64 {
+    let elems = 2 * wl.heads * wl.batch * wl.head_dim * wl.seq * (1 + wl.seq.div_ceil(block));
+    elems * Workload::BYTES_PER_ELEM
+}
+
+/// Theoretical I/O reduction of grouping `n` tiles at fixed `m`.
+pub fn io_reduction(seq: u64, m: u64, n: u64) -> f64 {
+    let flash = 1.0 + seq as f64 / m as f64;
+    let flat = 1.0 + seq as f64 / ((n as f64).sqrt() * m as f64);
+    flash / flat
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_6_6x() {
+        // §III-A: S=4096, M=128, N=64 ⇒ ~6.6×.
+        let r = io_reduction(4096, 128, 64);
+        assert!((r - 6.6).abs() < 0.1, "{r}");
+    }
+
+    #[test]
+    fn flash_io_formula() {
+        let wl = Workload::new(4096, 128, 32, 2);
+        // 2·32·2·128·4096·(1+32) elements × 2 bytes.
+        assert_eq!(flash_io_bytes(&wl, 128), 2 * 32 * 2 * 128 * 4096 * 33 * 2);
+    }
+
+    #[test]
+    fn flat_io_reduces_with_block() {
+        let wl = Workload::new(4096, 128, 32, 2);
+        assert!(flat_io_bytes(&wl, 4096) < flash_io_bytes(&wl, 128));
+        // Full-S block: Q+O once, K/V once ⇒ exactly the compulsory traffic.
+        assert_eq!(flat_io_bytes(&wl, 4096), wl.compulsory_bytes());
+    }
+
+    #[test]
+    fn reduction_monotone_in_n() {
+        assert!(io_reduction(4096, 128, 256) > io_reduction(4096, 128, 64));
+        assert!(io_reduction(4096, 128, 1) < 1.0 + 1e-9);
+    }
+}

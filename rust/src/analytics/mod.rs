@@ -1,0 +1,14 @@
+//! Analytical models and external reference data.
+//!
+//! * [`io`] — the paper's §III-A HBM I/O-complexity formulas, used to
+//!   cross-check the simulator's measured traffic.
+//! * [`h100`] — the published H100 FlashAttention-3 and GEMM numbers the
+//!   paper compares against in Fig. 5b/5c (digitized from the cited
+//!   sources; the paper itself compares against these publications, not
+//!   against reruns).
+
+pub mod h100;
+pub mod io;
+
+pub use h100::{h100_fa3_tflops, h100_gemm_utilization, H100_PEAK_TFLOPS};
+pub use io::{flash_io_bytes, flat_io_bytes, io_reduction};

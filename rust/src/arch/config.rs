@@ -1,0 +1,239 @@
+//! Architecture configuration types and validation.
+
+use crate::util::json::Json;
+
+/// Per-tile compute and memory resources (paper Table I / Table II).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TileConfig {
+    /// RedMulE compute-element array rows (the `32` of a 32×16 array).
+    pub redmule_rows: usize,
+    /// RedMulE compute-element array columns.
+    pub redmule_cols: usize,
+    /// RedMulE pipeline fill/drain overhead per output-tile pass (cycles).
+    /// Calibration constant; see DESIGN.md §6.
+    pub redmule_fill: u64,
+    /// RedMulE per-invocation offload/configuration overhead (cycles).
+    pub redmule_setup: u64,
+    /// Spatz FPU count (Table I: 16).
+    pub spatz_fpus: usize,
+    /// FP16 elements processed per FPU per cycle for streaming vector ops
+    /// (mul/add/max/sum). 8 lanes ⇒ 16 FPUs × 8 = 128 elem/cycle =
+    /// 128 GFLOPS @ 1 GHz as in Table I.
+    pub spatz_lanes_per_fpu: usize,
+    /// Exponentials per FPU per cycle via the custom RVV exp unit (§IV).
+    /// `0` models the *ablated* configuration without the exp unit: a
+    /// software polynomial at ~16 vector FLOPs per exponential.
+    pub spatz_exp_per_fpu: usize,
+    /// L1 scratchpad size in KiB.
+    pub l1_kib: usize,
+    /// L1 bandwidth in bytes/cycle (Table I: 512 GB/s @ 1 GHz).
+    pub l1_bytes_per_cycle: u64,
+}
+
+impl TileConfig {
+    /// Peak FLOP/cycle of the matrix engine (FMA = 2 FLOPs per CE).
+    pub fn redmule_flops_per_cycle(&self) -> u64 {
+        2 * (self.redmule_rows * self.redmule_cols) as u64
+    }
+
+    /// Peak FLOP/cycle of the vector engine.
+    pub fn spatz_flops_per_cycle(&self) -> u64 {
+        (self.spatz_fpus * self.spatz_lanes_per_fpu) as u64
+    }
+
+    /// Streaming vector elements per cycle.
+    pub fn spatz_elems_per_cycle(&self) -> u64 {
+        (self.spatz_fpus * self.spatz_lanes_per_fpu) as u64
+    }
+
+    /// Exponential evaluations per cycle. With the custom exp unit (§IV):
+    /// one per FPU per cycle (× `spatz_exp_per_fpu`); without it
+    /// (`spatz_exp_per_fpu == 0`): software polynomial at 16 vector FLOPs
+    /// per exponential.
+    pub fn spatz_exp_per_cycle(&self) -> u64 {
+        if self.spatz_exp_per_fpu == 0 {
+            (self.spatz_elems_per_cycle() / 16).max(1)
+        } else {
+            (self.spatz_fpus * self.spatz_exp_per_fpu) as u64
+        }
+    }
+
+    pub fn l1_bytes(&self) -> u64 {
+        self.l1_kib as u64 * 1024
+    }
+}
+
+/// On-chip mesh fabric parameters (§II latency model).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NocConfig {
+    /// Router link width in bytes/cycle (Table I: 1024-bit = 128 B/cycle).
+    pub link_bytes_per_cycle: u64,
+    /// Router-to-router hop latency `Lr` (cycles).
+    pub router_latency: u64,
+    /// L1-to-NoC injection/ejection latency `Ld` (cycles).
+    pub inject_latency: u64,
+    /// Hardware collective support (path-based in-flight forwarding for
+    /// multicast and in-network reduction). When false, collectives fall
+    /// back to successive point-to-point unicasts (§II).
+    pub hw_collectives: bool,
+}
+
+/// Main-memory (HBM) configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HbmConfig {
+    /// Channels attached along the west edge (serve Q/O row traffic).
+    pub channels_west: usize,
+    /// Channels attached along the south edge (serve K/V column traffic).
+    pub channels_south: usize,
+    /// Per-channel bandwidth in bytes/cycle (HBM2e: 64 GB/s @ 1 GHz).
+    pub channel_bytes_per_cycle: u64,
+    /// Access latency in cycles (paper §V-B: ~200).
+    pub access_latency: u64,
+}
+
+impl HbmConfig {
+    pub fn total_channels(&self) -> usize {
+        self.channels_west + self.channels_south
+    }
+
+    /// Aggregate peak bandwidth in bytes/cycle.
+    pub fn peak_bytes_per_cycle(&self) -> u64 {
+        self.total_channels() as u64 * self.channel_bytes_per_cycle
+    }
+
+    /// Aggregate peak bandwidth in GB/s at the given clock.
+    pub fn peak_gbps(&self, freq_ghz: f64) -> f64 {
+        self.peak_bytes_per_cycle() as f64 * freq_ghz
+    }
+}
+
+/// A full accelerator instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    pub name: String,
+    /// Mesh width (tiles in x).
+    pub mesh_x: usize,
+    /// Mesh height (tiles in y).
+    pub mesh_y: usize,
+    pub tile: TileConfig,
+    pub noc: NocConfig,
+    pub hbm: HbmConfig,
+    /// Clock frequency (paper: 1 GHz).
+    pub freq_ghz: f64,
+}
+
+impl ArchConfig {
+    pub fn num_tiles(&self) -> usize {
+        self.mesh_x * self.mesh_y
+    }
+
+    /// Whole-system peak FLOP/cycle (matrix engines only, as in the paper's
+    /// peak-performance accounting).
+    pub fn peak_flops_per_cycle(&self) -> u64 {
+        self.num_tiles() as u64 * self.tile.redmule_flops_per_cycle()
+    }
+
+    /// Peak performance in TFLOPS.
+    pub fn peak_tflops(&self) -> f64 {
+        self.peak_flops_per_cycle() as f64 * self.freq_ghz / 1e3
+    }
+
+    /// Total on-chip L1 in bytes.
+    pub fn total_l1_bytes(&self) -> u64 {
+        self.num_tiles() as u64 * self.tile.l1_bytes()
+    }
+
+    /// Flat tile id for mesh coordinates.
+    pub fn tile_id(&self, x: usize, y: usize) -> u32 {
+        debug_assert!(x < self.mesh_x && y < self.mesh_y);
+        (y * self.mesh_x + x) as u32
+    }
+
+    /// Check internal consistency; returns a list of problems (empty = ok).
+    pub fn validate(&self) -> Vec<String> {
+        let mut problems = Vec::new();
+        if self.mesh_x == 0 || self.mesh_y == 0 {
+            problems.push("mesh dimensions must be positive".into());
+        }
+        if self.tile.redmule_rows == 0 || self.tile.redmule_cols == 0 {
+            problems.push("RedMulE array must be non-empty".into());
+        }
+        if self.tile.spatz_fpus == 0 {
+            problems.push("Spatz must have at least one FPU".into());
+        }
+        if self.tile.l1_kib < 16 {
+            problems.push(format!("L1 of {} KiB is too small to hold any block", self.tile.l1_kib));
+        }
+        if self.noc.link_bytes_per_cycle == 0 {
+            problems.push("NoC link bandwidth must be positive".into());
+        }
+        if self.hbm.total_channels() == 0 {
+            problems.push("need at least one HBM channel".into());
+        }
+        if self.hbm.channels_west > self.mesh_y {
+            problems.push(format!(
+                "{} west HBM channels exceed {} mesh rows",
+                self.hbm.channels_west, self.mesh_y
+            ));
+        }
+        if self.hbm.channels_south > self.mesh_x {
+            problems.push(format!(
+                "{} south HBM channels exceed {} mesh columns",
+                self.hbm.channels_south, self.mesh_x
+            ));
+        }
+        if self.freq_ghz <= 0.0 {
+            problems.push("clock frequency must be positive".into());
+        }
+        problems
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("name", Json::str(self.name.clone())),
+            ("mesh", Json::Arr(vec![Json::num(self.mesh_x as f64), Json::num(self.mesh_y as f64)])),
+            ("peak_tflops", Json::num(self.peak_tflops())),
+            ("hbm_channels", Json::num(self.hbm.total_channels() as f64)),
+            ("hbm_peak_gbps", Json::num(self.hbm.peak_gbps(self.freq_ghz))),
+            ("l1_kib_per_tile", Json::num(self.tile.l1_kib as f64)),
+            ("hw_collectives", Json::Bool(self.noc.hw_collectives)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::presets;
+
+    #[test]
+    fn table1_peaks_match_paper() {
+        let a = presets::table1();
+        // Table I summary: 1024 TFLOPS peak, 2 TB/s peak HBM bandwidth.
+        assert_eq!(a.num_tiles(), 1024);
+        assert_eq!(a.tile.redmule_flops_per_cycle(), 1024); // 1 TFLOPS @ 1 GHz
+        assert!((a.peak_tflops() - 1048.576).abs() < 1e-6); // 2*32*16*1024 FLOP/cyc
+        assert_eq!(a.hbm.total_channels(), 32);
+        assert!((a.hbm.peak_gbps(a.freq_ghz) - 2048.0).abs() < 1e-6);
+        assert_eq!(a.tile.spatz_flops_per_cycle(), 128); // 128 GFLOPS @ 1 GHz
+        assert!(a.validate().is_empty());
+    }
+
+    #[test]
+    fn tile_id_row_major() {
+        let a = presets::table1();
+        assert_eq!(a.tile_id(0, 0), 0);
+        assert_eq!(a.tile_id(1, 0), 1);
+        assert_eq!(a.tile_id(0, 1), 32);
+    }
+
+    #[test]
+    fn validate_flags_bad_configs() {
+        let mut a = presets::table1();
+        a.mesh_x = 0;
+        assert!(!a.validate().is_empty());
+
+        let mut b = presets::table1();
+        b.hbm.channels_west = 64; // more channels than rows
+        assert!(!b.validate().is_empty());
+    }
+}

@@ -1,0 +1,119 @@
+//! Architecture configuration files (`configs/*.toml`).
+//!
+//! Every field defaults to the Table I value, so a config file only states
+//! its deviations — e.g. a 16×16 fabric study only sets `[mesh]` and
+//! `[tile]`. See `configs/table1.toml` for the fully-spelled-out baseline.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::toml::parse_toml;
+
+use super::config::ArchConfig;
+use super::presets;
+
+/// Load an [`ArchConfig`] from a TOML file (Table I defaults).
+pub fn load_arch(path: &Path) -> Result<ArchConfig> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    let arch = parse_arch(&text, path.file_stem().and_then(|s| s.to_str()).unwrap_or("custom"))
+        .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let problems = arch.validate();
+    if !problems.is_empty() {
+        return Err(anyhow!("{}: invalid config: {}", path.display(), problems.join("; ")));
+    }
+    Ok(arch)
+}
+
+/// Parse from a TOML string (defaults from Table I).
+pub fn parse_arch(text: &str, default_name: &str) -> Result<ArchConfig, String> {
+    let doc = parse_toml(text)?;
+    let mut a = presets::table1();
+    a.name = doc
+        .get("", "name")
+        .and_then(|v| v.as_str())
+        .unwrap_or(default_name)
+        .to_string();
+    a.freq_ghz = doc.f64_or("", "freq_ghz", a.freq_ghz);
+
+    a.mesh_x = doc.usize_or("mesh", "x", a.mesh_x);
+    a.mesh_y = doc.usize_or("mesh", "y", a.mesh_y);
+
+    a.tile.redmule_rows = doc.usize_or("tile", "redmule_rows", a.tile.redmule_rows);
+    a.tile.redmule_cols = doc.usize_or("tile", "redmule_cols", a.tile.redmule_cols);
+    a.tile.redmule_fill = doc.u64_or("tile", "redmule_fill", a.tile.redmule_fill);
+    a.tile.redmule_setup = doc.u64_or("tile", "redmule_setup", a.tile.redmule_setup);
+    a.tile.spatz_fpus = doc.usize_or("tile", "spatz_fpus", a.tile.spatz_fpus);
+    a.tile.spatz_lanes_per_fpu = doc.usize_or("tile", "spatz_lanes_per_fpu", a.tile.spatz_lanes_per_fpu);
+    a.tile.spatz_exp_per_fpu = doc.usize_or("tile", "spatz_exp_per_fpu", a.tile.spatz_exp_per_fpu);
+    a.tile.l1_kib = doc.usize_or("tile", "l1_kib", a.tile.l1_kib);
+    a.tile.l1_bytes_per_cycle = doc.u64_or("tile", "l1_bytes_per_cycle", a.tile.l1_bytes_per_cycle);
+
+    a.noc.link_bytes_per_cycle = doc.u64_or("noc", "link_bytes_per_cycle", a.noc.link_bytes_per_cycle);
+    a.noc.router_latency = doc.u64_or("noc", "router_latency", a.noc.router_latency);
+    a.noc.inject_latency = doc.u64_or("noc", "inject_latency", a.noc.inject_latency);
+    a.noc.hw_collectives = doc.bool_or("noc", "hw_collectives", a.noc.hw_collectives);
+
+    a.hbm.channels_west = doc.usize_or("hbm", "channels_west", a.hbm.channels_west);
+    a.hbm.channels_south = doc.usize_or("hbm", "channels_south", a.hbm.channels_south);
+    a.hbm.channel_bytes_per_cycle =
+        doc.u64_or("hbm", "channel_bytes_per_cycle", a.hbm.channel_bytes_per_cycle);
+    a.hbm.access_latency = doc.u64_or("hbm", "access_latency", a.hbm.access_latency);
+
+    Ok(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_config_is_table1() {
+        let a = parse_arch("", "x").unwrap();
+        let t1 = presets::table1();
+        assert_eq!(a.mesh_x, t1.mesh_x);
+        assert_eq!(a.tile, t1.tile);
+        assert_eq!(a.hbm, t1.hbm);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let a = parse_arch(
+            "name = \"mini\"\n[mesh]\nx = 8\ny = 8\n[tile]\nl1_kib = 6144\n[noc]\nhw_collectives = false\n[hbm]\nchannels_west = 8\nchannels_south = 8\n",
+            "x",
+        )
+        .unwrap();
+        assert_eq!(a.name, "mini");
+        assert_eq!((a.mesh_x, a.mesh_y), (8, 8));
+        assert_eq!(a.tile.l1_kib, 6144);
+        assert!(!a.noc.hw_collectives);
+        assert_eq!(a.hbm.channels_west, 8);
+    }
+
+    #[test]
+    fn load_validates() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("fa-arch-{}.toml", std::process::id()));
+        std::fs::write(&path, "[mesh]\nx = 0\n").unwrap();
+        assert!(load_arch(&path).is_err());
+        std::fs::write(&path, "[mesh]\nx = 16\ny = 16\n[hbm]\nchannels_west = 16\nchannels_south = 16\n").unwrap();
+        let a = load_arch(&path).unwrap();
+        assert_eq!(a.num_tiles(), 256);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shipped_configs_parse() {
+        // Validate every file in configs/ if present (repo root).
+        let dir = std::path::Path::new("configs");
+        if dir.is_dir() {
+            for entry in std::fs::read_dir(dir).unwrap() {
+                let p = entry.unwrap().path();
+                if p.extension().is_some_and(|e| e == "toml") {
+                    load_arch(&p).unwrap_or_else(|e| panic!("{}: {e}", p.display()));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Architecture configuration for tile-based many-PE accelerators.
+//!
+//! Mirrors the paper's §II reference template: a 2-D mesh of tiles, each
+//! with a RedMulE matrix engine, a Spatz vector engine, an iDMA engine and
+//! a local L1 scratchpad, connected by a FlooNoC-style mesh with optional
+//! hardware collective support, with HBM channels at the west and south
+//! mesh edges.
+
+pub mod area;
+pub mod config;
+pub mod loader;
+pub mod presets;
+
+pub use area::{AreaModel, DieArea};
+pub use loader::{load_arch, parse_arch};
+pub use config::{ArchConfig, HbmConfig, NocConfig, TileConfig};

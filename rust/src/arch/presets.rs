@@ -1,0 +1,179 @@
+//! Canonical architecture instances from the paper.
+
+use super::config::{ArchConfig, HbmConfig, NocConfig, TileConfig};
+
+/// RedMulE timing-calibration constants (DESIGN.md §6): pipeline fill per
+/// output-tile pass and per-invocation offload/setup overhead. Calibrated
+/// so a 16×128×16 slice lands near the paper's reported 23% active
+/// utilization (32×32 group, S=512) while 128×128×128 blocks exceed 85%.
+pub const REDMULE_FILL: u64 = 8;
+pub const REDMULE_SETUP: u64 = 120;
+
+/// Table I tile: RedMulE 32×16 CE (1 TFLOPS @ FP16), Spatz 16 FPU
+/// (128 GFLOPS), 384 KiB L1 at 512 GB/s.
+pub fn table1_tile() -> TileConfig {
+    TileConfig {
+        redmule_rows: 32,
+        redmule_cols: 16,
+        redmule_fill: REDMULE_FILL,
+        redmule_setup: REDMULE_SETUP,
+        spatz_fpus: 16,
+        spatz_lanes_per_fpu: 8,
+        spatz_exp_per_fpu: 1,
+        l1_kib: 384,
+        l1_bytes_per_cycle: 512,
+    }
+}
+
+/// Table I system: 32×32 tiles, 1024-bit NoC links, 16×2 HBM channels
+/// split over the west and south edges, hardware collectives available.
+pub fn table1() -> ArchConfig {
+    ArchConfig {
+        name: "table1-32x32".into(),
+        mesh_x: 32,
+        mesh_y: 32,
+        tile: table1_tile(),
+        noc: NocConfig {
+            link_bytes_per_cycle: 128, // 1024-bit
+            router_latency: 4,         // Lr (§II example)
+            inject_latency: 10,        // Ld (§II example)
+            hw_collectives: true,
+        },
+        hbm: HbmConfig {
+            channels_west: 16,
+            channels_south: 16,
+            channel_bytes_per_cycle: 64, // HBM2e 64 GB/s per channel
+            access_latency: 200,         // §V-B
+        },
+        freq_ghz: 1.0,
+    }
+}
+
+/// The same system with hardware collective support disabled (software
+/// point-to-point collectives) — the `Flat` baseline of Fig. 3.
+pub fn table1_sw_collectives() -> ArchConfig {
+    let mut a = table1();
+    a.name = "table1-32x32-swcoll".into();
+    a.noc.hw_collectives = false;
+    a
+}
+
+/// Table II: iso-peak-performance (1024 TFLOPS) and iso-on-chip-memory
+/// configurations at different fabric granularities.
+///
+/// | granularity | RedMulE CE | Spatz FU | L1 (KiB) | L1 BW (GB/s) |
+/// |-------------|-----------|----------|----------|--------------|
+/// | 32×32       | 32×16     | 16       | 386*     | 512          |
+/// | 16×16       | 64×32     | 64       | 1536     | 2048         |
+/// | 8×8         | 128×64    | 256      | 6144     | 8192         |
+///
+/// *Table II prints 386/1526 KB; we use 384/1536 (the consistent
+/// power-of-two scaling of the 32×32 baseline — the printed values are
+/// evidently typos, as 4·384 = 1536 and 4·1536 = 6144).
+pub fn table2(granularity: usize) -> ArchConfig {
+    let (mesh, ce_rows, ce_cols, fpus, l1_kib, l1_bw) = match granularity {
+        32 => (32, 32, 16, 16, 384, 512),
+        16 => (16, 64, 32, 64, 1536, 2048),
+        8 => (8, 128, 64, 256, 6144, 8192),
+        g => panic!("Table II defines granularities 32/16/8, not {g}"),
+    };
+    let mut a = table1();
+    a.name = format!("table2-{mesh}x{mesh}");
+    a.mesh_x = mesh;
+    a.mesh_y = mesh;
+    a.tile = TileConfig {
+        redmule_rows: ce_rows,
+        redmule_cols: ce_cols,
+        redmule_fill: REDMULE_FILL * (ce_cols as u64 / 16),
+        redmule_setup: REDMULE_SETUP,
+        spatz_fpus: fpus,
+        spatz_lanes_per_fpu: 8,
+        spatz_exp_per_fpu: 1,
+        l1_kib,
+        l1_bytes_per_cycle: l1_bw,
+    };
+    // HBM channels are capped by edge length (≤ mesh rows/cols per edge).
+    a.hbm.channels_west = a.hbm.channels_west.min(mesh);
+    a.hbm.channels_south = a.hbm.channels_south.min(mesh);
+    a
+}
+
+/// A Table-II architecture with an explicit HBM channel configuration
+/// (`channels_per_edge` west + the same south) for the Fig. 5a
+/// co-exploration heatmap.
+pub fn with_hbm_channels(mut a: ArchConfig, channels_per_edge: usize) -> ArchConfig {
+    assert!(channels_per_edge >= 1);
+    let per_edge = channels_per_edge.min(a.mesh_y);
+    a.hbm.channels_west = per_edge;
+    a.hbm.channels_south = channels_per_edge.min(a.mesh_x);
+    a.name = format!("{}-hbm{}x2", a.name, channels_per_edge);
+    a
+}
+
+/// The paper's selected optimum (§V-C): 32×32 fabric granularity with
+/// 16×2 HBM channels — identical to Table I with hardware collectives.
+pub fn best_arch() -> ArchConfig {
+    let mut a = table1();
+    a.name = "BestArch".into();
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_is_iso_peak_and_iso_memory() {
+        let base = table2(32);
+        for g in [16usize, 8] {
+            let a = table2(g);
+            assert_eq!(
+                a.peak_flops_per_cycle(),
+                base.peak_flops_per_cycle(),
+                "granularity {g} must match peak"
+            );
+            assert_eq!(
+                a.total_l1_bytes(),
+                base.total_l1_bytes(),
+                "granularity {g} must match total L1"
+            );
+            assert!(a.validate().is_empty(), "{:?}", a.validate());
+        }
+    }
+
+    #[test]
+    fn table2_tile_specs_match_paper() {
+        let a = table2(16);
+        assert_eq!((a.tile.redmule_rows, a.tile.redmule_cols), (64, 32));
+        assert_eq!(a.tile.spatz_fpus, 64);
+        assert_eq!(a.tile.l1_bytes_per_cycle, 2048);
+        let b = table2(8);
+        assert_eq!((b.tile.redmule_rows, b.tile.redmule_cols), (128, 64));
+        assert_eq!(b.tile.spatz_fpus, 256);
+        assert_eq!(b.tile.l1_kib, 6144);
+    }
+
+    #[test]
+    #[should_panic(expected = "Table II")]
+    fn table2_rejects_unknown_granularity() {
+        table2(12);
+    }
+
+    #[test]
+    fn hbm_channel_override() {
+        let a = with_hbm_channels(table2(8), 16);
+        // 8×8 mesh can host at most 8 channels per edge.
+        assert_eq!(a.hbm.channels_west, 8);
+        let b = with_hbm_channels(table2(32), 8);
+        assert_eq!(b.hbm.channels_west, 8);
+        assert_eq!(b.hbm.channels_south, 8);
+    }
+
+    #[test]
+    fn best_arch_is_table1_shape() {
+        let a = best_arch();
+        assert_eq!(a.num_tiles(), 1024);
+        assert!(a.noc.hw_collectives);
+        assert_eq!(a.hbm.total_channels(), 32);
+    }
+}

@@ -1,0 +1,120 @@
+//! Experiment specification and result records.
+
+use crate::arch::ArchConfig;
+use crate::dataflow::{Dataflow, Workload};
+use crate::sim::{Breakdown, RunStats};
+use crate::util::json::Json;
+
+/// One simulation to run: a workload × architecture × dataflow (+ group).
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub arch: ArchConfig,
+    pub workload: Workload,
+    pub dataflow: Dataflow,
+    /// FlatAttention group edge (ignored for FlashAttention variants).
+    pub group: usize,
+}
+
+impl ExperimentSpec {
+    pub fn id(&self) -> String {
+        if self.dataflow.is_flat() {
+            format!(
+                "{}/{}/{}-g{}",
+                self.arch.name,
+                self.workload.label(),
+                self.dataflow.label(),
+                self.group
+            )
+        } else {
+            format!("{}/{}/{}", self.arch.name, self.workload.label(), self.dataflow.label())
+        }
+    }
+}
+
+/// Result of one experiment with derived metrics.
+#[derive(Debug, Clone)]
+pub struct ExperimentResult {
+    pub id: String,
+    pub dataflow: Dataflow,
+    pub workload: Workload,
+    pub group: usize,
+    pub makespan: u64,
+    pub runtime_ms: f64,
+    pub breakdown: Breakdown,
+    pub hbm_bytes: u64,
+    /// System compute utilization (matrix FLOPs vs whole-chip peak).
+    pub utilization: f64,
+    /// RedMulE utilization *when active* (Fig. 4 labels).
+    pub redmule_active_util: f64,
+    /// Average HBM bandwidth utilization.
+    pub hbm_bw_util: f64,
+    /// Achieved TFLOPS at the architecture clock.
+    pub tflops: f64,
+    pub ops_executed: usize,
+}
+
+impl ExperimentResult {
+    pub fn from_stats(spec: &ExperimentSpec, stats: &RunStats) -> Self {
+        let arch = &spec.arch;
+        let util = stats.compute_utilization(arch.peak_flops_per_cycle());
+        Self {
+            id: spec.id(),
+            dataflow: spec.dataflow,
+            workload: spec.workload,
+            group: spec.group,
+            makespan: stats.makespan,
+            runtime_ms: stats.runtime_ms(arch.freq_ghz),
+            breakdown: stats.breakdown.clone(),
+            hbm_bytes: stats.hbm_bytes,
+            utilization: util,
+            redmule_active_util: stats
+                .redmule_active_utilization(arch.tile.redmule_flops_per_cycle()),
+            hbm_bw_util: stats.hbm_bw_utilization(arch.hbm.peak_bytes_per_cycle()),
+            tflops: util * arch.peak_tflops(),
+            ops_executed: stats.ops_executed,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("id", Json::str(self.id.clone())),
+            ("dataflow", Json::str(self.dataflow.label())),
+            ("seq", Json::num(self.workload.seq as f64)),
+            ("head_dim", Json::num(self.workload.head_dim as f64)),
+            ("heads", Json::num(self.workload.heads as f64)),
+            ("batch", Json::num(self.workload.batch as f64)),
+            ("group", Json::num(self.group as f64)),
+            ("makespan_cycles", Json::num(self.makespan as f64)),
+            ("runtime_ms", Json::num(self.runtime_ms)),
+            ("breakdown", self.breakdown.to_json()),
+            ("hbm_bytes", Json::num(self.hbm_bytes as f64)),
+            ("utilization", Json::num(self.utilization)),
+            ("redmule_active_util", Json::num(self.redmule_active_util)),
+            ("hbm_bw_util", Json::num(self.hbm_bw_util)),
+            ("tflops", Json::num(self.tflops)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::table1;
+
+    #[test]
+    fn spec_ids_distinguish_groups() {
+        let base = ExperimentSpec {
+            arch: table1(),
+            workload: Workload::new(1024, 128, 8, 1),
+            dataflow: Dataflow::FlatColl,
+            group: 8,
+        };
+        let mut other = base.clone();
+        other.group = 16;
+        assert_ne!(base.id(), other.id());
+
+        let mut flash = base.clone();
+        flash.dataflow = Dataflow::Flash2;
+        assert!(!flash.id().contains("-g"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Experiment coordination: specs, parallel execution, sweeps, persistence.
+//!
+//! This is the L3 leader in deployment terms: it owns the experiment
+//! queue, fans simulation runs out over a worker pool, searches the
+//! FlatAttention group-size space (the paper's per-sequence-length optimum
+//! of §V-B), and persists machine-readable results.
+
+pub mod experiment;
+pub mod runner;
+pub mod store;
+
+pub use experiment::{ExperimentResult, ExperimentSpec};
+pub use runner::{best_group, run_all, run_one, valid_groups};
+pub use store::ResultStore;

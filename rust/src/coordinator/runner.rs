@@ -1,0 +1,98 @@
+//! Parallel experiment execution and group-size search.
+
+use crate::arch::ArchConfig;
+use crate::dataflow::{self, Dataflow, Workload};
+use crate::util::pool;
+
+use super::experiment::{ExperimentResult, ExperimentSpec};
+
+/// Execute one experiment.
+pub fn run_one(spec: &ExperimentSpec) -> ExperimentResult {
+    let stats = dataflow::run(&spec.arch, &spec.workload, spec.dataflow, spec.group);
+    ExperimentResult::from_stats(spec, &stats)
+}
+
+/// Execute all experiments across the worker pool, preserving order.
+pub fn run_all(specs: &[ExperimentSpec], threads: usize) -> Vec<ExperimentResult> {
+    pool::par_map(specs, threads, run_one)
+}
+
+/// Square group sizes valid on an architecture (divide both mesh axes,
+/// from 2 up to the full mesh edge).
+pub fn valid_groups(arch: &ArchConfig) -> Vec<usize> {
+    let max = arch.mesh_x.min(arch.mesh_y);
+    [2usize, 4, 8, 16, 32, 64]
+        .into_iter()
+        .filter(|&g| g <= max && arch.mesh_x % g == 0 && arch.mesh_y % g == 0)
+        .collect()
+}
+
+/// Find the best (lowest-makespan) group size for a FlatAttention dataflow
+/// on a workload — the §V-B per-sequence-length optimum. Returns the
+/// winning result.
+pub fn best_group(
+    arch: &ArchConfig,
+    wl: &Workload,
+    df: Dataflow,
+    threads: usize,
+) -> ExperimentResult {
+    assert!(df.is_flat(), "best_group only applies to FlatAttention variants");
+    let specs: Vec<ExperimentSpec> = valid_groups(arch)
+        .into_iter()
+        .map(|group| ExperimentSpec {
+            arch: arch.clone(),
+            workload: *wl,
+            dataflow: df,
+            group,
+        })
+        .collect();
+    run_all(&specs, threads)
+        .into_iter()
+        .min_by_key(|r| r.makespan)
+        .expect("at least one valid group")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::{table1, table2};
+
+    #[test]
+    fn valid_groups_table1() {
+        assert_eq!(valid_groups(&table1()), vec![2, 4, 8, 16, 32]);
+        assert_eq!(valid_groups(&table2(8)), vec![2, 4, 8]);
+    }
+
+    #[test]
+    fn run_all_preserves_order_and_ids() {
+        let arch = table1();
+        let wl = Workload::new(512, 64, 4, 1);
+        let specs: Vec<ExperimentSpec> = [Dataflow::Flash2, Dataflow::FlatColl]
+            .into_iter()
+            .map(|df| ExperimentSpec { arch: arch.clone(), workload: wl, dataflow: df, group: 8 })
+            .collect();
+        let results = run_all(&specs, 2);
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].dataflow, Dataflow::Flash2);
+        assert_eq!(results[1].dataflow, Dataflow::FlatColl);
+        assert!(results.iter().all(|r| r.makespan > 0));
+    }
+
+    #[test]
+    fn best_group_short_seq_prefers_small_groups() {
+        // §V-B over-flattening: at S=512 the optimum must not be the full
+        // 32×32 mesh.
+        let arch = table1();
+        let wl = Workload::new(512, 128, 32, 4);
+        let best = best_group(&arch, &wl, Dataflow::FlatAsyn, pool::default_threads());
+        assert!(best.group < 32, "best group {} at S=512", best.group);
+    }
+
+    #[test]
+    fn best_group_long_seq_prefers_large_groups() {
+        let arch = table1();
+        let wl = Workload::new(4096, 128, 32, 2);
+        let best = best_group(&arch, &wl, Dataflow::FlatAsyn, pool::default_threads());
+        assert!(best.group >= 16, "best group {} at S=4096", best.group);
+    }
+}

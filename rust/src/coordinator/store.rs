@@ -1,0 +1,121 @@
+//! JSON persistence for experiment results.
+//!
+//! `flatattention report --out results.json` writes every figure's data in
+//! machine-readable form so plots can be regenerated without re-simulating.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::experiment::ExperimentResult;
+
+/// An accumulating result store, grouped into named sections (one per
+/// figure/table).
+#[derive(Debug, Default)]
+pub struct ResultStore {
+    sections: Vec<(String, Vec<Json>)>,
+}
+
+impl ResultStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add results under a section name (e.g. "fig3").
+    pub fn add_results(&mut self, section: &str, results: &[ExperimentResult]) {
+        self.add_json(section, results.iter().map(|r| r.to_json()).collect());
+    }
+
+    /// Add raw JSON rows under a section name.
+    pub fn add_json(&mut self, section: &str, rows: Vec<Json>) {
+        if let Some((_, existing)) = self.sections.iter_mut().find(|(s, _)| s == section) {
+            existing.extend(rows);
+        } else {
+            self.sections.push((section.to_string(), rows));
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.sections
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Arr(v.clone())))
+                .collect(),
+        )
+    }
+
+    /// Write the store as pretty JSON.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Load a store back (sections of raw JSON rows).
+    pub fn load(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("parse error: {e}"))?;
+        let mut store = Self::new();
+        if let Json::Obj(map) = json {
+            for (k, v) in map {
+                if let Json::Arr(rows) = v {
+                    store.add_json(&k, rows);
+                }
+            }
+        }
+        Ok(store)
+    }
+
+    pub fn section(&self, name: &str) -> Option<&[Json]> {
+        self.sections
+            .iter()
+            .find(|(s, _)| s == name)
+            .map(|(_, v)| v.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::table1;
+    use crate::coordinator::{run_one, ExperimentSpec};
+    use crate::dataflow::{Dataflow, Workload};
+
+    #[test]
+    fn round_trip_through_disk() {
+        let spec = ExperimentSpec {
+            arch: table1(),
+            workload: Workload::new(512, 64, 2, 1),
+            dataflow: Dataflow::FlatColl,
+            group: 8,
+        };
+        let result = run_one(&spec);
+        let mut store = ResultStore::new();
+        store.add_results("fig3", &[result.clone()]);
+        store.add_json("meta", vec![Json::obj([("version", Json::num(1))])]);
+
+        let path = std::env::temp_dir().join(format!("fa-store-{}.json", std::process::id()));
+        store.save(&path).unwrap();
+        let loaded = ResultStore::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        let rows = loaded.section("fig3").unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(
+            rows[0].get("makespan_cycles").unwrap().as_f64().unwrap() as u64,
+            result.makespan
+        );
+        assert!(loaded.section("meta").is_some());
+        assert!(loaded.section("nope").is_none());
+    }
+
+    #[test]
+    fn sections_accumulate() {
+        let mut store = ResultStore::new();
+        store.add_json("a", vec![Json::num(1)]);
+        store.add_json("a", vec![Json::num(2)]);
+        assert_eq!(store.section("a").unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,387 @@
+//! FlashAttention dataflows on the tile-based architecture (Algorithm 1).
+//!
+//! The MHA workload is partitioned over batch × heads × output-sequence
+//! blocks; blocks are distributed round-robin over tiles, which process
+//! them independently (no inter-tile communication, no cross-tile reuse —
+//! the defining property the paper contrasts FlatAttention against).
+//!
+//! * **FA-2** (synchronous): one block in flight per tile, Kᵀ/V
+//!   double-buffered so the next load overlaps the current compute.
+//! * **FA-3** (asynchronous): two blocks (different heads) in flight per
+//!   tile; while the matrix engine works on one head, the DMA and vector
+//!   engine process the other (§III-C). Each stream's K/V is
+//!   single-buffered — the second stream provides the overlap. FA-3 pays a
+//!   per-iteration scheduling overhead on the scalar core (§V-A: "FA-3
+//!   introduces an overhead for more complex scheduling").
+
+use crate::arch::ArchConfig;
+use crate::engines::{dma_hbm_time, matmul_cycles, SpatzOp};
+use crate::hbm::HbmMap;
+use crate::noc::Topology;
+use crate::sim::{Component, OpId, Program, ResourceId};
+
+use super::tiling::flash_block_size;
+use super::Workload;
+
+/// Scalar-core scheduling overhead per inner iteration for the
+/// asynchronous schedule (cycles).
+pub const FA3_SCHED_OVERHEAD: u64 = 60;
+
+struct TileCtx {
+    redmule: ResourceId,
+    spatz: ResourceId,
+    scalar: ResourceId,
+}
+
+/// Build the FlashAttention program (`asynchronous` = FA-3 schedule).
+pub fn flash_program(arch: &ArchConfig, wl: &Workload, asynchronous: bool) -> Program {
+    flash_program_ext(arch, wl, asynchronous, true)
+}
+
+/// Extended builder: `double_buffer = false` disables K/V prefetching (the
+/// Fig. 3 "*implementations without double buffering" ablation).
+pub fn flash_program_ext(
+    arch: &ArchConfig,
+    wl: &Workload,
+    asynchronous: bool,
+    double_buffer: bool,
+) -> Program {
+    let mut prog = Program::new();
+    let topo = Topology::new(arch.mesh_x, arch.mesh_y);
+    let hbm_map = HbmMap::new(arch);
+    let n_tiles = topo.num_tiles();
+    let n_chan = hbm_map.total_channels();
+
+    // HBM channels are allocated first so `ResourceId(c)` == channel `c`
+    // inside `build_stream` (asserted here).
+    let chan_res = prog.resources(n_chan);
+    debug_assert!(chan_res.first().map_or(true, |r| r.0 == 0));
+    let _ = chan_res;
+    let tiles: Vec<TileCtx> = (0..n_tiles)
+        .map(|_| TileCtx {
+            redmule: prog.resource(),
+            spatz: prog.resource(),
+            scalar: prog.resource(),
+        })
+        .collect();
+
+    let m = flash_block_size(&arch.tile, wl.head_dim, asynchronous);
+    let t_r = wl.seq.div_ceil(m);
+    let t_c = wl.seq.div_ceil(m);
+    let d = wl.head_dim;
+    let eb = Workload::BYTES_PER_ELEM;
+
+    // Enumerate blocks (b, h, i) and deal them round-robin over tiles.
+    let mut tile_blocks: Vec<Vec<(u64, u64, u64)>> = vec![Vec::new(); n_tiles];
+    let mut idx = 0usize;
+    for b in 0..wl.batch {
+        for h in 0..wl.heads {
+            for i in 0..t_r {
+                tile_blocks[idx % n_tiles].push((b, h, i));
+                idx += 1;
+            }
+        }
+    }
+
+    for tid in 0..n_tiles {
+        let (x, y) = topo.coords(tid as u32);
+        let blocks = &tile_blocks[tid];
+        if blocks.is_empty() {
+            continue;
+        }
+        if asynchronous {
+            // Two interleaved streams sharing the tile's engines.
+            let (even, odd): (Vec<_>, Vec<_>) =
+                blocks.iter().enumerate().partition(|(i, _)| i % 2 == 0);
+            for stream in [even, odd] {
+                let list: Vec<_> = stream.into_iter().map(|(_, b)| *b).collect();
+                build_stream(
+                    &mut prog, arch, wl, &hbm_map, &tiles[tid], tid as u32, x, y, &list, m, t_c, d,
+                    eb, true, double_buffer,
+                );
+            }
+        } else {
+            build_stream(
+                &mut prog, arch, wl, &hbm_map, &tiles[tid], tid as u32, x, y, blocks, m, t_c, d,
+                eb, false, double_buffer,
+            );
+        }
+    }
+
+    prog.flops = wl.matmul_flops();
+    prog
+}
+
+/// Emit one serial stream of blocks for a tile. Returns nothing; deps keep
+/// the stream internally ordered while engines arbitrate across streams.
+#[allow(clippy::too_many_arguments)]
+fn build_stream(
+    prog: &mut Program,
+    arch: &ArchConfig,
+    wl: &Workload,
+    hbm_map: &HbmMap,
+    ctx: &TileCtx,
+    tid: u32,
+    x: usize,
+    y: usize,
+    blocks: &[(u64, u64, u64)],
+    m: u64,
+    t_c: u64,
+    d: u64,
+    eb: u64,
+    asynchronous: bool,
+    double_buffer: bool,
+) {
+    let chan_base = |c: usize| ResourceId(c as u32);
+    let n_chan = hbm_map.total_channels();
+    let row_ch = hbm_map.row_channel(x, y);
+    let mut prev_block_end: Option<OpId> = None;
+
+    for (blk_no, &(_b, _h, i)) in blocks.iter().enumerate() {
+        // Row-block height (last block may be partial).
+        let m_r = (wl.seq - i * m).min(m);
+        let start_deps: Vec<OpId> = prev_block_end.into_iter().collect();
+
+        // Load Q_i through the tile's row channel (west edge).
+        let q_bytes = m_r * d * eb;
+        let tq = dma_hbm_time(&arch.hbm, &arch.noc, q_bytes, row_ch.hops);
+        let load_q = prog.op(
+            chan_base(row_ch.index),
+            tq.occupancy,
+            tq.latency,
+            Component::HbmAccess,
+            tid,
+            q_bytes,
+            &start_deps,
+        );
+
+        let mut load_kv: Vec<OpId> = Vec::with_capacity(t_c as usize);
+        let mut pv: Vec<OpId> = Vec::with_capacity(t_c as usize);
+        let mut last_stage: Option<OpId> = None;
+
+        // Causal: K/V blocks strictly above the diagonal are skipped.
+        let t_c_eff = if wl.causal { (i + 1).min(t_c) } else { t_c };
+        for j in 0..t_c_eff {
+            let m_c = (wl.seq - j * m).min(m);
+            // K/V blocks are address-interleaved across channels (no
+            // spatial affinity for per-tile independent blocks).
+            let kv_chan = (tid as usize + blk_no + j as usize) % n_chan;
+            let kv_hops = (topo_hops(arch, x, y, kv_chan, hbm_map)).max(1);
+            let kv_bytes = 2 * m_c * d * eb;
+            let tkv = dma_hbm_time(&arch.hbm, &arch.noc, kv_bytes, kv_hops);
+            // Buffering: double-buffered (dep on pv[j-2]) for the sync
+            // schedule, single-buffered (dep on pv[j-1]) for async streams.
+            let depth = if asynchronous || !double_buffer { 1 } else { 2 };
+            let buf_dep = j.checked_sub(depth).map(|k| pv[k as usize]);
+            let mut deps = start_deps.clone();
+            if let Some(dp) = buf_dep {
+                deps.push(dp);
+            }
+            let lkv = prog.op(
+                chan_base(kv_chan),
+                tkv.occupancy,
+                tkv.latency,
+                Component::HbmAccess,
+                tid,
+                kv_bytes,
+                &deps,
+            );
+            load_kv.push(lkv);
+
+            // Scalar-core scheduling overhead (FA-3 only).
+            let sched = if asynchronous {
+                Some(prog.op(
+                    ctx.scalar,
+                    FA3_SCHED_OVERHEAD,
+                    0,
+                    Component::Other,
+                    tid,
+                    0,
+                    last_stage.as_slice(),
+                ))
+            } else {
+                None
+            };
+
+            // S = Q_i · K_jᵀ on the matrix engine.
+            let mut qk_deps = vec![load_q, lkv];
+            if let Some(ls) = last_stage {
+                qk_deps.push(ls);
+            }
+            if let Some(s) = sched {
+                qk_deps.push(s);
+            }
+            let qk = prog.op(
+                ctx.redmule,
+                matmul_cycles(&arch.tile, m_r, d, m_c),
+                0,
+                Component::RedMule,
+                tid,
+                0,
+                &qk_deps,
+            );
+
+            // Softmax phase 1: scale by 1/√D, row maxima, running max.
+            // Diagonal blocks of causal workloads additionally apply the
+            // triangular mask on the vector engine.
+            let mask_cycles = if wl.causal && j == i {
+                SpatzOp::Scale { elems: m_r * m_c }.cycles(&arch.tile)
+            } else {
+                0
+            };
+            let sm1_cycles = mask_cycles
+                + SpatzOp::Scale { elems: m_r * m_c }.cycles(&arch.tile)
+                + SpatzOp::RowMax { rows: m_r, cols: m_c }.cycles(&arch.tile)
+                + SpatzOp::StatsUpdate { rows: m_r }.cycles(&arch.tile);
+            let sm1 = prog.op(ctx.spatz, sm1_cycles, 0, Component::Spatz, tid, 0, &[qk]);
+
+            // Softmax phase 2: exp, row sums, running denominator.
+            let sm2_cycles = SpatzOp::Exp { elems: m_r * m_c }.cycles(&arch.tile)
+                + SpatzOp::RowSum { rows: m_r, cols: m_c }.cycles(&arch.tile)
+                + SpatzOp::StatsUpdate { rows: m_r }.cycles(&arch.tile);
+            let sm2 = prog.op(ctx.spatz, sm2_cycles, 0, Component::Spatz, tid, 0, &[sm1]);
+
+            // Rescale the O accumulator by e^{m_old - m_new}.
+            let rs = prog.op(
+                ctx.spatz,
+                SpatzOp::Rescale { rows: m_r, elems: m_r * d }.cycles(&arch.tile),
+                0,
+                Component::Spatz,
+                tid,
+                0,
+                &[sm2],
+            );
+
+            // O += P̃ · V_j.
+            let pvop = prog.op(
+                ctx.redmule,
+                matmul_cycles(&arch.tile, m_r, m_c, d),
+                0,
+                Component::RedMule,
+                tid,
+                0,
+                &[rs],
+            );
+            pv.push(pvop);
+            last_stage = Some(pvop);
+        }
+
+        // Final normalization by diag(l)^{-1} and store of O_i.
+        let norm = prog.op(
+            ctx.spatz,
+            SpatzOp::Normalize { rows: m_r, elems: m_r * d }.cycles(&arch.tile),
+            0,
+            Component::Spatz,
+            tid,
+            0,
+            &[*pv.last().expect("at least one inner iteration")],
+        );
+        let o_bytes = m_r * d * eb;
+        let to = dma_hbm_time(&arch.hbm, &arch.noc, o_bytes, row_ch.hops);
+        let store = prog.op(
+            chan_base(row_ch.index),
+            to.occupancy,
+            to.latency,
+            Component::HbmAccess,
+            tid,
+            o_bytes,
+            &[norm],
+        );
+        prev_block_end = Some(store);
+    }
+}
+
+/// Hop count from tile (x, y) to an arbitrary channel index (west channels
+/// first, then south), for the interleaved K/V mapping.
+fn topo_hops(arch: &ArchConfig, x: usize, y: usize, chan: usize, _m: &HbmMap) -> u64 {
+    if chan < arch.hbm.channels_west {
+        // West edge, row band around `chan`.
+        let row = (chan * arch.mesh_y) / arch.hbm.channels_west.max(1);
+        (x + row.abs_diff(y)) as u64
+    } else {
+        let c = chan - arch.hbm.channels_west;
+        let col = (c * arch.mesh_x) / arch.hbm.channels_south.max(1);
+        (col.abs_diff(x) + (arch.mesh_y - 1 - y)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::table1;
+    use crate::sim::execute;
+
+    fn small_wl() -> Workload {
+        Workload::new(1024, 128, 4, 1)
+    }
+
+    #[test]
+    fn program_builds_and_validates() {
+        let arch = table1();
+        let p = flash_program(&arch, &small_wl(), false);
+        assert!(p.validate().is_ok());
+        assert!(p.num_ops() > 0);
+        assert_eq!(p.flops, small_wl().matmul_flops());
+    }
+
+    #[test]
+    fn executes_and_accounts_traffic() {
+        let arch = table1();
+        let wl = small_wl();
+        let p = flash_program(&arch, &wl, false);
+        let st = execute(&p, 0);
+        assert!(st.makespan > 0);
+        // Traffic = Q + O once, K/V once per row block:
+        // (2 + 2·T_r·(T_c terms…)) — at least compulsory, at most
+        // compulsory × (1 + T_c).
+        assert!(st.hbm_bytes >= wl.compulsory_bytes());
+        let m = flash_block_size(&arch.tile, wl.head_dim, false) as f64;
+        let expected = wl.compulsory_bytes() as f64 / 2.0 * (1.0 + wl.seq as f64 / m);
+        let ratio = st.hbm_bytes as f64 / expected;
+        assert!((0.8..1.2).contains(&ratio), "traffic ratio {ratio}");
+    }
+
+    #[test]
+    fn fa2_is_memory_bound_on_table1() {
+        // §V-A: FlashAttention saturates HBM bandwidth (up to ~80% avg)
+        // and compute utilization stays low.
+        let arch = table1();
+        let wl = Workload::new(4096, 128, 32, 2);
+        let st = execute(&flash_program(&arch, &wl, false), 0);
+        let bw = st.hbm_bw_utilization(arch.hbm.peak_bytes_per_cycle());
+        let cu = st.compute_utilization(arch.peak_flops_per_cycle());
+        assert!(bw > 0.6, "HBM BW utilization {bw:.2} should approach saturation");
+        assert!(cu < 0.4, "compute utilization {cu:.2} should be memory-bound");
+    }
+
+    #[test]
+    fn fa3_moves_more_bytes_than_fa2() {
+        // FA-3's smaller block (M=128 vs 192 at D=128) raises I/O.
+        let arch = table1();
+        let wl = small_wl();
+        let st2 = execute(&flash_program(&arch, &wl, false), 0);
+        let st3 = execute(&flash_program(&arch, &wl, true), 0);
+        assert!(st3.hbm_bytes > st2.hbm_bytes);
+    }
+
+    #[test]
+    fn async_streams_overlap_compute() {
+        // On a memory-rich config (few heads => little HBM pressure),
+        // FA-3 should not be slower than twice-serialized FA-2 compute.
+        let arch = table1();
+        let wl = Workload::new(2048, 128, 2, 1);
+        let st2 = execute(&flash_program(&arch, &wl, false), 0);
+        let st3 = execute(&flash_program(&arch, &wl, true), 0);
+        // Loose sanity bound: async within 2× of sync either way.
+        let r = st3.makespan as f64 / st2.makespan as f64;
+        assert!((0.3..2.0).contains(&r), "async/sync ratio {r}");
+    }
+
+    #[test]
+    fn breakdown_partitions_makespan() {
+        let arch = table1();
+        let p = flash_program(&arch, &small_wl(), false);
+        let st = execute(&p, 0);
+        assert_eq!(st.breakdown.total(), st.makespan);
+    }
+}

@@ -1,0 +1,565 @@
+//! FlatAttention dataflow (Algorithm 2 + §III-C).
+//!
+//! A *group* of `G × G` tiles collectively processes one attention block of
+//! size `B_r = B_c = t·G` (slice `t` per tile), using the aggregate group
+//! L1. Within a group:
+//!
+//! * west-edge tiles load Q slices from HBM and **row-multicast** them;
+//! * south-edge tiles load Kᵀ/V slices and **column-multicast** them;
+//! * every tile computes its `t × t` attention-score segment;
+//! * softmax row statistics are combined with **row-wise max/sum
+//!   reductions** and re-multicast;
+//! * O partials are **row-reduced** to the west edge and stored.
+//!
+//! Distinct groups process distinct blocks — no inter-group communication,
+//! exactly like FlashAttention across tiles, but with `√N`-fold lower HBM
+//! I/O. The collective primitives run on per-group-row/-column bus
+//! resources whose cost follows §II (hardware path-based forwarding or
+//! software unicast chains, per `arch.noc.hw_collectives`).
+//!
+//! The asynchronous variant (`FlatAsyn`) schedules two heads per group as
+//! two independent op streams sharing the group's engines and buses
+//! (§III-C): matrix multiplications of one head overlap data movement and
+//! softmax of the other.
+
+use crate::arch::ArchConfig;
+use crate::engines::{dma_hbm_time, matmul_cycles, SpatzOp};
+use crate::hbm::HbmMap;
+use crate::noc::{collective_time, CollectiveKind};
+use crate::sim::program::NO_TILE;
+use crate::sim::{Component, OpId, Program, ResourceId};
+
+use super::tiling::FlatTiling;
+use super::Workload;
+
+/// Per-group resource handles.
+struct GroupCtx {
+    /// Mesh origin of the group (west/north corner).
+    origin: (usize, usize),
+    /// Per-tile engines, indexed `[local_y * g + local_x]`.
+    redmule: Vec<ResourceId>,
+    spatz: Vec<ResourceId>,
+    /// Row buses (one per group row) carrying row collectives.
+    row_bus: Vec<ResourceId>,
+    /// Column buses (one per group column).
+    col_bus: Vec<ResourceId>,
+    /// Sync resource for block barriers.
+    sync: ResourceId,
+}
+
+/// Build the FlatAttention program. `group` is the square group edge;
+/// `asynchronous` enables the two-head §III-C schedule. Collective
+/// hardware support is taken from `arch.noc.hw_collectives`.
+pub fn flat_program(arch: &ArchConfig, wl: &Workload, group: usize, asynchronous: bool) -> Program {
+    flat_program_ext(arch, wl, group, asynchronous, true)
+}
+
+/// Extended builder: `double_buffer = false` disables K/V prefetching (the
+/// Fig. 3 "*implementations without double buffering" ablation).
+pub fn flat_program_ext(
+    arch: &ArchConfig,
+    wl: &Workload,
+    group: usize,
+    asynchronous: bool,
+    double_buffer: bool,
+) -> Program {
+    let tiling = FlatTiling::resolve(arch, wl.head_dim, wl.seq, group, asynchronous);
+    let mut prog = Program::new();
+    let hbm_map = HbmMap::new(arch);
+    let chan_res = prog.resources(hbm_map.total_channels());
+
+    let g = group;
+    let g_cols = arch.mesh_x / g;
+    let g_rows = arch.mesh_y / g;
+    let groups: Vec<GroupCtx> = (0..g_rows * g_cols)
+        .map(|gi| {
+            let origin = ((gi % g_cols) * g, (gi / g_cols) * g);
+            GroupCtx {
+                origin,
+                redmule: prog.resources(g * g),
+                spatz: prog.resources(g * g),
+                row_bus: prog.resources(g),
+                col_bus: prog.resources(g),
+                sync: prog.resource(),
+            }
+        })
+        .collect();
+
+    // Deal blocks (b, h, i) round-robin over groups.
+    let mut group_blocks: Vec<Vec<u64>> = vec![Vec::new(); groups.len()];
+    let total_blocks = wl.batch * wl.heads * tiling.t_r;
+    for blk in 0..total_blocks {
+        group_blocks[(blk % groups.len() as u64) as usize].push(blk);
+    }
+
+    for (gc, blocks) in groups.iter().zip(&group_blocks) {
+        if blocks.is_empty() {
+            continue;
+        }
+        if asynchronous {
+            let (even, odd): (Vec<_>, Vec<_>) =
+                blocks.iter().enumerate().partition(|(i, _)| i % 2 == 0);
+            for stream in [even, odd] {
+                let list: Vec<u64> = stream.into_iter().map(|(_, b)| *b).collect();
+                build_group_stream(
+                    &mut prog, arch, wl, &hbm_map, &chan_res, gc, &tiling, &list, true,
+                    double_buffer,
+                );
+            }
+        } else {
+            build_group_stream(
+                &mut prog, arch, wl, &hbm_map, &chan_res, gc, &tiling, blocks, false,
+                double_buffer,
+            );
+        }
+    }
+
+    prog.flops = wl.matmul_flops();
+    prog
+}
+
+/// Emit one serial stream of blocks for a group.
+#[allow(clippy::too_many_arguments)]
+fn build_group_stream(
+    prog: &mut Program,
+    arch: &ArchConfig,
+    wl: &Workload,
+    hbm_map: &HbmMap,
+    chan_res: &[ResourceId],
+    gc: &GroupCtx,
+    tiling: &FlatTiling,
+    blocks: &[u64],
+    asynchronous: bool,
+    double_buffer: bool,
+) {
+    let g = tiling.group as usize;
+    let d = wl.head_dim;
+    let eb = Workload::BYTES_PER_ELEM;
+    let (ox, oy) = gc.origin;
+    let tid = |lx: usize, ly: usize| arch.tile_id(ox + lx, oy + ly);
+    let local = |lx: usize, ly: usize| ly * g + lx;
+    let n_dest = (g - 1) as u64;
+
+    // Row height of the last (possibly partial) row block.
+    let mut prev_barrier: Option<OpId> = None;
+
+    for &blk in blocks {
+        let i = blk % tiling.t_r; // row-block index within the head
+        let m_r_block = (wl.seq - i * tiling.block).min(tiling.block);
+        // Per-tile slice rows for this block (partial last block shrinks
+        // every row's slice proportionally; sizes stay symmetric).
+        let t_r_slice = m_r_block.div_ceil(tiling.group).max(1);
+        let start_deps: Vec<OpId> = prev_barrier.into_iter().collect();
+
+        // ① West-edge tiles load Q slices; ② row-wise multicast.
+        let mut q_mcast: Vec<OpId> = Vec::with_capacity(g);
+        for ly in 0..g {
+            let (gx, gy) = (ox, oy + ly);
+            let ch = hbm_map.row_channel(gx, gy);
+            let q_bytes = t_r_slice * d * eb;
+            let tq = dma_hbm_time(&arch.hbm, &arch.noc, q_bytes, ch.hops);
+            let load = prog.op(
+                chan_res[ch.index],
+                tq.occupancy,
+                tq.latency,
+                Component::HbmAccess,
+                tid(0, ly),
+                q_bytes,
+                &start_deps,
+            );
+            let mt = collective_time(&arch.noc, q_bytes, n_dest, CollectiveKind::Multicast);
+            let mc = prog.op(
+                gc.row_bus[ly],
+                mt.occupancy,
+                mt.latency,
+                Component::Multicast,
+                tid(0, ly),
+                0,
+                &[load],
+            );
+            q_mcast.push(mc);
+        }
+
+        // Inner loop over K/V column blocks.
+        let mut kv_mcast_prev: Vec<OpId> = Vec::new();
+        let mut pv_prev: Vec<Option<OpId>> = vec![None; g * g]; // pv[j-1] per tile
+        let mut pv_prev2: Vec<Option<OpId>> = vec![None; g * g]; // pv[j-2] per tile
+        let mut last_pv: Vec<OpId> = Vec::new();
+
+        // Causal: group-level K/V blocks above the diagonal are skipped;
+        // the diagonal block is masked on the vector engine.
+        let t_c_eff = if wl.causal { (i + 1).min(tiling.t_c) } else { tiling.t_c };
+        for j in 0..t_c_eff {
+            let m_c_block = (wl.seq - j * tiling.block).min(tiling.block);
+            let t_c_slice = m_c_block.div_ceil(tiling.group).max(1);
+
+            // ③ South-edge tiles load Kᵀ/V slices; ④ column multicast.
+            let mut kv_mcast: Vec<OpId> = Vec::with_capacity(g);
+            for lx in 0..g {
+                let (gx, gy) = (ox + lx, oy + g - 1);
+                let ch = hbm_map.col_channel(gx, gy);
+                let kv_bytes = 2 * t_c_slice * d * eb;
+                let tkv = dma_hbm_time(&arch.hbm, &arch.noc, kv_bytes, ch.hops);
+                let south = local(lx, g - 1);
+                // Buffering: double-buffered for sync, single for async
+                // (the second head-stream provides the overlap).
+                let buf_dep = if asynchronous || !double_buffer {
+                    pv_prev[south]
+                } else {
+                    pv_prev2[south]
+                };
+                let mut deps = start_deps.clone();
+                deps.extend(buf_dep);
+                let load = prog.op(
+                    chan_res[ch.index],
+                    tkv.occupancy,
+                    tkv.latency,
+                    Component::HbmAccess,
+                    tid(lx, g - 1),
+                    kv_bytes,
+                    &deps,
+                );
+                let mt = collective_time(&arch.noc, kv_bytes, n_dest, CollectiveKind::Multicast);
+                let mc = prog.op(
+                    gc.col_bus[lx],
+                    mt.occupancy,
+                    mt.latency,
+                    Component::Multicast,
+                    tid(lx, g - 1),
+                    0,
+                    &[load],
+                );
+                kv_mcast.push(mc);
+            }
+
+            let mut sm1_row: Vec<Vec<OpId>> = vec![Vec::with_capacity(g); g];
+            let mut qk_all: Vec<Vec<OpId>> = vec![Vec::with_capacity(g); g];
+            for ly in 0..g {
+                for lx in 0..g {
+                    let tl = local(lx, ly);
+                    // ⑤ S slice = Q_iy · Kᵀ_jx.
+                    let mut deps = vec![q_mcast[ly], kv_mcast[lx]];
+                    deps.extend(pv_prev[tl]); // serialize with own prior iteration
+                    let qk = prog.op(
+                        gc.redmule[tl],
+                        matmul_cycles(&arch.tile, t_r_slice, d, t_c_slice),
+                        0,
+                        Component::RedMule,
+                        tid(lx, ly),
+                        0,
+                        &deps,
+                    );
+                    qk_all[ly].push(qk);
+                    // ⑥⑦ scale + local row maxima + running max (+ causal
+                    // triangular mask on diagonal blocks).
+                    let mask = if wl.causal && j == i {
+                        SpatzOp::Scale { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
+                    } else {
+                        0
+                    };
+                    let c = mask
+                        + SpatzOp::Scale { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
+                        + SpatzOp::RowMax { rows: t_r_slice, cols: t_c_slice }.cycles(&arch.tile)
+                        + SpatzOp::StatsUpdate { rows: t_r_slice }.cycles(&arch.tile);
+                    let sm1 = prog.op(
+                        gc.spatz[tl],
+                        c,
+                        0,
+                        Component::Spatz,
+                        tid(lx, ly),
+                        0,
+                        &[qk],
+                    );
+                    sm1_row[ly].push(sm1);
+                }
+            }
+
+            // ⑧⑨ Row-wise max reduction + multicast of the global maxima.
+            let stat_bytes = t_r_slice * eb;
+            let mut max_mc: Vec<OpId> = Vec::with_capacity(g);
+            for ly in 0..g {
+                let rt = collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::MaxReduce);
+                let red = prog.op(
+                    gc.row_bus[ly],
+                    rt.occupancy,
+                    rt.latency,
+                    Component::MaxReduce,
+                    tid(0, ly),
+                    0,
+                    &sm1_row[ly],
+                );
+                let mt = collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::Multicast);
+                let mc = prog.op(
+                    gc.row_bus[ly],
+                    mt.occupancy,
+                    mt.latency,
+                    Component::Multicast,
+                    tid(0, ly),
+                    0,
+                    &[red],
+                );
+                max_mc.push(mc);
+            }
+
+            // ⑩⑪ exp + local row sums, then ⑫⑬ sum reduction + multicast.
+            let mut sm2_row: Vec<Vec<OpId>> = vec![Vec::with_capacity(g); g];
+            for ly in 0..g {
+                for lx in 0..g {
+                    let tl = local(lx, ly);
+                    let c = SpatzOp::Exp { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
+                        + SpatzOp::RowSum { rows: t_r_slice, cols: t_c_slice }.cycles(&arch.tile);
+                    let sm2 = prog.op(
+                        gc.spatz[tl],
+                        c,
+                        0,
+                        Component::Spatz,
+                        tid(lx, ly),
+                        0,
+                        &[max_mc[ly]],
+                    );
+                    sm2_row[ly].push(sm2);
+                }
+            }
+            let mut sum_mc: Vec<OpId> = Vec::with_capacity(g);
+            for ly in 0..g {
+                let rt = collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::SumReduce);
+                let red = prog.op(
+                    gc.row_bus[ly],
+                    rt.occupancy,
+                    rt.latency,
+                    Component::SumReduce,
+                    tid(0, ly),
+                    0,
+                    &sm2_row[ly],
+                );
+                let mt = collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::Multicast);
+                let mc = prog.op(
+                    gc.row_bus[ly],
+                    mt.occupancy,
+                    mt.latency,
+                    Component::Multicast,
+                    tid(0, ly),
+                    0,
+                    &[red],
+                );
+                sum_mc.push(mc);
+            }
+
+            // ⑭–⑰ stats update, O rescale, O += P̃·V.
+            last_pv.clear();
+            for ly in 0..g {
+                for lx in 0..g {
+                    let tl = local(lx, ly);
+                    let c = SpatzOp::StatsUpdate { rows: t_r_slice }.cycles(&arch.tile)
+                        + SpatzOp::Rescale { rows: t_r_slice, elems: t_r_slice * d }
+                            .cycles(&arch.tile);
+                    let sm3 = prog.op(
+                        gc.spatz[tl],
+                        c,
+                        0,
+                        Component::Spatz,
+                        tid(lx, ly),
+                        0,
+                        &[sum_mc[ly]],
+                    );
+                    let pv = prog.op(
+                        gc.redmule[tl],
+                        matmul_cycles(&arch.tile, t_r_slice, t_c_slice, d),
+                        0,
+                        Component::RedMule,
+                        tid(lx, ly),
+                        0,
+                        &[sm3],
+                    );
+                    pv_prev2[tl] = pv_prev[tl];
+                    pv_prev[tl] = Some(pv);
+                    last_pv.push(pv);
+                }
+            }
+            kv_mcast_prev = kv_mcast;
+        }
+        let _ = kv_mcast_prev;
+
+        // ⑱ normalize, ⑲ row-reduce O to the west edge, ⑳ store.
+        let mut stores: Vec<OpId> = Vec::with_capacity(g);
+        let mut norm_row: Vec<Vec<OpId>> = vec![Vec::with_capacity(g); g];
+        for ly in 0..g {
+            for lx in 0..g {
+                let tl = local(lx, ly);
+                let norm = prog.op(
+                    gc.spatz[tl],
+                    SpatzOp::Normalize { rows: t_r_slice, elems: t_r_slice * d }
+                        .cycles(&arch.tile),
+                    0,
+                    Component::Spatz,
+                    tid(lx, ly),
+                    0,
+                    &[pv_prev[tl].expect("inner loop ran")],
+                );
+                norm_row[ly].push(norm);
+            }
+        }
+        for ly in 0..g {
+            let o_bytes = t_r_slice * d * eb;
+            let rt = collective_time(&arch.noc, o_bytes, n_dest, CollectiveKind::SumReduce);
+            let red = prog.op(
+                gc.row_bus[ly],
+                rt.occupancy,
+                rt.latency,
+                Component::SumReduce,
+                tid(0, ly),
+                0,
+                &norm_row[ly],
+            );
+            let (gx, gy) = (ox, oy + ly);
+            let ch = hbm_map.row_channel(gx, gy);
+            let to = dma_hbm_time(&arch.hbm, &arch.noc, o_bytes, ch.hops);
+            let store = prog.op(
+                chan_res[ch.index],
+                to.occupancy,
+                to.latency,
+                Component::HbmAccess,
+                tid(0, ly),
+                o_bytes,
+                &[red],
+            );
+            stores.push(store);
+        }
+
+        // Block barrier: the stream's next block starts after all stores.
+        let barrier = prog.op(gc.sync, 0, 0, Component::Other, NO_TILE, 0, &stores);
+        prev_barrier = Some(barrier);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::{table1, table1_sw_collectives};
+    use crate::dataflow::{run, tracked_tile, Dataflow};
+    use crate::sim::execute;
+
+    fn wl_big() -> Workload {
+        Workload::new(4096, 128, 32, 2)
+    }
+
+    fn wl_small() -> Workload {
+        Workload::new(1024, 128, 8, 1)
+    }
+
+    #[test]
+    fn program_builds_and_validates() {
+        let arch = table1();
+        let p = flat_program(&arch, &wl_small(), 8, false);
+        assert!(p.validate().is_ok());
+        assert!(p.num_ops() > 0);
+    }
+
+    #[test]
+    fn traffic_matches_io_model() {
+        // HBM traffic must match §III-A: 2·H·B·D·S·(1 + S/(G·t)) elements.
+        let arch = table1();
+        let wl = wl_small();
+        for group in [4usize, 8, 16] {
+            let tiling = FlatTiling::resolve(&arch, wl.head_dim, wl.seq, group, false);
+            let p = flat_program(&arch, &wl, group, false);
+            let st = execute(&p, 0);
+            let expected = 2
+                * wl.heads
+                * wl.batch
+                * wl.head_dim
+                * wl.seq
+                * Workload::BYTES_PER_ELEM
+                * (1 + wl.seq.div_ceil(tiling.block));
+            let ratio = st.hbm_bytes as f64 / expected as f64;
+            assert!(
+                (0.95..1.05).contains(&ratio),
+                "group {group}: traffic {} vs model {expected} (ratio {ratio:.3})",
+                st.hbm_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn hbm_traffic_16x_below_fa3() {
+        // Headline claim: 16× HBM traffic reduction vs FA-3 (D128, S4096).
+        let arch = table1();
+        let wl = wl_big();
+        let flat = execute(&flat_program(&arch, &wl, 32, true), 0);
+        let fa3 = execute(&crate::dataflow::flash::flash_program(&arch, &wl, true), 0);
+        let ratio = fa3.hbm_bytes as f64 / flat.hbm_bytes as f64;
+        assert!(
+            (13.0..20.0).contains(&ratio),
+            "traffic reduction {ratio:.1}× (paper: 16×)"
+        );
+    }
+
+    #[test]
+    fn flat_asyn_hits_high_utilization() {
+        // Headline: up to ~89% utilization at D=128, S=4096, G=32.
+        let arch = table1();
+        let wl = wl_big();
+        let st = run(&arch, &wl, Dataflow::FlatAsyn, 32);
+        let u = st.compute_utilization(arch.peak_flops_per_cycle());
+        assert!(u > 0.75, "FlatAsyn utilization {u:.3} (paper: up to 0.893)");
+    }
+
+    #[test]
+    fn hw_collectives_beat_sw_collectives() {
+        // Fig. 3: Flat (software collectives) is much slower than FlatColl.
+        let arch = table1();
+        let wl = wl_small();
+        let sw = run(&table1_sw_collectives(), &wl, Dataflow::Flat, 32);
+        let hw = run(&arch, &wl, Dataflow::FlatColl, 32);
+        assert!(
+            sw.makespan > hw.makespan,
+            "sw {} vs hw {}",
+            sw.makespan,
+            hw.makespan
+        );
+    }
+
+    #[test]
+    fn speedup_over_fa3_in_paper_range() {
+        // Headline: up to 4.1× speedup over FA-3 (D128, S4096).
+        let arch = table1();
+        let wl = wl_big();
+        let flat = run(&arch, &wl, Dataflow::FlatAsyn, 32);
+        let fa3 = run(&arch, &wl, Dataflow::Flash3, 32);
+        let speedup = fa3.makespan as f64 / flat.makespan as f64;
+        assert!(
+            (2.5..6.0).contains(&speedup),
+            "speedup {speedup:.2}× (paper: 4.1×)"
+        );
+    }
+
+    #[test]
+    fn breakdown_tracked_tile_sees_all_components() {
+        let arch = table1();
+        let wl = wl_small();
+        let p = flat_program(&arch, &wl, 8, false);
+        let st = execute(&p, tracked_tile(&arch, Dataflow::FlatColl, 8));
+        let bd = &st.breakdown;
+        assert!(bd.redmule > 0, "{bd:?}");
+        assert!(bd.spatz > 0, "{bd:?}");
+        assert!(bd.hbm > 0, "{bd:?}");
+        assert!(bd.multicast + bd.max_reduce + bd.sum_reduce > 0, "{bd:?}");
+        assert_eq!(bd.total(), st.makespan);
+    }
+
+    #[test]
+    fn over_flattening_smaller_groups_win_short_seq() {
+        // §V-B: at S=512 a 32×32 group over-flattens; a smaller group is
+        // faster (or at least no slower) per unit work.
+        let arch = table1();
+        let wl = Workload::new(512, 128, 32, 4);
+        let g8 = run(&arch, &wl, Dataflow::FlatAsyn, 8);
+        let g32 = run(&arch, &wl, Dataflow::FlatAsyn, 32);
+        assert!(
+            g8.makespan < g32.makespan,
+            "8×8 {} should beat 32×32 {} at S=512",
+            g8.makespan,
+            g32.makespan
+        );
+    }
+}

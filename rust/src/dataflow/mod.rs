@@ -1,0 +1,206 @@
+//! MHA and GEMM dataflow implementations.
+//!
+//! Each dataflow compiles `(ArchConfig, Workload)` into a [`Program`]
+//! (an op DAG over engines, HBM channels and NoC buses) which the
+//! DES engine executes. Implemented dataflows, matching the paper's Fig. 3
+//! legend:
+//!
+//! * [`Dataflow::Flash2`] — FlashAttention-2 mapped per-tile (Algorithm 1).
+//! * [`Dataflow::Flash3`] — FA-2 plus FlashAttention-3-style asynchronous
+//!   two-block overlap (§III-C notes FA-3 uses the same technique).
+//! * [`Dataflow::Flat`] — FlatAttention with *software* collectives.
+//! * [`Dataflow::FlatColl`] — FlatAttention with *hardware* NoC collectives.
+//! * [`Dataflow::FlatAsyn`] — FlatColl plus asynchronous two-head overlap
+//!   (Algorithm 2 + §III-C).
+//!
+//! plus [`summa`] for the Fig. 5c GEMM comparison.
+
+pub mod flash;
+pub mod flat;
+pub mod summa;
+pub mod tiling;
+
+use crate::arch::ArchConfig;
+use crate::sim::{execute, Program, RunStats};
+
+pub use summa::{summa_program, GemmWorkload};
+pub use tiling::{flash_block_size, flat_slice_size, FlatTiling};
+
+/// An MHA prefill workload (one attention layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Workload {
+    /// Sequence length S.
+    pub seq: u64,
+    /// Head dimension D.
+    pub head_dim: u64,
+    /// Number of heads H.
+    pub heads: u64,
+    /// Batch size B.
+    pub batch: u64,
+    /// Causal (autoregressive) masking. The paper evaluates the
+    /// non-causal prefill kernel (matching FlashAttention's benchmarks);
+    /// causal support is our extension: dataflows skip fully-masked K/V
+    /// blocks and mask the diagonal blocks on the vector engine.
+    pub causal: bool,
+}
+
+impl Workload {
+    pub fn new(seq: u64, head_dim: u64, heads: u64, batch: u64) -> Self {
+        Self { seq, head_dim, heads, batch, causal: false }
+    }
+
+    /// Builder-style causal toggle.
+    pub fn with_causal(mut self, causal: bool) -> Self {
+        self.causal = causal;
+        self
+    }
+
+    /// FP16 element size used throughout the paper.
+    pub const BYTES_PER_ELEM: u64 = 2;
+
+    /// Matrix-engine FLOPs of the layer: QKᵀ and P·V, 2·S²·D each per
+    /// head (multiply-accumulate = 2 FLOPs). For causal workloads this is
+    /// the *useful* count (≈ half); dataflow builders report the FLOPs
+    /// actually executed (diagonal blocks compute fully and mask).
+    pub fn matmul_flops(&self) -> u64 {
+        if self.causal {
+            // Σ_i 2·(i+1)·D over rows, ×2 matmuls: 2·S·(S+1)·D per head.
+            2 * self.batch * self.heads * self.seq * (self.seq + 1) * self.head_dim
+        } else {
+            4 * self.batch * self.heads * self.seq * self.seq * self.head_dim
+        }
+    }
+
+    /// Minimal (compulsory) HBM traffic in bytes: read Q, K, V and write O
+    /// exactly once.
+    pub fn compulsory_bytes(&self) -> u64 {
+        4 * self.batch * self.heads * self.seq * self.head_dim * Self::BYTES_PER_ELEM
+    }
+
+    /// Short label like `D128-S4096`.
+    pub fn label(&self) -> String {
+        format!("D{}-S{}", self.head_dim, self.seq)
+    }
+}
+
+/// The evaluated MHA dataflow variants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    Flash2,
+    Flash3,
+    Flat,
+    FlatColl,
+    FlatAsyn,
+}
+
+pub const ALL_DATAFLOWS: [Dataflow; 5] = [
+    Dataflow::Flash2,
+    Dataflow::Flash3,
+    Dataflow::Flat,
+    Dataflow::FlatColl,
+    Dataflow::FlatAsyn,
+];
+
+impl Dataflow {
+    pub fn label(self) -> &'static str {
+        match self {
+            Dataflow::Flash2 => "FA-2",
+            Dataflow::Flash3 => "FA-3",
+            Dataflow::Flat => "Flat",
+            Dataflow::FlatColl => "FlatColl",
+            Dataflow::FlatAsyn => "FlatAsyn",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fa-2" | "fa2" | "flash2" => Some(Dataflow::Flash2),
+            "fa-3" | "fa3" | "flash3" => Some(Dataflow::Flash3),
+            "flat" => Some(Dataflow::Flat),
+            "flatcoll" | "flat-coll" => Some(Dataflow::FlatColl),
+            "flatasyn" | "flat-asyn" | "flatasync" => Some(Dataflow::FlatAsyn),
+            _ => None,
+        }
+    }
+
+    /// Does this dataflow group tiles (FlatAttention family)?
+    pub fn is_flat(self) -> bool {
+        matches!(self, Dataflow::Flat | Dataflow::FlatColl | Dataflow::FlatAsyn)
+    }
+}
+
+/// Build the op-graph program for a dataflow.
+///
+/// `group` is the (square `Gx = Gy`) FlatAttention group edge; ignored by
+/// the FlashAttention variants. Collective hardware support follows the
+/// dataflow (`Flat` forces software collectives, `FlatColl`/`FlatAsyn`
+/// force hardware collectives) so a single `ArchConfig` can be used for
+/// every bar of Fig. 3.
+pub fn build_program(arch: &ArchConfig, wl: &Workload, df: Dataflow, group: usize) -> Program {
+    match df {
+        Dataflow::Flash2 => flash::flash_program(arch, wl, false),
+        Dataflow::Flash3 => flash::flash_program(arch, wl, true),
+        Dataflow::Flat => {
+            let mut a = arch.clone();
+            a.noc.hw_collectives = false;
+            flat::flat_program(&a, wl, group, false)
+        }
+        Dataflow::FlatColl => {
+            let mut a = arch.clone();
+            a.noc.hw_collectives = true;
+            flat::flat_program(&a, wl, group, false)
+        }
+        Dataflow::FlatAsyn => {
+            let mut a = arch.clone();
+            a.noc.hw_collectives = true;
+            flat::flat_program(&a, wl, group, true)
+        }
+    }
+}
+
+/// Build and execute in one step, tracking the canonical critical tile.
+pub fn run(arch: &ArchConfig, wl: &Workload, df: Dataflow, group: usize) -> RunStats {
+    let program = build_program(arch, wl, df, group);
+    let tracked = tracked_tile(arch, df, group);
+    execute(&program, tracked)
+}
+
+/// The representative tile whose timeline feeds the runtime breakdown:
+/// for FlatAttention, the south-west corner tile of group 0 (it loads Q
+/// *and* K/V and owns its row/column collectives); for FlashAttention,
+/// tile 0 (all tiles behave identically).
+pub fn tracked_tile(arch: &ArchConfig, df: Dataflow, group: usize) -> u32 {
+    if df.is_flat() {
+        let gy = group.min(arch.mesh_y);
+        arch.tile_id(0, gy - 1)
+    } else {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_flops() {
+        let wl = Workload::new(4096, 128, 32, 2);
+        // 4·B·H·S²·D = 4·2·32·4096²·128
+        assert_eq!(wl.matmul_flops(), 549_755_813_888 * 1_000 / 1_000);
+        assert_eq!(wl.matmul_flops(), 4 * 2 * 32 * 4096 * 4096 * 128);
+    }
+
+    #[test]
+    fn dataflow_labels_round_trip() {
+        for df in ALL_DATAFLOWS {
+            assert_eq!(Dataflow::from_label(df.label()), Some(df));
+        }
+        assert_eq!(Dataflow::from_label("nope"), None);
+    }
+
+    #[test]
+    fn compulsory_traffic() {
+        let wl = Workload::new(1024, 64, 8, 1);
+        assert_eq!(wl.compulsory_bytes(), 4 * 8 * 1024 * 64 * 2);
+    }
+}

@@ -1,0 +1,264 @@
+//! SUMMA GEMM dataflow with NoC collectives (Fig. 5c).
+//!
+//! Beyond MHA, the paper shows that common GEMM kernels using the
+//! collective-based SUMMA dataflow [25] also profit from the fabric
+//! collectives. We implement classical SUMMA on the full `P × P` mesh:
+//! the `C(i,j)` block lives on tile `(j, i)`; at panel step `k`, the
+//! owning column's tiles row-multicast their `A(i,k)` panels and the
+//! owning row's tiles column-multicast their `B(k,j)` panels, then every
+//! tile runs a local GEMM accumulation. Panels are double-buffered so
+//! loads and multicasts overlap the matrix engine.
+//!
+//! Large `N` is processed in column passes (`nc` columns per tile per
+//! pass) chosen so A/B panels plus the C chunk fit in L1; A is re-streamed
+//! once per pass, B and C move exactly once — mirroring how the paper's
+//! I/O accounting works for GEMM.
+
+use crate::arch::ArchConfig;
+use crate::engines::{dma_hbm_time, matmul_cycles, SpatzOp};
+use crate::hbm::HbmMap;
+use crate::noc::{collective_time, CollectiveKind};
+use crate::sim::{Component, OpId, Program};
+
+/// A GEMM workload `C[M×N] = A[M×K] · B[K×N]` (FP16).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GemmWorkload {
+    pub m: u64,
+    pub k: u64,
+    pub n: u64,
+    pub label: String,
+}
+
+impl GemmWorkload {
+    pub fn new(m: u64, k: u64, n: u64, label: impl Into<String>) -> Self {
+        Self { m, k, n, label: label.into() }
+    }
+
+    pub fn flops(&self) -> u64 {
+        2 * self.m * self.k * self.n
+    }
+}
+
+const EB: u64 = 2; // FP16
+
+/// Panel sizing: pick `kb` and `nc` (multiples of 16) maximizing the local
+/// GEMM size under the L1 budget:
+/// `2·(A: mb·kb·2(db) + B: kb·nc·2(db) + C: mb·nc)` bytes.
+fn panel_sizes(l1_bytes: u64, mb: u64, nb: u64) -> (u64, u64) {
+    let mut best = (16, 16);
+    let mut best_vol = 0u64;
+    let mut nc = 16;
+    while nc <= nb.max(16) {
+        let mut kb = 16;
+        while kb <= 1024 {
+            let bytes = EB * (2 * mb * kb + 2 * kb * nc + mb * nc);
+            if bytes <= l1_bytes {
+                let vol = mb * kb * nc;
+                if vol > best_vol {
+                    best_vol = vol;
+                    best = (kb, nc);
+                }
+            }
+            kb += 16;
+        }
+        nc += 16;
+    }
+    best
+}
+
+/// Build the SUMMA program on the full mesh.
+pub fn summa_program(arch: &ArchConfig, gemm: &GemmWorkload) -> Program {
+    let p = arch.mesh_x.min(arch.mesh_y) as u64;
+    let mut prog = Program::new();
+    let hbm_map = HbmMap::new(arch);
+    let chan_res = prog.resources(hbm_map.total_channels());
+    let g = p as usize;
+    let redmule = prog.resources(g * g);
+    let spatz = prog.resources(g * g);
+    let row_bus = prog.resources(g);
+    let col_bus = prog.resources(g);
+
+    let mb = gemm.m.div_ceil(p);
+    let nb = gemm.n.div_ceil(p);
+    let (kb, nc) = panel_sizes(arch.tile.l1_bytes(), mb, nb);
+    let n_passes = nb.div_ceil(nc);
+    let k_steps = gemm.k.div_ceil(kb);
+    let n_dest = p - 1;
+    let local = |lx: usize, ly: usize| ly * g + lx;
+
+    // Per-tile previous-gemm ids for double-buffer deps.
+    let mut gemm_prev: Vec<Option<OpId>> = vec![None; g * g];
+    let mut gemm_prev2: Vec<Option<OpId>> = vec![None; g * g];
+
+    for pass in 0..n_passes {
+        let nc_cur = (nb - pass * nc).min(nc);
+        for step in 0..k_steps {
+            let kb_cur = (gemm.k - step * kb).min(kb);
+            let owner = (step % p) as usize;
+
+            // A(i, k) panels: owner-column tiles load + row-multicast.
+            let mut a_mc: Vec<OpId> = Vec::with_capacity(g);
+            let a_bytes = mb * kb_cur * EB;
+            for ly in 0..g {
+                let ch = hbm_map.row_channel(owner, ly);
+                let ta = dma_hbm_time(&arch.hbm, &arch.noc, a_bytes, ch.hops);
+                let tl = local(owner, ly);
+                let mut deps: Vec<OpId> = Vec::new();
+                deps.extend(gemm_prev2[tl]);
+                let load = prog.op(
+                    chan_res[ch.index],
+                    ta.occupancy,
+                    ta.latency,
+                    Component::HbmAccess,
+                    arch.tile_id(owner, ly),
+                    a_bytes,
+                    &deps,
+                );
+                let mt = collective_time(&arch.noc, a_bytes, n_dest, CollectiveKind::Multicast);
+                a_mc.push(prog.op(
+                    row_bus[ly],
+                    mt.occupancy,
+                    mt.latency,
+                    Component::Multicast,
+                    arch.tile_id(owner, ly),
+                    0,
+                    &[load],
+                ));
+            }
+
+            // B(k, j) panels: owner-row tiles load + column-multicast.
+            let mut b_mc: Vec<OpId> = Vec::with_capacity(g);
+            let b_bytes = kb_cur * nc_cur * EB;
+            for lx in 0..g {
+                let ch = hbm_map.col_channel(lx, owner);
+                let tb = dma_hbm_time(&arch.hbm, &arch.noc, b_bytes, ch.hops);
+                let tl = local(lx, owner);
+                let mut deps: Vec<OpId> = Vec::new();
+                deps.extend(gemm_prev2[tl]);
+                let load = prog.op(
+                    chan_res[ch.index],
+                    tb.occupancy,
+                    tb.latency,
+                    Component::HbmAccess,
+                    arch.tile_id(lx, owner),
+                    b_bytes,
+                    &deps,
+                );
+                let mt = collective_time(&arch.noc, b_bytes, n_dest, CollectiveKind::Multicast);
+                b_mc.push(prog.op(
+                    col_bus[lx],
+                    mt.occupancy,
+                    mt.latency,
+                    Component::Multicast,
+                    arch.tile_id(lx, owner),
+                    0,
+                    &[load],
+                ));
+            }
+
+            // Local GEMM accumulation on every tile.
+            for ly in 0..g {
+                for lx in 0..g {
+                    let tl = local(lx, ly);
+                    let mut deps = vec![a_mc[ly], b_mc[lx]];
+                    deps.extend(gemm_prev[tl]);
+                    let op = prog.op(
+                        redmule[tl],
+                        matmul_cycles(&arch.tile, mb, kb_cur, nc_cur),
+                        0,
+                        Component::RedMule,
+                        arch.tile_id(lx, ly),
+                        0,
+                        &deps,
+                    );
+                    gemm_prev2[tl] = gemm_prev[tl];
+                    gemm_prev[tl] = Some(op);
+                }
+            }
+        }
+
+        // Store the pass's C chunk from every tile (address-interleaved).
+        let c_bytes = mb * nc_cur * EB;
+        let n_chan = hbm_map.total_channels();
+        for ly in 0..g {
+            for lx in 0..g {
+                let tl = local(lx, ly);
+                // Small epilogue on the vector engine (cast/accumulate).
+                let ep = prog.op(
+                    spatz[tl],
+                    SpatzOp::Scale { elems: mb * nc_cur }.cycles(&arch.tile),
+                    0,
+                    Component::Spatz,
+                    arch.tile_id(lx, ly),
+                    0,
+                    &[gemm_prev[tl].expect("k loop ran")],
+                );
+                let chan = (tl + pass as usize) % n_chan;
+                let tc = dma_hbm_time(&arch.hbm, &arch.noc, c_bytes, (lx + ly) as u64 / 2 + 1);
+                let st = prog.op(
+                    chan_res[chan],
+                    tc.occupancy,
+                    tc.latency,
+                    Component::HbmAccess,
+                    arch.tile_id(lx, ly),
+                    c_bytes,
+                    &[ep],
+                );
+                // C-buffer reuse across passes: next pass's first gemm on
+                // this tile must wait for the store.
+                gemm_prev[tl] = Some(st);
+                gemm_prev2[tl] = Some(st);
+            }
+        }
+    }
+
+    prog.flops = gemm.flops();
+    prog
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::table1;
+    use crate::sim::execute;
+
+    #[test]
+    fn builds_and_validates() {
+        let arch = table1();
+        let g = GemmWorkload::new(4096, 1024, 4096, "test");
+        let p = summa_program(&arch, &g);
+        assert!(p.validate().is_ok());
+        assert_eq!(p.flops, g.flops());
+    }
+
+    #[test]
+    fn panel_sizes_fit_l1() {
+        let arch = table1();
+        let (kb, nc) = panel_sizes(arch.tile.l1_bytes(), 128, 896);
+        assert!(kb >= 16 && nc >= 16);
+        assert!(EB * (2 * 128 * kb + 2 * kb * nc + 128 * nc) <= arch.tile.l1_bytes());
+    }
+
+    #[test]
+    fn large_gemm_high_utilization() {
+        // Fig. 5c: SUMMA on BestArch reaches >80% utilization on the
+        // LLaMA-70B FFN GEMMs.
+        let arch = table1();
+        let g = GemmWorkload::new(4096, 8192, 28672, "ffn-up");
+        let st = execute(&summa_program(&arch, &g), 0);
+        let u = st.compute_utilization(arch.peak_flops_per_cycle());
+        assert!(u > 0.7, "SUMMA utilization {u:.3}");
+    }
+
+    #[test]
+    fn traffic_accounting_reasonable() {
+        let arch = table1();
+        let g = GemmWorkload::new(4096, 8192, 8192, "proj");
+        let st = execute(&summa_program(&arch, &g), 0);
+        // Lower bound: A + B + C moved at least once.
+        let compulsory = EB * (g.m * g.k + g.k * g.n + g.m * g.n);
+        assert!(st.hbm_bytes >= compulsory);
+        // Upper bound: A re-streamed once per pass, small factor.
+        assert!(st.hbm_bytes < 8 * compulsory, "{} vs {}", st.hbm_bytes, compulsory);
+    }
+}

@@ -1,0 +1,181 @@
+//! Block/slice sizing under the L1 capacity constraint.
+//!
+//! FlashAttention on a tile must simultaneously host Qᵢ, Kⱼᵀ, Vⱼ, Oᵢ plus
+//! the score block Sᵢ in L1, with Kᵀ/V double-buffered for load/compute
+//! overlap. With square blocks `M := B_r = B_c` in FP16 the footprint is
+//!
+//! ```text
+//! sync:  bytes(M) = 2 · (Q + O + K + V + dbK + dbV : 6·M·D  +  S: M²)
+//! async: bytes(M) = 2 · (8·M·D + 2·M²)
+//! ```
+//!
+//! where the asynchronous schedule (FA-3 / FlatAsyn, §III-C) keeps *two*
+//! in-flight row blocks that share the Kᵀ/V stream (the papers' footnote 3
+//! variant — two Q/O/S working sets, one double-buffered K/V pair).
+//!
+//! FlatAttention applies the same budget to the per-tile *slice* `t`
+//! (= B_r/G_y = B_c/G_x, kept square per §IV), so the group-level block is
+//! `M = t·G` — the aggregate-L1 effect that shrinks HBM I/O by √N. Shorter
+//! sequences cap the slice at `S/G` (the over-flattening regime of §V-B).
+
+use crate::arch::{ArchConfig, TileConfig};
+
+/// FP16 bytes of the synchronous working set at block/slice size `m`.
+pub fn working_set_bytes(m: u64, d: u64) -> u64 {
+    2 * (6 * m * d + m * m)
+}
+
+/// FP16 bytes of the asynchronous (two row-block, shared-K/V) working set.
+pub fn working_set_async_bytes(m: u64, d: u64) -> u64 {
+    2 * (8 * m * d + 2 * m * m)
+}
+
+/// Largest size (multiple of `quantum`) whose working set fits.
+fn max_fitting(budget: u64, d: u64, quantum: u64, footprint: fn(u64, u64) -> u64) -> u64 {
+    let mut m = quantum;
+    while footprint(m + quantum, d) <= budget {
+        m += quantum;
+    }
+    m
+}
+
+/// FlashAttention block size `M` for one tile (Algorithm 1), maximizing L1
+/// occupancy; `asynchronous` selects the FA-3 two-row-block footprint.
+pub fn flash_block_size(tile: &TileConfig, d: u64, asynchronous: bool) -> u64 {
+    let fp = if asynchronous { working_set_async_bytes } else { working_set_bytes };
+    max_fitting(tile.l1_bytes(), d, 32, fp)
+}
+
+/// FlatAttention per-tile slice size `t` (Algorithm 2).
+pub fn flat_slice_size(tile: &TileConfig, d: u64, seq: u64, group: u64, asynchronous: bool) -> u64 {
+    let fp = if asynchronous { working_set_async_bytes } else { working_set_bytes };
+    let cap = max_fitting(tile.l1_bytes(), d, 16, fp);
+    let seq_cap = (seq / group).max(1);
+    cap.min(seq_cap)
+}
+
+/// Resolved FlatAttention tiling for a workload on an architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlatTiling {
+    /// Group edge (square groups: Gx = Gy = group).
+    pub group: u64,
+    /// Per-tile slice edge `t`.
+    pub slice: u64,
+    /// Group-level block size `B_r = B_c = t · group`.
+    pub block: u64,
+    /// Row blocks per head: `T_r = ⌈S / B_r⌉`.
+    pub t_r: u64,
+    /// Column blocks per head: `T_c = ⌈S / B_c⌉`.
+    pub t_c: u64,
+    /// Number of groups on the mesh.
+    pub num_groups: u64,
+}
+
+impl FlatTiling {
+    pub fn resolve(arch: &ArchConfig, d: u64, seq: u64, group: usize, asynchronous: bool) -> Self {
+        assert!(
+            group > 0 && arch.mesh_x % group == 0 && arch.mesh_y % group == 0,
+            "group {group} must divide the {}x{} mesh",
+            arch.mesh_x,
+            arch.mesh_y
+        );
+        let g = group as u64;
+        let slice = flat_slice_size(&arch.tile, d, seq, g, asynchronous);
+        let block = slice * g;
+        Self {
+            group: g,
+            slice,
+            block,
+            t_r: seq.div_ceil(block),
+            t_c: seq.div_ceil(block),
+            num_groups: ((arch.mesh_x / group) * (arch.mesh_y / group)) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::{table1, table1_tile};
+
+    #[test]
+    fn flash_sync_block_maximal() {
+        let t = table1_tile();
+        let m = flash_block_size(&t, 128, false);
+        assert_eq!(m, 192);
+        assert!(working_set_bytes(m, 128) <= t.l1_bytes());
+        assert!(working_set_bytes(m + 32, 128) > t.l1_bytes());
+    }
+
+    #[test]
+    fn flash_async_block_is_paper_m128() {
+        // FA-3's two-row-block schedule lands on the paper's canonical
+        // M = 128 at D = 128 (16.5× I/O ratio vs the full-chip Flat group).
+        let t = table1_tile();
+        assert_eq!(flash_block_size(&t, 128, true), 128);
+    }
+
+    #[test]
+    fn flash_block_d64_larger() {
+        let t = table1_tile();
+        assert!(flash_block_size(&t, 64, false) > flash_block_size(&t, 128, false));
+    }
+
+    #[test]
+    fn flat_slice_caps_by_sequence() {
+        let t = table1_tile();
+        // S=512 on a 32-wide group: slice = 512/32 = 16 (paper Fig. 4).
+        assert_eq!(flat_slice_size(&t, 128, 512, 32, false), 16);
+        assert_eq!(flat_slice_size(&t, 128, 512, 32, true), 16);
+        // S=4096, G=32: slice 128 for both schedules (Fig. 4 labels).
+        assert_eq!(flat_slice_size(&t, 128, 4096, 32, false), 128);
+        assert_eq!(flat_slice_size(&t, 128, 4096, 32, true), 128);
+        // Long sequence, small group: pure capacity cap.
+        let cap = flat_slice_size(&t, 128, 65536, 4, false);
+        assert!(working_set_bytes(cap, 128) <= t.l1_bytes());
+        assert!(working_set_bytes(cap + 16, 128) > t.l1_bytes());
+    }
+
+    #[test]
+    fn tiling_resolve_table1() {
+        let a = table1();
+        let t = FlatTiling::resolve(&a, 128, 4096, 32, false);
+        assert_eq!(t.slice, 128);
+        assert_eq!(t.block, 4096);
+        assert_eq!(t.t_r, 1);
+        assert_eq!(t.t_c, 1);
+        assert_eq!(t.num_groups, 1);
+
+        let t8 = FlatTiling::resolve(&a, 128, 4096, 8, false);
+        assert_eq!(t8.num_groups, 16);
+        assert_eq!(t8.block, t8.slice * 8);
+        assert!(t8.t_r >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn group_must_divide_mesh() {
+        let a = table1();
+        FlatTiling::resolve(&a, 128, 4096, 12, false);
+    }
+
+    #[test]
+    fn io_reduction_formula_example() {
+        // §III-A: S=4096, M=128, N=64 ⇒ 6.6× reduction.
+        let (s, m, n) = (4096.0_f64, 128.0_f64, 64.0_f64);
+        let ratio = (1.0 + s / m) / (1.0 + s / (n.sqrt() * m));
+        assert!((ratio - 6.6).abs() < 0.1, "ratio {ratio:.2}");
+    }
+
+    #[test]
+    fn paper_headline_io_ratio_16x() {
+        // FA-3 (M=128) vs FlatAttention on the full 32×32 mesh at S=4096:
+        // (1 + 4096/128) / (1 + 4096/4096) = 16.5×.
+        let t = table1_tile();
+        let m_fa3 = flash_block_size(&t, 128, true) as f64;
+        let a = table1();
+        let flat = FlatTiling::resolve(&a, 128, 4096, 32, true);
+        let ratio = (1.0 + 4096.0 / m_fa3) / (1.0 + 4096.0 / flat.block as f64);
+        assert!((ratio - 16.5).abs() < 0.6, "ratio {ratio:.2}");
+    }
+}

@@ -1,0 +1,53 @@
+//! iDMA transfer timing for tile↔HBM traffic.
+//!
+//! An HBM transfer occupies the target HBM channel for `bytes / channel_bw`
+//! cycles (the channel is the bottleneck: 64 B/cycle vs 128 B/cycle NoC
+//! links and 512 B/cycle L1 ports) and completes after an additional
+//! pipeline latency of the HBM access time plus the NoC traversal from the
+//! channel's edge attachment to the tile.
+
+use crate::arch::{HbmConfig, NocConfig};
+use crate::noc::collective::XferTime;
+
+/// Time for a DMA transfer of `bytes` between a tile and an HBM channel
+/// located `hops` routers away.
+pub fn dma_hbm_time(hbm: &HbmConfig, noc: &NocConfig, bytes: u64, hops: u64) -> XferTime {
+    let bw = hbm
+        .channel_bytes_per_cycle
+        .min(noc.link_bytes_per_cycle)
+        .max(1);
+    XferTime {
+        occupancy: bytes.div_ceil(bw),
+        latency: hbm.access_latency + 2 * noc.inject_latency + hops * noc.router_latency,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::table1;
+
+    #[test]
+    fn channel_bandwidth_bound() {
+        let a = table1();
+        let t = dma_hbm_time(&a.hbm, &a.noc, 64 * 1024, 0);
+        assert_eq!(t.occupancy, 1024); // 64 KiB at 64 B/cycle
+    }
+
+    #[test]
+    fn latency_includes_access_and_hops() {
+        let a = table1();
+        let t = dma_hbm_time(&a.hbm, &a.noc, 64, 10);
+        assert_eq!(t.latency, 200 + 20 + 40);
+        assert_eq!(t.occupancy, 1);
+    }
+
+    #[test]
+    fn small_transfer_latency_dominated() {
+        // The §V-B over-flattening argument: fixed ~200-cycle HBM access
+        // latency dominates small slice transfers.
+        let a = table1();
+        let t = dma_hbm_time(&a.hbm, &a.noc, 16 * 64 * 2, 0); // 16×64 fp16 slice
+        assert!(t.latency > t.occupancy * 5);
+    }
+}

@@ -1,0 +1,11 @@
+//! Per-tile engine timing models, calibrated to the paper's Table I specs
+//! (see DESIGN.md §6): the RedMulE matrix engine, the Spatz vector engine
+//! (with the custom exponential unit of §IV), and the iDMA engine.
+
+pub mod dma;
+pub mod redmule;
+pub mod spatz;
+
+pub use dma::dma_hbm_time;
+pub use redmule::{matmul_cycles, matmul_flops};
+pub use spatz::SpatzOp;

@@ -1,0 +1,114 @@
+//! Spatz vector-engine timing model.
+//!
+//! Spatz [20] couples compact RVV vector units to the tile; the paper
+//! extends it with a custom RVV exponential instruction backed by a
+//! dedicated exp unit in the FPU (§IV). Streaming elementwise/reduction
+//! ops run at `fpus × lanes` FP16 elements per cycle; exponentials run at
+//! `fpus × exp_per_fpu` elements per cycle. Each invocation pays a small
+//! fixed issue overhead (vector configuration + offload from the scalar
+//! core).
+
+use crate::arch::TileConfig;
+use crate::sim::Cycle;
+
+/// Fixed per-invocation overhead (vsetvl + offload), cycles.
+pub const SPATZ_ISSUE_OVERHEAD: Cycle = 12;
+
+/// A vector-engine operation over a tile-local slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpatzOp {
+    /// Scale `elems` by a scalar (the 1/√D of the attention scores).
+    Scale { elems: u64 },
+    /// Row-wise max of an `rows × cols` slice (plus running-max merge).
+    RowMax { rows: u64, cols: u64 },
+    /// Row-wise sum of an `rows × cols` slice.
+    RowSum { rows: u64, cols: u64 },
+    /// Elementwise `exp(x - m)` over `elems` (custom exp unit).
+    Exp { elems: u64 },
+    /// Rescale rows by `diag(e^{m_old - m_new})` — `elems` total elements
+    /// plus `rows` exponentials for the per-row factors.
+    Rescale { rows: u64, elems: u64 },
+    /// Final `diag(l)^{-1}` normalization over `elems` with `rows`
+    /// reciprocals.
+    Normalize { rows: u64, elems: u64 },
+    /// Merge running softmax statistics (m, l vectors of `rows` length).
+    StatsUpdate { rows: u64 },
+}
+
+impl SpatzOp {
+    /// Cycles on the given tile.
+    pub fn cycles(&self, tile: &TileConfig) -> Cycle {
+        let v = tile.spatz_elems_per_cycle().max(1);
+        let e = tile.spatz_exp_per_cycle().max(1);
+        let body = match *self {
+            SpatzOp::Scale { elems } => elems.div_ceil(v),
+            SpatzOp::RowMax { rows, cols } => (rows * cols).div_ceil(v) + rows.div_ceil(v),
+            SpatzOp::RowSum { rows, cols } => (rows * cols).div_ceil(v) + rows.div_ceil(v),
+            SpatzOp::Exp { elems } => elems.div_ceil(e),
+            SpatzOp::Rescale { rows, elems } => rows.div_ceil(e) + elems.div_ceil(v),
+            SpatzOp::Normalize { rows, elems } => {
+                // Reciprocal via the FPU divider: ~4 elems/FPU/cycle.
+                rows.div_ceil((tile.spatz_fpus as u64 * 4).max(1)) + elems.div_ceil(v)
+            }
+            SpatzOp::StatsUpdate { rows } => 2 * rows.div_ceil(v) + rows.div_ceil(e),
+        };
+        body + SPATZ_ISSUE_OVERHEAD
+    }
+
+    /// Useful FLOPs for utilization accounting (1 per element op).
+    pub fn flops(&self) -> u64 {
+        match *self {
+            SpatzOp::Scale { elems } => elems,
+            SpatzOp::RowMax { rows, cols } | SpatzOp::RowSum { rows, cols } => rows * cols,
+            SpatzOp::Exp { elems } => elems,
+            SpatzOp::Rescale { rows, elems } => rows + elems,
+            SpatzOp::Normalize { rows, elems } => rows + elems,
+            SpatzOp::StatsUpdate { rows } => 3 * rows,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets::table1_tile;
+
+    #[test]
+    fn table1_throughputs() {
+        let t = table1_tile();
+        assert_eq!(t.spatz_elems_per_cycle(), 128);
+        assert_eq!(t.spatz_exp_per_cycle(), 16);
+    }
+
+    #[test]
+    fn exp_dominates_softmax_cost() {
+        // 128×128 slice: exp is the expensive part (16/cycle vs 128/cycle).
+        let t = table1_tile();
+        let exp = SpatzOp::Exp { elems: 128 * 128 }.cycles(&t);
+        let rowmax = SpatzOp::RowMax { rows: 128, cols: 128 }.cycles(&t);
+        assert!(exp > 3 * rowmax, "exp={exp} rowmax={rowmax}");
+        // 16384 exps at 16/cycle = 1024 + overhead.
+        assert_eq!(exp, 1024 + SPATZ_ISSUE_OVERHEAD);
+    }
+
+    #[test]
+    fn issue_overhead_floors_small_ops() {
+        let t = table1_tile();
+        let c = SpatzOp::StatsUpdate { rows: 4 }.cycles(&t);
+        assert!(c >= SPATZ_ISSUE_OVERHEAD);
+    }
+
+    #[test]
+    fn cycles_scale_linearly_in_elems() {
+        let t = table1_tile();
+        let c1 = SpatzOp::Scale { elems: 1280 }.cycles(&t) - SPATZ_ISSUE_OVERHEAD;
+        let c2 = SpatzOp::Scale { elems: 2560 }.cycles(&t) - SPATZ_ISSUE_OVERHEAD;
+        assert_eq!(c2, 2 * c1);
+    }
+
+    #[test]
+    fn flops_accounting() {
+        assert_eq!(SpatzOp::Exp { elems: 100 }.flops(), 100);
+        assert_eq!(SpatzOp::RowMax { rows: 4, cols: 8 }.flops(), 32);
+    }
+}

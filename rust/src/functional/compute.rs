@@ -1,0 +1,97 @@
+//! Tile-compute backends for the functional simulator.
+//!
+//! [`NativeCompute`] runs the online-softmax block step in pure Rust;
+//! [`RuntimeCompute`] runs the AOT-compiled Pallas kernel through PJRT —
+//! the production path proving all three layers compose.
+
+use anyhow::Result;
+
+use crate::runtime::Runtime;
+use crate::util::Tensor;
+
+use super::golden::{block_step_native, SoftmaxState};
+
+/// A backend able to execute one per-tile block update.
+pub trait TileCompute {
+    /// Apply one online-softmax block step:
+    /// (q [Br,D], kt [D,Bc], v [Bc,D], state) → state'.
+    fn block_step(&self, q: &Tensor, kt: &Tensor, v: &Tensor, st: &SoftmaxState)
+        -> Result<SoftmaxState>;
+
+    /// Backend name for logs.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust backend (always available; used as cross-check).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeCompute;
+
+impl TileCompute for NativeCompute {
+    fn block_step(
+        &self,
+        q: &Tensor,
+        kt: &Tensor,
+        v: &Tensor,
+        st: &SoftmaxState,
+    ) -> Result<SoftmaxState> {
+        Ok(block_step_native(q, kt, v, st))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT backend executing the AOT Pallas `block_step` artifact.
+///
+/// The HLO kernel takes finite m/l (the compiled `exp(m - m')` produces
+/// NaN from `-inf - -inf`), so the first step from the ±inf init state is
+/// seeded with a large-negative sentinel max, which is mathematically
+/// equivalent for any finite scores.
+pub struct RuntimeCompute<'rt> {
+    pub runtime: &'rt Runtime,
+}
+
+/// Finite stand-in for -inf in compiled kernels.
+const NEG_LARGE: f32 = -1.0e30;
+
+impl<'rt> TileCompute for RuntimeCompute<'rt> {
+    fn block_step(
+        &self,
+        q: &Tensor,
+        kt: &Tensor,
+        v: &Tensor,
+        st: &SoftmaxState,
+    ) -> Result<SoftmaxState> {
+        let m_in: Vec<f32> = st
+            .m
+            .iter()
+            .map(|&m| if m == f32::NEG_INFINITY { NEG_LARGE } else { m })
+            .collect();
+        let (m, l, o) = self.runtime.block_step(q, kt, v, &m_in, &st.l, &st.o)?;
+        Ok(SoftmaxState { m, l, o })
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn native_matches_direct_call() {
+        let mut rng = Rng::new(4);
+        let q = Tensor::randn(8, 16, &mut rng);
+        let k = Tensor::randn(8, 16, &mut rng);
+        let v = Tensor::randn(8, 16, &mut rng);
+        let st = SoftmaxState::init(8, 16);
+        let a = NativeCompute.block_step(&q, &k.transpose(), &v, &st).unwrap();
+        let b = block_step_native(&q, &k.transpose(), &v, &st);
+        assert_eq!(a.m, b.m);
+        assert!(a.o.max_abs_diff(&b.o) == 0.0);
+    }
+}

@@ -1,0 +1,221 @@
+//! Native golden references: plain attention, the online-softmax block
+//! step, and the softmax-merge combine used by the group reductions.
+
+use crate::util::Tensor;
+
+/// Plain softmax(Q Kᵀ / √D) V for a single head. q: [S,D], k/v: [S,D].
+pub fn attention_golden(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    let d = q.cols();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut s = q.matmul(&k.transpose());
+    for val in s.data_mut() {
+        *val *= scale;
+    }
+    let m = s.row_max();
+    let rows = s.rows();
+    let cols = s.cols();
+    let mut p = Tensor::zeros(rows, cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            p.set(r, c, (s.at(r, c) - m[r]).exp());
+        }
+    }
+    let l = p.row_sum();
+    let mut out = p.matmul(v);
+    let inv: Vec<f32> = l.iter().map(|&x| 1.0 / x).collect();
+    out.scale_rows(&inv);
+    out
+}
+
+/// Running online-softmax state for a row block.
+#[derive(Debug, Clone)]
+pub struct SoftmaxState {
+    /// Row maxima (length Br).
+    pub m: Vec<f32>,
+    /// Row denominators (length Br).
+    pub l: Vec<f32>,
+    /// Unnormalized output accumulator [Br, D].
+    pub o: Tensor,
+}
+
+impl SoftmaxState {
+    pub fn init(br: usize, d: usize) -> Self {
+        Self {
+            m: vec![f32::NEG_INFINITY; br],
+            l: vec![0.0; br],
+            o: Tensor::zeros(br, d),
+        }
+    }
+
+    /// Finalize: O · diag(l)⁻¹.
+    pub fn normalize(mut self) -> Tensor {
+        let inv: Vec<f32> = self.l.iter().map(|&x| 1.0 / x).collect();
+        self.o.scale_rows(&inv);
+        self.o
+    }
+}
+
+/// One online-softmax block update in native Rust — the same math as the
+/// Pallas `block_step` kernel (ref.py `block_step_ref`).
+/// q: [Br,D], kt: [D,Bc], v: [Bc,D].
+pub fn block_step_native(q: &Tensor, kt: &Tensor, v: &Tensor, st: &SoftmaxState) -> SoftmaxState {
+    let d = q.cols();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut s = q.matmul(kt);
+    for val in s.data_mut() {
+        *val *= scale;
+    }
+    let br = q.rows();
+    let bc = v.rows();
+    let mut m_new = st.m.clone();
+    for r in 0..br {
+        for c in 0..bc {
+            m_new[r] = m_new[r].max(s.at(r, c));
+        }
+    }
+    let mut p = Tensor::zeros(br, bc);
+    for r in 0..br {
+        for c in 0..bc {
+            p.set(r, c, (s.at(r, c) - m_new[r]).exp());
+        }
+    }
+    let alpha: Vec<f32> = st
+        .m
+        .iter()
+        .zip(&m_new)
+        .map(|(&mo, &mn)| if mo == f32::NEG_INFINITY { 0.0 } else { (mo - mn).exp() })
+        .collect();
+    let psum = p.row_sum();
+    let l_new: Vec<f32> = st
+        .l
+        .iter()
+        .zip(&alpha)
+        .zip(&psum)
+        .map(|((&l, &a), &ps)| a * l + ps)
+        .collect();
+    let mut o_new = st.o.clone();
+    o_new.scale_rows(&alpha);
+    let o_new = o_new.add(&p.matmul(v));
+    SoftmaxState { m: m_new, l: l_new, o: o_new }
+}
+
+/// Merge two online-softmax states covering disjoint K/V ranges of the same
+/// row block — exactly what FlatAttention's row-wise reductions compute
+/// when combining per-tile partials.
+pub fn softmax_merge(a: &SoftmaxState, b: &SoftmaxState) -> SoftmaxState {
+    let br = a.m.len();
+    assert_eq!(br, b.m.len());
+    let mut m = vec![0.0f32; br];
+    let mut wa = vec![0.0f32; br];
+    let mut wb = vec![0.0f32; br];
+    for r in 0..br {
+        m[r] = a.m[r].max(b.m[r]);
+        wa[r] = if a.m[r] == f32::NEG_INFINITY { 0.0 } else { (a.m[r] - m[r]).exp() };
+        wb[r] = if b.m[r] == f32::NEG_INFINITY { 0.0 } else { (b.m[r] - m[r]).exp() };
+    }
+    let l: Vec<f32> = (0..br).map(|r| wa[r] * a.l[r] + wb[r] * b.l[r]).collect();
+    let mut oa = a.o.clone();
+    oa.scale_rows(&wa);
+    let mut ob = b.o.clone();
+    ob.scale_rows(&wb);
+    SoftmaxState { m, l, o: oa.add(&ob) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::{check, forall_cases};
+    use crate::util::Rng;
+
+    fn randn(rng: &mut Rng, r: usize, c: usize) -> Tensor {
+        Tensor::randn(r, c, rng)
+    }
+
+    #[test]
+    fn golden_rows_sum_to_convex_combination() {
+        let mut rng = Rng::new(1);
+        let (q, k, v) = (randn(&mut rng, 16, 8), randn(&mut rng, 32, 8), randn(&mut rng, 32, 8));
+        let out = attention_golden(&q, &k, &v);
+        assert!(out.all_finite());
+        // Each output row within the V column envelope.
+        for c in 0..8 {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for r in 0..32 {
+                lo = lo.min(v.at(r, c));
+                hi = hi.max(v.at(r, c));
+            }
+            for r in 0..16 {
+                assert!(out.at(r, c) >= lo - 1e-4 && out.at(r, c) <= hi + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn block_steps_compose_to_attention() {
+        let mut rng = Rng::new(2);
+        let (s, d, bc) = (64, 16, 16);
+        let (q, k, v) = (randn(&mut rng, 32, d), randn(&mut rng, s, d), randn(&mut rng, s, d));
+        let mut st = SoftmaxState::init(32, d);
+        for j in (0..s).step_by(bc) {
+            let kt = k.row_block(j, bc).transpose();
+            let vj = v.row_block(j, bc);
+            st = block_step_native(&q, &kt, &vj, &st);
+        }
+        let out = st.normalize();
+        let golden = attention_golden(&q, &k, &v);
+        assert!(out.max_abs_diff(&golden) < 1e-4, "diff {}", out.max_abs_diff(&golden));
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        // Splitting the K/V range in two and merging == processing all
+        // blocks sequentially (associativity of online softmax).
+        let mut rng = Rng::new(3);
+        let (d, bc) = (8, 16);
+        let q = randn(&mut rng, 16, d);
+        let (k1, v1) = (randn(&mut rng, bc, d), randn(&mut rng, bc, d));
+        let (k2, v2) = (randn(&mut rng, bc, d), randn(&mut rng, bc, d));
+        let init = SoftmaxState::init(16, d);
+        let seq = block_step_native(&q, &k2.transpose(), &v2,
+            &block_step_native(&q, &k1.transpose(), &v1, &init));
+        let p1 = block_step_native(&q, &k1.transpose(), &v1, &init);
+        let p2 = block_step_native(&q, &k2.transpose(), &v2, &init);
+        let merged = softmax_merge(&p1, &p2);
+        let a = seq.normalize();
+        let b = merged.normalize();
+        assert!(a.max_abs_diff(&b) < 1e-5);
+    }
+
+    #[test]
+    fn merge_property_random_splits() {
+        forall_cases(30, 0xFA7, |rng| {
+            let d = 8;
+            let br = 8;
+            let n_blocks = 2 + rng.gen_range(3) as usize;
+            let q = Tensor::randn(br, d, rng);
+            let blocks: Vec<(Tensor, Tensor)> = (0..n_blocks)
+                .map(|_| (Tensor::randn(16, d, rng), Tensor::randn(16, d, rng)))
+                .collect();
+            // Sequential over all blocks.
+            let mut st = SoftmaxState::init(br, d);
+            for (k, v) in &blocks {
+                st = block_step_native(&q, &k.transpose(), v, &st);
+            }
+            let seq = st.normalize();
+            // Tree merge of per-block partials.
+            let partials: Vec<SoftmaxState> = blocks
+                .iter()
+                .map(|(k, v)| block_step_native(&q, &k.transpose(), v, &SoftmaxState::init(br, d)))
+                .collect();
+            let merged = partials
+                .into_iter()
+                .reduce(|a, b| softmax_merge(&a, &b))
+                .unwrap()
+                .normalize();
+            check(
+                seq.max_abs_diff(&merged) < 1e-4,
+                format!("diff {} with {n_blocks} blocks", seq.max_abs_diff(&merged)),
+            )
+        });
+    }
+}

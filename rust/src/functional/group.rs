@@ -1,0 +1,227 @@
+//! Group-level functional execution of FlatAttention (Algorithm 2).
+//!
+//! Two executions are provided:
+//!
+//! * [`run_flat_group_literal`] follows Algorithm 2 *line by line*: every
+//!   inner iteration performs the row-wise max reduction + multicast, the
+//!   exp with the *global* row maxima, the row-wise sum reduction +
+//!   multicast, and the O rescale — real data moving the way the NoC
+//!   collectives move it. Pure native math (the per-step granularity does
+//!   not match the fused block-step artifact).
+//! * [`run_flat_group_functional`] exploits the associativity of online
+//!   softmax (validated in `golden::tests::merge_property_random_splits`):
+//!   each tile independently folds its K/V slices with the (native or
+//!   PJRT-compiled) `block_step` kernel, and the row-wise reduction merges
+//!   the per-tile partial states — the same result through the artifact
+//!   path the production system uses.
+//!
+//! Both must agree with `attention_golden` to float tolerance; the
+//! integration tests assert all three paths coincide.
+
+use anyhow::Result;
+
+use crate::util::Tensor;
+
+use super::compute::TileCompute;
+use super::golden::{softmax_merge, SoftmaxState};
+
+/// Output of a functional group run.
+pub struct FlatGroupResult {
+    /// Assembled attention output [S, D].
+    pub output: Tensor,
+    /// Number of block-step invocations (for artifact-use accounting).
+    pub block_steps: usize,
+}
+
+/// Partition `seq` into `g` contiguous slices (last may be ragged).
+fn slice_bounds(seq: usize, g: usize) -> Vec<(usize, usize)> {
+    let t = seq.div_ceil(g);
+    (0..g)
+        .map(|i| {
+            let lo = (i * t).min(seq);
+            let hi = ((i + 1) * t).min(seq);
+            (lo, hi - lo)
+        })
+        .filter(|&(_, n)| n > 0)
+        .collect()
+}
+
+/// Merge-at-end execution over a `g × g` group using a [`TileCompute`]
+/// backend. q/k/v: [S, D] single head.
+pub fn run_flat_group_functional(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    g: usize,
+    compute: &dyn TileCompute,
+) -> Result<FlatGroupResult> {
+    let (s, d) = (q.rows(), q.cols());
+    assert_eq!(k.rows(), s);
+    assert_eq!(v.rows(), s);
+    let rows = slice_bounds(s, g);
+    let cols = slice_bounds(s, g);
+    let mut output = Tensor::zeros(s, d);
+    let mut steps = 0usize;
+
+    // Row y of the group holds Q slice y (row-multicast along the row);
+    // column x holds Kᵀ/V slice x (column-multicast down the column).
+    for &(q0, qn) in &rows {
+        let q_slice = q.row_block(q0, qn);
+        // Each tile (x, y) folds its K/V slice into a local state...
+        let mut partials: Vec<SoftmaxState> = Vec::with_capacity(cols.len());
+        for &(k0, kn) in &cols {
+            let kt = k.row_block(k0, kn).transpose();
+            let vj = v.row_block(k0, kn);
+            let st = compute.block_step(&q_slice, &kt, &vj, &SoftmaxState::init(qn, d))?;
+            steps += 1;
+            partials.push(st);
+        }
+        // ...and the row-wise reduction merges the partials to the west
+        // edge (this is what the NoC sum/max reduction computes).
+        let merged = partials
+            .into_iter()
+            .reduce(|a, b| softmax_merge(&a, &b))
+            .expect("at least one column");
+        output.write_block(q0, 0, &merged.normalize());
+    }
+    Ok(FlatGroupResult { output, block_steps: steps })
+}
+
+/// Literal Algorithm-2 execution: per-iteration global row statistics via
+/// max/sum reductions and multicasts, native math.
+pub fn run_flat_group_literal(q: &Tensor, k: &Tensor, v: &Tensor, g: usize) -> FlatGroupResult {
+    let (s, d) = (q.rows(), q.cols());
+    let rows = slice_bounds(s, g);
+    let cols = slice_bounds(s, g);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut output = Tensor::zeros(s, d);
+    let mut steps = 0usize;
+
+    for &(q0, qn) in &rows {
+        let q_slice = q.row_block(q0, qn);
+        // Per-tile O accumulators along this group row, plus shared stats.
+        let mut o_parts: Vec<Tensor> = vec![Tensor::zeros(qn, d); cols.len()];
+        let mut m_run = vec![f32::NEG_INFINITY; qn];
+        let mut l_run = vec![0.0f32; qn];
+
+        for (j, &(k0, kn)) in cols.iter().enumerate() {
+            // ⑤ every tile computes its S slice (same data in a real group;
+            // here we iterate the x dimension).
+            let kt = k.row_block(k0, kn).transpose();
+            let vj = v.row_block(k0, kn);
+            let mut s_blk = q_slice.matmul(&kt);
+            for val in s_blk.data_mut() {
+                *val *= scale;
+            }
+            steps += 1;
+            // ⑥–⑨ local maxima then row-wise max REDUCTION + multicast:
+            let mut m_new = m_run.clone();
+            for r in 0..qn {
+                for c in 0..kn {
+                    m_new[r] = m_new[r].max(s_blk.at(r, c));
+                }
+            }
+            // ⑩–⑬ exp with *global* maxima, local sums, sum reduction:
+            let mut p = Tensor::zeros(qn, kn);
+            for r in 0..qn {
+                for c in 0..kn {
+                    p.set(r, c, (s_blk.at(r, c) - m_new[r]).exp());
+                }
+            }
+            let alpha: Vec<f32> = m_run
+                .iter()
+                .zip(&m_new)
+                .map(|(&mo, &mn)| if mo == f32::NEG_INFINITY { 0.0 } else { (mo - mn).exp() })
+                .collect();
+            let psum = p.row_sum();
+            for r in 0..qn {
+                l_run[r] = alpha[r] * l_run[r] + psum[r];
+            }
+            // ⑭–⑰ every tile rescales its O partial and accumulates P̃·V.
+            // (In hardware tile x holds o_parts[x]; the rescale factor is
+            // multicast with the stats.)
+            for o_part in o_parts.iter_mut() {
+                o_part.scale_rows(&alpha);
+            }
+            o_parts[j] = o_parts[j].add(&p.matmul(&vj));
+            m_run = m_new;
+        }
+
+        // ⑱–⑳ normalize and row-reduce the O partials to the west edge.
+        let mut o_total = Tensor::zeros(qn, d);
+        for o_part in &o_parts {
+            o_total = o_total.add(o_part);
+        }
+        let inv: Vec<f32> = l_run.iter().map(|&x| 1.0 / x).collect();
+        o_total.scale_rows(&inv);
+        output.write_block(q0, 0, &o_total);
+    }
+    FlatGroupResult { output, block_steps: steps }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functional::golden::attention_golden;
+    use crate::functional::NativeCompute;
+    use crate::util::Rng;
+
+    fn inputs(s: usize, d: usize, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        (
+            Tensor::randn(s, d, &mut rng),
+            Tensor::randn(s, d, &mut rng),
+            Tensor::randn(s, d, &mut rng),
+        )
+    }
+
+    #[test]
+    fn functional_matches_golden_various_groups() {
+        for &(s, d, g) in &[(64usize, 16usize, 2usize), (128, 32, 4), (128, 16, 8), (96, 8, 3)] {
+            let (q, k, v) = inputs(s, d, (s + d + g) as u64);
+            let res = run_flat_group_functional(&q, &k, &v, g, &NativeCompute).unwrap();
+            let golden = attention_golden(&q, &k, &v);
+            let diff = res.output.max_abs_diff(&golden);
+            assert!(diff < 2e-4, "s={s} d={d} g={g}: diff {diff}");
+            assert_eq!(res.block_steps, g.min(s) * g.min(s));
+        }
+    }
+
+    #[test]
+    fn literal_algorithm2_matches_golden() {
+        for &(s, d, g) in &[(64usize, 16usize, 4usize), (128, 32, 8)] {
+            let (q, k, v) = inputs(s, d, 99 + g as u64);
+            let res = run_flat_group_literal(&q, &k, &v, g);
+            let golden = attention_golden(&q, &k, &v);
+            let diff = res.output.max_abs_diff(&golden);
+            assert!(diff < 2e-4, "s={s} d={d} g={g}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn literal_and_functional_agree() {
+        let (q, k, v) = inputs(128, 16, 7);
+        let a = run_flat_group_functional(&q, &k, &v, 4, &NativeCompute).unwrap();
+        let b = run_flat_group_literal(&q, &k, &v, 4);
+        assert!(a.output.max_abs_diff(&b.output) < 2e-4);
+    }
+
+    #[test]
+    fn group_of_one_is_flash() {
+        // g=1 degenerates to single-tile FlashAttention.
+        let (q, k, v) = inputs(64, 8, 11);
+        let res = run_flat_group_functional(&q, &k, &v, 1, &NativeCompute).unwrap();
+        let golden = attention_golden(&q, &k, &v);
+        assert!(res.output.max_abs_diff(&golden) < 1e-4);
+        assert_eq!(res.block_steps, 1);
+    }
+
+    #[test]
+    fn ragged_sequence_slices() {
+        // S not divisible by G exercises the ragged last slice.
+        let (q, k, v) = inputs(100, 16, 13);
+        let res = run_flat_group_functional(&q, &k, &v, 3, &NativeCompute).unwrap();
+        let golden = attention_golden(&q, &k, &v);
+        assert!(res.output.max_abs_diff(&golden) < 2e-4);
+    }
+}

@@ -1,0 +1,19 @@
+//! Functional (data-carrying) simulation of the FlatAttention dataflow.
+//!
+//! The DES (`crate::sim`) models *time*; this module models *values*: it
+//! executes Algorithm 2's data movement on real f32 buffers — per-tile Q/K/V
+//! slices, row/column multicasts, row-wise max/sum reductions, the O-slice
+//! reduction — and checks the assembled output against the golden attention
+//! reference. The per-tile compute runs either natively
+//! ([`compute::NativeCompute`]) or through the AOT-compiled Pallas
+//! `block_step` artifact via PJRT ([`compute::RuntimeCompute`]), which is
+//! the three-layer composition proof: Rust coordination + simulated fabric
+//! + compiled JAX/Pallas math.
+
+pub mod compute;
+pub mod golden;
+pub mod group;
+
+pub use compute::{NativeCompute, RuntimeCompute, TileCompute};
+pub use golden::{attention_golden, block_step_native, softmax_merge};
+pub use group::{run_flat_group_functional, run_flat_group_literal, FlatGroupResult};

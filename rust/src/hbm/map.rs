@@ -1,0 +1,126 @@
+//! Tile↔HBM-channel mapping.
+
+use crate::arch::ArchConfig;
+use crate::noc::Topology;
+
+/// Which die edge a channel is attached to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Edge {
+    West,
+    South,
+}
+
+/// A resolved channel reference: global channel index (west channels first,
+/// then south) plus the XY hop distance from the requesting tile to the
+/// channel's edge attachment point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChannelRef {
+    pub index: usize,
+    pub hops: u64,
+}
+
+/// Static channel map derived from an [`ArchConfig`].
+#[derive(Debug, Clone)]
+pub struct HbmMap {
+    topo: Topology,
+    channels_west: usize,
+    channels_south: usize,
+}
+
+impl HbmMap {
+    pub fn new(arch: &ArchConfig) -> Self {
+        Self {
+            topo: Topology::new(arch.mesh_x, arch.mesh_y),
+            channels_west: arch.hbm.channels_west,
+            channels_south: arch.hbm.channels_south,
+        }
+    }
+
+    pub fn total_channels(&self) -> usize {
+        self.channels_west + self.channels_south
+    }
+
+    /// Channel serving row-streamed (Q/O) traffic for the tile at `(x, y)`.
+    /// Rows are divided into `channels_west` contiguous bands.
+    ///
+    /// Falls back to a south channel when the west edge has none.
+    pub fn row_channel(&self, x: usize, y: usize) -> ChannelRef {
+        if self.channels_west == 0 {
+            return self.col_channel(x, y);
+        }
+        let index = y * self.channels_west / self.topo.y_dim;
+        ChannelRef {
+            index,
+            hops: self.topo.hops_to_west_edge(x, y),
+        }
+    }
+
+    /// Channel serving column-streamed (K/V) traffic for the tile at
+    /// `(x, y)`. Columns are divided into `channels_south` bands.
+    pub fn col_channel(&self, x: usize, y: usize) -> ChannelRef {
+        if self.channels_south == 0 {
+            return self.row_channel(x, y);
+        }
+        let index = self.channels_west + x * self.channels_south / self.topo.x_dim;
+        ChannelRef {
+            index,
+            hops: self.topo.hops_to_south_edge(x, y),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn table1_row_bands() {
+        let m = HbmMap::new(&presets::table1());
+        // 32 rows over 16 west channels: 2 rows per channel.
+        assert_eq!(m.row_channel(0, 0).index, 0);
+        assert_eq!(m.row_channel(0, 1).index, 0);
+        assert_eq!(m.row_channel(0, 2).index, 1);
+        assert_eq!(m.row_channel(0, 31).index, 15);
+    }
+
+    #[test]
+    fn table1_col_bands_offset() {
+        let m = HbmMap::new(&presets::table1());
+        assert_eq!(m.col_channel(0, 0).index, 16);
+        assert_eq!(m.col_channel(31, 0).index, 31);
+    }
+
+    #[test]
+    fn hops_match_edge_distance() {
+        let m = HbmMap::new(&presets::table1());
+        assert_eq!(m.row_channel(5, 0).hops, 5);
+        assert_eq!(m.col_channel(0, 31).hops, 0);
+        assert_eq!(m.col_channel(0, 0).hops, 31);
+    }
+
+    #[test]
+    fn balanced_coverage() {
+        // Every channel serves the same number of rows/columns on Table I.
+        let arch = presets::table1();
+        let m = HbmMap::new(&arch);
+        let mut counts = vec![0usize; m.total_channels()];
+        for y in 0..arch.mesh_y {
+            counts[m.row_channel(0, y).index] += 1;
+        }
+        for x in 0..arch.mesh_x {
+            counts[m.col_channel(x, 0).index] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 2), "{counts:?}");
+    }
+
+    #[test]
+    fn fewer_channels_than_rows() {
+        let arch = presets::with_hbm_channels(presets::table2(32), 4);
+        let m = HbmMap::new(&arch);
+        // 32 rows over 4 channels: 8 rows per channel.
+        assert_eq!(m.row_channel(0, 7).index, 0);
+        assert_eq!(m.row_channel(0, 8).index, 1);
+        assert_eq!(m.row_channel(0, 31).index, 3);
+    }
+}

@@ -1,0 +1,14 @@
+//! HBM channel placement and address→channel mapping.
+//!
+//! Per the paper's Fig. 1 floorplan, HBM stacks sit at the die boundary:
+//! `channels_west` memory controllers along the west edge and
+//! `channels_south` along the south edge (Table I: 16 × 2). Each west
+//! channel serves a contiguous band of mesh rows and each south channel a
+//! band of columns, so row-streamed tensors (Q, O) naturally load through
+//! the west edge and column-streamed tensors (K, V) through the south edge
+//! — this is what makes FlatAttention's edge-loading scheme contention
+//! free when slices are distributed over a group.
+
+pub mod map;
+
+pub use map::{ChannelRef, Edge, HbmMap};

@@ -1,0 +1,24 @@
+//! FlatAttention: Dataflow and Fabric Collectives Co-Optimization for
+//! Efficient Multi-Head Attention on Tile-Based Many-PE Accelerators.
+//!
+//! Reproduction of Zhang et al., CS.AR 2025.
+//!
+//! This crate implements the full SoftHier-style modeling and simulation
+//! stack for tile-based many-PE accelerators, the FlatAttention /
+//! FlashAttention dataflow family, the NoC fabric collective primitives
+//! co-design, and the paper's complete evaluation harness.
+
+pub mod arch;
+pub mod sim;
+pub mod noc;
+pub mod engines;
+pub mod hbm;
+pub mod dataflow;
+pub mod functional;
+pub mod runtime;
+pub mod coordinator;
+pub mod analytics;
+pub mod report;
+pub mod util;
+
+pub use arch::ArchConfig;

@@ -1,0 +1,355 @@
+//! `flatattention` — CLI for the FlatAttention reproduction stack.
+//!
+//! Subcommands:
+//!   report <fig3|fig4|fig5a|fig5b|fig5c|table1|table2|section2|area|headline|all>
+//!       Regenerate a paper table/figure. Options: --quick, --threads N,
+//!       --out results.json
+//!   run       Run a single experiment: --dataflow, --seq, --d, --heads,
+//!             --batch, --group, --arch <table1|table2-16|table2-8|swcoll>
+//!   sweep     Group-size sweep for one workload: --seq/--d/--heads/--batch
+//!   validate  Functional validation: group dataflow vs golden attention,
+//!             native and (if artifacts exist) PJRT backends
+//!   info      Print architecture presets and environment
+
+use std::path::PathBuf;
+
+use flatattention::arch::{presets, ArchConfig};
+use flatattention::coordinator::{best_group, run_one, valid_groups, ExperimentSpec, ResultStore};
+use flatattention::dataflow::{Dataflow, FlatTiling, Workload};
+use flatattention::functional::{
+    attention_golden, run_flat_group_functional, NativeCompute, RuntimeCompute,
+};
+use flatattention::report::{self, ReportOpts};
+use flatattention::runtime::{default_artifact_dir, Runtime};
+use flatattention::util::cli::{parse, Args};
+use flatattention::util::{pool, Rng, Tensor};
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match parse(&raw, &["quick", "help", "pjrt-only", "causal"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.positional.is_empty() {
+        print_usage();
+        return;
+    }
+    let cmd = args.positional[0].clone();
+    let code = match cmd.as_str() {
+        "report" => cmd_report(&args),
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "validate" => cmd_validate(&args),
+        "trace" => cmd_trace(&args),
+        "info" => cmd_info(),
+        other => {
+            eprintln!("unknown command '{other}'");
+            print_usage();
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "flatattention — FlatAttention dataflow + fabric collectives co-optimization (reproduction)
+
+USAGE:
+  flatattention report <fig3|fig4|fig5a|fig5b|fig5c|table1|table2|section2|area|headline|ablations|all>
+                      [--quick] [--threads N] [--out results.json]
+  flatattention run    --dataflow <fa2|fa3|flat|flatcoll|flatasyn> [--seq 4096] [--d 128]
+                      [--heads 32] [--batch 2] [--group 32] [--arch table1]
+  flatattention sweep  [--seq 4096] [--d 128] [--heads 32] [--batch 2] [--dataflow flatasyn]
+  flatattention validate [--seq 256] [--d 64] [--group 4] [--pjrt-only]
+  flatattention trace  [run options] [--tiles 64] --out trace.json   (chrome://tracing)
+  flatattention info
+
+Architectures: --arch <table1|swcoll|table2-32|table2-16|table2-8> or --arch-file configs/foo.toml
+Workloads: --seq S --d D --heads H --batch B [--causal]"
+    );
+}
+
+fn opts_from(args: &Args) -> ReportOpts {
+    ReportOpts {
+        threads: args.get_usize("threads", pool::default_threads()).unwrap_or(4),
+        quick: args.flag("quick"),
+    }
+}
+
+fn arch_from(args: &Args) -> Result<ArchConfig, String> {
+    if let Some(path) = args.get("arch-file") {
+        return flatattention::arch::load_arch(std::path::Path::new(path))
+            .map_err(|e| e.to_string());
+    }
+    match args.get_or("arch", "table1") {
+        "table1" | "best" => Ok(presets::table1()),
+        "swcoll" => Ok(presets::table1_sw_collectives()),
+        "table2-32" => Ok(presets::table2(32)),
+        "table2-16" => Ok(presets::table2(16)),
+        "table2-8" => Ok(presets::table2(8)),
+        other => Err(format!("unknown arch '{other}'")),
+    }
+}
+
+fn workload_from(args: &Args) -> Result<Workload, String> {
+    Ok(Workload::new(
+        args.get_u64("seq", 4096)?,
+        args.get_u64("d", 128)?,
+        args.get_u64("heads", 32)?,
+        args.get_u64("batch", 2)?,
+    )
+    .with_causal(args.flag("causal")))
+}
+
+fn cmd_report(args: &Args) -> i32 {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let opts = opts_from(args);
+    let mut store = ResultStore::new();
+    let all = which == "all";
+    if all || which == "table1" {
+        println!("{}", report::tables::render_table1());
+    }
+    if all || which == "table2" {
+        println!("{}", report::tables::render_table2());
+    }
+    if all || which == "section2" {
+        println!("{}", report::section2::render_section2());
+    }
+    if all || which == "area" {
+        println!("{}", report::section2::render_area());
+    }
+    if all || which == "fig3" {
+        println!("{}", report::fig3::render(&opts, Some(&mut store)));
+    }
+    if all || which == "fig4" {
+        println!("{}", report::fig4::render(&opts, Some(&mut store)));
+    }
+    if all || which == "fig5a" {
+        println!("{}", report::fig5a::render(&opts, Some(&mut store)));
+    }
+    if all || which == "fig5b" {
+        println!("{}", report::fig5b::render(&opts, Some(&mut store)));
+    }
+    if all || which == "fig5c" {
+        println!("{}", report::fig5c::render(&opts, Some(&mut store)));
+    }
+    if all || which == "headline" {
+        println!("{}", report::headline::render(&opts, Some(&mut store)));
+    }
+    if all || which == "ablations" {
+        println!("{}", report::ablations::render(&opts, Some(&mut store)));
+    }
+    if !matches!(
+        which,
+        "all" | "table1" | "table2" | "section2" | "area" | "fig3" | "fig4" | "fig5a" | "fig5b"
+            | "fig5c" | "headline" | "ablations"
+    ) {
+        eprintln!("unknown report '{which}'");
+        return 1;
+    }
+    if let Some(out) = args.get("out") {
+        match store.save(&PathBuf::from(out)) {
+            Ok(()) => println!("wrote {out}"),
+            Err(e) => {
+                eprintln!("error writing {out}: {e}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let arch = match arch_from(args) {
+        Ok(a) => a,
+        Err(e) => return fail(&e),
+    };
+    let workload = match workload_from(args) {
+        Ok(w) => w,
+        Err(e) => return fail(&e),
+    };
+    let df_label = args.get_or("dataflow", "flatasyn");
+    let Some(dataflow) = Dataflow::from_label(df_label) else {
+        return fail(&format!("unknown dataflow '{df_label}'"));
+    };
+    let group = args.get_usize("group", arch.mesh_x.min(32)).unwrap_or(32);
+    let spec = ExperimentSpec { arch: arch.clone(), workload, dataflow, group };
+    let r = run_one(&spec);
+    println!("{}", spec.id());
+    if dataflow.is_flat() {
+        let t = FlatTiling::resolve(
+            &arch,
+            workload.head_dim,
+            workload.seq,
+            group,
+            dataflow == Dataflow::FlatAsyn,
+        );
+        println!(
+            "tiling: slice {}x{} per tile, block {}, T_r {}, T_c {}, {} group(s)",
+            t.slice, t.slice, t.block, t.t_r, t.t_c, t.num_groups
+        );
+    }
+    println!(
+        "runtime {:.3} ms ({} cycles), utilization {:.1}%, RedMulE-active {:.1}%, HBM {:.2} GB ({:.1}% BW), {:.0} TFLOPS",
+        r.runtime_ms,
+        r.makespan,
+        r.utilization * 100.0,
+        r.redmule_active_util * 100.0,
+        r.hbm_bytes as f64 / 1e9,
+        r.hbm_bw_util * 100.0,
+        r.tflops
+    );
+    println!("breakdown: {}", r.breakdown.to_json().to_string());
+    0
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let arch = match arch_from(args) {
+        Ok(a) => a,
+        Err(e) => return fail(&e),
+    };
+    let workload = match workload_from(args) {
+        Ok(w) => w,
+        Err(e) => return fail(&e),
+    };
+    let df_label = args.get_or("dataflow", "flatasyn");
+    let Some(dataflow) = Dataflow::from_label(df_label) else {
+        return fail(&format!("unknown dataflow '{df_label}'"));
+    };
+    if !dataflow.is_flat() {
+        return fail("sweep requires a FlatAttention dataflow");
+    }
+    let threads = args.get_usize("threads", pool::default_threads()).unwrap_or(4);
+    println!("group sweep for {} on {}:", workload.label(), arch.name);
+    for g in valid_groups(&arch) {
+        let spec = ExperimentSpec { arch: arch.clone(), workload, dataflow, group: g };
+        let r = run_one(&spec);
+        println!(
+            "  {g:>2}x{g:<2}  {:>10.3} ms  util {:>5.1}%  active {:>5.1}%  HBM {:>6.2} GB",
+            r.runtime_ms,
+            r.utilization * 100.0,
+            r.redmule_active_util * 100.0,
+            r.hbm_bytes as f64 / 1e9
+        );
+    }
+    let best = best_group(&arch, &workload, dataflow, threads);
+    println!("best: {0}x{0} ({1:.3} ms)", best.group, best.runtime_ms);
+    0
+}
+
+fn cmd_validate(args: &Args) -> i32 {
+    let s = args.get_usize("seq", 256).unwrap_or(256);
+    let d = args.get_usize("d", 64).unwrap_or(64);
+    let g = args.get_usize("group", 4).unwrap_or(4);
+    let mut rng = Rng::new(0xF1A7);
+    let q = Tensor::randn(s, d, &mut rng);
+    let k = Tensor::randn(s, d, &mut rng);
+    let v = Tensor::randn(s, d, &mut rng);
+    let golden = attention_golden(&q, &k, &v);
+
+    if !args.flag("pjrt-only") {
+        match run_flat_group_functional(&q, &k, &v, g, &NativeCompute) {
+            Ok(res) => {
+                let diff = res.output.max_abs_diff(&golden);
+                println!(
+                    "native  backend: {} block steps, max |diff| = {diff:.2e}",
+                    res.block_steps
+                );
+                if diff > 1e-3 {
+                    return fail("native functional validation FAILED");
+                }
+            }
+            Err(e) => return fail(&format!("native run failed: {e}")),
+        }
+    }
+
+    let dir = default_artifact_dir();
+    if Runtime::available(&dir) {
+        let rt = match Runtime::new(dir) {
+            Ok(rt) => rt,
+            Err(e) => return fail(&format!("runtime start failed: {e}")),
+        };
+        println!("PJRT platform: {}", rt.platform());
+        let compute = RuntimeCompute { runtime: &rt };
+        match run_flat_group_functional(&q, &k, &v, g, &compute) {
+            Ok(res) => {
+                let diff = res.output.max_abs_diff(&golden);
+                println!(
+                    "pjrt    backend: {} block steps, max |diff| = {diff:.2e}",
+                    res.block_steps
+                );
+                if diff > 5e-3 {
+                    return fail("PJRT functional validation FAILED");
+                }
+                println!("validation OK: Rust dataflow + AOT Pallas kernel reproduce attention");
+            }
+            Err(e) => {
+                return fail(&format!(
+                    "pjrt run failed (need block_step artifact r{0} c{0} d{d}): {e}",
+                    s / g
+                ))
+            }
+        }
+    } else {
+        println!(
+            "artifacts not found in {} — skipping PJRT backend (run `make artifacts`)",
+            default_artifact_dir().display()
+        );
+    }
+    0
+}
+
+fn cmd_trace(args: &Args) -> i32 {
+    let arch = match arch_from(args) {
+        Ok(a) => a,
+        Err(e) => return fail(&e),
+    };
+    let workload = match workload_from(args) {
+        Ok(w) => w,
+        Err(e) => return fail(&e),
+    };
+    let df_label = args.get_or("dataflow", "flatasyn");
+    let Some(dataflow) = Dataflow::from_label(df_label) else {
+        return fail(&format!("unknown dataflow '{df_label}'"));
+    };
+    let group = args.get_usize("group", arch.mesh_x.min(32)).unwrap_or(32);
+    let tiles = args.get_usize("tiles", 64).unwrap_or(64) as u32;
+    let out = args.get_or("out", "trace.json").to_string();
+
+    let program = flatattention::dataflow::build_program(&arch, &workload, dataflow, group);
+    let tracked = flatattention::dataflow::tracked_tile(&arch, dataflow, group);
+    let (stats, records) = flatattention::sim::execute_traced(&program, tracked, Some(tiles));
+    let json = flatattention::sim::trace::to_chrome_trace(&program, &records);
+    if let Err(e) = std::fs::write(&out, json.to_string()) {
+        return fail(&format!("writing {out}: {e}"));
+    }
+    println!(
+        "wrote {out}: {} events over {} cycles ({} tiles traced) — open in chrome://tracing or Perfetto",
+        records.len(),
+        stats.makespan,
+        tiles
+    );
+    0
+}
+
+fn cmd_info() -> i32 {
+    for arch in [presets::table1(), presets::table2(16), presets::table2(8)] {
+        println!("{}", arch.to_json().to_pretty());
+    }
+    println!(
+        "artifacts dir: {} (available: {})",
+        default_artifact_dir().display(),
+        Runtime::available(&default_artifact_dir())
+    );
+    println!("threads: {}", pool::default_threads());
+    0
+}
+
+fn fail(msg: &str) -> i32 {
+    eprintln!("error: {msg}");
+    1
+}

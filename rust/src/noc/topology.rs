@@ -1,0 +1,100 @@
+//! 2-D mesh topology helpers: coordinates, XY routing hop counts, and
+//! tile↔HBM-channel edge distances.
+
+/// Mesh topology of `x_dim × y_dim` tiles. Tile (0, 0) is the north-west
+/// corner; HBM channels sit along the west (x = 0) and south (y = y_dim-1
+/// side) edges per the paper's Fig. 1 floorplan. For distance purposes we
+/// only need per-axis hop counts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub x_dim: usize,
+    pub y_dim: usize,
+}
+
+impl Topology {
+    pub fn new(x_dim: usize, y_dim: usize) -> Self {
+        assert!(x_dim > 0 && y_dim > 0);
+        Self { x_dim, y_dim }
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.x_dim * self.y_dim
+    }
+
+    /// Flat row-major tile id.
+    pub fn id(&self, x: usize, y: usize) -> u32 {
+        debug_assert!(x < self.x_dim && y < self.y_dim);
+        (y * self.x_dim + x) as u32
+    }
+
+    /// Inverse of [`Topology::id`].
+    pub fn coords(&self, id: u32) -> (usize, usize) {
+        let id = id as usize;
+        debug_assert!(id < self.num_tiles());
+        (id % self.x_dim, id / self.x_dim)
+    }
+
+    /// XY-routing hop count between two tiles (Manhattan distance).
+    pub fn hops(&self, a: u32, b: u32) -> u64 {
+        let (ax, ay) = self.coords(a);
+        let (bx, by) = self.coords(b);
+        (ax.abs_diff(bx) + ay.abs_diff(by)) as u64
+    }
+
+    /// Hops from a tile to its west-edge HBM attachment point (row-aligned).
+    pub fn hops_to_west_edge(&self, x: usize, _y: usize) -> u64 {
+        x as u64
+    }
+
+    /// Hops from a tile to its south-edge HBM attachment point
+    /// (column-aligned).
+    pub fn hops_to_south_edge(&self, _x: usize, y: usize) -> u64 {
+        (self.y_dim - 1 - y) as u64
+    }
+
+    /// Iterate all tile coordinates row-major.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        let (xd, yd) = (self.x_dim, self.y_dim);
+        (0..yd).flat_map(move |y| (0..xd).map(move |x| (x, y)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_coords_round_trip() {
+        let t = Topology::new(32, 32);
+        for (x, y) in [(0, 0), (31, 0), (0, 31), (17, 23)] {
+            assert_eq!(t.coords(t.id(x, y)), (x, y));
+        }
+    }
+
+    #[test]
+    fn hops_manhattan() {
+        let t = Topology::new(8, 8);
+        assert_eq!(t.hops(t.id(0, 0), t.id(7, 7)), 14);
+        assert_eq!(t.hops(t.id(3, 3), t.id(3, 3)), 0);
+        assert_eq!(t.hops(t.id(1, 2), t.id(4, 2)), 3);
+    }
+
+    #[test]
+    fn edge_distances() {
+        let t = Topology::new(16, 16);
+        assert_eq!(t.hops_to_west_edge(0, 5), 0);
+        assert_eq!(t.hops_to_west_edge(15, 5), 15);
+        assert_eq!(t.hops_to_south_edge(5, 15), 0);
+        assert_eq!(t.hops_to_south_edge(5, 0), 15);
+    }
+
+    #[test]
+    fn iter_covers_all_tiles() {
+        let t = Topology::new(4, 3);
+        let v: Vec<_> = t.iter().collect();
+        assert_eq!(v.len(), 12);
+        assert_eq!(v[0], (0, 0));
+        assert_eq!(v[4], (0, 1));
+        assert_eq!(v[11], (3, 2));
+    }
+}

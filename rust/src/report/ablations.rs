@@ -1,0 +1,165 @@
+//! Ablation study over the design choices DESIGN.md calls out:
+//!
+//! * hardware fabric collectives (the paper's co-design thesis, §II/Fig. 3)
+//! * asynchronous two-head scheduling (§III-C)
+//! * K/V double buffering (Fig. 3's "*without double buffering" footnote)
+//! * the custom Spatz exponential unit (§IV)
+//! * HBM access latency (the over-flattening driver, §V-B)
+//! * NoC link width (Table I's 1024-bit choice)
+
+use crate::arch::presets;
+use crate::coordinator::ResultStore;
+use crate::dataflow::flat::flat_program_ext;
+use crate::dataflow::{run, Dataflow, Workload};
+use crate::report::{pct, ReportOpts, Table};
+use crate::sim::execute;
+use crate::util::json::Json;
+
+pub struct AblationRow {
+    pub name: String,
+    pub runtime_ms: f64,
+    pub utilization: f64,
+    pub slowdown_vs_base: f64,
+}
+
+pub fn run_ablations(opts: &ReportOpts) -> Vec<AblationRow> {
+    let arch = presets::table1();
+    let wl = if opts.quick {
+        Workload::new(2048, 128, 32, 2)
+    } else {
+        Workload::new(4096, 128, 32, 2)
+    };
+    let group = 32;
+    let tracked = crate::dataflow::tracked_tile(&arch, Dataflow::FlatAsyn, group);
+
+    let mut rows: Vec<AblationRow> = Vec::new();
+    let base = run(&arch, &wl, Dataflow::FlatAsyn, group);
+    let base_ms = base.runtime_ms(arch.freq_ghz);
+    let mut push = |name: &str, makespan: u64, flops: u64, baseline_ms: f64| {
+        let ms = makespan as f64 / (arch.freq_ghz * 1e9) * 1e3;
+        rows.push(AblationRow {
+            name: name.to_string(),
+            runtime_ms: ms,
+            utilization: flops as f64
+                / (makespan as f64 * arch.peak_flops_per_cycle() as f64),
+            slowdown_vs_base: ms / baseline_ms,
+        });
+    };
+    push(
+        "baseline (FlatAsyn g32, hw coll, db, exp unit)",
+        base.makespan,
+        base.flops,
+        base_ms,
+    );
+
+    // − asynchronous scheduling (vs the g32 baseline).
+    let sync = run(&arch, &wl, Dataflow::FlatColl, group);
+    let sync_ms = sync.runtime_ms(arch.freq_ghz);
+    push("- async two-head schedule", sync.makespan, sync.flops, base_ms);
+
+    // − hardware collectives (vs the g32 baseline).
+    let sw = run(&arch, &wl, Dataflow::Flat, group);
+    push("- hw collectives (sw unicast chains)", sw.makespan, sw.flops, base_ms);
+
+    // − custom exp unit, on the synchronous schedule where the vector path
+    //   is exposed (the async schedule fully hides it — itself a finding).
+    let mut noexp = arch.clone();
+    noexp.tile.spatz_exp_per_fpu = 0;
+    let r = run(&noexp, &wl, Dataflow::FlatColl, group);
+    push("- Spatz exp unit (sync; sw exp 16 FLOPs/elem)", r.makespan, r.flops, sync_ms);
+    let r = run(&noexp, &wl, Dataflow::FlatAsyn, group);
+    push("- Spatz exp unit (async: hidden by overlap)", r.makespan, r.flops, base_ms);
+
+    // − double buffering, at group 8 where T_c > 1 so prefetch matters
+    //   (at g32/S4096 a single K/V block spans the head — nothing to
+    //   prefetch, also a finding).
+    let g8 = 8.min(arch.mesh_x);
+    let tracked8 = crate::dataflow::tracked_tile(&arch, Dataflow::FlatColl, g8);
+    let db8 = execute(&flat_program_ext(&arch, &wl, g8, false, true), tracked8);
+    let db8_ms = db8.runtime_ms(arch.freq_ghz);
+    push("  (sync g8 with db, for reference)", db8.makespan, db8.flops, db8_ms);
+    let nodb = execute(&flat_program_ext(&arch, &wl, g8, false, false), tracked8);
+    push("- K/V double buffering (sync g8)", nodb.makespan, nodb.flops, db8_ms);
+
+    // HBM access latency sensitivity (vs the g32 baseline).
+    for lat in [100u64, 400, 800] {
+        let mut a = arch.clone();
+        a.hbm.access_latency = lat;
+        let r = run(&a, &wl, Dataflow::FlatAsyn, group);
+        push(&format!("HBM access latency {lat} cyc (base 200)"), r.makespan, r.flops, base_ms);
+    }
+
+    // NoC link width sensitivity (vs the g32 baseline).
+    for link in [64u64, 256] {
+        let mut a = arch.clone();
+        a.noc.link_bytes_per_cycle = link;
+        let r = run(&a, &wl, Dataflow::FlatAsyn, group);
+        push(&format!("NoC link {} bit (base 1024)", link * 8), r.makespan, r.flops, base_ms);
+    }
+
+    let _ = tracked;
+    rows
+}
+
+pub fn render(opts: &ReportOpts, store: Option<&mut ResultStore>) -> String {
+    let rows = run_ablations(opts);
+    if let Some(store) = store {
+        store.add_json(
+            "ablations",
+            rows.iter()
+                .map(|r| {
+                    Json::obj([
+                        ("name", Json::str(r.name.clone())),
+                        ("runtime_ms", Json::num(r.runtime_ms)),
+                        ("utilization", Json::num(r.utilization)),
+                        ("slowdown", Json::num(r.slowdown_vs_base)),
+                    ])
+                })
+                .collect(),
+        );
+    }
+    let mut out = String::new();
+    out.push_str("Ablations — FlatAttention design choices (Table I arch, G=32x32, D=128)\n\n");
+    let mut t = Table::new(&["configuration", "runtime_ms", "util", "vs baseline"]);
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            format!("{:.3}", r.runtime_ms),
+            pct(r.utilization),
+            format!("{:.2}x", r.slowdown_vs_base),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablations_ordered_sensibly() {
+        let opts = ReportOpts { quick: true, ..Default::default() };
+        let rows = run_ablations(&opts);
+        assert!(rows.len() >= 9);
+        let base = &rows[0];
+        assert!((base.slowdown_vs_base - 1.0).abs() < 1e-9);
+        // Removing any co-designed feature must not speed things up.
+        for r in &rows[1..5] {
+            assert!(
+                r.slowdown_vs_base >= 0.99,
+                "{}: {:.2}x should be >= 1x",
+                r.name,
+                r.slowdown_vs_base
+            );
+        }
+        // Software collectives are the worst ablation (the paper's thesis).
+        let sw = rows.iter().find(|r| r.name.contains("hw collectives")).unwrap();
+        let others: f64 = rows[1..]
+            .iter()
+            .filter(|r| !r.name.contains("hw collectives"))
+            .map(|r| r.slowdown_vs_base)
+            .fold(0.0, f64::max);
+        assert!(sw.slowdown_vs_base >= others, "sw collectives should dominate ablation cost");
+    }
+}

@@ -1,0 +1,146 @@
+//! Fig. 4: runtime breakdown vs (square) group scale, with per-tile slice
+//! sizes and RedMulE active-utilization labels.
+//!
+//! Paper setup: Table I architecture, FlatAsyn dataflow,
+//! G ∈ {4, 8, 16, 32}², S ∈ {512, 1024, 2048, 4096}, D = 128, H = 32, B = 4.
+
+use crate::arch::presets;
+use crate::coordinator::{run_all, ExperimentResult, ExperimentSpec, ResultStore};
+use crate::dataflow::{Dataflow, FlatTiling, Workload};
+use crate::report::{pct, ReportOpts, Table};
+use crate::util::json::Json;
+
+pub const GROUPS: [usize; 4] = [4, 8, 16, 32];
+
+pub fn workloads(quick: bool) -> Vec<Workload> {
+    let seqs: &[u64] = if quick { &[512, 4096] } else { &[512, 1024, 2048, 4096] };
+    seqs.iter().map(|&s| Workload::new(s, 128, 32, 4)).collect()
+}
+
+pub fn run(opts: &ReportOpts) -> Vec<(usize, ExperimentResult)> {
+    let arch = presets::table1();
+    let specs: Vec<ExperimentSpec> = workloads(opts.quick)
+        .into_iter()
+        .flat_map(|wl| GROUPS.into_iter().map(move |g| (wl, g)))
+        .map(|(workload, group)| ExperimentSpec {
+            arch: arch.clone(),
+            workload,
+            dataflow: Dataflow::FlatAsyn,
+            group,
+        })
+        .collect();
+    specs
+        .iter()
+        .map(|s| s.group)
+        .zip(run_all(&specs, opts.threads))
+        .collect()
+}
+
+pub fn render(opts: &ReportOpts, store: Option<&mut ResultStore>) -> String {
+    let arch = presets::table1();
+    let results = run(opts);
+    if let Some(store) = store {
+        let rows = results
+            .iter()
+            .map(|(g, r)| {
+                let mut j = r.to_json();
+                if let Json::Obj(map) = &mut j {
+                    map.insert("group".into(), Json::num(*g as f64));
+                }
+                j
+            })
+            .collect();
+        store.add_json("fig4", rows);
+    }
+
+    let mut out = String::new();
+    out.push_str(
+        "Fig. 4 — FlatAsyn runtime breakdown vs group scale (Table I arch, D=128, H=32, B=4)\n\n",
+    );
+    let mut t = Table::new(&[
+        "S", "group", "slice/tile", "runtime_ms", "RedMulE%", "Spatz%", "Coll%", "HBM%", "Other%",
+        "util", "RedMulE_active",
+    ]);
+    for (g, r) in &results {
+        let tiling = FlatTiling::resolve(&arch, r.workload.head_dim, r.workload.seq, *g, true);
+        let total = r.makespan.max(1) as f64;
+        let coll = (r.breakdown.multicast + r.breakdown.max_reduce + r.breakdown.sum_reduce) as f64;
+        t.row(vec![
+            r.workload.seq.to_string(),
+            format!("{g}x{g}"),
+            tiling.slice.to_string(),
+            format!("{:.3}", r.runtime_ms),
+            format!("{:.1}", r.breakdown.redmule as f64 / total * 100.0),
+            format!("{:.1}", r.breakdown.spatz as f64 / total * 100.0),
+            format!("{:.1}", coll / total * 100.0),
+            format!("{:.1}", r.breakdown.hbm as f64 / total * 100.0),
+            format!("{:.1}", r.breakdown.other as f64 / total * 100.0),
+            pct(r.utilization),
+            pct(r.redmule_active_util),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    // Per-S optimum (the §V-B trade-off).
+    out.push('\n');
+    for wl in workloads(opts.quick) {
+        if let Some((g, r)) = results
+            .iter()
+            .filter(|(_, r)| r.workload.seq == wl.seq)
+            .min_by_key(|(_, r)| r.makespan)
+        {
+            out.push_str(&format!(
+                "S={}: optimal group {g}x{g} (util {}, runtime {:.3} ms)\n",
+                wl.seq,
+                pct(r.utilization),
+                r.runtime_ms
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn over_flattening_trend() {
+        // At S=512 the optimum group is small; at S=4096 it is large.
+        let opts = ReportOpts { quick: true, ..Default::default() };
+        let results = run(&opts);
+        let best = |seq: u64| {
+            results
+                .iter()
+                .filter(|(_, r)| r.workload.seq == seq)
+                .min_by_key(|(_, r)| r.makespan)
+                .map(|(g, _)| *g)
+                .unwrap()
+        };
+        assert!(best(512) <= 8, "S=512 best group {}", best(512));
+        assert!(best(4096) >= 16, "S=4096 best group {}", best(4096));
+    }
+
+    #[test]
+    fn active_util_drops_with_over_flattening() {
+        // Paper: 32×32 at S=512 → ~23% active RedMulE utilization.
+        let opts = ReportOpts { quick: true, ..Default::default() };
+        let results = run(&opts);
+        let r512_g32 = results
+            .iter()
+            .find(|(g, r)| *g == 32 && r.workload.seq == 512)
+            .map(|(_, r)| r)
+            .unwrap();
+        assert!(
+            (0.15..0.35).contains(&r512_g32.redmule_active_util),
+            "active util {} (paper ~0.23)",
+            r512_g32.redmule_active_util
+        );
+        let r4096_g32 = results
+            .iter()
+            .find(|(g, r)| *g == 32 && r.workload.seq == 4096)
+            .map(|(_, r)| r)
+            .unwrap();
+        assert!(r4096_g32.redmule_active_util > 0.8);
+    }
+}

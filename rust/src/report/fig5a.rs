@@ -1,0 +1,175 @@
+//! Fig. 5a: architecture co-exploration heatmap — utilization (with the
+//! best dataflow/group per cell) across fabric granularity × HBM channel
+//! connectivity, at iso-peak performance (Table II).
+
+use crate::arch::{presets, ArchConfig};
+use crate::coordinator::{best_group, run_one, ExperimentSpec, ResultStore};
+use crate::dataflow::{Dataflow, Workload};
+use crate::report::{pct, ReportOpts, Table};
+use crate::util::json::Json;
+
+pub const GRANULARITIES: [usize; 3] = [32, 16, 8];
+pub const CHANNELS_PER_EDGE: [usize; 3] = [4, 8, 16];
+
+/// Evaluation workloads for the heatmap (paper: "multiple MHA layers").
+pub fn workloads(quick: bool) -> Vec<Workload> {
+    if quick {
+        vec![Workload::new(4096, 128, 32, 2)]
+    } else {
+        vec![
+            Workload::new(1024, 128, 32, 2),
+            Workload::new(4096, 128, 32, 2),
+            Workload::new(4096, 64, 32, 2),
+        ]
+    }
+}
+
+/// One heatmap cell: the best achievable utilization over dataflows
+/// (FA-3 and FlatAsyn with group search), averaged over the workloads.
+pub struct Cell {
+    pub arch: ArchConfig,
+    pub utilization: f64,
+    pub best_dataflow: String,
+    pub best_group: usize,
+}
+
+pub fn evaluate_cell(arch: &ArchConfig, wls: &[Workload], threads: usize) -> Cell {
+    let mut util_sum = 0.0;
+    let mut best_label = String::new();
+    let mut best_grp = 0usize;
+    for wl in wls {
+        let flat = best_group(arch, wl, Dataflow::FlatAsyn, threads);
+        let fa3 = run_one(&ExperimentSpec {
+            arch: arch.clone(),
+            workload: *wl,
+            dataflow: Dataflow::Flash3,
+            group: 1,
+        });
+        if flat.makespan <= fa3.makespan {
+            util_sum += flat.utilization;
+            best_label = "FlatAsyn".into();
+            best_grp = flat.group;
+        } else {
+            util_sum += fa3.utilization;
+            best_label = "FA-3".into();
+        }
+    }
+    Cell {
+        arch: arch.clone(),
+        utilization: util_sum / wls.len() as f64,
+        best_dataflow: best_label,
+        best_group: best_grp,
+    }
+}
+
+pub fn run(opts: &ReportOpts) -> Vec<Cell> {
+    let wls = workloads(opts.quick);
+    let cells: Vec<ArchConfig> = GRANULARITIES
+        .iter()
+        .flat_map(|&g| {
+            CHANNELS_PER_EDGE
+                .iter()
+                .map(move |&c| presets::with_hbm_channels(presets::table2(g), c))
+        })
+        .collect();
+    // Parallelism lives inside best_group; evaluate cells sequentially to
+    // bound peak memory (each cell runs up to ~10 simulations).
+    cells
+        .iter()
+        .map(|a| evaluate_cell(a, &wls, opts.threads))
+        .collect()
+}
+
+pub fn render(opts: &ReportOpts, store: Option<&mut ResultStore>) -> String {
+    let cells = run(opts);
+    if let Some(store) = store {
+        let rows = cells
+            .iter()
+            .map(|c| {
+                Json::obj([
+                    ("arch", Json::str(c.arch.name.clone())),
+                    ("mesh", Json::num(c.arch.mesh_x as f64)),
+                    ("hbm_channels", Json::num(c.arch.hbm.total_channels() as f64)),
+                    ("utilization", Json::num(c.utilization)),
+                    ("best_dataflow", Json::str(c.best_dataflow.clone())),
+                    ("best_group", Json::num(c.best_group as f64)),
+                ])
+            })
+            .collect();
+        store.add_json("fig5a", rows);
+    }
+
+    let mut out = String::new();
+    out.push_str("Fig. 5a — Co-exploration heatmap: avg utilization with best dataflow/group\n");
+    out.push_str("(iso 1024-TFLOPS Table II tiles; HBM channels per edge x2 edges)\n\n");
+    let mut t = Table::new(&["fabric \\ HBM", "4x2 ch", "8x2 ch", "16x2 ch"]);
+    for &g in &GRANULARITIES {
+        let mut row = vec![format!("{g}x{g}")];
+        for &c in &CHANNELS_PER_EDGE {
+            let cell = cells
+                .iter()
+                .find(|cell| cell.arch.mesh_x == g && cell.arch.hbm.channels_west == c.min(g))
+                .unwrap();
+            row.push(format!(
+                "{} ({} g{})",
+                pct(cell.utilization),
+                cell.best_dataflow,
+                cell.best_group
+            ));
+        }
+        t.row(row);
+    }
+    out.push_str(&t.render());
+
+    if let Some(best) = cells.iter().max_by(|a, b| {
+        a.utilization
+            .partial_cmp(&b.utilization)
+            .unwrap()
+    }) {
+        out.push_str(&format!(
+            "\nBestArch: {} — avg utilization {}, peak {} TFLOPS, HBM {} GB/s\n",
+            best.arch.name,
+            pct(best.utilization),
+            best.arch.peak_tflops().round(),
+            best.arch.hbm.peak_gbps(best.arch.freq_ghz).round(),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool;
+
+    #[test]
+    fn heatmap_has_nine_cells() {
+        let opts = ReportOpts { quick: true, threads: pool::default_threads() };
+        let cells = run(&opts);
+        assert_eq!(cells.len(), 9);
+        for c in &cells {
+            assert!(c.utilization > 0.0 && c.utilization <= 1.0);
+        }
+    }
+
+    #[test]
+    fn more_channels_never_hurt_utilization_much() {
+        // Adding HBM channels at fixed granularity should not reduce
+        // performance (FIFO channels only get less contended).
+        let opts = ReportOpts { quick: true, threads: pool::default_threads() };
+        let cells = run(&opts);
+        for &g in &GRANULARITIES {
+            let u: Vec<f64> = CHANNELS_PER_EDGE
+                .iter()
+                .map(|&c| {
+                    cells
+                        .iter()
+                        .find(|cell| cell.arch.mesh_x == g && cell.arch.hbm.channels_west == c.min(g))
+                        .unwrap()
+                        .utilization
+                })
+                .collect();
+            assert!(u[2] + 0.02 >= u[0], "granularity {g}: {u:?}");
+        }
+    }
+}

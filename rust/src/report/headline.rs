@@ -1,0 +1,84 @@
+//! Headline-claims summary: every number from the abstract, measured.
+
+use crate::arch::area::{AreaModel, H100_DIE_MM2};
+use crate::arch::presets;
+use crate::analytics::h100::H100_HBM_GBPS;
+use crate::coordinator::{run_all, ExperimentSpec, ResultStore};
+use crate::dataflow::{Dataflow, Workload};
+use crate::report::{pct, ReportOpts, Table};
+use crate::util::json::Json;
+
+pub fn render(opts: &ReportOpts, store: Option<&mut ResultStore>) -> String {
+    let arch = presets::table1();
+    // The abstract's strongest point: D=128, S=4096.
+    let wl = Workload::new(4096, 128, 32, 2);
+    let specs: Vec<ExperimentSpec> = [Dataflow::Flash3, Dataflow::FlatAsyn]
+        .into_iter()
+        .map(|df| ExperimentSpec { arch: arch.clone(), workload: wl, dataflow: df, group: 32 })
+        .collect();
+    let results = run_all(&specs, opts.threads);
+    let (fa3, flat) = (&results[0], &results[1]);
+
+    let speedup = fa3.makespan as f64 / flat.makespan as f64;
+    let traffic = fa3.hbm_bytes as f64 / flat.hbm_bytes as f64;
+    let area = AreaModel::default().estimate(&arch);
+    let bw_red = 1.0 - arch.hbm.peak_gbps(arch.freq_ghz) / H100_HBM_GBPS;
+
+    if let Some(store) = store {
+        store.add_json(
+            "headline",
+            vec![Json::obj([
+                ("utilization", Json::num(flat.utilization)),
+                ("speedup_vs_fa3", Json::num(speedup)),
+                ("hbm_traffic_reduction", Json::num(traffic)),
+                ("die_mm2", Json::num(area.total_mm2)),
+                ("die_reduction_vs_h100", Json::num(H100_DIE_MM2 / area.total_mm2)),
+                ("hbm_bw_reduction_vs_h100", Json::num(bw_red)),
+            ])],
+        );
+    }
+
+    let mut out = String::new();
+    out.push_str("Headline claims (abstract) vs measured — D=128, S=4096, H=32, B=2, Table I arch\n\n");
+    let mut t = Table::new(&["claim", "paper", "measured"]);
+    t.row(vec![
+        "FlatAttention utilization (up to)".into(),
+        "89.3%".into(),
+        pct(flat.utilization),
+    ]);
+    t.row(vec![
+        "Speedup over FA-3 dataflow (up to)".into(),
+        "4.1x".into(),
+        format!("{speedup:.1}x"),
+    ]);
+    t.row(vec![
+        "HBM traffic reduction (up to)".into(),
+        "16x".into(),
+        format!("{traffic:.1}x"),
+    ]);
+    t.row(vec![
+        "HBM BW requirement vs H100".into(),
+        "-40%".into(),
+        format!("{:.0}%", -bw_red * 100.0),
+    ]);
+    t.row(vec![
+        "Die size (TSMC 5nm)".into(),
+        "457 mm2 (1.8x < H100)".into(),
+        format!("{:.0} mm2 ({:.1}x)", area.total_mm2, H100_DIE_MM2 / area.total_mm2),
+    ]);
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_report_renders() {
+        let opts = ReportOpts::default();
+        let s = render(&opts, None);
+        assert!(s.contains("89.3%"));
+        assert!(s.contains("16x"));
+    }
+}

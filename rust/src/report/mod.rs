@@ -1,0 +1,47 @@
+//! Report renderers — one per paper table/figure (DESIGN.md §5).
+//!
+//! Every renderer re-runs the relevant simulations (or evaluates the
+//! relevant model) and prints the same rows/series the paper reports, as
+//! ASCII tables, optionally persisting machine-readable rows into a
+//! [`crate::coordinator::ResultStore`].
+
+pub mod ablations;
+pub mod ascii;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5a;
+pub mod fig5b;
+pub mod fig5c;
+pub mod headline;
+pub mod section2;
+pub mod tables;
+
+pub use ascii::Table;
+
+/// Common options for report generation.
+#[derive(Debug, Clone)]
+pub struct ReportOpts {
+    /// Worker threads for the simulation fan-out.
+    pub threads: usize,
+    /// Reduced workload set (CI-sized).
+    pub quick: bool,
+}
+
+impl Default for ReportOpts {
+    fn default() -> Self {
+        Self {
+            threads: crate::util::pool::default_threads(),
+            quick: false,
+        }
+    }
+}
+
+/// Format a fraction as a percentage with one decimal.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+/// Format a ratio like `4.1x`.
+pub fn ratio(x: f64) -> String {
+    format!("{x:.1}x")
+}

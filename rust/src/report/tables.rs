@@ -1,0 +1,98 @@
+//! Table I (system configuration) and Table II (fabric granularity vs
+//! tile specifications) renderers.
+
+use crate::arch::presets;
+use crate::report::Table;
+
+pub fn render_table1() -> String {
+    let a = presets::table1();
+    let mut out = String::new();
+    out.push_str("Table I — Architecture configuration of the tile-based many-PE accelerator\n\n");
+    let mut t = Table::new(&["component", "specification"]);
+    t.row(vec![
+        "System".into(),
+        format!("{}x{} tiles, {}-bit NoC link width", a.mesh_x, a.mesh_y, a.noc.link_bytes_per_cycle * 8),
+    ]);
+    t.row(vec![
+        "HBM".into(),
+        format!(
+            "{}x2 channels ({} GB/s each), west + south edges",
+            a.hbm.channels_west,
+            a.hbm.channel_bytes_per_cycle
+        ),
+    ]);
+    t.row(vec![
+        "Matrix engine".into(),
+        format!(
+            "RedMulE {}x{} CE array, {:.0} GFLOPS @ FP16",
+            a.tile.redmule_rows,
+            a.tile.redmule_cols,
+            a.tile.redmule_flops_per_cycle() as f64 * a.freq_ghz
+        ),
+    ]);
+    t.row(vec![
+        "Vector engine".into(),
+        format!(
+            "Spatz {} FPU, {:.0} GFLOPS @ FP16",
+            a.tile.spatz_fpus,
+            a.tile.spatz_flops_per_cycle() as f64 * a.freq_ghz
+        ),
+    ]);
+    t.row(vec![
+        "Local memory".into(),
+        format!("{} KB, {} GB/s", a.tile.l1_kib, a.tile.l1_bytes_per_cycle),
+    ]);
+    t.row(vec![
+        "Summary".into(),
+        format!(
+            "{:.0} TFLOPS peak, {:.0} TB/s peak HBM bandwidth",
+            a.peak_tflops(),
+            a.hbm.peak_gbps(a.freq_ghz) / 1000.0
+        ),
+    ]);
+    out.push_str(&t.render());
+    out
+}
+
+pub fn render_table2() -> String {
+    let mut out = String::new();
+    out.push_str("Table II — Fabric granularity and tile specifications (iso 1024 TFLOPS, iso on-chip memory)\n\n");
+    let mut t = Table::new(&[
+        "fabric granularity", "RedMulE CE", "Spatz FU", "L1 (KiB)", "L1 BW (GB/s)", "peak TFLOPS",
+    ]);
+    for g in [32usize, 16, 8] {
+        let a = presets::table2(g);
+        t.row(vec![
+            format!("{g}x{g}"),
+            format!("{}x{}", a.tile.redmule_rows, a.tile.redmule_cols),
+            a.tile.spatz_fpus.to_string(),
+            a.tile.l1_kib.to_string(),
+            a.tile.l1_bytes_per_cycle.to_string(),
+            format!("{:.0}", a.peak_tflops()),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_mentions_paper_numbers() {
+        let s = render_table1();
+        assert!(s.contains("32x32 tiles"));
+        assert!(s.contains("1024-bit"));
+        assert!(s.contains("16x2 channels"));
+        assert!(s.contains("1049 TFLOPS") || s.contains("1048 TFLOPS"));
+    }
+
+    #[test]
+    fn table2_rows_match_presets() {
+        let s = render_table2();
+        assert!(s.contains("128x64"));
+        assert!(s.contains("6144"));
+        assert!(s.contains("8192"));
+    }
+}

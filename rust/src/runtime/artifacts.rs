@@ -1,0 +1,97 @@
+//! Artifact discovery: the manifest written by `python/compile/aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Naming convention shared with `aot.py`.
+pub fn block_step_artifact_name(br: u64, bc: u64, d: u64) -> String {
+    format!("block_step_r{br}_c{bc}_d{d}.hlo.txt")
+}
+
+/// Naming convention shared with `aot.py`.
+pub fn mha_artifact_name(b: u64, h: u64, s: u64, d: u64) -> String {
+    format!("mha_b{b}_h{h}_s{s}_d{d}.hlo.txt")
+}
+
+/// Default artifact directory: `$FLATATTN_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("FLATATTN_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    /// Available `(br, bc, d)` block-step shapes.
+    pub block_step: Vec<(u64, u64, u64)>,
+    /// Available `(b, h, s, d)` full-MHA shapes.
+    pub mha: Vec<(u64, u64, u64, u64)>,
+}
+
+impl Manifest {
+    /// Load from `dir/manifest.json`. Returns `None` if absent or invalid
+    /// (callers fall back to the native compute path).
+    pub fn load(dir: &Path) -> Option<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).ok()?;
+        let json = Json::parse(&text).ok()?;
+        let mut m = Manifest::default();
+        if let Some(list) = json.get("block_step").and_then(|v| v.as_arr()) {
+            for e in list {
+                let get = |k: &str| e.get(k).and_then(|v| v.as_f64()).map(|v| v as u64);
+                if let (Some(br), Some(bc), Some(d)) = (get("br"), get("bc"), get("d")) {
+                    m.block_step.push((br, bc, d));
+                }
+            }
+        }
+        if let Some(list) = json.get("mha").and_then(|v| v.as_arr()) {
+            for e in list {
+                let get = |k: &str| e.get(k).and_then(|v| v.as_f64()).map(|v| v as u64);
+                if let (Some(b), Some(h), Some(s), Some(d)) = (get("b"), get("h"), get("s"), get("d"))
+                {
+                    m.mha.push((b, h, s, d));
+                }
+            }
+        }
+        Some(m)
+    }
+
+    /// Does a block-step artifact exist for this shape?
+    pub fn has_block_step(&self, br: u64, bc: u64, d: u64) -> bool {
+        self.block_step.contains(&(br, bc, d))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_match_aot_convention() {
+        assert_eq!(block_step_artifact_name(64, 64, 128), "block_step_r64_c64_d128.hlo.txt");
+        assert_eq!(mha_artifact_name(1, 4, 256, 64), "mha_b1_h4_s256_d64.hlo.txt");
+    }
+
+    #[test]
+    fn manifest_parses_generated_format() {
+        let dir = std::env::temp_dir().join(format!("fa-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"block_step": [{"br": 16, "bc": 16, "d": 128, "file": "x"}],
+                "mha": [{"b": 1, "h": 4, "s": 256, "d": 64, "file": "y"}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.has_block_step(16, 16, 128));
+        assert!(!m.has_block_step(16, 16, 64));
+        assert_eq!(m.mha, vec![(1, 4, 256, 64)]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_none() {
+        assert!(Manifest::load(Path::new("/nonexistent-dir-xyz")).is_none());
+    }
+}

@@ -1,0 +1,167 @@
+//! PJRT client wrapper: compile-once executable cache + typed entry points.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Tensor;
+
+use super::artifacts::{block_step_artifact_name, mha_artifact_name, Manifest};
+
+/// The runtime: a PJRT CPU client plus a cache of compiled executables.
+///
+/// Executables are compiled lazily on first use and reused for every
+/// subsequent invocation of the same artifact (one compiled executable per
+/// model variant, as in a serving deployment).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory. Fails if the PJRT
+    /// client cannot start or the manifest is missing.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)
+            .ok_or_else(|| anyhow!("no manifest.json in {} — run `make artifacts`", dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("starting PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// True if an artifact directory looks usable.
+    pub fn available(dir: &std::path::Path) -> bool {
+        Manifest::load(dir).is_some()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(name);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of executables compiled so far (for tests/metrics).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Execute the FlatAttention per-tile block step
+    /// (q [Br,D], kt [D,Bc], v [Bc,D], m/l [Br], o [Br,D])
+    /// → (m', l', o'). Requires a matching artifact shape.
+    pub fn block_step(
+        &self,
+        q: &Tensor,
+        kt: &Tensor,
+        v: &Tensor,
+        m: &[f32],
+        l: &[f32],
+        o: &Tensor,
+    ) -> Result<(Vec<f32>, Vec<f32>, Tensor)> {
+        let (br, d) = (q.rows() as u64, q.cols() as u64);
+        let bc = v.rows() as u64;
+        if !self.manifest.has_block_step(br, bc, d) {
+            bail!("no block_step artifact for shape r{br} c{bc} d{d} (run aot.py with this shape)");
+        }
+        let exe = self.executable(&block_step_artifact_name(br, bc, d))?;
+
+        let lit2 = |t: &Tensor| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(t.data()).reshape(&[t.rows() as i64, t.cols() as i64])?)
+        };
+        let args = [
+            lit2(q)?,
+            lit2(kt)?,
+            lit2(v)?,
+            xla::Literal::vec1(m),
+            xla::Literal::vec1(l),
+            lit2(o)?,
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (m_out, l_out, o_out) = result.to_tuple3()?;
+        let o_vec = o_out.to_vec::<f32>()?;
+        Ok((
+            m_out.to_vec::<f32>()?,
+            l_out.to_vec::<f32>()?,
+            Tensor::from_vec(br as usize, d as usize, o_vec),
+        ))
+    }
+
+    /// Execute a full MHA forward artifact. Inputs are flattened
+    /// `[B, H, S, D]` f32 buffers; returns the flattened output.
+    pub fn mha(
+        &self,
+        b: u64,
+        h: u64,
+        s: u64,
+        d: u64,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<Vec<f32>> {
+        let n = (b * h * s * d) as usize;
+        if q.len() != n || k.len() != n || v.len() != n {
+            bail!("mha input length mismatch: want {n}, got {}/{}/{}", q.len(), k.len(), v.len());
+        }
+        if !self.manifest.mha.contains(&(b, h, s, d)) {
+            bail!("no mha artifact for b{b} h{h} s{s} d{d}");
+        }
+        let exe = self.executable(&mha_artifact_name(b, h, s, d))?;
+        let dims = [b as i64, h as i64, s as i64, d as i64];
+        let args = [
+            xla::Literal::vec1(q).reshape(&dims)?,
+            xla::Literal::vec1(k).reshape(&dims)?,
+            xla::Literal::vec1(v).reshape(&dims)?,
+        ];
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed tests live in rust/tests/runtime_integration.rs (they
+    // need `make artifacts` to have run); here we only test the pure
+    // plumbing that doesn't need a client.
+    use super::super::artifacts::default_artifact_dir;
+
+    #[test]
+    fn default_dir_env_override() {
+        // Uses a uniquely-named var interaction — set and restore.
+        std::env::set_var("FLATATTN_ARTIFACTS", "/tmp/some-artifacts");
+        assert_eq!(default_artifact_dir(), std::path::PathBuf::from("/tmp/some-artifacts"));
+        std::env::remove_var("FLATATTN_ARTIFACTS");
+        assert_eq!(default_artifact_dir(), std::path::PathBuf::from("artifacts"));
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place the stack touches XLA at run time. Artifacts are
+//! produced once by `python/compile/aot.py` (`make artifacts`); the Rust
+//! side loads the HLO text (`HloModuleProto::from_text_file` — the id-safe
+//! interchange, see DESIGN.md §3), compiles each module once on the PJRT
+//! CPU client, caches the executable, and feeds it `f32` literals. Python
+//! is never on this path.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{block_step_artifact_name, default_artifact_dir, mha_artifact_name, Manifest};
+pub use client::Runtime;

@@ -1,0 +1,314 @@
+//! Runtime-breakdown accounting matching the paper's Fig. 3/4 semantics.
+//!
+//! The paper's bars decompose the makespan of a *representative tile* into
+//! components with an explicit overlap priority (footnotes: "⁺Runtime not
+//! overlapped with RedMulE. ⁺⁺Runtime not overlapped with either Spatz or
+//! RedMulE"). We reproduce that with interval coverage: each component's
+//! reported time is the part of its busy intervals not covered by any
+//! higher-priority component, and `Other` is the uncovered remainder of the
+//! makespan (synchronization, dependency stalls, scheduling overhead).
+
+use super::Cycle;
+use crate::util::json::Json;
+
+/// Accounting category of an op. Order here defines the overlap priority
+/// used in [`Breakdown::from_intervals`] (earlier = higher priority).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Component {
+    /// Matrix-engine (RedMulE) execution.
+    RedMule,
+    /// Vector-engine (Spatz) execution: scaling, rowmax/rowsum, exp, rescale.
+    Spatz,
+    /// NoC sum-reduction collectives (softmax denominator, O-slice reduce).
+    SumReduce,
+    /// NoC max-reduction collectives (softmax row maxima).
+    MaxReduce,
+    /// NoC multicast collectives (Q row-wise, K/V column-wise, stats).
+    Multicast,
+    /// HBM loads/stores (DMA transfers to/from main memory).
+    HbmAccess,
+    /// Synchronization, scheduling and other non-attributed time.
+    Other,
+}
+
+pub const ALL_COMPONENTS: [Component; 7] = [
+    Component::RedMule,
+    Component::Spatz,
+    Component::SumReduce,
+    Component::MaxReduce,
+    Component::Multicast,
+    Component::HbmAccess,
+    Component::Other,
+];
+
+impl Component {
+    pub fn label(self) -> &'static str {
+        match self {
+            Component::RedMule => "RedMulE",
+            Component::Spatz => "Spatz",
+            Component::SumReduce => "SumReduce",
+            Component::MaxReduce => "MaxReduce",
+            Component::Multicast => "Multicast",
+            Component::HbmAccess => "HBM",
+            Component::Other => "Other",
+        }
+    }
+}
+
+/// Per-component exclusive time (cycles) on the tracked tile.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Breakdown {
+    pub redmule: Cycle,
+    pub spatz: Cycle,
+    pub sum_reduce: Cycle,
+    pub max_reduce: Cycle,
+    pub multicast: Cycle,
+    pub hbm: Cycle,
+    pub other: Cycle,
+}
+
+impl Breakdown {
+    pub fn get(&self, c: Component) -> Cycle {
+        match c {
+            Component::RedMule => self.redmule,
+            Component::Spatz => self.spatz,
+            Component::SumReduce => self.sum_reduce,
+            Component::MaxReduce => self.max_reduce,
+            Component::Multicast => self.multicast,
+            Component::HbmAccess => self.hbm,
+            Component::Other => self.other,
+        }
+    }
+
+    fn set(&mut self, c: Component, v: Cycle) {
+        match c {
+            Component::RedMule => self.redmule = v,
+            Component::Spatz => self.spatz = v,
+            Component::SumReduce => self.sum_reduce = v,
+            Component::MaxReduce => self.max_reduce = v,
+            Component::Multicast => self.multicast = v,
+            Component::HbmAccess => self.hbm = v,
+            Component::Other => self.other = v,
+        }
+    }
+
+    pub fn total(&self) -> Cycle {
+        ALL_COMPONENTS.iter().map(|&c| self.get(c)).sum()
+    }
+
+    /// Compute the priority-ordered exclusive coverage from raw busy
+    /// intervals `(component, start, end)` over `[0, makespan)`.
+    ///
+    /// For each component in priority order, its reported time is the
+    /// measure of its intervals minus everything already claimed by
+    /// higher-priority components; `Other` absorbs the uncovered rest of
+    /// the makespan.
+    pub fn from_intervals(intervals: &[(Component, Cycle, Cycle)], makespan: Cycle) -> Breakdown {
+        let mut bd = Breakdown::default();
+        // Claimed regions so far, kept sorted & disjoint.
+        let mut claimed: Vec<(Cycle, Cycle)> = Vec::new();
+        for &comp in ALL_COMPONENTS.iter() {
+            if comp == Component::Other {
+                continue;
+            }
+            let mut mine: Vec<(Cycle, Cycle)> = intervals
+                .iter()
+                .filter(|(c, s, e)| *c == comp && e > s)
+                .map(|&(_, s, e)| (s, e))
+                .collect();
+            if mine.is_empty() {
+                continue;
+            }
+            mine.sort_unstable();
+            let mine = merge(&mine);
+            let exclusive = subtract_measure(&mine, &claimed);
+            bd.set(comp, exclusive);
+            claimed = union(&claimed, &mine);
+        }
+        let covered: Cycle = claimed.iter().map(|(s, e)| e - s).sum();
+        bd.other = makespan.saturating_sub(covered);
+        bd
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(ALL_COMPONENTS.map(|c| (c.label(), Json::num(self.get(c) as f64))))
+    }
+}
+
+/// Merge sorted intervals into a disjoint sorted set.
+fn merge(sorted: &[(Cycle, Cycle)]) -> Vec<(Cycle, Cycle)> {
+    let mut out: Vec<(Cycle, Cycle)> = Vec::with_capacity(sorted.len());
+    for &(s, e) in sorted {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+/// Union of two disjoint-sorted interval sets.
+fn union(a: &[(Cycle, Cycle)], b: &[(Cycle, Cycle)]) -> Vec<(Cycle, Cycle)> {
+    let mut all: Vec<(Cycle, Cycle)> = a.iter().chain(b.iter()).copied().collect();
+    all.sort_unstable();
+    merge(&all)
+}
+
+/// Total measure of `a` minus (the measure of `a` intersected with `b`),
+/// where both are disjoint-sorted.
+fn subtract_measure(a: &[(Cycle, Cycle)], b: &[(Cycle, Cycle)]) -> Cycle {
+    let mut total: Cycle = a.iter().map(|(s, e)| e - s).sum();
+    let mut bi = 0;
+    for &(s, e) in a {
+        while bi < b.len() && b[bi].1 <= s {
+            bi += 1;
+        }
+        let mut j = bi;
+        while j < b.len() && b[j].0 < e {
+            let os = b[j].0.max(s);
+            let oe = b[j].1.min(e);
+            total -= oe - os;
+            j += 1;
+        }
+    }
+    total
+}
+
+/// Full result of one simulated experiment run.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    /// End-to-end runtime in cycles.
+    pub makespan: Cycle,
+    /// Breakdown on the tracked (critical) tile.
+    pub breakdown: Breakdown,
+    /// Total bytes moved to/from HBM.
+    pub hbm_bytes: u64,
+    /// Useful FLOPs of the workload (from the program).
+    pub flops: u64,
+    /// Sum of RedMulE busy cycles over all tiles.
+    pub redmule_busy_total: Cycle,
+    /// Sum of Spatz busy cycles over all tiles.
+    pub spatz_busy_total: Cycle,
+    /// Number of ops executed.
+    pub ops_executed: usize,
+}
+
+impl RunStats {
+    /// System-level compute utilization: FLOPs / (makespan × peak).
+    /// `peak_flops_per_cycle` is the whole-system peak (all tiles).
+    pub fn compute_utilization(&self, peak_flops_per_cycle: u64) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.flops as f64 / (self.makespan as f64 * peak_flops_per_cycle as f64)
+    }
+
+    /// RedMulE utilization *when active* (Fig. 4 percentage labels):
+    /// FLOPs / (total RedMulE busy cycles × per-tile peak).
+    pub fn redmule_active_utilization(&self, tile_peak_flops_per_cycle: u64) -> f64 {
+        if self.redmule_busy_total == 0 {
+            return 0.0;
+        }
+        self.flops as f64 / (self.redmule_busy_total as f64 * tile_peak_flops_per_cycle as f64)
+    }
+
+    /// Average HBM bandwidth utilization over the run.
+    pub fn hbm_bw_utilization(&self, peak_bytes_per_cycle: u64) -> f64 {
+        if self.makespan == 0 {
+            return 0.0;
+        }
+        self.hbm_bytes as f64 / (self.makespan as f64 * peak_bytes_per_cycle as f64)
+    }
+
+    /// Runtime in milliseconds at the given clock.
+    pub fn runtime_ms(&self, freq_ghz: f64) -> f64 {
+        self.makespan as f64 / (freq_ghz * 1e9) * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coverage_priority() {
+        // RedMulE [0,100); Spatz [50,150) -> Spatz exclusive 50;
+        // HBM [140,160) -> exclusive 10; makespan 200 -> Other 50.
+        let intervals = vec![
+            (Component::RedMule, 0, 100),
+            (Component::Spatz, 50, 150),
+            (Component::HbmAccess, 140, 160),
+        ];
+        let bd = Breakdown::from_intervals(&intervals, 200);
+        assert_eq!(bd.redmule, 100);
+        assert_eq!(bd.spatz, 50);
+        assert_eq!(bd.hbm, 10);
+        assert_eq!(bd.other, 40);
+        assert_eq!(bd.total(), 200);
+    }
+
+    #[test]
+    fn fully_overlapped_disappears() {
+        let intervals = vec![
+            (Component::RedMule, 0, 100),
+            (Component::Multicast, 10, 90),
+        ];
+        let bd = Breakdown::from_intervals(&intervals, 100);
+        assert_eq!(bd.redmule, 100);
+        assert_eq!(bd.multicast, 0);
+        assert_eq!(bd.other, 0);
+    }
+
+    #[test]
+    fn disjoint_sums() {
+        let intervals = vec![
+            (Component::HbmAccess, 0, 10),
+            (Component::HbmAccess, 20, 30),
+            (Component::RedMule, 40, 50),
+        ];
+        let bd = Breakdown::from_intervals(&intervals, 60);
+        assert_eq!(bd.hbm, 20);
+        assert_eq!(bd.redmule, 10);
+        assert_eq!(bd.other, 30);
+    }
+
+    #[test]
+    fn merge_overlapping_same_component() {
+        // Two overlapping RedMulE intervals must not double count.
+        let intervals = vec![
+            (Component::RedMule, 0, 60),
+            (Component::RedMule, 50, 100),
+        ];
+        let bd = Breakdown::from_intervals(&intervals, 100);
+        assert_eq!(bd.redmule, 100);
+    }
+
+    #[test]
+    fn breakdown_total_equals_makespan() {
+        // Invariant: breakdown always partitions the makespan.
+        let intervals = vec![
+            (Component::Spatz, 5, 25),
+            (Component::Multicast, 10, 40),
+            (Component::SumReduce, 35, 45),
+            (Component::MaxReduce, 44, 46),
+        ];
+        let bd = Breakdown::from_intervals(&intervals, 80);
+        assert_eq!(bd.total(), 80);
+    }
+
+    #[test]
+    fn utilization_math() {
+        let stats = RunStats {
+            makespan: 1000,
+            breakdown: Breakdown::default(),
+            hbm_bytes: 64_000,
+            flops: 512_000,
+            redmule_busy_total: 800,
+            spatz_busy_total: 100,
+            ops_executed: 10,
+        };
+        assert!((stats.compute_utilization(1024) - 0.5).abs() < 1e-9);
+        assert!((stats.hbm_bw_utilization(128) - 0.5).abs() < 1e-9);
+        assert!((stats.redmule_active_utilization(1024) - 0.625).abs() < 1e-9);
+    }
+}

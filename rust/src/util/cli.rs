@@ -1,0 +1,124 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed getters and a generated usage string. The `flatattention`
+//! binary builds its subcommand dispatch on top of this.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals in order, plus `--key [value]` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Parse a raw argument list. `spec_flags` lists option names that take NO
+/// value (bare flags); everything else starting with `--` consumes the next
+/// token (or the `=`-suffix) as its value.
+pub fn parse(raw: &[String], spec_flags: &[&str]) -> Result<Args, String> {
+    let mut args = Args::default();
+    let mut i = 0;
+    while i < raw.len() {
+        let tok = &raw[i];
+        if let Some(stripped) = tok.strip_prefix("--") {
+            if let Some((k, v)) = stripped.split_once('=') {
+                args.options.insert(k.to_string(), v.to_string());
+            } else if spec_flags.contains(&stripped) {
+                args.flags.push(stripped.to_string());
+            } else {
+                i += 1;
+                let v = raw
+                    .get(i)
+                    .ok_or_else(|| format!("option --{stripped} expects a value"))?;
+                args.options.insert(stripped.to_string(), v.clone());
+            }
+        } else {
+            args.positional.push(tok.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// Parse a comma-separated list of integers, e.g. `--seq 1024,2048`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| format!("--{name}: bad integer '{p}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&v(&["run", "--seq", "4096", "--d=128", "--verbose"]), &["verbose"]).unwrap();
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("seq"), Some("4096"));
+        assert_eq!(a.get("d"), Some("128"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(parse(&v(&["--seq"]), &[]).is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&v(&["--n", "42", "--list", "1,2,3"]), &[]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert_eq!(a.get_usize_list("list", &[]).unwrap(), vec![1, 2, 3]);
+        assert!(a.get_usize_list("list", &[]).is_ok());
+        let bad = parse(&v(&["--n", "xyz"]), &[]).unwrap();
+        assert!(bad.get_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! Self-contained utility substrate.
+//!
+//! The build environment vendors only the `xla` crate closure, so the
+//! general-purpose infrastructure a project of this size normally pulls from
+//! crates.io (CLI parsing, JSON emission, a thread pool, property-based
+//! testing helpers, a PRNG) is implemented here.
+
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod quickcheck;
+pub mod rng;
+pub mod tensor;
+pub mod toml;
+
+pub use rng::Rng;
+pub use tensor::Tensor;
+
+/// Ceiling division for unsigned integers.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `b`.
+#[inline]
+pub fn round_up(a: u64, b: u64) -> u64 {
+    ceil_div(a, b) * b
+}
+
+/// Format a cycle count with thousands separators for reports.
+pub fn fmt_cycles(c: u64) -> String {
+    let s = c.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    for (i, ch) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(ch);
+    }
+    out
+}
+
+/// Format a byte count using binary prefixes (KiB/MiB/GiB).
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 3), 1);
+        assert_eq!(ceil_div(0, 3), 0);
+    }
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(10, 8), 16);
+        assert_eq!(round_up(16, 8), 16);
+        assert_eq!(round_up(0, 8), 0);
+    }
+
+    #[test]
+    fn fmt_cycles_groups() {
+        assert_eq!(fmt_cycles(0), "0");
+        assert_eq!(fmt_cycles(999), "999");
+        assert_eq!(fmt_cycles(1000), "1,000");
+        assert_eq!(fmt_cycles(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert!(fmt_bytes(3 * 1024 * 1024).starts_with("3.00 MiB"));
+    }
+}

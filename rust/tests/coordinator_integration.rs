@@ -1,0 +1,95 @@
+//! Coordinator-level integration: parallel runs, sweeps, persistence, and
+//! report renderers end to end (quick workloads).
+
+use flatattention::arch::presets;
+use flatattention::coordinator::{
+    best_group, run_all, run_one, valid_groups, ExperimentSpec, ResultStore,
+};
+use flatattention::dataflow::{Dataflow, Workload, ALL_DATAFLOWS};
+use flatattention::report::{fig3, fig4, fig5a, headline, section2, tables, ReportOpts};
+
+fn quick_opts() -> ReportOpts {
+    ReportOpts { quick: true, ..Default::default() }
+}
+
+#[test]
+fn parallel_and_serial_runs_agree() {
+    // Thread count must not change results (simulations are independent
+    // and deterministic).
+    let arch = presets::table1();
+    let wl = Workload::new(1024, 128, 8, 1);
+    let specs: Vec<ExperimentSpec> = ALL_DATAFLOWS
+        .into_iter()
+        .map(|df| ExperimentSpec { arch: arch.clone(), workload: wl, dataflow: df, group: 16 })
+        .collect();
+    let serial = run_all(&specs, 1);
+    let parallel = run_all(&specs, 8);
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.makespan, b.makespan, "{}", a.id);
+        assert_eq!(a.hbm_bytes, b.hbm_bytes);
+    }
+}
+
+#[test]
+fn best_group_is_actually_best() {
+    let arch = presets::table1();
+    let wl = Workload::new(2048, 128, 16, 2);
+    let best = best_group(&arch, &wl, Dataflow::FlatAsyn, 4);
+    for g in valid_groups(&arch) {
+        let r = run_one(&ExperimentSpec {
+            arch: arch.clone(),
+            workload: wl,
+            dataflow: Dataflow::FlatAsyn,
+            group: g,
+        });
+        assert!(best.makespan <= r.makespan, "group {g} beats 'best' {}", best.group);
+    }
+}
+
+#[test]
+fn full_report_pipeline_with_store() {
+    let mut store = ResultStore::new();
+    let opts = quick_opts();
+    let t3 = fig3::render(&opts, Some(&mut store));
+    assert!(t3.contains("FlatAsyn"));
+    let t4 = fig4::render(&opts, Some(&mut store));
+    assert!(t4.contains("optimal group"));
+    assert!(store.section("fig3").is_some());
+    assert!(store.section("fig4").is_some());
+
+    let path = std::env::temp_dir().join(format!("fa-report-{}.json", std::process::id()));
+    store.save(&path).unwrap();
+    let loaded = ResultStore::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(
+        loaded.section("fig3").unwrap().len(),
+        store.section("fig3").unwrap().len()
+    );
+}
+
+#[test]
+fn fig5a_heatmap_renders() {
+    let s = fig5a::render(&quick_opts(), None);
+    assert!(s.contains("BestArch"));
+    assert!(s.contains("32x32"));
+    assert!(s.contains("8x8"));
+}
+
+#[test]
+fn static_reports_render() {
+    assert!(tables::render_table1().contains("RedMulE"));
+    assert!(tables::render_table2().contains("16x16"));
+    assert!(section2::render_section2().contains("hardware"));
+    assert!(section2::render_area().contains("BestArch"));
+}
+
+#[test]
+fn headline_report_with_store() {
+    let mut store = ResultStore::new();
+    let s = headline::render(&ReportOpts::default(), Some(&mut store));
+    assert!(s.contains("measured"));
+    let rows = store.section("headline").unwrap();
+    assert_eq!(rows.len(), 1);
+    let util = rows[0].get("utilization").unwrap().as_f64().unwrap();
+    assert!(util > 0.8, "headline utilization {util}");
+}

@@ -1,0 +1,223 @@
+//! Cross-module integration: dataflow programs vs analytical models,
+//! property-based invariants over the workload/architecture space.
+
+use flatattention::analytics::{flash_io_bytes, flat_io_bytes};
+use flatattention::arch::presets;
+use flatattention::dataflow::{
+    build_program, flash_block_size, run, Dataflow, FlatTiling, Workload, ALL_DATAFLOWS,
+};
+use flatattention::sim::execute;
+use flatattention::util::quickcheck::{check, forall_cases, pow2_in};
+
+#[test]
+fn every_dataflow_executes_every_small_layer() {
+    let arch = presets::table1();
+    for df in ALL_DATAFLOWS {
+        for &(s, d) in &[(512u64, 64u64), (1024, 128)] {
+            let wl = Workload::new(s, d, 4, 1);
+            let stats = run(&arch, &wl, df, 8);
+            assert!(stats.makespan > 0, "{df:?} {s} {d}");
+            assert!(
+                stats.hbm_bytes >= wl.compulsory_bytes(),
+                "{df:?}: traffic below compulsory"
+            );
+            assert_eq!(stats.flops, wl.matmul_flops());
+            assert_eq!(stats.breakdown.total(), stats.makespan);
+        }
+    }
+}
+
+#[test]
+fn flash_traffic_matches_io_formula() {
+    let arch = presets::table1();
+    forall_cases(12, 0x10F, |rng| {
+        let s = pow2_in(rng, 512, 4096);
+        let d = *rng.choose(&[64u64, 128]);
+        let h = 1 + rng.gen_range(8);
+        let wl = Workload::new(s, d, h, 1);
+        let m = flash_block_size(&arch.tile, d, false);
+        let stats = run(&arch, &wl, Dataflow::Flash2, 1);
+        let model = flash_io_bytes(&wl, m) as f64;
+        let ratio = stats.hbm_bytes as f64 / model;
+        check(
+            (0.8..1.2).contains(&ratio),
+            format!("S{s} D{d} H{h}: sim {} vs model {model} ({ratio:.3})", stats.hbm_bytes),
+        )
+    });
+}
+
+#[test]
+fn flat_traffic_matches_io_formula() {
+    let arch = presets::table1();
+    forall_cases(12, 0xF1A, |rng| {
+        let s = pow2_in(rng, 1024, 4096);
+        let d = *rng.choose(&[64u64, 128]);
+        let g = *rng.choose(&[8usize, 16, 32]);
+        let wl = Workload::new(s, d, 8, 1);
+        let tiling = FlatTiling::resolve(&arch, d, s, g, false);
+        let stats = run(&arch, &wl, Dataflow::FlatColl, g);
+        let model = flat_io_bytes(&wl, tiling.block) as f64;
+        let ratio = stats.hbm_bytes as f64 / model;
+        check(
+            (0.9..1.1).contains(&ratio),
+            format!("S{s} D{d} G{g}: sim {} vs model {model} ({ratio:.3})", stats.hbm_bytes),
+        )
+    });
+}
+
+#[test]
+fn makespan_monotone_in_workload() {
+    // More heads ⇒ more work ⇒ no shorter runtime, for every dataflow.
+    let arch = presets::table1();
+    for df in ALL_DATAFLOWS {
+        let small = run(&arch, &Workload::new(1024, 128, 4, 1), df, 16);
+        let large = run(&arch, &Workload::new(1024, 128, 16, 1), df, 16);
+        assert!(
+            large.makespan >= small.makespan,
+            "{df:?}: 16 heads ({}) faster than 4 heads ({})",
+            large.makespan,
+            small.makespan
+        );
+    }
+}
+
+#[test]
+fn hw_collectives_never_slower() {
+    let arch = presets::table1();
+    forall_cases(8, 0xC011, |rng| {
+        let s = pow2_in(rng, 512, 2048);
+        let g = *rng.choose(&[8usize, 16]);
+        let wl = Workload::new(s, 128, 4, 1);
+        let sw = run(&arch, &wl, Dataflow::Flat, g);
+        let hw = run(&arch, &wl, Dataflow::FlatColl, g);
+        check(
+            hw.makespan <= sw.makespan,
+            format!("S{s} G{g}: hw {} > sw {}", hw.makespan, sw.makespan),
+        )
+    });
+}
+
+#[test]
+fn async_overlap_helps_at_long_sequence() {
+    let arch = presets::table1();
+    let wl = Workload::new(4096, 128, 32, 2);
+    let sync = run(&arch, &wl, Dataflow::FlatColl, 32);
+    let asyn = run(&arch, &wl, Dataflow::FlatAsyn, 32);
+    assert!(
+        asyn.makespan < sync.makespan,
+        "async {} should beat sync {}",
+        asyn.makespan,
+        sync.makespan
+    );
+}
+
+#[test]
+fn programs_are_valid_dags() {
+    let arch = presets::table1();
+    forall_cases(10, 0xDA6, |rng| {
+        let s = pow2_in(rng, 512, 2048);
+        let d = *rng.choose(&[64u64, 128]);
+        let g = *rng.choose(&[4usize, 8, 16, 32]);
+        let df = *rng.choose(&ALL_DATAFLOWS);
+        let wl = Workload::new(s, d, 2, 1);
+        let p = build_program(&arch, &wl, df, g);
+        check(p.validate().is_ok(), format!("{df:?} S{s} D{d} G{g}: invalid DAG"))
+    });
+}
+
+#[test]
+fn determinism_same_spec_same_result() {
+    let arch = presets::table1();
+    let wl = Workload::new(1024, 128, 8, 1);
+    for df in ALL_DATAFLOWS {
+        let a = run(&arch, &wl, df, 16);
+        let b = run(&arch, &wl, df, 16);
+        assert_eq!(a.makespan, b.makespan, "{df:?} nondeterministic");
+        assert_eq!(a.hbm_bytes, b.hbm_bytes);
+        assert_eq!(a.breakdown, b.breakdown);
+    }
+}
+
+#[test]
+fn smaller_mesh_archs_work() {
+    // Table II granularities execute all dataflows.
+    for g in [16usize, 8] {
+        let arch = presets::table2(g);
+        let wl = Workload::new(1024, 128, 4, 1);
+        for df in ALL_DATAFLOWS {
+            let group = if df.is_flat() { g.min(8) } else { 1 };
+            let stats = run(&arch, &wl, df, group);
+            assert!(stats.makespan > 0, "{df:?} on table2-{g}");
+        }
+    }
+}
+
+#[test]
+fn utilization_bounded_by_one() {
+    let arch = presets::table1();
+    forall_cases(10, 0x0B0E, |rng| {
+        let s = pow2_in(rng, 512, 4096);
+        let df = *rng.choose(&ALL_DATAFLOWS);
+        let wl = Workload::new(s, 128, 4, 2);
+        let stats = run(&arch, &wl, df, 16);
+        let u = stats.compute_utilization(arch.peak_flops_per_cycle());
+        let bw = stats.hbm_bw_utilization(arch.hbm.peak_bytes_per_cycle());
+        check(
+            (0.0..=1.0).contains(&u) && (0.0..=1.0).contains(&bw),
+            format!("{df:?} S{s}: util {u} bw {bw}"),
+        )
+    });
+}
+
+#[test]
+fn summa_executes_and_validates() {
+    use flatattention::dataflow::summa::{summa_program, GemmWorkload};
+    let arch = presets::table1();
+    let g = GemmWorkload::new(2048, 4096, 2048, "it");
+    let p = summa_program(&arch, &g);
+    assert!(p.validate().is_ok());
+    let stats = execute(&p, 0);
+    assert!(stats.makespan > 0);
+    assert!(stats.compute_utilization(arch.peak_flops_per_cycle()) > 0.3);
+}
+
+#[test]
+fn causal_halves_runtime_and_traffic() {
+    // Causal prefill skips ~half the K/V blocks: runtime and HBM traffic
+    // drop substantially for every dataflow at long sequence length.
+    let arch = presets::table1();
+    let wl = Workload::new(4096, 128, 32, 2);
+    let wlc = wl.with_causal(true);
+    // Group 8 so T_c > 1 (with the full-mesh group the single block IS the
+    // diagonal — nothing to skip, only the mask cost remains).
+    for (df, g) in [(Dataflow::Flash2, 1), (Dataflow::FlatAsyn, 8)] {
+        let full = run(&arch, &wl, df, g);
+        let causal = run(&arch, &wlc, df, g);
+        let rt = causal.makespan as f64 / full.makespan as f64;
+        assert!(
+            (0.35..0.85).contains(&rt),
+            "{df:?}: causal/full runtime {rt:.2}"
+        );
+        assert!(causal.hbm_bytes < full.hbm_bytes, "{df:?}: traffic must drop");
+    }
+}
+
+#[test]
+fn causal_flops_accounting() {
+    let wl = Workload::new(4096, 128, 32, 2);
+    let wlc = wl.with_causal(true);
+    // Useful causal flops ≈ half of full.
+    let ratio = wlc.matmul_flops() as f64 / wl.matmul_flops() as f64;
+    assert!((ratio - 0.5).abs() < 0.01, "{ratio}");
+}
+
+#[test]
+fn causal_utilization_reasonable() {
+    // Diagonal-block waste means causal utilization (useful flops) is a
+    // bit below non-causal but still high at S=4096 on FlatAsyn.
+    let arch = presets::table1();
+    let wlc = Workload::new(4096, 128, 32, 2).with_causal(true);
+    let stats = run(&arch, &wlc, Dataflow::FlatAsyn, 8);
+    let u = stats.compute_utilization(arch.peak_flops_per_cycle());
+    assert!(u > 0.35, "causal FlatAsyn utilization {u:.3}");
+}

@@ -1,0 +1,133 @@
+//! Integration: AOT artifacts → PJRT → functional dataflow → golden.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so `cargo test`
+//! works on a fresh checkout; the Makefile `test` target always builds
+//! artifacts first).
+
+use flatattention::functional::{
+    attention_golden, run_flat_group_functional, NativeCompute, RuntimeCompute,
+};
+use flatattention::runtime::{default_artifact_dir, Runtime};
+use flatattention::util::{Rng, Tensor};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = default_artifact_dir();
+    if !Runtime::available(&dir) {
+        eprintln!("skipping: no artifacts in {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime starts"))
+}
+
+#[test]
+fn pjrt_block_step_matches_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(0xB10C);
+    for &(br, bc, d) in &[(16usize, 16usize, 128usize), (64, 64, 64), (128, 128, 128)] {
+        let q = Tensor::randn(br, d, &mut rng);
+        let k = Tensor::randn(bc, d, &mut rng);
+        let v = Tensor::randn(bc, d, &mut rng);
+        let kt = k.transpose();
+        let m: Vec<f32> = (0..br).map(|_| rng.normal_f32() * 0.5).collect();
+        let l: Vec<f32> = (0..br).map(|_| rng.f32() + 0.5).collect();
+        let o = Tensor::randn(br, d, &mut rng);
+
+        let (m2, l2, o2) = rt.block_step(&q, &kt, &v, &m, &l, &o).expect("pjrt exec");
+
+        // Native reference.
+        let st = flatattention::functional::golden::SoftmaxState { m, l, o };
+        let want = flatattention::functional::block_step_native(&q, &kt, &v, &st);
+        let m_diff = m2
+            .iter()
+            .zip(&want.m)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let l_diff = l2
+            .iter()
+            .zip(&want.l)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let o_diff = o2.max_abs_diff(&want.o);
+        assert!(m_diff < 1e-4, "r{br} c{bc} d{d}: m diff {m_diff}");
+        assert!(l_diff < 1e-3, "r{br} c{bc} d{d}: l diff {l_diff}");
+        assert!(o_diff < 1e-3, "r{br} c{bc} d{d}: o diff {o_diff}");
+    }
+}
+
+#[test]
+fn pjrt_functional_group_matches_golden() {
+    // The full three-layer composition: Rust group dataflow + PJRT-compiled
+    // Pallas block step reproduces plain attention.
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(0x600D);
+    // g=2 over S=256 → 128-slices; g=4 → 64-slices (both have artifacts
+    // at D=64 via (128,128,64)/(64,64,64)).
+    for &(s, d, g) in &[(256usize, 64usize, 2usize), (256, 64, 4)] {
+        let q = Tensor::randn(s, d, &mut rng);
+        let k = Tensor::randn(s, d, &mut rng);
+        let v = Tensor::randn(s, d, &mut rng);
+        let compute = RuntimeCompute { runtime: &rt };
+        let res = run_flat_group_functional(&q, &k, &v, g, &compute).expect("group run");
+        let golden = attention_golden(&q, &k, &v);
+        let diff = res.output.max_abs_diff(&golden);
+        assert!(diff < 2e-3, "s={s} d={d} g={g}: diff {diff}");
+        assert_eq!(res.block_steps, g * g);
+
+        // And agrees with the native backend bit-for-bit-ish.
+        let native = run_flat_group_functional(&q, &k, &v, g, &NativeCompute).unwrap();
+        assert!(res.output.max_abs_diff(&native.output) < 2e-3);
+    }
+}
+
+#[test]
+fn pjrt_mha_artifact_matches_golden_per_head() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let (b, h, s, d) = (1u64, 4u64, 256u64, 64u64);
+    let n = (b * h * s * d) as usize;
+    let mut rng = Rng::new(0xAB);
+    let q: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    let k: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    let v: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    let out = rt.mha(b, h, s, d, &q, &k, &v).expect("mha exec");
+    assert_eq!(out.len(), n);
+
+    // Check one head against the golden reference.
+    let head = 2usize;
+    let stride = (s * d) as usize;
+    let off = head * stride;
+    let qh = Tensor::from_vec(s as usize, d as usize, q[off..off + stride].to_vec());
+    let kh = Tensor::from_vec(s as usize, d as usize, k[off..off + stride].to_vec());
+    let vh = Tensor::from_vec(s as usize, d as usize, v[off..off + stride].to_vec());
+    let golden = attention_golden(&qh, &kh, &vh);
+    let oh = Tensor::from_vec(s as usize, d as usize, out[off..off + stride].to_vec());
+    let diff = oh.max_abs_diff(&golden);
+    assert!(diff < 2e-3, "mha head diff {diff}");
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(1);
+    let q = Tensor::randn(16, 128, &mut rng);
+    let kt = Tensor::randn(128, 16, &mut rng);
+    let v = Tensor::randn(16, 128, &mut rng);
+    let m = vec![0.0f32; 16];
+    let l = vec![1.0f32; 16];
+    let o = Tensor::zeros(16, 128);
+    for _ in 0..3 {
+        rt.block_step(&q, &kt, &v, &m, &l, &o).unwrap();
+    }
+    assert_eq!(rt.compiled_count(), 1);
+}
+
+#[test]
+fn missing_shape_errors_cleanly() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let q = Tensor::zeros(17, 128); // no artifact for br=17
+    let kt = Tensor::zeros(128, 17);
+    let v = Tensor::zeros(17, 128);
+    let err = rt
+        .block_step(&q, &kt, &v, &vec![0.0; 17], &vec![0.0; 17], &Tensor::zeros(17, 128))
+        .unwrap_err();
+    assert!(err.to_string().contains("no block_step artifact"), "{err}");
+}
