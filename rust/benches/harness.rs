@@ -2,13 +2,32 @@
 //!
 //! Each bench target is `harness = false` with its own `main`; this module
 //! provides wall-clock measurement with warmup, min/mean/max reporting,
-//! and a simple table printer compatible with `cargo bench` output.
+//! a simple table printer compatible with `cargo bench` output, and a
+//! [`Recorder`] that additionally captures every measurement for
+//! machine-readable JSON export (`BENCH_sim_hotpath.json` at the repo
+//! root records the perf trajectory across PRs).
 
 use std::time::Instant;
 
 /// Measure `f` for `iters` iterations after one warmup; prints a
 /// `test ... bench:` style line and returns the mean seconds per iter.
-pub fn bench<R>(name: &str, iters: usize, mut f: impl FnMut() -> R) -> f64 {
+#[allow(dead_code)]
+pub fn bench<R>(name: &str, iters: usize, f: impl FnMut() -> R) -> f64 {
+    measure(name, iters, f).mean_s
+}
+
+/// One recorded measurement.
+#[allow(dead_code)]
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub iters: usize,
+}
+
+fn measure<R>(name: &str, iters: usize, mut f: impl FnMut() -> R) -> Measurement {
     std::hint::black_box(f()); // warmup
     let mut times = Vec::with_capacity(iters);
     for _ in 0..iters {
@@ -16,19 +35,94 @@ pub fn bench<R>(name: &str, iters: usize, mut f: impl FnMut() -> R) -> f64 {
         std::hint::black_box(f());
         times.push(t0.elapsed().as_secs_f64());
     }
-    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
-    let max = times.iter().cloned().fold(0.0, f64::max);
-    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min_s = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max_s = times.iter().cloned().fold(0.0, f64::max);
+    let mean_s = times.iter().sum::<f64>() / times.len() as f64;
     println!(
         "bench {name:<52} {:>10.3} ms/iter (min {:.3}, max {:.3}, n={iters})",
-        mean * 1e3,
-        min * 1e3,
-        max * 1e3
+        mean_s * 1e3,
+        min_s * 1e3,
+        max_s * 1e3
     );
-    mean
+    Measurement { name: name.to_string(), mean_s, min_s, max_s, iters }
 }
 
 /// Pretty section header.
+#[allow(dead_code)]
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Collects measurements plus free-form scalar metrics and writes them as
+/// a JSON report.
+#[allow(dead_code)]
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub measurements: Vec<Measurement>,
+    pub metrics: Vec<(String, f64)>,
+}
+
+#[allow(dead_code)]
+impl Recorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Like [`bench`], but records the measurement.
+    pub fn bench<R>(&mut self, name: &str, iters: usize, f: impl FnMut() -> R) -> f64 {
+        let m = measure(name, iters, f);
+        let mean = m.mean_s;
+        self.measurements.push(m);
+        mean
+    }
+
+    /// Record a derived scalar (speedups, op counts, events/s, ...).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        self.metrics.push((name.to_string(), value));
+    }
+
+    /// Mean seconds of a recorded measurement by name.
+    pub fn mean_of(&self, name: &str) -> Option<f64> {
+        self.measurements.iter().find(|m| m.name == name).map(|m| m.mean_s)
+    }
+
+    /// Serialize to a JSON string (no external deps; flat schema).
+    pub fn to_json(&self, bench_name: &str) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{bench_name}\",\n"));
+        out.push_str("  \"unit\": \"seconds_per_iter\",\n");
+        out.push_str("  \"measurements\": [\n");
+        for (i, m) in self.measurements.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"mean_s\": {:.6e}, \"min_s\": {:.6e}, \"max_s\": {:.6e}, \"iters\": {}}}{}\n",
+                m.name.replace('"', "'"),
+                m.mean_s,
+                m.min_s,
+                m.max_s,
+                m.iters,
+                if i + 1 < self.measurements.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"metrics\": {\n");
+        for (i, (k, v)) in self.metrics.iter().enumerate() {
+            out.push_str(&format!(
+                "    \"{}\": {:.6}{}\n",
+                k.replace('"', "'"),
+                v,
+                if i + 1 < self.metrics.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+
+    /// Write the JSON report to `path`.
+    pub fn write_json(&self, path: &str, bench_name: &str) {
+        match std::fs::write(path, self.to_json(bench_name)) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("\nerror writing {path}: {e}"),
+        }
+    }
 }

@@ -1,5 +1,10 @@
 //! Bench: the simulator's own hot path (program build + DES execution) —
-//! the §Perf optimization target. Reports events/second at several scales.
+//! the §Perf optimization target. Measures the optimized path (template
+//! stamping + arena + sealed CSR + indexed event queue) against the
+//! retained seed baseline (naive per-block emission + `BinaryHeap`
+//! reference executor, which re-derives the CSR per run), reports
+//! events/second at several scales, and writes machine-readable results to
+//! `BENCH_sim_hotpath.json` at the repo root.
 //!
 //!     cargo bench --bench sim_hotpath
 
@@ -7,39 +12,90 @@
 mod harness;
 
 use flatattention::arch::presets;
-use flatattention::dataflow::{build_program, Dataflow, Workload};
-use flatattention::sim::execute;
+use flatattention::dataflow::{
+    build_program, build_program_in, set_template_stamping, tracked_tile, Dataflow, Workload,
+};
+use flatattention::sim::{execute, execute_reference, ProgramArena};
+
+const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim_hotpath.json");
 
 fn main() {
     let arch = presets::table1();
-
-    harness::section("program construction");
-    for (label, wl, df, g) in [
+    let mut rec = harness::Recorder::new();
+    let cases = [
         ("flat  S4096 D128 H32 B2 G32", Workload::new(4096, 128, 32, 2), Dataflow::FlatAsyn, 32),
         ("flat  S2048 D128 H32 B4 G8 ", Workload::new(2048, 128, 32, 4), Dataflow::FlatAsyn, 8),
         ("flash S4096 D128 H32 B2    ", Workload::new(4096, 128, 32, 2), Dataflow::Flash3, 1),
-    ] {
+    ];
+
+    harness::section("program construction (template-stamped + arena vs naive)");
+    let mut arena = ProgramArena::new();
+    for (label, wl, df, g) in cases {
         let p = build_program(&arch, &wl, df, g);
         println!("  {label}: {} ops, {} resources", p.num_ops(), p.num_resources());
-        harness::bench(&format!("build   {label}"), 5, || build_program(&arch, &wl, df, g));
+        rec.metric(&format!("num_ops {label}"), p.num_ops() as f64);
+        set_template_stamping(false);
+        rec.bench(&format!("build/naive   {label}"), 5, || build_program(&arch, &wl, df, g));
+        set_template_stamping(true);
+        rec.bench(&format!("build/stamped {label}"), 5, || build_program(&arch, &wl, df, g));
+        rec.bench(&format!("build/arena   {label}"), 5, || {
+            let p = build_program_in(&mut arena, &arch, &wl, df, g);
+            let n = p.num_ops();
+            arena.recycle(p);
+            n
+        });
     }
 
-    harness::section("DES execution");
-    for (label, wl, df, g) in [
-        ("flat  S4096 D128 H32 B2 G32", Workload::new(4096, 128, 32, 2), Dataflow::FlatAsyn, 32),
-        ("flat  S2048 D128 H32 B4 G8 ", Workload::new(2048, 128, 32, 4), Dataflow::FlatAsyn, 8),
-        ("flash S4096 D128 H32 B2    ", Workload::new(4096, 128, 32, 2), Dataflow::Flash3, 1),
-    ] {
+    harness::section("DES execution (indexed queue + sealed CSR vs seed heap engine)");
+    for (label, wl, df, g) in cases {
         let p = build_program(&arch, &wl, df, g);
         let n = p.num_ops();
-        let mean = harness::bench(&format!("execute {label}"), 5, || execute(&p, 0));
-        println!("    -> {:.2} M ops/s", n as f64 / mean / 1e6);
+        let tracked = tracked_tile(&arch, df, g);
+        rec.bench(&format!("execute/reference {label}"), 5, || execute_reference(&p, tracked));
+        let mean = rec.bench(&format!("execute/indexed   {label}"), 5, || execute(&p, tracked));
+        println!("    -> {:.2} M ops/s (indexed)", n as f64 / mean / 1e6);
+        rec.metric(&format!("mops_per_s {label}"), n as f64 / mean / 1e6);
     }
 
-    harness::section("end-to-end (build + execute)");
-    let wl = Workload::new(4096, 128, 32, 2);
-    harness::bench("full run flatasyn S4096 D128", 5, || {
-        let p = build_program(&arch, &wl, Dataflow::FlatAsyn, 32);
-        execute(&p, 0)
+    harness::section("end-to-end (build + execute, FlatAsyn S4096 D128)");
+    let (label, wl, df, g) = cases[0];
+    let tracked = tracked_tile(&arch, df, g);
+    // Seed-equivalent baseline: naive builder + heap engine. The builder
+    // now always seals, which the seed never paid (the heap engine derives
+    // its own CSR), so the raw baseline over-counts by exactly one CSR
+    // pass — measure that pass and subtract it for the corrected number.
+    // (Residual bias runs the other way: the "naive" builder still shares
+    // the hoisted-cost/dep-buffer micro-optimizations the seed lacked, so
+    // the corrected speedup is a conservative lower bound vs the seed.)
+    set_template_stamping(false);
+    let base_raw = rec.bench("e2e/baseline full run flatasyn S4096 D128", 5, || {
+        let p = build_program(&arch, &wl, df, g);
+        execute_reference(&p, tracked)
     });
+    set_template_stamping(true);
+    let mut p_seal = build_program(&arch, &wl, df, g);
+    let seal_cost = rec.bench("csr/seal (baseline correction)", 5, || {
+        p_seal.unseal();
+        p_seal.seal();
+    });
+    let base = (base_raw - seal_cost).max(0.0);
+    // Optimized path as `dataflow::run` executes it (arena-recycled).
+    let opt = rec.bench("e2e/optimized full run flatasyn S4096 D128", 5, || {
+        let p = build_program_in(&mut arena, &arch, &wl, df, g);
+        let stats = execute(&p, tracked);
+        arena.recycle(p);
+        stats
+    });
+    let speedup = base / opt;
+    println!("\n  end-to-end speedup ({label}): {speedup:.2}x seal-corrected (target >= 2x)");
+    rec.metric("e2e_baseline_raw_s", base_raw);
+    rec.metric("e2e_baseline_seal_correction_s", seal_cost);
+    rec.metric("e2e_baseline_s", base);
+    rec.metric("e2e_optimized_s", opt);
+    rec.metric("e2e_speedup", speedup);
+
+    rec.write_json(OUT_PATH, "sim_hotpath");
+    if speedup < 2.0 {
+        println!("WARNING: end-to-end speedup {speedup:.2}x below the 2x acceptance target");
+    }
 }

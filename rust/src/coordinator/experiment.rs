@@ -31,8 +31,10 @@ impl ExperimentSpec {
     }
 }
 
-/// Result of one experiment with derived metrics.
-#[derive(Debug, Clone)]
+/// Result of one experiment with derived metrics. `PartialEq` is bitwise
+/// (floats included): experiments are deterministic, and the memoization
+/// tests assert cached results are bit-identical to recomputed ones.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentResult {
     pub id: String,
     pub dataflow: Dataflow,

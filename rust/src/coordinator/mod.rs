@@ -4,11 +4,20 @@
 //! queue, fans simulation runs out over a worker pool, searches the
 //! FlatAttention group-size space (the paper's per-sequence-length optimum
 //! of §V-B), and persists machine-readable results.
+//!
+//! §Perf: results are memoized by content fingerprint ([`SpecKey`]) so
+//! `best_group` sweeps and the figure generators never simulate the same
+//! point twice — the pool works off the deduplicated uncached set (see
+//! [`runner`]). `run_{one,all}_uncached` bypass the cache for baselines
+//! and equivalence tests.
 
 pub mod experiment;
 pub mod runner;
 pub mod store;
 
 pub use experiment::{ExperimentResult, ExperimentSpec};
-pub use runner::{best_group, run_all, run_one, valid_groups};
+pub use runner::{
+    best_group, clear_memo, memo_len, memo_stats, run_all, run_all_uncached, run_one,
+    run_one_uncached, spec_key, valid_groups, SpecKey,
+};
 pub use store::ResultStore;

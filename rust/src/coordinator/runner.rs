@@ -1,4 +1,19 @@
-//! Parallel experiment execution and group-size search.
+//! Parallel experiment execution, group-size search, and result
+//! memoization.
+//!
+//! §Perf: the report generators (`crate::report::fig*`) and `best_group`
+//! sweeps revisit many identical `(arch, workload, dataflow, group)`
+//! points — e.g. every figure touches the D=128/S=4096 headline layer.
+//! Experiments are deterministic, so results are memoized in a global
+//! cache keyed by a *content* fingerprint of the spec ([`SpecKey`]: every
+//! architecture/workload field, not the display id). `run_all` also
+//! deduplicates within a batch, so the worker pool only simulates the
+//! unique uncached points. Memoized and uncached runs are bit-identical —
+//! asserted by tests here and in `tests/coordinator_integration.rs`.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use crate::arch::ArchConfig;
 use crate::dataflow::{self, Dataflow, Workload};
@@ -6,15 +21,179 @@ use crate::util::pool;
 
 use super::experiment::{ExperimentResult, ExperimentSpec};
 
-/// Execute one experiment.
-pub fn run_one(spec: &ExperimentSpec) -> ExperimentResult {
+/// Content fingerprint of an [`ExperimentSpec`]: two specs compare equal
+/// iff every field influencing the simulation (and the derived metrics,
+/// including `freq_ghz` and the id-forming `arch.name`) is identical.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SpecKey {
+    arch_name: String,
+    dataflow: Dataflow,
+    group: usize,
+    nums: [u64; 24],
+}
+
+/// Fingerprint a spec for memoization.
+///
+/// Every config struct is destructured *exhaustively* (no `..`), so adding
+/// a field to `ArchConfig`/`TileConfig`/`NocConfig`/`HbmConfig`/`Workload`
+/// is a compile error here until the new field joins the key — a silently
+/// incomplete fingerprint would serve one architecture's results for
+/// another.
+pub fn spec_key(spec: &ExperimentSpec) -> SpecKey {
+    use crate::arch::{HbmConfig, NocConfig, TileConfig};
+    let ExperimentSpec { arch, workload, dataflow, group } = spec;
+    let ArchConfig { name, mesh_x, mesh_y, tile, noc, hbm, freq_ghz } = arch;
+    let TileConfig {
+        redmule_rows,
+        redmule_cols,
+        redmule_fill,
+        redmule_setup,
+        spatz_fpus,
+        spatz_lanes_per_fpu,
+        spatz_exp_per_fpu,
+        l1_kib,
+        l1_bytes_per_cycle,
+    } = tile;
+    let NocConfig { link_bytes_per_cycle, router_latency, inject_latency, hw_collectives } = noc;
+    let HbmConfig { channels_west, channels_south, channel_bytes_per_cycle, access_latency } = hbm;
+    let Workload { seq, head_dim, heads, batch, causal } = workload;
+    SpecKey {
+        arch_name: name.clone(),
+        dataflow: *dataflow,
+        group: *group,
+        nums: [
+            *mesh_x as u64,
+            *mesh_y as u64,
+            *redmule_rows as u64,
+            *redmule_cols as u64,
+            *redmule_fill,
+            *redmule_setup,
+            *spatz_fpus as u64,
+            *spatz_lanes_per_fpu as u64,
+            *spatz_exp_per_fpu as u64,
+            *l1_kib as u64,
+            *l1_bytes_per_cycle,
+            *link_bytes_per_cycle,
+            *router_latency,
+            *inject_latency,
+            *hw_collectives as u64,
+            *channels_west as u64,
+            *channels_south as u64,
+            *channel_bytes_per_cycle,
+            *access_latency,
+            freq_ghz.to_bits(),
+            *seq,
+            *head_dim,
+            *heads,
+            (*batch << 1) | *causal as u64,
+        ],
+    }
+}
+
+/// Global result cache. `Mutex<Option<..>>` because `HashMap::new` is not
+/// const; initialized on first use.
+static MEMO: Mutex<Option<HashMap<SpecKey, ExperimentResult>>> = Mutex::new(None);
+static MEMO_HITS: AtomicUsize = AtomicUsize::new(0);
+static MEMO_MISSES: AtomicUsize = AtomicUsize::new(0);
+
+fn cache_get(key: &SpecKey) -> Option<ExperimentResult> {
+    MEMO.lock()
+        .unwrap()
+        .as_ref()
+        .and_then(|m| m.get(key).cloned())
+}
+
+fn cache_put(key: SpecKey, result: ExperimentResult) {
+    MEMO.lock()
+        .unwrap()
+        .get_or_insert_with(HashMap::new)
+        .insert(key, result);
+}
+
+/// True if the exact content point is already memoized.
+pub fn memo_contains(spec: &ExperimentSpec) -> bool {
+    cache_get(&spec_key(spec)).is_some()
+}
+
+/// Number of memoized experiment points.
+pub fn memo_len() -> usize {
+    MEMO.lock().unwrap().as_ref().map_or(0, |m| m.len())
+}
+
+/// `(hits, misses)` counters since process start.
+pub fn memo_stats() -> (usize, usize) {
+    (MEMO_HITS.load(Ordering::Relaxed), MEMO_MISSES.load(Ordering::Relaxed))
+}
+
+/// Drop every memoized result (tests / long-lived services).
+pub fn clear_memo() {
+    *MEMO.lock().unwrap() = None;
+}
+
+/// Execute one experiment, bypassing the memo cache.
+pub fn run_one_uncached(spec: &ExperimentSpec) -> ExperimentResult {
     let stats = dataflow::run(&spec.arch, &spec.workload, spec.dataflow, spec.group);
     ExperimentResult::from_stats(spec, &stats)
 }
 
-/// Execute all experiments across the worker pool, preserving order.
+/// Execute one experiment, served from the memo cache when possible.
+pub fn run_one(spec: &ExperimentSpec) -> ExperimentResult {
+    let key = spec_key(spec);
+    if let Some(hit) = cache_get(&key) {
+        MEMO_HITS.fetch_add(1, Ordering::Relaxed);
+        return hit;
+    }
+    MEMO_MISSES.fetch_add(1, Ordering::Relaxed);
+    let result = run_one_uncached(spec);
+    cache_put(key, result.clone());
+    result
+}
+
+/// Execute all experiments across the worker pool, bypassing the cache.
+pub fn run_all_uncached(specs: &[ExperimentSpec], threads: usize) -> Vec<ExperimentResult> {
+    pool::par_map(specs, threads, run_one_uncached)
+}
+
+/// Execute all experiments, preserving order. Duplicate content points —
+/// within the batch or already memoized from earlier batches — simulate
+/// exactly once; the worker pool fans out over the unique uncached set.
 pub fn run_all(specs: &[ExperimentSpec], threads: usize) -> Vec<ExperimentResult> {
-    pool::par_map(specs, threads, run_one)
+    let keys: Vec<SpecKey> = specs.iter().map(spec_key).collect();
+
+    // First occurrence of each uncached key.
+    let mut to_run: Vec<usize> = Vec::new();
+    {
+        let mut seen: HashSet<&SpecKey> = HashSet::new();
+        for (i, key) in keys.iter().enumerate() {
+            if seen.insert(key) && cache_get(key).is_none() {
+                to_run.push(i);
+            }
+        }
+    }
+    MEMO_MISSES.fetch_add(to_run.len(), Ordering::Relaxed);
+    MEMO_HITS.fetch_add(specs.len() - to_run.len(), Ordering::Relaxed);
+
+    let unique_specs: Vec<&ExperimentSpec> = to_run.iter().map(|&i| &specs[i]).collect();
+    let fresh = pool::par_map(&unique_specs, threads, |s| run_one_uncached(s));
+
+    let mut local: HashMap<&SpecKey, &ExperimentResult> = HashMap::new();
+    for (&i, result) in to_run.iter().zip(&fresh) {
+        cache_put(keys[i].clone(), result.clone());
+        local.insert(&keys[i], result);
+    }
+
+    keys.iter()
+        .zip(specs)
+        .map(|(key, spec)| match local.get(key) {
+            Some(r) => (*r).clone(),
+            // Normally served by the cache; recompute if `clear_memo` ran
+            // concurrently between the dedup scan and this collect.
+            None => match cache_get(key) {
+                Some(r) => r,
+                None => run_one(spec),
+            },
+        })
+        .collect()
 }
 
 /// Square group sizes valid on an architecture (divide both mesh axes,
@@ -76,6 +255,58 @@ mod tests {
         assert_eq!(results[0].dataflow, Dataflow::Flash2);
         assert_eq!(results[1].dataflow, Dataflow::FlatColl);
         assert!(results.iter().all(|r| r.makespan > 0));
+    }
+
+    #[test]
+    fn spec_key_separates_content_not_just_ids() {
+        let base = ExperimentSpec {
+            arch: table1(),
+            workload: Workload::new(1024, 128, 8, 1),
+            dataflow: Dataflow::FlatColl,
+            group: 8,
+        };
+        assert_eq!(spec_key(&base), spec_key(&base.clone()));
+
+        // Same display id, different content (id only carries arch.name).
+        let mut tweaked = base.clone();
+        tweaked.arch.hbm.access_latency += 1;
+        assert_eq!(base.id(), tweaked.id());
+        assert_ne!(spec_key(&base), spec_key(&tweaked));
+
+        let mut causal = base.clone();
+        causal.workload.causal = true;
+        assert_ne!(spec_key(&base), spec_key(&causal));
+    }
+
+    #[test]
+    fn memoized_results_are_bit_identical_and_computed_once() {
+        // Use a workload unique to this test so other concurrently-running
+        // tests cannot pre-populate these keys.
+        let arch = table2(8);
+        let wl = Workload::new(640, 64, 3, 1);
+        let mk = |dataflow, group| ExperimentSpec {
+            arch: arch.clone(),
+            workload: wl,
+            dataflow,
+            group,
+        };
+        let specs = vec![
+            mk(Dataflow::FlatColl, 4),
+            mk(Dataflow::Flash2, 1),
+            mk(Dataflow::FlatColl, 4), // duplicate of [0]
+        ];
+        assert!(!memo_contains(&specs[0]));
+
+        let uncached = run_all_uncached(&specs, 2);
+        let memoized = run_all(&specs, 2);
+        assert_eq!(uncached, memoized);
+        assert_eq!(memoized[0], memoized[2]);
+        assert!(memo_contains(&specs[0]) && memo_contains(&specs[1]));
+
+        // A second pass is served from the cache and stays identical.
+        let again = run_all(&specs, 2);
+        assert_eq!(memoized, again);
+        assert_eq!(run_one(&specs[1]), memoized[1]);
     }
 
     #[test]

@@ -13,6 +13,17 @@
 //!   single-buffered — the second stream provides the overlap. FA-3 pays a
 //!   per-iteration scheduling overhead on the scalar core (§V-A: "FA-3
 //!   introduces an overhead for more complex scheduling").
+//!
+//! §Perf: within a tile stream, every block of the same shape `(m_r,
+//! t_c_eff)` — i.e. every full-height block of a head — emits an identical
+//! subgraph up to (a) the previous block's completion dependency and
+//! (b) the K/V channel rotation `(tid + blk_no + j) mod n_chan`. The first
+//! instance is built normally and registered as a template; repetitions
+//! are stamped with [`Program::stamp_range`] and the K/V loads' channel
+//! resource + NoC latency patched for the rotation (DMA occupancy depends
+//! only on the byte count, so it copies verbatim). Stamped and naive
+//! builds are op-for-op identical
+//! (`tests::stamped_build_is_identical_to_naive_build`).
 
 use crate::arch::ArchConfig;
 use crate::engines::{dma_hbm_time, matmul_cycles, SpatzOp};
@@ -20,6 +31,7 @@ use crate::hbm::HbmMap;
 use crate::noc::Topology;
 use crate::sim::{Component, OpId, Program, ResourceId};
 
+use super::opt_deps;
 use super::tiling::flash_block_size;
 use super::Workload;
 
@@ -31,6 +43,46 @@ struct TileCtx {
     redmule: ResourceId,
     spatz: ResourceId,
     scalar: ResourceId,
+}
+
+/// Per-shape engine costs, memoized per `(m_r, m_c)` (§Perf: the seed
+/// recomputed these for every inner iteration of every block of every
+/// tile; they only depend on the block shape).
+#[derive(Clone, Copy)]
+struct ShapeCosts {
+    qk: u64,
+    scale: u64,
+    sm1_base: u64,
+    sm2: u64,
+    pv: u64,
+}
+
+fn shape_costs(arch: &ArchConfig, m_r: u64, m_c: u64, d: u64) -> ShapeCosts {
+    let t = &arch.tile;
+    let scale = SpatzOp::Scale { elems: m_r * m_c }.cycles(t);
+    ShapeCosts {
+        qk: matmul_cycles(t, m_r, d, m_c),
+        scale,
+        sm1_base: scale
+            + SpatzOp::RowMax { rows: m_r, cols: m_c }.cycles(t)
+            + SpatzOp::StatsUpdate { rows: m_r }.cycles(t),
+        sm2: SpatzOp::Exp { elems: m_r * m_c }.cycles(t)
+            + SpatzOp::RowSum { rows: m_r, cols: m_c }.cycles(t)
+            + SpatzOp::StatsUpdate { rows: m_r }.cycles(t),
+        pv: matmul_cycles(t, m_r, m_c, d),
+    }
+}
+
+/// A registered block template within one tile stream.
+struct BlockTemplate {
+    m_r: u64,
+    t_c_eff: u64,
+    base: u32,
+    len: u32,
+    /// Offsets (relative to `base`) of the K/V load ops, whose channel
+    /// resource rotates with the block number.
+    kv_ops: Vec<u32>,
+    blk_no: usize,
 }
 
 /// Build the FlashAttention program (`asynchronous` = FA-3 schedule).
@@ -46,7 +98,18 @@ pub fn flash_program_ext(
     asynchronous: bool,
     double_buffer: bool,
 ) -> Program {
-    let mut prog = Program::new();
+    flash_program_ext_in(Program::new(), arch, wl, asynchronous, double_buffer)
+}
+
+/// Arena-aware builder: constructs into `prog` (typically taken from a
+/// [`crate::sim::ProgramArena`]) and seals the result.
+pub(crate) fn flash_program_ext_in(
+    mut prog: Program,
+    arch: &ArchConfig,
+    wl: &Workload,
+    asynchronous: bool,
+    double_buffer: bool,
+) -> Program {
     let topo = Topology::new(arch.mesh_x, arch.mesh_y);
     let hbm_map = HbmMap::new(arch);
     let n_tiles = topo.num_tiles();
@@ -83,12 +146,17 @@ pub fn flash_program_ext(
         }
     }
 
+    let mut hops_by_chan: Vec<u64> = vec![0; n_chan];
     for tid in 0..n_tiles {
         let (x, y) = topo.coords(tid as u32);
         let blocks = &tile_blocks[tid];
         if blocks.is_empty() {
             continue;
         }
+        for (c, h) in hops_by_chan.iter_mut().enumerate() {
+            *h = topo_hops(arch, x, y, c, &hbm_map).max(1);
+        }
+        let row_ch = hbm_map.row_channel(x, y);
         if asynchronous {
             // Two interleaved streams sharing the tile's engines.
             let (even, odd): (Vec<_>, Vec<_>) =
@@ -96,34 +164,34 @@ pub fn flash_program_ext(
             for stream in [even, odd] {
                 let list: Vec<_> = stream.into_iter().map(|(_, b)| *b).collect();
                 build_stream(
-                    &mut prog, arch, wl, &hbm_map, &tiles[tid], tid as u32, x, y, &list, m, t_c, d,
-                    eb, true, double_buffer,
+                    &mut prog, arch, wl, row_ch, &hops_by_chan, &tiles[tid], tid as u32, &list,
+                    m, t_c, d, eb, true, double_buffer,
                 );
             }
         } else {
             build_stream(
-                &mut prog, arch, wl, &hbm_map, &tiles[tid], tid as u32, x, y, blocks, m, t_c, d,
-                eb, false, double_buffer,
+                &mut prog, arch, wl, row_ch, &hops_by_chan, &tiles[tid], tid as u32, blocks, m,
+                t_c, d, eb, false, double_buffer,
             );
         }
     }
 
     prog.flops = wl.matmul_flops();
+    prog.seal();
     prog
 }
 
-/// Emit one serial stream of blocks for a tile. Returns nothing; deps keep
-/// the stream internally ordered while engines arbitrate across streams.
+/// Emit one serial stream of blocks for a tile. Deps keep the stream
+/// internally ordered while engines arbitrate across streams.
 #[allow(clippy::too_many_arguments)]
 fn build_stream(
     prog: &mut Program,
     arch: &ArchConfig,
     wl: &Workload,
-    hbm_map: &HbmMap,
+    row_ch: crate::hbm::ChannelRef,
+    hops_by_chan: &[u64],
     ctx: &TileCtx,
     tid: u32,
-    x: usize,
-    y: usize,
     blocks: &[(u64, u64, u64)],
     m: u64,
     t_c: u64,
@@ -133,18 +201,52 @@ fn build_stream(
     double_buffer: bool,
 ) {
     let chan_base = |c: usize| ResourceId(c as u32);
-    let n_chan = hbm_map.total_channels();
-    let row_ch = hbm_map.row_channel(x, y);
+    let n_chan = hops_by_chan.len();
+    let stamping = super::template_stamping();
+    // DMA latency decomposition (mirrors `dma_hbm_time`): occupancy is a
+    // function of bytes alone, latency adds per-hop routing.
+    let kv_lat_base = arch.hbm.access_latency + 2 * arch.noc.inject_latency;
+    let router = arch.noc.router_latency;
+
     let mut prev_block_end: Option<OpId> = None;
+    let mut templates: Vec<BlockTemplate> = Vec::new();
 
     for (blk_no, &(_b, _h, i)) in blocks.iter().enumerate() {
         // Row-block height (last block may be partial).
         let m_r = (wl.seq - i * m).min(m);
-        let start_deps: Vec<OpId> = prev_block_end.into_iter().collect();
+        // Causal: K/V blocks strictly above the diagonal are skipped.
+        let t_c_eff = if wl.causal { (i + 1).min(t_c) } else { t_c };
+
+        if stamping {
+            if let (Some(prev), Some(t)) = (
+                prev_block_end,
+                templates.iter().find(|t| t.m_r == m_r && t.t_c_eff == t_c_eff),
+            ) {
+                let new_base = prog.stamp_range(t.base, t.len, prev);
+                // Rotate the stamped K/V loads to this block's channels
+                // and re-derive their hop-dependent latency.
+                let rot = blk_no - t.blk_no;
+                for &off in &t.kv_ops {
+                    let op = &mut prog.ops[(new_base + off) as usize];
+                    let chan = (op.resource.0 as usize + rot) % n_chan;
+                    op.resource = chan_base(chan);
+                    op.latency = kv_lat_base + hops_by_chan[chan] * router;
+                }
+                prev_block_end = Some(OpId(new_base + t.len - 1));
+                continue;
+            }
+        }
+
+        let block_base = prog.num_ops() as u32;
+        let gated = prev_block_end.is_some();
+        let start_dep = prev_block_end;
+        let mut kv_ops: Vec<u32> = Vec::with_capacity(t_c_eff as usize);
 
         // Load Q_i through the tile's row channel (west edge).
         let q_bytes = m_r * d * eb;
         let tq = dma_hbm_time(&arch.hbm, &arch.noc, q_bytes, row_ch.hops);
+        let mut dbuf = [OpId(0); 2];
+        let nd = opt_deps(&mut dbuf, start_dep, None);
         let load_q = prog.op(
             chan_base(row_ch.index),
             tq.occupancy,
@@ -152,31 +254,36 @@ fn build_stream(
             Component::HbmAccess,
             tid,
             q_bytes,
-            &start_deps,
+            &dbuf[..nd],
         );
 
-        let mut load_kv: Vec<OpId> = Vec::with_capacity(t_c as usize);
-        let mut pv: Vec<OpId> = Vec::with_capacity(t_c as usize);
+        let rs_cycles = SpatzOp::Rescale { rows: m_r, elems: m_r * d }.cycles(&arch.tile);
+        let mut pv: Vec<OpId> = Vec::with_capacity(t_c_eff as usize);
         let mut last_stage: Option<OpId> = None;
+        let mut costs_memo: Option<(u64, ShapeCosts)> = None;
 
-        // Causal: K/V blocks strictly above the diagonal are skipped.
-        let t_c_eff = if wl.causal { (i + 1).min(t_c) } else { t_c };
         for j in 0..t_c_eff {
             let m_c = (wl.seq - j * m).min(m);
+            let costs = match costs_memo {
+                Some((key, c)) if key == m_c => c,
+                _ => {
+                    let c = shape_costs(arch, m_r, m_c, d);
+                    costs_memo = Some((m_c, c));
+                    c
+                }
+            };
             // K/V blocks are address-interleaved across channels (no
             // spatial affinity for per-tile independent blocks).
             let kv_chan = (tid as usize + blk_no + j as usize) % n_chan;
-            let kv_hops = (topo_hops(arch, x, y, kv_chan, hbm_map)).max(1);
+            let kv_hops = hops_by_chan[kv_chan];
             let kv_bytes = 2 * m_c * d * eb;
             let tkv = dma_hbm_time(&arch.hbm, &arch.noc, kv_bytes, kv_hops);
             // Buffering: double-buffered (dep on pv[j-2]) for the sync
             // schedule, single-buffered (dep on pv[j-1]) for async streams.
             let depth = if asynchronous || !double_buffer { 1 } else { 2 };
             let buf_dep = j.checked_sub(depth).map(|k| pv[k as usize]);
-            let mut deps = start_deps.clone();
-            if let Some(dp) = buf_dep {
-                deps.push(dp);
-            }
+            let mut dbuf = [OpId(0); 2];
+            let nd = opt_deps(&mut dbuf, start_dep, buf_dep);
             let lkv = prog.op(
                 chan_base(kv_chan),
                 tkv.occupancy,
@@ -184,9 +291,9 @@ fn build_stream(
                 Component::HbmAccess,
                 tid,
                 kv_bytes,
-                &deps,
+                &dbuf[..nd],
             );
-            load_kv.push(lkv);
+            kv_ops.push(lkv.0 - block_base);
 
             // Scalar-core scheduling overhead (FA-3 only).
             let sched = if asynchronous {
@@ -204,64 +311,50 @@ fn build_stream(
             };
 
             // S = Q_i · K_jᵀ on the matrix engine.
-            let mut qk_deps = vec![load_q, lkv];
+            let mut qbuf = [OpId(0); 4];
+            qbuf[0] = load_q;
+            qbuf[1] = lkv;
+            let mut qn = 2;
             if let Some(ls) = last_stage {
-                qk_deps.push(ls);
+                qbuf[qn] = ls;
+                qn += 1;
             }
             if let Some(s) = sched {
-                qk_deps.push(s);
+                qbuf[qn] = s;
+                qn += 1;
             }
             let qk = prog.op(
                 ctx.redmule,
-                matmul_cycles(&arch.tile, m_r, d, m_c),
+                costs.qk,
                 0,
                 Component::RedMule,
                 tid,
                 0,
-                &qk_deps,
+                &qbuf[..qn],
             );
 
             // Softmax phase 1: scale by 1/√D, row maxima, running max.
             // Diagonal blocks of causal workloads additionally apply the
             // triangular mask on the vector engine.
-            let mask_cycles = if wl.causal && j == i {
-                SpatzOp::Scale { elems: m_r * m_c }.cycles(&arch.tile)
-            } else {
-                0
-            };
-            let sm1_cycles = mask_cycles
-                + SpatzOp::Scale { elems: m_r * m_c }.cycles(&arch.tile)
-                + SpatzOp::RowMax { rows: m_r, cols: m_c }.cycles(&arch.tile)
-                + SpatzOp::StatsUpdate { rows: m_r }.cycles(&arch.tile);
-            let sm1 = prog.op(ctx.spatz, sm1_cycles, 0, Component::Spatz, tid, 0, &[qk]);
-
-            // Softmax phase 2: exp, row sums, running denominator.
-            let sm2_cycles = SpatzOp::Exp { elems: m_r * m_c }.cycles(&arch.tile)
-                + SpatzOp::RowSum { rows: m_r, cols: m_c }.cycles(&arch.tile)
-                + SpatzOp::StatsUpdate { rows: m_r }.cycles(&arch.tile);
-            let sm2 = prog.op(ctx.spatz, sm2_cycles, 0, Component::Spatz, tid, 0, &[sm1]);
-
-            // Rescale the O accumulator by e^{m_old - m_new}.
-            let rs = prog.op(
+            let mask_cycles = if wl.causal && j == i { costs.scale } else { 0 };
+            let sm1 = prog.op(
                 ctx.spatz,
-                SpatzOp::Rescale { rows: m_r, elems: m_r * d }.cycles(&arch.tile),
+                mask_cycles + costs.sm1_base,
                 0,
                 Component::Spatz,
                 tid,
                 0,
-                &[sm2],
+                &[qk],
             );
 
+            // Softmax phase 2: exp, row sums, running denominator.
+            let sm2 = prog.op(ctx.spatz, costs.sm2, 0, Component::Spatz, tid, 0, &[sm1]);
+
+            // Rescale the O accumulator by e^{m_old - m_new}.
+            let rs = prog.op(ctx.spatz, rs_cycles, 0, Component::Spatz, tid, 0, &[sm2]);
+
             // O += P̃ · V_j.
-            let pvop = prog.op(
-                ctx.redmule,
-                matmul_cycles(&arch.tile, m_r, m_c, d),
-                0,
-                Component::RedMule,
-                tid,
-                0,
-                &[rs],
-            );
+            let pvop = prog.op(ctx.redmule, costs.pv, 0, Component::RedMule, tid, 0, &[rs]);
             pv.push(pvop);
             last_stage = Some(pvop);
         }
@@ -287,6 +380,16 @@ fn build_stream(
             o_bytes,
             &[norm],
         );
+        if stamping && gated {
+            templates.push(BlockTemplate {
+                m_r,
+                t_c_eff,
+                base: block_base,
+                len: prog.num_ops() as u32 - block_base,
+                kv_ops,
+                blk_no,
+            });
+        }
         prev_block_end = Some(store);
     }
 }
@@ -309,6 +412,7 @@ fn topo_hops(arch: &ArchConfig, x: usize, y: usize, chan: usize, _m: &HbmMap) ->
 mod tests {
     use super::*;
     use crate::arch::presets::table1;
+    use crate::dataflow::{assert_programs_equal, set_template_stamping};
     use crate::sim::execute;
 
     fn small_wl() -> Workload {
@@ -322,6 +426,30 @@ mod tests {
         assert!(p.validate().is_ok());
         assert!(p.num_ops() > 0);
         assert_eq!(p.flops, small_wl().matmul_flops());
+        assert!(p.is_sealed());
+    }
+
+    #[test]
+    fn stamped_build_is_identical_to_naive_build() {
+        // Stamped repetitions must reproduce the naive emission exactly,
+        // including the per-block K/V channel rotation. The 8×8 mesh with
+        // many heads gives every tile stream several same-shape blocks
+        // (≥3, so the template registered at the second block is stamped).
+        let _guard = crate::dataflow::STAMPING_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let arch = crate::arch::presets::table2(8);
+        for (wl, asyn) in [
+            (Workload::new(1024, 128, 192, 2), false),
+            (Workload::new(1024, 128, 192, 2), true),
+            (Workload::new(2048, 64, 96, 1).with_causal(true), false),
+        ] {
+            let stamped = flash_program(&arch, &wl, asyn);
+            set_template_stamping(false);
+            let naive = flash_program(&arch, &wl, asyn);
+            set_template_stamping(true);
+            assert_programs_equal(&stamped, &naive);
+        }
     }
 
     #[test]

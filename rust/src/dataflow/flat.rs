@@ -21,6 +21,14 @@
 //! two independent op streams sharing the group's engines and buses
 //! (§III-C): matrix multiplications of one head overlap data movement and
 //! softmax of the other.
+//!
+//! §Perf: within a stream, every block with the same row-block index `i`
+//! emits an identical op subgraph whose only external dependency is the
+//! previous block's barrier. The first such block is built normally and
+//! registered as a *template*; all repetitions are instantiated with
+//! [`Program::stamp_range`], skipping the cost-model and op-emission work
+//! entirely. Stamped and naive builds are op-for-op identical
+//! (`tests::stamped_build_is_identical_to_naive_build`).
 
 use crate::arch::ArchConfig;
 use crate::engines::{dma_hbm_time, matmul_cycles, SpatzOp};
@@ -29,6 +37,7 @@ use crate::noc::{collective_time, CollectiveKind};
 use crate::sim::program::NO_TILE;
 use crate::sim::{Component, OpId, Program, ResourceId};
 
+use super::opt_deps;
 use super::tiling::FlatTiling;
 use super::Workload;
 
@@ -63,8 +72,20 @@ pub fn flat_program_ext(
     asynchronous: bool,
     double_buffer: bool,
 ) -> Program {
+    flat_program_ext_in(Program::new(), arch, wl, group, asynchronous, double_buffer)
+}
+
+/// Arena-aware builder: constructs into `prog` (typically taken from a
+/// [`crate::sim::ProgramArena`]) and seals the result.
+pub(crate) fn flat_program_ext_in(
+    mut prog: Program,
+    arch: &ArchConfig,
+    wl: &Workload,
+    group: usize,
+    asynchronous: bool,
+    double_buffer: bool,
+) -> Program {
     let tiling = FlatTiling::resolve(arch, wl.head_dim, wl.seq, group, asynchronous);
-    let mut prog = Program::new();
     let hbm_map = HbmMap::new(arch);
     let chan_res = prog.resources(hbm_map.total_channels());
 
@@ -115,6 +136,7 @@ pub fn flat_program_ext(
     }
 
     prog.flops = wl.matmul_flops();
+    prog.seal();
     prog
 }
 
@@ -139,25 +161,45 @@ fn build_group_stream(
     let tid = |lx: usize, ly: usize| arch.tile_id(ox + lx, oy + ly);
     let local = |lx: usize, ly: usize| ly * g + lx;
     let n_dest = (g - 1) as u64;
+    let stamping = super::template_stamping();
 
-    // Row height of the last (possibly partial) row block.
     let mut prev_barrier: Option<OpId> = None;
+    // Block templates, keyed by row-block index `i` (which determines the
+    // whole block geometry): `(i, first op, op count)`. Only blocks gated
+    // on a previous barrier are registered, so every stamped instance has
+    // exactly one external dependency to rewrite.
+    let mut templates: Vec<(u64, u32, u32)> = Vec::new();
 
     for &blk in blocks {
         let i = blk % tiling.t_r; // row-block index within the head
+
+        if stamping {
+            if let (Some(prev), Some((_, base, len))) =
+                (prev_barrier, templates.iter().find(|t| t.0 == i).copied())
+            {
+                let new_base = prog.stamp_range(base, len, prev);
+                prev_barrier = Some(OpId(new_base + len - 1));
+                continue;
+            }
+        }
+
+        let block_base = prog.num_ops() as u32;
         let m_r_block = (wl.seq - i * tiling.block).min(tiling.block);
         // Per-tile slice rows for this block (partial last block shrinks
         // every row's slice proportionally; sizes stay symmetric).
         let t_r_slice = m_r_block.div_ceil(tiling.group).max(1);
-        let start_deps: Vec<OpId> = prev_barrier.into_iter().collect();
+        let start_dep = prev_barrier;
 
         // ① West-edge tiles load Q slices; ② row-wise multicast.
+        let q_bytes = t_r_slice * d * eb;
+        let mt_q = collective_time(&arch.noc, q_bytes, n_dest, CollectiveKind::Multicast);
         let mut q_mcast: Vec<OpId> = Vec::with_capacity(g);
         for ly in 0..g {
             let (gx, gy) = (ox, oy + ly);
             let ch = hbm_map.row_channel(gx, gy);
-            let q_bytes = t_r_slice * d * eb;
             let tq = dma_hbm_time(&arch.hbm, &arch.noc, q_bytes, ch.hops);
+            let mut dbuf = [OpId(0); 2];
+            let nd = opt_deps(&mut dbuf, start_dep, None);
             let load = prog.op(
                 chan_res[ch.index],
                 tq.occupancy,
@@ -165,13 +207,12 @@ fn build_group_stream(
                 Component::HbmAccess,
                 tid(0, ly),
                 q_bytes,
-                &start_deps,
+                &dbuf[..nd],
             );
-            let mt = collective_time(&arch.noc, q_bytes, n_dest, CollectiveKind::Multicast);
             let mc = prog.op(
                 gc.row_bus[ly],
-                mt.occupancy,
-                mt.latency,
+                mt_q.occupancy,
+                mt_q.latency,
                 Component::Multicast,
                 tid(0, ly),
                 0,
@@ -181,10 +222,8 @@ fn build_group_stream(
         }
 
         // Inner loop over K/V column blocks.
-        let mut kv_mcast_prev: Vec<OpId> = Vec::new();
         let mut pv_prev: Vec<Option<OpId>> = vec![None; g * g]; // pv[j-1] per tile
         let mut pv_prev2: Vec<Option<OpId>> = vec![None; g * g]; // pv[j-2] per tile
-        let mut last_pv: Vec<OpId> = Vec::new();
 
         // Causal: group-level K/V blocks above the diagonal are skipped;
         // the diagonal block is masked on the vector engine.
@@ -193,12 +232,35 @@ fn build_group_stream(
             let m_c_block = (wl.seq - j * tiling.block).min(tiling.block);
             let t_c_slice = m_c_block.div_ceil(tiling.group).max(1);
 
+            // Per-iteration costs are identical across the g / g² emission
+            // loops below — compute each once (§Perf).
+            let kv_bytes = 2 * t_c_slice * d * eb;
+            let mt_kv = collective_time(&arch.noc, kv_bytes, n_dest, CollectiveKind::Multicast);
+            let qk_cycles = matmul_cycles(&arch.tile, t_r_slice, d, t_c_slice);
+            let mask_cycles = if wl.causal && j == i {
+                SpatzOp::Scale { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
+            } else {
+                0
+            };
+            let sm1_cycles = mask_cycles
+                + SpatzOp::Scale { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
+                + SpatzOp::RowMax { rows: t_r_slice, cols: t_c_slice }.cycles(&arch.tile)
+                + SpatzOp::StatsUpdate { rows: t_r_slice }.cycles(&arch.tile);
+            let sm2_cycles = SpatzOp::Exp { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
+                + SpatzOp::RowSum { rows: t_r_slice, cols: t_c_slice }.cycles(&arch.tile);
+            let sm3_cycles = SpatzOp::StatsUpdate { rows: t_r_slice }.cycles(&arch.tile)
+                + SpatzOp::Rescale { rows: t_r_slice, elems: t_r_slice * d }.cycles(&arch.tile);
+            let pv_cycles = matmul_cycles(&arch.tile, t_r_slice, t_c_slice, d);
+            let stat_bytes = t_r_slice * eb;
+            let rt_max = collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::MaxReduce);
+            let rt_sum = collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::SumReduce);
+            let mt_stat = collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::Multicast);
+
             // ③ South-edge tiles load Kᵀ/V slices; ④ column multicast.
             let mut kv_mcast: Vec<OpId> = Vec::with_capacity(g);
             for lx in 0..g {
                 let (gx, gy) = (ox + lx, oy + g - 1);
                 let ch = hbm_map.col_channel(gx, gy);
-                let kv_bytes = 2 * t_c_slice * d * eb;
                 let tkv = dma_hbm_time(&arch.hbm, &arch.noc, kv_bytes, ch.hops);
                 let south = local(lx, g - 1);
                 // Buffering: double-buffered for sync, single for async
@@ -208,8 +270,8 @@ fn build_group_stream(
                 } else {
                     pv_prev2[south]
                 };
-                let mut deps = start_deps.clone();
-                deps.extend(buf_dep);
+                let mut dbuf = [OpId(0); 2];
+                let nd = opt_deps(&mut dbuf, start_dep, buf_dep);
                 let load = prog.op(
                     chan_res[ch.index],
                     tkv.occupancy,
@@ -217,13 +279,12 @@ fn build_group_stream(
                     Component::HbmAccess,
                     tid(lx, g - 1),
                     kv_bytes,
-                    &deps,
+                    &dbuf[..nd],
                 );
-                let mt = collective_time(&arch.noc, kv_bytes, n_dest, CollectiveKind::Multicast);
                 let mc = prog.op(
                     gc.col_bus[lx],
-                    mt.occupancy,
-                    mt.latency,
+                    mt_kv.occupancy,
+                    mt_kv.latency,
                     Component::Multicast,
                     tid(lx, g - 1),
                     0,
@@ -233,37 +294,33 @@ fn build_group_stream(
             }
 
             let mut sm1_row: Vec<Vec<OpId>> = vec![Vec::with_capacity(g); g];
-            let mut qk_all: Vec<Vec<OpId>> = vec![Vec::with_capacity(g); g];
             for ly in 0..g {
                 for lx in 0..g {
                     let tl = local(lx, ly);
                     // ⑤ S slice = Q_iy · Kᵀ_jx.
-                    let mut deps = vec![q_mcast[ly], kv_mcast[lx]];
-                    deps.extend(pv_prev[tl]); // serialize with own prior iteration
+                    let mut dbuf = [OpId(0); 3];
+                    dbuf[0] = q_mcast[ly];
+                    dbuf[1] = kv_mcast[lx];
+                    let mut nd = 2;
+                    if let Some(p) = pv_prev[tl] {
+                        // serialize with own prior iteration
+                        dbuf[nd] = p;
+                        nd += 1;
+                    }
                     let qk = prog.op(
                         gc.redmule[tl],
-                        matmul_cycles(&arch.tile, t_r_slice, d, t_c_slice),
+                        qk_cycles,
                         0,
                         Component::RedMule,
                         tid(lx, ly),
                         0,
-                        &deps,
+                        &dbuf[..nd],
                     );
-                    qk_all[ly].push(qk);
                     // ⑥⑦ scale + local row maxima + running max (+ causal
                     // triangular mask on diagonal blocks).
-                    let mask = if wl.causal && j == i {
-                        SpatzOp::Scale { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
-                    } else {
-                        0
-                    };
-                    let c = mask
-                        + SpatzOp::Scale { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
-                        + SpatzOp::RowMax { rows: t_r_slice, cols: t_c_slice }.cycles(&arch.tile)
-                        + SpatzOp::StatsUpdate { rows: t_r_slice }.cycles(&arch.tile);
                     let sm1 = prog.op(
                         gc.spatz[tl],
-                        c,
+                        sm1_cycles,
                         0,
                         Component::Spatz,
                         tid(lx, ly),
@@ -275,24 +332,21 @@ fn build_group_stream(
             }
 
             // ⑧⑨ Row-wise max reduction + multicast of the global maxima.
-            let stat_bytes = t_r_slice * eb;
             let mut max_mc: Vec<OpId> = Vec::with_capacity(g);
             for ly in 0..g {
-                let rt = collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::MaxReduce);
                 let red = prog.op(
                     gc.row_bus[ly],
-                    rt.occupancy,
-                    rt.latency,
+                    rt_max.occupancy,
+                    rt_max.latency,
                     Component::MaxReduce,
                     tid(0, ly),
                     0,
                     &sm1_row[ly],
                 );
-                let mt = collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::Multicast);
                 let mc = prog.op(
                     gc.row_bus[ly],
-                    mt.occupancy,
-                    mt.latency,
+                    mt_stat.occupancy,
+                    mt_stat.latency,
                     Component::Multicast,
                     tid(0, ly),
                     0,
@@ -306,11 +360,9 @@ fn build_group_stream(
             for ly in 0..g {
                 for lx in 0..g {
                     let tl = local(lx, ly);
-                    let c = SpatzOp::Exp { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
-                        + SpatzOp::RowSum { rows: t_r_slice, cols: t_c_slice }.cycles(&arch.tile);
                     let sm2 = prog.op(
                         gc.spatz[tl],
-                        c,
+                        sm2_cycles,
                         0,
                         Component::Spatz,
                         tid(lx, ly),
@@ -322,21 +374,19 @@ fn build_group_stream(
             }
             let mut sum_mc: Vec<OpId> = Vec::with_capacity(g);
             for ly in 0..g {
-                let rt = collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::SumReduce);
                 let red = prog.op(
                     gc.row_bus[ly],
-                    rt.occupancy,
-                    rt.latency,
+                    rt_sum.occupancy,
+                    rt_sum.latency,
                     Component::SumReduce,
                     tid(0, ly),
                     0,
                     &sm2_row[ly],
                 );
-                let mt = collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::Multicast);
                 let mc = prog.op(
                     gc.row_bus[ly],
-                    mt.occupancy,
-                    mt.latency,
+                    mt_stat.occupancy,
+                    mt_stat.latency,
                     Component::Multicast,
                     tid(0, ly),
                     0,
@@ -346,16 +396,12 @@ fn build_group_stream(
             }
 
             // ⑭–⑰ stats update, O rescale, O += P̃·V.
-            last_pv.clear();
             for ly in 0..g {
                 for lx in 0..g {
                     let tl = local(lx, ly);
-                    let c = SpatzOp::StatsUpdate { rows: t_r_slice }.cycles(&arch.tile)
-                        + SpatzOp::Rescale { rows: t_r_slice, elems: t_r_slice * d }
-                            .cycles(&arch.tile);
                     let sm3 = prog.op(
                         gc.spatz[tl],
-                        c,
+                        sm3_cycles,
                         0,
                         Component::Spatz,
                         tid(lx, ly),
@@ -364,7 +410,7 @@ fn build_group_stream(
                     );
                     let pv = prog.op(
                         gc.redmule[tl],
-                        matmul_cycles(&arch.tile, t_r_slice, t_c_slice, d),
+                        pv_cycles,
                         0,
                         Component::RedMule,
                         tid(lx, ly),
@@ -373,14 +419,15 @@ fn build_group_stream(
                     );
                     pv_prev2[tl] = pv_prev[tl];
                     pv_prev[tl] = Some(pv);
-                    last_pv.push(pv);
                 }
             }
-            kv_mcast_prev = kv_mcast;
         }
-        let _ = kv_mcast_prev;
 
         // ⑱ normalize, ⑲ row-reduce O to the west edge, ⑳ store.
+        let norm_cycles =
+            SpatzOp::Normalize { rows: t_r_slice, elems: t_r_slice * d }.cycles(&arch.tile);
+        let o_bytes = t_r_slice * d * eb;
+        let rt_o = collective_time(&arch.noc, o_bytes, n_dest, CollectiveKind::SumReduce);
         let mut stores: Vec<OpId> = Vec::with_capacity(g);
         let mut norm_row: Vec<Vec<OpId>> = vec![Vec::with_capacity(g); g];
         for ly in 0..g {
@@ -388,8 +435,7 @@ fn build_group_stream(
                 let tl = local(lx, ly);
                 let norm = prog.op(
                     gc.spatz[tl],
-                    SpatzOp::Normalize { rows: t_r_slice, elems: t_r_slice * d }
-                        .cycles(&arch.tile),
+                    norm_cycles,
                     0,
                     Component::Spatz,
                     tid(lx, ly),
@@ -400,12 +446,10 @@ fn build_group_stream(
             }
         }
         for ly in 0..g {
-            let o_bytes = t_r_slice * d * eb;
-            let rt = collective_time(&arch.noc, o_bytes, n_dest, CollectiveKind::SumReduce);
             let red = prog.op(
                 gc.row_bus[ly],
-                rt.occupancy,
-                rt.latency,
+                rt_o.occupancy,
+                rt_o.latency,
                 Component::SumReduce,
                 tid(0, ly),
                 0,
@@ -428,6 +472,9 @@ fn build_group_stream(
 
         // Block barrier: the stream's next block starts after all stores.
         let barrier = prog.op(gc.sync, 0, 0, Component::Other, NO_TILE, 0, &stores);
+        if stamping && start_dep.is_some() {
+            templates.push((i, block_base, prog.num_ops() as u32 - block_base));
+        }
         prev_barrier = Some(barrier);
     }
 }
@@ -436,7 +483,9 @@ fn build_group_stream(
 mod tests {
     use super::*;
     use crate::arch::presets::{table1, table1_sw_collectives};
-    use crate::dataflow::{run, tracked_tile, Dataflow};
+    use crate::dataflow::{
+        assert_programs_equal, run, set_template_stamping, tracked_tile, Dataflow,
+    };
     use crate::sim::execute;
 
     fn wl_big() -> Workload {
@@ -453,6 +502,30 @@ mod tests {
         let p = flat_program(&arch, &wl_small(), 8, false);
         assert!(p.validate().is_ok());
         assert!(p.num_ops() > 0);
+        assert!(p.is_sealed());
+    }
+
+    #[test]
+    fn stamped_build_is_identical_to_naive_build() {
+        // Template stamping is a pure construction-speed optimization: the
+        // emitted program must match the naive per-block emission op for
+        // op, dep for dep.
+        let _guard = crate::dataflow::STAMPING_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let arch = table1();
+        for (wl, group, asyn) in [
+            (Workload::new(2048, 128, 24, 1), 8usize, false),
+            (Workload::new(4096, 128, 8, 1), 32, true),
+            (Workload::new(1024, 64, 32, 2).with_causal(true), 8, false),
+            (Workload::new(512, 128, 32, 4), 16, true),
+        ] {
+            let stamped = flat_program(&arch, &wl, group, asyn);
+            set_template_stamping(false);
+            let naive = flat_program(&arch, &wl, group, asyn);
+            set_template_stamping(true);
+            assert_programs_equal(&stamped, &naive);
+        }
     }
 
     #[test]

@@ -20,11 +20,46 @@ pub mod flat;
 pub mod summa;
 pub mod tiling;
 
+use std::sync::atomic::{AtomicBool, Ordering};
+
 use crate::arch::ArchConfig;
-use crate::sim::{execute, Program, RunStats};
+use crate::sim::{execute, OpId, Program, ProgramArena, RunStats};
 
 pub use summa::{summa_program, GemmWorkload};
 pub use tiling::{flash_block_size, flat_slice_size, FlatTiling};
+
+/// Global switch for builder template stamping (§Perf). Stamped and naive
+/// builds emit op-for-op identical programs (asserted by the
+/// `stamped_build_is_identical_to_naive_build` tests); the switch exists so
+/// benches can measure the naive baseline and tests can compare both paths.
+static TEMPLATE_STAMPING: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable template stamping in the dataflow builders.
+pub fn set_template_stamping(enabled: bool) {
+    TEMPLATE_STAMPING.store(enabled, Ordering::Relaxed);
+}
+
+/// Current template-stamping setting.
+pub fn template_stamping() -> bool {
+    TEMPLATE_STAMPING.load(Ordering::Relaxed)
+}
+
+/// Pack up to two optional deps into `buf`, returning the count — the
+/// builders' allocation-free dep-list helper (§Perf: the seed cloned a
+/// `Vec` per emitted op for these).
+#[inline]
+pub(crate) fn opt_deps(buf: &mut [OpId; 2], a: Option<OpId>, b: Option<OpId>) -> usize {
+    let mut n = 0;
+    if let Some(x) = a {
+        buf[n] = x;
+        n += 1;
+    }
+    if let Some(x) = b {
+        buf[n] = x;
+        n += 1;
+    }
+    n
+}
 
 /// An MHA prefill workload (one attention layer).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -137,32 +172,72 @@ impl Dataflow {
 /// force hardware collectives) so a single `ArchConfig` can be used for
 /// every bar of Fig. 3.
 pub fn build_program(arch: &ArchConfig, wl: &Workload, df: Dataflow, group: usize) -> Program {
-    match df {
-        Dataflow::Flash2 => flash::flash_program(arch, wl, false),
-        Dataflow::Flash3 => flash::flash_program(arch, wl, true),
+    build_program_into(Program::new(), arch, wl, df, group)
+}
+
+/// Like [`build_program`], but constructing into buffers recycled by a
+/// [`ProgramArena`] — the sweep-scale entry point used by [`run`].
+pub fn build_program_in(
+    arena: &mut ProgramArena,
+    arch: &ArchConfig,
+    wl: &Workload,
+    df: Dataflow,
+    group: usize,
+) -> Program {
+    build_program_into(arena.fresh(), arch, wl, df, group)
+}
+
+fn build_program_into(
+    prog: Program,
+    arch: &ArchConfig,
+    wl: &Workload,
+    df: Dataflow,
+    group: usize,
+) -> Program {
+    let prog = match df {
+        Dataflow::Flash2 => flash::flash_program_ext_in(prog, arch, wl, false, true),
+        Dataflow::Flash3 => flash::flash_program_ext_in(prog, arch, wl, true, true),
         Dataflow::Flat => {
             let mut a = arch.clone();
             a.noc.hw_collectives = false;
-            flat::flat_program(&a, wl, group, false)
+            flat::flat_program_ext_in(prog, &a, wl, group, false, true)
         }
         Dataflow::FlatColl => {
             let mut a = arch.clone();
             a.noc.hw_collectives = true;
-            flat::flat_program(&a, wl, group, false)
+            flat::flat_program_ext_in(prog, &a, wl, group, false, true)
         }
         Dataflow::FlatAsyn => {
             let mut a = arch.clone();
             a.noc.hw_collectives = true;
-            flat::flat_program(&a, wl, group, true)
+            flat::flat_program_ext_in(prog, &a, wl, group, true, true)
         }
+    };
+    #[cfg(debug_assertions)]
+    if let Err(e) = prog.validate() {
+        panic!("build_program produced an invalid DAG for {df:?}: {e}");
     }
+    prog
+}
+
+thread_local! {
+    /// Per-worker-thread arena: `run` recycles program buffers across the
+    /// experiments a coordinator worker executes (§Perf).
+    static RUN_ARENA: std::cell::RefCell<ProgramArena> =
+        std::cell::RefCell::new(ProgramArena::new());
 }
 
 /// Build and execute in one step, tracking the canonical critical tile.
+/// Program buffers are recycled through a thread-local [`ProgramArena`].
 pub fn run(arch: &ArchConfig, wl: &Workload, df: Dataflow, group: usize) -> RunStats {
-    let program = build_program(arch, wl, df, group);
     let tracked = tracked_tile(arch, df, group);
-    execute(&program, tracked)
+    RUN_ARENA.with(|cell| {
+        let mut arena = cell.borrow_mut();
+        let program = build_program_in(&mut arena, arch, wl, df, group);
+        let stats = execute(&program, tracked);
+        arena.recycle(program);
+        stats
+    })
 }
 
 /// The representative tile whose timeline feeds the runtime breakdown:
@@ -175,6 +250,33 @@ pub fn tracked_tile(arch: &ArchConfig, df: Dataflow, group: usize) -> u32 {
         arch.tile_id(0, gy - 1)
     } else {
         0
+    }
+}
+
+/// Serializes tests that toggle [`set_template_stamping`]: without this,
+/// a concurrent test could flip the global back to `true` mid-"naive"
+/// build, making the stamped-vs-naive identity oracle compare stamped vs
+/// stamped (trivially green). Lock around the whole toggle+build+restore
+/// sequence; recover from poisoning so one failed test doesn't cascade.
+#[cfg(test)]
+pub(crate) static STAMPING_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Assert two programs are identical op for op, dep for dep — the
+/// correctness oracle for template stamping (a stamped build must be
+/// indistinguishable from the naive emission).
+#[cfg(test)]
+pub(crate) fn assert_programs_equal(a: &Program, b: &Program) {
+    assert_eq!(a.num_ops(), b.num_ops(), "op count");
+    assert_eq!(a.num_resources(), b.num_resources(), "resource count");
+    assert_eq!(a.flops, b.flops, "flops");
+    for (i, (x, y)) in a.ops().iter().zip(b.ops().iter()).enumerate() {
+        assert_eq!(x.resource, y.resource, "op {i}: resource");
+        assert_eq!(x.occupancy, y.occupancy, "op {i}: occupancy");
+        assert_eq!(x.latency, y.latency, "op {i}: latency");
+        assert_eq!(x.component, y.component, "op {i}: component");
+        assert_eq!(x.tile, y.tile, "op {i}: tile");
+        assert_eq!(x.hbm_bytes, y.hbm_bytes, "op {i}: hbm_bytes");
+        assert_eq!(a.deps_of(x), b.deps_of(y), "op {i}: deps");
     }
 }
 
@@ -202,5 +304,23 @@ mod tests {
     fn compulsory_traffic() {
         let wl = Workload::new(1024, 64, 8, 1);
         assert_eq!(wl.compulsory_bytes(), 4 * 8 * 1024 * 64 * 2);
+    }
+
+    #[test]
+    fn arena_build_matches_fresh_build() {
+        // Recycled buffers must not leak state between experiments: an
+        // arena-backed build equals a fresh build, for every dataflow in
+        // sequence through the same arena.
+        let arch = crate::arch::presets::table2(8);
+        let wl = Workload::new(512, 64, 4, 1);
+        let mut arena = ProgramArena::new();
+        for df in ALL_DATAFLOWS {
+            let fresh = build_program(&arch, &wl, df, 8);
+            let pooled = build_program_in(&mut arena, &arch, &wl, df, 8);
+            assert_programs_equal(&fresh, &pooled);
+            let tracked = tracked_tile(&arch, df, 8);
+            assert_eq!(execute(&fresh, tracked), execute(&pooled, tracked));
+            arena.recycle(pooled);
+        }
     }
 }

@@ -6,6 +6,7 @@
 
 use anyhow::Result;
 
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 use crate::util::Tensor;
 
@@ -48,13 +49,16 @@ impl TileCompute for NativeCompute {
 /// NaN from `-inf - -inf`), so the first step from the ±inf init state is
 /// seeded with a large-negative sentinel max, which is mathematically
 /// equivalent for any finite scores.
+#[cfg(feature = "pjrt")]
 pub struct RuntimeCompute<'rt> {
     pub runtime: &'rt Runtime,
 }
 
 /// Finite stand-in for -inf in compiled kernels.
+#[cfg(feature = "pjrt")]
 const NEG_LARGE: f32 = -1.0e30;
 
+#[cfg(feature = "pjrt")]
 impl<'rt> TileCompute for RuntimeCompute<'rt> {
     fn block_step(
         &self,

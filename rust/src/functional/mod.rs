@@ -14,6 +14,8 @@ pub mod compute;
 pub mod golden;
 pub mod group;
 
-pub use compute::{NativeCompute, RuntimeCompute, TileCompute};
+pub use compute::{NativeCompute, TileCompute};
+#[cfg(feature = "pjrt")]
+pub use compute::RuntimeCompute;
 pub use golden::{attention_golden, block_step_native, softmax_merge};
 pub use group::{run_flat_group_functional, run_flat_group_literal, FlatGroupResult};

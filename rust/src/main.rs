@@ -16,11 +16,13 @@ use std::path::PathBuf;
 use flatattention::arch::{presets, ArchConfig};
 use flatattention::coordinator::{best_group, run_one, valid_groups, ExperimentSpec, ResultStore};
 use flatattention::dataflow::{Dataflow, FlatTiling, Workload};
-use flatattention::functional::{
-    attention_golden, run_flat_group_functional, NativeCompute, RuntimeCompute,
-};
+use flatattention::functional::{attention_golden, run_flat_group_functional, NativeCompute};
+#[cfg(feature = "pjrt")]
+use flatattention::functional::RuntimeCompute;
 use flatattention::report::{self, ReportOpts};
-use flatattention::runtime::{default_artifact_dir, Runtime};
+use flatattention::runtime::{artifacts_available, default_artifact_dir};
+#[cfg(feature = "pjrt")]
+use flatattention::runtime::Runtime;
 use flatattention::util::cli::{parse, Args};
 use flatattention::util::{pool, Rng, Tensor};
 
@@ -268,38 +270,71 @@ fn cmd_validate(args: &Args) -> i32 {
     }
 
     let dir = default_artifact_dir();
-    if Runtime::available(&dir) {
-        let rt = match Runtime::new(dir) {
-            Ok(rt) => rt,
-            Err(e) => return fail(&format!("runtime start failed: {e}")),
-        };
-        println!("PJRT platform: {}", rt.platform());
-        let compute = RuntimeCompute { runtime: &rt };
-        match run_flat_group_functional(&q, &k, &v, g, &compute) {
-            Ok(res) => {
-                let diff = res.output.max_abs_diff(&golden);
-                println!(
-                    "pjrt    backend: {} block steps, max |diff| = {diff:.2e}",
-                    res.block_steps
-                );
-                if diff > 5e-3 {
-                    return fail("PJRT functional validation FAILED");
-                }
-                println!("validation OK: Rust dataflow + AOT Pallas kernel reproduce attention");
-            }
-            Err(e) => {
-                return fail(&format!(
-                    "pjrt run failed (need block_step artifact r{0} c{0} d{d}): {e}",
-                    s / g
-                ))
-            }
-        }
-    } else {
-        println!(
-            "artifacts not found in {} — skipping PJRT backend (run `make artifacts`)",
-            default_artifact_dir().display()
-        );
+    if artifacts_available(&dir) {
+        return validate_pjrt(&dir, &q, &k, &v, &golden, g, s, d);
     }
+    println!(
+        "artifacts not found in {} — skipping PJRT backend (run `make artifacts`)",
+        dir.display()
+    );
+    0
+}
+
+#[cfg(feature = "pjrt")]
+#[allow(clippy::too_many_arguments)]
+fn validate_pjrt(
+    dir: &std::path::Path,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    golden: &Tensor,
+    g: usize,
+    s: usize,
+    d: usize,
+) -> i32 {
+    let rt = match Runtime::new(dir.to_path_buf()) {
+        Ok(rt) => rt,
+        Err(e) => return fail(&format!("runtime start failed: {e}")),
+    };
+    println!("PJRT platform: {}", rt.platform());
+    let compute = RuntimeCompute { runtime: &rt };
+    match run_flat_group_functional(q, k, v, g, &compute) {
+        Ok(res) => {
+            let diff = res.output.max_abs_diff(golden);
+            println!(
+                "pjrt    backend: {} block steps, max |diff| = {diff:.2e}",
+                res.block_steps
+            );
+            if diff > 5e-3 {
+                return fail("PJRT functional validation FAILED");
+            }
+            println!("validation OK: Rust dataflow + AOT Pallas kernel reproduce attention");
+            0
+        }
+        Err(e) => fail(&format!(
+            "pjrt run failed (need block_step artifact r{0} c{0} d{d}): {e}",
+            s / g
+        )),
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+#[allow(clippy::too_many_arguments)]
+fn validate_pjrt(
+    dir: &std::path::Path,
+    _q: &Tensor,
+    _k: &Tensor,
+    _v: &Tensor,
+    _golden: &Tensor,
+    _g: usize,
+    _s: usize,
+    _d: usize,
+) -> i32 {
+    println!(
+        "artifacts found in {} but this build has no PJRT support — add the `xla` crate to \
+         rust/Cargo.toml [dependencies] and rebuild with `--features pjrt`",
+        dir.display()
+    );
     0
 }
 
@@ -341,9 +376,10 @@ fn cmd_info() -> i32 {
         println!("{}", arch.to_json().to_pretty());
     }
     println!(
-        "artifacts dir: {} (available: {})",
+        "artifacts dir: {} (available: {}, pjrt feature: {})",
         default_artifact_dir().display(),
-        Runtime::available(&default_artifact_dir())
+        artifacts_available(&default_artifact_dir()),
+        cfg!(feature = "pjrt")
     );
     println!("threads: {}", pool::default_threads());
     0

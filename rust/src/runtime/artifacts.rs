@@ -94,4 +94,13 @@ mod tests {
     fn missing_manifest_is_none() {
         assert!(Manifest::load(Path::new("/nonexistent-dir-xyz")).is_none());
     }
+
+    #[test]
+    fn default_dir_env_override() {
+        // Uses a uniquely-named var interaction — set and restore.
+        std::env::set_var("FLATATTN_ARTIFACTS", "/tmp/some-artifacts");
+        assert_eq!(default_artifact_dir(), PathBuf::from("/tmp/some-artifacts"));
+        std::env::remove_var("FLATATTN_ARTIFACTS");
+        assert_eq!(default_artifact_dir(), PathBuf::from("artifacts"));
+    }
 }

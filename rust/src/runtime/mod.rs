@@ -8,7 +8,16 @@
 //! is never on this path.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod client;
 
 pub use artifacts::{block_step_artifact_name, default_artifact_dir, mha_artifact_name, Manifest};
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
+
+/// True if an artifact directory looks usable (manifest present). Available
+/// without the `pjrt` feature so callers can report artifact status even in
+/// simulation-only builds.
+pub fn artifacts_available(dir: &std::path::Path) -> bool {
+    Manifest::load(dir).is_some()
+}

@@ -1,0 +1,97 @@
+//! Allocation recycling for sweep-scale program construction.
+//!
+//! A Fig. 5-style co-exploration sweep builds and discards hundreds of
+//! programs, each holding multi-hundred-thousand-element `ops`/`deps_pool`
+//! buffers plus the sealed dependents CSR. [`ProgramArena`] keeps one set
+//! of those buffers alive per worker thread so successive experiments
+//! reuse their capacity instead of re-growing from empty (§Perf):
+//! `dataflow::run` takes a fresh program from its thread-local arena,
+//! builds, executes, and recycles the buffers.
+
+use super::program::{Op, Program};
+
+/// Recycled backing buffers for [`Program`]s built in a sweep loop.
+///
+/// ```ignore
+/// let mut arena = ProgramArena::new();
+/// for spec in sweep {
+///     let program = build_program_in(&mut arena, ...);
+///     let stats = execute(&program, tracked);
+///     arena.recycle(program);
+/// }
+/// ```
+#[derive(Debug, Default)]
+pub struct ProgramArena {
+    ops: Vec<Op>,
+    deps_pool: Vec<u32>,
+    out_start: Vec<u32>,
+    out_edges: Vec<u32>,
+    indeg0: Vec<u32>,
+}
+
+impl ProgramArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take an empty [`Program`] backed by this arena's recycled buffers
+    /// (retaining their capacity). The arena is left empty until
+    /// [`ProgramArena::recycle`] returns the buffers.
+    pub fn fresh(&mut self) -> Program {
+        let mut ops = std::mem::take(&mut self.ops);
+        let mut deps_pool = std::mem::take(&mut self.deps_pool);
+        let mut out_start = std::mem::take(&mut self.out_start);
+        let mut out_edges = std::mem::take(&mut self.out_edges);
+        let mut indeg0 = std::mem::take(&mut self.indeg0);
+        ops.clear();
+        deps_pool.clear();
+        out_start.clear();
+        out_edges.clear();
+        indeg0.clear();
+        Program::from_buffers(ops, deps_pool, out_start, out_edges, indeg0)
+    }
+
+    /// Reclaim a finished program's buffers for the next build.
+    pub fn recycle(&mut self, program: Program) {
+        let (ops, deps_pool, out_start, out_edges, indeg0) = program.into_buffers();
+        self.ops = ops;
+        self.deps_pool = deps_pool;
+        self.out_start = out_start;
+        self.out_edges = out_edges;
+        self.indeg0 = indeg0;
+    }
+
+    /// Currently recycled capacity (ops slots), for tests/metrics.
+    pub fn ops_capacity(&self) -> usize {
+        self.ops.capacity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::breakdown::Component;
+    use crate::sim::execute;
+
+    #[test]
+    fn buffers_round_trip_and_retain_capacity() {
+        let mut arena = ProgramArena::new();
+        let mut p = arena.fresh();
+        let r = p.resource();
+        for _ in 0..1000 {
+            p.op(r, 1, 0, Component::Other, 0, 0, &[]);
+        }
+        p.seal();
+        let stats = execute(&p, 0);
+        assert_eq!(stats.ops_executed, 1000);
+        arena.recycle(p);
+        assert!(arena.ops_capacity() >= 1000);
+
+        // The next program starts empty but reuses the allocation.
+        let p2 = arena.fresh();
+        assert_eq!(p2.num_ops(), 0);
+        assert_eq!(p2.num_resources(), 0);
+        assert!(!p2.is_sealed());
+        arena.recycle(p2);
+    }
+}

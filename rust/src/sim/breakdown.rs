@@ -56,7 +56,7 @@ impl Component {
 }
 
 /// Per-component exclusive time (cycles) on the tracked tile.
-#[derive(Debug, Clone, Default, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Breakdown {
     pub redmule: Cycle,
     pub spatz: Cycle,
@@ -175,7 +175,7 @@ fn subtract_measure(a: &[(Cycle, Cycle)], b: &[(Cycle, Cycle)]) -> Cycle {
 }
 
 /// Full result of one simulated experiment run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RunStats {
     /// End-to-end runtime in cycles.
     pub makespan: Cycle,

@@ -6,12 +6,19 @@
 //! `occupancy` cycles; dependents observe completion after an additional
 //! `latency` (pipelined resources like HBM channels and NoC paths keep
 //! serving while earlier transfers are still in flight).
-
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+//!
+//! §Perf: the dependents CSR and initial in-degrees come from the sealed
+//! [`Program`] (built once at construction; an unsealed program falls back
+//! to a local derivation), and the completion-event queue is an indexed
+//! radix-bucket queue ([`crate::sim::queue::EventQueue`]) tuned for the
+//! near-monotonic event streams these schedules produce. The seed
+//! `BinaryHeap` engine is preserved verbatim in [`crate::sim::reference`]
+//! and `tests/engine_differential.rs` proves schedule equivalence on
+//! randomized DAGs.
 
 use super::breakdown::{Breakdown, Component, RunStats};
 use super::program::Program;
+use super::queue::EventQueue;
 use super::Cycle;
 
 /// One executed-op record for trace export: `(op index, start, complete)`.
@@ -35,45 +42,29 @@ pub fn execute_traced(
     let ops = program.ops();
     let n = ops.len();
 
-    // Dependents adjacency in CSR form + in-degrees.
-    let mut indeg: Vec<u32> = vec![0; n];
-    let mut out_count: Vec<u32> = vec![0; n];
-    for op in ops {
-        for &d in program.deps_of(op) {
-            out_count[d as usize] += 1;
-        }
-    }
-    let mut out_start: Vec<u32> = Vec::with_capacity(n + 1);
-    let mut acc = 0u32;
-    for &c in &out_count {
-        out_start.push(acc);
-        acc += c;
-    }
-    out_start.push(acc);
-    let mut out_edges: Vec<u32> = vec![0; acc as usize];
-    let mut cursor = out_start.clone();
-    for (i, op) in ops.iter().enumerate() {
-        indeg[i] = op.deps_len;
-        for &d in program.deps_of(op) {
-            let di = d as usize;
-            out_edges[cursor[di] as usize] = i as u32;
-            cursor[di] += 1;
-        }
-    }
+    // Dependents adjacency + initial in-degrees: reuse the sealed CSR, or
+    // derive locally for hand-built programs that skipped `seal`.
+    let local_csr;
+    let (out_start, out_edges, indeg0): (&[u32], &[u32], &[u32]) = if program.is_sealed() {
+        (&program.out_start, &program.out_edges, &program.indeg0)
+    } else {
+        local_csr = program.build_dependents_csr();
+        (&local_csr.0, &local_csr.1, &local_csr.2)
+    };
+    let mut indeg: Vec<u32> = indeg0.to_vec();
 
     // Resources reduce to *cursors*: service is FIFO in ready order and
     // every op's duration is known up front, so an op can be scheduled the
     // moment it becomes ready, at `start = max(ready, resource_free)` —
     // later-ready ops can only queue behind (FIFO), never preempt. This
     // removes per-resource queues and wake-up events entirely: the event
-    // heap holds exactly one completion per op (§Perf).
+    // queue holds exactly one completion per op (§Perf).
     let nr = program.num_resources();
     let mut res_free: Vec<Cycle> = vec![0; nr];
 
-    // Event key: (completion time, seq<<32 | op idx) — 16 bytes,
-    // deterministic insertion-order tie-breaking.
-    let mut events: BinaryHeap<Reverse<(Cycle, u64)>> = BinaryHeap::new();
-    let mut seq: u64 = 0;
+    // Completion events keyed by time; the queue pops equal-time events in
+    // push order, matching the seed heap's insertion-seq tie-breaking.
+    let mut events = EventQueue::new();
 
     // Accounting.
     let mut makespan: Cycle = 0;
@@ -99,8 +90,7 @@ pub fn execute_traced(
             let released = start + op.occupancy;
             let complete = released + op.latency;
             res_free[r] = released;
-            seq += 1;
-            events.push(Reverse((complete, (seq << 32) | op_idx as u64)));
+            events.push(complete, op_idx);
             match op.component {
                 Component::RedMule => redmule_busy += op.occupancy,
                 Component::Spatz => spatz_busy += op.occupancy,
@@ -135,8 +125,7 @@ pub fn execute_traced(
     }
 
     let mut completed = 0usize;
-    while let Some(Reverse((now, key))) = events.pop() {
-        let idx = (key & 0xFFFF_FFFF) as u32;
+    while let Some((now, idx)) = events.pop() {
         completed += 1;
         let (s, e) = (out_start[idx as usize] as usize, out_start[idx as usize + 1] as usize);
         for &dep_idx in &out_edges[s..e] {
@@ -173,7 +162,7 @@ pub fn execute_traced(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sim::program::NO_TILE;
+    use crate::sim::program::{Op, NO_TILE};
 
     #[test]
     fn serial_chain_on_one_resource() {
@@ -196,8 +185,8 @@ mod tests {
         p.op(r1, 100, 0, Component::RedMule, 0, 0, &[]);
         p.op(r2, 60, 0, Component::Spatz, 0, 0, &[]);
         let st = execute(&p, 0);
-        assert_eq!(st.makespan, 100);
         // Spatz fully overlapped by RedMulE on the tracked tile.
+        assert_eq!(st.makespan, 100);
         assert_eq!(st.breakdown.redmule, 100);
         assert_eq!(st.breakdown.spatz, 0);
     }
@@ -283,5 +272,43 @@ mod tests {
         let st = execute(&p, 0);
         assert_eq!(st.flops, 12345);
         assert_eq!(st.ops_executed, 1);
+    }
+
+    #[test]
+    fn sealed_and_unsealed_execution_agree() {
+        let mut p = Program::new();
+        let r = p.resources(3);
+        let a = p.op(r[0], 9, 3, Component::HbmAccess, 0, 128, &[]);
+        let b = p.op(r[1], 4, 0, Component::RedMule, 0, 0, &[a]);
+        let c = p.op(r[2], 6, 1, Component::Spatz, 1, 0, &[a]);
+        let _ = p.op(r[0], 2, 0, Component::Other, NO_TILE, 0, &[b, c]);
+        let unsealed = execute(&p, 0);
+        p.seal();
+        let sealed = execute(&p, 0);
+        assert_eq!(unsealed, sealed);
+    }
+
+    #[test]
+    #[should_panic(expected = "dependency cycle")]
+    fn dependency_cycle_panics() {
+        // `Program::op` cannot express a cycle (deps must precede the op),
+        // so build one manually: op 0 ⇄ op 1.
+        let mut p = Program::new();
+        let r = p.resource();
+        let proto = |deps_start: u32| Op {
+            resource: r,
+            occupancy: 1,
+            latency: 0,
+            component: Component::Other,
+            tile: NO_TILE,
+            hbm_bytes: 0,
+            deps_start,
+            deps_len: 1,
+        };
+        p.deps_pool.push(1);
+        p.ops.push(proto(0));
+        p.deps_pool.push(0);
+        p.ops.push(proto(1));
+        execute(&p, 0);
     }
 }

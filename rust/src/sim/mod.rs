@@ -6,7 +6,7 @@
 //! invocation — with a dependency-driven discrete-event engine:
 //!
 //! 1. A dataflow (`crate::dataflow`) compiles a workload + architecture into
-//!    a [`Program`]: a DAG of [`Op`]s, each bound to one [`Resource`]
+//!    a [`Program`]: a DAG of [`Op`]s, each bound to one resource
 //!    (a tile's RedMulE / Spatz / DMA engine, an HBM channel, a NoC row/col
 //!    bus) with a precomputed *occupancy* (resource hold time) and
 //!    *latency* (pipeline delay until dependents may start).
@@ -18,14 +18,50 @@
 //!    breakdown (Fig. 3/4): per-component time on a tracked critical tile,
 //!    with the "not overlapped with RedMulE / Spatz" semantics of the
 //!    paper's bar charts, plus global HBM-traffic and utilization metrics.
+//!
+//! # Sweep-scale hot path (§Perf)
+//!
+//! A Fig. 5-style co-exploration sweep pushes hundreds of `(arch,
+//! workload, dataflow, group)` points through this engine, so the whole
+//! path is organized around *reuse of repeated structure*:
+//!
+//! * **Template stamping** — the dataflow builders emit the per-head
+//!   (Flash) / per-group-iteration (Flat) op subgraph once and instantiate
+//!   every further repetition with [`Program::stamp_range`], which copies
+//!   ops into preallocated buffers while offset-patching dependency ids
+//!   (and, for Flash, rotating HBM-channel resources). Stamped and
+//!   naively-built programs are op-for-op identical — asserted by tests.
+//! * **Sealed dependents CSR** — [`Program::seal`] derives the dependents
+//!   adjacency and initial in-degrees once at construction; every
+//!   [`execute`] call then starts immediately instead of re-deriving them.
+//! * **Indexed event queue** — [`queue::EventQueue`] is a monotone
+//!   radix-bucket queue replacing the `BinaryHeap`, exploiting the
+//!   near-monotonic completion times these schedules produce. The seed
+//!   heap engine survives in [`reference`] and a differential test proves
+//!   schedule equivalence.
+//! * **[`arena`]** — [`ProgramArena`] recycles `ops`/`deps_pool`/CSR
+//!   allocations across the experiments of a sweep (one arena per worker
+//!   thread, used by `dataflow::run`).
+//! * One level up, `crate::coordinator` memoizes experiment results by
+//!   content key so identical points shared between figures simulate once.
+//!
+//! Next levers (see ROADMAP): symmetry folding of identical tiles (the
+//! Flash grid simulates ~1024 congruent tiles whose schedules differ only
+//! by channel phase) and parallel per-head execution inside one program.
 
+pub mod arena;
 pub mod breakdown;
 pub mod engine;
 pub mod program;
+pub mod queue;
+pub mod reference;
 pub mod trace;
 
+pub use arena::ProgramArena;
 pub use breakdown::{Breakdown, Component, RunStats};
 pub use engine::{execute, execute_traced};
+pub use queue::EventQueue;
+pub use reference::{execute_reference, execute_reference_traced};
 pub use program::{Op, OpId, Program, ResourceId};
 
 /// Simulation time in clock cycles (1 GHz in all paper configurations).

@@ -48,6 +48,14 @@ pub struct Op {
 /// flat CSR pool (`deps_pool`) instead of per-op `Vec`s: programs have
 /// hundreds of thousands of ops and the per-op allocation dominated build
 /// time before this layout (§Perf).
+///
+/// After construction, [`Program::seal`] derives the *dependents* CSR
+/// (`out_start`/`out_edges`) and the initial in-degree vector once, so
+/// every subsequent [`crate::sim::execute`] call starts immediately
+/// instead of re-deriving them (§Perf: the executor used to rebuild this
+/// on every run). Builders seal automatically; hand-built programs that
+/// skip `seal` still execute through a fallback that derives the CSR
+/// locally.
 #[derive(Debug, Default)]
 pub struct Program {
     pub(crate) ops: Vec<Op>,
@@ -56,11 +64,45 @@ pub struct Program {
     /// Total useful FLOPs represented by the program (set by the builder;
     /// used for utilization metrics, not timing).
     pub flops: u64,
+    /// Dependents CSR row offsets (`len == ops.len() + 1` when sealed).
+    pub(crate) out_start: Vec<u32>,
+    /// Dependents CSR edge targets (op indices).
+    pub(crate) out_edges: Vec<u32>,
+    /// Initial in-degree of every op (== `deps_len`), cloned per execution.
+    pub(crate) indeg0: Vec<u32>,
+    pub(crate) sealed: bool,
 }
 
 impl Program {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Rebuild a `Program` over buffers recycled by a
+    /// [`crate::sim::ProgramArena`]. All buffers arrive cleared.
+    pub(crate) fn from_buffers(
+        ops: Vec<Op>,
+        deps_pool: Vec<u32>,
+        out_start: Vec<u32>,
+        out_edges: Vec<u32>,
+        indeg0: Vec<u32>,
+    ) -> Self {
+        Self {
+            ops,
+            deps_pool,
+            n_resources: 0,
+            flops: 0,
+            out_start,
+            out_edges,
+            indeg0,
+            sealed: false,
+        }
+    }
+
+    /// Decompose into raw buffers for arena recycling.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn into_buffers(self) -> (Vec<Op>, Vec<u32>, Vec<u32>, Vec<u32>, Vec<u32>) {
+        (self.ops, self.deps_pool, self.out_start, self.out_edges, self.indeg0)
     }
 
     /// Allocate a fresh resource.
@@ -92,6 +134,7 @@ impl Program {
         debug_assert!(deps.iter().all(|d| d.0 < id.0), "deps must precede op");
         let deps_start = self.deps_pool.len() as u32;
         self.deps_pool.extend(deps.iter().map(|d| d.0));
+        self.sealed = false;
         self.ops.push(Op {
             resource,
             occupancy,
@@ -103,6 +146,136 @@ impl Program {
             deps_len: deps.len() as u32,
         });
         id
+    }
+
+    /// Append a shifted copy of the op range `[src_start, src_start +
+    /// src_len)` — the template-stamping primitive used by the dataflow
+    /// builders (§Perf). Dependencies pointing *inside* the source range
+    /// are offset to the copy; dependencies pointing *before* it (the
+    /// template's single external predecessor, e.g. the previous block's
+    /// barrier) are replaced by `ext_dep`. Resources, timings and
+    /// accounting fields are copied verbatim; callers patch per-instance
+    /// differences afterwards. Returns the index of the first stamped op.
+    pub fn stamp_range(&mut self, src_start: u32, src_len: u32, ext_dep: OpId) -> u32 {
+        let new_base = self.ops.len() as u32;
+        debug_assert!(src_start + src_len <= new_base, "source range out of bounds");
+        debug_assert!(ext_dep.0 < new_base, "external dep must already exist");
+        let delta = new_base - src_start;
+        self.sealed = false;
+        self.ops.reserve(src_len as usize);
+        for idx in src_start..src_start + src_len {
+            let src = self.ops[idx as usize].clone();
+            let new_deps_start = self.deps_pool.len() as u32;
+            for k in src.deps_start..src.deps_start + src.deps_len {
+                let d = self.deps_pool[k as usize];
+                let nd = if d >= src_start { d + delta } else { ext_dep.0 };
+                self.deps_pool.push(nd);
+            }
+            self.ops.push(Op {
+                deps_start: new_deps_start,
+                ..src
+            });
+        }
+        new_base
+    }
+
+    /// Derive the dependents CSR and initial in-degrees so executions can
+    /// reuse them. Idempotent; implicitly invalidated by further `op` /
+    /// `stamp_range` calls. Builds *in place* into the program's (possibly
+    /// arena-recycled) CSR buffers — no allocation once capacity exists.
+    pub fn seal(&mut self) {
+        if self.sealed {
+            return;
+        }
+        let mut out_start = std::mem::take(&mut self.out_start);
+        let mut out_edges = std::mem::take(&mut self.out_edges);
+        let mut indeg0 = std::mem::take(&mut self.indeg0);
+        Self::dependents_into(
+            &self.ops,
+            &self.deps_pool,
+            &mut out_start,
+            &mut out_edges,
+            &mut indeg0,
+        );
+        self.out_start = out_start;
+        self.out_edges = out_edges;
+        self.indeg0 = indeg0;
+        self.sealed = true;
+    }
+
+    /// Compute `(out_start, out_edges, indeg0)` for the current DAG into
+    /// fresh buffers — the executor's unsealed-program fallback.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn build_dependents_csr(&self) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+        let (mut out_start, mut out_edges, mut indeg0) = (Vec::new(), Vec::new(), Vec::new());
+        Self::dependents_into(
+            &self.ops,
+            &self.deps_pool,
+            &mut out_start,
+            &mut out_edges,
+            &mut indeg0,
+        );
+        (out_start, out_edges, indeg0)
+    }
+
+    /// Fill the dependents CSR into the given buffers (cleared first,
+    /// capacity retained). Uses the classic in-place cursor trick: the row
+    /// offsets double as fill cursors and are shifted back afterwards, so
+    /// no scratch allocation is needed.
+    fn dependents_into(
+        ops: &[Op],
+        deps_pool: &[u32],
+        out_start: &mut Vec<u32>,
+        out_edges: &mut Vec<u32>,
+        indeg0: &mut Vec<u32>,
+    ) {
+        let n = ops.len();
+        indeg0.clear();
+        indeg0.reserve(n);
+        out_start.clear();
+        out_start.resize(n + 1, 0);
+        for op in ops {
+            indeg0.push(op.deps_len);
+            let (s, l) = (op.deps_start as usize, op.deps_len as usize);
+            for &d in &deps_pool[s..s + l] {
+                out_start[d as usize + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            out_start[i + 1] += out_start[i];
+        }
+        let total = out_start[n] as usize;
+        out_edges.clear();
+        out_edges.resize(total, 0);
+        for (i, op) in ops.iter().enumerate() {
+            let (s, l) = (op.deps_start as usize, op.deps_len as usize);
+            for &d in &deps_pool[s..s + l] {
+                let di = d as usize;
+                out_edges[out_start[di] as usize] = i as u32;
+                out_start[di] += 1;
+            }
+        }
+        // The cursors now hold each row's *end*; shift right to restore
+        // the start offsets (out_start[n] is untouched and equals total).
+        for i in (1..n).rev() {
+            out_start[i] = out_start[i - 1];
+        }
+        if n > 0 {
+            out_start[0] = 0;
+        }
+    }
+
+    /// True once [`Program::seal`] has run (and no ops were added since).
+    pub fn is_sealed(&self) -> bool {
+        self.sealed
+    }
+
+    /// Forget the sealed state so the next [`crate::sim::execute`] takes
+    /// the derive-per-run fallback (and the next [`Program::seal`] rebuilds).
+    /// Benchmarking/testing aid — e.g. `sim_hotpath` uses it to price the
+    /// CSR build when reconstructing the seed baseline.
+    pub fn unseal(&mut self) {
+        self.sealed = false;
     }
 
     /// Dependency ids of an op (raw op indices).
@@ -153,6 +326,51 @@ mod tests {
         let b = p.op(r, 5, 2, Component::Spatz, 0, 0, &[a]);
         let _c = p.op(r, 1, 0, Component::Other, NO_TILE, 0, &[a, b]);
         assert_eq!(p.num_ops(), 3);
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn seal_builds_dependents_csr_once() {
+        let mut p = Program::new();
+        let r = p.resource();
+        let a = p.op(r, 1, 0, Component::RedMule, 0, 0, &[]);
+        let b = p.op(r, 1, 0, Component::Spatz, 0, 0, &[a]);
+        let _c = p.op(r, 1, 0, Component::Other, NO_TILE, 0, &[a, b]);
+        assert!(!p.is_sealed());
+        p.seal();
+        assert!(p.is_sealed());
+        // a's dependents: b and c; b's: c; c's: none.
+        assert_eq!(p.out_start, vec![0, 2, 3, 3]);
+        assert_eq!(p.out_edges, vec![1, 2, 2]);
+        assert_eq!(p.indeg0, vec![0, 1, 2]);
+        // Adding an op invalidates the seal.
+        p.op(r, 1, 0, Component::Other, NO_TILE, 0, &[b]);
+        assert!(!p.is_sealed());
+        p.seal();
+        assert_eq!(p.indeg0, vec![0, 1, 2, 1]);
+    }
+
+    #[test]
+    fn stamp_range_offsets_internal_and_replaces_external_deps() {
+        let mut p = Program::new();
+        let r = p.resource();
+        let barrier0 = p.op(r, 1, 0, Component::Other, NO_TILE, 0, &[]);
+        // Template "block": two ops, externally depending on barrier0.
+        let t0 = p.op(r, 10, 0, Component::RedMule, 0, 64, &[barrier0]);
+        let t1 = p.op(r, 5, 2, Component::Spatz, 0, 0, &[t0]);
+        let base = t0.0;
+        let len = 2;
+        // Stamp a second instance gated on t1 (the new "previous barrier").
+        let new_base = p.stamp_range(base, len, t1);
+        assert_eq!(new_base, 3);
+        assert_eq!(p.num_ops(), 5);
+        let ops = p.ops();
+        assert_eq!(ops[3].occupancy, 10);
+        assert_eq!(ops[3].hbm_bytes, 64);
+        assert_eq!(p.deps_of(&ops[3]), &[t1.0]); // external → t1
+        assert_eq!(ops[4].occupancy, 5);
+        assert_eq!(ops[4].latency, 2);
+        assert_eq!(p.deps_of(&ops[4]), &[3]); // internal, offset by delta
         assert!(p.validate().is_ok());
     }
 

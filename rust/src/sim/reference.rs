@@ -1,0 +1,176 @@
+//! The seed discrete-event executor, preserved verbatim.
+//!
+//! This is the pre-§Perf engine: it re-derives the dependents CSR on every
+//! call and drives completions through a `BinaryHeap` keyed by
+//! `(completion time, insertion seq)`. It is retained as the semantic
+//! reference for the optimized executor in [`crate::sim::engine`] — the
+//! differential test (`tests/engine_differential.rs`) asserts both produce
+//! identical `RunStats` and identical traces on randomized DAGs, and the
+//! `sim_hotpath` bench uses it as the recorded baseline.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::breakdown::{Breakdown, Component, RunStats};
+use super::engine::TraceRecord;
+use super::program::Program;
+use super::Cycle;
+
+/// Execute `program` with the seed engine. Same contract as
+/// [`crate::sim::execute`].
+pub fn execute_reference(program: &Program, tracked_tile: u32) -> RunStats {
+    execute_reference_traced(program, tracked_tile, None).0
+}
+
+/// Traced variant; same contract as [`crate::sim::execute_traced`].
+pub fn execute_reference_traced(
+    program: &Program,
+    tracked_tile: u32,
+    trace_tile_limit: Option<u32>,
+) -> (RunStats, Vec<TraceRecord>) {
+    let ops = program.ops();
+    let n = ops.len();
+
+    // Dependents adjacency in CSR form + in-degrees, rebuilt per call.
+    let mut indeg: Vec<u32> = vec![0; n];
+    let mut out_count: Vec<u32> = vec![0; n];
+    for op in ops {
+        for &d in program.deps_of(op) {
+            out_count[d as usize] += 1;
+        }
+    }
+    let mut out_start: Vec<u32> = Vec::with_capacity(n + 1);
+    let mut acc = 0u32;
+    for &c in &out_count {
+        out_start.push(acc);
+        acc += c;
+    }
+    out_start.push(acc);
+    let mut out_edges: Vec<u32> = vec![0; acc as usize];
+    let mut cursor = out_start.clone();
+    for (i, op) in ops.iter().enumerate() {
+        indeg[i] = op.deps_len;
+        for &d in program.deps_of(op) {
+            let di = d as usize;
+            out_edges[cursor[di] as usize] = i as u32;
+            cursor[di] += 1;
+        }
+    }
+
+    let nr = program.num_resources();
+    let mut res_free: Vec<Cycle> = vec![0; nr];
+
+    // Event key: (completion time, seq<<32 | op idx) — 16 bytes,
+    // deterministic insertion-order tie-breaking.
+    let mut events: BinaryHeap<Reverse<(Cycle, u64)>> = BinaryHeap::new();
+    let mut seq: u64 = 0;
+
+    let mut makespan: Cycle = 0;
+    let mut hbm_bytes: u64 = 0;
+    let mut redmule_busy: Cycle = 0;
+    let mut spatz_busy: Cycle = 0;
+    let mut executed: usize = 0;
+    let mut intervals: Vec<(Component, Cycle, Cycle)> = Vec::new();
+    let mut trace: Vec<TraceRecord> = Vec::new();
+
+    macro_rules! schedule {
+        ($idx:expr, $now:expr) => {{
+            let op_idx: u32 = $idx;
+            let op = &ops[op_idx as usize];
+            let r = op.resource.0 as usize;
+            let start = res_free[r].max($now);
+            let released = start + op.occupancy;
+            let complete = released + op.latency;
+            res_free[r] = released;
+            seq += 1;
+            events.push(Reverse((complete, (seq << 32) | op_idx as u64)));
+            match op.component {
+                Component::RedMule => redmule_busy += op.occupancy,
+                Component::Spatz => spatz_busy += op.occupancy,
+                _ => {}
+            }
+            hbm_bytes += op.hbm_bytes;
+            if op.tile == tracked_tile && complete > $now {
+                let from = match op.component {
+                    Component::HbmAccess
+                    | Component::Multicast
+                    | Component::MaxReduce
+                    | Component::SumReduce => $now,
+                    _ => start,
+                };
+                intervals.push((op.component, from, complete));
+            }
+            if let Some(limit) = trace_tile_limit {
+                if op.tile < limit {
+                    trace.push((op_idx, start, complete));
+                }
+            }
+            executed += 1;
+            makespan = makespan.max(complete);
+        }};
+    }
+
+    for (i, &d) in indeg.iter().enumerate() {
+        if d == 0 {
+            schedule!(i as u32, 0);
+        }
+    }
+
+    let mut completed = 0usize;
+    while let Some(Reverse((now, key))) = events.pop() {
+        let idx = (key & 0xFFFF_FFFF) as u32;
+        completed += 1;
+        let (s, e) = (out_start[idx as usize] as usize, out_start[idx as usize + 1] as usize);
+        for &dep_idx in &out_edges[s..e] {
+            let di = dep_idx as usize;
+            indeg[di] -= 1;
+            if indeg[di] == 0 {
+                schedule!(dep_idx, now);
+            }
+        }
+    }
+
+    assert_eq!(
+        completed, n,
+        "dependency cycle: {} of {} ops never became ready",
+        n - completed,
+        n
+    );
+
+    let breakdown = Breakdown::from_intervals(&intervals, makespan);
+    (
+        RunStats {
+            makespan,
+            breakdown,
+            hbm_bytes,
+            flops: program.flops,
+            redmule_busy_total: redmule_busy,
+            spatz_busy_total: spatz_busy,
+            ops_executed: executed,
+        },
+        trace,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::execute;
+    use crate::sim::program::NO_TILE;
+
+    #[test]
+    fn reference_matches_engine_on_a_small_dag() {
+        let mut p = Program::new();
+        let rs = p.resources(3);
+        let a = p.op(rs[0], 12, 5, Component::HbmAccess, 0, 96, &[]);
+        let b = p.op(rs[1], 8, 0, Component::RedMule, 0, 0, &[a]);
+        let c = p.op(rs[1], 8, 0, Component::RedMule, 1, 0, &[a]);
+        let d = p.op(rs[2], 3, 0, Component::Spatz, 0, 0, &[b]);
+        let _ = p.op(rs[0], 1, 0, Component::Other, NO_TILE, 0, &[c, d]);
+        let reference = execute_reference(&p, 0);
+        let engine = execute(&p, 0);
+        assert_eq!(reference, engine);
+        p.seal();
+        assert_eq!(reference, execute(&p, 0));
+    }
+}

@@ -3,7 +3,7 @@
 
 use flatattention::arch::presets;
 use flatattention::coordinator::{
-    best_group, run_all, run_one, valid_groups, ExperimentSpec, ResultStore,
+    best_group, run_all, run_all_uncached, run_one, valid_groups, ExperimentSpec, ResultStore,
 };
 use flatattention::dataflow::{Dataflow, Workload, ALL_DATAFLOWS};
 use flatattention::report::{fig3, fig4, fig5a, headline, section2, tables, ReportOpts};
@@ -65,6 +65,29 @@ fn full_report_pipeline_with_store() {
         loaded.section("fig3").unwrap().len(),
         store.section("fig3").unwrap().len()
     );
+}
+
+#[test]
+fn memoized_reports_are_bit_identical() {
+    // The memoized coordinator must produce byte-identical report tables:
+    // render twice (second pass is served almost entirely from the cache)
+    // and cross-check the underlying result rows against an uncached run.
+    let opts = quick_opts();
+    let first = fig3::render(&opts, None);
+    let second = fig3::render(&opts, None);
+    assert_eq!(first, second, "fig3 render must not depend on cache state");
+
+    let t4a = fig4::render(&opts, None);
+    let t4b = fig4::render(&opts, None);
+    assert_eq!(t4a, t4b);
+
+    let arch = presets::table1();
+    let wl = Workload::new(1024, 128, 8, 1);
+    let specs: Vec<ExperimentSpec> = ALL_DATAFLOWS
+        .into_iter()
+        .map(|df| ExperimentSpec { arch: arch.clone(), workload: wl, dataflow: df, group: 16 })
+        .collect();
+    assert_eq!(run_all(&specs, 4), run_all_uncached(&specs, 4));
 }
 
 #[test]

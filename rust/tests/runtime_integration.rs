@@ -2,7 +2,9 @@
 //!
 //! Requires `make artifacts` (skips gracefully when absent so `cargo test`
 //! works on a fresh checkout; the Makefile `test` target always builds
-//! artifacts first).
+//! artifacts first) and a build with the `pjrt` feature enabled (default
+//! builds are simulation-only — see Cargo.toml).
+#![cfg(feature = "pjrt")]
 
 use flatattention::functional::{
     attention_golden, run_flat_group_functional, NativeCompute, RuntimeCompute,

@@ -1,0 +1,143 @@
+//! Minimal offline shim of the `anyhow` error-handling API.
+//!
+//! The build environment has no crates.io access, so this path dependency
+//! provides the subset of `anyhow` the crate uses: [`Error`], the
+//! defaulted [`Result`] alias, the [`Context`] extension trait and the
+//! [`anyhow!`] / [`bail!`] macros. Errors are flattened to strings —
+//! sufficient for a CLI/simulation stack where errors are reported, not
+//! matched on.
+
+use std::fmt;
+
+/// A string-backed error value. Like `anyhow::Error`, it deliberately does
+/// not implement `std::error::Error`, which permits the blanket
+/// `From<E: std::error::Error>` conversion used by `?`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any displayable message (used by [`anyhow!`]).
+    pub fn new(msg: impl fmt::Display) -> Self {
+        Self { msg: msg.to_string() }
+    }
+
+    /// Alias of [`Error::new`] matching `anyhow::Error::msg`.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self::new(msg)
+    }
+
+    /// Prepend a context layer, rendered as `context: cause`.
+    pub fn context(self, context: impl fmt::Display) -> Self {
+        Self { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+/// `Result` with a defaulted error type, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to `Result`
+/// and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::new(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::new(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::new(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent-anyhow-shim-test")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_layers_render_outermost_first() {
+        let e: Result<()> = Err(Error::new("inner"));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn with_context_on_option() {
+        let v: Option<u32> = None;
+        let e = v.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert!(e.to_string().contains("missing 7"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad value {}", 3);
+        assert_eq!(e.to_string(), "bad value 3");
+        fn f() -> Result<()> {
+            bail!("stop {}", "now")
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stop now");
+    }
+
+    #[test]
+    fn result_alias_allows_custom_error() {
+        let r: Result<u32, String> = Err("plain".into());
+        assert!(r.context("ctx").is_err());
+    }
+}
