@@ -24,11 +24,16 @@ use super::experiment::{ExperimentResult, ExperimentSpec};
 /// Content fingerprint of an [`ExperimentSpec`]: two specs compare equal
 /// iff every field influencing the simulation (and the derived metrics,
 /// including `freq_ghz` and the id-forming `arch.name`) is identical.
+/// The global symmetry-folding switch joins the key so a toggled process
+/// never serves one mode's results for the other (they are bit-identical
+/// by construction — `tests/fold_differential.rs` — but the cache must
+/// not depend on that invariant for correctness).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct SpecKey {
     arch_name: String,
     dataflow: Dataflow,
     group: usize,
+    folding: bool,
     nums: [u64; 24],
 }
 
@@ -61,6 +66,7 @@ pub fn spec_key(spec: &ExperimentSpec) -> SpecKey {
         arch_name: name.clone(),
         dataflow: *dataflow,
         group: *group,
+        folding: dataflow::symmetry_folding(),
         nums: [
             *mesh_x as u64,
             *mesh_y as u64,
@@ -307,6 +313,24 @@ mod tests {
         let again = run_all(&specs, 2);
         assert_eq!(memoized, again);
         assert_eq!(run_one(&specs[1]), memoized[1]);
+    }
+
+    #[test]
+    fn spec_key_tracks_folding_switch() {
+        let _guard = crate::dataflow::GLOBAL_SWITCH_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let spec = ExperimentSpec {
+            arch: table1(),
+            workload: Workload::new(1024, 128, 8, 1),
+            dataflow: Dataflow::FlatColl,
+            group: 8,
+        };
+        crate::dataflow::set_symmetry_folding(false);
+        let k_off = spec_key(&spec);
+        crate::dataflow::set_symmetry_folding(true);
+        let k_on = spec_key(&spec);
+        assert_ne!(k_off, k_on, "folding mode must partition the memo key space");
     }
 
     #[test]

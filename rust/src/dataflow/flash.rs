@@ -24,12 +24,24 @@
 //! only on the byte count, so it copies verbatim). Stamped and naive
 //! builds are op-for-op identical
 //! (`tests::stamped_build_is_identical_to_naive_build`).
+//!
+//! §Fold: with symmetry folding enabled (synchronous schedule only), every
+//! tile stream except the representative (tile 0, the breakdown tile)
+//! keeps its HBM-channel ops verbatim but collapses each inner iteration's
+//! private chain `QKᵀ → softmax₁ → softmax₂ → rescale → P·V` (plus the
+//! final normalize) into one delay op on the tile's matrix engine. The
+//! chain runs on engines private to the tile and is never
+//! resource-blocked, so its completion is exactly `max(deps) + Σ
+//! occupancy` — the delay op reproduces every kept op's issue time, hence
+//! channel contention, makespan and `RunStats`, bit for bit (see
+//! `crate::dataflow` docs and `tests/fold_differential.rs`).
 
 use crate::arch::ArchConfig;
 use crate::engines::{dma_hbm_time, matmul_cycles, SpatzOp};
 use crate::hbm::HbmMap;
 use crate::noc::Topology;
-use crate::sim::{Component, OpId, Program, ResourceId};
+use crate::sim::program::NO_TILE;
+use crate::sim::{Component, FoldStats, OpId, Program, ResourceId};
 
 use super::opt_deps;
 use super::tiling::flash_block_size;
@@ -83,6 +95,9 @@ struct BlockTemplate {
     /// resource rotates with the block number.
     kv_ops: Vec<u32>,
     blk_no: usize,
+    /// Fold accounting of the block (zero when built unfolded); re-applied
+    /// once per stamped instance.
+    fold_delta: FoldStats,
 }
 
 /// Build the FlashAttention program (`asynchronous` = FA-3 schedule).
@@ -146,6 +161,11 @@ pub(crate) fn flash_program_ext_in(
         }
     }
 
+    // §Fold: tile 0 is the representative (breakdown) stream and always
+    // builds unfolded; the asynchronous schedule interleaves two streams
+    // per engine (real arbitration) and never folds.
+    let folding = super::symmetry_folding() && !asynchronous;
+
     let mut hops_by_chan: Vec<u64> = vec![0; n_chan];
     for tid in 0..n_tiles {
         let (x, y) = topo.coords(tid as u32);
@@ -165,13 +185,13 @@ pub(crate) fn flash_program_ext_in(
                 let list: Vec<_> = stream.into_iter().map(|(_, b)| *b).collect();
                 build_stream(
                     &mut prog, arch, wl, row_ch, &hops_by_chan, &tiles[tid], tid as u32, &list,
-                    m, t_c, d, eb, true, double_buffer,
+                    m, t_c, d, eb, true, double_buffer, false,
                 );
             }
         } else {
             build_stream(
                 &mut prog, arch, wl, row_ch, &hops_by_chan, &tiles[tid], tid as u32, blocks, m,
-                t_c, d, eb, false, double_buffer,
+                t_c, d, eb, false, double_buffer, folding && tid != 0,
             );
         }
     }
@@ -182,7 +202,9 @@ pub(crate) fn flash_program_ext_in(
 }
 
 /// Emit one serial stream of blocks for a tile. Deps keep the stream
-/// internally ordered while engines arbitrate across streams.
+/// internally ordered while engines arbitrate across streams. With `fold`
+/// set, private compute chains collapse into delay ops (§Fold) while the
+/// channel op stream stays verbatim.
 #[allow(clippy::too_many_arguments)]
 fn build_stream(
     prog: &mut Program,
@@ -199,7 +221,9 @@ fn build_stream(
     eb: u64,
     asynchronous: bool,
     double_buffer: bool,
+    fold: bool,
 ) {
+    debug_assert!(!(fold && asynchronous), "async streams never fold");
     let chan_base = |c: usize| ResourceId(c as u32);
     let n_chan = hops_by_chan.len();
     let stamping = super::template_stamping();
@@ -208,6 +232,9 @@ fn build_stream(
     let kv_lat_base = arch.hbm.access_latency + 2 * arch.noc.inject_latency;
     let router = arch.noc.router_latency;
 
+    if fold {
+        prog.fold.streams += 1;
+    }
     let mut prev_block_end: Option<OpId> = None;
     let mut templates: Vec<BlockTemplate> = Vec::new();
 
@@ -232,12 +259,15 @@ fn build_stream(
                     op.resource = chan_base(chan);
                     op.latency = kv_lat_base + hops_by_chan[chan] * router;
                 }
+                let fold_delta = t.fold_delta;
+                prog.fold.accumulate(&fold_delta);
                 prev_block_end = Some(OpId(new_base + t.len - 1));
                 continue;
             }
         }
 
         let block_base = prog.num_ops() as u32;
+        let fold_before = prog.fold;
         let gated = prev_block_end.is_some();
         let start_dep = prev_block_end;
         let mut kv_ops: Vec<u32> = Vec::with_capacity(t_c_eff as usize);
@@ -258,6 +288,7 @@ fn build_stream(
         );
 
         let rs_cycles = SpatzOp::Rescale { rows: m_r, elems: m_r * d }.cycles(&arch.tile);
+        let norm_cycles = SpatzOp::Normalize { rows: m_r, elems: m_r * d }.cycles(&arch.tile);
         let mut pv: Vec<OpId> = Vec::with_capacity(t_c_eff as usize);
         let mut last_stage: Option<OpId> = None;
         let mut costs_memo: Option<(u64, ShapeCosts)> = None;
@@ -294,6 +325,40 @@ fn build_stream(
                 &dbuf[..nd],
             );
             kv_ops.push(lkv.0 - block_base);
+
+            if fold {
+                // §Fold: the private chain qk → sm1 → sm2 → rs → pv
+                // (+ final normalize) never blocks on the tile's engines,
+                // so one delay op of the summed occupancy completes at
+                // exactly the chain's completion time.
+                let mask_cycles = if wl.causal && j == i { costs.scale } else { 0 };
+                let spatz_occ = mask_cycles + costs.sm1_base + costs.sm2 + rs_cycles;
+                let last = j + 1 == t_c_eff;
+                let spatz_occ = spatz_occ + if last { norm_cycles } else { 0 };
+                let mut dbuf = [OpId(0); 3];
+                dbuf[0] = load_q;
+                dbuf[1] = lkv;
+                let mut nd = 2;
+                if let Some(prev) = last_stage {
+                    dbuf[nd] = prev;
+                    nd += 1;
+                }
+                let delay = prog.op(
+                    ctx.redmule,
+                    costs.qk + costs.pv + spatz_occ,
+                    0,
+                    Component::Other,
+                    NO_TILE,
+                    0,
+                    &dbuf[..nd],
+                );
+                prog.fold.ops += if last { 5 } else { 4 };
+                prog.fold.redmule_busy += costs.qk + costs.pv;
+                prog.fold.spatz_busy += spatz_occ;
+                pv.push(delay);
+                last_stage = Some(delay);
+                continue;
+            }
 
             // Scalar-core scheduling overhead (FA-3 only).
             let sched = if asynchronous {
@@ -359,16 +424,14 @@ fn build_stream(
             last_stage = Some(pvop);
         }
 
-        // Final normalization by diag(l)^{-1} and store of O_i.
-        let norm = prog.op(
-            ctx.spatz,
-            SpatzOp::Normalize { rows: m_r, elems: m_r * d }.cycles(&arch.tile),
-            0,
-            Component::Spatz,
-            tid,
-            0,
-            &[*pv.last().expect("at least one inner iteration")],
-        );
+        // Final normalization by diag(l)^{-1} and store of O_i. Folded
+        // streams absorbed the normalize into the last delay op.
+        let last_stage_op = *pv.last().expect("at least one inner iteration");
+        let pre_store = if fold {
+            last_stage_op
+        } else {
+            prog.op(ctx.spatz, norm_cycles, 0, Component::Spatz, tid, 0, &[last_stage_op])
+        };
         let o_bytes = m_r * d * eb;
         let to = dma_hbm_time(&arch.hbm, &arch.noc, o_bytes, row_ch.hops);
         let store = prog.op(
@@ -378,7 +441,7 @@ fn build_stream(
             Component::HbmAccess,
             tid,
             o_bytes,
-            &[norm],
+            &[pre_store],
         );
         if stamping && gated {
             templates.push(BlockTemplate {
@@ -388,6 +451,7 @@ fn build_stream(
                 len: prog.num_ops() as u32 - block_base,
                 kv_ops,
                 blk_no,
+                fold_delta: prog.fold.delta_since(&fold_before),
             });
         }
         prev_block_end = Some(store);
@@ -412,7 +476,7 @@ fn topo_hops(arch: &ArchConfig, x: usize, y: usize, chan: usize, _m: &HbmMap) ->
 mod tests {
     use super::*;
     use crate::arch::presets::table1;
-    use crate::dataflow::{assert_programs_equal, set_template_stamping};
+    use crate::dataflow::{assert_programs_equal, set_symmetry_folding, set_template_stamping};
     use crate::sim::execute;
 
     fn small_wl() -> Workload {
@@ -435,20 +499,55 @@ mod tests {
         // including the per-block K/V channel rotation. The 8×8 mesh with
         // many heads gives every tile stream several same-shape blocks
         // (≥3, so the template registered at the second block is stamped).
-        let _guard = crate::dataflow::STAMPING_TEST_LOCK
+        // Runs under both folding modes: stamping must reproduce the
+        // collapsed emission (incl. the fold accounting) just as exactly.
+        let _guard = crate::dataflow::GLOBAL_SWITCH_TEST_LOCK
             .lock()
             .unwrap_or_else(|e| e.into_inner());
         let arch = crate::arch::presets::table2(8);
-        for (wl, asyn) in [
-            (Workload::new(1024, 128, 192, 2), false),
-            (Workload::new(1024, 128, 192, 2), true),
-            (Workload::new(2048, 64, 96, 1).with_causal(true), false),
+        for folding in [true, false] {
+            set_symmetry_folding(folding);
+            for (wl, asyn) in [
+                (Workload::new(1024, 128, 192, 2), false),
+                (Workload::new(1024, 128, 192, 2), true),
+                (Workload::new(2048, 64, 96, 1).with_causal(true), false),
+            ] {
+                let stamped = flash_program(&arch, &wl, asyn);
+                set_template_stamping(false);
+                let naive = flash_program(&arch, &wl, asyn);
+                set_template_stamping(true);
+                assert_programs_equal(&stamped, &naive);
+            }
+        }
+        set_symmetry_folding(true);
+    }
+
+    #[test]
+    fn folded_build_executes_bit_identically() {
+        // §Fold exactness on the synchronous schedule: identical RunStats
+        // (makespan, breakdown, traffic, busy totals, op counts) from the
+        // folded and unfolded builds.
+        let _guard = crate::dataflow::GLOBAL_SWITCH_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let arch = crate::arch::presets::table2(8);
+        for wl in [
+            Workload::new(1024, 128, 96, 1),
+            Workload::new(1536, 64, 48, 1).with_causal(true),
         ] {
-            let stamped = flash_program(&arch, &wl, asyn);
-            set_template_stamping(false);
-            let naive = flash_program(&arch, &wl, asyn);
-            set_template_stamping(true);
-            assert_programs_equal(&stamped, &naive);
+            set_symmetry_folding(true);
+            let folded = flash_program(&arch, &wl, false);
+            set_symmetry_folding(false);
+            let unfolded = flash_program(&arch, &wl, false);
+            set_symmetry_folding(true);
+            assert!(folded.fold.streams > 0, "folding should engage");
+            assert_eq!(unfolded.fold.streams, 0);
+            assert_eq!(
+                folded.num_ops() as u64 + folded.fold.ops,
+                unfolded.num_ops() as u64,
+                "op conservation"
+            );
+            assert_eq!(execute(&folded, 0), execute(&unfolded, 0), "{wl:?}");
         }
     }
 

@@ -29,17 +29,86 @@
 //! [`Program::stamp_range`], skipping the cost-model and op-emission work
 //! entirely. Stamped and naive builds are op-for-op identical
 //! (`tests::stamped_build_is_identical_to_naive_build`).
+//!
+//! §Fold: with symmetry folding enabled (synchronous schedules only),
+//! every group except group 0 (which holds the breakdown tile) keeps its
+//! HBM-channel and bus-collective ops verbatim but collapses the `g²`
+//! per-tile compute chains of each inner iteration into *per-row* delay
+//! ops. Within a row all `g` chains have uniform timing — their per-stage
+//! dependencies (`sum_mc[ly]`, `max_mc[ly]`) are row-wide — and the only
+//! cross-column join (`QKᵀ` waiting on all column multicasts) is expressed
+//! as the delay op's dependency list, so each collapsed op completes at
+//! exactly the time the slowest original chain op would. Group engines in
+//! the synchronous schedule serve one serial chain per tile and are never
+//! resource-blocked, making the collapse exact (see `crate::dataflow`
+//! docs and `tests/fold_differential.rs`).
 
 use crate::arch::ArchConfig;
 use crate::engines::{dma_hbm_time, matmul_cycles, SpatzOp};
 use crate::hbm::HbmMap;
-use crate::noc::{collective_time, CollectiveKind};
+use crate::noc::{collective_time, CollectiveKind, XferTime};
 use crate::sim::program::NO_TILE;
-use crate::sim::{Component, OpId, Program, ResourceId};
+use crate::sim::{Component, FoldStats, OpId, Program, ResourceId};
 
 use super::opt_deps;
 use super::tiling::FlatTiling;
 use super::Workload;
+
+/// Per-(block, inner-iteration) costs, shared by the unfolded and folded
+/// emission paths (§Perf: computed once per iteration, not per tile; the
+/// values depend only on the slice shapes, never on the group position).
+struct IterCosts {
+    kv_bytes: u64,
+    mt_kv: XferTime,
+    qk_cycles: u64,
+    /// Includes the causal diagonal mask when `j == i`.
+    sm1_cycles: u64,
+    sm2_cycles: u64,
+    sm3_cycles: u64,
+    pv_cycles: u64,
+    rt_max: XferTime,
+    rt_sum: XferTime,
+    mt_stat: XferTime,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn iter_costs(
+    arch: &ArchConfig,
+    wl: &Workload,
+    tiling: &FlatTiling,
+    t_r_slice: u64,
+    i: u64,
+    j: u64,
+    n_dest: u64,
+) -> IterCosts {
+    let d = wl.head_dim;
+    let m_c_block = (wl.seq - j * tiling.block).min(tiling.block);
+    let t_c_slice = m_c_block.div_ceil(tiling.group).max(1);
+    let kv_bytes = 2 * t_c_slice * d * Workload::BYTES_PER_ELEM;
+    let mask_cycles = if wl.causal && j == i {
+        SpatzOp::Scale { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
+    } else {
+        0
+    };
+    let stat_bytes = t_r_slice * Workload::BYTES_PER_ELEM;
+    IterCosts {
+        kv_bytes,
+        mt_kv: collective_time(&arch.noc, kv_bytes, n_dest, CollectiveKind::Multicast),
+        qk_cycles: matmul_cycles(&arch.tile, t_r_slice, d, t_c_slice),
+        sm1_cycles: mask_cycles
+            + SpatzOp::Scale { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
+            + SpatzOp::RowMax { rows: t_r_slice, cols: t_c_slice }.cycles(&arch.tile)
+            + SpatzOp::StatsUpdate { rows: t_r_slice }.cycles(&arch.tile),
+        sm2_cycles: SpatzOp::Exp { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
+            + SpatzOp::RowSum { rows: t_r_slice, cols: t_c_slice }.cycles(&arch.tile),
+        sm3_cycles: SpatzOp::StatsUpdate { rows: t_r_slice }.cycles(&arch.tile)
+            + SpatzOp::Rescale { rows: t_r_slice, elems: t_r_slice * d }.cycles(&arch.tile),
+        pv_cycles: matmul_cycles(&arch.tile, t_r_slice, t_c_slice, d),
+        rt_max: collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::MaxReduce),
+        rt_sum: collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::SumReduce),
+        mt_stat: collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::Multicast),
+    }
+}
 
 /// Per-group resource handles.
 struct GroupCtx {
@@ -113,7 +182,12 @@ pub(crate) fn flat_program_ext_in(
         group_blocks[(blk % groups.len() as u64) as usize].push(blk);
     }
 
-    for (gc, blocks) in groups.iter().zip(&group_blocks) {
+    // §Fold: group 0 is the representative (breakdown) stream and always
+    // builds unfolded; the asynchronous schedule arbitrates two streams
+    // per engine and never folds.
+    let folding = super::symmetry_folding() && !asynchronous;
+
+    for (gi, (gc, blocks)) in groups.iter().zip(&group_blocks).enumerate() {
         if blocks.is_empty() {
             continue;
         }
@@ -124,13 +198,13 @@ pub(crate) fn flat_program_ext_in(
                 let list: Vec<u64> = stream.into_iter().map(|(_, b)| *b).collect();
                 build_group_stream(
                     &mut prog, arch, wl, &hbm_map, &chan_res, gc, &tiling, &list, true,
-                    double_buffer,
+                    double_buffer, false,
                 );
             }
         } else {
             build_group_stream(
                 &mut prog, arch, wl, &hbm_map, &chan_res, gc, &tiling, blocks, false,
-                double_buffer,
+                double_buffer, folding && gi != 0,
             );
         }
     }
@@ -140,7 +214,9 @@ pub(crate) fn flat_program_ext_in(
     prog
 }
 
-/// Emit one serial stream of blocks for a group.
+/// Emit one serial stream of blocks for a group. With `fold` set, the
+/// `g²` per-tile compute chains collapse into per-row delay ops (§Fold)
+/// while the channel and bus op streams stay verbatim.
 #[allow(clippy::too_many_arguments)]
 fn build_group_stream(
     prog: &mut Program,
@@ -153,7 +229,9 @@ fn build_group_stream(
     blocks: &[u64],
     asynchronous: bool,
     double_buffer: bool,
+    fold: bool,
 ) {
+    debug_assert!(!(fold && asynchronous), "async streams never fold");
     let g = tiling.group as usize;
     let d = wl.head_dim;
     let eb = Workload::BYTES_PER_ELEM;
@@ -163,27 +241,32 @@ fn build_group_stream(
     let n_dest = (g - 1) as u64;
     let stamping = super::template_stamping();
 
+    if fold {
+        prog.fold.streams += 1;
+    }
     let mut prev_barrier: Option<OpId> = None;
     // Block templates, keyed by row-block index `i` (which determines the
-    // whole block geometry): `(i, first op, op count)`. Only blocks gated
-    // on a previous barrier are registered, so every stamped instance has
-    // exactly one external dependency to rewrite.
-    let mut templates: Vec<(u64, u32, u32)> = Vec::new();
+    // whole block geometry): `(i, first op, op count, fold delta)`. Only
+    // blocks gated on a previous barrier are registered, so every stamped
+    // instance has exactly one external dependency to rewrite.
+    let mut templates: Vec<(u64, u32, u32, FoldStats)> = Vec::new();
 
     for &blk in blocks {
         let i = blk % tiling.t_r; // row-block index within the head
 
         if stamping {
-            if let (Some(prev), Some((_, base, len))) =
+            if let (Some(prev), Some((_, base, len, fold_delta))) =
                 (prev_barrier, templates.iter().find(|t| t.0 == i).copied())
             {
                 let new_base = prog.stamp_range(base, len, prev);
+                prog.fold.accumulate(&fold_delta);
                 prev_barrier = Some(OpId(new_base + len - 1));
                 continue;
             }
         }
 
         let block_base = prog.num_ops() as u32;
+        let fold_before = prog.fold;
         let m_r_block = (wl.seq - i * tiling.block).min(tiling.block);
         // Per-tile slice rows for this block (partial last block shrinks
         // every row's slice proportionally; sizes stay symmetric).
@@ -221,259 +304,416 @@ fn build_group_stream(
             q_mcast.push(mc);
         }
 
-        // Inner loop over K/V column blocks.
-        let mut pv_prev: Vec<Option<OpId>> = vec![None; g * g]; // pv[j-1] per tile
-        let mut pv_prev2: Vec<Option<OpId>> = vec![None; g * g]; // pv[j-2] per tile
-
         // Causal: group-level K/V blocks above the diagonal are skipped;
         // the diagonal block is masked on the vector engine.
         let t_c_eff = if wl.causal { (i + 1).min(tiling.t_c) } else { tiling.t_c };
-        for j in 0..t_c_eff {
-            let m_c_block = (wl.seq - j * tiling.block).min(tiling.block);
-            let t_c_slice = m_c_block.div_ceil(tiling.group).max(1);
-
-            // Per-iteration costs are identical across the g / g² emission
-            // loops below — compute each once (§Perf).
-            let kv_bytes = 2 * t_c_slice * d * eb;
-            let mt_kv = collective_time(&arch.noc, kv_bytes, n_dest, CollectiveKind::Multicast);
-            let qk_cycles = matmul_cycles(&arch.tile, t_r_slice, d, t_c_slice);
-            let mask_cycles = if wl.causal && j == i {
-                SpatzOp::Scale { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
-            } else {
-                0
-            };
-            let sm1_cycles = mask_cycles
-                + SpatzOp::Scale { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
-                + SpatzOp::RowMax { rows: t_r_slice, cols: t_c_slice }.cycles(&arch.tile)
-                + SpatzOp::StatsUpdate { rows: t_r_slice }.cycles(&arch.tile);
-            let sm2_cycles = SpatzOp::Exp { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
-                + SpatzOp::RowSum { rows: t_r_slice, cols: t_c_slice }.cycles(&arch.tile);
-            let sm3_cycles = SpatzOp::StatsUpdate { rows: t_r_slice }.cycles(&arch.tile)
-                + SpatzOp::Rescale { rows: t_r_slice, elems: t_r_slice * d }.cycles(&arch.tile);
-            let pv_cycles = matmul_cycles(&arch.tile, t_r_slice, t_c_slice, d);
-            let stat_bytes = t_r_slice * eb;
-            let rt_max = collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::MaxReduce);
-            let rt_sum = collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::SumReduce);
-            let mt_stat = collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::Multicast);
-
-            // ③ South-edge tiles load Kᵀ/V slices; ④ column multicast.
-            let mut kv_mcast: Vec<OpId> = Vec::with_capacity(g);
-            for lx in 0..g {
-                let (gx, gy) = (ox + lx, oy + g - 1);
-                let ch = hbm_map.col_channel(gx, gy);
-                let tkv = dma_hbm_time(&arch.hbm, &arch.noc, kv_bytes, ch.hops);
-                let south = local(lx, g - 1);
-                // Buffering: double-buffered for sync, single for async
-                // (the second head-stream provides the overlap).
-                let buf_dep = if asynchronous || !double_buffer {
-                    pv_prev[south]
-                } else {
-                    pv_prev2[south]
-                };
-                let mut dbuf = [OpId(0); 2];
-                let nd = opt_deps(&mut dbuf, start_dep, buf_dep);
-                let load = prog.op(
-                    chan_res[ch.index],
-                    tkv.occupancy,
-                    tkv.latency,
-                    Component::HbmAccess,
-                    tid(lx, g - 1),
-                    kv_bytes,
-                    &dbuf[..nd],
-                );
-                let mc = prog.op(
-                    gc.col_bus[lx],
-                    mt_kv.occupancy,
-                    mt_kv.latency,
-                    Component::Multicast,
-                    tid(lx, g - 1),
-                    0,
-                    &[load],
-                );
-                kv_mcast.push(mc);
-            }
-
-            let mut sm1_row: Vec<Vec<OpId>> = vec![Vec::with_capacity(g); g];
-            for ly in 0..g {
-                for lx in 0..g {
-                    let tl = local(lx, ly);
-                    // ⑤ S slice = Q_iy · Kᵀ_jx.
-                    let mut dbuf = [OpId(0); 3];
-                    dbuf[0] = q_mcast[ly];
-                    dbuf[1] = kv_mcast[lx];
-                    let mut nd = 2;
-                    if let Some(p) = pv_prev[tl] {
-                        // serialize with own prior iteration
-                        dbuf[nd] = p;
-                        nd += 1;
-                    }
-                    let qk = prog.op(
-                        gc.redmule[tl],
-                        qk_cycles,
-                        0,
-                        Component::RedMule,
-                        tid(lx, ly),
-                        0,
-                        &dbuf[..nd],
-                    );
-                    // ⑥⑦ scale + local row maxima + running max (+ causal
-                    // triangular mask on diagonal blocks).
-                    let sm1 = prog.op(
-                        gc.spatz[tl],
-                        sm1_cycles,
-                        0,
-                        Component::Spatz,
-                        tid(lx, ly),
-                        0,
-                        &[qk],
-                    );
-                    sm1_row[ly].push(sm1);
-                }
-            }
-
-            // ⑧⑨ Row-wise max reduction + multicast of the global maxima.
-            let mut max_mc: Vec<OpId> = Vec::with_capacity(g);
-            for ly in 0..g {
-                let red = prog.op(
-                    gc.row_bus[ly],
-                    rt_max.occupancy,
-                    rt_max.latency,
-                    Component::MaxReduce,
-                    tid(0, ly),
-                    0,
-                    &sm1_row[ly],
-                );
-                let mc = prog.op(
-                    gc.row_bus[ly],
-                    mt_stat.occupancy,
-                    mt_stat.latency,
-                    Component::Multicast,
-                    tid(0, ly),
-                    0,
-                    &[red],
-                );
-                max_mc.push(mc);
-            }
-
-            // ⑩⑪ exp + local row sums, then ⑫⑬ sum reduction + multicast.
-            let mut sm2_row: Vec<Vec<OpId>> = vec![Vec::with_capacity(g); g];
-            for ly in 0..g {
-                for lx in 0..g {
-                    let tl = local(lx, ly);
-                    let sm2 = prog.op(
-                        gc.spatz[tl],
-                        sm2_cycles,
-                        0,
-                        Component::Spatz,
-                        tid(lx, ly),
-                        0,
-                        &[max_mc[ly]],
-                    );
-                    sm2_row[ly].push(sm2);
-                }
-            }
-            let mut sum_mc: Vec<OpId> = Vec::with_capacity(g);
-            for ly in 0..g {
-                let red = prog.op(
-                    gc.row_bus[ly],
-                    rt_sum.occupancy,
-                    rt_sum.latency,
-                    Component::SumReduce,
-                    tid(0, ly),
-                    0,
-                    &sm2_row[ly],
-                );
-                let mc = prog.op(
-                    gc.row_bus[ly],
-                    mt_stat.occupancy,
-                    mt_stat.latency,
-                    Component::Multicast,
-                    tid(0, ly),
-                    0,
-                    &[red],
-                );
-                sum_mc.push(mc);
-            }
-
-            // ⑭–⑰ stats update, O rescale, O += P̃·V.
-            for ly in 0..g {
-                for lx in 0..g {
-                    let tl = local(lx, ly);
-                    let sm3 = prog.op(
-                        gc.spatz[tl],
-                        sm3_cycles,
-                        0,
-                        Component::Spatz,
-                        tid(lx, ly),
-                        0,
-                        &[sum_mc[ly]],
-                    );
-                    let pv = prog.op(
-                        gc.redmule[tl],
-                        pv_cycles,
-                        0,
-                        Component::RedMule,
-                        tid(lx, ly),
-                        0,
-                        &[sm3],
-                    );
-                    pv_prev2[tl] = pv_prev[tl];
-                    pv_prev[tl] = Some(pv);
-                }
-            }
-        }
-
-        // ⑱ normalize, ⑲ row-reduce O to the west edge, ⑳ store.
         let norm_cycles =
             SpatzOp::Normalize { rows: t_r_slice, elems: t_r_slice * d }.cycles(&arch.tile);
         let o_bytes = t_r_slice * d * eb;
         let rt_o = collective_time(&arch.noc, o_bytes, n_dest, CollectiveKind::SumReduce);
         let mut stores: Vec<OpId> = Vec::with_capacity(g);
-        let mut norm_row: Vec<Vec<OpId>> = vec![Vec::with_capacity(g); g];
-        for ly in 0..g {
-            for lx in 0..g {
-                let tl = local(lx, ly);
+
+        if fold {
+            // §Fold: collapsed inner loop — identical channel (loads,
+            // stores) and bus (multicasts, reductions) op stream, with the
+            // g² per-tile chains of each stage replaced by one delay op
+            // per row. Within a row the original chains complete in
+            // lockstep (their stage deps are row-wide), so the delay op's
+            // completion equals every original chain op's completion.
+            let g64 = g as u64;
+            let gg = g64 * g64;
+            let mut pv_row: Vec<Option<OpId>> = vec![None; g]; // PV[j-1] per row
+            let mut pv_row2: Vec<Option<OpId>> = vec![None; g]; // PV[j-2] per row
+            let mut join_deps: Vec<OpId> = Vec::with_capacity(g + 2);
+            for j in 0..t_c_eff {
+                let c = iter_costs(arch, wl, tiling, t_r_slice, i, j, n_dest);
+
+                // ③ South-edge loads + ④ column multicasts (kept).
+                let mut kv_mcast: Vec<OpId> = Vec::with_capacity(g);
+                for lx in 0..g {
+                    let (gx, gy) = (ox + lx, oy + g - 1);
+                    let ch = hbm_map.col_channel(gx, gy);
+                    let tkv = dma_hbm_time(&arch.hbm, &arch.noc, c.kv_bytes, ch.hops);
+                    // Buffering deps: the south row's PV delay op stands in
+                    // for pv[j-1] / pv[j-2] of every south tile (their
+                    // completions are identical).
+                    let buf_dep = if asynchronous || !double_buffer {
+                        pv_row[g - 1]
+                    } else {
+                        pv_row2[g - 1]
+                    };
+                    let mut dbuf = [OpId(0); 2];
+                    let nd = opt_deps(&mut dbuf, start_dep, buf_dep);
+                    let load = prog.op(
+                        chan_res[ch.index],
+                        tkv.occupancy,
+                        tkv.latency,
+                        Component::HbmAccess,
+                        tid(lx, g - 1),
+                        c.kv_bytes,
+                        &dbuf[..nd],
+                    );
+                    let mc = prog.op(
+                        gc.col_bus[lx],
+                        c.mt_kv.occupancy,
+                        c.mt_kv.latency,
+                        Component::Multicast,
+                        tid(lx, g - 1),
+                        0,
+                        &[load],
+                    );
+                    kv_mcast.push(mc);
+                }
+
+                for ly in 0..g {
+                    // ⑤⑥⑦ collapsed QKᵀ + softmax-1 row chain: ready when
+                    // the row's Q multicast, *all* column multicasts and
+                    // the row's previous PV have completed — the max the
+                    // slowest original tile chain would wait for.
+                    join_deps.clear();
+                    join_deps.push(q_mcast[ly]);
+                    join_deps.extend_from_slice(&kv_mcast);
+                    if let Some(p) = pv_row[ly] {
+                        join_deps.push(p);
+                    }
+                    let jop = prog.op(
+                        gc.redmule[local(0, ly)],
+                        c.qk_cycles + c.sm1_cycles,
+                        0,
+                        Component::Other,
+                        NO_TILE,
+                        0,
+                        &join_deps,
+                    );
+                    // ⑧⑨ kept row-bus max reduction + multicast.
+                    let red = prog.op(
+                        gc.row_bus[ly],
+                        c.rt_max.occupancy,
+                        c.rt_max.latency,
+                        Component::MaxReduce,
+                        tid(0, ly),
+                        0,
+                        &[jop],
+                    );
+                    let max_mc = prog.op(
+                        gc.row_bus[ly],
+                        c.mt_stat.occupancy,
+                        c.mt_stat.latency,
+                        Component::Multicast,
+                        tid(0, ly),
+                        0,
+                        &[red],
+                    );
+                    // ⑩⑪ collapsed exp + row sums.
+                    let s2 = prog.op(
+                        gc.spatz[local(0, ly)],
+                        c.sm2_cycles,
+                        0,
+                        Component::Other,
+                        NO_TILE,
+                        0,
+                        &[max_mc],
+                    );
+                    // ⑫⑬ kept row-bus sum reduction + multicast.
+                    let sum_red = prog.op(
+                        gc.row_bus[ly],
+                        c.rt_sum.occupancy,
+                        c.rt_sum.latency,
+                        Component::SumReduce,
+                        tid(0, ly),
+                        0,
+                        &[s2],
+                    );
+                    let sum_mc = prog.op(
+                        gc.row_bus[ly],
+                        c.mt_stat.occupancy,
+                        c.mt_stat.latency,
+                        Component::Multicast,
+                        tid(0, ly),
+                        0,
+                        &[sum_red],
+                    );
+                    // ⑭–⑰ collapsed stats update + rescale + P·V.
+                    let pvop = prog.op(
+                        gc.redmule[local(0, ly)],
+                        c.sm3_cycles + c.pv_cycles,
+                        0,
+                        Component::Other,
+                        NO_TILE,
+                        0,
+                        &[sum_mc],
+                    );
+                    pv_row2[ly] = pv_row[ly];
+                    pv_row[ly] = Some(pvop);
+                }
+                // Elided per iteration: g²·(qk, sm1, sm2, sm3, pv) ops,
+                // replaced by 3 delay ops per row.
+                prog.fold.ops += 5 * gg - 3 * g64;
+                prog.fold.redmule_busy += gg * (c.qk_cycles + c.pv_cycles);
+                prog.fold.spatz_busy += gg * (c.sm1_cycles + c.sm2_cycles + c.sm3_cycles);
+            }
+
+            // ⑱ collapsed normalize, ⑲⑳ kept O-reduce + store per row.
+            for ly in 0..g {
                 let norm = prog.op(
-                    gc.spatz[tl],
+                    gc.spatz[local(0, ly)],
                     norm_cycles,
                     0,
-                    Component::Spatz,
-                    tid(lx, ly),
+                    Component::Other,
+                    NO_TILE,
                     0,
-                    &[pv_prev[tl].expect("inner loop ran")],
+                    &[pv_row[ly].expect("inner loop ran")],
                 );
-                norm_row[ly].push(norm);
+                let red = prog.op(
+                    gc.row_bus[ly],
+                    rt_o.occupancy,
+                    rt_o.latency,
+                    Component::SumReduce,
+                    tid(0, ly),
+                    0,
+                    &[norm],
+                );
+                let (gx, gy) = (ox, oy + ly);
+                let ch = hbm_map.row_channel(gx, gy);
+                let to = dma_hbm_time(&arch.hbm, &arch.noc, o_bytes, ch.hops);
+                let store = prog.op(
+                    chan_res[ch.index],
+                    to.occupancy,
+                    to.latency,
+                    Component::HbmAccess,
+                    tid(0, ly),
+                    o_bytes,
+                    &[red],
+                );
+                stores.push(store);
             }
-        }
-        for ly in 0..g {
-            let red = prog.op(
-                gc.row_bus[ly],
-                rt_o.occupancy,
-                rt_o.latency,
-                Component::SumReduce,
-                tid(0, ly),
-                0,
-                &norm_row[ly],
-            );
-            let (gx, gy) = (ox, oy + ly);
-            let ch = hbm_map.row_channel(gx, gy);
-            let to = dma_hbm_time(&arch.hbm, &arch.noc, o_bytes, ch.hops);
-            let store = prog.op(
-                chan_res[ch.index],
-                to.occupancy,
-                to.latency,
-                Component::HbmAccess,
-                tid(0, ly),
-                o_bytes,
-                &[red],
-            );
-            stores.push(store);
+            prog.fold.ops += gg - g64;
+            prog.fold.spatz_busy += gg * norm_cycles;
+        } else {
+            // Inner loop over K/V column blocks.
+            let mut pv_prev: Vec<Option<OpId>> = vec![None; g * g]; // pv[j-1] per tile
+            let mut pv_prev2: Vec<Option<OpId>> = vec![None; g * g]; // pv[j-2] per tile
+
+            for j in 0..t_c_eff {
+                // Per-iteration costs are identical across the g / g²
+                // emission loops below — compute each once (§Perf).
+                let c = iter_costs(arch, wl, tiling, t_r_slice, i, j, n_dest);
+
+                // ③ South-edge tiles load Kᵀ/V slices; ④ column multicast.
+                let mut kv_mcast: Vec<OpId> = Vec::with_capacity(g);
+                for lx in 0..g {
+                    let (gx, gy) = (ox + lx, oy + g - 1);
+                    let ch = hbm_map.col_channel(gx, gy);
+                    let tkv = dma_hbm_time(&arch.hbm, &arch.noc, c.kv_bytes, ch.hops);
+                    let south = local(lx, g - 1);
+                    // Buffering: double-buffered for sync, single for async
+                    // (the second head-stream provides the overlap).
+                    let buf_dep = if asynchronous || !double_buffer {
+                        pv_prev[south]
+                    } else {
+                        pv_prev2[south]
+                    };
+                    let mut dbuf = [OpId(0); 2];
+                    let nd = opt_deps(&mut dbuf, start_dep, buf_dep);
+                    let load = prog.op(
+                        chan_res[ch.index],
+                        tkv.occupancy,
+                        tkv.latency,
+                        Component::HbmAccess,
+                        tid(lx, g - 1),
+                        c.kv_bytes,
+                        &dbuf[..nd],
+                    );
+                    let mc = prog.op(
+                        gc.col_bus[lx],
+                        c.mt_kv.occupancy,
+                        c.mt_kv.latency,
+                        Component::Multicast,
+                        tid(lx, g - 1),
+                        0,
+                        &[load],
+                    );
+                    kv_mcast.push(mc);
+                }
+
+                let mut sm1_row: Vec<Vec<OpId>> = vec![Vec::with_capacity(g); g];
+                for ly in 0..g {
+                    for lx in 0..g {
+                        let tl = local(lx, ly);
+                        // ⑤ S slice = Q_iy · Kᵀ_jx.
+                        let mut dbuf = [OpId(0); 3];
+                        dbuf[0] = q_mcast[ly];
+                        dbuf[1] = kv_mcast[lx];
+                        let mut nd = 2;
+                        if let Some(p) = pv_prev[tl] {
+                            // serialize with own prior iteration
+                            dbuf[nd] = p;
+                            nd += 1;
+                        }
+                        let qk = prog.op(
+                            gc.redmule[tl],
+                            c.qk_cycles,
+                            0,
+                            Component::RedMule,
+                            tid(lx, ly),
+                            0,
+                            &dbuf[..nd],
+                        );
+                        // ⑥⑦ scale + local row maxima + running max
+                        // (+ causal triangular mask on diagonal blocks).
+                        let sm1 = prog.op(
+                            gc.spatz[tl],
+                            c.sm1_cycles,
+                            0,
+                            Component::Spatz,
+                            tid(lx, ly),
+                            0,
+                            &[qk],
+                        );
+                        sm1_row[ly].push(sm1);
+                    }
+                }
+
+                // ⑧⑨ Row-wise max reduction + multicast of global maxima.
+                let mut max_mc: Vec<OpId> = Vec::with_capacity(g);
+                for ly in 0..g {
+                    let red = prog.op(
+                        gc.row_bus[ly],
+                        c.rt_max.occupancy,
+                        c.rt_max.latency,
+                        Component::MaxReduce,
+                        tid(0, ly),
+                        0,
+                        &sm1_row[ly],
+                    );
+                    let mc = prog.op(
+                        gc.row_bus[ly],
+                        c.mt_stat.occupancy,
+                        c.mt_stat.latency,
+                        Component::Multicast,
+                        tid(0, ly),
+                        0,
+                        &[red],
+                    );
+                    max_mc.push(mc);
+                }
+
+                // ⑩⑪ exp + local row sums, ⑫⑬ sum reduction + multicast.
+                let mut sm2_row: Vec<Vec<OpId>> = vec![Vec::with_capacity(g); g];
+                for ly in 0..g {
+                    for lx in 0..g {
+                        let tl = local(lx, ly);
+                        let sm2 = prog.op(
+                            gc.spatz[tl],
+                            c.sm2_cycles,
+                            0,
+                            Component::Spatz,
+                            tid(lx, ly),
+                            0,
+                            &[max_mc[ly]],
+                        );
+                        sm2_row[ly].push(sm2);
+                    }
+                }
+                let mut sum_mc: Vec<OpId> = Vec::with_capacity(g);
+                for ly in 0..g {
+                    let red = prog.op(
+                        gc.row_bus[ly],
+                        c.rt_sum.occupancy,
+                        c.rt_sum.latency,
+                        Component::SumReduce,
+                        tid(0, ly),
+                        0,
+                        &sm2_row[ly],
+                    );
+                    let mc = prog.op(
+                        gc.row_bus[ly],
+                        c.mt_stat.occupancy,
+                        c.mt_stat.latency,
+                        Component::Multicast,
+                        tid(0, ly),
+                        0,
+                        &[red],
+                    );
+                    sum_mc.push(mc);
+                }
+
+                // ⑭–⑰ stats update, O rescale, O += P̃·V.
+                for ly in 0..g {
+                    for lx in 0..g {
+                        let tl = local(lx, ly);
+                        let sm3 = prog.op(
+                            gc.spatz[tl],
+                            c.sm3_cycles,
+                            0,
+                            Component::Spatz,
+                            tid(lx, ly),
+                            0,
+                            &[sum_mc[ly]],
+                        );
+                        let pv = prog.op(
+                            gc.redmule[tl],
+                            c.pv_cycles,
+                            0,
+                            Component::RedMule,
+                            tid(lx, ly),
+                            0,
+                            &[sm3],
+                        );
+                        pv_prev2[tl] = pv_prev[tl];
+                        pv_prev[tl] = Some(pv);
+                    }
+                }
+            }
+
+            // ⑱ normalize, ⑲ row-reduce O to the west edge, ⑳ store.
+            let mut norm_row: Vec<Vec<OpId>> = vec![Vec::with_capacity(g); g];
+            for ly in 0..g {
+                for lx in 0..g {
+                    let tl = local(lx, ly);
+                    let norm = prog.op(
+                        gc.spatz[tl],
+                        norm_cycles,
+                        0,
+                        Component::Spatz,
+                        tid(lx, ly),
+                        0,
+                        &[pv_prev[tl].expect("inner loop ran")],
+                    );
+                    norm_row[ly].push(norm);
+                }
+            }
+            for ly in 0..g {
+                let red = prog.op(
+                    gc.row_bus[ly],
+                    rt_o.occupancy,
+                    rt_o.latency,
+                    Component::SumReduce,
+                    tid(0, ly),
+                    0,
+                    &norm_row[ly],
+                );
+                let (gx, gy) = (ox, oy + ly);
+                let ch = hbm_map.row_channel(gx, gy);
+                let to = dma_hbm_time(&arch.hbm, &arch.noc, o_bytes, ch.hops);
+                let store = prog.op(
+                    chan_res[ch.index],
+                    to.occupancy,
+                    to.latency,
+                    Component::HbmAccess,
+                    tid(0, ly),
+                    o_bytes,
+                    &[red],
+                );
+                stores.push(store);
+            }
         }
 
         // Block barrier: the stream's next block starts after all stores.
         let barrier = prog.op(gc.sync, 0, 0, Component::Other, NO_TILE, 0, &stores);
         if stamping && start_dep.is_some() {
-            templates.push((i, block_base, prog.num_ops() as u32 - block_base));
+            let len = prog.num_ops() as u32 - block_base;
+            templates.push((i, block_base, len, prog.fold.delta_since(&fold_before)));
         }
         prev_barrier = Some(barrier);
     }
@@ -484,7 +724,8 @@ mod tests {
     use super::*;
     use crate::arch::presets::{table1, table1_sw_collectives};
     use crate::dataflow::{
-        assert_programs_equal, run, set_template_stamping, tracked_tile, Dataflow,
+        assert_programs_equal, run, set_symmetry_folding, set_template_stamping, tracked_tile,
+        Dataflow,
     };
     use crate::sim::execute;
 
@@ -509,22 +750,55 @@ mod tests {
     fn stamped_build_is_identical_to_naive_build() {
         // Template stamping is a pure construction-speed optimization: the
         // emitted program must match the naive per-block emission op for
-        // op, dep for dep.
-        let _guard = crate::dataflow::STAMPING_TEST_LOCK
+        // op, dep for dep — under both folding modes (stamping must also
+        // reproduce the collapsed emission and its fold accounting).
+        let _guard = crate::dataflow::GLOBAL_SWITCH_TEST_LOCK
             .lock()
             .unwrap_or_else(|e| e.into_inner());
         let arch = table1();
-        for (wl, group, asyn) in [
-            (Workload::new(2048, 128, 24, 1), 8usize, false),
-            (Workload::new(4096, 128, 8, 1), 32, true),
-            (Workload::new(1024, 64, 32, 2).with_causal(true), 8, false),
-            (Workload::new(512, 128, 32, 4), 16, true),
+        for folding in [true, false] {
+            set_symmetry_folding(folding);
+            for (wl, group, asyn) in [
+                (Workload::new(2048, 128, 24, 1), 8usize, false),
+                (Workload::new(4096, 128, 8, 1), 32, true),
+                (Workload::new(1024, 64, 32, 2).with_causal(true), 8, false),
+                (Workload::new(512, 128, 32, 4), 16, true),
+            ] {
+                let stamped = flat_program(&arch, &wl, group, asyn);
+                set_template_stamping(false);
+                let naive = flat_program(&arch, &wl, group, asyn);
+                set_template_stamping(true);
+                assert_programs_equal(&stamped, &naive);
+            }
+        }
+        set_symmetry_folding(true);
+    }
+
+    #[test]
+    fn folded_build_executes_bit_identically() {
+        // §Fold exactness for the synchronous group schedule: identical
+        // RunStats from folded and unfolded builds, on both the hardware-
+        // and software-collective paths.
+        let _guard = crate::dataflow::GLOBAL_SWITCH_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        for (arch, wl, group) in [
+            (table1(), Workload::new(1024, 128, 48, 1), 8usize),
+            (table1_sw_collectives(), Workload::new(512, 64, 20, 1).with_causal(true), 16),
         ] {
-            let stamped = flat_program(&arch, &wl, group, asyn);
-            set_template_stamping(false);
-            let naive = flat_program(&arch, &wl, group, asyn);
-            set_template_stamping(true);
-            assert_programs_equal(&stamped, &naive);
+            let tracked = tracked_tile(&arch, Dataflow::FlatColl, group);
+            set_symmetry_folding(true);
+            let folded = flat_program(&arch, &wl, group, false);
+            set_symmetry_folding(false);
+            let unfolded = flat_program(&arch, &wl, group, false);
+            set_symmetry_folding(true);
+            assert!(folded.fold.streams > 0, "folding should engage");
+            assert_eq!(
+                folded.num_ops() as u64 + folded.fold.ops,
+                unfolded.num_ops() as u64,
+                "op conservation"
+            );
+            assert_eq!(execute(&folded, tracked), execute(&unfolded, tracked));
         }
     }
 

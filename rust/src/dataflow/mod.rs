@@ -44,6 +44,48 @@ pub fn template_stamping() -> bool {
     TEMPLATE_STAMPING.load(Ordering::Relaxed)
 }
 
+/// Global switch for symmetry folding (§Perf).
+///
+/// A Flash grid on the Table-I mesh simulates ~1024 tile streams whose
+/// op subgraphs are congruent; likewise every FlatAttention group beyond
+/// the first repeats the same per-block collective schedule. With folding
+/// enabled, the builders emit every *shared-resource* op (HBM channel
+/// loads/stores, NoC bus collectives) verbatim — so cross-stream
+/// contention is simulated exactly — but collapse each non-representative
+/// stream's private compute chain (RedMulE/Spatz ops between
+/// shared-resource ops) into single delay ops of the same total duration.
+/// The collapse is exact, not approximate:
+///
+/// * In the synchronous schedules each private engine serves one serial
+///   chain, so an op there is never blocked on its resource (its
+///   dependencies always complete at or after the previous release) and a
+///   chain segment's completion is `ready + Σ occupancy` — which is
+///   precisely the delay op. Asynchronous variants (FA-3 / FlatAsyn)
+///   genuinely arbitrate two streams per engine, so they never fold.
+/// * Kept ops preserve their relative emission order, and the executors
+///   schedule same-cycle-ready ops in op-id order (see `sim::engine`), so
+///   FIFO tie-breaking on shared channels is identical in both builds.
+/// * The elided ops' linear accounting (op count, busy cycles) is carried
+///   in [`Program::fold`] and re-added by the executors; the breakdown
+///   tile (`tracked_tile`) lives in the representative stream, which is
+///   always built unfolded.
+///
+/// Folded and unfolded builds therefore produce bit-identical `RunStats`
+/// — pinned by `tests/fold_differential.rs`. Per-op traces cover the
+/// representative stream only; `flatattention trace` disables folding for
+/// full-fidelity timelines.
+static SYMMETRY_FOLDING: AtomicBool = AtomicBool::new(true);
+
+/// Enable/disable symmetry folding in the dataflow builders.
+pub fn set_symmetry_folding(enabled: bool) {
+    SYMMETRY_FOLDING.store(enabled, Ordering::Relaxed);
+}
+
+/// Current symmetry-folding setting.
+pub fn symmetry_folding() -> bool {
+    SYMMETRY_FOLDING.load(Ordering::Relaxed)
+}
+
 /// Pack up to two optional deps into `buf`, returning the count — the
 /// builders' allocation-free dep-list helper (§Perf: the seed cloned a
 /// `Vec` per emitted op for these).
@@ -194,6 +236,16 @@ fn build_program_into(
     df: Dataflow,
     group: usize,
 ) -> Program {
+    // Reject degenerate groups up front with a diagnosable error: a zero
+    // group used to reach `FlatTiling::resolve` (division by zero) and
+    // `tracked_tile` (integer underflow) instead.
+    assert!(
+        !df.is_flat() || group > 0,
+        "{df:?} requires a FlatAttention group edge >= 1 (got 0); pick a group that divides \
+         the {}x{} mesh",
+        arch.mesh_x,
+        arch.mesh_y
+    );
     let prog = match df {
         Dataflow::Flash2 => flash::flash_program_ext_in(prog, arch, wl, false, true),
         Dataflow::Flash3 => flash::flash_program_ext_in(prog, arch, wl, true, true),
@@ -243,23 +295,31 @@ pub fn run(arch: &ArchConfig, wl: &Workload, df: Dataflow, group: usize) -> RunS
 /// The representative tile whose timeline feeds the runtime breakdown:
 /// for FlatAttention, the south-west corner tile of group 0 (it loads Q
 /// *and* K/V and owns its row/column collectives); for FlashAttention,
-/// tile 0 (all tiles behave identically).
+/// tile 0 (all tiles behave identically). The stream containing this tile
+/// is always built unfolded (see [`set_symmetry_folding`]).
+///
+/// Degenerate `group` values clamp to a valid group edge: `group == 0`
+/// used to underflow `gy - 1` (a panic in debug builds, a garbage tile id
+/// in release builds).
 pub fn tracked_tile(arch: &ArchConfig, df: Dataflow, group: usize) -> u32 {
     if df.is_flat() {
-        let gy = group.min(arch.mesh_y);
+        let gy = group.clamp(1, arch.mesh_y);
         arch.tile_id(0, gy - 1)
     } else {
         0
     }
 }
 
-/// Serializes tests that toggle [`set_template_stamping`]: without this,
-/// a concurrent test could flip the global back to `true` mid-"naive"
-/// build, making the stamped-vs-naive identity oracle compare stamped vs
-/// stamped (trivially green). Lock around the whole toggle+build+restore
-/// sequence; recover from poisoning so one failed test doesn't cascade.
+/// Serializes tests that toggle the builder globals
+/// ([`set_template_stamping`], [`set_symmetry_folding`]) or that build
+/// pairs of programs expected to be structurally identical: without this,
+/// a concurrent test could flip a global mid-"naive" build, making the
+/// stamped-vs-naive (or folded-vs-unfolded) oracle compare two builds of
+/// the same mode (trivially green) or of accidentally different modes
+/// (spuriously red). Lock around the whole toggle+build+restore sequence;
+/// recover from poisoning so one failed test doesn't cascade.
 #[cfg(test)]
-pub(crate) static STAMPING_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+pub(crate) static GLOBAL_SWITCH_TEST_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 /// Assert two programs are identical op for op, dep for dep — the
 /// correctness oracle for template stamping (a stamped build must be
@@ -269,6 +329,7 @@ pub(crate) fn assert_programs_equal(a: &Program, b: &Program) {
     assert_eq!(a.num_ops(), b.num_ops(), "op count");
     assert_eq!(a.num_resources(), b.num_resources(), "resource count");
     assert_eq!(a.flops, b.flops, "flops");
+    assert_eq!(a.fold, b.fold, "fold accounting");
     for (i, (x, y)) in a.ops().iter().zip(b.ops().iter()).enumerate() {
         assert_eq!(x.resource, y.resource, "op {i}: resource");
         assert_eq!(x.occupancy, y.occupancy, "op {i}: occupancy");
@@ -310,7 +371,9 @@ mod tests {
     fn arena_build_matches_fresh_build() {
         // Recycled buffers must not leak state between experiments: an
         // arena-backed build equals a fresh build, for every dataflow in
-        // sequence through the same arena.
+        // sequence through the same arena. Holds the switch lock so a
+        // concurrent toggle cannot make the pair structurally different.
+        let _guard = GLOBAL_SWITCH_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         let arch = crate::arch::presets::table2(8);
         let wl = Workload::new(512, 64, 4, 1);
         let mut arena = ProgramArena::new();
@@ -322,5 +385,37 @@ mod tests {
             assert_eq!(execute(&fresh, tracked), execute(&pooled, tracked));
             arena.recycle(pooled);
         }
+    }
+
+    #[test]
+    fn tracked_tile_clamps_degenerate_groups() {
+        let arch = crate::arch::presets::table2(8);
+        // Regression: `group == 0` used to compute `0 - 1` on the group
+        // edge (debug panic / release garbage tile id). Now clamps.
+        assert_eq!(tracked_tile(&arch, Dataflow::FlatColl, 0), 0);
+        // Oversized groups clamp to the mesh edge.
+        assert_eq!(tracked_tile(&arch, Dataflow::FlatColl, 64), arch.tile_id(0, 7));
+        // FlashAttention ignores the group entirely.
+        assert_eq!(tracked_tile(&arch, Dataflow::Flash2, 0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "group edge >= 1")]
+    fn build_program_rejects_group_zero_for_flat() {
+        // Regression: this used to die deep inside `FlatTiling::resolve`
+        // with a bare division-by-zero panic.
+        let arch = crate::arch::presets::table2(8);
+        let wl = Workload::new(256, 64, 1, 1);
+        let _ = build_program(&arch, &wl, Dataflow::FlatColl, 0);
+    }
+
+    #[test]
+    fn flash_tolerates_group_zero() {
+        // The group parameter is documented as ignored for FlashAttention;
+        // a zero group must not panic anywhere on that path.
+        let arch = crate::arch::presets::table2(8);
+        let wl = Workload::new(256, 64, 2, 1);
+        let stats = run(&arch, &wl, Dataflow::Flash2, 0);
+        assert!(stats.makespan > 0);
     }
 }

@@ -28,7 +28,19 @@ pub struct HbmMap {
 }
 
 impl HbmMap {
+    /// Build the channel map.
+    ///
+    /// Panics with a diagnosable message when the architecture has no HBM
+    /// channels on either edge: `row_channel` and `col_channel` fall back
+    /// to each other when their own edge is empty, so a both-edges-empty
+    /// config would otherwise recurse until the stack overflows.
     pub fn new(arch: &ArchConfig) -> Self {
+        assert!(
+            arch.hbm.total_channels() > 0,
+            "ArchConfig '{}' has zero HBM channels on both edges; at least one west or south \
+             channel is required (see ArchConfig::validate)",
+            arch.name
+        );
         Self {
             topo: Topology::new(arch.mesh_x, arch.mesh_y),
             channels_west: arch.hbm.channels_west,
@@ -112,6 +124,33 @@ mod tests {
             counts[m.col_channel(x, 0).index] += 1;
         }
         assert!(counts.iter().all(|&c| c == 2), "{counts:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "zero HBM channels")]
+    fn zero_channels_on_both_edges_is_rejected() {
+        // Regression: `row_channel` ⇄ `col_channel` used to recurse to a
+        // stack overflow on this config; now construction fails loudly.
+        let mut arch = presets::table2(8);
+        arch.hbm.channels_west = 0;
+        arch.hbm.channels_south = 0;
+        let _ = HbmMap::new(&arch);
+    }
+
+    #[test]
+    fn single_edge_fallbacks_terminate() {
+        // One empty edge is a valid degenerate config: the empty edge's
+        // lookup falls back to the populated one exactly once.
+        let mut south_only = presets::table2(8);
+        south_only.hbm.channels_west = 0;
+        let m = HbmMap::new(&south_only);
+        assert_eq!(m.row_channel(3, 3).index, m.col_channel(3, 3).index);
+
+        let mut west_only = presets::table2(8);
+        west_only.hbm.channels_south = 0;
+        let m2 = HbmMap::new(&west_only);
+        assert_eq!(m2.col_channel(5, 2).index, m2.row_channel(5, 2).index);
+        assert!(m2.col_channel(5, 2).index < m2.total_channels());
     }
 
     #[test]

@@ -355,7 +355,13 @@ fn cmd_trace(args: &Args) -> i32 {
     let tiles = args.get_usize("tiles", 64).unwrap_or(64) as u32;
     let out = args.get_or("out", "trace.json").to_string();
 
+    // Build unfolded: symmetry folding collapses non-representative tiles'
+    // compute into delay ops, and this observability tool exists precisely
+    // to show every tile's real timeline.
+    let prev_folding = flatattention::dataflow::symmetry_folding();
+    flatattention::dataflow::set_symmetry_folding(false);
     let program = flatattention::dataflow::build_program(&arch, &workload, dataflow, group);
+    flatattention::dataflow::set_symmetry_folding(prev_folding);
     let tracked = flatattention::dataflow::tracked_tile(&arch, dataflow, group);
     let (stats, records) = flatattention::sim::execute_traced(&program, tracked, Some(tiles));
     let json = flatattention::sim::trace::to_chrome_trace(&program, &records);

@@ -7,14 +7,25 @@
 //! `latency` (pipelined resources like HBM channels and NoC paths keep
 //! serving while earlier transfers are still in flight).
 //!
+//! Ops that become ready at the *same cycle* are scheduled in op-id order:
+//! the loop drains every completion event of one timestamp before
+//! scheduling the ops those completions released (sorted by id), instead
+//! of scheduling mid-cascade. This makes equal-time tie-breaking a
+//! function of the program's emission order alone — not of the incidental
+//! event-cascade order — which is what lets a symmetry-folded program
+//! (fewer ops, same kept-op emission order; see `crate::dataflow`)
+//! reproduce the unfolded schedule bit for bit. [`crate::sim::reference`]
+//! applies the identical rule.
+//!
 //! §Perf: the dependents CSR and initial in-degrees come from the sealed
 //! [`Program`] (built once at construction; an unsealed program falls back
 //! to a local derivation), and the completion-event queue is an indexed
 //! radix-bucket queue ([`crate::sim::queue::EventQueue`]) tuned for the
-//! near-monotonic event streams these schedules produce. The seed
-//! `BinaryHeap` engine is preserved verbatim in [`crate::sim::reference`]
-//! and `tests/engine_differential.rs` proves schedule equivalence on
-//! randomized DAGs.
+//! near-monotonic event streams these schedules produce. The seed-derived
+//! `BinaryHeap` engine lives in [`crate::sim::reference`] and
+//! `tests/engine_differential.rs` proves schedule equivalence on
+//! randomized DAGs. Grid-wide counters additionally fold in
+//! [`Program::fold`] — the accounting of ops elided by symmetry folding.
 
 use super::breakdown::{Breakdown, Component, RunStats};
 use super::program::Program;
@@ -117,23 +128,49 @@ pub fn execute_traced(
         }};
     }
 
-    // Seed: all zero-indegree ops are ready at cycle 0.
+    // Collect the dependents released by completion of op `$idx`.
+    macro_rules! settle {
+        ($idx:expr, $ready:ident) => {{
+            let i = $idx as usize;
+            let (s, e) = (out_start[i] as usize, out_start[i + 1] as usize);
+            for &dep_idx in &out_edges[s..e] {
+                let di = dep_idx as usize;
+                indeg[di] -= 1;
+                if indeg[di] == 0 {
+                    $ready.push(dep_idx);
+                }
+            }
+        }};
+    }
+
+    // Seed: all zero-indegree ops are ready at cycle 0, in op-id order.
     for (i, &d) in indeg.iter().enumerate() {
         if d == 0 {
             schedule!(i as u32, 0);
         }
     }
 
+    // Main loop: drain every completion event of one timestamp, then
+    // schedule the released ops in op-id order. Zero-duration ops
+    // scheduled here complete at the same timestamp and are handled as a
+    // further batch on the next iteration.
     let mut completed = 0usize;
+    let mut ready_buf: Vec<u32> = Vec::new();
     while let Some((now, idx)) = events.pop() {
+        ready_buf.clear();
         completed += 1;
-        let (s, e) = (out_start[idx as usize] as usize, out_start[idx as usize + 1] as usize);
-        for &dep_idx in &out_edges[s..e] {
-            let di = dep_idx as usize;
-            indeg[di] -= 1;
-            if indeg[di] == 0 {
-                schedule!(dep_idx, now);
+        settle!(idx, ready_buf);
+        while let Some((t, _)) = events.peek() {
+            if t != now {
+                break;
             }
+            let (_, idx2) = events.pop().expect("peeked event exists");
+            completed += 1;
+            settle!(idx2, ready_buf);
+        }
+        ready_buf.sort_unstable();
+        for &op_idx in &ready_buf {
+            schedule!(op_idx, now);
         }
     }
 
@@ -144,6 +181,7 @@ pub fn execute_traced(
         n
     );
 
+    let fold = program.fold;
     let breakdown = Breakdown::from_intervals(&intervals, makespan);
     (
         RunStats {
@@ -151,9 +189,9 @@ pub fn execute_traced(
             breakdown,
             hbm_bytes,
             flops: program.flops,
-            redmule_busy_total: redmule_busy,
-            spatz_busy_total: spatz_busy,
-            ops_executed: executed,
+            redmule_busy_total: redmule_busy + fold.redmule_busy,
+            spatz_busy_total: spatz_busy + fold.spatz_busy,
+            ops_executed: executed + fold.ops as usize,
         },
         trace,
     )
@@ -272,6 +310,21 @@ mod tests {
         let st = execute(&p, 0);
         assert_eq!(st.flops, 12345);
         assert_eq!(st.ops_executed, 1);
+    }
+
+    #[test]
+    fn fold_accounting_joins_linear_counters() {
+        use crate::sim::program::FoldStats;
+        let mut p = Program::new();
+        let r = p.resource();
+        p.op(r, 10, 0, Component::RedMule, 0, 0, &[]);
+        p.fold = FoldStats { ops: 5, redmule_busy: 100, spatz_busy: 50, streams: 2 };
+        let st = execute(&p, 0);
+        assert_eq!(st.ops_executed, 6);
+        assert_eq!(st.redmule_busy_total, 110);
+        assert_eq!(st.spatz_busy_total, 50);
+        // The reference engine applies the identical accounting.
+        assert_eq!(crate::sim::execute_reference(&p, 0), st);
     }
 
     #[test]

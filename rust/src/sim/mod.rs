@@ -39,15 +39,27 @@
 //!   near-monotonic completion times these schedules produce. The seed
 //!   heap engine survives in [`reference`] and a differential test proves
 //!   schedule equivalence.
+//! * **Symmetry folding** — the Flash grid simulates ~1024 congruent tile
+//!   streams (and every Flat group beyond the first repeats the same
+//!   block schedule). With `dataflow::set_symmetry_folding` enabled (the
+//!   default), builders emit all shared-resource ops (HBM channels, NoC
+//!   buses) verbatim but collapse non-representative streams' private
+//!   compute chains into single delay ops; the elided accounting travels
+//!   in [`Program::fold`] and is re-added by the executors. The collapse
+//!   is exact — folded and unfolded builds produce bit-identical
+//!   `RunStats` (`tests/fold_differential.rs`) — because synchronous
+//!   private chains are never resource-blocked and both engines schedule
+//!   same-cycle-ready ops in op-id order.
 //! * **[`arena`]** — [`ProgramArena`] recycles `ops`/`deps_pool`/CSR
 //!   allocations across the experiments of a sweep (one arena per worker
 //!   thread, used by `dataflow::run`).
 //! * One level up, `crate::coordinator` memoizes experiment results by
-//!   content key so identical points shared between figures simulate once.
+//!   content key (including the folding switch) so identical points
+//!   shared between figures simulate once.
 //!
-//! Next levers (see ROADMAP): symmetry folding of identical tiles (the
-//! Flash grid simulates ~1024 congruent tiles whose schedules differ only
-//! by channel phase) and parallel per-head execution inside one program.
+//! Next levers (see ROADMAP): parallel per-head execution inside one
+//! program, and reusing the sealed CSR across `double_buffer` ablation
+//! variants.
 
 pub mod arena;
 pub mod breakdown;
@@ -61,8 +73,8 @@ pub use arena::ProgramArena;
 pub use breakdown::{Breakdown, Component, RunStats};
 pub use engine::{execute, execute_traced};
 pub use queue::EventQueue;
+pub use program::{FoldStats, Op, OpId, Program, ResourceId};
 pub use reference::{execute_reference, execute_reference_traced};
-pub use program::{Op, OpId, Program, ResourceId};
 
 /// Simulation time in clock cycles (1 GHz in all paper configurations).
 pub type Cycle = u64;

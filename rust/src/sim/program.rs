@@ -19,6 +19,46 @@ pub struct ResourceId(pub u32);
 /// Sentinel tile id for ops not owned by any tile (e.g. pure barriers).
 pub const NO_TILE: u32 = u32::MAX;
 
+/// Accounting for work elided by symmetry folding (see `crate::dataflow`
+/// on the fold design). Builders that collapse a congruent stream's
+/// private compute chain into single delay ops record here the op count
+/// and engine busy cycles of the elided ops; the executors add these
+/// totals to their linear counters, so a folded program reports the same
+/// grid-wide `RunStats` as its unfolded equivalent.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FoldStats {
+    /// Elided ops, net of the synthetic delay ops emitted in their place.
+    pub ops: u64,
+    /// RedMulE busy cycles carried by elided ops (synthetic delay ops are
+    /// `Component::Other` and contribute nothing to the engine counters).
+    pub redmule_busy: u64,
+    /// Spatz busy cycles carried by elided ops.
+    pub spatz_busy: u64,
+    /// Number of folded (collapsed) tile/group streams.
+    pub streams: u64,
+}
+
+impl FoldStats {
+    /// Field-wise difference `self - before` — used by the builders to
+    /// capture a block template's fold delta for later stamping.
+    pub(crate) fn delta_since(&self, before: &FoldStats) -> FoldStats {
+        FoldStats {
+            ops: self.ops - before.ops,
+            redmule_busy: self.redmule_busy - before.redmule_busy,
+            spatz_busy: self.spatz_busy - before.spatz_busy,
+            streams: self.streams - before.streams,
+        }
+    }
+
+    /// Field-wise accumulate (applied once per stamped template instance).
+    pub(crate) fn accumulate(&mut self, d: &FoldStats) {
+        self.ops += d.ops;
+        self.redmule_busy += d.redmule_busy;
+        self.spatz_busy += d.spatz_busy;
+        self.streams += d.streams;
+    }
+}
+
 /// One schedulable unit of work.
 #[derive(Debug, Clone)]
 pub struct Op {
@@ -64,6 +104,8 @@ pub struct Program {
     /// Total useful FLOPs represented by the program (set by the builder;
     /// used for utilization metrics, not timing).
     pub flops: u64,
+    /// Accounting for ops elided by symmetry folding (zero when unfolded).
+    pub fold: FoldStats,
     /// Dependents CSR row offsets (`len == ops.len() + 1` when sealed).
     pub(crate) out_start: Vec<u32>,
     /// Dependents CSR edge targets (op indices).
@@ -92,6 +134,7 @@ impl Program {
             deps_pool,
             n_resources: 0,
             flops: 0,
+            fold: FoldStats::default(),
             out_start,
             out_edges,
             indeg0,

@@ -69,12 +69,53 @@ impl EventQueue {
     }
 
     /// Insert an event. `key` must be `≥` the last popped key.
+    ///
+    /// The monotonicity precondition is load-bearing: a smaller key would
+    /// land in bucket 0's already-popped region and be silently dropped or
+    /// misordered. That failure mode is far worse than a crash (a release
+    /// build would quietly compute a wrong schedule), so the check is a
+    /// real assert — one predictable branch per push — not a
+    /// `debug_assert!`.
     #[inline]
     pub fn push(&mut self, key: u64, payload: u32) {
-        debug_assert!(key >= self.ubound[0], "monotonicity violated");
+        assert!(
+            key >= self.ubound[0],
+            "EventQueue: non-monotone push (key {key} < current time {})",
+            self.ubound[0]
+        );
         let b = self.bucket_for(key);
         self.buckets[b].push((key, payload));
         self.len += 1;
+    }
+
+    /// Minimum event without removing it (among ties, the entry `pop`
+    /// would surface next). Used by the engine to drain all events of one
+    /// timestamp before scheduling the ops they release.
+    ///
+    /// Deliberately performs *no* re-carving: advancing the bucket ranges
+    /// to the next pending key would raise the monotonicity floor past the
+    /// current timestamp, making perfectly legal pushes (completions of
+    /// ops scheduled *now*) look non-monotone. Bucket ranges are disjoint
+    /// and increasing, so the first nonempty bucket holds the global
+    /// minimum; redistribution preserves push order, so the first minimal
+    /// entry here is exactly the one `pop` returns next.
+    pub fn peek(&self) -> Option<(u64, u32)> {
+        if self.cursor0 < self.buckets[0].len() {
+            return Some(self.buckets[0][self.cursor0]);
+        }
+        if self.len == 0 {
+            return None;
+        }
+        let b = (1..LEVELS)
+            .find(|&i| !self.buckets[i].is_empty())
+            .expect("len > 0 implies a nonempty bucket");
+        let mut best = self.buckets[b][0];
+        for &(k, v) in &self.buckets[b][1..] {
+            if k < best.0 {
+                best = (k, v);
+            }
+        }
+        Some(best)
     }
 
     /// Remove and return the minimum event; ties pop in push order.
@@ -194,6 +235,53 @@ mod tests {
             }
             assert!(heap.is_empty());
         }
+    }
+
+    #[test]
+    fn peek_is_nondestructive_and_matches_pop() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek(), None);
+        q.push(7, 1);
+        q.push(3, 2);
+        assert_eq!(q.peek(), Some((3, 2)));
+        assert_eq!(q.peek(), Some((3, 2)));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some((3, 2)));
+        assert_eq!(q.peek(), Some((7, 1)));
+        assert_eq!(q.pop(), Some((7, 1)));
+        assert_eq!(q.peek(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn peek_does_not_advance_the_monotonicity_floor() {
+        // Regression for the engine's batch-drain pattern: peeking a
+        // far-future event must not raise the floor past the current
+        // time, or completions of ops scheduled *now* would be rejected.
+        let mut q = EventQueue::new();
+        q.push(10, 0);
+        q.push(100, 1);
+        assert_eq!(q.pop(), Some((10, 0)));
+        assert_eq!(q.peek(), Some((100, 1)));
+        // Still legal: 15 ≥ the last popped key (10), despite 15 < 100.
+        q.push(15, 2);
+        assert_eq!(q.pop(), Some((15, 2)));
+        assert_eq!(q.pop(), Some((100, 1)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-monotone")]
+    fn non_monotone_push_is_loud_in_release_builds() {
+        // Regression for the release-only crash class: before this check
+        // was a real assert, a `--release` build filed the key into bucket
+        // 0's already-popped region and silently dropped or misordered it
+        // (`debug_assert!` compiles out). Covered in release by the CI
+        // `cargo test --release` job.
+        let mut q = EventQueue::new();
+        q.push(10, 0);
+        assert_eq!(q.pop(), Some((10, 0)));
+        q.push(5, 1); // 5 < current time 10: must panic, not mis-schedule
     }
 
     #[test]

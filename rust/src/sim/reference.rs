@@ -1,4 +1,4 @@
-//! The seed discrete-event executor, preserved verbatim.
+//! The seed discrete-event executor, preserved as the reference engine.
 //!
 //! This is the pre-§Perf engine: it re-derives the dependents CSR on every
 //! call and drives completions through a `BinaryHeap` keyed by
@@ -7,6 +7,11 @@
 //! differential test (`tests/engine_differential.rs`) asserts both produce
 //! identical `RunStats` and identical traces on randomized DAGs, and the
 //! `sim_hotpath` bench uses it as the recorded baseline.
+//!
+//! One deliberate deviation from the seed (shared with the optimized
+//! engine, so the two stay schedule-equivalent): ops becoming ready at the
+//! same cycle are scheduled in op-id order via per-timestamp batching —
+//! see the `engine` module docs for why symmetry folding requires this.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -110,23 +115,44 @@ pub fn execute_reference_traced(
         }};
     }
 
+    macro_rules! settle {
+        ($idx:expr, $ready:ident) => {{
+            let i = $idx as usize;
+            let (s, e) = (out_start[i] as usize, out_start[i + 1] as usize);
+            for &dep_idx in &out_edges[s..e] {
+                let di = dep_idx as usize;
+                indeg[di] -= 1;
+                if indeg[di] == 0 {
+                    $ready.push(dep_idx);
+                }
+            }
+        }};
+    }
+
     for (i, &d) in indeg.iter().enumerate() {
         if d == 0 {
             schedule!(i as u32, 0);
         }
     }
 
+    // Same-timestamp batch scheduling, identical to the optimized engine.
     let mut completed = 0usize;
+    let mut ready_buf: Vec<u32> = Vec::new();
     while let Some(Reverse((now, key))) = events.pop() {
-        let idx = (key & 0xFFFF_FFFF) as u32;
+        ready_buf.clear();
         completed += 1;
-        let (s, e) = (out_start[idx as usize] as usize, out_start[idx as usize + 1] as usize);
-        for &dep_idx in &out_edges[s..e] {
-            let di = dep_idx as usize;
-            indeg[di] -= 1;
-            if indeg[di] == 0 {
-                schedule!(dep_idx, now);
+        settle!((key & 0xFFFF_FFFF) as u32, ready_buf);
+        while let Some(&Reverse((t, key2))) = events.peek() {
+            if t != now {
+                break;
             }
+            let _ = events.pop();
+            completed += 1;
+            settle!((key2 & 0xFFFF_FFFF) as u32, ready_buf);
+        }
+        ready_buf.sort_unstable();
+        for &op_idx in &ready_buf {
+            schedule!(op_idx, now);
         }
     }
 
@@ -137,6 +163,7 @@ pub fn execute_reference_traced(
         n
     );
 
+    let fold = program.fold;
     let breakdown = Breakdown::from_intervals(&intervals, makespan);
     (
         RunStats {
@@ -144,9 +171,9 @@ pub fn execute_reference_traced(
             breakdown,
             hbm_bytes,
             flops: program.flops,
-            redmule_busy_total: redmule_busy,
-            spatz_busy_total: spatz_busy,
-            ops_executed: executed,
+            redmule_busy_total: redmule_busy + fold.redmule_busy,
+            spatz_busy_total: spatz_busy + fold.spatz_busy,
+            ops_executed: executed + fold.ops as usize,
         },
         trace,
     )

@@ -1,0 +1,204 @@
+//! Differential test: symmetry-folded vs unfolded program execution.
+//!
+//! Folding (see `dataflow::set_symmetry_folding`) is a pure mechanical
+//! optimization, like template stamping: a folded build keeps every
+//! shared-resource op verbatim and collapses only private compute chains,
+//! so executing it must reproduce the unfolded build's `RunStats` —
+//! makespan, Fig. 3/4 breakdown, HBM traffic, busy totals and executed-op
+//! count — *bit for bit*, and the representative stream's trace records
+//! as well. The randomized sweep covers every dataflow, causal and
+//! non-causal workloads, partial trailing blocks, and a degenerate
+//! single-edge HBM configuration.
+//!
+//! Tests here toggle the process-global folding/stamping switches, so
+//! they serialize on a local lock (each integration-test binary is its
+//! own process; the lib unit tests have their own lock for the same
+//! purpose).
+
+use std::sync::Mutex;
+
+use flatattention::arch::{presets, ArchConfig};
+use flatattention::dataflow::{
+    build_program, set_symmetry_folding, set_template_stamping, tracked_tile, Dataflow, Workload,
+    ALL_DATAFLOWS,
+};
+use flatattention::sim::{execute, execute_traced, RunStats};
+use flatattention::util::quickcheck::{check, forall_cases};
+
+static FOLD_LOCK: Mutex<()> = Mutex::new(());
+
+/// Build and execute the same spec folded and unfolded.
+fn run_both(arch: &ArchConfig, wl: &Workload, df: Dataflow, group: usize) -> (RunStats, RunStats) {
+    let tracked = tracked_tile(arch, df, group);
+    set_symmetry_folding(true);
+    let folded_prog = build_program(arch, wl, df, group);
+    set_symmetry_folding(false);
+    let unfolded_prog = build_program(arch, wl, df, group);
+    set_symmetry_folding(true);
+    (execute(&folded_prog, tracked), execute(&unfolded_prog, tracked))
+}
+
+/// West-edge-only HBM: `col_channel` falls back to the row channels — the
+/// degenerate-channel configuration of the zero-channel bugfix family.
+fn degenerate_channel_arch() -> ArchConfig {
+    let mut a = presets::table2(8);
+    a.name = "table2-8x8-westonly".into();
+    a.hbm.channels_west = 4;
+    a.hbm.channels_south = 0;
+    a
+}
+
+#[test]
+fn folded_matches_unfolded_randomized_sweep() {
+    let _guard = FOLD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arches = [
+        presets::table2(8),
+        presets::with_hbm_channels(presets::table2(8), 2),
+        degenerate_channel_arch(),
+    ];
+    forall_cases(36, 0xF01D, |rng| {
+        let arch = &arches[rng.gen_range(arches.len() as u64) as usize];
+        let df = *rng.choose(&ALL_DATAFLOWS);
+        let group = *rng.choose(&[2usize, 4, 8]);
+        // 256..=896 in 128 steps: deliberately not block-aligned, so the
+        // trailing partial row block (heterogeneous chain costs) is part
+        // of the sweep.
+        let seq = 256 + 128 * rng.gen_range(6);
+        let d = *rng.choose(&[64u64, 128]);
+        let heads = 1 + rng.gen_range(6);
+        let batch = 1 + rng.gen_range(2);
+        let causal = rng.gen_range(2) == 0;
+        let wl = Workload::new(seq, d, heads, batch).with_causal(causal);
+        let (folded, unfolded) = run_both(arch, &wl, df, group);
+        check(
+            folded == unfolded,
+            format!(
+                "{} {df:?} g{group} S{seq} D{d} H{heads} B{batch} causal={causal}:\n\
+                 folded   {folded:?}\nunfolded {unfolded:?}",
+                arch.name
+            ),
+        )
+    });
+}
+
+#[test]
+fn folded_matches_unfolded_on_table1_preset() {
+    // Spot-check the paper's Table-I mesh itself (1024 tiles, 16×2 HBM
+    // channels) — the configuration the fold speedup claim is about.
+    let _guard = FOLD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arch = presets::table1();
+    for (df, group, wl) in [
+        (Dataflow::Flash2, 1, Workload::new(1024, 128, 8, 1)),
+        (Dataflow::FlatColl, 8, Workload::new(1024, 128, 32, 1)),
+        (Dataflow::Flat, 16, Workload::new(512, 64, 8, 1).with_causal(true)),
+    ] {
+        let (folded, unfolded) = run_both(&arch, &wl, df, group);
+        assert_eq!(folded, unfolded, "{df:?} g{group}");
+    }
+}
+
+#[test]
+fn fold_class_count_and_op_conservation_on_table1() {
+    // Fold coverage on the Table-I preset: with every tile (resp. group)
+    // stream busy, all streams but the representative fold, and the
+    // elided-op accounting exactly conserves the executed-op count.
+    let _guard = FOLD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arch = presets::table1();
+
+    // 2·96·⌈4096/192⌉ = 4224 blocks over 1024 tiles: every stream busy.
+    let wl = Workload::new(4096, 128, 96, 2);
+    set_symmetry_folding(true);
+    let folded = build_program(&arch, &wl, Dataflow::Flash2, 1);
+    set_symmetry_folding(false);
+    let unfolded = build_program(&arch, &wl, Dataflow::Flash2, 1);
+    set_symmetry_folding(true);
+    assert_eq!(folded.fold.streams, 1023, "all tile streams but tile 0 fold");
+    assert_eq!(unfolded.fold.streams, 0);
+    assert_eq!(
+        folded.num_ops() as u64 + folded.fold.ops,
+        unfolded.num_ops() as u64,
+        "elided-op accounting must conserve the total op count"
+    );
+    assert!(
+        folded.num_ops() * 2 < unfolded.num_ops(),
+        "folding should at least halve the executed DES ops ({} vs {})",
+        folded.num_ops(),
+        unfolded.num_ops()
+    );
+
+    // FlatColl at G=8: 16 groups, 32 blocks — every group busy.
+    let wl8 = Workload::new(1024, 128, 32, 1);
+    set_symmetry_folding(true);
+    let folded8 = build_program(&arch, &wl8, Dataflow::FlatColl, 8);
+    set_symmetry_folding(false);
+    let unfolded8 = build_program(&arch, &wl8, Dataflow::FlatColl, 8);
+    set_symmetry_folding(true);
+    assert_eq!(folded8.fold.streams, 15, "all groups but group 0 fold");
+    assert_eq!(
+        folded8.num_ops() as u64 + folded8.fold.ops,
+        unfolded8.num_ops() as u64
+    );
+    assert!(folded8.num_ops() * 2 < unfolded8.num_ops());
+}
+
+#[test]
+fn async_dataflows_fall_back_to_unfolded() {
+    // FA-3 / FlatAsyn interleave two streams per engine (real
+    // arbitration), so the builders must not fold them even when the
+    // switch is on.
+    let _guard = FOLD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arch = presets::table2(8);
+    let wl = Workload::new(512, 64, 8, 1);
+    set_symmetry_folding(true);
+    for (df, group) in [(Dataflow::Flash3, 1), (Dataflow::FlatAsyn, 4)] {
+        let p = build_program(&arch, &wl, df, group);
+        assert_eq!(p.fold.streams, 0, "{df:?} must not fold");
+        assert_eq!(p.fold.ops, 0);
+    }
+}
+
+#[test]
+fn folded_traces_match_for_representative_tiles() {
+    // The representative stream is built unfolded and first, so its op
+    // indices, start and completion times — hence its trace records —
+    // are identical between the folded and unfolded programs.
+    let _guard = FOLD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arch = presets::table2(8);
+    let wl = Workload::new(512, 64, 6, 1);
+    for (df, group, limit) in [(Dataflow::Flash2, 1usize, 1u32), (Dataflow::FlatColl, 4, 4)] {
+        let tracked = tracked_tile(&arch, df, group);
+        set_symmetry_folding(true);
+        let fp = build_program(&arch, &wl, df, group);
+        let (fs, ft) = execute_traced(&fp, tracked, Some(limit));
+        set_symmetry_folding(false);
+        let up = build_program(&arch, &wl, df, group);
+        set_symmetry_folding(true);
+        let (us, ut) = execute_traced(&up, tracked, Some(limit));
+        assert_eq!(fs, us, "{df:?} stats");
+        assert_eq!(ft, ut, "{df:?} trace records");
+    }
+}
+
+#[test]
+fn folding_and_stamping_compose_exactly() {
+    // All four (stamping × folding) builder modes must execute to the
+    // same RunStats.
+    let _guard = FOLD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arch = presets::table2(8);
+    let wl = Workload::new(768, 64, 5, 1).with_causal(true);
+    let df = Dataflow::FlatColl;
+    let tracked = tracked_tile(&arch, df, 4);
+    let mut results: Vec<RunStats> = Vec::new();
+    for (stamp, fold) in [(true, true), (true, false), (false, true), (false, false)] {
+        set_template_stamping(stamp);
+        set_symmetry_folding(fold);
+        let p = build_program(&arch, &wl, df, 4);
+        results.push(execute(&p, tracked));
+    }
+    set_template_stamping(true);
+    set_symmetry_folding(true);
+    assert!(
+        results.windows(2).all(|w| w[0] == w[1]),
+        "modes diverge: {results:#?}"
+    );
+}
