@@ -1,0 +1,84 @@
+//! Bench: serving-shape sweep throughput — GQA/MQA head-sharing, decode
+//! (S=1 query against a KV cache) and batched small-S prefill across all
+//! dataflows on the Table-I mesh. Measures end-to-end sweep latency
+//! (build + execute per point, through the same `dataflow::run` path the
+//! coordinator uses), per-phase point rates, and records the modeled
+//! serving headlines (decode MQA K/V-traffic reduction, decode vs prefill
+//! makespan ratio) so the perf trajectory of the serving path is tracked
+//! across PRs in `BENCH_serving_sweep.json` at the repo root.
+//!
+//!     cargo bench --bench serving_sweep
+
+#[path = "harness.rs"]
+mod harness;
+
+use flatattention::arch::presets;
+use flatattention::dataflow::{run, Dataflow, Workload, ALL_DATAFLOWS};
+
+const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving_sweep.json");
+
+/// FlatAttention group edge for the serving points (see report::serving).
+const GROUP: usize = 8;
+
+fn main() {
+    let arch = presets::table1();
+    let mut rec = harness::Recorder::new();
+
+    // The report::serving grid, bench-sized: one batch per phase so a
+    // full iteration stays in seconds.
+    let prefill: Vec<Workload> = [32u64, 8, 1]
+        .iter()
+        .flat_map(|&kv| {
+            [512u64, 4096]
+                .iter()
+                .map(move |&s| Workload::new(s, 128, 32, 4).with_kv_heads(kv))
+        })
+        .collect();
+    let decode: Vec<Workload> = prefill.iter().map(|wl| wl.decode()).collect();
+
+    harness::section("serving sweep (all dataflows, Table I arch, G=8x8)");
+    for (phase, wls) in [("prefill", &prefill), ("decode", &decode)] {
+        let points = wls.len() * ALL_DATAFLOWS.len();
+        let mean = rec.bench(&format!("sweep/{phase} ({points} points)"), 3, || {
+            let mut acc = 0u64;
+            for wl in wls {
+                for df in ALL_DATAFLOWS {
+                    let g = if df.is_flat() { GROUP } else { 1 };
+                    acc ^= run(&arch, wl, df, g).makespan;
+                }
+            }
+            acc
+        });
+        rec.metric(&format!("{phase}_points_per_s"), points as f64 / mean);
+    }
+
+    harness::section("serving headlines (modeled)");
+    let s = 4096u64;
+    let dec_mha = run(&arch, &Workload::new(s, 128, 32, 4).decode(), Dataflow::Flash2, 1);
+    let dec_mqa = run(
+        &arch,
+        &Workload::new(s, 128, 32, 4).with_kv_heads(1).decode(),
+        Dataflow::Flash2,
+        1,
+    );
+    let kv_reduction = dec_mha.hbm_bytes as f64 / dec_mqa.hbm_bytes as f64;
+    println!("  decode S={s} FA-2: MQA traffic reduction {kv_reduction:.2}x (32 KV heads -> 1)");
+    rec.metric("decode_mqa_traffic_reduction", kv_reduction);
+    // Decode is bandwidth-bound: a single token should cost a tiny
+    // fraction of the full-prefill makespan.
+    let pre_mha = run(&arch, &Workload::new(s, 128, 32, 4), Dataflow::Flash2, 1);
+    let ratio = dec_mha.makespan as f64 / pre_mha.makespan as f64;
+    println!("  decode/prefill makespan ratio at S={s}: {ratio:.4}");
+    rec.metric("decode_over_prefill_makespan", ratio);
+
+    // Targets: MQA must cut decode traffic by an order of magnitude (the
+    // exact model value is ~32x less a small Q/O constant), and a decode
+    // step must be far cheaper than a prefill.
+    assert!(
+        kv_reduction > 10.0,
+        "decode MQA traffic reduction {kv_reduction:.2}x below the 10x target"
+    );
+    assert!(ratio < 0.1, "decode/prefill makespan ratio {ratio:.3} above the 0.1 target");
+
+    rec.write_json(OUT_PATH, "serving_sweep");
+}

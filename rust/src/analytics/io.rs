@@ -5,6 +5,10 @@
 //!
 //! FlatAttention grouping `N = G²` tiles (block `√N·M` per group):
 //! `IO = 2·H·B·D·S·(1 + S/(√N·M))` elements.
+//!
+//! Both formulas model the paper's dense-MHA *prefill*; for GQA/decode
+//! traffic the builders' modeled bytes are pinned directly by tests
+//! (`Workload::compulsory_bytes` carries the serving K/V scaling).
 
 use crate::dataflow::Workload;
 

@@ -84,6 +84,8 @@ impl ExperimentResult {
             ("seq", Json::num(self.workload.seq as f64)),
             ("head_dim", Json::num(self.workload.head_dim as f64)),
             ("heads", Json::num(self.workload.heads as f64)),
+            ("kv_heads", Json::num(self.workload.kv_heads as f64)),
+            ("phase", Json::str(self.workload.phase.label())),
             ("batch", Json::num(self.workload.batch as f64)),
             ("group", Json::num(self.group as f64)),
             ("makespan_cycles", Json::num(self.makespan as f64)),

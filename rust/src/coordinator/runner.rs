@@ -34,7 +34,7 @@ pub struct SpecKey {
     dataflow: Dataflow,
     group: usize,
     folding: bool,
-    nums: [u64; 24],
+    nums: [u64; 26],
 }
 
 /// Fingerprint a spec for memoization.
@@ -61,7 +61,7 @@ pub fn spec_key(spec: &ExperimentSpec) -> SpecKey {
     } = tile;
     let NocConfig { link_bytes_per_cycle, router_latency, inject_latency, hw_collectives } = noc;
     let HbmConfig { channels_west, channels_south, channel_bytes_per_cycle, access_latency } = hbm;
-    let Workload { seq, head_dim, heads, batch, causal } = workload;
+    let Workload { seq, head_dim, heads, kv_heads, batch, causal, phase } = workload;
     SpecKey {
         arch_name: name.clone(),
         dataflow: *dataflow,
@@ -92,6 +92,8 @@ pub fn spec_key(spec: &ExperimentSpec) -> SpecKey {
             *head_dim,
             *heads,
             (*batch << 1) | *causal as u64,
+            *kv_heads,
+            matches!(phase, crate::dataflow::Phase::Decode) as u64,
         ],
     }
 }
@@ -282,6 +284,20 @@ mod tests {
         let mut causal = base.clone();
         causal.workload.causal = true;
         assert_ne!(spec_key(&base), spec_key(&causal));
+
+        // Serving fields must partition the key space too — a GQA or
+        // decode run must never be served an MHA prefill result.
+        let gqa = ExperimentSpec {
+            workload: base.workload.with_kv_heads(2),
+            ..base.clone()
+        };
+        assert_ne!(spec_key(&base), spec_key(&gqa));
+        let dec = ExperimentSpec {
+            workload: base.workload.decode(),
+            ..base.clone()
+        };
+        assert_ne!(spec_key(&base), spec_key(&dec));
+        assert_ne!(spec_key(&gqa), spec_key(&dec));
     }
 
     #[test]

@@ -1,9 +1,14 @@
 //! FlashAttention dataflows on the tile-based architecture (Algorithm 1).
 //!
-//! The MHA workload is partitioned over batch × heads × output-sequence
-//! blocks; blocks are distributed round-robin over tiles, which process
-//! them independently (no inter-tile communication, no cross-tile reuse —
-//! the defining property the paper contrasts FlatAttention against).
+//! The MHA workload is partitioned over batch × KV-heads × share-chunks ×
+//! output-sequence blocks; blocks are distributed round-robin over tiles,
+//! which process them independently (no inter-tile communication, no
+//! cross-tile reuse — the defining property the paper contrasts
+//! FlatAttention against). For GQA/MQA (`kv_heads < heads`) a block stacks
+//! the query rows of a whole KV group (`share` heads), so each K/V block
+//! is loaded from HBM once per group instead of once per query head;
+//! decode blocks hold a single query row against the full cache (see
+//! `crate::dataflow` § Workload model).
 //!
 //! * **FA-2** (synchronous): one block in flight per tile, Kᵀ/V
 //!   double-buffered so the next load overlaps the current compute.
@@ -44,7 +49,7 @@ use crate::sim::program::NO_TILE;
 use crate::sim::{Component, FoldStats, OpId, Program, ResourceId};
 
 use super::opt_deps;
-use super::tiling::flash_block_size;
+use super::tiling::{causal_mask_from, FlashTiling};
 use super::Workload;
 
 /// Scalar-core scheduling overhead per inner iteration for the
@@ -85,10 +90,16 @@ fn shape_costs(arch: &ArchConfig, m_r: u64, m_c: u64, d: u64) -> ShapeCosts {
     }
 }
 
-/// A registered block template within one tile stream.
+/// A registered block template within one tile stream. Two blocks emit
+/// identical subgraphs iff their stacked row count, effective K/V block
+/// count and causal mask position agree — with square MHA blocks
+/// `mask_from == t_c_eff - 1` always, so the key space matches the
+/// historical `(m_r, t_c_eff)` one; the extra field only splits classes
+/// for the rectangular serving geometries where it must.
 struct BlockTemplate {
     m_r: u64,
     t_c_eff: u64,
+    mask_from: u64,
     base: u32,
     len: u32,
     /// Offsets (relative to `base`) of the K/V load ops, whose channel
@@ -143,20 +154,24 @@ pub(crate) fn flash_program_ext_in(
         })
         .collect();
 
-    let m = flash_block_size(&arch.tile, wl.head_dim, asynchronous);
-    let t_r = wl.seq.div_ceil(m);
-    let t_c = wl.seq.div_ceil(m);
-    let d = wl.head_dim;
+    let tiling = FlashTiling::resolve(&arch.tile, wl, asynchronous);
     let eb = Workload::BYTES_PER_ELEM;
 
-    // Enumerate blocks (b, h, i) and deal them round-robin over tiles.
-    let mut tile_blocks: Vec<Vec<(u64, u64, u64)>> = vec![Vec::new(); n_tiles];
+    // Enumerate blocks (batch, kv_head, share-chunk, row-block) and deal
+    // them round-robin over tiles. Each block stacks `share_c` query
+    // heads' rows against one K/V residency; dense MHA degenerates to the
+    // historical (b, h, i) enumeration (share_c == 1, one chunk per head).
+    let q_per_kv = wl.q_per_kv();
+    let mut tile_blocks: Vec<Vec<(u64, u64)>> = vec![Vec::new(); n_tiles];
     let mut idx = 0usize;
-    for b in 0..wl.batch {
-        for h in 0..wl.heads {
-            for i in 0..t_r {
-                tile_blocks[idx % n_tiles].push((b, h, i));
-                idx += 1;
+    for _b in 0..wl.batch {
+        for _kvh in 0..wl.kv_heads {
+            for c in 0..tiling.chunks {
+                let share_c = tiling.share.min(q_per_kv - c * tiling.share);
+                for i in 0..tiling.t_r {
+                    tile_blocks[idx % n_tiles].push((share_c, i));
+                    idx += 1;
+                }
             }
         }
     }
@@ -185,13 +200,13 @@ pub(crate) fn flash_program_ext_in(
                 let list: Vec<_> = stream.into_iter().map(|(_, b)| *b).collect();
                 build_stream(
                     &mut prog, arch, wl, row_ch, &hops_by_chan, &tiles[tid], tid as u32, &list,
-                    m, t_c, d, eb, true, double_buffer, false,
+                    &tiling, eb, true, double_buffer, false,
                 );
             }
         } else {
             build_stream(
-                &mut prog, arch, wl, row_ch, &hops_by_chan, &tiles[tid], tid as u32, blocks, m,
-                t_c, d, eb, false, double_buffer, folding && tid != 0,
+                &mut prog, arch, wl, row_ch, &hops_by_chan, &tiles[tid], tid as u32, blocks,
+                &tiling, eb, false, double_buffer, folding && tid != 0,
             );
         }
     }
@@ -214,10 +229,8 @@ fn build_stream(
     hops_by_chan: &[u64],
     ctx: &TileCtx,
     tid: u32,
-    blocks: &[(u64, u64, u64)],
-    m: u64,
-    t_c: u64,
-    d: u64,
+    blocks: &[(u64, u64)],
+    tiling: &FlashTiling,
     eb: u64,
     asynchronous: bool,
     double_buffer: bool,
@@ -227,6 +240,11 @@ fn build_stream(
     let chan_base = |c: usize| ResourceId(c as u32);
     let n_chan = hops_by_chan.len();
     let stamping = super::template_stamping();
+    let d = wl.head_dim;
+    let (q_len, kv_len) = (wl.q_len(), wl.kv_len());
+    let (b_r, b_c, t_c) = (tiling.b_r, tiling.b_c, tiling.t_c);
+    // Decode rows sit at the *end* of the KV cache (prefill: offset 0).
+    let kv_off = kv_len - q_len;
     // DMA latency decomposition (mirrors `dma_hbm_time`): occupancy is a
     // function of bytes alone, latency adds per-hop routing.
     let kv_lat_base = arch.hbm.access_latency + 2 * arch.noc.inject_latency;
@@ -238,16 +256,28 @@ fn build_stream(
     let mut prev_block_end: Option<OpId> = None;
     let mut templates: Vec<BlockTemplate> = Vec::new();
 
-    for (blk_no, &(_b, _h, i)) in blocks.iter().enumerate() {
-        // Row-block height (last block may be partial).
-        let m_r = (wl.seq - i * m).min(m);
-        // Causal: K/V blocks strictly above the diagonal are skipped.
-        let t_c_eff = if wl.causal { (i + 1).min(t_c) } else { t_c };
+    for (blk_no, &(share_c, i)) in blocks.iter().enumerate() {
+        // Per-head row-block height (last block may be partial); the
+        // block's working rows stack `share_c` query heads of a KV group.
+        let qr_i = (q_len - i * b_r).min(b_r);
+        let m_r = share_c * qr_i;
+        // Causal: K/V blocks strictly above the row range are skipped,
+        // blocks straddling the diagonal are masked (decode rows see the
+        // whole cache: `t_c_eff == t_c`, no mask).
+        let row_start = kv_off + i * b_r;
+        let t_c_eff = if wl.causal { (row_start + qr_i).div_ceil(b_c) } else { t_c };
+        let mask_from = if wl.causal {
+            causal_mask_from(row_start, b_c, kv_len, t_c_eff)
+        } else {
+            t_c_eff
+        };
 
         if stamping {
             if let (Some(prev), Some(t)) = (
                 prev_block_end,
-                templates.iter().find(|t| t.m_r == m_r && t.t_c_eff == t_c_eff),
+                templates
+                    .iter()
+                    .find(|t| t.m_r == m_r && t.t_c_eff == t_c_eff && t.mask_from == mask_from),
             ) {
                 let new_base = prog.stamp_range(t.base, t.len, prev);
                 // Rotate the stamped K/V loads to this block's channels
@@ -273,7 +303,7 @@ fn build_stream(
         let mut kv_ops: Vec<u32> = Vec::with_capacity(t_c_eff as usize);
 
         // Load Q_i through the tile's row channel (west edge).
-        let q_bytes = m_r * d * eb;
+        let q_bytes = m_r * d * eb; // stacked rows: one load per head chunk
         let tq = dma_hbm_time(&arch.hbm, &arch.noc, q_bytes, row_ch.hops);
         let mut dbuf = [OpId(0); 2];
         let nd = opt_deps(&mut dbuf, start_dep, None);
@@ -294,7 +324,7 @@ fn build_stream(
         let mut costs_memo: Option<(u64, ShapeCosts)> = None;
 
         for j in 0..t_c_eff {
-            let m_c = (wl.seq - j * m).min(m);
+            let m_c = (kv_len - j * b_c).min(b_c);
             let costs = match costs_memo {
                 Some((key, c)) if key == m_c => c,
                 _ => {
@@ -331,7 +361,7 @@ fn build_stream(
                 // (+ final normalize) never blocks on the tile's engines,
                 // so one delay op of the summed occupancy completes at
                 // exactly the chain's completion time.
-                let mask_cycles = if wl.causal && j == i { costs.scale } else { 0 };
+                let mask_cycles = if j >= mask_from { costs.scale } else { 0 };
                 let spatz_occ = mask_cycles + costs.sm1_base + costs.sm2 + rs_cycles;
                 let last = j + 1 == t_c_eff;
                 let spatz_occ = spatz_occ + if last { norm_cycles } else { 0 };
@@ -399,9 +429,9 @@ fn build_stream(
             );
 
             // Softmax phase 1: scale by 1/√D, row maxima, running max.
-            // Diagonal blocks of causal workloads additionally apply the
-            // triangular mask on the vector engine.
-            let mask_cycles = if wl.causal && j == i { costs.scale } else { 0 };
+            // Diagonal-straddling blocks of causal workloads additionally
+            // apply the triangular mask on the vector engine.
+            let mask_cycles = if j >= mask_from { costs.scale } else { 0 };
             let sm1 = prog.op(
                 ctx.spatz,
                 mask_cycles + costs.sm1_base,
@@ -447,6 +477,7 @@ fn build_stream(
             templates.push(BlockTemplate {
                 m_r,
                 t_c_eff,
+                mask_from,
                 base: block_base,
                 len: prog.num_ops() as u32 - block_base,
                 kv_ops,
@@ -476,7 +507,9 @@ fn topo_hops(arch: &ArchConfig, x: usize, y: usize, chan: usize, _m: &HbmMap) ->
 mod tests {
     use super::*;
     use crate::arch::presets::table1;
-    use crate::dataflow::{assert_programs_equal, set_symmetry_folding, set_template_stamping};
+    use crate::dataflow::{
+        assert_programs_equal, flash_block_size, set_symmetry_folding, set_template_stamping,
+    };
     use crate::sim::execute;
 
     fn small_wl() -> Workload {
@@ -511,6 +544,9 @@ mod tests {
                 (Workload::new(1024, 128, 192, 2), false),
                 (Workload::new(1024, 128, 192, 2), true),
                 (Workload::new(2048, 64, 96, 1).with_causal(true), false),
+                (Workload::new(1024, 128, 192, 2).with_kv_heads(48), false),
+                (Workload::new(1024, 64, 96, 1).with_kv_heads(24).with_causal(true), false),
+                (Workload::new(2048, 128, 192, 2).with_kv_heads(48).decode(), true),
             ] {
                 let stamped = flash_program(&arch, &wl, asyn);
                 set_template_stamping(false);
@@ -534,6 +570,8 @@ mod tests {
         for wl in [
             Workload::new(1024, 128, 96, 1),
             Workload::new(1536, 64, 48, 1).with_causal(true),
+            Workload::new(1024, 128, 96, 1).with_kv_heads(24),
+            Workload::new(2048, 64, 96, 1).with_kv_heads(12).decode(),
         ] {
             set_symmetry_folding(true);
             let folded = flash_program(&arch, &wl, false);
@@ -579,6 +617,45 @@ mod tests {
         let cu = st.compute_utilization(arch.peak_flops_per_cycle());
         assert!(bw > 0.6, "HBM BW utilization {bw:.2} should approach saturation");
         assert!(cu < 0.4, "compute utilization {cu:.2} should be memory-bound");
+    }
+
+    #[test]
+    fn decode_traffic_is_compulsory_and_kv_scales_with_kv_heads() {
+        // Decode has a single row block (T_r = 1), so every K/V byte is
+        // read exactly once per KV head per share-chunk: with the whole
+        // group stacked (chunks == 1) the modeled traffic is *exactly*
+        // compulsory, and the K/V share scales by kv_heads/heads vs MHA.
+        let arch = table1();
+        let base = Workload::new(4096, 128, 32, 2).decode();
+        let qo = 2 * 2 * 32 * 128 * Workload::BYTES_PER_ELEM; // B·H·D reads + writes
+        let mut kv_bytes = Vec::new();
+        for kv_heads in [32u64, 8, 1] {
+            let wl = base.with_kv_heads(kv_heads);
+            let st = execute(&flash_program(&arch, &wl, false), 0);
+            assert_eq!(st.hbm_bytes, wl.compulsory_bytes(), "kv{kv_heads}");
+            kv_bytes.push(st.hbm_bytes - qo);
+        }
+        assert_eq!(kv_bytes[0] / kv_bytes[1], 4); // 32 → 8 KV heads
+        assert_eq!(kv_bytes[0] / kv_bytes[2], 32); // 32 → 1 (MQA)
+        assert_eq!(kv_bytes[0] % kv_bytes[2], 0);
+    }
+
+    #[test]
+    fn gqa_reduces_small_s_prefill_traffic() {
+        // Serving-chunk prefill (S within one row block): K/V is loaded
+        // once per KV group instead of once per head, so traffic drops.
+        let arch = table1();
+        let mha = Workload::new(128, 128, 32, 2);
+        let gqa = mha.with_kv_heads(4);
+        let st_mha = execute(&flash_program(&arch, &mha, false), 0);
+        let st_gqa = execute(&flash_program(&arch, &gqa, false), 0);
+        assert!(
+            st_gqa.hbm_bytes < st_mha.hbm_bytes,
+            "gqa {} vs mha {}",
+            st_gqa.hbm_bytes,
+            st_mha.hbm_bytes
+        );
+        assert!(st_gqa.hbm_bytes >= gqa.compulsory_bytes());
     }
 
     #[test]

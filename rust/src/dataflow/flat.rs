@@ -17,6 +17,14 @@
 //! resources whose cost follows §II (hardware path-based forwarding or
 //! software unicast chains, per `arch.noc.hw_collectives`).
 //!
+//! Serving shapes compose naturally with the group structure: for GQA/MQA
+//! a block stacks the query rows of a whole KV group (`share` heads), so
+//! the south-edge K/V loads and their column multicasts happen once per
+//! group instead of once per query head — the existing collective is the
+//! broadcast that amortizes the shared K/V. Decode blocks hold a single
+//! query row, padded across the group's `G` row slices (see
+//! `crate::dataflow` § Workload model).
+//!
 //! The asynchronous variant (`FlatAsyn`) schedules two heads per group as
 //! two independent op streams sharing the group's engines and buses
 //! (§III-C): matrix multiplications of one head overlap data movement and
@@ -61,7 +69,7 @@ struct IterCosts {
     kv_bytes: u64,
     mt_kv: XferTime,
     qk_cycles: u64,
-    /// Includes the causal diagonal mask when `j == i`.
+    /// Includes the causal mask when the K/V block straddles the diagonal.
     sm1_cycles: u64,
     sm2_cycles: u64,
     sm3_cycles: u64,
@@ -76,34 +84,34 @@ fn iter_costs(
     arch: &ArchConfig,
     wl: &Workload,
     tiling: &FlatTiling,
-    t_r_slice: u64,
-    i: u64,
+    rows: u64,
+    masked: bool,
     j: u64,
     n_dest: u64,
 ) -> IterCosts {
     let d = wl.head_dim;
-    let m_c_block = (wl.seq - j * tiling.block).min(tiling.block);
+    let m_c_block = (wl.kv_len() - j * tiling.block).min(tiling.block);
     let t_c_slice = m_c_block.div_ceil(tiling.group).max(1);
     let kv_bytes = 2 * t_c_slice * d * Workload::BYTES_PER_ELEM;
-    let mask_cycles = if wl.causal && j == i {
-        SpatzOp::Scale { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
+    let mask_cycles = if masked {
+        SpatzOp::Scale { elems: rows * t_c_slice }.cycles(&arch.tile)
     } else {
         0
     };
-    let stat_bytes = t_r_slice * Workload::BYTES_PER_ELEM;
+    let stat_bytes = rows * Workload::BYTES_PER_ELEM;
     IterCosts {
         kv_bytes,
         mt_kv: collective_time(&arch.noc, kv_bytes, n_dest, CollectiveKind::Multicast),
-        qk_cycles: matmul_cycles(&arch.tile, t_r_slice, d, t_c_slice),
+        qk_cycles: matmul_cycles(&arch.tile, rows, d, t_c_slice),
         sm1_cycles: mask_cycles
-            + SpatzOp::Scale { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
-            + SpatzOp::RowMax { rows: t_r_slice, cols: t_c_slice }.cycles(&arch.tile)
-            + SpatzOp::StatsUpdate { rows: t_r_slice }.cycles(&arch.tile),
-        sm2_cycles: SpatzOp::Exp { elems: t_r_slice * t_c_slice }.cycles(&arch.tile)
-            + SpatzOp::RowSum { rows: t_r_slice, cols: t_c_slice }.cycles(&arch.tile),
-        sm3_cycles: SpatzOp::StatsUpdate { rows: t_r_slice }.cycles(&arch.tile)
-            + SpatzOp::Rescale { rows: t_r_slice, elems: t_r_slice * d }.cycles(&arch.tile),
-        pv_cycles: matmul_cycles(&arch.tile, t_r_slice, t_c_slice, d),
+            + SpatzOp::Scale { elems: rows * t_c_slice }.cycles(&arch.tile)
+            + SpatzOp::RowMax { rows, cols: t_c_slice }.cycles(&arch.tile)
+            + SpatzOp::StatsUpdate { rows }.cycles(&arch.tile),
+        sm2_cycles: SpatzOp::Exp { elems: rows * t_c_slice }.cycles(&arch.tile)
+            + SpatzOp::RowSum { rows, cols: t_c_slice }.cycles(&arch.tile),
+        sm3_cycles: SpatzOp::StatsUpdate { rows }.cycles(&arch.tile)
+            + SpatzOp::Rescale { rows, elems: rows * d }.cycles(&arch.tile),
+        pv_cycles: matmul_cycles(&arch.tile, rows, t_c_slice, d),
         rt_max: collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::MaxReduce),
         rt_sum: collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::SumReduce),
         mt_stat: collective_time(&arch.noc, stat_bytes, n_dest, CollectiveKind::Multicast),
@@ -154,7 +162,7 @@ pub(crate) fn flat_program_ext_in(
     asynchronous: bool,
     double_buffer: bool,
 ) -> Program {
-    let tiling = FlatTiling::resolve(arch, wl.head_dim, wl.seq, group, asynchronous);
+    let tiling = FlatTiling::resolve(arch, wl, group, asynchronous);
     let hbm_map = HbmMap::new(arch);
     let chan_res = prog.resources(hbm_map.total_channels());
 
@@ -175,11 +183,22 @@ pub(crate) fn flat_program_ext_in(
         })
         .collect();
 
-    // Deal blocks (b, h, i) round-robin over groups.
-    let mut group_blocks: Vec<Vec<u64>> = vec![Vec::new(); groups.len()];
-    let total_blocks = wl.batch * wl.heads * tiling.t_r;
-    for blk in 0..total_blocks {
-        group_blocks[(blk % groups.len() as u64) as usize].push(blk);
+    // Deal blocks (batch, kv_head, share-chunk, row-block) round-robin
+    // over groups; a block stacks `share_c` query heads of one KV group
+    // (dense MHA degenerates to the historical (b, h, i) enumeration).
+    let q_per_kv = wl.q_per_kv();
+    let mut group_blocks: Vec<Vec<(u64, u64)>> = vec![Vec::new(); groups.len()];
+    let mut idx = 0usize;
+    for _b in 0..wl.batch {
+        for _kvh in 0..wl.kv_heads {
+            for c in 0..tiling.chunks {
+                let share_c = tiling.share.min(q_per_kv - c * tiling.share);
+                for i in 0..tiling.t_r {
+                    group_blocks[idx % groups.len()].push((share_c, i));
+                    idx += 1;
+                }
+            }
+        }
     }
 
     // §Fold: group 0 is the representative (breakdown) stream and always
@@ -195,7 +214,7 @@ pub(crate) fn flat_program_ext_in(
             let (even, odd): (Vec<_>, Vec<_>) =
                 blocks.iter().enumerate().partition(|(i, _)| i % 2 == 0);
             for stream in [even, odd] {
-                let list: Vec<u64> = stream.into_iter().map(|(_, b)| *b).collect();
+                let list: Vec<(u64, u64)> = stream.into_iter().map(|(_, b)| *b).collect();
                 build_group_stream(
                     &mut prog, arch, wl, &hbm_map, &chan_res, gc, &tiling, &list, true,
                     double_buffer, false,
@@ -226,7 +245,7 @@ fn build_group_stream(
     chan_res: &[ResourceId],
     gc: &GroupCtx,
     tiling: &FlatTiling,
-    blocks: &[u64],
+    blocks: &[(u64, u64)],
     asynchronous: bool,
     double_buffer: bool,
     fold: bool,
@@ -235,6 +254,9 @@ fn build_group_stream(
     let g = tiling.group as usize;
     let d = wl.head_dim;
     let eb = Workload::BYTES_PER_ELEM;
+    let (q_len, kv_len) = (wl.q_len(), wl.kv_len());
+    // Decode rows sit at the *end* of the KV cache (prefill: offset 0).
+    let kv_off = kv_len - q_len;
     let (ox, oy) = gc.origin;
     let tid = |lx: usize, ly: usize| arch.tile_id(ox + lx, oy + ly);
     let local = |lx: usize, ly: usize| ly * g + lx;
@@ -245,19 +267,19 @@ fn build_group_stream(
         prog.fold.streams += 1;
     }
     let mut prev_barrier: Option<OpId> = None;
-    // Block templates, keyed by row-block index `i` (which determines the
-    // whole block geometry): `(i, first op, op count, fold delta)`. Only
-    // blocks gated on a previous barrier are registered, so every stamped
-    // instance has exactly one external dependency to rewrite.
-    let mut templates: Vec<(u64, u32, u32, FoldStats)> = Vec::new();
+    // Block templates, keyed by (row-block index `i`, stacked-head count
+    // `share_c`) — together they determine the whole block geometry:
+    // `(i, share_c, first op, op count, fold delta)`. Only blocks gated on
+    // a previous barrier are registered, so every stamped instance has
+    // exactly one external dependency to rewrite.
+    let mut templates: Vec<(u64, u64, u32, u32, FoldStats)> = Vec::new();
 
-    for &blk in blocks {
-        let i = blk % tiling.t_r; // row-block index within the head
-
+    for &(share_c, i) in blocks {
         if stamping {
-            if let (Some(prev), Some((_, base, len, fold_delta))) =
-                (prev_barrier, templates.iter().find(|t| t.0 == i).copied())
-            {
+            if let (Some(prev), Some((_, _, base, len, fold_delta))) = (
+                prev_barrier,
+                templates.iter().find(|t| t.0 == i && t.1 == share_c).copied(),
+            ) {
                 let new_base = prog.stamp_range(base, len, prev);
                 prog.fold.accumulate(&fold_delta);
                 prev_barrier = Some(OpId(new_base + len - 1));
@@ -267,10 +289,12 @@ fn build_group_stream(
 
         let block_base = prog.num_ops() as u32;
         let fold_before = prog.fold;
-        let m_r_block = (wl.seq - i * tiling.block).min(tiling.block);
-        // Per-tile slice rows for this block (partial last block shrinks
-        // every row's slice proportionally; sizes stay symmetric).
-        let t_r_slice = m_r_block.div_ceil(tiling.group).max(1);
+        let m_r_block = (q_len - i * tiling.block).min(tiling.block);
+        // Per-tile slice rows for this block (partial last block — and
+        // the decode single row — shrinks every row's slice; `max(1)`
+        // pads rows shorter than the group edge across all G row slices),
+        // stacked over the block's `share_c` query heads.
+        let t_r_slice = share_c * m_r_block.div_ceil(tiling.group).max(1);
         let start_dep = prev_barrier;
 
         // ① West-edge tiles load Q slices; ② row-wise multicast.
@@ -304,9 +328,20 @@ fn build_group_stream(
             q_mcast.push(mc);
         }
 
-        // Causal: group-level K/V blocks above the diagonal are skipped;
-        // the diagonal block is masked on the vector engine.
-        let t_c_eff = if wl.causal { (i + 1).min(tiling.t_c) } else { tiling.t_c };
+        // Causal: group-level K/V blocks above the row range are skipped;
+        // diagonal-straddling blocks are masked on the vector engine
+        // (decode rows see the whole cache: full t_c, no mask).
+        let row_start = kv_off + i * tiling.block;
+        let t_c_eff = if wl.causal {
+            (row_start + m_r_block).div_ceil(tiling.block)
+        } else {
+            tiling.t_c
+        };
+        let mask_from = if wl.causal {
+            crate::dataflow::tiling::causal_mask_from(row_start, tiling.block, kv_len, t_c_eff)
+        } else {
+            t_c_eff
+        };
         let norm_cycles =
             SpatzOp::Normalize { rows: t_r_slice, elems: t_r_slice * d }.cycles(&arch.tile);
         let o_bytes = t_r_slice * d * eb;
@@ -326,7 +361,7 @@ fn build_group_stream(
             let mut pv_row2: Vec<Option<OpId>> = vec![None; g]; // PV[j-2] per row
             let mut join_deps: Vec<OpId> = Vec::with_capacity(g + 2);
             for j in 0..t_c_eff {
-                let c = iter_costs(arch, wl, tiling, t_r_slice, i, j, n_dest);
+                let c = iter_costs(arch, wl, tiling, t_r_slice, j >= mask_from, j, n_dest);
 
                 // ③ South-edge loads + ④ column multicasts (kept).
                 let mut kv_mcast: Vec<OpId> = Vec::with_capacity(g);
@@ -497,7 +532,7 @@ fn build_group_stream(
             for j in 0..t_c_eff {
                 // Per-iteration costs are identical across the g / g²
                 // emission loops below — compute each once (§Perf).
-                let c = iter_costs(arch, wl, tiling, t_r_slice, i, j, n_dest);
+                let c = iter_costs(arch, wl, tiling, t_r_slice, j >= mask_from, j, n_dest);
 
                 // ③ South-edge tiles load Kᵀ/V slices; ④ column multicast.
                 let mut kv_mcast: Vec<OpId> = Vec::with_capacity(g);
@@ -713,7 +748,7 @@ fn build_group_stream(
         let barrier = prog.op(gc.sync, 0, 0, Component::Other, NO_TILE, 0, &stores);
         if stamping && start_dep.is_some() {
             let len = prog.num_ops() as u32 - block_base;
-            templates.push((i, block_base, len, prog.fold.delta_since(&fold_before)));
+            templates.push((i, share_c, block_base, len, prog.fold.delta_since(&fold_before)));
         }
         prev_barrier = Some(barrier);
     }
@@ -763,6 +798,9 @@ mod tests {
                 (Workload::new(4096, 128, 8, 1), 32, true),
                 (Workload::new(1024, 64, 32, 2).with_causal(true), 8, false),
                 (Workload::new(512, 128, 32, 4), 16, true),
+                (Workload::new(2048, 128, 24, 1).with_kv_heads(6), 8, false),
+                (Workload::new(1024, 64, 32, 2).with_kv_heads(8).with_causal(true), 8, false),
+                (Workload::new(4096, 128, 32, 2).with_kv_heads(4).decode(), 16, true),
             ] {
                 let stamped = flat_program(&arch, &wl, group, asyn);
                 set_template_stamping(false);
@@ -785,6 +823,8 @@ mod tests {
         for (arch, wl, group) in [
             (table1(), Workload::new(1024, 128, 48, 1), 8usize),
             (table1_sw_collectives(), Workload::new(512, 64, 20, 1).with_causal(true), 16),
+            (table1(), Workload::new(1024, 128, 48, 1).with_kv_heads(12), 8),
+            (table1(), Workload::new(2048, 64, 32, 1).with_kv_heads(8).decode(), 8),
         ] {
             let tracked = tracked_tile(&arch, Dataflow::FlatColl, group);
             set_symmetry_folding(true);
@@ -808,7 +848,7 @@ mod tests {
         let arch = table1();
         let wl = wl_small();
         for group in [4usize, 8, 16] {
-            let tiling = FlatTiling::resolve(&arch, wl.head_dim, wl.seq, group, false);
+            let tiling = FlatTiling::resolve(&arch, &wl, group, false);
             let p = flat_program(&arch, &wl, group, false);
             let st = execute(&p, 0);
             let expected = 2
@@ -825,6 +865,32 @@ mod tests {
                 st.hbm_bytes
             );
         }
+    }
+
+    #[test]
+    fn decode_kv_traffic_scales_with_kv_heads() {
+        // Decode on a group: K/V streams through the south edge once per
+        // KV head (T_r = 1, whole group stacked ⇒ one chunk), so the K/V
+        // share of the traffic scales exactly by kv_heads/heads. Q/O pay
+        // the group-padding cost (G row slices per single decode row) but
+        // are independent of kv_heads.
+        let arch = table1();
+        let eb = Workload::BYTES_PER_ELEM;
+        let base = Workload::new(4096, 64, 32, 2).decode();
+        let qo = 2 * 2 * 32 * 8 * 64 * eb; // 2 · B·H·G·D (padded rows)
+        let mut kv = Vec::new();
+        for kv_heads in [32u64, 8, 1] {
+            let wl = base.with_kv_heads(kv_heads);
+            let st = execute(&flat_program(&arch, &wl, 8, false), 0);
+            assert_eq!(
+                st.hbm_bytes,
+                qo + 2 * 2 * kv_heads * 4096 * 64 * eb,
+                "kv{kv_heads}"
+            );
+            kv.push(st.hbm_bytes - qo);
+        }
+        assert_eq!(kv[0] / kv[1], 4); // 32 → 8 KV heads
+        assert_eq!(kv[0] / kv[2], 32); // 32 → 1 (MQA)
     }
 
     #[test]

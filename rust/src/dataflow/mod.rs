@@ -14,6 +14,36 @@
 //!   (Algorithm 2 + §III-C).
 //!
 //! plus [`summa`] for the Fig. 5c GEMM comparison.
+//!
+//! # Workload model
+//!
+//! A [`Workload`] describes one attention layer in serving terms:
+//! `(S, D, H, H_kv, B, causal, phase)`. Prefill MHA (`H_kv == H`,
+//! [`Phase::Prefill`]) is the paper's evaluated configuration; the serving
+//! extensions compose with every dataflow:
+//!
+//! * **GQA/MQA** (`kv_heads < heads`): the `H / H_kv` query heads of a KV
+//!   group are *stacked* into one row block, so the K/V block is loaded
+//!   from HBM once per group and amortized across the group's query rows —
+//!   on the FlatAttention family the existing column multicast then
+//!   broadcasts that single load through the group, on FlashAttention the
+//!   stacked block reuses it from L1. K/V channel traffic therefore
+//!   scales by `kv_heads / heads` (exactly, whenever the stacked rows
+//!   still fit L1 — see `tiling::FlashTiling` for the `share` fallback).
+//!   Stacking grows the Q/O/score footprint, so block/slice sizes shrink
+//!   accordingly; with `share == 1` the sizing reduces bit-for-bit to the
+//!   dense-MHA formulas.
+//! * **Decode** ([`Phase::Decode`]): one query row per (batch, head)
+//!   against a KV cache of length `S`. Builders degenerate to a single
+//!   row block (`T_r == 1`); the row sits at the end of the cache, so
+//!   causal masking is a no-op. FlatAttention pads the single row across
+//!   the group's `G` row slices (the honest over-flattening cost of
+//!   running a decode token on a big group).
+//!
+//! Both extensions preserve the fold/stamp machinery: shared-resource ops
+//! stay verbatim, templates key on the (stacked-rows, block-geometry,
+//! mask-position) triple, and folded ≡ unfolded / stamped ≡ naive remain
+//! bit-exact (`tests/fold_differential.rs` sweeps `kv_heads` and `phase`).
 
 pub mod flash;
 pub mod flat;
@@ -26,7 +56,7 @@ use crate::arch::ArchConfig;
 use crate::sim::{execute, OpId, Program, ProgramArena, RunStats};
 
 pub use summa::{summa_program, GemmWorkload};
-pub use tiling::{flash_block_size, flat_slice_size, FlatTiling};
+pub use tiling::{flash_block_size, flat_slice_size, FlashTiling, FlatTiling};
 
 /// Global switch for builder template stamping (§Perf). Stamped and naive
 /// builds emit op-for-op identical programs (asserted by the
@@ -103,15 +133,47 @@ pub(crate) fn opt_deps(buf: &mut [OpId; 2], a: Option<OpId>, b: Option<OpId>) ->
     n
 }
 
-/// An MHA prefill workload (one attention layer).
+/// Attention execution phase (serving workloads).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Prefill: every query position attends (query length == `seq`).
+    Prefill,
+    /// Decode: a single new query row per (batch, head) attends over a KV
+    /// cache of length `seq`. The query sits at the *end* of the cache, so
+    /// it sees every position — causal masking is a no-op in this phase.
+    Decode,
+}
+
+impl Phase {
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
+}
+
+/// An MHA/GQA attention workload (one attention layer).
+///
+/// Serving shapes are first-class: `kv_heads < heads` models grouped-query
+/// attention (`kv_heads == 1` is MQA) — every group of `heads / kv_heads`
+/// query heads shares one K/V head, and the dataflow builders emit the
+/// shared K/V loads once per group (stacking the group's query rows into
+/// one block) so modeled K/V HBM traffic scales by `kv_heads / heads`.
+/// `Phase::Decode` models single-token generation: one query row against a
+/// KV cache of length `seq`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Workload {
-    /// Sequence length S.
+    /// Sequence length S: the query *and* key/value length for prefill,
+    /// the KV-cache length for decode.
     pub seq: u64,
     /// Head dimension D.
     pub head_dim: u64,
-    /// Number of heads H.
+    /// Number of query heads H.
     pub heads: u64,
+    /// Number of K/V heads (`1 ≤ kv_heads ≤ heads`, `heads % kv_heads ==
+    /// 0`). `kv_heads == heads` is dense MHA, `1` is MQA.
+    pub kv_heads: u64,
     /// Batch size B.
     pub batch: u64,
     /// Causal (autoregressive) masking. The paper evaluates the
@@ -119,11 +181,31 @@ pub struct Workload {
     /// causal support is our extension: dataflows skip fully-masked K/V
     /// blocks and mask the diagonal blocks on the vector engine.
     pub causal: bool,
+    /// Prefill vs decode (see [`Phase`]).
+    pub phase: Phase,
 }
 
 impl Workload {
+    /// Dense MHA prefill constructor; layer on [`Workload::with_kv_heads`]
+    /// / [`Workload::with_phase`] for serving shapes.
+    ///
+    /// Panics on zero-valued dimensions: these used to slip through and
+    /// explode deep inside the builders (division by zero in the tiling,
+    /// empty-program executes) instead of failing with a usable message.
     pub fn new(seq: u64, head_dim: u64, heads: u64, batch: u64) -> Self {
-        Self { seq, head_dim, heads, batch, causal: false }
+        assert!(
+            seq > 0 && head_dim > 0 && heads > 0 && batch > 0,
+            "workload dimensions must be non-zero (got S={seq} D={head_dim} H={heads} B={batch})"
+        );
+        Self {
+            seq,
+            head_dim,
+            heads,
+            kv_heads: heads,
+            batch,
+            causal: false,
+            phase: Phase::Prefill,
+        }
     }
 
     /// Builder-style causal toggle.
@@ -132,15 +214,65 @@ impl Workload {
         self
     }
 
+    /// Builder-style K/V head count (GQA/MQA).
+    pub fn with_kv_heads(mut self, kv_heads: u64) -> Self {
+        assert!(
+            kv_heads >= 1 && kv_heads <= self.heads && self.heads % kv_heads == 0,
+            "kv_heads must satisfy 1 <= kv_heads <= heads and heads % kv_heads == 0 \
+             (got kv_heads={kv_heads}, heads={})",
+            self.heads
+        );
+        self.kv_heads = kv_heads;
+        self
+    }
+
+    /// Builder-style phase selector.
+    pub fn with_phase(mut self, phase: Phase) -> Self {
+        self.phase = phase;
+        self
+    }
+
+    /// Convenience: switch to [`Phase::Decode`].
+    pub fn decode(self) -> Self {
+        self.with_phase(Phase::Decode)
+    }
+
     /// FP16 element size used throughout the paper.
     pub const BYTES_PER_ELEM: u64 = 2;
 
-    /// Matrix-engine FLOPs of the layer: QKᵀ and P·V, 2·S²·D each per
-    /// head (multiply-accumulate = 2 FLOPs). For causal workloads this is
-    /// the *useful* count (≈ half); dataflow builders report the FLOPs
-    /// actually executed (diagonal blocks compute fully and mask).
+    /// Query rows per (batch, head): S for prefill, 1 for decode.
+    pub fn q_len(&self) -> u64 {
+        match self.phase {
+            Phase::Prefill => self.seq,
+            Phase::Decode => 1,
+        }
+    }
+
+    /// Key/value positions per (batch, KV head) — always S (prefill
+    /// processes the full sequence; decode attends over the full cache).
+    pub fn kv_len(&self) -> u64 {
+        self.seq
+    }
+
+    /// Query heads sharing each K/V head (`heads / kv_heads`; 1 for MHA).
+    pub fn q_per_kv(&self) -> u64 {
+        self.heads / self.kv_heads
+    }
+
+    pub fn is_decode(&self) -> bool {
+        self.phase == Phase::Decode
+    }
+
+    /// Matrix-engine FLOPs of the layer: QKᵀ and P·V, 2·q_len·kv_len·D
+    /// each per query head (multiply-accumulate = 2 FLOPs). For causal
+    /// prefill this is the *useful* count (≈ half); dataflow builders
+    /// report the FLOPs actually executed (diagonal blocks compute fully
+    /// and mask). The decode row sees the whole cache, so causal decode
+    /// has no masked work.
     pub fn matmul_flops(&self) -> u64 {
-        if self.causal {
+        if self.is_decode() {
+            4 * self.batch * self.heads * self.kv_len() * self.head_dim
+        } else if self.causal {
             // Σ_i 2·(i+1)·D over rows, ×2 matmuls: 2·S·(S+1)·D per head.
             2 * self.batch * self.heads * self.seq * (self.seq + 1) * self.head_dim
         } else {
@@ -148,15 +280,26 @@ impl Workload {
         }
     }
 
-    /// Minimal (compulsory) HBM traffic in bytes: read Q, K, V and write O
-    /// exactly once.
+    /// Minimal (compulsory) HBM traffic in bytes: read Q and write O once
+    /// per query head, read K and V once per *KV* head — the K/V share
+    /// shrinks by `kv_heads / heads` under GQA/MQA.
     pub fn compulsory_bytes(&self) -> u64 {
-        4 * self.batch * self.heads * self.seq * self.head_dim * Self::BYTES_PER_ELEM
+        let qo = 2 * self.batch * self.heads * self.q_len() * self.head_dim;
+        let kv = 2 * self.batch * self.kv_heads * self.kv_len() * self.head_dim;
+        (qo + kv) * Self::BYTES_PER_ELEM
     }
 
-    /// Short label like `D128-S4096`.
+    /// Short label like `D128-S4096`, suffixed `-kvK` for GQA/MQA and
+    /// `-dec` for decode (dense MHA prefill keeps the historical form).
     pub fn label(&self) -> String {
-        format!("D{}-S{}", self.head_dim, self.seq)
+        let mut s = format!("D{}-S{}", self.head_dim, self.seq);
+        if self.kv_heads != self.heads {
+            s.push_str(&format!("-kv{}", self.kv_heads));
+        }
+        if self.is_decode() {
+            s.push_str("-dec");
+        }
+        s
     }
 }
 
@@ -365,6 +508,72 @@ mod tests {
     fn compulsory_traffic() {
         let wl = Workload::new(1024, 64, 8, 1);
         assert_eq!(wl.compulsory_bytes(), 4 * 8 * 1024 * 64 * 2);
+    }
+
+    #[test]
+    fn gqa_compulsory_kv_share_scales() {
+        // K/V compulsory bytes shrink by heads/kv_heads; Q/O stay put.
+        let mha = Workload::new(1024, 64, 8, 1);
+        let gqa = mha.with_kv_heads(2);
+        let qo = 2 * 8 * 1024 * 64 * 2u64;
+        assert_eq!(mha.compulsory_bytes(), qo + qo);
+        assert_eq!(gqa.compulsory_bytes(), qo + qo / 4);
+        let mqa = mha.with_kv_heads(1);
+        assert_eq!(mqa.compulsory_bytes(), qo + qo / 8);
+    }
+
+    #[test]
+    fn decode_shapes_and_flops() {
+        let wl = Workload::new(2048, 128, 8, 2).decode();
+        assert_eq!(wl.q_len(), 1);
+        assert_eq!(wl.kv_len(), 2048);
+        assert_eq!(wl.matmul_flops(), 4 * 2 * 8 * 2048 * 128);
+        // Causal decode: the single row sees the whole cache — same count.
+        assert_eq!(wl.with_causal(true).matmul_flops(), wl.matmul_flops());
+        // Compulsory: Q/O are one row per head, K/V the full cache.
+        let qo = 2 * 2 * 8 * 128 * 2u64;
+        let kv = 2 * 2 * 8 * 2048 * 128 * 2u64;
+        assert_eq!(wl.compulsory_bytes(), qo + kv);
+    }
+
+    #[test]
+    fn serving_labels() {
+        assert_eq!(Workload::new(4096, 128, 32, 2).label(), "D128-S4096");
+        assert_eq!(
+            Workload::new(4096, 128, 32, 2).with_kv_heads(8).label(),
+            "D128-S4096-kv8"
+        );
+        assert_eq!(
+            Workload::new(4096, 128, 32, 2).with_kv_heads(1).decode().label(),
+            "D128-S4096-kv1-dec"
+        );
+        assert_eq!(Phase::Decode.label(), "decode");
+    }
+
+    #[test]
+    #[should_panic(expected = "must be non-zero")]
+    fn workload_rejects_zero_seq() {
+        // Regression: a zero dimension used to survive construction and
+        // only explode deep inside the builders.
+        let _ = Workload::new(0, 128, 8, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be non-zero")]
+    fn workload_rejects_zero_heads() {
+        let _ = Workload::new(1024, 128, 0, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "heads % kv_heads == 0")]
+    fn workload_rejects_non_dividing_kv_heads() {
+        let _ = Workload::new(1024, 128, 6, 1).with_kv_heads(4);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv_heads must satisfy")]
+    fn workload_rejects_zero_kv_heads() {
+        let _ = Workload::new(1024, 128, 8, 1).with_kv_heads(0);
     }
 
     #[test]

@@ -17,10 +17,33 @@
 //! (= B_r/G_y = B_c/G_x, kept square per §IV), so the group-level block is
 //! `M = t·G` — the aggregate-L1 effect that shrinks HBM I/O by √N. Shorter
 //! sequences cap the slice at `S/G` (the over-flattening regime of §V-B).
+//!
+//! # Serving shapes (GQA / decode)
+//!
+//! The serving generalization decouples the *query-row* extent from the
+//! *K/V-column* extent. A row block holds `rows = share · B_r` stacked
+//! query rows — `share` query heads of one KV group processed jointly
+//! against a single resident K/V block (the GQA sharing that cuts K/V
+//! traffic by `kv_heads/heads`), each contributing `B_r ≤ q_len` rows.
+//! The generalized footprint is
+//!
+//! ```text
+//! sync:  bytes(rows, B_c) = 2 · (2·rows·D + 4·B_c·D + rows·B_c)
+//! async: bytes(rows, B_c) = 2 · (2·(2·rows·D + rows·B_c) + 4·B_c·D)
+//! ```
+//!
+//! which reduces *exactly* to the square formulas at `rows == B_c` (dense
+//! MHA prefill keeps its historical block sizes bit-for-bit). When even
+//! the minimal block overflows L1 (extreme MQA share × head_dim), `share`
+//! falls back by halving — K/V is then re-read once per share-chunk, the
+//! honest capacity cost. Decode (`q_len == 1`) clamps `B_r = 1` and lets
+//! `B_c` grow into the freed budget, streaming the cache in fat chunks.
 
 use crate::arch::{ArchConfig, TileConfig};
+use crate::dataflow::Workload;
 
-/// FP16 bytes of the synchronous working set at block/slice size `m`.
+/// FP16 bytes of the synchronous working set at square block/slice size
+/// `m` (dense-MHA reference shape; see [`working_set_rows_bytes`]).
 pub fn working_set_bytes(m: u64, d: u64) -> u64 {
     2 * (6 * m * d + m * m)
 }
@@ -28,6 +51,20 @@ pub fn working_set_bytes(m: u64, d: u64) -> u64 {
 /// FP16 bytes of the asynchronous (two row-block, shared-K/V) working set.
 pub fn working_set_async_bytes(m: u64, d: u64) -> u64 {
     2 * (8 * m * d + 2 * m * m)
+}
+
+/// FP16 bytes of the synchronous serving working set: `rows` stacked query
+/// rows (Q + O + score) against a `b_c`-column double-buffered K/V pair.
+/// `working_set_rows_bytes(m, m, d) == working_set_bytes(m, d)`.
+pub fn working_set_rows_bytes(rows: u64, b_c: u64, d: u64) -> u64 {
+    2 * (2 * rows * d + 4 * b_c * d + rows * b_c)
+}
+
+/// Asynchronous serving working set: two in-flight row blocks (Q/O/score
+/// each) sharing one double-buffered K/V pair.
+/// `working_set_rows_async_bytes(m, m, d) == working_set_async_bytes(m, d)`.
+pub fn working_set_rows_async_bytes(rows: u64, b_c: u64, d: u64) -> u64 {
+    2 * (2 * (2 * rows * d + rows * b_c) + 4 * b_c * d)
 }
 
 /// Largest size (multiple of `quantum`) whose working set fits.
@@ -39,14 +76,36 @@ fn max_fitting(budget: u64, d: u64, quantum: u64, footprint: fn(u64, u64) -> u64
     m
 }
 
+/// Largest share of jointly-processed query heads (halving descent from
+/// `q_per_kv`) whose *minimal* block still fits the budget. `rows_min` is
+/// the per-head row extent at the minimal block.
+fn max_share(
+    budget: u64,
+    d: u64,
+    q_per_kv: u64,
+    rows_min: u64,
+    quantum: u64,
+    fp: fn(u64, u64, u64) -> u64,
+) -> u64 {
+    let mut share = q_per_kv.max(1);
+    while share > 1 && fp(share * rows_min, quantum, d) > budget {
+        share = share.div_ceil(2);
+    }
+    share
+}
+
 /// FlashAttention block size `M` for one tile (Algorithm 1), maximizing L1
 /// occupancy; `asynchronous` selects the FA-3 two-row-block footprint.
+/// This is the dense-MHA square sizing — serving shapes resolve through
+/// [`FlashTiling`], which reduces to this when `share == 1` and
+/// `q_len >= M`.
 pub fn flash_block_size(tile: &TileConfig, d: u64, asynchronous: bool) -> u64 {
     let fp = if asynchronous { working_set_async_bytes } else { working_set_bytes };
     max_fitting(tile.l1_bytes(), d, 32, fp)
 }
 
-/// FlatAttention per-tile slice size `t` (Algorithm 2).
+/// FlatAttention per-tile slice size `t` (Algorithm 2), dense-MHA square
+/// sizing (see [`FlatTiling`] for serving shapes).
 pub fn flat_slice_size(tile: &TileConfig, d: u64, seq: u64, group: u64, asynchronous: bool) -> u64 {
     let fp = if asynchronous { working_set_async_bytes } else { working_set_bytes };
     let cap = max_fitting(tile.l1_bytes(), d, 16, fp);
@@ -54,25 +113,89 @@ pub fn flat_slice_size(tile: &TileConfig, d: u64, seq: u64, group: u64, asynchro
     cap.min(seq_cap)
 }
 
+/// Resolved FlashAttention tiling for a (possibly serving-shaped)
+/// workload: per-head query-row blocks of `b_r`, K/V column blocks of
+/// `b_c`, with `share` query heads of each KV group stacked per block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FlashTiling {
+    /// Query rows per row block, per head (`min(b_c, q_len)` unless the
+    /// stacked footprint forced it smaller; 1 for decode).
+    pub b_r: u64,
+    /// K/V columns per block (multiple of 32; the historical `M` for
+    /// dense MHA prefill).
+    pub b_c: u64,
+    /// Query heads of one KV group stacked per block (each K/V block is
+    /// loaded once and shared across `share` heads' rows).
+    pub share: u64,
+    /// Share-chunks per KV group: `ceil(q_per_kv / share)`. K/V is
+    /// re-read once per chunk — 1 whenever the full group fits.
+    pub chunks: u64,
+    /// Row blocks per head: `ceil(q_len / b_r)`.
+    pub t_r: u64,
+    /// K/V column blocks: `ceil(kv_len / b_c)`.
+    pub t_c: u64,
+}
+
+impl FlashTiling {
+    pub fn resolve(tile: &TileConfig, wl: &Workload, asynchronous: bool) -> Self {
+        let budget = tile.l1_bytes();
+        let d = wl.head_dim;
+        let q_len = wl.q_len();
+        let fp = if asynchronous { working_set_rows_async_bytes } else { working_set_rows_bytes };
+        const Q: u64 = 32;
+
+        let share = max_share(budget, d, wl.q_per_kv(), q_len.min(Q), Q, fp);
+        // Grow the K/V block while the stacked footprint fits — identical
+        // to `flash_block_size` when share == 1 and q_len >= the result.
+        let rows_at = |m: u64| share * m.min(q_len);
+        let mut b_c = Q;
+        while fp(rows_at(b_c + Q), b_c + Q, d) <= budget {
+            b_c += Q;
+        }
+        // Query-row edge; shrinks below b_c only when even the minimal
+        // block overflows (tiny L1 / extreme shapes — the documented
+        // clamp is then b_r == 1, b_c == 32).
+        let mut b_r = b_c.min(q_len);
+        while b_r > 1 && fp(share * b_r, b_c, d) > budget {
+            b_r = (b_r / 2).max(1);
+        }
+        let q_per_kv = wl.q_per_kv();
+        Self {
+            b_r,
+            b_c,
+            share,
+            chunks: q_per_kv.div_ceil(share),
+            t_r: q_len.div_ceil(b_r),
+            t_c: wl.kv_len().div_ceil(b_c),
+        }
+    }
+}
+
 /// Resolved FlatAttention tiling for a workload on an architecture.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct FlatTiling {
     /// Group edge (square groups: Gx = Gy = group).
     pub group: u64,
-    /// Per-tile slice edge `t`.
+    /// Per-tile K/V slice edge `t`.
     pub slice: u64,
-    /// Group-level block size `B_r = B_c = t · group`.
+    /// Group-level K/V block size `B_c = t · group` (also the query-row
+    /// block extent for prefill; decode rows clamp to `q_len`).
     pub block: u64,
-    /// Row blocks per head: `T_r = ⌈S / B_r⌉`.
+    /// Row blocks per head: `T_r = ⌈q_len / B_r⌉` (1 for decode).
     pub t_r: u64,
-    /// Column blocks per head: `T_c = ⌈S / B_c⌉`.
+    /// Column blocks per head: `T_c = ⌈kv_len / B_c⌉`.
     pub t_c: u64,
     /// Number of groups on the mesh.
     pub num_groups: u64,
+    /// Query heads of one KV group stacked per block (K/V loaded and
+    /// column-multicast once per stack).
+    pub share: u64,
+    /// Share-chunks per KV group: `ceil(q_per_kv / share)`.
+    pub chunks: u64,
 }
 
 impl FlatTiling {
-    pub fn resolve(arch: &ArchConfig, d: u64, seq: u64, group: usize, asynchronous: bool) -> Self {
+    pub fn resolve(arch: &ArchConfig, wl: &Workload, group: usize, asynchronous: bool) -> Self {
         assert!(
             group > 0 && arch.mesh_x % group == 0 && arch.mesh_y % group == 0,
             "group {group} must divide the {}x{} mesh",
@@ -80,23 +203,65 @@ impl FlatTiling {
             arch.mesh_y
         );
         let g = group as u64;
-        let slice = flat_slice_size(&arch.tile, d, seq, g, asynchronous);
+        let d = wl.head_dim;
+        let budget = arch.tile.l1_bytes();
+        let fp = if asynchronous { working_set_rows_async_bytes } else { working_set_rows_bytes };
+        const Q: u64 = 16;
+
+        // Per-tile row extent at the minimal slice: decode blocks put a
+        // single (padded) row on each tile regardless of the slice, so
+        // the share descent must not price them at a full 16-row slice —
+        // that would halve `share` (hence multiply the K/V re-read
+        // chunks) far below what L1 actually holds.
+        let rows_min = wl.q_len().div_ceil(g).clamp(1, Q);
+        let share = max_share(budget, d, wl.q_per_kv(), rows_min, Q, fp);
+        // Square search with `share` stacked row slices per tile — at
+        // share == 1 this is exactly `flat_slice_size`. The builder's
+        // actual per-tile rows are `share · min(slice, ceil(q_len/g))`
+        // ≤ max(share · slice, share · rows_min), both of which fit.
+        let mut cap = Q;
+        while fp(share * (cap + Q), cap + Q, d) <= budget {
+            cap += Q;
+        }
+        let seq_cap = (wl.kv_len() / g).max(1);
+        let slice = cap.min(seq_cap);
         let block = slice * g;
+        let q_per_kv = wl.q_per_kv();
         Self {
             group: g,
             slice,
             block,
-            t_r: seq.div_ceil(block),
-            t_c: seq.div_ceil(block),
+            t_r: wl.q_len().div_ceil(block),
+            t_c: wl.kv_len().div_ceil(block),
             num_groups: ((arch.mesh_x / group) * (arch.mesh_y / group)) as u64,
+            share,
+            chunks: q_per_kv.div_ceil(share),
         }
     }
+}
+
+/// First K/V block index whose *real* columns extend past `row_start`
+/// (the global position of a row block's first query row): blocks at or
+/// after it straddle the causal diagonal and pay the triangular mask on
+/// the vector engine; blocks before it are fully visible. Returns
+/// `t_c_eff` when no block needs masking. With square blocks this is the
+/// diagonal block index `i` — the historical `j == i` mask rule — and it
+/// generalizes to the rectangular (decode / stacked-GQA) geometries.
+pub(crate) fn causal_mask_from(row_start: u64, b_c: u64, kv_len: u64, t_c_eff: u64) -> u64 {
+    // Block j's last real column is min((j+1)·b_c, kv_len) - 1; it needs
+    // masking iff that column exceeds row_start.
+    if kv_len < row_start + 2 {
+        return t_c_eff; // the row sits at the end of the range: all visible
+    }
+    ((row_start + 2).div_ceil(b_c) - 1).min(t_c_eff)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::presets::{table1, table1_tile};
+    use crate::arch::presets::{table1, table1_tile, table2};
+    use crate::dataflow::Phase;
+    use crate::util::quickcheck::{check, forall_cases};
 
     #[test]
     fn flash_sync_block_maximal() {
@@ -122,6 +287,63 @@ mod tests {
     }
 
     #[test]
+    fn serving_footprints_reduce_to_square() {
+        for d in [64u64, 128] {
+            for m in [32u64, 128, 192] {
+                assert_eq!(working_set_rows_bytes(m, m, d), working_set_bytes(m, d));
+                assert_eq!(
+                    working_set_rows_async_bytes(m, m, d),
+                    working_set_async_bytes(m, d)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn flash_tiling_mha_prefill_matches_square_sizing() {
+        // Dense MHA prefill must reproduce the historical block sizes
+        // bit-for-bit (the whole paper-claims test wall depends on it).
+        let t = table1_tile();
+        for (d, s) in [(128u64, 4096u64), (64, 1024), (128, 512)] {
+            for asyn in [false, true] {
+                let wl = Workload::new(s, d, 32, 2);
+                let ft = FlashTiling::resolve(&t, &wl, asyn);
+                let m = flash_block_size(&t, d, asyn);
+                assert_eq!((ft.b_r, ft.b_c, ft.share, ft.chunks), (m, m, 1, 1), "D{d} S{s}");
+                assert_eq!(ft.t_r, s.div_ceil(m));
+                assert_eq!(ft.t_c, s.div_ceil(m));
+            }
+        }
+    }
+
+    #[test]
+    fn flash_tiling_gqa_stacks_and_shrinks() {
+        // GQA stacks the KV group's rows: the stacked footprint must fit,
+        // and the whole group shares one K/V residency when it does.
+        let t = table1_tile();
+        let wl = Workload::new(4096, 128, 32, 1).with_kv_heads(8); // q_per_kv = 4
+        let ft = FlashTiling::resolve(&t, &wl, false);
+        assert_eq!(ft.share, 4);
+        assert_eq!(ft.chunks, 1);
+        assert!(working_set_rows_bytes(ft.share * ft.b_r, ft.b_c, 128) <= t.l1_bytes());
+        // Stacking 4 heads costs block size vs MHA.
+        assert!(ft.b_c <= flash_block_size(&t, 128, false));
+    }
+
+    #[test]
+    fn flash_tiling_decode_clamps_rows_and_fattens_kv() {
+        let t = table1_tile();
+        let wl = Workload::new(4096, 128, 32, 1).decode();
+        let ft = FlashTiling::resolve(&t, &wl, false);
+        assert_eq!(ft.b_r, 1);
+        assert_eq!(ft.t_r, 1);
+        // With one resident query row the K/V block outgrows the square
+        // prefill block — decode streams the cache in fat chunks.
+        assert!(ft.b_c > flash_block_size(&t, 128, false));
+        assert!(working_set_rows_bytes(ft.share, ft.b_c, 128) <= t.l1_bytes());
+    }
+
+    #[test]
     fn flat_slice_caps_by_sequence() {
         let t = table1_tile();
         // S=512 on a 32-wide group: slice = 512/32 = 16 (paper Fig. 4).
@@ -139,24 +361,137 @@ mod tests {
     #[test]
     fn tiling_resolve_table1() {
         let a = table1();
-        let t = FlatTiling::resolve(&a, 128, 4096, 32, false);
+        let t = FlatTiling::resolve(&a, &Workload::new(4096, 128, 32, 2), 32, false);
         assert_eq!(t.slice, 128);
         assert_eq!(t.block, 4096);
         assert_eq!(t.t_r, 1);
         assert_eq!(t.t_c, 1);
         assert_eq!(t.num_groups, 1);
+        assert_eq!((t.share, t.chunks), (1, 1));
 
-        let t8 = FlatTiling::resolve(&a, 128, 4096, 8, false);
+        let t8 = FlatTiling::resolve(&a, &Workload::new(4096, 128, 32, 2), 8, false);
         assert_eq!(t8.num_groups, 16);
         assert_eq!(t8.block, t8.slice * 8);
         assert!(t8.t_r >= 1);
     }
 
     #[test]
+    fn flat_tiling_mha_matches_slice_fn() {
+        let a = table1();
+        for (d, s, g, asyn) in [(128u64, 4096u64, 8usize, false), (64, 1024, 16, true)] {
+            let wl = Workload::new(s, d, 32, 1);
+            let t = FlatTiling::resolve(&a, &wl, g, asyn);
+            assert_eq!(t.slice, flat_slice_size(&a.tile, d, s, g as u64, asyn));
+        }
+    }
+
+    #[test]
+    fn flat_tiling_decode_single_row_block() {
+        let a = table1();
+        let wl = Workload::new(4096, 128, 32, 1).with_kv_heads(8).decode();
+        let t = FlatTiling::resolve(&a, &wl, 8, false);
+        assert_eq!(t.t_r, 1, "decode has exactly one row block");
+        assert!(t.t_c >= 1);
+        assert_eq!(t.share, 4);
+    }
+
+    #[test]
     #[should_panic(expected = "must divide")]
     fn group_must_divide_mesh() {
         let a = table1();
-        FlatTiling::resolve(&a, 128, 4096, 12, false);
+        FlatTiling::resolve(&a, &Workload::new(4096, 128, 32, 2), 12, false);
+    }
+
+    #[test]
+    fn degenerate_serving_shapes_resolve_safely() {
+        // PR-2 crash-class lesson applied proactively: S=1, S < group,
+        // d > S, extreme MQA shares — sizing must not panic, results must
+        // respect the invariants, and whenever a minimal block fits at
+        // all the resolved block must fit the tile scratchpad.
+        let arches = [table1(), table2(8)];
+        forall_cases(60, 0x5E41, |rng| {
+            let arch = &arches[rng.gen_range(arches.len() as u64) as usize];
+            let tile = &arch.tile;
+            let budget = tile.l1_bytes();
+            let seq = *rng.choose(&[1u64, 2, 3, 5, 7, 16, 31, 63, 100]);
+            let d = *rng.choose(&[1u64, 8, 64, 128, 256, 512]);
+            let kv_heads = 1 + rng.gen_range(3);
+            let q_per_kv = *rng.choose(&[1u64, 2, 4, 32, 128]);
+            let heads = kv_heads * q_per_kv;
+            let phase = if rng.gen_range(2) == 0 { Phase::Prefill } else { Phase::Decode };
+            let asyn = rng.gen_range(2) == 0;
+            let wl = Workload::new(seq, d, heads, 1).with_kv_heads(kv_heads).with_phase(phase);
+            let fp = if asyn { working_set_rows_async_bytes } else { working_set_rows_bytes };
+
+            let ft = FlashTiling::resolve(tile, &wl, asyn);
+            check(
+                ft.b_r >= 1
+                    && ft.b_r <= wl.q_len().max(1)
+                    && ft.b_c >= 32
+                    && ft.share >= 1
+                    && ft.share <= q_per_kv
+                    && ft.chunks == q_per_kv.div_ceil(ft.share)
+                    && ft.t_r == wl.q_len().div_ceil(ft.b_r)
+                    && ft.t_c == wl.kv_len().div_ceil(ft.b_c),
+                format!("flash invariants: {ft:?} for {wl:?}"),
+            )?;
+            if fp(1, 32, d) <= budget {
+                check(
+                    fp(ft.share * ft.b_r, ft.b_c, d) <= budget,
+                    format!(
+                        "flash block overflows L1: {ft:?} for {wl:?} ({} > {budget})",
+                        fp(ft.share * ft.b_r, ft.b_c, d)
+                    ),
+                )?;
+            }
+
+            let group = *rng.choose(&[2usize, 4, 8]);
+            let t = FlatTiling::resolve(arch, &wl, group, asyn);
+            check(
+                t.slice >= 1
+                    && t.block == t.slice * t.group
+                    && t.t_r >= 1
+                    && t.t_c >= 1
+                    && t.share >= 1
+                    && t.share <= q_per_kv
+                    && t.t_r == wl.q_len().div_ceil(t.block)
+                    && t.t_c == wl.kv_len().div_ceil(t.block),
+                format!("flat invariants: {t:?} for {wl:?} g{group}"),
+            )?;
+            // The builder's per-tile rows are share·min(slice, ⌈q_len/g⌉);
+            // the share descent (at the minimal-slice row extent) plus the
+            // square cap search guarantee that fits whenever anything does.
+            let rows_min = wl.q_len().div_ceil(t.group).clamp(1, 16);
+            let rows_actual = t.share * wl.q_len().div_ceil(t.group).min(t.slice).max(1);
+            if fp(t.share * rows_min, 16, d) <= budget {
+                check(
+                    fp(rows_actual, t.slice, d) <= budget,
+                    format!("flat slice overflows L1: {t:?} for {wl:?}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn causal_mask_from_matches_square_diagonal() {
+        // Square blocks: the first masked block is the diagonal block i.
+        for (m, s) in [(192u64, 1024u64), (128, 4096), (64, 512)] {
+            let t_c = s.div_ceil(m);
+            for i in 0..s.div_ceil(m) {
+                let m_r = (s - i * m).min(m);
+                let t_c_eff = (i * m + m_r).div_ceil(m);
+                assert_eq!(t_c_eff, (i + 1).min(t_c));
+                if m_r >= 2 {
+                    assert_eq!(causal_mask_from(i * m, m, s, t_c_eff), i, "m{m} s{s} i{i}");
+                }
+            }
+        }
+        // Decode: the row is the cache's last position — nothing to mask.
+        assert_eq!(causal_mask_from(4095, 256, 4096, 16), 16);
+        // Rectangular: rows [0, 64) vs 16-wide K/V blocks — blocks 0..4
+        // all straddle the diagonal.
+        assert_eq!(causal_mask_from(0, 16, 4096, 4), 0);
     }
 
     #[test]
@@ -174,7 +509,7 @@ mod tests {
         let t = table1_tile();
         let m_fa3 = flash_block_size(&t, 128, true) as f64;
         let a = table1();
-        let flat = FlatTiling::resolve(&a, 128, 4096, 32, true);
+        let flat = FlatTiling::resolve(&a, &Workload::new(4096, 128, 32, 2), 32, true);
         let ratio = (1.0 + 4096.0 / m_fa3) / (1.0 + 4096.0 / flat.block as f64);
         assert!((ratio - 16.5).abs() < 0.6, "ratio {ratio:.2}");
     }

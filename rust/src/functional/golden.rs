@@ -99,6 +99,45 @@ pub fn block_step_native(q: &Tensor, kt: &Tensor, v: &Tensor, st: &SoftmaxState)
     SoftmaxState { m: m_new, l: l_new, o: o_new }
 }
 
+/// Grouped-query attention golden: `q` holds one `[S, D]` tensor per
+/// *query* head, `k`/`v` one `[S, D]` tensor per *KV* head
+/// (`q.len() % k.len() == 0`); query head `h` attends K/V head
+/// `h / (H / H_kv)`. Returns one output per query head. With
+/// `k.len() == q.len()` this is plain per-head MHA.
+pub fn attention_gqa_golden(q: &[Tensor], k: &[Tensor], v: &[Tensor]) -> Vec<Tensor> {
+    assert!(!q.is_empty() && !k.is_empty(), "at least one head required");
+    assert_eq!(k.len(), v.len(), "K and V head counts must match");
+    assert!(
+        q.len() % k.len() == 0,
+        "query heads ({}) must be a multiple of KV heads ({})",
+        q.len(),
+        k.len()
+    );
+    let q_per_kv = q.len() / k.len();
+    q.iter()
+        .enumerate()
+        .map(|(h, qh)| attention_golden(qh, &k[h / q_per_kv], &v[h / q_per_kv]))
+        .collect()
+}
+
+/// Decode golden: `q` is the `[rows, D]` block of *new* query rows (rows
+/// is 1 for plain decode, or a stacked GQA group), attending over the
+/// full `[S, D]` cache, streamed through the online-softmax block step in
+/// `block`-sized chunks — the decode dataflow's compute schedule. Equals
+/// the corresponding trailing rows of prefill attention.
+pub fn attention_decode_golden(q: &Tensor, k: &Tensor, v: &Tensor, block: usize) -> Tensor {
+    assert!(block > 0, "block must be non-zero");
+    let mut st = SoftmaxState::init(q.rows(), q.cols());
+    let s = k.rows();
+    let mut j = 0;
+    while j < s {
+        let bc = block.min(s - j);
+        st = block_step_native(q, &k.row_block(j, bc).transpose(), &v.row_block(j, bc), &st);
+        j += bc;
+    }
+    st.normalize()
+}
+
 /// Merge two online-softmax states covering disjoint K/V ranges of the same
 /// row block — exactly what FlatAttention's row-wise reductions compute
 /// when combining per-tile partials.
@@ -184,6 +223,67 @@ mod tests {
         let a = seq.normalize();
         let b = merged.normalize();
         assert!(a.max_abs_diff(&b) < 1e-5);
+    }
+
+    #[test]
+    fn gqa_equals_per_head_with_repeated_kv() {
+        // Grouped K/V must equal dense attention with each KV head
+        // repeated heads/kv_heads times — the GQA oracle the dataflow
+        // builders' sharing argument rests on.
+        let mut rng = Rng::new(0x60A);
+        let (s, d, heads, kv_heads) = (32usize, 8usize, 8usize, 2usize);
+        let q: Vec<Tensor> = (0..heads).map(|_| Tensor::randn(s, d, &mut rng)).collect();
+        let k: Vec<Tensor> = (0..kv_heads).map(|_| Tensor::randn(s, d, &mut rng)).collect();
+        let v: Vec<Tensor> = (0..kv_heads).map(|_| Tensor::randn(s, d, &mut rng)).collect();
+        let grouped = attention_gqa_golden(&q, &k, &v);
+        // Independently repeat K/V to dense MHA and compare per head.
+        let q_per_kv = heads / kv_heads;
+        let k_rep: Vec<Tensor> = (0..heads).map(|h| k[h / q_per_kv].clone()).collect();
+        let v_rep: Vec<Tensor> = (0..heads).map(|h| v[h / q_per_kv].clone()).collect();
+        let dense = attention_gqa_golden(&q, &k_rep, &v_rep);
+        assert_eq!(grouped.len(), heads);
+        for (h, (g, m)) in grouped.iter().zip(&dense).enumerate() {
+            assert!(g.max_abs_diff(m) < 1e-6, "head {h}: diff {}", g.max_abs_diff(m));
+        }
+    }
+
+    #[test]
+    fn decode_equals_last_prefill_row() {
+        // A single decode row against the full cache must reproduce the
+        // last row of prefill attention (streamed through the online
+        // block step, including a partial trailing K/V chunk).
+        let mut rng = Rng::new(0xDEC0);
+        let (s, d) = (56usize, 16usize); // 56 % 16 != 0: partial last block
+        let q = Tensor::randn(s, d, &mut rng);
+        let k = Tensor::randn(s, d, &mut rng);
+        let v = Tensor::randn(s, d, &mut rng);
+        let prefill = attention_golden(&q, &k, &v);
+        let decode = attention_decode_golden(&q.row_block(s - 1, 1), &k, &v, 16);
+        assert_eq!(decode.rows(), 1);
+        for c in 0..d {
+            let diff = (decode.at(0, c) - prefill.at(s - 1, c)).abs();
+            assert!(diff < 1e-4, "col {c}: diff {diff}");
+        }
+    }
+
+    #[test]
+    fn stacked_gqa_decode_rows_are_independent() {
+        // Stacking a KV group's decode rows into one block (the builders'
+        // GQA trick) must not couple them: each stacked row equals its own
+        // single-row decode.
+        let mut rng = Rng::new(0x57AC);
+        let (s, d, rows) = (48usize, 8usize, 4usize);
+        let q = Tensor::randn(rows, d, &mut rng);
+        let k = Tensor::randn(s, d, &mut rng);
+        let v = Tensor::randn(s, d, &mut rng);
+        let stacked = attention_decode_golden(&q, &k, &v, 16);
+        for r in 0..rows {
+            let solo = attention_decode_golden(&q.row_block(r, 1), &k, &v, 16);
+            for c in 0..d {
+                let diff = (stacked.at(r, c) - solo.at(0, c)).abs();
+                assert!(diff < 1e-5, "row {r} col {c}: diff {diff}");
+            }
+        }
     }
 
     #[test]

@@ -17,5 +17,8 @@ pub mod group;
 pub use compute::{NativeCompute, TileCompute};
 #[cfg(feature = "pjrt")]
 pub use compute::RuntimeCompute;
-pub use golden::{attention_golden, block_step_native, softmax_merge};
+pub use golden::{
+    attention_decode_golden, attention_golden, attention_gqa_golden, block_step_native,
+    softmax_merge,
+};
 pub use group::{run_flat_group_functional, run_flat_group_literal, FlatGroupResult};

@@ -15,7 +15,7 @@ use std::path::PathBuf;
 
 use flatattention::arch::{presets, ArchConfig};
 use flatattention::coordinator::{best_group, run_one, valid_groups, ExperimentSpec, ResultStore};
-use flatattention::dataflow::{Dataflow, FlatTiling, Workload};
+use flatattention::dataflow::{Dataflow, FlatTiling, Phase, Workload};
 use flatattention::functional::{attention_golden, run_flat_group_functional, NativeCompute};
 #[cfg(feature = "pjrt")]
 use flatattention::functional::RuntimeCompute;
@@ -28,7 +28,7 @@ use flatattention::util::{pool, Rng, Tensor};
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match parse(&raw, &["quick", "help", "pjrt-only", "causal"]) {
+    let args = match parse(&raw, &["quick", "help", "pjrt-only", "causal", "decode"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -61,7 +61,7 @@ fn print_usage() {
         "flatattention — FlatAttention dataflow + fabric collectives co-optimization (reproduction)
 
 USAGE:
-  flatattention report <fig3|fig4|fig5a|fig5b|fig5c|table1|table2|section2|area|headline|ablations|all>
+  flatattention report <fig3|fig4|fig5a|fig5b|fig5c|table1|table2|section2|area|headline|ablations|serving|all>
                       [--quick] [--threads N] [--out results.json]
   flatattention run    --dataflow <fa2|fa3|flat|flatcoll|flatasyn> [--seq 4096] [--d 128]
                       [--heads 32] [--batch 2] [--group 32] [--arch table1]
@@ -71,7 +71,9 @@ USAGE:
   flatattention info
 
 Architectures: --arch <table1|swcoll|table2-32|table2-16|table2-8> or --arch-file configs/foo.toml
-Workloads: --seq S --d D --heads H --batch B [--causal]"
+Workloads: --seq S --d D --heads H --batch B [--causal] [--kv-heads K] [--decode]
+  --kv-heads K   GQA/MQA: K K/V heads shared by H query heads (K divides H)
+  --decode       single-token decode against an S-long KV cache (else prefill)"
     );
 }
 
@@ -98,13 +100,28 @@ fn arch_from(args: &Args) -> Result<ArchConfig, String> {
 }
 
 fn workload_from(args: &Args) -> Result<Workload, String> {
-    Ok(Workload::new(
-        args.get_u64("seq", 4096)?,
-        args.get_u64("d", 128)?,
-        args.get_u64("heads", 32)?,
-        args.get_u64("batch", 2)?,
-    )
-    .with_causal(args.flag("causal")))
+    let seq = args.get_u64("seq", 4096)?;
+    let d = args.get_u64("d", 128)?;
+    let heads = args.get_u64("heads", 32)?;
+    let batch = args.get_u64("batch", 2)?;
+    let kv_heads = args.get_u64("kv-heads", heads)?;
+    if seq == 0 || d == 0 || heads == 0 || batch == 0 {
+        return Err(format!(
+            "workload dims must be non-zero (--seq {seq} --d {d} --heads {heads} --batch {batch})"
+        ));
+    }
+    if kv_heads == 0 || kv_heads > heads || heads % kv_heads != 0 {
+        return Err(format!(
+            "--kv-heads {kv_heads} must divide --heads {heads} (GQA groups must be uniform)"
+        ));
+    }
+    let mut wl = Workload::new(seq, d, heads, batch)
+        .with_causal(args.flag("causal"))
+        .with_kv_heads(kv_heads);
+    if args.flag("decode") {
+        wl = wl.with_phase(Phase::Decode);
+    }
+    Ok(wl)
 }
 
 fn cmd_report(args: &Args) -> i32 {
@@ -145,10 +162,13 @@ fn cmd_report(args: &Args) -> i32 {
     if all || which == "ablations" {
         println!("{}", report::ablations::render(&opts, Some(&mut store)));
     }
+    if all || which == "serving" {
+        println!("{}", report::serving::render(&opts, Some(&mut store)));
+    }
     if !matches!(
         which,
         "all" | "table1" | "table2" | "section2" | "area" | "fig3" | "fig4" | "fig5a" | "fig5b"
-            | "fig5c" | "headline" | "ablations"
+            | "fig5c" | "headline" | "ablations" | "serving"
     ) {
         eprintln!("unknown report '{which}'");
         return 1;
@@ -183,16 +203,11 @@ fn cmd_run(args: &Args) -> i32 {
     let r = run_one(&spec);
     println!("{}", spec.id());
     if dataflow.is_flat() {
-        let t = FlatTiling::resolve(
-            &arch,
-            workload.head_dim,
-            workload.seq,
-            group,
-            dataflow == Dataflow::FlatAsyn,
-        );
+        let t = FlatTiling::resolve(&arch, &workload, group, dataflow == Dataflow::FlatAsyn);
         println!(
-            "tiling: slice {}x{} per tile, block {}, T_r {}, T_c {}, {} group(s)",
-            t.slice, t.slice, t.block, t.t_r, t.t_c, t.num_groups
+            "tiling: slice {}x{} per tile, block {}, T_r {}, T_c {}, {} group(s), \
+             {} head(s)/stack x {} chunk(s)",
+            t.slice, t.slice, t.block, t.t_r, t.t_c, t.num_groups, t.share, t.chunks
         );
     }
     println!(

@@ -62,7 +62,7 @@ pub fn render(opts: &ReportOpts, store: Option<&mut ResultStore>) -> String {
         "util", "RedMulE_active",
     ]);
     for (g, r) in &results {
-        let tiling = FlatTiling::resolve(&arch, r.workload.head_dim, r.workload.seq, *g, true);
+        let tiling = FlatTiling::resolve(&arch, &r.workload, *g, true);
         let total = r.makespan.max(1) as f64;
         let coll = (r.breakdown.multicast + r.breakdown.max_reduce + r.breakdown.sum_reduce) as f64;
         t.row(vec![

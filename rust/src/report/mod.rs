@@ -14,6 +14,7 @@ pub mod fig5b;
 pub mod fig5c;
 pub mod headline;
 pub mod section2;
+pub mod serving;
 pub mod tables;
 
 pub use ascii::Table;

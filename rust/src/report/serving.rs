@@ -1,0 +1,219 @@
+//! Serving sweep (our extension, beyond the paper's prefill-MHA grid):
+//! utilization and HBM traffic across batch × sequence × kv_heads for
+//! every dataflow, in both phases.
+//!
+//! * **Prefill rows** are serving-chunk prefills (small-to-long S).
+//! * **Decode rows** are single-token generation against an S-long cache.
+//! * `kv_heads` sweeps MHA (32) → GQA (8) → MQA (1) at 32 query heads;
+//!   the `HBMvsMHA` column shows each point's traffic relative to the
+//!   dense-MHA point of the same (dataflow, phase, B, S) — the K/V share
+//!   scales by `kv_heads/heads` (exactly, in the decode rows).
+//!
+//! The FlatAttention variants run at a fixed 8×8 group: serving traffic
+//! is dominated by small effective row counts, where the full-mesh group
+//! of the prefill headline over-flattens (§V-B applied to decode).
+
+use crate::arch::presets;
+use crate::arch::ArchConfig;
+use crate::coordinator::{run_all, ExperimentResult, ExperimentSpec, ResultStore};
+use crate::dataflow::{Dataflow, Phase, Workload, ALL_DATAFLOWS};
+use crate::report::{pct, ReportOpts, Table};
+
+/// FlatAttention group edge used by the serving sweep.
+pub const GROUP: usize = 8;
+
+/// The serving workload grid at `heads` query heads. The kv_heads axis is
+/// MHA → GQA (heads/4) → MQA, keeping only values that divide `heads`
+/// (GQA groups must be uniform) and dropping duplicates, so any head
+/// count yields a valid, duplicate-free grid.
+pub fn workloads_for(heads: u64, seqs: &[u64], batches: &[u64], quick: bool) -> Vec<Workload> {
+    let mut kv_grid: Vec<u64> = if quick { vec![heads, 1] } else { vec![heads, heads / 4, 1] };
+    kv_grid.retain(|&kv| kv >= 1 && heads % kv == 0);
+    kv_grid.dedup();
+    let mut out = Vec::new();
+    for &phase in &[Phase::Prefill, Phase::Decode] {
+        for &b in batches {
+            for &s in seqs {
+                for &kv in &kv_grid {
+                    out.push(Workload::new(s, 128, heads, b).with_kv_heads(kv).with_phase(phase));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The Table-I serving grid.
+pub fn workloads(quick: bool) -> Vec<Workload> {
+    if quick {
+        workloads_for(32, &[512, 4096], &[4], true)
+    } else {
+        workloads_for(32, &[512, 2048, 4096], &[1, 8], false)
+    }
+}
+
+/// Run a serving grid on an architecture (every dataflow per workload;
+/// `group` applies to the FlatAttention variants).
+pub fn run_on(
+    arch: &ArchConfig,
+    group: usize,
+    wls: &[Workload],
+    opts: &ReportOpts,
+) -> Vec<ExperimentResult> {
+    let specs: Vec<ExperimentSpec> = wls
+        .iter()
+        .flat_map(|wl| ALL_DATAFLOWS.into_iter().map(move |df| (*wl, df)))
+        .map(|(workload, dataflow)| ExperimentSpec {
+            arch: arch.clone(),
+            workload,
+            dataflow,
+            group,
+        })
+        .collect();
+    run_all(&specs, opts.threads)
+}
+
+/// Run the Table-I serving sweep.
+pub fn run(opts: &ReportOpts) -> Vec<ExperimentResult> {
+    run_on(&presets::table1(), GROUP, &workloads(opts.quick), opts)
+}
+
+/// Traffic of each point relative to the dense-MHA point with the same
+/// (dataflow, phase, batch, seq); 1.0 where no MHA partner exists.
+fn mha_relative_traffic(results: &[ExperimentResult]) -> Vec<f64> {
+    results
+        .iter()
+        .map(|r| {
+            let mha = results.iter().find(|m| {
+                m.dataflow == r.dataflow
+                    && m.workload.phase == r.workload.phase
+                    && m.workload.batch == r.workload.batch
+                    && m.workload.seq == r.workload.seq
+                    && m.workload.head_dim == r.workload.head_dim
+                    && m.workload.kv_heads == m.workload.heads
+            });
+            match mha {
+                Some(m) if m.hbm_bytes > 0 => r.hbm_bytes as f64 / m.hbm_bytes as f64,
+                _ => 1.0,
+            }
+        })
+        .collect()
+}
+
+/// Render the serving sweep; optionally record rows in `store`.
+pub fn render(opts: &ReportOpts, store: Option<&mut ResultStore>) -> String {
+    let results = run(opts);
+    render_results("Table I arch, G=8x8, H=32, D=128", &results, store)
+}
+
+/// Render a serving grid's results (shared by the CLI figure and the
+/// tiny-mesh smoke path).
+pub fn render_results(
+    setup: &str,
+    results: &[ExperimentResult],
+    store: Option<&mut ResultStore>,
+) -> String {
+    if let Some(store) = store {
+        store.add_results("serving", results);
+    }
+    if results.is_empty() {
+        return String::from("Serving sweep — no results\n");
+    }
+    let rel = mha_relative_traffic(results);
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Serving sweep — GQA/MQA and decode across batch x S x kv_heads ({setup})\n\n"
+    ));
+    let mut t = Table::new(&[
+        "phase", "B", "S", "kv", "dataflow", "runtime_ms", "util", "HBM_BW", "HBM_GB", "HBMvsMHA",
+    ]);
+    for (r, rel) in results.iter().zip(&rel) {
+        t.row(vec![
+            r.workload.phase.label().to_string(),
+            r.workload.batch.to_string(),
+            r.workload.seq.to_string(),
+            r.workload.kv_heads.to_string(),
+            r.dataflow.label().to_string(),
+            format!("{:.4}", r.runtime_ms),
+            pct(r.utilization),
+            pct(r.hbm_bw_util),
+            format!("{:.3}", r.hbm_bytes as f64 / 1e9),
+            format!("{:.2}", rel),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    // Headline derived from the sweep: decode MQA traffic saving.
+    let decode_pair = |kv: u64| {
+        results.iter().zip(&rel).find(|(r, _)| {
+            r.workload.is_decode() && r.workload.kv_heads == kv && r.dataflow == Dataflow::Flash2
+        })
+    };
+    if let (Some((mha, _)), Some((mqa, mqa_rel))) =
+        (decode_pair(results[0].workload.heads), decode_pair(1))
+    {
+        out.push_str(&format!(
+            "\nDecode S={} (FA-2): MQA moves {:.0}% of MHA traffic ({:.3} vs {:.3} GB)\n",
+            mha.workload.seq,
+            mqa_rel * 100.0,
+            mqa.hbm_bytes as f64 / 1e9,
+            mha.hbm_bytes as f64 / 1e9,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The CI smoke grid: tiny mesh, tiny shapes — exercises the full
+    /// serving sweep path (all dataflows × phases × kv_heads through the
+    /// coordinator and renderer) in well under a second.
+    fn smoke_results() -> (Vec<ExperimentResult>, Vec<f64>) {
+        let arch = presets::table2(8);
+        let wls = workloads_for(4, &[128, 256], &[1], true);
+        let opts = ReportOpts { quick: true, ..Default::default() };
+        let results = run_on(&arch, 4, &wls, &opts);
+        let rel = mha_relative_traffic(&results);
+        (results, rel)
+    }
+
+    #[test]
+    fn serving_sweep_smoke_tiny_mesh() {
+        let (results, _) = smoke_results();
+        // phases(2) × B(1) × S(2) × kv{4,1}(2) × dataflows(5)
+        assert_eq!(results.len(), 40);
+        assert!(results.iter().all(|r| r.makespan > 0));
+        let text = render_results("smoke", &results, None);
+        for df in ALL_DATAFLOWS {
+            assert!(text.contains(df.label()), "missing {}", df.label());
+        }
+        assert!(text.contains("decode"));
+        assert!(text.contains("prefill"));
+    }
+
+    #[test]
+    fn decode_mqa_cuts_traffic_on_every_dataflow() {
+        let (results, rel) = smoke_results();
+        for df in ALL_DATAFLOWS {
+            let (_, r) = results
+                .iter()
+                .zip(&rel)
+                .find(|(r, _)| {
+                    r.dataflow == df
+                        && r.workload.is_decode()
+                        && r.workload.kv_heads == 1
+                        && r.workload.seq == 256
+                })
+                .expect("mqa decode point");
+            // MQA shares one K/V head across 4 query heads: the K/V-
+            // dominated decode traffic lands near 1/4 of MHA.
+            assert!(
+                (0.2..0.7).contains(r),
+                "{df:?}: MQA/MHA decode traffic ratio {r:.3}"
+            );
+        }
+    }
+}

@@ -91,6 +91,57 @@ fn memoized_reports_are_bit_identical() {
 }
 
 #[test]
+fn memoized_serving_results_are_bit_identical() {
+    // Acceptance: memoized ≡ uncached bit-identity holds for the serving
+    // shapes too — GQA, MQA and decode points across every dataflow (the
+    // SpecKey must fingerprint kv_heads and phase or a cached MHA result
+    // would be served for a GQA spec).
+    let arch = presets::table2(8);
+    let workloads = [
+        Workload::new(640, 64, 8, 1).with_kv_heads(2),
+        Workload::new(640, 64, 8, 1).with_kv_heads(1),
+        Workload::new(1280, 64, 8, 1).decode(),
+        Workload::new(1280, 64, 8, 1).with_kv_heads(2).decode(),
+    ];
+    let specs: Vec<ExperimentSpec> = workloads
+        .into_iter()
+        .flat_map(|wl| ALL_DATAFLOWS.into_iter().map(move |df| (wl, df)))
+        .map(|(workload, dataflow)| ExperimentSpec {
+            arch: arch.clone(),
+            workload,
+            dataflow,
+            group: 4,
+        })
+        .collect();
+    let uncached = run_all_uncached(&specs, 4);
+    let memoized = run_all(&specs, 4);
+    assert_eq!(uncached, memoized);
+    // A second pass is served from the cache and stays identical.
+    assert_eq!(run_all(&specs, 4), memoized);
+    // Distinct serving points must not alias: every id is unique.
+    let mut ids: Vec<&str> = memoized.iter().map(|r| r.id.as_str()).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), specs.len(), "serving spec ids must be distinct");
+}
+
+#[test]
+fn serving_report_renders_with_store() {
+    use flatattention::report::serving;
+    let arch = presets::table2(8);
+    let wls = serving::workloads_for(4, &[128], &[1], true);
+    let opts = quick_opts();
+    let results = serving::run_on(&arch, 4, &wls, &opts);
+    let mut store = ResultStore::new();
+    let text = serving::render_results("tiny", &results, Some(&mut store));
+    assert!(text.contains("decode") && text.contains("HBMvsMHA"));
+    let rows = store.section("serving").unwrap();
+    assert_eq!(rows.len(), results.len());
+    assert!(rows[0].get("kv_heads").is_some());
+    assert!(rows[0].get("phase").is_some());
+}
+
+#[test]
 fn fig5a_heatmap_renders() {
     let s = fig5a::render(&quick_opts(), None);
     assert!(s.contains("BestArch"));

@@ -54,7 +54,7 @@ fn flat_traffic_matches_io_formula() {
         let d = *rng.choose(&[64u64, 128]);
         let g = *rng.choose(&[8usize, 16, 32]);
         let wl = Workload::new(s, d, 8, 1);
-        let tiling = FlatTiling::resolve(&arch, d, s, g, false);
+        let tiling = FlatTiling::resolve(&arch, &wl, g, false);
         let stats = run(&arch, &wl, Dataflow::FlatColl, g);
         let model = flat_io_bytes(&wl, tiling.block) as f64;
         let ratio = stats.hbm_bytes as f64 / model;
@@ -179,6 +179,113 @@ fn summa_executes_and_validates() {
     let stats = execute(&p, 0);
     assert!(stats.makespan > 0);
     assert!(stats.compute_utilization(arch.peak_flops_per_cycle()) > 0.3);
+}
+
+#[test]
+fn every_dataflow_runs_gqa_mqa_and_decode() {
+    // Acceptance: GQA (kv_heads < heads), MQA (kv_heads == 1) and decode
+    // (single query row) run end-to-end on every dataflow, with coherent
+    // accounting (traffic ≥ compulsory, useful-FLOP bookkeeping, full
+    // breakdown partition).
+    let arch = presets::table1();
+    let serving = [
+        Workload::new(1024, 128, 8, 1).with_kv_heads(2), // GQA prefill
+        Workload::new(1024, 64, 8, 1).with_kv_heads(1),  // MQA prefill
+        Workload::new(2048, 128, 8, 1).decode(),         // MHA decode
+        Workload::new(2048, 64, 8, 2).with_kv_heads(2).decode(), // GQA decode
+        Workload::new(512, 64, 8, 1).with_kv_heads(1).decode(), // MQA decode
+        Workload::new(1024, 64, 8, 1).with_kv_heads(4).with_causal(true), // causal GQA
+    ];
+    for df in ALL_DATAFLOWS {
+        for wl in serving {
+            let stats = run(&arch, &wl, df, 8);
+            assert!(stats.makespan > 0, "{df:?} {wl:?}");
+            assert!(
+                stats.hbm_bytes >= wl.compulsory_bytes(),
+                "{df:?} {wl:?}: traffic {} below compulsory {}",
+                stats.hbm_bytes,
+                wl.compulsory_bytes()
+            );
+            assert_eq!(stats.flops, wl.matmul_flops(), "{df:?} {wl:?}");
+            assert_eq!(stats.breakdown.total(), stats.makespan, "{df:?} {wl:?}");
+        }
+    }
+}
+
+#[test]
+fn gqa_never_moves_more_bytes_than_mha() {
+    // Sharing K/V across a head group can only reduce HBM traffic, on
+    // every dataflow and in both phases.
+    let arch = presets::table1();
+    for df in ALL_DATAFLOWS {
+        for base in [
+            Workload::new(1024, 128, 8, 1),
+            Workload::new(1024, 128, 8, 1).decode(),
+        ] {
+            let mha = run(&arch, &base, df, 8);
+            for kv in [4u64, 2, 1] {
+                let gqa = run(&arch, &base.with_kv_heads(kv), df, 8);
+                assert!(
+                    gqa.hbm_bytes <= mha.hbm_bytes,
+                    "{df:?} kv{kv} {:?}: {} > {}",
+                    base.phase,
+                    gqa.hbm_bytes,
+                    mha.hbm_bytes
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_kv_traffic_scales_by_kv_over_heads() {
+    // Acceptance: modeled K/V HBM traffic scales by kv_heads/heads vs MHA
+    // on the same shape. Decode makes this exact for FlashAttention (the
+    // single row block reads the cache exactly once per KV head): total
+    // traffic equals compulsory, so the K/V share is analytic.
+    let arch = presets::table1();
+    let base = Workload::new(4096, 128, 16, 2).decode();
+    let qo = 2 * base.batch * base.heads * base.head_dim * Workload::BYTES_PER_ELEM;
+    let mha = run(&arch, &base, Dataflow::Flash2, 1);
+    assert_eq!(mha.hbm_bytes, base.compulsory_bytes());
+    for kv in [4u64, 1] {
+        let wl = base.with_kv_heads(kv);
+        let st = run(&arch, &wl, Dataflow::Flash2, 1);
+        assert_eq!(st.hbm_bytes, wl.compulsory_bytes(), "kv{kv}");
+        // (traffic - Q/O) scales exactly by kv/heads.
+        assert_eq!(
+            (mha.hbm_bytes - qo) * kv,
+            (st.hbm_bytes - qo) * base.heads,
+            "kv{kv}"
+        );
+    }
+}
+
+#[test]
+fn degenerate_serving_shapes_execute_on_every_dataflow() {
+    // S=1, S < group, d > S, MQA, decode, causal — the crash-prone corner
+    // of the serving space must build valid DAGs and execute (tiny mesh so
+    // the grid stays cheap).
+    let arch = presets::table2(8);
+    for df in ALL_DATAFLOWS {
+        for s in [1u64, 3, 7, 16] {
+            for decode in [false, true] {
+                for kv_heads in [4u64, 1] {
+                    let mut wl = Workload::new(s, 64, 4, 1)
+                        .with_kv_heads(kv_heads)
+                        .with_causal(s % 2 == 1);
+                    if decode {
+                        wl = wl.decode();
+                    }
+                    let p = build_program(&arch, &wl, df, 4);
+                    assert!(p.validate().is_ok(), "{df:?} {wl:?}: invalid DAG");
+                    let stats = run(&arch, &wl, df, 4);
+                    assert!(stats.makespan > 0, "{df:?} {wl:?}");
+                    assert_eq!(stats.breakdown.total(), stats.makespan, "{df:?} {wl:?}");
+                }
+            }
+        }
+    }
 }
 
 #[test]

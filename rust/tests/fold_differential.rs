@@ -7,8 +7,10 @@
 //! makespan, Fig. 3/4 breakdown, HBM traffic, busy totals and executed-op
 //! count — *bit for bit*, and the representative stream's trace records
 //! as well. The randomized sweep covers every dataflow, causal and
-//! non-causal workloads, partial trailing blocks, and a degenerate
-//! single-edge HBM configuration.
+//! non-causal workloads, partial trailing blocks, GQA/MQA head-sharing
+//! (`kv_heads < heads` — K/V loads shared across stacked query-head
+//! streams), the decode phase (S=1 query against a KV cache), and a
+//! degenerate single-edge HBM configuration.
 //!
 //! Tests here toggle the process-global folding/stamping switches, so
 //! they serialize on a local lock (each integration-test binary is its
@@ -19,8 +21,8 @@ use std::sync::Mutex;
 
 use flatattention::arch::{presets, ArchConfig};
 use flatattention::dataflow::{
-    build_program, set_symmetry_folding, set_template_stamping, tracked_tile, Dataflow, Workload,
-    ALL_DATAFLOWS,
+    build_program, set_symmetry_folding, set_template_stamping, tracked_tile, Dataflow, Phase,
+    Workload, ALL_DATAFLOWS,
 };
 use flatattention::sim::{execute, execute_traced, RunStats};
 use flatattention::util::quickcheck::{check, forall_cases};
@@ -56,7 +58,7 @@ fn folded_matches_unfolded_randomized_sweep() {
         presets::with_hbm_channels(presets::table2(8), 2),
         degenerate_channel_arch(),
     ];
-    forall_cases(36, 0xF01D, |rng| {
+    forall_cases(48, 0xF01D, |rng| {
         let arch = &arches[rng.gen_range(arches.len() as u64) as usize];
         let df = *rng.choose(&ALL_DATAFLOWS);
         let group = *rng.choose(&[2usize, 4, 8]);
@@ -65,15 +67,24 @@ fn folded_matches_unfolded_randomized_sweep() {
         // of the sweep.
         let seq = 256 + 128 * rng.gen_range(6);
         let d = *rng.choose(&[64u64, 128]);
-        let heads = 1 + rng.gen_range(6);
+        // Serving axes: GQA head groups (kv_heads ∈ {heads, heads/4 via
+        // q_per_kv=4, 1 via MQA-style kv_heads=1}) and the decode phase.
+        let kv_heads = 1 + rng.gen_range(4);
+        let q_per_kv = *rng.choose(&[1u64, 2, 4]);
+        let heads = kv_heads * q_per_kv;
         let batch = 1 + rng.gen_range(2);
         let causal = rng.gen_range(2) == 0;
-        let wl = Workload::new(seq, d, heads, batch).with_causal(causal);
+        let phase = if rng.gen_range(3) == 0 { Phase::Decode } else { Phase::Prefill };
+        let wl = Workload::new(seq, d, heads, batch)
+            .with_causal(causal)
+            .with_kv_heads(kv_heads)
+            .with_phase(phase);
         let (folded, unfolded) = run_both(arch, &wl, df, group);
         check(
             folded == unfolded,
             format!(
-                "{} {df:?} g{group} S{seq} D{d} H{heads} B{batch} causal={causal}:\n\
+                "{} {df:?} g{group} S{seq} D{d} H{heads} kv{kv_heads} B{batch} \
+                 causal={causal} {phase:?}:\n\
                  folded   {folded:?}\nunfolded {unfolded:?}",
                 arch.name
             ),
@@ -91,6 +102,9 @@ fn folded_matches_unfolded_on_table1_preset() {
         (Dataflow::Flash2, 1, Workload::new(1024, 128, 8, 1)),
         (Dataflow::FlatColl, 8, Workload::new(1024, 128, 32, 1)),
         (Dataflow::Flat, 16, Workload::new(512, 64, 8, 1).with_causal(true)),
+        (Dataflow::Flash2, 1, Workload::new(2048, 128, 32, 1).with_kv_heads(8).decode()),
+        (Dataflow::FlatColl, 8, Workload::new(1024, 128, 32, 1).with_kv_heads(1)),
+        (Dataflow::Flat, 8, Workload::new(4096, 64, 16, 1).with_kv_heads(4).decode()),
     ] {
         let (folded, unfolded) = run_both(&arch, &wl, df, group);
         assert_eq!(folded, unfolded, "{df:?} g{group}");
@@ -182,23 +196,32 @@ fn folded_traces_match_for_representative_tiles() {
 #[test]
 fn folding_and_stamping_compose_exactly() {
     // All four (stamping × folding) builder modes must execute to the
-    // same RunStats.
+    // same RunStats — for prefill MHA, causal GQA, and GQA decode alike.
     let _guard = FOLD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let arch = presets::table2(8);
-    let wl = Workload::new(768, 64, 5, 1).with_causal(true);
-    let df = Dataflow::FlatColl;
-    let tracked = tracked_tile(&arch, df, 4);
-    let mut results: Vec<RunStats> = Vec::new();
-    for (stamp, fold) in [(true, true), (true, false), (false, true), (false, false)] {
-        set_template_stamping(stamp);
-        set_symmetry_folding(fold);
-        let p = build_program(&arch, &wl, df, 4);
-        results.push(execute(&p, tracked));
+    for (wl, df, group) in [
+        (Workload::new(768, 64, 5, 1).with_causal(true), Dataflow::FlatColl, 4usize),
+        (
+            Workload::new(768, 64, 12, 1).with_kv_heads(3).with_causal(true),
+            Dataflow::FlatColl,
+            4,
+        ),
+        (Workload::new(896, 128, 8, 2).with_kv_heads(2).decode(), Dataflow::Flash2, 1),
+        (Workload::new(640, 64, 16, 1).with_kv_heads(1).decode(), Dataflow::Flat, 2),
+    ] {
+        let tracked = tracked_tile(&arch, df, group);
+        let mut results: Vec<RunStats> = Vec::new();
+        for (stamp, fold) in [(true, true), (true, false), (false, true), (false, false)] {
+            set_template_stamping(stamp);
+            set_symmetry_folding(fold);
+            let p = build_program(&arch, &wl, df, group);
+            results.push(execute(&p, tracked));
+        }
+        set_template_stamping(true);
+        set_symmetry_folding(true);
+        assert!(
+            results.windows(2).all(|w| w[0] == w[1]),
+            "modes diverge for {wl:?} {df:?}: {results:#?}"
+        );
     }
-    set_template_stamping(true);
-    set_symmetry_folding(true);
-    assert!(
-        results.windows(2).all(|w| w[0] == w[1]),
-        "modes diverge: {results:#?}"
-    );
 }
