@@ -1,0 +1,87 @@
+//! Bench: serving-scheduler throughput — continuous batching of a mixed
+//! prefill+decode request stream on the Table-I 32×32 mesh, Flash2 vs the
+//! FlatAttention family, plus the continuous-vs-static batching headline
+//! on the skewed-output burst trace (short requests free their slot while
+//! long ones keep decoding — the effect continuous batching exists for).
+//! Writes `BENCH_schedule_sweep.json` at the repo root.
+//!
+//!     cargo bench --bench schedule_sweep
+
+#[path = "harness.rs"]
+mod harness;
+
+use flatattention::arch::presets;
+use flatattention::dataflow::Dataflow;
+use flatattention::scheduler::{simulate, BatchPolicy, RequestTrace, SchedulerConfig};
+
+const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_schedule_sweep.json");
+
+fn main() {
+    let arch = presets::table1();
+    let mut rec = harness::Recorder::new();
+    let kv_heads = 8; // GQA 32/8, the serving default
+
+    // Mixed staggered trace: scheduler wall-clock throughput per dataflow.
+    let trace = RequestTrace::builtin("mixed", kv_heads).expect("builtin trace");
+    harness::section("schedule sweep (Table I arch, slots=4, chunk=512)");
+    let mut tps = Vec::new();
+    for df in [Dataflow::Flash2, Dataflow::FlatColl, Dataflow::FlatAsyn] {
+        let cfg = SchedulerConfig::new(df);
+        let mut last = None;
+        rec.bench(&format!("replay/{}", df.label()), 2, || {
+            let r = simulate(&arch, &trace, &cfg);
+            let t = r.tokens_per_s;
+            last = Some(r);
+            t
+        });
+        let r = last.expect("ran");
+        println!(
+            "  {}: {:.0} tokens/s, TTFT {:.3} ms, TPOT {:.4} ms, occupancy {:.1}%",
+            df.label(),
+            r.tokens_per_s,
+            r.ttft_mean_ms,
+            r.tpot_mean_ms,
+            r.occupancy * 100.0
+        );
+        rec.metric(&format!("tokens_per_s_{}", df.label()), r.tokens_per_s);
+        tps.push((df, r.tokens_per_s));
+    }
+    let fa2 = tps[0].1;
+    let flat = tps[1].1;
+    rec.metric("flat_over_fa2_tokens_per_s", flat / fa2.max(1e-9));
+
+    // Continuous vs static batching on the burst trace.
+    harness::section("continuous vs static batching (burst trace, skewed outputs)");
+    let burst = RequestTrace::builtin("burst", kv_heads).expect("burst trace");
+    let mut speedups = Vec::new();
+    for df in [Dataflow::Flash2, Dataflow::FlatColl] {
+        let cont = simulate(
+            &arch,
+            &burst,
+            &SchedulerConfig { policy: BatchPolicy::Continuous, ..SchedulerConfig::new(df) },
+        );
+        let stat = simulate(
+            &arch,
+            &burst,
+            &SchedulerConfig { policy: BatchPolicy::Static, ..SchedulerConfig::new(df) },
+        );
+        let speedup = cont.tokens_per_s / stat.tokens_per_s.max(1e-9);
+        println!(
+            "  {}: continuous {:.0} vs static {:.0} tokens/s -> {speedup:.2}x",
+            df.label(),
+            cont.tokens_per_s,
+            stat.tokens_per_s
+        );
+        rec.metric(&format!("continuous_over_static_{}", df.label()), speedup);
+        speedups.push(speedup);
+    }
+
+    // Target: continuous batching must beat static batching by >= 1.5x on
+    // the skewed burst (the slot-starvation shape it was designed for).
+    assert!(
+        speedups.iter().all(|&s| s >= 1.5),
+        "continuous/static speedups {speedups:?} below the 1.5x target"
+    );
+
+    rec.write_json(OUT_PATH, "schedule_sweep");
+}

@@ -86,6 +86,8 @@ impl ExperimentResult {
             ("heads", Json::num(self.workload.heads as f64)),
             ("kv_heads", Json::num(self.workload.kv_heads as f64)),
             ("phase", Json::str(self.workload.phase.label())),
+            ("kv_prefix", Json::num(self.workload.kv_prefix as f64)),
+            ("window", Json::num(self.workload.window as f64)),
             ("batch", Json::num(self.workload.batch as f64)),
             ("group", Json::num(self.group as f64)),
             ("makespan_cycles", Json::num(self.makespan as f64)),

@@ -34,7 +34,7 @@ pub struct SpecKey {
     dataflow: Dataflow,
     group: usize,
     folding: bool,
-    nums: [u64; 26],
+    nums: [u64; 28],
 }
 
 /// Fingerprint a spec for memoization.
@@ -61,7 +61,8 @@ pub fn spec_key(spec: &ExperimentSpec) -> SpecKey {
     } = tile;
     let NocConfig { link_bytes_per_cycle, router_latency, inject_latency, hw_collectives } = noc;
     let HbmConfig { channels_west, channels_south, channel_bytes_per_cycle, access_latency } = hbm;
-    let Workload { seq, head_dim, heads, kv_heads, batch, causal, phase } = workload;
+    let Workload { seq, head_dim, heads, kv_heads, batch, causal, phase, kv_prefix, window } =
+        workload;
     SpecKey {
         arch_name: name.clone(),
         dataflow: *dataflow,
@@ -94,6 +95,8 @@ pub fn spec_key(spec: &ExperimentSpec) -> SpecKey {
             (*batch << 1) | *causal as u64,
             *kv_heads,
             matches!(phase, crate::dataflow::Phase::Decode) as u64,
+            *kv_prefix,
+            *window,
         ],
     }
 }
@@ -298,6 +301,21 @@ mod tests {
         };
         assert_ne!(spec_key(&base), spec_key(&dec));
         assert_ne!(spec_key(&gqa), spec_key(&dec));
+
+        // Batch-spec fields (chunked-prefill prefix, sliding window) must
+        // partition the key space too: a scheduler chunk or a windowed
+        // layer must never be served a dense single-shot result.
+        let chunk = ExperimentSpec {
+            workload: base.workload.with_kv_prefix(512),
+            ..base.clone()
+        };
+        assert_ne!(spec_key(&base), spec_key(&chunk));
+        let windowed = ExperimentSpec {
+            workload: base.workload.with_causal(true).with_window(256),
+            ..base.clone()
+        };
+        assert_ne!(spec_key(&causal), spec_key(&windowed));
+        assert_ne!(spec_key(&chunk), spec_key(&windowed));
     }
 
     #[test]

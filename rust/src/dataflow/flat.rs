@@ -23,7 +23,12 @@
 //! group instead of once per query head — the existing collective is the
 //! broadcast that amortizes the shared K/V. Decode blocks hold a single
 //! query row, padded across the group's `G` row slices (see
-//! `crate::dataflow` § Workload model).
+//! `crate::dataflow` § Workload model). Chunked prefill (`kv_prefix`) and
+//! sliding windows ride the same block geometry: windowed streams skip
+//! the group-level K/V blocks below every row's window start and
+//! prefix-mask the straddling block. Composed serving batches
+//! ([`flat_batch_program_in`]) place each K/V slice on the channel
+//! holding its cache page instead of the fixed column band.
 //!
 //! The asynchronous variant (`FlatAsyn`) schedules two heads per group as
 //! two independent op streams sharing the group's engines and buses
@@ -53,20 +58,22 @@
 
 use crate::arch::ArchConfig;
 use crate::engines::{dma_hbm_time, matmul_cycles, SpatzOp};
-use crate::hbm::HbmMap;
+use crate::hbm::{HbmMap, PageMap};
 use crate::noc::{collective_time, CollectiveKind, XferTime};
 use crate::sim::program::NO_TILE;
 use crate::sim::{Component, FoldStats, OpId, Program, ResourceId};
 
 use super::opt_deps;
-use super::tiling::FlatTiling;
-use super::Workload;
+use super::tiling::{window_block_range, FlatTiling};
+use super::{DbEdit, Workload};
 
 /// Per-(block, inner-iteration) costs, shared by the unfolded and folded
 /// emission paths (§Perf: computed once per iteration, not per tile; the
 /// values depend only on the slice shapes, never on the group position).
 struct IterCosts {
     kv_bytes: u64,
+    /// K/V tokens per south-edge slice this iteration (kv_bytes / 2·D·eb).
+    t_c_slice: u64,
     mt_kv: XferTime,
     qk_cycles: u64,
     /// Includes the causal mask when the K/V block straddles the diagonal.
@@ -101,6 +108,7 @@ fn iter_costs(
     let stat_bytes = rows * Workload::BYTES_PER_ELEM;
     IterCosts {
         kv_bytes,
+        t_c_slice,
         mt_kv: collective_time(&arch.noc, kv_bytes, n_dest, CollectiveKind::Multicast),
         qk_cycles: matmul_cycles(&arch.tile, rows, d, t_c_slice),
         sm1_cycles: mask_cycles
@@ -155,12 +163,37 @@ pub fn flat_program_ext(
 /// Arena-aware builder: constructs into `prog` (typically taken from a
 /// [`crate::sim::ProgramArena`]) and seals the result.
 pub(crate) fn flat_program_ext_in(
+    prog: Program,
+    arch: &ArchConfig,
+    wl: &Workload,
+    group: usize,
+    asynchronous: bool,
+    double_buffer: bool,
+) -> Program {
+    flat_build(prog, arch, wl, group, asynchronous, double_buffer, None)
+}
+
+/// Build the K/V double-buffering ablation pair `(with_db, without_db)`
+/// in one builder pass (see [`super::double_buffer_programs`]).
+pub(crate) fn flat_program_db_pair(
+    arch: &ArchConfig,
+    wl: &Workload,
+    group: usize,
+) -> (Program, Program) {
+    let mut edits: Vec<DbEdit> = Vec::new();
+    let db = flat_build(Program::new(), arch, wl, group, false, true, Some(&mut edits));
+    let nodb = super::derive_double_buffer_variant(&db, &edits, false);
+    (db, nodb)
+}
+
+fn flat_build(
     mut prog: Program,
     arch: &ArchConfig,
     wl: &Workload,
     group: usize,
     asynchronous: bool,
     double_buffer: bool,
+    mut edits: Option<&mut Vec<DbEdit>>,
 ) -> Program {
     let tiling = FlatTiling::resolve(arch, wl, group, asynchronous);
     let hbm_map = HbmMap::new(arch);
@@ -183,28 +216,18 @@ pub(crate) fn flat_program_ext_in(
         })
         .collect();
 
-    // Deal blocks (batch, kv_head, share-chunk, row-block) round-robin
-    // over groups; a block stacks `share_c` query heads of one KV group
-    // (dense MHA degenerates to the historical (b, h, i) enumeration).
-    let q_per_kv = wl.q_per_kv();
-    let mut group_blocks: Vec<Vec<(u64, u64)>> = vec![Vec::new(); groups.len()];
-    let mut idx = 0usize;
-    for _b in 0..wl.batch {
-        for _kvh in 0..wl.kv_heads {
-            for c in 0..tiling.chunks {
-                let share_c = tiling.share.min(q_per_kv - c * tiling.share);
-                for i in 0..tiling.t_r {
-                    group_blocks[idx % groups.len()].push((share_c, i));
-                    idx += 1;
-                }
-            }
-        }
-    }
+    // Deal blocks round-robin over groups; a block stacks `share_c` query
+    // heads of one KV group (dense MHA degenerates to the historical
+    // (b, h, i) enumeration).
+    let group_blocks =
+        super::deal_blocks(wl, tiling.share, tiling.chunks, tiling.t_r, groups.len());
 
     // §Fold: group 0 is the representative (breakdown) stream and always
     // builds unfolded; the asynchronous schedule arbitrates two streams
     // per engine and never folds.
     let folding = super::symmetry_folding() && !asynchronous;
+    // Edit-journaling builds emit naively (see `flash_build`).
+    let stamping = super::template_stamping() && edits.is_none();
 
     for (gi, (gc, blocks)) in groups.iter().zip(&group_blocks).enumerate() {
         if blocks.is_empty() {
@@ -217,13 +240,13 @@ pub(crate) fn flat_program_ext_in(
                 let list: Vec<(u64, u64)> = stream.into_iter().map(|(_, b)| *b).collect();
                 build_group_stream(
                     &mut prog, arch, wl, &hbm_map, &chan_res, gc, &tiling, &list, true,
-                    double_buffer, false,
+                    double_buffer, false, stamping, None, edits.as_deref_mut(),
                 );
             }
         } else {
             build_group_stream(
                 &mut prog, arch, wl, &hbm_map, &chan_res, gc, &tiling, blocks, false,
-                double_buffer, folding && gi != 0,
+                double_buffer, folding && gi != 0, stamping, None, edits.as_deref_mut(),
             );
         }
     }
@@ -233,9 +256,115 @@ pub(crate) fn flat_program_ext_in(
     prog
 }
 
+/// One request's share of a composed mixed batch (see `crate::scheduler`):
+/// a serving workload emitted onto the FlatAttention groups whose origin
+/// rows fall inside the entry's tile-row band, with its KV cache
+/// channel-placed by a page table.
+pub(crate) struct FlatBatchEntry<'a> {
+    pub wl: Workload,
+    pub pages: &'a PageMap,
+    /// Tile-row band `[y0, y1)`; must be aligned to the group edge.
+    pub y0: usize,
+    pub y1: usize,
+}
+
+/// Compose one FlatAttention program holding every entry's op stream.
+/// Group resources are allocated for the whole mesh (in the classic
+/// order, so a solo compose is resource-identical to a mixed one); each
+/// entry's blocks are dealt round-robin over its band's groups only, with
+/// the band's first group as the fold representative. K/V slices load
+/// from the channel holding their page (slice granularity — group slices
+/// are small relative to a page). Returns the sealed program plus each
+/// entry's contiguous op span.
+pub(crate) fn flat_batch_program_in(
+    mut prog: Program,
+    arch: &ArchConfig,
+    entries: &[FlatBatchEntry<'_>],
+    group: usize,
+    asynchronous: bool,
+) -> (Program, Vec<(usize, usize)>) {
+    let hbm_map = HbmMap::new(arch);
+    let chan_res = prog.resources(hbm_map.total_channels());
+    let g = group;
+    let g_cols = arch.mesh_x / g;
+    let g_rows = arch.mesh_y / g;
+    let groups: Vec<GroupCtx> = (0..g_rows * g_cols)
+        .map(|gi| {
+            let origin = ((gi % g_cols) * g, (gi / g_cols) * g);
+            GroupCtx {
+                origin,
+                redmule: prog.resources(g * g),
+                spatz: prog.resources(g * g),
+                row_bus: prog.resources(g),
+                col_bus: prog.resources(g),
+                sync: prog.resource(),
+            }
+        })
+        .collect();
+    let folding = super::symmetry_folding() && !asynchronous;
+
+    let mut spans: Vec<(usize, usize)> = Vec::with_capacity(entries.len());
+    let mut flops = 0u64;
+    for e in entries {
+        let begin = prog.num_ops();
+        let wl = &e.wl;
+        debug_assert!(
+            e.pages.tokens_capacity() >= wl.kv_len(),
+            "page map must cover the KV cache"
+        );
+        assert!(
+            e.y0 % g == 0 && e.y1 % g == 0 && e.y1 > e.y0,
+            "entry band [{}, {}) must align to the group edge {g}",
+            e.y0,
+            e.y1
+        );
+        let tiling = FlatTiling::resolve(arch, wl, group, asynchronous);
+        let band_groups: Vec<usize> = (0..groups.len())
+            .filter(|&gi| {
+                let oy = groups[gi].origin.1;
+                oy >= e.y0 && oy < e.y1
+            })
+            .collect();
+        let group_blocks =
+            super::deal_blocks(wl, tiling.share, tiling.chunks, tiling.t_r, band_groups.len());
+        for (bi, &gi) in band_groups.iter().enumerate() {
+            let blocks = &group_blocks[bi];
+            if blocks.is_empty() {
+                continue;
+            }
+            let gc = &groups[gi];
+            if asynchronous {
+                let (even, odd): (Vec<_>, Vec<_>) =
+                    blocks.iter().enumerate().partition(|(i, _)| i % 2 == 0);
+                for stream in [even, odd] {
+                    let list: Vec<(u64, u64)> = stream.into_iter().map(|(_, b)| *b).collect();
+                    build_group_stream(
+                        &mut prog, arch, wl, &hbm_map, &chan_res, gc, &tiling, &list, true, true,
+                        false, false, Some(e.pages), None,
+                    );
+                }
+            } else {
+                build_group_stream(
+                    &mut prog, arch, wl, &hbm_map, &chan_res, gc, &tiling, blocks, false, true,
+                    folding && bi != 0, false, Some(e.pages), None,
+                );
+            }
+        }
+        flops += wl.matmul_flops();
+        spans.push((begin, prog.num_ops()));
+    }
+
+    prog.flops = flops;
+    prog.seal();
+    (prog, spans)
+}
+
 /// Emit one serial stream of blocks for a group. With `fold` set, the
 /// `g²` per-tile compute chains collapse into per-row delay ops (§Fold)
-/// while the channel and bus op streams stay verbatim.
+/// while the channel and bus op streams stay verbatim. With `pages` set,
+/// each south-edge K/V slice loads from the channel holding its page
+/// (stamping is then bypassed by the caller). `edits` journals every K/V
+/// load's prefetch dependency for the double-buffer variant derivation.
 #[allow(clippy::too_many_arguments)]
 fn build_group_stream(
     prog: &mut Program,
@@ -249,6 +378,9 @@ fn build_group_stream(
     asynchronous: bool,
     double_buffer: bool,
     fold: bool,
+    stamping: bool,
+    pages: Option<&PageMap>,
+    mut edits: Option<&mut Vec<DbEdit>>,
 ) {
     debug_assert!(!(fold && asynchronous), "async streams never fold");
     let g = tiling.group as usize;
@@ -261,7 +393,24 @@ fn build_group_stream(
     let tid = |lx: usize, ly: usize| arch.tile_id(ox + lx, oy + ly);
     let local = |lx: usize, ly: usize| ly * g + lx;
     let n_dest = (g - 1) as u64;
-    let stamping = super::template_stamping();
+    let stamping = stamping && pages.is_none() && edits.is_none();
+    // Channel + hop distance of the (j, lx) K/V slice load issued by the
+    // south-edge tile at (gx, gy): the fixed column band normally, or the
+    // page holding the slice's first token when the cache is paged.
+    let kv_channel = |pm: Option<&PageMap>, j: u64, lx: usize, t_c_slice: u64| {
+        let (gx, gy) = (ox + lx, oy + g - 1);
+        match pm {
+            Some(pm) => {
+                let tok0 = (j * tiling.block + lx as u64 * t_c_slice).min(kv_len - 1);
+                let chan = pm.channel_of_token(tok0) as usize;
+                (chan, hbm_map.channel_hops(gx, gy, chan))
+            }
+            None => {
+                let ch = hbm_map.col_channel(gx, gy);
+                (ch.index, ch.hops)
+            }
+        }
+    };
 
     if fold {
         prog.fold.streams += 1;
@@ -342,6 +491,16 @@ fn build_group_stream(
         } else {
             t_c_eff
         };
+        // Sliding window: group-level K/V blocks below every row's window
+        // start are skipped, straddling blocks pay the prefix mask
+        // (`(0, 0)` without a window — dense emission is untouched).
+        let (j_lo, win_until) = window_block_range(
+            row_start,
+            row_start + m_r_block,
+            wl.window,
+            tiling.block,
+            t_c_eff,
+        );
         let norm_cycles =
             SpatzOp::Normalize { rows: t_r_slice, elems: t_r_slice * d }.cycles(&arch.tile);
         let o_bytes = t_r_slice * d * eb;
@@ -360,27 +519,25 @@ fn build_group_stream(
             let mut pv_row: Vec<Option<OpId>> = vec![None; g]; // PV[j-1] per row
             let mut pv_row2: Vec<Option<OpId>> = vec![None; g]; // PV[j-2] per row
             let mut join_deps: Vec<OpId> = Vec::with_capacity(g + 2);
-            for j in 0..t_c_eff {
-                let c = iter_costs(arch, wl, tiling, t_r_slice, j >= mask_from, j, n_dest);
+            for j in j_lo..t_c_eff {
+                let masked = j >= mask_from || j < win_until;
+                let c = iter_costs(arch, wl, tiling, t_r_slice, masked, j, n_dest);
 
                 // ③ South-edge loads + ④ column multicasts (kept).
+                // Buffering deps: the south row's PV delay op stands in
+                // for pv[j-1] / pv[j-2] of every south tile (their
+                // completions are identical).
+                let db_dep = pv_row2[g - 1];
+                let nodb_dep = pv_row[g - 1];
+                let buf_dep = if asynchronous || !double_buffer { nodb_dep } else { db_dep };
                 let mut kv_mcast: Vec<OpId> = Vec::with_capacity(g);
                 for lx in 0..g {
-                    let (gx, gy) = (ox + lx, oy + g - 1);
-                    let ch = hbm_map.col_channel(gx, gy);
-                    let tkv = dma_hbm_time(&arch.hbm, &arch.noc, c.kv_bytes, ch.hops);
-                    // Buffering deps: the south row's PV delay op stands in
-                    // for pv[j-1] / pv[j-2] of every south tile (their
-                    // completions are identical).
-                    let buf_dep = if asynchronous || !double_buffer {
-                        pv_row[g - 1]
-                    } else {
-                        pv_row2[g - 1]
-                    };
+                    let (ch_idx, ch_hops) = kv_channel(pages, j, lx, c.t_c_slice);
+                    let tkv = dma_hbm_time(&arch.hbm, &arch.noc, c.kv_bytes, ch_hops);
                     let mut dbuf = [OpId(0); 2];
                     let nd = opt_deps(&mut dbuf, start_dep, buf_dep);
                     let load = prog.op(
-                        chan_res[ch.index],
+                        chan_res[ch_idx],
                         tkv.occupancy,
                         tkv.latency,
                         Component::HbmAccess,
@@ -388,6 +545,14 @@ fn build_group_stream(
                         c.kv_bytes,
                         &dbuf[..nd],
                     );
+                    if let Some(ed) = edits.as_deref_mut() {
+                        ed.push(DbEdit {
+                            op: load.0,
+                            base: start_dep.map(|o| o.0),
+                            db: db_dep.map(|o| o.0),
+                            nodb: nodb_dep.map(|o| o.0),
+                        });
+                    }
                     let mc = prog.op(
                         gc.col_bus[lx],
                         c.mt_kv.occupancy,
@@ -529,29 +694,27 @@ fn build_group_stream(
             let mut pv_prev: Vec<Option<OpId>> = vec![None; g * g]; // pv[j-1] per tile
             let mut pv_prev2: Vec<Option<OpId>> = vec![None; g * g]; // pv[j-2] per tile
 
-            for j in 0..t_c_eff {
+            for j in j_lo..t_c_eff {
                 // Per-iteration costs are identical across the g / g²
                 // emission loops below — compute each once (§Perf).
-                let c = iter_costs(arch, wl, tiling, t_r_slice, j >= mask_from, j, n_dest);
+                let masked = j >= mask_from || j < win_until;
+                let c = iter_costs(arch, wl, tiling, t_r_slice, masked, j, n_dest);
 
                 // ③ South-edge tiles load Kᵀ/V slices; ④ column multicast.
                 let mut kv_mcast: Vec<OpId> = Vec::with_capacity(g);
                 for lx in 0..g {
-                    let (gx, gy) = (ox + lx, oy + g - 1);
-                    let ch = hbm_map.col_channel(gx, gy);
-                    let tkv = dma_hbm_time(&arch.hbm, &arch.noc, c.kv_bytes, ch.hops);
+                    let (ch_idx, ch_hops) = kv_channel(pages, j, lx, c.t_c_slice);
+                    let tkv = dma_hbm_time(&arch.hbm, &arch.noc, c.kv_bytes, ch_hops);
                     let south = local(lx, g - 1);
                     // Buffering: double-buffered for sync, single for async
                     // (the second head-stream provides the overlap).
-                    let buf_dep = if asynchronous || !double_buffer {
-                        pv_prev[south]
-                    } else {
-                        pv_prev2[south]
-                    };
+                    let db_dep = pv_prev2[south];
+                    let nodb_dep = pv_prev[south];
+                    let buf_dep = if asynchronous || !double_buffer { nodb_dep } else { db_dep };
                     let mut dbuf = [OpId(0); 2];
                     let nd = opt_deps(&mut dbuf, start_dep, buf_dep);
                     let load = prog.op(
-                        chan_res[ch.index],
+                        chan_res[ch_idx],
                         tkv.occupancy,
                         tkv.latency,
                         Component::HbmAccess,
@@ -559,6 +722,14 @@ fn build_group_stream(
                         c.kv_bytes,
                         &dbuf[..nd],
                     );
+                    if let Some(ed) = edits.as_deref_mut() {
+                        ed.push(DbEdit {
+                            op: load.0,
+                            base: start_dep.map(|o| o.0),
+                            db: db_dep.map(|o| o.0),
+                            nodb: nodb_dep.map(|o| o.0),
+                        });
+                    }
                     let mc = prog.op(
                         gc.col_bus[lx],
                         c.mt_kv.occupancy,
@@ -958,6 +1129,66 @@ mod tests {
         assert!(bd.hbm > 0, "{bd:?}");
         assert!(bd.multicast + bd.max_reduce + bd.sum_reduce > 0, "{bd:?}");
         assert_eq!(bd.total(), st.makespan);
+    }
+
+    #[test]
+    fn window_equal_to_seq_reproduces_dense_causal_emission() {
+        // W == S must emit the dense-causal group program op for op.
+        let _guard = crate::dataflow::GLOBAL_SWITCH_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let arch = table1();
+        for (wl, group, asyn) in [
+            (Workload::new(1024, 64, 32, 2).with_causal(true), 8usize, false),
+            (Workload::new(1024, 64, 32, 2).with_kv_heads(8).with_causal(true), 8, false),
+            (Workload::new(512, 128, 32, 4).with_causal(true), 16, true),
+        ] {
+            let dense = flat_program(&arch, &wl, group, asyn);
+            let windowed = flat_program(&arch, &wl.with_window(wl.seq), group, asyn);
+            assert_programs_equal(&dense, &windowed);
+        }
+    }
+
+    #[test]
+    fn sliding_window_cuts_group_traffic() {
+        // A small window skips most group-level K/V blocks; traffic drops
+        // and stays above the windowed compulsory bytes.
+        let arch = table1();
+        let dense = Workload::new(4096, 128, 32, 1).with_causal(true);
+        let wind = dense.with_window(512);
+        let st_dense = execute(&flat_program(&arch, &dense, 8, false), 0);
+        let st_wind = execute(&flat_program(&arch, &wind, 8, false), 0);
+        assert!(
+            st_wind.hbm_bytes < st_dense.hbm_bytes,
+            "windowed {} vs dense {}",
+            st_wind.hbm_bytes,
+            st_dense.hbm_bytes
+        );
+        assert!(st_wind.hbm_bytes >= wind.compulsory_bytes());
+    }
+
+    #[test]
+    fn double_buffer_pair_matches_fresh_builds() {
+        // The derived variant must be bit-identical to a fresh build of
+        // each mode — ops, deps, fold accounting and execution — on both
+        // collective paths.
+        let _guard = crate::dataflow::GLOBAL_SWITCH_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        for (arch, wl, group) in [
+            (table1(), Workload::new(1024, 128, 24, 1), 8usize),
+            (table1_sw_collectives(), Workload::new(512, 64, 20, 1).with_causal(true), 16),
+            (table1(), Workload::new(2048, 64, 16, 1).with_kv_heads(4).decode(), 8),
+        ] {
+            let tracked = tracked_tile(&arch, Dataflow::FlatColl, group);
+            let (db, nodb) = flat_program_db_pair(&arch, &wl, group);
+            let fresh_db = flat_program_ext(&arch, &wl, group, false, true);
+            let fresh_nodb = flat_program_ext(&arch, &wl, group, false, false);
+            assert_programs_equal(&db, &fresh_db);
+            assert_programs_equal(&nodb, &fresh_nodb);
+            assert_eq!(execute(&db, tracked), execute(&fresh_db, tracked), "{wl:?} db");
+            assert_eq!(execute(&nodb, tracked), execute(&fresh_nodb, tracked), "{wl:?} nodb");
+        }
     }
 
     #[test]

@@ -39,6 +39,16 @@
 //!   causal masking is a no-op. FlatAttention pads the single row across
 //!   the group's `G` row slices (the honest over-flattening cost of
 //!   running a decode token on a big group).
+//! * **Chunked prefill** (`kv_prefix > 0`): the `seq` query rows sit at
+//!   positions `kv_prefix..kv_prefix + seq` of a `kv_prefix + seq`-long
+//!   cache — the unit of work of the continuous-batching scheduler
+//!   (`crate::scheduler`). The decode geometry generalized: builders
+//!   place the rows via the same end-of-cache offset.
+//! * **Sliding window** ([`Workload::with_window`], implies causal):
+//!   K/V blocks wholly below every row's window start are skipped and
+//!   blocks straddling a window start pay a prefix mask — the mirror of
+//!   the causal suffix rule (`tiling::window_block_range`). `window >=
+//!   kv_len` reproduces dense causal emission op for op.
 //!
 //! Both extensions preserve the fold/stamp machinery: shared-resource ops
 //! stay verbatim, templates key on the (stacked-rows, block-geometry,
@@ -161,7 +171,10 @@ impl Phase {
 /// shared K/V loads once per group (stacking the group's query rows into
 /// one block) so modeled K/V HBM traffic scales by `kv_heads / heads`.
 /// `Phase::Decode` models single-token generation: one query row against a
-/// KV cache of length `seq`.
+/// KV cache of length `seq`. `kv_prefix` places the `seq` query positions
+/// *behind* an existing cache prefix (chunked prefill, the unit of work of
+/// the continuous-batching scheduler in `crate::scheduler`), and `window`
+/// limits attention to the last W positions (sliding-window/local masks).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Workload {
     /// Sequence length S: the query *and* key/value length for prefill,
@@ -183,6 +196,18 @@ pub struct Workload {
     pub causal: bool,
     /// Prefill vs decode (see [`Phase`]).
     pub phase: Phase,
+    /// KV-cache tokens already resident *ahead* of this workload's `seq`
+    /// span: the queries sit at global positions `kv_prefix .. kv_prefix +
+    /// q_len` of a `kv_prefix + seq`-long cache. 0 is the classic
+    /// single-shot shape; chunked prefill sets it to the tokens already
+    /// prefilled, so causal masking and K/V traffic see the whole prefix.
+    pub kv_prefix: u64,
+    /// Sliding-window extent W in tokens (0 = unlimited): each query
+    /// attends to the last W positions up to and including itself.
+    /// A non-zero window implies causal masking ([`Workload::with_window`]
+    /// sets it); `window >= kv_len` reproduces dense causal attention
+    /// op for op (asserted by builder tests).
+    pub window: u64,
 }
 
 impl Workload {
@@ -205,6 +230,8 @@ impl Workload {
             batch,
             causal: false,
             phase: Phase::Prefill,
+            kv_prefix: 0,
+            window: 0,
         }
     }
 
@@ -237,6 +264,26 @@ impl Workload {
         self.with_phase(Phase::Decode)
     }
 
+    /// Builder-style chunked-prefill cache prefix: the `seq` query
+    /// positions sit behind `kv_prefix` already-resident cache tokens.
+    pub fn with_kv_prefix(mut self, kv_prefix: u64) -> Self {
+        self.kv_prefix = kv_prefix;
+        self
+    }
+
+    /// Builder-style sliding-window mask: each query attends to the last
+    /// `window` positions (including itself). Implies causal masking.
+    /// Panics on `window == 0` — zero means "unlimited", so omit the call.
+    pub fn with_window(mut self, window: u64) -> Self {
+        assert!(
+            window > 0,
+            "sliding window must be >= 1 token (window == 0 means unlimited — omit the call)"
+        );
+        self.window = window;
+        self.causal = true;
+        self
+    }
+
     /// FP16 element size used throughout the paper.
     pub const BYTES_PER_ELEM: u64 = 2;
 
@@ -248,10 +295,62 @@ impl Workload {
         }
     }
 
-    /// Key/value positions per (batch, KV head) — always S (prefill
-    /// processes the full sequence; decode attends over the full cache).
+    /// Key/value positions per (batch, KV head): the `kv_prefix` cache
+    /// prefix plus the `seq` span (prefill processes the full cache;
+    /// decode attends over the full cache).
     pub fn kv_len(&self) -> u64 {
-        self.seq
+        self.kv_prefix + self.seq
+    }
+
+    /// Effective window for arithmetic: `u64::MAX` when unlimited.
+    fn eff_window(&self) -> u64 {
+        if self.window == 0 {
+            u64::MAX
+        } else {
+            self.window
+        }
+    }
+
+    /// Key/value positions each query row attends to, summed over the
+    /// `q_len` rows of one (batch, head) — the useful score count behind
+    /// [`Workload::matmul_flops`]. Accounts for causal masking, the
+    /// chunked-prefill `kv_prefix` offset and the sliding window.
+    fn visible_per_head(&self) -> u64 {
+        let w = self.eff_window();
+        match self.phase {
+            Phase::Decode => self.kv_len().min(w),
+            Phase::Prefill => {
+                if !self.causal {
+                    return self.seq * self.kv_len();
+                }
+                // The row at global position p sees min(p + 1, W) keys;
+                // rows p0..p0+seq split into a ramp (p + 1 <= W) and a
+                // flat tail of width W.
+                let p0 = self.kv_prefix;
+                let ramp_end = w.min(p0 + self.seq).max(p0); // exclusive
+                let ramp_n = ramp_end - p0;
+                let ramp_sum = (ramp_end * (ramp_end + 1) - p0 * (p0 + 1)) / 2;
+                ramp_sum + (self.seq - ramp_n) * w
+            }
+        }
+    }
+
+    /// KV positions read at least once per KV head: the sliding window
+    /// skips the cache prefix no query row can see.
+    pub fn kv_touched(&self) -> u64 {
+        let w = self.eff_window();
+        match self.phase {
+            Phase::Decode => self.kv_len().min(w),
+            Phase::Prefill => {
+                if !self.causal {
+                    return self.kv_len();
+                }
+                // The first query row (global pos kv_prefix) reaches back
+                // to kv_prefix + 1 - W; the union over rows extends to the
+                // cache end.
+                self.kv_len() - (self.kv_prefix + 1).saturating_sub(w).min(self.kv_len())
+            }
+        }
     }
 
     /// Query heads sharing each K/V head (`heads / kv_heads`; 1 for MHA).
@@ -263,34 +362,30 @@ impl Workload {
         self.phase == Phase::Decode
     }
 
-    /// Matrix-engine FLOPs of the layer: QKᵀ and P·V, 2·q_len·kv_len·D
-    /// each per query head (multiply-accumulate = 2 FLOPs). For causal
-    /// prefill this is the *useful* count (≈ half); dataflow builders
+    /// Matrix-engine FLOPs of the layer: QKᵀ and P·V, 2·visible·D each per
+    /// query row per head (multiply-accumulate = 2 FLOPs). For causal /
+    /// windowed prefill this is the *useful* count; dataflow builders
     /// report the FLOPs actually executed (diagonal blocks compute fully
-    /// and mask). The decode row sees the whole cache, so causal decode
-    /// has no masked work.
+    /// and mask). The decode row sees the whole cache (up to the window),
+    /// so causal decode has no masked work.
     pub fn matmul_flops(&self) -> u64 {
-        if self.is_decode() {
-            4 * self.batch * self.heads * self.kv_len() * self.head_dim
-        } else if self.causal {
-            // Σ_i 2·(i+1)·D over rows, ×2 matmuls: 2·S·(S+1)·D per head.
-            2 * self.batch * self.heads * self.seq * (self.seq + 1) * self.head_dim
-        } else {
-            4 * self.batch * self.heads * self.seq * self.seq * self.head_dim
-        }
+        4 * self.batch * self.heads * self.head_dim * self.visible_per_head()
     }
 
     /// Minimal (compulsory) HBM traffic in bytes: read Q and write O once
     /// per query head, read K and V once per *KV* head — the K/V share
-    /// shrinks by `kv_heads / heads` under GQA/MQA.
+    /// shrinks by `kv_heads / heads` under GQA/MQA and covers only the
+    /// window-visible cache suffix under sliding-window masks.
     pub fn compulsory_bytes(&self) -> u64 {
         let qo = 2 * self.batch * self.heads * self.q_len() * self.head_dim;
-        let kv = 2 * self.batch * self.kv_heads * self.kv_len() * self.head_dim;
+        let kv = 2 * self.batch * self.kv_heads * self.kv_touched() * self.head_dim;
         (qo + kv) * Self::BYTES_PER_ELEM
     }
 
-    /// Short label like `D128-S4096`, suffixed `-kvK` for GQA/MQA and
-    /// `-dec` for decode (dense MHA prefill keeps the historical form).
+    /// Short label like `D128-S4096`, suffixed `-kvK` for GQA/MQA,
+    /// `-dec` for decode, `-pP` for a chunked-prefill cache prefix and
+    /// `-wW` for sliding windows (dense MHA prefill keeps the historical
+    /// form).
     pub fn label(&self) -> String {
         let mut s = format!("D{}-S{}", self.head_dim, self.seq);
         if self.kv_heads != self.heads {
@@ -298,6 +393,12 @@ impl Workload {
         }
         if self.is_decode() {
             s.push_str("-dec");
+        }
+        if self.kv_prefix > 0 {
+            s.push_str(&format!("-p{}", self.kv_prefix));
+        }
+        if self.window > 0 {
+            s.push_str(&format!("-w{}", self.window));
         }
         s
     }
@@ -413,6 +514,130 @@ fn build_program_into(
         panic!("build_program produced an invalid DAG for {df:?}: {e}");
     }
     prog
+}
+
+/// Deal a workload's blocks `(batch, kv_head, share-chunk, row-block)`
+/// round-robin over `n_streams` tile/group streams — the canonical
+/// enumeration every builder driver shares (solo and batch, Flash and
+/// Flat families). Each entry is `(share_c, i)`: the stacked query-head
+/// count of the chunk (the last chunk of a KV group may be partial) and
+/// the row-block index. The scheduler's conservation property depends on
+/// every driver dealing identically, so this exists exactly once.
+pub(crate) fn deal_blocks(
+    wl: &Workload,
+    share: u64,
+    chunks: u64,
+    t_r: u64,
+    n_streams: usize,
+) -> Vec<Vec<(u64, u64)>> {
+    let q_per_kv = wl.q_per_kv();
+    let mut out: Vec<Vec<(u64, u64)>> = vec![Vec::new(); n_streams];
+    let mut idx = 0usize;
+    for _b in 0..wl.batch {
+        for _kvh in 0..wl.kv_heads {
+            for c in 0..chunks {
+                let share_c = share.min(q_per_kv - c * share);
+                for i in 0..t_r {
+                    out[idx % n_streams].push((share_c, i));
+                    idx += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// A journaled K/V-prefetch dependency choice (§Perf, the ROADMAP
+/// "reuse the sealed CSR across `double_buffer` ablation variants"
+/// lever): for every K/V load they emit, the builders can record the
+/// load's non-buffer base dependency plus the buffer dependency under
+/// *each* `double_buffer` mode. The two ablation variants differ in
+/// nothing else — same ops, same resources, same timings — so the other
+/// variant can be derived from one build by retargeting exactly these
+/// dependencies instead of re-running the whole builder (tiling, cost
+/// model, op emission).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct DbEdit {
+    /// The K/V load op.
+    pub op: u32,
+    /// Its non-buffer dependency (the previous block's end), if gated.
+    pub base: Option<u32>,
+    /// Buffer dependency with double buffering on (`pv[j-2]`).
+    pub db: Option<u32>,
+    /// Buffer dependency with double buffering off (`pv[j-1]`).
+    pub nodb: Option<u32>,
+}
+
+/// Derive one `double_buffer` ablation variant from the other: clone the
+/// op topology (every op, resource, timing and accounting field is shared
+/// verbatim), retarget the journaled K/V prefetch dependencies, and
+/// reseal. Bit-identical to a fresh build of the variant — asserted by
+/// the per-builder `double_buffer_pair_matches_fresh_builds` tests.
+pub(crate) fn derive_double_buffer_variant(
+    src: &Program,
+    edits: &[DbEdit],
+    double_buffer: bool,
+) -> Program {
+    let mut p = Program::new();
+    p.ops = src.ops.clone();
+    p.deps_pool = src.deps_pool.clone();
+    p.n_resources = src.n_resources;
+    p.flops = src.flops;
+    p.fold = src.fold;
+    for e in edits {
+        let deps_start = p.deps_pool.len() as u32;
+        let mut deps_len = 0u32;
+        if let Some(b) = e.base {
+            p.deps_pool.push(b);
+            deps_len += 1;
+        }
+        let buf = if double_buffer { e.db } else { e.nodb };
+        if let Some(b) = buf {
+            p.deps_pool.push(b);
+            deps_len += 1;
+        }
+        let op = &mut p.ops[e.op as usize];
+        op.deps_start = deps_start;
+        op.deps_len = deps_len;
+    }
+    p.seal();
+    p
+}
+
+/// Build both K/V `double_buffer` ablation variants (Fig. 3's "*without
+/// double buffering" footnote) in ONE builder pass: the `double_buffer =
+/// true` program is emitted while journaling every K/V load's prefetch
+/// dependency, and the `double_buffer = false` variant is derived by
+/// retargeting exactly those dependencies on the cloned op topology and
+/// resealing — the builder's tiling/cost-model/emission work runs once
+/// instead of twice. Returns `(with_db, without_db)`; both are op-for-op
+/// identical to fresh single-variant builds (asserted by tests).
+///
+/// Only defined for the synchronous dataflows: the asynchronous schedules
+/// single-buffer each stream regardless, so their pair is trivial.
+pub fn double_buffer_programs(
+    arch: &ArchConfig,
+    wl: &Workload,
+    df: Dataflow,
+    group: usize,
+) -> (Program, Program) {
+    match df {
+        Dataflow::Flash2 => flash::flash_program_db_pair(arch, wl),
+        Dataflow::Flat => {
+            let mut a = arch.clone();
+            a.noc.hw_collectives = false;
+            flat::flat_program_db_pair(&a, wl, group)
+        }
+        Dataflow::FlatColl => {
+            let mut a = arch.clone();
+            a.noc.hw_collectives = true;
+            flat::flat_program_db_pair(&a, wl, group)
+        }
+        Dataflow::Flash3 | Dataflow::FlatAsyn => panic!(
+            "double_buffer_programs: {df:?} is asynchronous (streams single-buffer regardless); \
+             the ablation pair is only defined for Flash2/Flat/FlatColl"
+        ),
+    }
 }
 
 thread_local! {
@@ -551,6 +776,59 @@ mod tests {
     }
 
     #[test]
+    fn chunked_prefill_prefix_shifts_flops_and_cache() {
+        // A 128-query chunk behind a 256-token prefix: every chunk row
+        // sees the whole prefix plus its causal span.
+        let wl = Workload::new(128, 64, 8, 1).with_causal(true).with_kv_prefix(256);
+        assert_eq!(wl.q_len(), 128);
+        assert_eq!(wl.kv_len(), 384);
+        // Σ_{p=256}^{383} (p + 1) = (384·385 − 256·257) / 2 = 41024.
+        assert_eq!(wl.matmul_flops(), 4 * 8 * 64 * 41024);
+        assert_eq!(wl.kv_touched(), 384);
+        // Chunks tile the full prefill exactly: flops of the whole causal
+        // layer equal the sum over its chunks.
+        let full = Workload::new(384, 64, 8, 1).with_causal(true);
+        let head = Workload::new(256, 64, 8, 1).with_causal(true);
+        assert_eq!(full.matmul_flops(), head.matmul_flops() + wl.matmul_flops());
+    }
+
+    #[test]
+    fn sliding_window_flops_and_touched_kv() {
+        // S=64, W=16: rows 0..16 ramp (Σ = 136), rows 16..64 see W each.
+        let wl = Workload::new(64, 32, 2, 1).with_window(16);
+        assert!(wl.causal, "with_window implies causal");
+        assert_eq!(wl.matmul_flops(), 4 * 2 * 32 * (136 + 48 * 16));
+        assert_eq!(wl.kv_touched(), 64); // union still reaches position 0
+        // Decode with a window touches only the last W cache tokens.
+        let dec = Workload::new(4096, 128, 8, 1).decode().with_window(1024);
+        assert_eq!(dec.kv_touched(), 1024);
+        assert_eq!(dec.matmul_flops(), 4 * 8 * 128 * 1024);
+        // Window >= S degenerates to dense causal.
+        let dense = Workload::new(512, 64, 4, 1).with_causal(true);
+        assert_eq!(dense.with_window(512).matmul_flops(), dense.matmul_flops());
+        assert_eq!(dense.with_window(512).kv_touched(), dense.kv_touched());
+        // A chunk whose window ends inside the prefix skips the head of
+        // the cache.
+        let chunk = Workload::new(64, 32, 2, 1).with_kv_prefix(192).with_window(128);
+        assert_eq!(chunk.kv_touched(), 256 - (192 + 1 - 128));
+    }
+
+    #[test]
+    #[should_panic(expected = "window must be >= 1")]
+    fn with_window_rejects_zero() {
+        let _ = Workload::new(64, 32, 2, 1).with_window(0);
+    }
+
+    #[test]
+    fn serving_labels_extended_shapes() {
+        assert_eq!(
+            Workload::new(512, 128, 32, 1).with_kv_prefix(1024).label(),
+            "D128-S512-p1024"
+        );
+        assert_eq!(Workload::new(4096, 128, 32, 1).with_window(512).label(), "D128-S4096-w512");
+    }
+
+    #[test]
     #[should_panic(expected = "must be non-zero")]
     fn workload_rejects_zero_seq() {
         // Regression: a zero dimension used to survive construction and
@@ -594,6 +872,35 @@ mod tests {
             assert_eq!(execute(&fresh, tracked), execute(&pooled, tracked));
             arena.recycle(pooled);
         }
+    }
+
+    #[test]
+    fn double_buffer_pair_dispatch_covers_sync_dataflows() {
+        // The pair API must produce executable programs for every
+        // synchronous dataflow (the per-builder tests pin bit-identity).
+        let _guard = GLOBAL_SWITCH_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let arch = crate::arch::presets::table2(8);
+        let wl = Workload::new(512, 64, 4, 1);
+        for df in [Dataflow::Flash2, Dataflow::Flat, Dataflow::FlatColl] {
+            let (db, nodb) = double_buffer_programs(&arch, &wl, df, 4);
+            assert!(db.is_sealed() && nodb.is_sealed(), "{df:?}");
+            assert_eq!(db.num_ops(), nodb.num_ops(), "{df:?}: same topology");
+            let tracked = tracked_tile(&arch, df, 4);
+            let s_db = execute(&db, tracked);
+            let s_nodb = execute(&nodb, tracked);
+            // Removing the prefetch serializes more (tiny FIFO-reordering
+            // slack allowed, as in the ablation report's threshold).
+            assert!(s_nodb.makespan * 100 >= s_db.makespan * 99, "{df:?}");
+            assert_eq!(s_db.hbm_bytes, s_nodb.hbm_bytes, "{df:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "asynchronous")]
+    fn double_buffer_pair_rejects_async_dataflows() {
+        let arch = crate::arch::presets::table2(8);
+        let wl = Workload::new(256, 64, 2, 1);
+        let _ = double_buffer_programs(&arch, &wl, Dataflow::Flash3, 1);
     }
 
     #[test]

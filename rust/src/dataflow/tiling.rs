@@ -240,6 +240,33 @@ impl FlatTiling {
     }
 }
 
+/// Sliding-window block bounds for a row block spanning global query
+/// positions `[row_start, row_end)` over `b_c`-wide K/V blocks. Returns
+/// `(j_lo, win_until)`: blocks below `j_lo` hold only tokens below every
+/// row's window start (`pos - W + 1`) and are skipped entirely; blocks in
+/// `[j_lo, win_until)` straddle some row's window start and pay the prefix
+/// mask on the vector engine (the mirror of [`causal_mask_from`]'s suffix
+/// rule). `(0, 0)` when `window == 0` (unlimited) — dense emission is
+/// untouched — and likewise when `window >= row_end`, so a window covering
+/// the whole prefix reproduces dense causal attention op for op.
+pub(crate) fn window_block_range(
+    row_start: u64,
+    row_end: u64,
+    window: u64,
+    b_c: u64,
+    t_c_eff: u64,
+) -> (u64, u64) {
+    if window == 0 {
+        return (0, 0);
+    }
+    // First token visible to ANY row: the first row's window start.
+    let j_lo = ((row_start + 1).saturating_sub(window) / b_c).min(t_c_eff);
+    // Blocks starting below the LAST row's window start contain some
+    // (row, token) pair the window masks.
+    let win_until = row_end.saturating_sub(window).div_ceil(b_c).min(t_c_eff);
+    (j_lo, win_until)
+}
+
 /// First K/V block index whose *real* columns extend past `row_start`
 /// (the global position of a row block's first query row): blocks at or
 /// after it straddle the causal diagonal and pay the triangular mask on
@@ -492,6 +519,30 @@ mod tests {
         // Rectangular: rows [0, 64) vs 16-wide K/V blocks — blocks 0..4
         // all straddle the diagonal.
         assert_eq!(causal_mask_from(0, 16, 4096, 4), 0);
+    }
+
+    #[test]
+    fn window_block_range_bounds() {
+        // No window / window covering the whole prefix: dense emission.
+        assert_eq!(window_block_range(192, 256, 0, 64, 4), (0, 0));
+        assert_eq!(window_block_range(192, 256, 256, 64, 4), (0, 0));
+        assert_eq!(window_block_range(192, 256, 4096, 64, 4), (0, 0));
+        // W=64 over rows [192, 256): first row sees from 129, last row
+        // sees from 192 — block 2 partially visible, blocks 0..2 skipped.
+        assert_eq!(window_block_range(192, 256, 64, 64, 4), (2, 3));
+        // Exactly block-aligned window start needs no prefix mask.
+        let (j_lo, until) = window_block_range(4095, 4096, 1024, 256, 16);
+        assert_eq!((j_lo, until), (12, 12));
+        // Misaligned decode window: the straddling block pays the mask.
+        let (j_lo, until) = window_block_range(4095, 4096, 1000, 256, 16);
+        assert_eq!((j_lo, until), (12, 13));
+        // j_lo never exceeds win_until, and both clamp to t_c_eff.
+        for (rs, re, w, bc, tce) in
+            [(0u64, 1u64, 1u64, 32u64, 1u64), (1000, 1064, 3, 32, 34), (7, 8, 8, 32, 1)]
+        {
+            let (lo, until) = window_block_range(rs, re, w, bc, tce);
+            assert!(lo <= until && until <= tce, "({rs},{re},{w},{bc},{tce}) -> ({lo},{until})");
+        }
     }
 
     #[test]

@@ -79,6 +79,25 @@ impl HbmMap {
             hops: self.topo.hops_to_south_edge(x, y),
         }
     }
+
+    /// XY hop count from the tile at `(x, y)` to an *arbitrary* channel's
+    /// edge attachment point (west channels first, then south) — the
+    /// page-granular generalization of the fixed row/column mappings
+    /// above, used when a paged KV cache places a transfer on whatever
+    /// channel its page table dictates.
+    pub fn channel_hops(&self, x: usize, y: usize, chan: usize) -> u64 {
+        debug_assert!(chan < self.total_channels());
+        if chan < self.channels_west {
+            // West edge: travel to x = 0 plus the row offset to the
+            // channel's band.
+            let row = chan * self.topo.y_dim / self.channels_west.max(1);
+            (x + row.abs_diff(y)) as u64
+        } else {
+            let c = chan - self.channels_west;
+            let col = c * self.topo.x_dim / self.channels_south.max(1);
+            (col.abs_diff(x) + (self.topo.y_dim - 1 - y)) as u64
+        }
+    }
 }
 
 #[cfg(test)]
@@ -151,6 +170,25 @@ mod tests {
         let m2 = HbmMap::new(&west_only);
         assert_eq!(m2.col_channel(5, 2).index, m2.row_channel(5, 2).index);
         assert!(m2.col_channel(5, 2).index < m2.total_channels());
+    }
+
+    #[test]
+    fn channel_hops_consistent_with_edge_mappings() {
+        let arch = presets::table1();
+        let m = HbmMap::new(&arch);
+        // A tile's own row/column channel sits at its edge-aligned
+        // attachment: channel_hops agrees with the fixed mappings on
+        // band-start rows/columns (the generic lookup measures to the
+        // band's attachment point; Table I bands are 2 wide).
+        for (x, y) in [(0usize, 0usize), (6, 12), (30, 30), (16, 2)] {
+            let row = m.row_channel(x, y);
+            assert_eq!(m.channel_hops(x, y, row.index), row.hops, "row ({x},{y})");
+            let col = m.col_channel(x, y);
+            assert_eq!(m.channel_hops(x, y, col.index), col.hops, "col ({x},{y})");
+        }
+        // A distant channel costs the extra band distance.
+        assert_eq!(m.channel_hops(0, 0, 15), 30); // west chan 15 serves rows 30-31
+        assert_eq!(m.channel_hops(0, 31, 16), 0); // south chan 16 at column 0
     }
 
     #[test]

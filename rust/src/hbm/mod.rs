@@ -9,6 +9,14 @@
 //! — this is what makes FlatAttention's edge-loading scheme contention
 //! free when slices are distributed over a group.
 
+//!
+//! Serving extension: [`paged::PageMap`] generalizes the static mappings
+//! to page-granular KV-cache placement — each request's cache pages land
+//! on whatever channel the scheduler's placement policy chose, so paged
+//! fragmentation becomes real channel contention in the simulator.
+
 pub mod map;
+pub mod paged;
 
 pub use map::{ChannelRef, Edge, HbmMap};
+pub use paged::PageMap;

@@ -1,0 +1,158 @@
+//! Page-granular KV-cache → HBM-channel mapping.
+//!
+//! A serving KV cache grows token by token, so production systems
+//! (vLLM-style paged attention) allocate it in fixed-size *pages* and the
+//! physical placement of those pages decides which memory channel each
+//! attention K/V read hits. This module is the mechanism half: a
+//! [`PageMap`] records, per fixed-size token page, the HBM channel that
+//! holds it, and splits an arbitrary token range into per-channel
+//! transfer segments. The *policy* half (round-robin / channel-affine /
+//! random placement) lives in `crate::scheduler`, which owns the
+//! allocation order; the dataflow builders consume the map so paged
+//! fragmentation shows up as real channel contention in the DES rather
+//! than as an analytic penalty.
+
+/// Channel placement of one request's KV cache at fixed page granularity.
+///
+/// Pages are `page_tokens` KV positions each; a page holds both the K and
+/// the V vectors of its tokens (2·D FP16 elements per token). The table
+/// only grows — tokens are appended as the request prefills/decodes and
+/// pages are never migrated, which is exactly what makes fragmented
+/// placements persistent.
+#[derive(Debug, Clone)]
+pub struct PageMap {
+    page_tokens: u64,
+    channels: Vec<u32>,
+}
+
+impl PageMap {
+    pub fn new(page_tokens: u64) -> Self {
+        assert!(page_tokens > 0, "page size must be >= 1 token");
+        Self { page_tokens, channels: Vec::new() }
+    }
+
+    pub fn page_tokens(&self) -> u64 {
+        self.page_tokens
+    }
+
+    pub fn num_pages(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Pages needed to hold `tokens` KV positions.
+    pub fn pages_for(&self, tokens: u64) -> u64 {
+        tokens.div_ceil(self.page_tokens)
+    }
+
+    /// Tokens currently covered by allocated pages.
+    pub fn tokens_capacity(&self) -> u64 {
+        self.channels.len() as u64 * self.page_tokens
+    }
+
+    /// Grow the table until it covers `tokens` positions, asking `alloc`
+    /// for the channel of each newly allocated page (by global page
+    /// index, in order). Never shrinks or moves existing pages.
+    pub fn grow_to(&mut self, tokens: u64, mut alloc: impl FnMut(u64) -> u32) {
+        let need = self.pages_for(tokens);
+        while (self.channels.len() as u64) < need {
+            let page = self.channels.len() as u64;
+            let chan = alloc(page);
+            self.channels.push(chan);
+        }
+    }
+
+    /// Channel holding page `page`. Panics if the page was never
+    /// allocated — builders must size the map before emission.
+    pub fn channel_of_page(&self, page: u64) -> u32 {
+        self.channels[page as usize]
+    }
+
+    /// Channel holding the page that contains token `tok`.
+    pub fn channel_of_token(&self, tok: u64) -> u32 {
+        self.channels[(tok / self.page_tokens) as usize]
+    }
+
+    /// Split the token range `[tok0, tok0 + ntok)` into `(channel, bytes)`
+    /// transfer segments at page granularity, merging adjacent pages that
+    /// landed on the same channel (contiguous same-channel tokens are one
+    /// DMA). `bytes_per_token` carries the K+V payload per position.
+    pub fn segments(&self, tok0: u64, ntok: u64, bytes_per_token: u64, out: &mut Vec<(u32, u64)>) {
+        out.clear();
+        let end = tok0 + ntok;
+        let mut t = tok0;
+        while t < end {
+            let page = t / self.page_tokens;
+            let page_end = ((page + 1) * self.page_tokens).min(end);
+            let chan = self.channels[page as usize];
+            let bytes = (page_end - t) * bytes_per_token;
+            match out.last_mut() {
+                Some(last) if last.0 == chan => last.1 += bytes,
+                _ => out.push((chan, bytes)),
+            }
+            t = page_end;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_monotonically_and_in_order() {
+        let mut pm = PageMap::new(16);
+        let mut asked = Vec::new();
+        pm.grow_to(40, |p| {
+            asked.push(p);
+            p as u32
+        });
+        assert_eq!(asked, vec![0, 1, 2]);
+        assert_eq!(pm.num_pages(), 3);
+        assert_eq!(pm.tokens_capacity(), 48);
+        // Growing to a smaller/equal size allocates nothing new.
+        pm.grow_to(48, |_| panic!("no new pages expected"));
+        pm.grow_to(49, |p| p as u32);
+        assert_eq!(pm.num_pages(), 4);
+        assert_eq!(pm.channel_of_token(47), 2);
+        assert_eq!(pm.channel_of_page(3), 3);
+    }
+
+    #[test]
+    fn segments_split_and_merge_by_channel() {
+        let mut pm = PageMap::new(8);
+        // Channels per page: 0 0 1 2 2 — adjacent same-channel pages merge.
+        let chans = [0u32, 0, 1, 2, 2];
+        pm.grow_to(40, |p| chans[p as usize]);
+        let mut out = Vec::new();
+        pm.segments(0, 40, 4, &mut out);
+        assert_eq!(out, vec![(0, 64), (1, 32), (2, 64)]);
+        // A sub-range honoring partial first/last pages: [6, 18) spans the
+        // merged channel-0 run and two tokens of the channel-1 page.
+        pm.segments(6, 12, 4, &mut out);
+        assert_eq!(out, vec![(0, 40), (1, 8)]);
+        // A range within one page.
+        pm.segments(17, 3, 4, &mut out);
+        assert_eq!(out, vec![(1, 12)]);
+        // Byte conservation: segments always sum to ntok · bytes_per_token.
+        for (t0, n) in [(0u64, 40u64), (3, 21), (8, 8), (39, 1)] {
+            pm.segments(t0, n, 4, &mut out);
+            let total: u64 = out.iter().map(|&(_, b)| b).sum();
+            assert_eq!(total, n * 4, "range ({t0}, {n})");
+        }
+    }
+
+    #[test]
+    fn empty_range_yields_no_segments() {
+        let mut pm = PageMap::new(8);
+        pm.grow_to(8, |_| 0);
+        let mut out = vec![(9u32, 9u64)];
+        pm.segments(3, 0, 4, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "page size")]
+    fn zero_page_size_rejected() {
+        let _ = PageMap::new(0);
+    }
+}

@@ -16,6 +16,7 @@ pub mod hbm;
 pub mod dataflow;
 pub mod functional;
 pub mod runtime;
+pub mod scheduler;
 pub mod coordinator;
 pub mod analytics;
 pub mod report;

@@ -21,6 +21,10 @@ use flatattention::functional::{attention_golden, run_flat_group_functional, Nat
 use flatattention::functional::RuntimeCompute;
 use flatattention::report::{self, ReportOpts};
 use flatattention::runtime::{artifacts_available, default_artifact_dir};
+use flatattention::scheduler::batch::validate_slots;
+use flatattention::scheduler::{
+    simulate, BatchPolicy, PagePlacement, RequestTrace, SchedulerConfig,
+};
 #[cfg(feature = "pjrt")]
 use flatattention::runtime::Runtime;
 use flatattention::util::cli::{parse, Args};
@@ -28,7 +32,7 @@ use flatattention::util::{pool, Rng, Tensor};
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match parse(&raw, &["quick", "help", "pjrt-only", "causal", "decode"]) {
+    let args = match parse(&raw, &["quick", "help", "pjrt-only", "causal", "decode", "static"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -44,6 +48,7 @@ fn main() {
         "report" => cmd_report(&args),
         "run" => cmd_run(&args),
         "sweep" => cmd_sweep(&args),
+        "schedule" => cmd_schedule(&args),
         "validate" => cmd_validate(&args),
         "trace" => cmd_trace(&args),
         "info" => cmd_info(),
@@ -61,19 +66,25 @@ fn print_usage() {
         "flatattention — FlatAttention dataflow + fabric collectives co-optimization (reproduction)
 
 USAGE:
-  flatattention report <fig3|fig4|fig5a|fig5b|fig5c|table1|table2|section2|area|headline|ablations|serving|all>
+  flatattention report <fig3|fig4|fig5a|fig5b|fig5c|table1|table2|section2|area|headline|ablations|serving|schedule|all>
                       [--quick] [--threads N] [--out results.json]
   flatattention run    --dataflow <fa2|fa3|flat|flatcoll|flatasyn> [--seq 4096] [--d 128]
                       [--heads 32] [--batch 2] [--group 32] [--arch table1]
   flatattention sweep  [--seq 4096] [--d 128] [--heads 32] [--batch 2] [--dataflow flatasyn]
+  flatattention schedule [--trace builtin|burst|FILE.csv] [--dataflow all] [--slots 4]
+                      [--chunk 512] [--page-tokens 64] [--placement affine|rr|random]
+                      [--group G] [--window W] [--static] [--arch table1]
+                      (continuous batching of a mixed prefill+decode request trace;
+                       CSV rows: arrival,prompt,output[,kv_heads])
   flatattention validate [--seq 256] [--d 64] [--group 4] [--pjrt-only]
   flatattention trace  [run options] [--tiles 64] --out trace.json   (chrome://tracing)
   flatattention info
 
 Architectures: --arch <table1|swcoll|table2-32|table2-16|table2-8> or --arch-file configs/foo.toml
-Workloads: --seq S --d D --heads H --batch B [--causal] [--kv-heads K] [--decode]
+Workloads: --seq S --d D --heads H --batch B [--causal] [--kv-heads K] [--decode] [--window W]
   --kv-heads K   GQA/MQA: K K/V heads shared by H query heads (K divides H)
-  --decode       single-token decode against an S-long KV cache (else prefill)"
+  --decode       single-token decode against an S-long KV cache (else prefill)
+  --window W     sliding-window attention over the last W positions (implies --causal)"
     );
 }
 
@@ -121,6 +132,10 @@ fn workload_from(args: &Args) -> Result<Workload, String> {
     if args.flag("decode") {
         wl = wl.with_phase(Phase::Decode);
     }
+    let window = args.get_u64("window", 0)?;
+    if window > 0 {
+        wl = wl.with_window(window);
+    }
     Ok(wl)
 }
 
@@ -165,10 +180,13 @@ fn cmd_report(args: &Args) -> i32 {
     if all || which == "serving" {
         println!("{}", report::serving::render(&opts, Some(&mut store)));
     }
+    if all || which == "schedule" {
+        println!("{}", report::schedule::render(&opts, Some(&mut store)));
+    }
     if !matches!(
         which,
         "all" | "table1" | "table2" | "section2" | "area" | "fig3" | "fig4" | "fig5a" | "fig5b"
-            | "fig5c" | "headline" | "ablations" | "serving"
+            | "fig5c" | "headline" | "ablations" | "serving" | "schedule"
     ) {
         eprintln!("unknown report '{which}'");
         return 1;
@@ -255,6 +273,115 @@ fn cmd_sweep(args: &Args) -> i32 {
     }
     let best = best_group(&arch, &workload, dataflow, threads);
     println!("best: {0}x{0} ({1:.3} ms)", best.group, best.runtime_ms);
+    0
+}
+
+fn cmd_schedule(args: &Args) -> i32 {
+    let arch = match arch_from(args) {
+        Ok(a) => a,
+        Err(e) => return fail(&e),
+    };
+    let heads = args.get_u64("heads", 32).unwrap_or(32);
+    let head_dim = args.get_u64("d", 128).unwrap_or(128);
+    let kv_default = args
+        .get_u64("kv-heads", if heads % 8 == 0 { 8 } else { heads })
+        .unwrap_or(heads);
+    if heads == 0 || head_dim == 0 || kv_default == 0 || heads % kv_default != 0 {
+        return fail(&format!(
+            "--kv-heads {kv_default} must divide --heads {heads} (both non-zero)"
+        ));
+    }
+    let trace_arg = args.get_or("trace", "builtin");
+    let trace = match RequestTrace::builtin(trace_arg, kv_default) {
+        Some(t) => t,
+        None => match std::fs::read_to_string(trace_arg) {
+            Ok(text) => match RequestTrace::parse(&text, kv_default) {
+                Ok(t) => t,
+                Err(e) => return fail(&format!("parsing trace {trace_arg}: {e}")),
+            },
+            Err(e) => {
+                return fail(&format!(
+                    "--trace {trace_arg}: not a builtin trace (builtin|mixed|burst) and not a \
+                     readable file ({e})"
+                ))
+            }
+        },
+    };
+    let slots = args.get_usize("slots", 4).unwrap_or(4);
+    // Slot geometry alone first (group-agnostic: Flash2 ignores it).
+    if let Err(e) = validate_slots(&arch, slots, 1, Dataflow::Flash2) {
+        return fail(&e);
+    }
+    let rows_per = arch.mesh_y / slots;
+    let default_group = [8usize, 4, 2, 1]
+        .into_iter()
+        .find(|g| rows_per % g == 0 && arch.mesh_x % g == 0)
+        .unwrap_or(1);
+    let group = args.get_usize("group", default_group).unwrap_or(default_group);
+    // Full band/group geometry as the scheduler itself will check it.
+    if let Err(e) = validate_slots(&arch, slots, group, Dataflow::FlatColl) {
+        return fail(&e);
+    }
+    let chunk = args.get_u64("chunk", 512).unwrap_or(512);
+    let page_tokens = args.get_u64("page-tokens", 64).unwrap_or(64);
+    if chunk == 0 || page_tokens == 0 {
+        return fail("--chunk and --page-tokens must be >= 1");
+    }
+    let placement_arg = args.get_or("placement", "affine");
+    let Some(placement) = PagePlacement::from_label(placement_arg) else {
+        return fail(&format!(
+            "unknown --placement '{placement_arg}' (affine|rr|round-robin|random)"
+        ));
+    };
+    let window = args.get_u64("window", 0).unwrap_or(0);
+    let policy = if args.flag("static") { BatchPolicy::Static } else { BatchPolicy::Continuous };
+
+    let df_arg = args.get_or("dataflow", "all");
+    let dataflows: Vec<Dataflow> = if df_arg == "all" {
+        flatattention::dataflow::ALL_DATAFLOWS.to_vec()
+    } else {
+        match Dataflow::from_label(df_arg) {
+            Some(df) => vec![df],
+            None => return fail(&format!("unknown dataflow '{df_arg}'")),
+        }
+    };
+
+    println!(
+        "serving schedule on {}: {} requests, slots={slots}, chunk={chunk}, pages={page_tokens} \
+         tok, placement={}, {}{}",
+        arch.name,
+        trace.requests.len(),
+        placement.label(),
+        if policy == BatchPolicy::Static { "static batching" } else { "continuous batching" },
+        if window > 0 { format!(", window={window}") } else { String::new() },
+    );
+    println!(
+        "{:>9}  {:>10}  {:>9}  {:>9}  {:>9}  {:>8}  {:>6}",
+        "dataflow", "tokens/s", "TTFT_ms", "TPOT_ms", "occup", "HBM_GB", "steps"
+    );
+    for df in dataflows {
+        let mut cfg = SchedulerConfig::new(df);
+        cfg.group = group;
+        cfg.slots = slots;
+        cfg.chunk = chunk;
+        cfg.page_tokens = page_tokens;
+        cfg.placement = placement;
+        cfg.policy = policy;
+        cfg.heads = heads;
+        cfg.head_dim = head_dim;
+        cfg.window = window;
+        let r = simulate(&arch, &trace, &cfg);
+        println!(
+            "{:>9}  {:>10.0}  {:>9.3}  {:>9.4}  {:>8.1}%  {:>8.3}  {:>6}",
+            df.label(),
+            r.tokens_per_s,
+            r.ttft_mean_ms,
+            r.tpot_mean_ms,
+            r.occupancy * 100.0,
+            r.hbm_bytes as f64 / 1e9,
+            r.steps
+        );
+    }
     0
 }
 

@@ -1,0 +1,267 @@
+//! Mixed prefill+decode batch-program composition.
+//!
+//! One scheduler step turns the set of in-flight requests into ONE
+//! [`Program`]: each request contributes either a chunked-prefill row
+//! block span or a single decode row, emitted onto its own horizontal
+//! *band* of tile rows (`mesh_y / slots` rows per slot), while HBM
+//! channels are shared chip-wide — so a request's compute is private but
+//! its paged K/V placement contends with every other request's traffic on
+//! the channels its pages landed on. Composition preserves the per-request
+//! fold machinery (each band's first tile/group is that request's
+//! representative stream) and is *conservative*: on an architecture where
+//! the entries' channels don't overlap, each entry's op timeline is
+//! bit-identical to composing that entry alone (asserted by
+//! `tests/scheduler_integration.rs`).
+
+use crate::arch::ArchConfig;
+use crate::dataflow::{flash, flat, Dataflow, Workload};
+use crate::hbm::PageMap;
+use crate::sim::{execute, execute_traced, Cycle, Program, ProgramArena, RunStats};
+
+/// One request's contribution to a batch step.
+#[derive(Debug)]
+pub struct BatchEntry<'a> {
+    /// Trace index of the request (metrics label only).
+    pub request: usize,
+    /// Scheduler slot — selects the entry's tile-row band.
+    pub slot: usize,
+    /// The step's workload: a causal chunked-prefill span
+    /// (`kv_prefix = tokens already prefilled`) or a decode row
+    /// (`seq = current cache length`). `batch == 1`.
+    pub workload: Workload,
+    /// Channel placement of the request's KV cache; must cover
+    /// `workload.kv_len()` tokens.
+    pub pages: &'a PageMap,
+}
+
+/// A composed batch program plus each entry's contiguous op span.
+#[derive(Debug)]
+pub struct BatchProgram {
+    pub program: Program,
+    /// Per entry: `[start, end)` op range, in `entries` order.
+    pub spans: Vec<(usize, usize)>,
+}
+
+/// Per-entry execution summary extracted from a traced run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EntryStats {
+    /// Completion cycle of the entry's last tile-owned op.
+    pub completion: Cycle,
+    /// HBM bytes moved by the entry's ops.
+    pub hbm_bytes: u64,
+    /// `(span-relative op id, start, complete)` for every tile-owned op,
+    /// sorted by op id — the conservation-test observable.
+    pub trace: Vec<(u32, Cycle, Cycle)>,
+}
+
+impl BatchProgram {
+    /// Execute the composed program (breakdown tracked on tile 0 — slot
+    /// 0's representative).
+    pub fn run(&self) -> RunStats {
+        execute(&self.program, 0)
+    }
+
+    /// Execute with full tracing and split the records per entry span.
+    pub fn entry_stats(&self) -> (RunStats, Vec<EntryStats>) {
+        let (stats, mut records) = execute_traced(&self.program, 0, Some(u32::MAX));
+        records.sort_unstable_by_key(|r| r.0);
+        let out = self
+            .spans
+            .iter()
+            .map(|&(s, e)| {
+                let lo = records.partition_point(|r| (r.0 as usize) < s);
+                let hi = records.partition_point(|r| (r.0 as usize) < e);
+                let trace: Vec<(u32, Cycle, Cycle)> = records[lo..hi]
+                    .iter()
+                    .map(|&(op, st, en)| (op - s as u32, st, en))
+                    .collect();
+                EntryStats {
+                    completion: trace.iter().map(|r| r.2).max().unwrap_or(0),
+                    hbm_bytes: self.program.ops()[s..e].iter().map(|o| o.hbm_bytes).sum(),
+                    trace,
+                }
+            })
+            .collect();
+        (stats, out)
+    }
+}
+
+/// Validate a slot count against the mesh (bands must tile the rows).
+pub fn validate_slots(
+    arch: &ArchConfig,
+    slots: usize,
+    group: usize,
+    df: Dataflow,
+) -> Result<usize, String> {
+    if slots == 0 || arch.mesh_y % slots != 0 {
+        return Err(format!(
+            "slots {slots} must divide the {}-row mesh (each slot owns a tile-row band)",
+            arch.mesh_y
+        ));
+    }
+    let rows_per = arch.mesh_y / slots;
+    if df.is_flat() && (group == 0 || rows_per % group != 0 || arch.mesh_x % group != 0) {
+        return Err(format!(
+            "group {group} must divide both the {rows_per}-row slot band and the {}-column mesh",
+            arch.mesh_x
+        ));
+    }
+    Ok(rows_per)
+}
+
+/// Compose a batch program from `entries` on `arch` under dataflow `df`
+/// (`group` applies to the FlatAttention family). Entries must occupy
+/// distinct slots below `slots`.
+pub fn compose(
+    arch: &ArchConfig,
+    df: Dataflow,
+    group: usize,
+    slots: usize,
+    entries: &[BatchEntry<'_>],
+) -> BatchProgram {
+    compose_in(&mut ProgramArena::new(), arch, df, group, slots, entries)
+}
+
+/// Like [`compose`], constructing into buffers recycled by `arena` — the
+/// scheduler's per-step entry point.
+pub fn compose_in(
+    arena: &mut ProgramArena,
+    arch: &ArchConfig,
+    df: Dataflow,
+    group: usize,
+    slots: usize,
+    entries: &[BatchEntry<'_>],
+) -> BatchProgram {
+    let rows_per = match validate_slots(arch, slots, group, df) {
+        Ok(r) => r,
+        Err(e) => panic!("compose: {e}"),
+    };
+    assert!(!entries.is_empty(), "compose: empty batch");
+    for (k, e) in entries.iter().enumerate() {
+        assert!(e.slot < slots, "entry {k}: slot {} out of range (slots {slots})", e.slot);
+        assert!(
+            entries[..k].iter().all(|p| p.slot != e.slot),
+            "entry {k}: slot {} already occupied",
+            e.slot
+        );
+        assert!(
+            e.pages.tokens_capacity() >= e.workload.kv_len(),
+            "entry {k}: page map covers {} tokens but the cache holds {}",
+            e.pages.tokens_capacity(),
+            e.workload.kv_len()
+        );
+    }
+
+    let prog = arena.fresh();
+    let (program, spans) = match df {
+        Dataflow::Flash2 | Dataflow::Flash3 => {
+            let fe: Vec<flash::FlashBatchEntry<'_>> = entries
+                .iter()
+                .map(|e| flash::FlashBatchEntry {
+                    wl: e.workload,
+                    pages: e.pages,
+                    y0: e.slot * rows_per,
+                    y1: (e.slot + 1) * rows_per,
+                })
+                .collect();
+            flash::flash_batch_program_in(prog, arch, &fe, df == Dataflow::Flash3)
+        }
+        Dataflow::Flat | Dataflow::FlatColl | Dataflow::FlatAsyn => {
+            let mut a = arch.clone();
+            a.noc.hw_collectives = df != Dataflow::Flat;
+            let fe: Vec<flat::FlatBatchEntry<'_>> = entries
+                .iter()
+                .map(|e| flat::FlatBatchEntry {
+                    wl: e.workload,
+                    pages: e.pages,
+                    y0: e.slot * rows_per,
+                    y1: (e.slot + 1) * rows_per,
+                })
+                .collect();
+            flat::flat_batch_program_in(prog, &a, &fe, group, df == Dataflow::FlatAsyn)
+        }
+    };
+    BatchProgram { program, spans }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::dataflow::ALL_DATAFLOWS;
+
+    fn pages_for(tokens: u64, chan: u32) -> PageMap {
+        let mut pm = PageMap::new(32);
+        pm.grow_to(tokens, |_| chan);
+        pm
+    }
+
+    #[test]
+    fn compose_builds_valid_programs_for_every_dataflow() {
+        let arch = presets::table2(8);
+        let p0 = pages_for(256, 8);
+        let p1 = pages_for(300, 9);
+        let entries = vec![
+            BatchEntry {
+                request: 0,
+                slot: 0,
+                workload: Workload::new(128, 64, 4, 1).with_causal(true).with_kv_prefix(128),
+                pages: &p0,
+            },
+            BatchEntry {
+                request: 1,
+                slot: 2,
+                workload: Workload::new(300, 64, 4, 1).with_kv_heads(2).decode(),
+                pages: &p1,
+            },
+        ];
+        for df in ALL_DATAFLOWS {
+            let bp = compose(&arch, df, 2, 4, &entries);
+            assert!(bp.program.validate().is_ok(), "{df:?}");
+            assert_eq!(bp.spans.len(), 2);
+            assert!(bp.spans[0].0 < bp.spans[0].1 && bp.spans[0].1 <= bp.spans[1].0);
+            let (stats, per) = bp.entry_stats();
+            assert!(stats.makespan > 0, "{df:?}");
+            assert!(per.iter().all(|e| e.completion > 0 && e.hbm_bytes > 0), "{df:?}");
+            // Span traffic partitions the program traffic.
+            assert_eq!(per.iter().map(|e| e.hbm_bytes).sum::<u64>(), stats.hbm_bytes, "{df:?}");
+        }
+    }
+
+    #[test]
+    fn validate_slots_rejects_bad_geometry() {
+        let arch = presets::table2(8);
+        assert!(validate_slots(&arch, 3, 1, Dataflow::Flash2).is_err());
+        assert!(validate_slots(&arch, 0, 1, Dataflow::Flash2).is_err());
+        assert!(validate_slots(&arch, 4, 4, Dataflow::FlatColl).is_err()); // band 2 % 4 != 0
+        assert_eq!(validate_slots(&arch, 4, 2, Dataflow::FlatColl), Ok(2));
+        assert_eq!(validate_slots(&arch, 2, 4, Dataflow::FlatColl), Ok(4));
+    }
+
+    #[test]
+    #[should_panic(expected = "already occupied")]
+    fn compose_rejects_duplicate_slots() {
+        let arch = presets::table2(8);
+        let p = pages_for(64, 8);
+        let wl = Workload::new(64, 64, 2, 1).with_causal(true);
+        let entries = vec![
+            BatchEntry { request: 0, slot: 1, workload: wl, pages: &p },
+            BatchEntry { request: 1, slot: 1, workload: wl, pages: &p },
+        ];
+        let _ = compose(&arch, Dataflow::Flash2, 2, 4, &entries);
+    }
+
+    #[test]
+    #[should_panic(expected = "page map covers")]
+    fn compose_rejects_undersized_page_maps() {
+        let arch = presets::table2(8);
+        let p = pages_for(64, 8);
+        let entries = vec![BatchEntry {
+            request: 0,
+            slot: 0,
+            workload: Workload::new(300, 64, 2, 1).decode(),
+            pages: &p,
+        }];
+        let _ = compose(&arch, Dataflow::Flash2, 2, 4, &entries);
+    }
+}

@@ -1,0 +1,175 @@
+//! Request traces: the serving workload input.
+//!
+//! A trace is a list of requests `(arrival cycle, prompt length, output
+//! length, kv_heads)` sorted by arrival. Built-in synthetic traces cover
+//! the common study shapes (a mixed staggered-arrival stream, an all-at-
+//! once burst with skewed output lengths for the static-vs-continuous
+//! comparison); external traces load from a simple CSV.
+
+/// One serving request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    /// Index in the trace (stable id).
+    pub id: usize,
+    /// Arrival time in simulated cycles.
+    pub arrival: u64,
+    /// Prompt (prefill) length in tokens.
+    pub prompt: u64,
+    /// Output tokens to generate (>= 1; the first is produced by the last
+    /// prefill step).
+    pub output: u64,
+    /// K/V heads of the request's model configuration (GQA/MQA).
+    pub kv_heads: u64,
+}
+
+/// A request trace, sorted by arrival time.
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    pub requests: Vec<Request>,
+}
+
+impl RequestTrace {
+    /// Build from `(arrival, prompt, output)` rows with a uniform
+    /// `kv_heads`; validates and sorts.
+    pub fn from_rows(rows: &[(u64, u64, u64)], kv_heads: u64) -> Self {
+        let rows: Vec<(u64, u64, u64, u64)> =
+            rows.iter().map(|&(a, p, o)| (a, p, o, kv_heads)).collect();
+        Self::from_full_rows(&rows)
+    }
+
+    /// Build from `(arrival, prompt, output, kv_heads)` rows.
+    pub fn from_full_rows(rows: &[(u64, u64, u64, u64)]) -> Self {
+        let mut requests: Vec<Request> = rows
+            .iter()
+            .enumerate()
+            .map(|(id, &(arrival, prompt, output, kv_heads))| {
+                assert!(prompt > 0, "request {id}: prompt must be >= 1 token");
+                assert!(output > 0, "request {id}: output must be >= 1 token");
+                assert!(kv_heads > 0, "request {id}: kv_heads must be >= 1");
+                Request { id, arrival, prompt, output, kv_heads }
+            })
+            .collect();
+        requests.sort_by_key(|r| (r.arrival, r.id));
+        Self { requests }
+    }
+
+    /// Built-in synthetic traces. `kv_heads` fills the per-request model
+    /// configuration (must divide the scheduler's query-head count).
+    ///
+    /// * `builtin` / `mixed` — 12 requests with staggered arrivals, mixed
+    ///   prompt lengths and skewed output lengths: exercises chunked
+    ///   prefill riding alongside in-flight decodes.
+    /// * `burst` — 8 requests arriving at once with outputs alternating
+    ///   8/64: the shape where continuous batching beats static batching
+    ///   (short requests free their slot while long ones keep decoding).
+    pub fn builtin(name: &str, kv_heads: u64) -> Option<Self> {
+        let rows: &[(u64, u64, u64)] = match name {
+            "builtin" | "mixed" => &[
+                (0, 384, 24),
+                (0, 768, 48),
+                (10_000, 256, 8),
+                (40_000, 1024, 64),
+                (80_000, 512, 16),
+                (120_000, 640, 32),
+                (200_000, 128, 96),
+                (220_000, 896, 12),
+                (300_000, 512, 40),
+                (340_000, 256, 24),
+                (400_000, 768, 8),
+                (420_000, 384, 56),
+            ],
+            "burst" => &[
+                (0, 512, 8),
+                (0, 512, 64),
+                (0, 512, 8),
+                (0, 512, 64),
+                (0, 512, 8),
+                (0, 512, 64),
+                (0, 512, 8),
+                (0, 512, 64),
+            ],
+            _ => return None,
+        };
+        Some(Self::from_rows(rows, kv_heads))
+    }
+
+    /// Parse a CSV trace: one request per line as
+    /// `arrival,prompt,output[,kv_heads]`; blank lines and `#` comments
+    /// are skipped. `default_kv_heads` fills the optional column.
+    pub fn parse(text: &str, default_kv_heads: u64) -> Result<Self, String> {
+        let mut rows: Vec<(u64, u64, u64, u64)> = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').map(|f| f.trim()).collect();
+            if fields.len() < 3 || fields.len() > 4 {
+                return Err(format!(
+                    "line {}: expected 'arrival,prompt,output[,kv_heads]', got '{line}'",
+                    lineno + 1
+                ));
+            }
+            let mut nums = [0u64; 4];
+            nums[3] = default_kv_heads;
+            for (k, f) in fields.iter().enumerate() {
+                nums[k] = f
+                    .parse()
+                    .map_err(|_| format!("line {}: bad integer '{f}'", lineno + 1))?;
+            }
+            if nums[1] == 0 || nums[2] == 0 || nums[3] == 0 {
+                return Err(format!(
+                    "line {}: prompt, output and kv_heads must be >= 1",
+                    lineno + 1
+                ));
+            }
+            rows.push((nums[0], nums[1], nums[2], nums[3]));
+        }
+        if rows.is_empty() {
+            return Err("trace holds no requests".into());
+        }
+        Ok(Self::from_full_rows(&rows))
+    }
+
+    /// Total output tokens the trace will generate.
+    pub fn total_output_tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.output).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_traces_sorted_and_valid() {
+        for name in ["builtin", "mixed", "burst"] {
+            let t = RequestTrace::builtin(name, 8).expect(name);
+            assert!(!t.requests.is_empty());
+            assert!(t.requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+            assert!(t.requests.iter().all(|r| r.kv_heads == 8));
+            assert!(t.total_output_tokens() > 0);
+        }
+        assert!(RequestTrace::builtin("nope", 8).is_none());
+    }
+
+    #[test]
+    fn parse_csv_with_defaults_comments_and_sorting() {
+        let text = "# arrival,prompt,output[,kv_heads]\n\n40,128,4\n0,256,8,2\n";
+        let t = RequestTrace::parse(text, 8).unwrap();
+        assert_eq!(t.requests.len(), 2);
+        // Sorted by arrival: the 0-cycle request first.
+        assert_eq!(t.requests[0].arrival, 0);
+        assert_eq!(t.requests[0].kv_heads, 2);
+        assert_eq!(t.requests[1].kv_heads, 8); // default filled in
+        assert_eq!(t.requests[1].prompt, 128);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(RequestTrace::parse("1,2\n", 8).is_err());
+        assert!(RequestTrace::parse("a,2,3\n", 8).is_err());
+        assert!(RequestTrace::parse("1,0,3\n", 8).is_err());
+        assert!(RequestTrace::parse("# only a comment\n", 8).is_err());
+    }
+}

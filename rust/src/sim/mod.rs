@@ -57,9 +57,12 @@
 //!   content key (including the folding switch) so identical points
 //!   shared between figures simulate once.
 //!
-//! Next levers (see ROADMAP): parallel per-head execution inside one
-//! program, and reusing the sealed CSR across `double_buffer` ablation
-//! variants.
+//! The `double_buffer` ablation pair is now derived from one builder
+//! pass (`dataflow::double_buffer_programs`): the variants share their op
+//! topology and differ only in K/V prefetch dependencies, so the second
+//! program is a buffer clone + dependency retarget + reseal instead of a
+//! full rebuild. Next lever (see ROADMAP): parallel per-head execution
+//! inside one program.
 
 pub mod arena;
 pub mod breakdown;

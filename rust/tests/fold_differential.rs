@@ -24,6 +24,8 @@ use flatattention::dataflow::{
     build_program, set_symmetry_folding, set_template_stamping, tracked_tile, Dataflow, Phase,
     Workload, ALL_DATAFLOWS,
 };
+use flatattention::hbm::PageMap;
+use flatattention::scheduler::batch::{compose, BatchEntry};
 use flatattention::sim::{execute, execute_traced, RunStats};
 use flatattention::util::quickcheck::{check, forall_cases};
 
@@ -153,6 +155,55 @@ fn fold_class_count_and_op_conservation_on_table1() {
         unfolded8.num_ops() as u64
     );
     assert!(folded8.num_ops() * 2 < unfolded8.num_ops());
+}
+
+#[test]
+fn mixed_batch_composition_folds_exactly() {
+    // The scheduler's composed mixed prefill+decode programs must
+    // preserve fold exactness *per request*: every entry's band folds
+    // around its own representative stream, and the folded batch executes
+    // bit-identically to the unfolded one. (Stamping is bypassed in paged
+    // batch programs, so the folding switch is the only mode axis.)
+    let _guard = FOLD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arch = presets::table2(8);
+    let mut pages: Vec<PageMap> = Vec::new();
+    let wls = [
+        Workload::new(128, 64, 4, 1).with_kv_heads(2).with_causal(true),
+        Workload::new(96, 64, 4, 1).with_causal(true).with_kv_prefix(160),
+        Workload::new(300, 64, 4, 1).with_kv_heads(1).decode(),
+    ];
+    for (k, wl) in wls.iter().enumerate() {
+        let mut pm = PageMap::new(32);
+        // Stripe pages over all 16 channels, offset per request, so the
+        // folded/unfolded comparison also covers cross-entry contention.
+        pm.grow_to(wl.kv_len(), |p| ((p + 5 * k as u64) % 16) as u32);
+        pages.push(pm);
+    }
+    for df in [Dataflow::Flash2, Dataflow::Flat, Dataflow::FlatColl, Dataflow::Flash3] {
+        let entries: Vec<BatchEntry<'_>> = wls
+            .iter()
+            .enumerate()
+            .map(|(k, wl)| BatchEntry { request: k, slot: k, workload: *wl, pages: &pages[k] })
+            .collect();
+        set_symmetry_folding(true);
+        let folded = compose(&arch, df, 2, 4, &entries);
+        set_symmetry_folding(false);
+        let unfolded = compose(&arch, df, 2, 4, &entries);
+        set_symmetry_folding(true);
+        let asynchronous = matches!(df, Dataflow::Flash3 | Dataflow::FlatAsyn);
+        if asynchronous {
+            assert_eq!(folded.program.fold.streams, 0, "{df:?} must not fold");
+        } else {
+            assert!(folded.program.fold.streams > 0, "{df:?} should fold per band");
+            assert_eq!(
+                folded.program.num_ops() as u64 + folded.program.fold.ops,
+                unfolded.program.num_ops() as u64,
+                "{df:?} op conservation"
+            );
+        }
+        assert_eq!(folded.spans.len(), unfolded.spans.len());
+        assert_eq!(execute(&folded.program, 0), execute(&unfolded.program, 0), "{df:?}");
+    }
 }
 
 #[test]
