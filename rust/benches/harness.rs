@@ -9,6 +9,16 @@
 
 use std::time::Instant;
 
+/// True when `BENCH_SMOKE` is set (and not `0`): CI smoke mode. Each
+/// harness shrinks its sweep grids / iteration counts so the whole bench
+/// suite finishes in minutes while still measuring every recorded metric
+/// for real — the `rust-bench` CI job runs with this knob and checks the
+/// in-bench targets on the produced `BENCH_*.json`.
+#[allow(dead_code)]
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").is_ok_and(|v| !v.is_empty() && v != "0")
+}
+
 /// Measure `f` for `iters` iterations after one warmup; prints a
 /// `test ... bench:` style line and returns the mean seconds per iter.
 #[allow(dead_code)]
@@ -84,6 +94,14 @@ impl Recorder {
     /// Mean seconds of a recorded measurement by name.
     pub fn mean_of(&self, name: &str) -> Option<f64> {
         self.measurements.iter().find(|m| m.name == name).map(|m| m.mean_s)
+    }
+
+    /// Minimum (best-of-N) seconds of a recorded measurement by name —
+    /// the noise-robust basis for speedup ratios that gate CI (a single
+    /// noisy-neighbor interval on a shared runner skews a mean, not a
+    /// minimum).
+    pub fn min_of(&self, name: &str) -> Option<f64> {
+        self.measurements.iter().find(|m| m.name == name).map(|m| m.min_s)
     }
 
     /// Serialize to a JSON string (no external deps; flat schema).

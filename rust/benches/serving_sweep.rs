@@ -21,17 +21,21 @@ const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving_sw
 const GROUP: usize = 8;
 
 fn main() {
+    let smoke = harness::smoke();
+    let iters = if smoke { 1 } else { 3 };
     let arch = presets::table1();
     let mut rec = harness::Recorder::new();
 
     // The report::serving grid, bench-sized: one batch per phase so a
-    // full iteration stays in seconds.
-    let prefill: Vec<Workload> = [32u64, 8, 1]
+    // full iteration stays in seconds. `BENCH_SMOKE` keeps one sequence
+    // length per phase (the modeled-headline section below stays at
+    // S=4096 either way — its targets are scale-dependent).
+    let kv_grid: &[u64] = if smoke { &[32, 1] } else { &[32, 8, 1] };
+    let seq_grid: &[u64] = if smoke { &[512] } else { &[512, 4096] };
+    let prefill: Vec<Workload> = kv_grid
         .iter()
         .flat_map(|&kv| {
-            [512u64, 4096]
-                .iter()
-                .map(move |&s| Workload::new(s, 128, 32, 4).with_kv_heads(kv))
+            seq_grid.iter().map(move |&s| Workload::new(s, 128, 32, 4).with_kv_heads(kv))
         })
         .collect();
     let decode: Vec<Workload> = prefill.iter().map(|wl| wl.decode()).collect();
@@ -39,7 +43,7 @@ fn main() {
     harness::section("serving sweep (all dataflows, Table I arch, G=8x8)");
     for (phase, wls) in [("prefill", &prefill), ("decode", &decode)] {
         let points = wls.len() * ALL_DATAFLOWS.len();
-        let mean = rec.bench(&format!("sweep/{phase} ({points} points)"), 3, || {
+        let mean = rec.bench(&format!("sweep/{phase} ({points} points)"), iters, || {
             let mut acc = 0u64;
             for wl in wls {
                 for df in ALL_DATAFLOWS {

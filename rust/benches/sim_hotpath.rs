@@ -4,44 +4,53 @@
 //! queue) against the retained seed baseline (naive per-block emission +
 //! `BinaryHeap` reference executor, which re-derives the CSR per run),
 //! reports events/second at several scales, measures the symmetry-folding
-//! speedup on the Flash 32×32 grid sweep, and writes machine-readable
-//! results to `BENCH_sim_hotpath.json` at the repo root.
+//! speedup on the Flash 32×32 grid sweep, measures the sharded parallel
+//! executor plus the end-to-end parallel sweep path (`sim_parallel`
+//! section: `parallel_e2e_speedup`, target ≥ 2x at 8 threads), and writes
+//! machine-readable results to `BENCH_sim_hotpath.json` at the repo root.
 //!
 //!     cargo bench --bench sim_hotpath
+//!
+//! `BENCH_SMOKE=1` shrinks grids and iteration counts for CI (the
+//! `rust-bench` job), keeping every recorded metric measured for real.
 
 #[path = "harness.rs"]
 mod harness;
 
 use flatattention::arch::presets;
+use flatattention::coordinator::{run_all_uncached, ExperimentSpec};
 use flatattention::dataflow::{
     build_program, build_program_in, run, set_symmetry_folding, set_template_stamping,
     tracked_tile, Dataflow, Workload,
 };
-use flatattention::sim::{execute, execute_reference, ProgramArena};
+use flatattention::sim::{execute, execute_parallel, execute_reference, ProgramArena};
 
 const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim_hotpath.json");
 
 fn main() {
+    let smoke = harness::smoke();
+    let iters = if smoke { 2 } else { 5 };
     let arch = presets::table1();
     let mut rec = harness::Recorder::new();
-    let cases = [
+    let all_cases = [
         ("flat  S4096 D128 H32 B2 G32", Workload::new(4096, 128, 32, 2), Dataflow::FlatAsyn, 32),
         ("flat  S2048 D128 H32 B4 G8 ", Workload::new(2048, 128, 32, 4), Dataflow::FlatAsyn, 8),
         ("flash S4096 D128 H32 B2    ", Workload::new(4096, 128, 32, 2), Dataflow::Flash3, 1),
     ];
+    let cases = if smoke { &all_cases[..1] } else { &all_cases[..] };
 
     harness::section("program construction (template-stamped + arena vs naive)");
     let mut arena = ProgramArena::new();
     for (label, wl, df, g) in cases {
-        let p = build_program(&arch, &wl, df, g);
+        let p = build_program(&arch, wl, *df, *g);
         println!("  {label}: {} ops, {} resources", p.num_ops(), p.num_resources());
         rec.metric(&format!("num_ops {label}"), p.num_ops() as f64);
         set_template_stamping(false);
-        rec.bench(&format!("build/naive   {label}"), 5, || build_program(&arch, &wl, df, g));
+        rec.bench(&format!("build/naive   {label}"), iters, || build_program(&arch, wl, *df, *g));
         set_template_stamping(true);
-        rec.bench(&format!("build/stamped {label}"), 5, || build_program(&arch, &wl, df, g));
-        rec.bench(&format!("build/arena   {label}"), 5, || {
-            let p = build_program_in(&mut arena, &arch, &wl, df, g);
+        rec.bench(&format!("build/stamped {label}"), iters, || build_program(&arch, wl, *df, *g));
+        rec.bench(&format!("build/arena   {label}"), iters, || {
+            let p = build_program_in(&mut arena, &arch, wl, *df, *g);
             let n = p.num_ops();
             arena.recycle(p);
             n
@@ -50,18 +59,18 @@ fn main() {
 
     harness::section("DES execution (indexed queue + sealed CSR vs seed heap engine)");
     for (label, wl, df, g) in cases {
-        let p = build_program(&arch, &wl, df, g);
+        let p = build_program(&arch, wl, *df, *g);
         let n = p.num_ops();
-        let tracked = tracked_tile(&arch, df, g);
-        rec.bench(&format!("execute/reference {label}"), 5, || execute_reference(&p, tracked));
-        let mean = rec.bench(&format!("execute/indexed   {label}"), 5, || execute(&p, tracked));
+        let tracked = tracked_tile(&arch, *df, *g);
+        rec.bench(&format!("execute/reference {label}"), iters, || execute_reference(&p, tracked));
+        let mean = rec.bench(&format!("execute/indexed   {label}"), iters, || execute(&p, tracked));
         println!("    -> {:.2} M ops/s (indexed)", n as f64 / mean / 1e6);
         rec.metric(&format!("mops_per_s {label}"), n as f64 / mean / 1e6);
     }
 
     harness::section("end-to-end (build + execute, FlatAsyn S4096 D128)");
-    let (label, wl, df, g) = cases[0];
-    let tracked = tracked_tile(&arch, df, g);
+    let (label, wl, df, g) = &cases[0];
+    let tracked = tracked_tile(&arch, *df, *g);
     // Seed-equivalent baseline: naive builder + heap engine, unfolded.
     // The builder now always seals, which the seed never paid (the heap
     // engine derives its own CSR), so the raw baseline over-counts by
@@ -72,21 +81,21 @@ fn main() {
     // bound vs the seed.)
     set_template_stamping(false);
     set_symmetry_folding(false);
-    let base_raw = rec.bench("e2e/baseline full run flatasyn S4096 D128", 5, || {
-        let p = build_program(&arch, &wl, df, g);
+    let base_raw = rec.bench("e2e/baseline full run flatasyn S4096 D128", iters, || {
+        let p = build_program(&arch, wl, *df, *g);
         execute_reference(&p, tracked)
     });
     set_template_stamping(true);
     set_symmetry_folding(true);
-    let mut p_seal = build_program(&arch, &wl, df, g);
-    let seal_cost = rec.bench("csr/seal (baseline correction)", 5, || {
+    let mut p_seal = build_program(&arch, wl, *df, *g);
+    let seal_cost = rec.bench("csr/seal (baseline correction)", iters, || {
         p_seal.unseal();
         p_seal.seal();
     });
     let base = (base_raw - seal_cost).max(0.0);
     // Optimized path as `dataflow::run` executes it (arena-recycled).
-    let opt = rec.bench("e2e/optimized full run flatasyn S4096 D128", 5, || {
-        let p = build_program_in(&mut arena, &arch, &wl, df, g);
+    let opt = rec.bench("e2e/optimized full run flatasyn S4096 D128", iters, || {
+        let p = build_program_in(&mut arena, &arch, wl, *df, *g);
         let stats = execute(&p, tracked);
         arena.recycle(p);
         stats
@@ -105,19 +114,22 @@ fn main() {
     // keeps the 1/32-per-channel contention exact while collapsing 1023
     // streams' private compute. Sweep a few layer shapes end to end
     // (build + execute through `dataflow::run`'s arena path).
-    let fold_sweep = [
+    let all_fold_sweep = [
         Workload::new(4096, 128, 64, 2),
         Workload::new(4096, 128, 32, 2),
         Workload::new(2048, 128, 64, 1),
         Workload::new(2048, 64, 32, 2),
     ];
+    let fold_sweep = if smoke { &all_fold_sweep[2..] } else { &all_fold_sweep[..] };
+    let fold_iters = if smoke { 2 } else { 3 };
     {
         let p_folded = build_program(&arch, &fold_sweep[0], Dataflow::Flash2, 1);
         set_symmetry_folding(false);
         let p_unfolded = build_program(&arch, &fold_sweep[0], Dataflow::Flash2, 1);
         set_symmetry_folding(true);
         println!(
-            "  flash2 S4096 D128 H64 B2: {} ops folded ({} streams) vs {} unfolded",
+            "  flash2 {}: {} ops folded ({} streams) vs {} unfolded",
+            fold_sweep[0].label(),
             p_folded.num_ops(),
             p_folded.fold.streams,
             p_unfolded.num_ops()
@@ -127,14 +139,14 @@ fn main() {
         rec.metric("fold_streams", p_folded.fold.streams as f64);
     }
     set_symmetry_folding(false);
-    let unfolded_t = rec.bench("fold/e2e unfolded flash2 32x32 sweep", 3, || {
+    let unfolded_t = rec.bench("fold/e2e unfolded flash2 32x32 sweep", fold_iters, || {
         fold_sweep
             .iter()
             .map(|wl| run(&arch, wl, Dataflow::Flash2, 1).makespan)
             .sum::<u64>()
     });
     set_symmetry_folding(true);
-    let folded_t = rec.bench("fold/e2e folded   flash2 32x32 sweep", 3, || {
+    let folded_t = rec.bench("fold/e2e folded   flash2 32x32 sweep", fold_iters, || {
         fold_sweep
             .iter()
             .map(|wl| run(&arch, wl, Dataflow::Flash2, 1).makespan)
@@ -146,11 +158,81 @@ fn main() {
     rec.metric("fold_e2e_folded_s", folded_t);
     rec.metric("fold_e2e_speedup", fold_speedup);
 
+    harness::section("sharded parallel DES + parallel sweep (sim_parallel)");
+    // Within one program: the sharded executor on an unfolded Flash2 grid
+    // (per-tile stream shards arbitrating through the shared HBM shard —
+    // the full-fidelity mode where folding is off by definition, e.g.
+    // `flatattention trace`). Informational metric: the epoch fences
+    // bound this win by how many shards carry events per timestamp.
+    let par_wl =
+        if smoke { Workload::new(1024, 128, 32, 1) } else { Workload::new(2048, 128, 32, 2) };
+    set_symmetry_folding(false);
+    let p = build_program(&arch, &par_wl, Dataflow::Flash2, 1);
+    set_symmetry_folding(true);
+    println!("  flash2 {}: {} shards, {} ops", par_wl.label(), p.num_shards(), p.num_ops());
+    rec.metric("parallel_num_shards", p.num_shards() as f64);
+    let one_serial =
+        rec.bench("parallel/1prog serial    flash2 32x32", fold_iters, || execute(&p, 0));
+    let one_par = rec.bench("parallel/1prog 8 workers flash2 32x32", fold_iters, || {
+        execute_parallel(&p, 0, 8)
+    });
+    rec.metric("parallel_1prog_speedup", one_serial / one_par);
+
+    // The e2e target: the Flash2 32×32 sweep through the production sweep
+    // path (`coordinator::run_all_uncached` = build + DES per point over
+    // the worker pool), 1 thread vs 8. Point-level fan-out composes with
+    // the sharded executor (`coordinator::set_engine_threads`); the
+    // in-bench target is >= 2x at 8 threads, checked by
+    // scripts/check_bench_targets.py (which skips the gate on starved
+    // < 3-core runners where 2x is arithmetically out of reach).
+    let seqs: &[u64] = if smoke { &[512, 1024] } else { &[1024, 2048, 4096] };
+    let mut sweep: Vec<ExperimentSpec> = Vec::new();
+    for &s in seqs {
+        for &d in &[64u64, 128] {
+            for &h in &[16u64, 32] {
+                sweep.push(ExperimentSpec {
+                    arch: arch.clone(),
+                    workload: Workload::new(s, d, h, 1),
+                    dataflow: Dataflow::Flash2,
+                    group: 1,
+                });
+            }
+        }
+    }
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("  sweep: {} Flash2 32x32 points, {} cores available", sweep.len(), cores);
+    // Three iterations even in smoke mode: the gated ratio below takes
+    // the best of N, and N=3 gives the minimum something to work with.
+    let sweep_iters = 3;
+    let serial_name = format!("parallel/e2e sweep {} pts, 1 thread ", sweep.len());
+    let par_name = format!("parallel/e2e sweep {} pts, 8 threads", sweep.len());
+    let sweep_serial = rec.bench(&serial_name, sweep_iters, || run_all_uncached(&sweep, 1));
+    let sweep_par = rec.bench(&par_name, sweep_iters, || run_all_uncached(&sweep, 8));
+    // The gated ratio uses best-of-N: on shared CI runners a single
+    // noisy-neighbor interval skews a mean, not a minimum.
+    let parallel_speedup = rec.min_of(&serial_name).unwrap_or(sweep_serial)
+        / rec.min_of(&par_name).unwrap_or(sweep_par);
+    println!(
+        "\n  parallel e2e speedup (flash2 32x32 sweep @ 8 threads): {parallel_speedup:.2}x \
+         (target >= 2x)"
+    );
+    rec.metric("parallel_threads", 8.0);
+    rec.metric("parallel_cores_available", cores as f64);
+    rec.metric("parallel_e2e_serial_s", sweep_serial);
+    rec.metric("parallel_e2e_parallel_s", sweep_par);
+    rec.metric("parallel_e2e_speedup", parallel_speedup);
+
     rec.write_json(OUT_PATH, "sim_hotpath");
     if speedup < 2.0 {
         println!("WARNING: end-to-end speedup {speedup:.2}x below the 2x acceptance target");
     }
     if fold_speedup < 3.0 {
         println!("WARNING: folding speedup {fold_speedup:.2}x below the 3x acceptance target");
+    }
+    if parallel_speedup < 2.0 {
+        println!(
+            "WARNING: parallel e2e speedup {parallel_speedup:.2}x below the 2x acceptance target \
+             ({cores} cores available)"
+        );
     }
 }

@@ -101,6 +101,29 @@ pub fn spec_key(spec: &ExperimentSpec) -> SpecKey {
     }
 }
 
+/// DES workers used *inside* each experiment's event loop
+/// (`sim::execute_parallel` over the program's §Shard partition). This is
+/// orthogonal to the `threads` argument of [`run_all`], which fans out
+/// *across* experiments; the two compose (e.g. a wide sweep keeps
+/// engine threads at 1, a single big run raises them).
+///
+/// Deliberately NOT part of [`SpecKey`]: the sharded executor is
+/// bit-identical to the serial engine at every thread count
+/// (`tests/parallel_differential.rs`), so a result memoized under one
+/// setting is exactly the result any other setting would compute —
+/// changing the knob must never split or invalidate the cache.
+static ENGINE_THREADS: AtomicUsize = AtomicUsize::new(1);
+
+/// Set the per-experiment DES worker count (clamped to ≥ 1).
+pub fn set_engine_threads(n: usize) {
+    ENGINE_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Current per-experiment DES worker count.
+pub fn engine_threads() -> usize {
+    ENGINE_THREADS.load(Ordering::Relaxed)
+}
+
 /// Global result cache. `Mutex<Option<..>>` because `HashMap::new` is not
 /// const; initialized on first use.
 static MEMO: Mutex<Option<HashMap<SpecKey, ExperimentResult>>> = Mutex::new(None);
@@ -141,9 +164,17 @@ pub fn clear_memo() {
     *MEMO.lock().unwrap() = None;
 }
 
-/// Execute one experiment, bypassing the memo cache.
+/// Execute one experiment, bypassing the memo cache. The DES runs with
+/// [`engine_threads`] workers (default 1 — sweeps parallelize across
+/// experiments instead).
 pub fn run_one_uncached(spec: &ExperimentSpec) -> ExperimentResult {
-    let stats = dataflow::run(&spec.arch, &spec.workload, spec.dataflow, spec.group);
+    let stats = dataflow::run_threads(
+        &spec.arch,
+        &spec.workload,
+        spec.dataflow,
+        spec.group,
+        engine_threads(),
+    );
     ExperimentResult::from_stats(spec, &stats)
 }
 
@@ -347,6 +378,30 @@ mod tests {
         let again = run_all(&specs, 2);
         assert_eq!(memoized, again);
         assert_eq!(run_one(&specs[1]), memoized[1]);
+    }
+
+    #[test]
+    fn engine_threads_do_not_touch_spec_keys_and_results_interchange() {
+        // The sharded executor is bit-identical to the serial engine, so
+        // the engine-thread knob must neither join the memo key nor
+        // change any computed result: a result cached at one thread count
+        // is served verbatim at another.
+        let spec = ExperimentSpec {
+            arch: table2(8),
+            workload: Workload::new(704, 64, 4, 1).with_causal(true),
+            dataflow: Dataflow::Flash2,
+            group: 1,
+        };
+        let prev = engine_threads();
+        set_engine_threads(1);
+        let k1 = spec_key(&spec);
+        let serial = run_one_uncached(&spec);
+        set_engine_threads(4);
+        let k4 = spec_key(&spec);
+        let parallel = run_one_uncached(&spec);
+        set_engine_threads(prev);
+        assert_eq!(k1, k4, "engine threads must not partition the memo key space");
+        assert_eq!(serial, parallel, "parallel DES must be bit-identical to serial");
     }
 
     #[test]

@@ -47,6 +47,14 @@
 //! occupancy` — the delay op reproduces every kept op's issue time, hence
 //! channel contention, makespan and `RunStats`, bit for bit (see
 //! `crate::dataflow` docs and `tests/fold_differential.rs`).
+//!
+//! §Shard: under the event-loop partition `Program::seal` derives (see
+//! `crate::sim`'s sharding essay), each tile's stream — engines private,
+//! both async streams included — becomes one private shard, and every
+//! HBM-channel op lands in the shared shard, so an unfolded grid exposes
+//! ~`mesh_x × mesh_y`-way parallelism to `sim::execute_parallel`; in
+//! composed serving batches each band tile shards the same way per
+//! request.
 
 use crate::arch::ArchConfig;
 use crate::engines::{dma_hbm_time, matmul_cycles, SpatzOp};
@@ -178,7 +186,7 @@ fn flash_build(
     // HBM channels are allocated first so `ResourceId(c)` == channel `c`
     // inside `build_stream` (asserted here).
     let chan_res = prog.resources(n_chan);
-    debug_assert!(chan_res.first().map_or(true, |r| r.0 == 0));
+    debug_assert!(chan_res.first().is_none_or(|r| r.0 == 0));
     let _ = chan_res;
     let tiles: Vec<TileCtx> = (0..n_tiles)
         .map(|_| TileCtx {
@@ -274,7 +282,7 @@ pub(crate) fn flash_batch_program_in(
     let n_tiles = topo.num_tiles();
     let n_chan = hbm_map.total_channels();
     let chan_res = prog.resources(n_chan);
-    debug_assert!(chan_res.first().map_or(true, |r| r.0 == 0));
+    debug_assert!(chan_res.first().is_none_or(|r| r.0 == 0));
     let _ = chan_res;
     let tiles: Vec<TileCtx> = (0..n_tiles)
         .map(|_| TileCtx {

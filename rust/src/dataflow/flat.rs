@@ -43,6 +43,15 @@
 //! entirely. Stamped and naive builds are op-for-op identical
 //! (`tests::stamped_build_is_identical_to_naive_build`).
 //!
+//! §Shard: under the event-loop partition `Program::seal` derives (see
+//! `crate::sim`'s sharding essay), each group's per-tile engine chains,
+//! row/column collectives that stay single-owner, and the group's block
+//! barrier union into one private shard per group, while HBM-channel ops
+//! (and any bus whose ops span tiles) arbitrate in the shared shard — so
+//! a multi-group mesh exposes per-group parallelism to
+//! `sim::execute_parallel`, exactly the "independent between fabric
+//! collectives" structure the paper exploits on the accelerator itself.
+//!
 //! §Fold: with symmetry folding enabled (synchronous schedules only),
 //! every group except group 0 (which holds the breakdown tile) keeps its
 //! HBM-channel and bus-collective ops verbatim but collapses the `g²`

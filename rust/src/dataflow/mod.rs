@@ -63,7 +63,7 @@ pub mod tiling;
 use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::arch::ArchConfig;
-use crate::sim::{execute, OpId, Program, ProgramArena, RunStats};
+use crate::sim::{execute, execute_parallel, OpId, Program, ProgramArena, RunStats};
 
 pub use summa::{summa_program, GemmWorkload};
 pub use tiling::{flash_block_size, flat_slice_size, FlashTiling, FlatTiling};
@@ -650,11 +650,32 @@ thread_local! {
 /// Build and execute in one step, tracking the canonical critical tile.
 /// Program buffers are recycled through a thread-local [`ProgramArena`].
 pub fn run(arch: &ArchConfig, wl: &Workload, df: Dataflow, group: usize) -> RunStats {
+    run_threads(arch, wl, df, group, 1)
+}
+
+/// Like [`run`], executing the DES with `threads` workers over the
+/// program's §Shard partition ([`crate::sim::execute_parallel`]);
+/// `threads <= 1` is exactly [`run`]. Results are bit-identical at every
+/// thread count — the sharded executor reproduces the serial schedule
+/// (`tests/parallel_differential.rs`) — so callers pick the count freely
+/// without perturbing any downstream consumer (including the
+/// coordinator's memo keys; see `coordinator::set_engine_threads`).
+pub fn run_threads(
+    arch: &ArchConfig,
+    wl: &Workload,
+    df: Dataflow,
+    group: usize,
+    threads: usize,
+) -> RunStats {
     let tracked = tracked_tile(arch, df, group);
     RUN_ARENA.with(|cell| {
         let mut arena = cell.borrow_mut();
         let program = build_program_in(&mut arena, arch, wl, df, group);
-        let stats = execute(&program, tracked);
+        let stats = if threads > 1 {
+            execute_parallel(&program, tracked, threads)
+        } else {
+            execute(&program, tracked)
+        };
         arena.recycle(program);
         stats
     })

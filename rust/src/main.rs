@@ -14,7 +14,9 @@
 use std::path::PathBuf;
 
 use flatattention::arch::{presets, ArchConfig};
-use flatattention::coordinator::{best_group, run_one, valid_groups, ExperimentSpec, ResultStore};
+use flatattention::coordinator::{
+    best_group, run_one, set_engine_threads, valid_groups, ExperimentSpec, ResultStore,
+};
 use flatattention::dataflow::{Dataflow, FlatTiling, Phase, Workload};
 use flatattention::functional::{attention_golden, run_flat_group_functional, NativeCompute};
 #[cfg(feature = "pjrt")]
@@ -69,11 +71,12 @@ USAGE:
   flatattention report <fig3|fig4|fig5a|fig5b|fig5c|table1|table2|section2|area|headline|ablations|serving|schedule|all>
                       [--quick] [--threads N] [--out results.json]
   flatattention run    --dataflow <fa2|fa3|flat|flatcoll|flatasyn> [--seq 4096] [--d 128]
-                      [--heads 32] [--batch 2] [--group 32] [--arch table1]
+                      [--heads 32] [--batch 2] [--group 32] [--arch table1] [--threads N]
+                      (--threads shards the DES event loop; results are bit-identical)
   flatattention sweep  [--seq 4096] [--d 128] [--heads 32] [--batch 2] [--dataflow flatasyn]
   flatattention schedule [--trace builtin|burst|FILE.csv] [--dataflow all] [--slots 4]
                       [--chunk 512] [--page-tokens 64] [--placement affine|rr|random]
-                      [--group G] [--window W] [--static] [--arch table1]
+                      [--group G] [--window W] [--static] [--threads N] [--arch table1]
                       (continuous batching of a mixed prefill+decode request trace;
                        CSV rows: arrival,prompt,output[,kv_heads])
   flatattention validate [--seq 256] [--d 64] [--group 4] [--pjrt-only]
@@ -217,6 +220,10 @@ fn cmd_run(args: &Args) -> i32 {
         return fail(&format!("unknown dataflow '{df_label}'"));
     };
     let group = args.get_usize("group", arch.mesh_x.min(32)).unwrap_or(32);
+    // DES workers for this one experiment (sharded executor;
+    // bit-identical results at every count — wall-clock knob only).
+    let threads = args.get_usize("threads", 1).unwrap_or(1);
+    set_engine_threads(threads);
     let spec = ExperimentSpec { arch: arch.clone(), workload, dataflow, group };
     let r = run_one(&spec);
     println!("{}", spec.id());
@@ -370,6 +377,7 @@ fn cmd_schedule(args: &Args) -> i32 {
         cfg.heads = heads;
         cfg.head_dim = head_dim;
         cfg.window = window;
+        cfg.threads = args.get_usize("threads", 1).unwrap_or(1);
         let r = simulate(&arch, &trace, &cfg);
         println!(
             "{:>9}  {:>10.0}  {:>9.3}  {:>9.4}  {:>8.1}%  {:>8.3}  {:>6}",

@@ -16,7 +16,7 @@
 use crate::arch::ArchConfig;
 use crate::dataflow::{flash, flat, Dataflow, Workload};
 use crate::hbm::PageMap;
-use crate::sim::{execute, execute_traced, Cycle, Program, ProgramArena, RunStats};
+use crate::sim::{execute, execute_parallel, execute_traced, Cycle, Program, ProgramArena, RunStats};
 
 /// One request's contribution to a batch step.
 #[derive(Debug)]
@@ -58,7 +58,20 @@ impl BatchProgram {
     /// Execute the composed program (breakdown tracked on tile 0 — slot
     /// 0's representative).
     pub fn run(&self) -> RunStats {
-        execute(&self.program, 0)
+        self.run_threads(1)
+    }
+
+    /// Like [`BatchProgram::run`], executing with `threads` DES workers
+    /// over the program's §Shard partition — each request band is a
+    /// natural shard set, so a well-filled batch parallelizes per
+    /// request. Bit-identical to [`BatchProgram::run`] at every count
+    /// (`tests/parallel_differential.rs`).
+    pub fn run_threads(&self, threads: usize) -> RunStats {
+        if threads > 1 {
+            execute_parallel(&self.program, 0, threads)
+        } else {
+            execute(&self.program, 0)
+        }
     }
 
     /// Execute with full tracing and split the records per entry span.

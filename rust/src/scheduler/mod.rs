@@ -136,6 +136,11 @@ pub struct SchedulerConfig {
     pub window: u64,
     /// Seed for [`PagePlacement::Random`].
     pub seed: u64,
+    /// DES workers per composed batch program
+    /// ([`crate::sim::execute_parallel`]; each request band is a natural
+    /// shard set). Every count produces bit-identical reports — this is a
+    /// wall-clock knob only. Default 1 (serial).
+    pub threads: usize,
 }
 
 impl SchedulerConfig {
@@ -152,6 +157,7 @@ impl SchedulerConfig {
             head_dim: 128,
             window: 0,
             seed: 0x5EED,
+            threads: 1,
         }
     }
 }
@@ -339,7 +345,7 @@ pub fn simulate(arch: &ArchConfig, trace: &RequestTrace, cfg: &SchedulerConfig) 
                 .collect();
             let bp =
                 batch::compose_in(&mut arena, arch, cfg.dataflow, cfg.group, cfg.slots, &entries);
-            let stats = bp.run();
+            let stats = bp.run_threads(cfg.threads);
             arena.recycle(bp.program);
             stats
         };

@@ -8,9 +8,11 @@
 //! `dataflow::run` takes a fresh program from its thread-local arena,
 //! builds, executes, and recycles the buffers.
 
-use super::program::{Op, Program};
+use super::program::{Program, ProgramBuffers};
 
-/// Recycled backing buffers for [`Program`]s built in a sweep loop.
+/// Recycled backing buffers for [`Program`]s built in a sweep loop
+/// (op table, dependency pool, dependents CSR and the §Shard CSR — see
+/// `program::ProgramBuffers`).
 ///
 /// ```ignore
 /// let mut arena = ProgramArena::new();
@@ -22,11 +24,7 @@ use super::program::{Op, Program};
 /// ```
 #[derive(Debug, Default)]
 pub struct ProgramArena {
-    ops: Vec<Op>,
-    deps_pool: Vec<u32>,
-    out_start: Vec<u32>,
-    out_edges: Vec<u32>,
-    indeg0: Vec<u32>,
+    bufs: ProgramBuffers,
 }
 
 impl ProgramArena {
@@ -38,32 +36,19 @@ impl ProgramArena {
     /// (retaining their capacity). The arena is left empty until
     /// [`ProgramArena::recycle`] returns the buffers.
     pub fn fresh(&mut self) -> Program {
-        let mut ops = std::mem::take(&mut self.ops);
-        let mut deps_pool = std::mem::take(&mut self.deps_pool);
-        let mut out_start = std::mem::take(&mut self.out_start);
-        let mut out_edges = std::mem::take(&mut self.out_edges);
-        let mut indeg0 = std::mem::take(&mut self.indeg0);
-        ops.clear();
-        deps_pool.clear();
-        out_start.clear();
-        out_edges.clear();
-        indeg0.clear();
-        Program::from_buffers(ops, deps_pool, out_start, out_edges, indeg0)
+        let mut bufs = std::mem::take(&mut self.bufs);
+        bufs.clear();
+        Program::from_buffers(bufs)
     }
 
     /// Reclaim a finished program's buffers for the next build.
     pub fn recycle(&mut self, program: Program) {
-        let (ops, deps_pool, out_start, out_edges, indeg0) = program.into_buffers();
-        self.ops = ops;
-        self.deps_pool = deps_pool;
-        self.out_start = out_start;
-        self.out_edges = out_edges;
-        self.indeg0 = indeg0;
+        self.bufs = program.into_buffers();
     }
 
     /// Currently recycled capacity (ops slots), for tests/metrics.
     pub fn ops_capacity(&self) -> usize {
-        self.ops.capacity()
+        self.bufs.ops.capacity()
     }
 }
 

@@ -27,6 +27,9 @@
 //! randomized DAGs. Grid-wide counters additionally fold in
 //! [`Program::fold`] — the accounting of ops elided by symmetry folding.
 
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
 use super::breakdown::{Breakdown, Component, RunStats};
 use super::program::Program;
 use super::queue::EventQueue;
@@ -197,6 +200,361 @@ pub fn execute_traced(
     )
 }
 
+// ---------------------------------------------------------------------------
+// Sharded multi-worker execution (§Shard).
+// ---------------------------------------------------------------------------
+
+/// Generation barrier: the last arriver resets the count and bumps the
+/// generation, releasing spinners. A short spin is followed by
+/// `yield_now`, so oversubscribed runs (workers > cores) keep making
+/// progress. The release sequence on `count` plus the acquire load of
+/// `generation` make every pre-barrier write of every worker visible to
+/// every post-barrier read — the only fence the round protocol needs.
+struct SpinBarrier {
+    threads: usize,
+    count: AtomicUsize,
+    generation: AtomicUsize,
+}
+
+impl SpinBarrier {
+    fn new(threads: usize) -> Self {
+        Self { threads, count: AtomicUsize::new(0), generation: AtomicUsize::new(0) }
+    }
+
+    fn wait(&self) {
+        if self.threads == 1 {
+            return;
+        }
+        let arrived_gen = self.generation.load(Ordering::Acquire);
+        if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.threads {
+            // The reset is ordered before the release store: a freed
+            // waiter re-entering `wait` always sees count already reset.
+            self.count.store(0, Ordering::Relaxed);
+            self.generation.store(arrived_gen.wrapping_add(1), Ordering::Release);
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == arrived_gen {
+                spins = spins.wrapping_add(1);
+                if spins < 128 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+/// Per-owned-shard executor state: the shard's completion-event queue,
+/// the FIFO cursors of the resources it owns (dense-indexed via
+/// `Program::res_slot`), and the ops released locally this round.
+struct ShardRun {
+    id: u32,
+    queue: EventQueue,
+    res_free: Vec<Cycle>,
+    ready: Vec<u32>,
+}
+
+/// One worker's private accumulators, merged after the join. Counter sums
+/// and the interval multiset are order-insensitive; trace records carry a
+/// `(round, op id)` tag so the merge reproduces the serial engine's exact
+/// emission order.
+#[derive(Default)]
+struct WorkerOut {
+    makespan: Cycle,
+    hbm_bytes: u64,
+    redmule_busy: Cycle,
+    spatz_busy: Cycle,
+    executed: usize,
+    completed: usize,
+    intervals: Vec<(Component, Cycle, Cycle)>,
+    trace: Vec<(u64, TraceRecord)>,
+}
+
+/// Schedule one op on its shard's resource cursor — the parallel twin of
+/// the serial engine's `schedule!` macro (identical arithmetic and
+/// breakdown attribution; see there for the issue-time vs start-time
+/// rationale).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn schedule_op(
+    program: &Program,
+    op_idx: u32,
+    now: Cycle,
+    round: u64,
+    tracked_tile: u32,
+    trace_tile_limit: Option<u32>,
+    sr: &mut ShardRun,
+    out: &mut WorkerOut,
+) {
+    let op = &program.ops()[op_idx as usize];
+    let slot = program.res_slot(op.resource);
+    let start = sr.res_free[slot].max(now);
+    let released = start + op.occupancy;
+    let complete = released + op.latency;
+    sr.res_free[slot] = released;
+    sr.queue.push(complete, op_idx);
+    match op.component {
+        Component::RedMule => out.redmule_busy += op.occupancy,
+        Component::Spatz => out.spatz_busy += op.occupancy,
+        _ => {}
+    }
+    out.hbm_bytes += op.hbm_bytes;
+    if op.tile == tracked_tile && complete > now {
+        let from = match op.component {
+            Component::HbmAccess
+            | Component::Multicast
+            | Component::MaxReduce
+            | Component::SumReduce => now,
+            _ => start,
+        };
+        out.intervals.push((op.component, from, complete));
+    }
+    if let Some(limit) = trace_tile_limit {
+        if op.tile < limit {
+            out.trace.push((round, (op_idx, start, complete)));
+        }
+    }
+    out.executed += 1;
+    out.makespan = out.makespan.max(complete);
+}
+
+/// One worker's event loop over its statically-owned shards (shard `s` →
+/// worker `s % workers`). See [`execute_parallel`] for the round protocol
+/// and the exactness argument.
+#[allow(clippy::too_many_arguments)]
+fn run_worker(
+    program: &Program,
+    tracked_tile: u32,
+    trace_tile_limit: Option<u32>,
+    w: usize,
+    workers: usize,
+    indeg: &[AtomicU32],
+    inboxes: &[Mutex<Vec<u32>>],
+    mins: &[AtomicU64],
+    barrier: &SpinBarrier,
+) -> WorkerOut {
+    let shard_of = program.op_shards();
+    let (out_start, out_edges) = program.dependents_csr();
+    let mut out = WorkerOut::default();
+
+    let mut shards: Vec<ShardRun> = (w..program.num_shards())
+        .step_by(workers)
+        .map(|s| ShardRun {
+            id: s as u32,
+            queue: EventQueue::new(),
+            res_free: vec![0; program.shard_res_len(s as u32)],
+            ready: Vec::new(),
+        })
+        .collect();
+
+    // Seed generation (round 0): every zero-indegree op starts at cycle 0,
+    // in op-id order within each shard — per resource, exactly the serial
+    // seed order (resources never span shards).
+    for sr in shards.iter_mut() {
+        for &op_idx in program.shard_op_list(sr.id) {
+            if program.indeg0[op_idx as usize] == 0 {
+                schedule_op(program, op_idx, 0, 0, tracked_tile, trace_tile_limit, sr, &mut out);
+            }
+        }
+    }
+
+    let mut round: u64 = 0;
+    loop {
+        // Fence 1 — agree on the epoch timestamp: publish this worker's
+        // earliest pending completion; after the barrier every worker
+        // derives the same global minimum `now`. The publications read
+        // here cannot be overwritten early: a worker only republishes
+        // after passing fence 2, which in turn waits for this worker.
+        let local_min = shards.iter().filter_map(|s| s.queue.next_time()).min().unwrap_or(u64::MAX);
+        mins[w].store(local_min, Ordering::Release);
+        barrier.wait();
+        let now = mins.iter().map(|m| m.load(Ordering::Acquire)).min().unwrap_or(u64::MAX);
+        if now == u64::MAX {
+            break;
+        }
+        round += 1;
+
+        // Phase A: drain every owned completion at exactly `now`; settle
+        // dependents. A release whose op lives in another shard goes to
+        // that shard's inbox (the exactly-once fetch_sub(1) == 1 winner
+        // does the push), with ready time `now` implicit.
+        for sr in shards.iter_mut() {
+            while let Some((t, _)) = sr.queue.peek() {
+                if t != now {
+                    break;
+                }
+                let (_, idx) = sr.queue.pop().expect("peeked event exists");
+                out.completed += 1;
+                let i = idx as usize;
+                let (s, e) = (out_start[i] as usize, out_start[i + 1] as usize);
+                for &dep_idx in &out_edges[s..e] {
+                    let di = dep_idx as usize;
+                    if indeg[di].fetch_sub(1, Ordering::AcqRel) == 1 {
+                        let target = shard_of[di];
+                        if target == sr.id {
+                            sr.ready.push(dep_idx);
+                        } else {
+                            inboxes[target as usize].lock().unwrap().push(dep_idx);
+                        }
+                    }
+                }
+            }
+        }
+
+        // Fence 2 — every release of this generation has reached its
+        // owner's inbox.
+        barrier.wait();
+
+        // Phase B: schedule everything released at `now`, op-id order per
+        // shard. Resources are shard-private, so this reproduces the
+        // serial engine's per-generation op-id batch order on every
+        // resource. Zero-duration ops complete at `now` again and form
+        // the next generation (the next round re-derives `now` == `now`).
+        for sr in shards.iter_mut() {
+            {
+                let mut inbox = inboxes[sr.id as usize].lock().unwrap();
+                sr.ready.append(&mut *inbox);
+            }
+            if sr.ready.is_empty() {
+                continue;
+            }
+            sr.ready.sort_unstable();
+            let ready = std::mem::take(&mut sr.ready);
+            for &op_idx in &ready {
+                schedule_op(
+                    program, op_idx, now, round, tracked_tile, trace_tile_limit, sr, &mut out,
+                );
+            }
+            sr.ready = ready;
+            sr.ready.clear();
+        }
+    }
+    out
+}
+
+/// Execute `program` with `threads` workers over its §Shard partition —
+/// bit-identical to [`execute`] (same `RunStats`, same breakdown, same
+/// traces; pinned by `tests/parallel_differential.rs`).
+///
+/// # Round protocol and why it is exact
+///
+/// Workers own disjoint shard sets (static round-robin) and advance in
+/// *epochs*: every round agrees on the global minimum pending completion
+/// time `now` (fence 1), drains all completions at `now` and settles
+/// dependents (phase A), then — after fence 2 — schedules every op
+/// released at `now` in op-id order per shard (phase B). The serial
+/// engine's schedule is fully determined by, per resource, the order of
+/// `(ready time, generation, op id)` among its ops; a resource belongs to
+/// exactly one shard (`Program::seal` construction), each shard processes
+/// its ready stream in exactly that order, and rounds map one-to-one onto
+/// the serial engine's same-timestamp generations — so every op gets the
+/// identical start cycle and the cross-shard interleaving genuinely
+/// commutes. Shards only interact where dependency edges cross the
+/// partition, and every such edge has an endpoint in the shared shard's
+/// FIFO arbitration; the inbox hand-off at fence 2 delivers those
+/// releases within the correct generation.
+///
+/// Speedup is shape-dependent: rounds synchronize all workers, so the win
+/// comes from many shards carrying events at the same timestamp —
+/// congruent tile streams (unfolded FlashAttention grids), multi-band
+/// scheduler batch programs, per-group FlatAttention chains. Sweeps
+/// should prefer point-level fan-out (`coordinator::run_all`), which
+/// composes with this executor via `coordinator::set_engine_threads`.
+///
+/// `threads <= 1`, unsealed programs (no shard map) and single-shard
+/// programs take the serial engine directly — same schedule either way.
+pub fn execute_parallel(program: &Program, tracked_tile: u32, threads: usize) -> RunStats {
+    execute_parallel_traced(program, tracked_tile, None, threads).0
+}
+
+/// Traced variant of [`execute_parallel`]; same contract as
+/// [`execute_traced`], including the record order.
+pub fn execute_parallel_traced(
+    program: &Program,
+    tracked_tile: u32,
+    trace_tile_limit: Option<u32>,
+    threads: usize,
+) -> (RunStats, Vec<TraceRecord>) {
+    let n_shards = program.num_shards();
+    if threads.max(1) == 1 || !program.is_sealed() || n_shards <= 1 {
+        return execute_traced(program, tracked_tile, trace_tile_limit);
+    }
+    let n = program.num_ops();
+    let workers = threads.min(n_shards);
+
+    let indeg: Vec<AtomicU32> = program.indeg0.iter().map(|&d| AtomicU32::new(d)).collect();
+    let inboxes: Vec<Mutex<Vec<u32>>> = (0..n_shards).map(|_| Mutex::new(Vec::new())).collect();
+    let mins: Vec<AtomicU64> = (0..workers).map(|_| AtomicU64::new(u64::MAX)).collect();
+    let barrier = SpinBarrier::new(workers);
+
+    let outs: Vec<WorkerOut> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let (indeg, inboxes, mins, barrier) = (&indeg, &inboxes, &mins, &barrier);
+                scope.spawn(move || {
+                    run_worker(
+                        program,
+                        tracked_tile,
+                        trace_tile_limit,
+                        w,
+                        workers,
+                        indeg,
+                        inboxes,
+                        mins,
+                        barrier,
+                    )
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("DES worker panicked")).collect()
+    });
+
+    let completed: usize = outs.iter().map(|o| o.completed).sum();
+    assert_eq!(
+        completed, n,
+        "dependency cycle: {} of {} ops never became ready",
+        n - completed,
+        n
+    );
+
+    let mut makespan: Cycle = 0;
+    let mut hbm_bytes = 0u64;
+    let mut redmule_busy: Cycle = 0;
+    let mut spatz_busy: Cycle = 0;
+    let mut executed = 0usize;
+    let mut intervals: Vec<(Component, Cycle, Cycle)> = Vec::new();
+    let mut tagged: Vec<(u64, TraceRecord)> = Vec::new();
+    for o in outs {
+        makespan = makespan.max(o.makespan);
+        hbm_bytes += o.hbm_bytes;
+        redmule_busy += o.redmule_busy;
+        spatz_busy += o.spatz_busy;
+        executed += o.executed;
+        intervals.extend_from_slice(&o.intervals);
+        tagged.extend_from_slice(&o.trace);
+    }
+    // Serial record order is (timestamp, generation, op id); rounds
+    // enumerate (timestamp, generation) pairs in that exact order.
+    tagged.sort_unstable_by_key(|e| (e.0, (e.1).0));
+    let trace: Vec<TraceRecord> = tagged.into_iter().map(|(_, r)| r).collect();
+
+    let fold = program.fold;
+    let breakdown = Breakdown::from_intervals(&intervals, makespan);
+    (
+        RunStats {
+            makespan,
+            breakdown,
+            hbm_bytes,
+            flops: program.flops,
+            redmule_busy_total: redmule_busy + fold.redmule_busy,
+            spatz_busy_total: spatz_busy + fold.spatz_busy,
+            ops_executed: executed + fold.ops as usize,
+        },
+        trace,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -339,6 +697,80 @@ mod tests {
         p.seal();
         let sealed = execute(&p, 0);
         assert_eq!(unsealed, sealed);
+    }
+
+    #[test]
+    fn parallel_matches_serial_on_small_dags() {
+        // Two tile chains contending on one shared channel plus a barrier:
+        // exercises seed order, cross-shard releases and the shared
+        // shard's FIFO in one sealed DAG.
+        let mut p = Program::new();
+        let chan = p.resource();
+        let engines = p.resources(4);
+        let mut last = Vec::new();
+        for t in 0..4u32 {
+            let load = p.op(chan, 7, 30, Component::HbmAccess, t, 128, &[]);
+            let qk = p.op(engines[t as usize], 11 + t as u64, 0, Component::RedMule, t, 0, &[load]);
+            let store = p.op(chan, 3, 30, Component::HbmAccess, t, 64, &[qk]);
+            last.push(store);
+        }
+        let sync = p.resource();
+        let bar = p.op(sync, 0, 0, Component::Other, NO_TILE, 0, &last);
+        let _tail = p.op(engines[0], 5, 0, Component::Spatz, 0, 0, &[bar]);
+        p.seal();
+        assert!(p.num_shards() >= 2, "shared channel + private chains");
+        let (want, want_trace) = execute_traced(&p, 0, Some(u32::MAX));
+        for threads in [1, 2, 3, 8] {
+            let (got, got_trace) = execute_parallel_traced(&p, 0, Some(u32::MAX), threads);
+            assert_eq!(want, got, "threads={threads}");
+            assert_eq!(want_trace, got_trace, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_falls_back_on_unsealed_and_trivial_programs() {
+        let mut p = Program::new();
+        let r = p.resource();
+        p.op(r, 10, 0, Component::RedMule, 0, 0, &[]);
+        // Unsealed: no shard map — must still execute (serial fallback).
+        assert_eq!(execute_parallel(&p, 0, 4), execute(&p, 0));
+        p.seal();
+        // Single private component (the shared shard is empty): the
+        // degenerate two-shard run must still match.
+        assert_eq!(p.num_shards(), 2);
+        assert_eq!(execute_parallel(&p, 0, 4), execute(&p, 0));
+        // Empty program.
+        let mut e = Program::new();
+        e.seal();
+        assert_eq!(execute_parallel(&e, 0, 4), execute(&e, 0));
+    }
+
+    #[test]
+    fn parallel_same_cycle_cascades_match_serial() {
+        // Zero-duration barrier cascades at one timestamp across shards:
+        // the generation fences must reproduce the serial batching.
+        let mut p = Program::new();
+        let chan = p.resource();
+        let e0 = p.resource();
+        let e1 = p.resource();
+        let g = p.op(chan, 5, 0, Component::HbmAccess, 0, 32, &[]);
+        let g2 = p.op(chan, 5, 0, Component::HbmAccess, 1, 32, &[]);
+        // Both chains release at t=10 through zero-duration links.
+        let a0 = p.op(e0, 0, 0, Component::Other, 0, 0, &[g2]);
+        let a1 = p.op(e0, 4, 0, Component::Spatz, 0, 0, &[a0]);
+        let b0 = p.op(e1, 0, 0, Component::Other, 1, 0, &[g2]);
+        let b1 = p.op(e1, 6, 0, Component::RedMule, 1, 0, &[b0]);
+        // Joint stores contend on the shared channel at equal ready times.
+        let s0 = p.op(chan, 2, 0, Component::HbmAccess, 0, 16, &[a1]);
+        let s1 = p.op(chan, 2, 0, Component::HbmAccess, 1, 16, &[b1]);
+        let _ = (g, s0, s1);
+        p.seal();
+        let (want, want_trace) = execute_traced(&p, 1, Some(u32::MAX));
+        for threads in [2, 4] {
+            let (got, got_trace) = execute_parallel_traced(&p, 1, Some(u32::MAX), threads);
+            assert_eq!(want, got, "threads={threads}");
+            assert_eq!(want_trace, got_trace, "threads={threads}");
+        }
     }
 
     #[test]

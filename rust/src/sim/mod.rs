@@ -61,8 +61,43 @@
 //! pass (`dataflow::double_buffer_programs`): the variants share their op
 //! topology and differ only in K/V prefetch dependencies, so the second
 //! program is a buffer clone + dependency retarget + reseal instead of a
-//! full rebuild. Next lever (see ROADMAP): parallel per-head execution
-//! inside one program.
+//! full rebuild.
+//!
+//! # Sharded multi-worker execution (§Shard)
+//!
+//! FlatAttention's premise — heads, groups and tile-bands are independent
+//! between fabric collectives — holds inside the simulator too, and
+//! [`execute_parallel`] exploits it. [`Program::seal`] partitions every
+//! DAG into *shards*: the connected components of the op graph restricted
+//! to **private** resources (a resource whose ops all carry one owner
+//! tile: a tile's RedMulE/Spatz/scalar engines, a folded stream's delay
+//! chain, a group's barrier), plus one **shared** shard holding every op
+//! on a *contended* resource (ops from ≥ 2 tiles: HBM channel FIFOs, NoC
+//! row/column buses). Three structural invariants fall out of the
+//! construction, not the heuristic: every op is in exactly one shard,
+//! every resource is used by exactly one shard, and every cross-shard
+//! dependency edge has an endpoint in the shared shard.
+//!
+//! Why cross-shard timestamps commute: the engine's schedule is fully
+//! determined by, per resource, the `(ready time, generation, op id)`
+//! order of its ops — the PR-2 tie-break argument. Since no resource
+//! spans shards, that order is a *per-shard* property; shards influence
+//! each other only through the completion times flowing across the
+//! partition edges, i.e. through the shared shard's FIFO arbitration.
+//! [`execute_parallel`] therefore advances all workers in epochs pinned
+//! to the global minimum pending completion time: drain every completion
+//! of that timestamp, exchange the cross-shard releases, then schedule
+//! each shard's released ops in op-id order. Rounds map one-to-one onto
+//! the serial engine's same-timestamp generations, so the PR-2 tie-break
+//! localizes per shard and the parallel schedule is **bit-identical** to
+//! the serial one — `RunStats`, breakdowns and traces alike
+//! (`tests/parallel_differential.rs` pins this against both [`execute`]
+//! and [`reference`] across dataflows × folding × paged batch programs ×
+//! thread counts). The win is shape-dependent: epochs synchronize all
+//! workers, so throughput comes from many shards being busy at the same
+//! timestamp (congruent unfolded tile streams, multi-band scheduler
+//! batches); sweep-level fan-out (`coordinator::run_all` /
+//! `set_engine_threads`) composes with it.
 
 pub mod arena;
 pub mod breakdown;
@@ -74,9 +109,9 @@ pub mod trace;
 
 pub use arena::ProgramArena;
 pub use breakdown::{Breakdown, Component, RunStats};
-pub use engine::{execute, execute_traced};
+pub use engine::{execute, execute_parallel, execute_parallel_traced, execute_traced};
 pub use queue::EventQueue;
-pub use program::{FoldStats, Op, OpId, Program, ResourceId};
+pub use program::{FoldStats, Op, OpId, Program, ResourceId, SHARED_SHARD};
 pub use reference::{execute_reference, execute_reference_traced};
 
 /// Simulation time in clock cycles (1 GHz in all paper configurations).

@@ -84,6 +84,58 @@ pub struct Op {
     pub(crate) deps_len: u32,
 }
 
+/// The shard id of the shared (contended-resource) shard — see
+/// [`Program::seal`]'s §Shard notes and `crate::sim`'s sharding essay.
+pub const SHARED_SHARD: u32 = 0;
+
+/// Recycled backing buffers of a [`Program`] — everything a
+/// [`crate::sim::ProgramArena`] keeps alive between the experiments of a
+/// sweep (op table, dependency pool, dependents CSR, shard CSR).
+#[derive(Debug, Default)]
+pub(crate) struct ProgramBuffers {
+    pub ops: Vec<Op>,
+    pub deps_pool: Vec<u32>,
+    pub out_start: Vec<u32>,
+    pub out_edges: Vec<u32>,
+    pub indeg0: Vec<u32>,
+    pub shard_of: Vec<u32>,
+    pub shard_start: Vec<u32>,
+    pub shard_ops: Vec<u32>,
+    pub res_shard: Vec<u32>,
+    pub res_dense: Vec<u32>,
+    pub shard_res_count: Vec<u32>,
+}
+
+impl ProgramBuffers {
+    /// Clear every buffer, retaining capacity.
+    pub fn clear(&mut self) {
+        let ProgramBuffers {
+            ops,
+            deps_pool,
+            out_start,
+            out_edges,
+            indeg0,
+            shard_of,
+            shard_start,
+            shard_ops,
+            res_shard,
+            res_dense,
+            shard_res_count,
+        } = self;
+        ops.clear();
+        deps_pool.clear();
+        out_start.clear();
+        out_edges.clear();
+        indeg0.clear();
+        shard_of.clear();
+        shard_start.clear();
+        shard_ops.clear();
+        res_shard.clear();
+        res_dense.clear();
+        shard_res_count.clear();
+    }
+}
+
 /// A complete op DAG plus its resource table. Dependencies live in one
 /// flat CSR pool (`deps_pool`) instead of per-op `Vec`s: programs have
 /// hundreds of thousands of ops and the per-op allocation dominated build
@@ -96,6 +148,18 @@ pub struct Op {
 /// on every run). Builders seal automatically; hand-built programs that
 /// skip `seal` still execute through a fallback that derives the CSR
 /// locally.
+///
+/// §Shard: `seal` additionally partitions the DAG into event-loop
+/// *shards* for [`crate::sim::execute_parallel`]: the connected
+/// components of the op graph over *private* resources (a resource is
+/// private when every op on it carries the same owner tile — a tile's
+/// engines, a stream's fold-delay chain, a group's barrier), plus one
+/// shared shard ([`SHARED_SHARD`]) holding every op on a *contended*
+/// resource (ops from ≥ 2 distinct tiles: HBM channel FIFOs, NoC buses).
+/// By construction every resource is used by exactly one shard and every
+/// cross-shard dependency edge has an endpoint in the shared shard —
+/// the invariants the parallel executor's exactness proof rests on (see
+/// `crate::sim`'s sharding essay and `tests/parallel_differential.rs`).
 #[derive(Debug, Default)]
 pub struct Program {
     pub(crate) ops: Vec<Op>,
@@ -112,6 +176,18 @@ pub struct Program {
     pub(crate) out_edges: Vec<u32>,
     /// Initial in-degree of every op (== `deps_len`), cloned per execution.
     pub(crate) indeg0: Vec<u32>,
+    /// Per-op shard id (§Shard; empty until sealed). Shard 0 is shared.
+    pub(crate) shard_of: Vec<u32>,
+    /// Shard CSR row offsets over `shard_ops` (`n_shards + 1` when sealed).
+    pub(crate) shard_start: Vec<u32>,
+    /// Shard CSR op ids, ascending within each shard.
+    pub(crate) shard_ops: Vec<u32>,
+    /// Per-resource owning shard (`u32::MAX` for unused resources).
+    pub(crate) res_shard: Vec<u32>,
+    /// Per-resource dense index within its owning shard's resource set.
+    pub(crate) res_dense: Vec<u32>,
+    /// Per-shard count of owned resources.
+    pub(crate) shard_res_count: Vec<u32>,
     pub(crate) sealed: bool,
 }
 
@@ -122,30 +198,41 @@ impl Program {
 
     /// Rebuild a `Program` over buffers recycled by a
     /// [`crate::sim::ProgramArena`]. All buffers arrive cleared.
-    pub(crate) fn from_buffers(
-        ops: Vec<Op>,
-        deps_pool: Vec<u32>,
-        out_start: Vec<u32>,
-        out_edges: Vec<u32>,
-        indeg0: Vec<u32>,
-    ) -> Self {
+    pub(crate) fn from_buffers(bufs: ProgramBuffers) -> Self {
         Self {
-            ops,
-            deps_pool,
+            ops: bufs.ops,
+            deps_pool: bufs.deps_pool,
             n_resources: 0,
             flops: 0,
             fold: FoldStats::default(),
-            out_start,
-            out_edges,
-            indeg0,
+            out_start: bufs.out_start,
+            out_edges: bufs.out_edges,
+            indeg0: bufs.indeg0,
+            shard_of: bufs.shard_of,
+            shard_start: bufs.shard_start,
+            shard_ops: bufs.shard_ops,
+            res_shard: bufs.res_shard,
+            res_dense: bufs.res_dense,
+            shard_res_count: bufs.shard_res_count,
             sealed: false,
         }
     }
 
     /// Decompose into raw buffers for arena recycling.
-    #[allow(clippy::type_complexity)]
-    pub(crate) fn into_buffers(self) -> (Vec<Op>, Vec<u32>, Vec<u32>, Vec<u32>, Vec<u32>) {
-        (self.ops, self.deps_pool, self.out_start, self.out_edges, self.indeg0)
+    pub(crate) fn into_buffers(self) -> ProgramBuffers {
+        ProgramBuffers {
+            ops: self.ops,
+            deps_pool: self.deps_pool,
+            out_start: self.out_start,
+            out_edges: self.out_edges,
+            indeg0: self.indeg0,
+            shard_of: self.shard_of,
+            shard_start: self.shard_start,
+            shard_ops: self.shard_ops,
+            res_shard: self.res_shard,
+            res_dense: self.res_dense,
+            shard_res_count: self.shard_res_count,
+        }
     }
 
     /// Allocate a fresh resource.
@@ -222,10 +309,11 @@ impl Program {
         new_base
     }
 
-    /// Derive the dependents CSR and initial in-degrees so executions can
-    /// reuse them. Idempotent; implicitly invalidated by further `op` /
-    /// `stamp_range` calls. Builds *in place* into the program's (possibly
-    /// arena-recycled) CSR buffers — no allocation once capacity exists.
+    /// Derive the dependents CSR, initial in-degrees and the shard map
+    /// (§Shard) so executions can reuse them. Idempotent; implicitly
+    /// invalidated by further `op` / `stamp_range` calls. Builds *in
+    /// place* into the program's (possibly arena-recycled) buffers — no
+    /// allocation once capacity exists.
     pub fn seal(&mut self) {
         if self.sealed {
             return;
@@ -243,7 +331,183 @@ impl Program {
         self.out_start = out_start;
         self.out_edges = out_edges;
         self.indeg0 = indeg0;
+
+        let mut shard_of = std::mem::take(&mut self.shard_of);
+        let mut shard_start = std::mem::take(&mut self.shard_start);
+        let mut shard_ops = std::mem::take(&mut self.shard_ops);
+        let mut res_shard = std::mem::take(&mut self.res_shard);
+        let mut res_dense = std::mem::take(&mut self.res_dense);
+        let mut shard_res_count = std::mem::take(&mut self.shard_res_count);
+        Self::shards_into(
+            &self.ops,
+            &self.deps_pool,
+            self.n_resources as usize,
+            &mut shard_of,
+            &mut shard_start,
+            &mut shard_ops,
+            &mut res_shard,
+            &mut res_dense,
+            &mut shard_res_count,
+        );
+        self.shard_of = shard_of;
+        self.shard_start = shard_start;
+        self.shard_ops = shard_ops;
+        self.res_shard = res_shard;
+        self.res_dense = res_dense;
+        self.shard_res_count = shard_res_count;
         self.sealed = true;
+    }
+
+    /// Partition the DAG into event-loop shards (§Shard on [`Program`]).
+    ///
+    /// 1. A resource is *contended* iff its ops carry ≥ 2 distinct owner
+    ///    tiles (HBM channels and NoC buses serve many tiles; a tile's
+    ///    engines, a folded stream's delay chain and a group's barrier
+    ///    resource do not). The classification is a partition *heuristic*
+    ///    only — correctness of the parallel executor never depends on it,
+    ///    because the construction below keeps each resource's ops inside
+    ///    one shard either way.
+    /// 2. Union-find over ops: ops on the same private resource are
+    ///    unioned, and a dependency edge unions its endpoints when both
+    ///    sit on private resources. Ops on contended resources join the
+    ///    shared shard ([`SHARED_SHARD`] = 0) and never union, so every
+    ///    cross-shard edge has an endpoint in the shared shard.
+    /// 3. Private components become shards `1..n_shards`, materialized as
+    ///    a CSR (ascending op ids per shard) plus per-resource
+    ///    `(owning shard, dense index)` so each shard's executor keeps a
+    ///    compact `res_free` cursor table.
+    #[allow(clippy::too_many_arguments)]
+    fn shards_into(
+        ops: &[Op],
+        deps_pool: &[u32],
+        n_resources: usize,
+        shard_of: &mut Vec<u32>,
+        shard_start: &mut Vec<u32>,
+        shard_ops: &mut Vec<u32>,
+        res_shard: &mut Vec<u32>,
+        res_dense: &mut Vec<u32>,
+        shard_res_count: &mut Vec<u32>,
+    ) {
+        const NONE: u32 = u32::MAX;
+        let n = ops.len();
+
+        // Path-halving find.
+        fn find(parent: &mut [u32], mut x: u32) -> u32 {
+            loop {
+                let p = parent[x as usize];
+                if p == x {
+                    return x;
+                }
+                let gp = parent[p as usize];
+                parent[x as usize] = gp;
+                x = gp;
+            }
+        }
+
+        // 1. Contended-resource classification. Tiles are stored +1 so 0
+        // can mean "unseen" (NO_TILE is a valid owner value).
+        let mut seen_tile: Vec<u64> = vec![0; n_resources];
+        let mut contended: Vec<bool> = vec![false; n_resources];
+        for op in ops {
+            let r = op.resource.0 as usize;
+            let t = op.tile as u64 + 1;
+            if seen_tile[r] == 0 {
+                seen_tile[r] = t;
+            } else if seen_tile[r] != t {
+                contended[r] = true;
+            }
+        }
+
+        // 2. Union-find over private ops.
+        let mut parent: Vec<u32> = (0..n as u32).collect();
+        let mut last_on_res: Vec<u32> = vec![NONE; n_resources];
+        for (i, op) in ops.iter().enumerate() {
+            let r = op.resource.0 as usize;
+            if contended[r] {
+                continue;
+            }
+            let iu = i as u32;
+            if last_on_res[r] != NONE {
+                let a = find(&mut parent, iu);
+                let b = find(&mut parent, last_on_res[r]);
+                if a != b {
+                    parent[a as usize] = b;
+                }
+            }
+            last_on_res[r] = iu;
+            let (s, l) = (op.deps_start as usize, op.deps_len as usize);
+            for &d in &deps_pool[s..s + l] {
+                if !contended[ops[d as usize].resource.0 as usize] {
+                    let a = find(&mut parent, iu);
+                    let b = find(&mut parent, d);
+                    if a != b {
+                        parent[a as usize] = b;
+                    }
+                }
+            }
+        }
+
+        // 3. Shard ids: shared = 0, private components numbered in
+        // first-op order (deterministic).
+        shard_of.clear();
+        shard_of.resize(n, 0);
+        let mut root_id: Vec<u32> = vec![NONE; n];
+        let mut next = 1u32;
+        for (i, op) in ops.iter().enumerate() {
+            if contended[op.resource.0 as usize] {
+                shard_of[i] = SHARED_SHARD;
+            } else {
+                let root = find(&mut parent, i as u32) as usize;
+                if root_id[root] == NONE {
+                    root_id[root] = next;
+                    next += 1;
+                }
+                shard_of[i] = root_id[root];
+            }
+        }
+        let n_shards = next as usize;
+
+        // Shard CSR (counting sort in op-id order, then shift back — same
+        // cursor trick as `dependents_into`).
+        shard_start.clear();
+        shard_start.resize(n_shards + 1, 0);
+        for &s in shard_of.iter() {
+            shard_start[s as usize + 1] += 1;
+        }
+        for i in 0..n_shards {
+            shard_start[i + 1] += shard_start[i];
+        }
+        shard_ops.clear();
+        shard_ops.resize(n, 0);
+        for (i, &s) in shard_of.iter().enumerate() {
+            shard_ops[shard_start[s as usize] as usize] = i as u32;
+            shard_start[s as usize] += 1;
+        }
+        for i in (1..n_shards).rev() {
+            shard_start[i] = shard_start[i - 1];
+        }
+        if n_shards > 0 {
+            shard_start[0] = 0;
+        }
+
+        // Per-resource owning shard + dense per-shard index.
+        res_shard.clear();
+        res_shard.resize(n_resources, NONE);
+        res_dense.clear();
+        res_dense.resize(n_resources, 0);
+        shard_res_count.clear();
+        shard_res_count.resize(n_shards, 0);
+        for (i, op) in ops.iter().enumerate() {
+            let r = op.resource.0 as usize;
+            if res_shard[r] == NONE {
+                let s = shard_of[i];
+                res_shard[r] = s;
+                res_dense[r] = shard_res_count[s as usize];
+                shard_res_count[s as usize] += 1;
+            } else {
+                debug_assert_eq!(res_shard[r], shard_of[i], "resource {r} spans shards");
+            }
+        }
     }
 
     /// Compute `(out_start, out_edges, indeg0)` for the current DAG into
@@ -325,6 +589,68 @@ impl Program {
     #[inline]
     pub fn deps_of(&self, op: &Op) -> &[u32] {
         &self.deps_pool[op.deps_start as usize..(op.deps_start + op.deps_len) as usize]
+    }
+
+    /// Dependents CSR `(row offsets, edge targets)` — sealed programs only.
+    #[inline]
+    pub(crate) fn dependents_csr(&self) -> (&[u32], &[u32]) {
+        debug_assert!(self.sealed, "dependents_csr requires a sealed program");
+        (&self.out_start, &self.out_edges)
+    }
+
+    /// Number of event-loop shards (§Shard): the shared shard plus one per
+    /// private connected component. Zero until sealed — the shard vectors
+    /// linger physically after a sealed program is mutated (`op` /
+    /// `stamp_range` only reset the flag), so every accessor gates on
+    /// `sealed` rather than handing out the stale partition.
+    pub fn num_shards(&self) -> usize {
+        if self.sealed {
+            self.shard_start.len().saturating_sub(1)
+        } else {
+            0
+        }
+    }
+
+    /// Per-op shard ids (§Shard; empty until sealed). [`SHARED_SHARD`]
+    /// holds every op on a contended resource.
+    pub fn op_shards(&self) -> &[u32] {
+        if self.sealed {
+            &self.shard_of
+        } else {
+            &[]
+        }
+    }
+
+    /// Op ids owned by one shard, ascending — sealed programs only.
+    pub fn shard_op_list(&self, shard: u32) -> &[u32] {
+        debug_assert!(self.sealed, "shard_op_list requires a sealed program");
+        let s = shard as usize;
+        &self.shard_ops[self.shard_start[s] as usize..self.shard_start[s + 1] as usize]
+    }
+
+    /// Per-resource owning shard ids (`u32::MAX` for resources no op
+    /// uses; empty until sealed). Every resource belongs to exactly one
+    /// shard — the invariant the parallel executor's per-shard FIFO
+    /// cursors rely on.
+    pub fn resource_shards(&self) -> &[u32] {
+        if self.sealed {
+            &self.res_shard
+        } else {
+            &[]
+        }
+    }
+
+    /// Number of resources owned by `shard` (sealed programs only).
+    #[inline]
+    pub(crate) fn shard_res_len(&self, shard: u32) -> usize {
+        self.shard_res_count[shard as usize] as usize
+    }
+
+    /// Dense index of a resource within its owning shard's cursor table
+    /// (sealed programs only).
+    #[inline]
+    pub(crate) fn res_slot(&self, r: ResourceId) -> usize {
+        self.res_dense[r.0 as usize] as usize
     }
 
     pub fn num_ops(&self) -> usize {
@@ -415,6 +741,76 @@ mod tests {
         assert_eq!(ops[4].latency, 2);
         assert_eq!(p.deps_of(&ops[4]), &[3]); // internal, offset by delta
         assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn seal_partitions_ops_into_shards() {
+        // Two private chains on per-tile engines, coupled only through one
+        // contended resource (ops from two distinct tiles).
+        let mut p = Program::new();
+        let chan = p.resource();
+        let eng0 = p.resource();
+        let eng1 = p.resource();
+        let l0 = p.op(chan, 2, 1, Component::HbmAccess, 0, 64, &[]);
+        let c0 = p.op(eng0, 5, 0, Component::RedMule, 0, 0, &[l0]);
+        let l1 = p.op(chan, 2, 1, Component::HbmAccess, 1, 64, &[c0]);
+        let c1 = p.op(eng1, 5, 0, Component::Spatz, 1, 0, &[l1]);
+        p.seal();
+        assert_eq!(p.num_shards(), 3); // shared + two private chains
+        let sh = p.op_shards();
+        assert_eq!(sh[l0.0 as usize], SHARED_SHARD);
+        assert_eq!(sh[l1.0 as usize], SHARED_SHARD);
+        assert_ne!(sh[c0.0 as usize], SHARED_SHARD);
+        assert_ne!(sh[c1.0 as usize], SHARED_SHARD);
+        assert_ne!(sh[c0.0 as usize], sh[c1.0 as usize]);
+        assert_eq!(p.shard_op_list(SHARED_SHARD), &[l0.0, l1.0]);
+        // Resource ownership follows the op partition.
+        assert_eq!(p.resource_shards()[chan.0 as usize], SHARED_SHARD);
+        assert_eq!(p.resource_shards()[eng0.0 as usize], sh[c0.0 as usize]);
+        assert_eq!(p.resource_shards()[eng1.0 as usize], sh[c1.0 as usize]);
+        assert_eq!(p.shard_res_len(SHARED_SHARD), 1);
+    }
+
+    #[test]
+    fn shard_accessors_go_empty_when_a_sealed_program_is_mutated() {
+        // Mutating a sealed program resets only the flag; the shard
+        // accessors must not serve the stale partition.
+        let mut p = Program::new();
+        let r = p.resource();
+        let a = p.op(r, 1, 0, Component::RedMule, 0, 0, &[]);
+        p.seal();
+        assert_eq!(p.num_shards(), 2);
+        assert_eq!(p.op_shards().len(), 1);
+        p.op(r, 1, 0, Component::Spatz, 0, 0, &[a]);
+        assert!(!p.is_sealed());
+        assert_eq!(p.num_shards(), 0);
+        assert!(p.op_shards().is_empty());
+        assert!(p.resource_shards().is_empty());
+        p.seal();
+        assert_eq!(p.num_shards(), 2);
+        assert_eq!(p.op_shards().len(), 2);
+    }
+
+    #[test]
+    fn barrier_unions_the_streams_it_joins() {
+        // A private sync op (single owner value) depended on by several
+        // per-tile chains merges them into one shard: they are genuinely
+        // coupled, and the sync resource stays single-owner.
+        let mut p = Program::new();
+        let rs = p.resources(3);
+        let sync = p.resource();
+        let a = p.op(rs[0], 4, 0, Component::RedMule, 0, 0, &[]);
+        let b = p.op(rs[1], 6, 0, Component::RedMule, 1, 0, &[]);
+        let bar = p.op(sync, 0, 0, Component::Other, NO_TILE, 0, &[a, b]);
+        let c = p.op(rs[2], 2, 0, Component::Spatz, 2, 0, &[bar]);
+        p.seal();
+        // No contended resource at all: one private component, empty
+        // shared shard.
+        assert_eq!(p.num_shards(), 2);
+        assert!(p.shard_op_list(SHARED_SHARD).is_empty());
+        let sh = p.op_shards();
+        assert!(sh.iter().all(|&s| s == sh[a.0 as usize] && s != SHARED_SHARD));
+        let _ = c;
     }
 
     #[test]

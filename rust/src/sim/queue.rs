@@ -118,6 +118,24 @@ impl EventQueue {
         Some(best)
     }
 
+    /// Key of the minimum event, without selecting among ties — the cheap
+    /// "when is this shard's next event" probe used by the parallel
+    /// executor's round scans ([`crate::sim::execute_parallel`]). Like
+    /// [`EventQueue::peek`], performs no re-carving, so it never moves the
+    /// monotonicity floor.
+    pub fn next_time(&self) -> Option<u64> {
+        if self.cursor0 < self.buckets[0].len() {
+            return Some(self.buckets[0][self.cursor0].0);
+        }
+        if self.len == 0 {
+            return None;
+        }
+        let b = (1..LEVELS)
+            .find(|&i| !self.buckets[i].is_empty())
+            .expect("len > 0 implies a nonempty bucket");
+        self.buckets[b].iter().map(|&(k, _)| k).min()
+    }
+
     /// Remove and return the minimum event; ties pop in push order.
     pub fn pop(&mut self) -> Option<(u64, u32)> {
         if self.cursor0 < self.buckets[0].len() {
@@ -282,6 +300,23 @@ mod tests {
         q.push(10, 0);
         assert_eq!(q.pop(), Some((10, 0)));
         q.push(5, 1); // 5 < current time 10: must panic, not mis-schedule
+    }
+
+    #[test]
+    fn next_time_tracks_peek_without_carving() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.next_time(), None);
+        q.push(10, 0);
+        q.push(100, 1);
+        assert_eq!(q.next_time(), Some(10));
+        assert_eq!(q.pop(), Some((10, 0)));
+        assert_eq!(q.next_time(), Some(100));
+        // No floor movement: a push at the current time is still legal.
+        q.push(10, 2);
+        assert_eq!(q.next_time(), Some(10));
+        assert_eq!(q.pop(), Some((10, 2)));
+        assert_eq!(q.pop(), Some((100, 1)));
+        assert_eq!(q.next_time(), None);
     }
 
     #[test]

@@ -1,0 +1,375 @@
+//! Differential test: the sharded multi-worker executor vs the serial
+//! engine (and the seed reference engine).
+//!
+//! `sim::execute_parallel` partitions each sealed program into private
+//! shards plus one shared shard and advances workers in global-timestamp
+//! epochs (see `sim`'s sharding essay). The whole point of the design is
+//! that the parallel schedule is **bit-identical** to the serial one —
+//! same `RunStats` (makespan, Fig. 3/4 breakdown, HBM traffic, busy
+//! totals, op counts) and the same per-op trace records in the same
+//! order, at every thread count. This file pins that across all five
+//! dataflows × folding on/off × paged batch programs × randomized DAGs,
+//! and walls off the shard partition invariants the exactness proof
+//! rests on.
+//!
+//! Thread counts default to `[1, 2, 8]`; the CI determinism matrix
+//! overrides them per leg via `FLATATTN_PAR_THREADS` (comma-separated),
+//! and the release-mode leg rides the `cargo test --release` job.
+//!
+//! Tests here toggle the process-global folding switch, so they
+//! serialize on a local lock (each integration-test binary is its own
+//! process).
+
+use std::sync::Mutex;
+
+use flatattention::arch::presets;
+use flatattention::dataflow::{
+    build_program, set_symmetry_folding, tracked_tile, Dataflow, Workload, ALL_DATAFLOWS,
+};
+use flatattention::hbm::PageMap;
+use flatattention::scheduler::batch::{compose, BatchEntry};
+use flatattention::scheduler::{simulate, RequestTrace, SchedulerConfig};
+use flatattention::sim::{
+    execute_parallel_traced, execute_reference_traced, execute_traced, Component, OpId, Program,
+    SHARED_SHARD,
+};
+use flatattention::util::quickcheck::{check, forall_cases};
+use flatattention::util::Rng;
+
+static SWITCH_LOCK: Mutex<()> = Mutex::new(());
+
+/// Thread counts under test: `FLATATTN_PAR_THREADS="1,2,8"`-style env
+/// override (the CI determinism matrix passes one count per leg), else
+/// serial + even + oversubscribed.
+fn thread_counts() -> Vec<usize> {
+    if let Ok(v) = std::env::var("FLATATTN_PAR_THREADS") {
+        let parsed: Vec<usize> =
+            v.split(',').filter_map(|s| s.trim().parse().ok()).filter(|&n| n >= 1).collect();
+        if !parsed.is_empty() {
+            return parsed;
+        }
+    }
+    vec![1, 2, 8]
+}
+
+/// The shard-partition wall: every op in exactly one shard, every
+/// resource used by exactly one shard, contended resources (ops from ≥ 2
+/// distinct tiles) all in the shared shard, and no private-to-private
+/// dependency edge crossing shards — the invariants `execute_parallel`'s
+/// exactness argument rests on.
+fn assert_shard_wall(p: &Program, label: &str) {
+    assert!(p.is_sealed(), "{label}: wall needs a sealed program");
+    let n = p.num_ops();
+    let shards = p.op_shards();
+    assert_eq!(shards.len(), n, "{label}: shard map covers every op");
+    let k = p.num_shards();
+    assert!(k >= 1, "{label}: the shared shard always exists");
+
+    // The shard CSR partitions 0..n, ascending within each shard.
+    let mut seen = vec![false; n];
+    for s in 0..k {
+        let mut prev: Option<u32> = None;
+        for &op in p.shard_op_list(s as u32) {
+            assert_eq!(shards[op as usize], s as u32, "{label}: op {op} listed in wrong shard");
+            assert!(!seen[op as usize], "{label}: op {op} listed twice");
+            seen[op as usize] = true;
+            if let Some(pv) = prev {
+                assert!(op > pv, "{label}: shard {s} op list not ascending");
+            }
+            prev = Some(op);
+        }
+    }
+    assert!(seen.iter().all(|&b| b), "{label}: every op in exactly one shard");
+
+    // Resources never span shards; multi-tile (contended) resources live
+    // in the shared shard.
+    let ops = p.ops();
+    let nr = p.num_resources();
+    let mut res_shard: Vec<Option<u32>> = vec![None; nr];
+    let mut res_tile: Vec<Option<u32>> = vec![None; nr];
+    let mut res_multi: Vec<bool> = vec![false; nr];
+    for (i, op) in ops.iter().enumerate() {
+        let r = op.resource.0 as usize;
+        match res_shard[r] {
+            None => res_shard[r] = Some(shards[i]),
+            Some(s) => assert_eq!(s, shards[i], "{label}: resource {r} spans shards"),
+        }
+        match res_tile[r] {
+            None => res_tile[r] = Some(op.tile),
+            Some(t) if t != op.tile => res_multi[r] = true,
+            _ => {}
+        }
+    }
+    for (r, &multi) in res_multi.iter().enumerate() {
+        if multi {
+            assert_eq!(
+                res_shard[r],
+                Some(SHARED_SHARD),
+                "{label}: contended resource {r} outside the shared shard"
+            );
+        }
+    }
+    for (r, &s) in p.resource_shards().iter().enumerate() {
+        assert_eq!(
+            res_shard[r].unwrap_or(u32::MAX),
+            s,
+            "{label}: recorded owner of resource {r} disagrees"
+        );
+    }
+
+    // Cross-shard dependency edges always touch the shared shard.
+    for (i, op) in ops.iter().enumerate() {
+        for &d in p.deps_of(op) {
+            let (a, b) = (shards[i], shards[d as usize]);
+            assert!(
+                a == b || a == SHARED_SHARD || b == SHARED_SHARD,
+                "{label}: private edge {d}->{i} crosses shards {b}->{a}"
+            );
+        }
+    }
+}
+
+/// Assert parallel == serial (stats + full trace) at every thread count.
+fn assert_parallel_matches(p: &Program, tracked: u32, counts: &[usize], label: &str) {
+    let (want, want_trace) = execute_traced(p, tracked, Some(u32::MAX));
+    for &t in counts {
+        let (got, got_trace) = execute_parallel_traced(p, tracked, Some(u32::MAX), t);
+        assert_eq!(want, got, "{label}: RunStats diverge at {t} threads");
+        assert_eq!(want_trace, got_trace, "{label}: traces diverge at {t} threads");
+    }
+}
+
+#[test]
+fn shard_partition_wall_on_builder_programs() {
+    let _guard = SWITCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arch = presets::table2(8);
+    let wl = Workload::new(768, 64, 6, 1).with_causal(true);
+    for folding in [true, false] {
+        set_symmetry_folding(folding);
+        for df in ALL_DATAFLOWS {
+            let p = build_program(&arch, &wl, df, 4);
+            assert_shard_wall(&p, &format!("{df:?} folding={folding}"));
+        }
+    }
+    set_symmetry_folding(true);
+
+    // An unfolded Flash grid exposes roughly per-tile parallelism: with
+    // enough heads every one of the 64 tiles owns a private shard.
+    set_symmetry_folding(false);
+    let p = build_program(&arch, &Workload::new(1024, 64, 96, 1), Dataflow::Flash2, 1);
+    set_symmetry_folding(true);
+    assert!(
+        p.num_shards() > 32,
+        "unfolded 8x8 Flash2 should shard per tile, got {}",
+        p.num_shards()
+    );
+    // And its shared shard holds every HBM-channel op (channels are the
+    // first `total_channels` resources in the flash builders).
+    let n_chan = arch.hbm.total_channels();
+    for (i, op) in p.ops().iter().enumerate() {
+        let on_channel = (op.resource.0 as usize) < n_chan;
+        assert_eq!(
+            p.op_shards()[i] == SHARED_SHARD,
+            on_channel,
+            "op {i}: channel ops and only channel ops arbitrate in the shared shard"
+        );
+    }
+}
+
+#[test]
+fn parallel_matches_serial_randomized_dataflow_sweep() {
+    let _guard = SWITCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arches = [presets::table2(8), presets::with_hbm_channels(presets::table2(8), 2)];
+    let counts = thread_counts();
+    forall_cases(12, 0x5AAD, |rng| {
+        let arch = &arches[rng.gen_range(arches.len() as u64) as usize];
+        let df = *rng.choose(&ALL_DATAFLOWS);
+        let group = *rng.choose(&[2usize, 4]);
+        // Deliberately not block-aligned: partial trailing blocks included.
+        let seq = 192 + 64 * rng.gen_range(4);
+        let kv_heads = 1 + rng.gen_range(2);
+        let q_per_kv = *rng.choose(&[1u64, 2]);
+        let causal = rng.gen_range(2) == 0;
+        let folding = rng.gen_range(2) == 0;
+        let mut wl = Workload::new(seq, 64, kv_heads * q_per_kv, 1)
+            .with_causal(causal)
+            .with_kv_heads(kv_heads);
+        if rng.gen_range(4) == 0 {
+            wl = wl.decode();
+        }
+        set_symmetry_folding(folding);
+        let p = build_program(arch, &wl, df, group);
+        set_symmetry_folding(true);
+        let tracked = tracked_tile(arch, df, group);
+        let (want, want_trace) = execute_traced(&p, tracked, Some(u32::MAX));
+        for &t in &counts {
+            let (got, got_trace) = execute_parallel_traced(&p, tracked, Some(u32::MAX), t);
+            check(
+                want == got,
+                format!(
+                    "{} {df:?} g{group} {} folding={folding} threads={t}:\n\
+                     serial   {want:?}\nparallel {got:?}",
+                    arch.name,
+                    wl.label()
+                ),
+            )?;
+            check(
+                want_trace == got_trace,
+                format!(
+                    "{} {df:?} g{group} {} folding={folding} threads={t}: trace diverges \
+                     ({} vs {} records)",
+                    arch.name,
+                    wl.label(),
+                    want_trace.len(),
+                    got_trace.len()
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Random DAGs with a private/shared resource mix: resources `0..4` are
+/// per-tile (ops on resource `r` carry tile `r` — private), the rest draw
+/// random tiles (contended). Exercises duplicate deps, zero-duration
+/// barriers, latency pipelining and equal-time storms across the shard
+/// boundary.
+fn random_sharded_program(rng: &mut Rng) -> Program {
+    let mut p = Program::new();
+    let n_private = 4usize;
+    let n_res = n_private + 1 + rng.gen_range(4) as usize;
+    let res = p.resources(n_res);
+    let n_ops = 10 + rng.gen_range(120) as usize;
+    let mut ids: Vec<OpId> = Vec::with_capacity(n_ops);
+    const COMPONENTS: [Component; 7] = [
+        Component::RedMule,
+        Component::Spatz,
+        Component::SumReduce,
+        Component::MaxReduce,
+        Component::Multicast,
+        Component::HbmAccess,
+        Component::Other,
+    ];
+    for i in 0..n_ops {
+        let mut deps: Vec<OpId> = Vec::new();
+        if i > 0 {
+            for _ in 0..rng.gen_range(4) {
+                deps.push(ids[rng.gen_range(i as u64) as usize]);
+            }
+        }
+        let ri = rng.gen_range(n_res as u64) as usize;
+        let tile = if ri < n_private { ri as u32 } else { rng.gen_range(4) as u32 };
+        let barrier = rng.gen_range(8) == 0;
+        let occupancy = if barrier { 0 } else { rng.gen_range(60) };
+        let latency = if rng.gen_range(3) == 0 { rng.gen_range(250) } else { 0 };
+        let component = COMPONENTS[rng.gen_range(COMPONENTS.len() as u64) as usize];
+        let hbm_bytes = if component == Component::HbmAccess { 1 + rng.gen_range(4096) } else { 0 };
+        ids.push(p.op(res[ri], occupancy, latency, component, tile, hbm_bytes, &deps));
+    }
+    p.flops = rng.gen_range(1 << 30);
+    p
+}
+
+#[test]
+fn parallel_matches_both_engines_on_random_dags() {
+    forall_cases(60, 0xBADD, |rng| {
+        let mut p = random_sharded_program(rng);
+        p.seal();
+        assert_shard_wall(&p, "random DAG");
+        let tracked = rng.gen_range(4) as u32;
+        let limit = Some(1 + rng.gen_range(4) as u32);
+        let (want, want_trace) = execute_traced(&p, tracked, limit);
+        let (ref_stats, ref_trace) = execute_reference_traced(&p, tracked, limit);
+        check(
+            want == ref_stats && want_trace == ref_trace,
+            format!("serial vs reference diverge: {want:?} vs {ref_stats:?}"),
+        )?;
+        for t in [2usize, 5] {
+            let (got, got_trace) = execute_parallel_traced(&p, tracked, limit, t);
+            check(
+                want == got,
+                format!("parallel({t}) stats diverge:\nserial   {want:?}\nparallel {got:?}"),
+            )?;
+            check(
+                want_trace == got_trace,
+                format!(
+                    "parallel({t}) trace diverges ({} vs {} records)",
+                    want_trace.len(),
+                    got_trace.len()
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_matches_serial_on_paged_batch_programs() {
+    let _guard = SWITCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arch = presets::table2(8); // 8 west + 2 south channels
+    let counts = thread_counts();
+    // Mixed placements: striped, single-channel affine, two-channel.
+    let mut pm0 = PageMap::new(32);
+    pm0.grow_to(256, |pg| (pg % 4) as u32);
+    let mut pm1 = PageMap::new(32);
+    pm1.grow_to(300, |_| 9);
+    let mut pm2 = PageMap::new(32);
+    pm2.grow_to(192, |pg| 8 + (pg % 2) as u32);
+    for folding in [true, false] {
+        set_symmetry_folding(folding);
+        for df in ALL_DATAFLOWS {
+            let entries = vec![
+                BatchEntry {
+                    request: 0,
+                    slot: 0,
+                    workload: Workload::new(128, 64, 4, 1).with_causal(true).with_kv_prefix(128),
+                    pages: &pm0,
+                },
+                BatchEntry {
+                    request: 1,
+                    slot: 1,
+                    workload: Workload::new(300, 64, 4, 1).with_kv_heads(2).decode(),
+                    pages: &pm1,
+                },
+                BatchEntry {
+                    request: 2,
+                    slot: 3,
+                    workload: Workload::new(192, 64, 2, 1).with_causal(true),
+                    pages: &pm2,
+                },
+            ];
+            let bp = compose(&arch, df, 2, 4, &entries);
+            let label = format!("batch {df:?} folding={folding}");
+            assert_shard_wall(&bp.program, &label);
+            assert_parallel_matches(&bp.program, 0, &counts, &label);
+        }
+    }
+    set_symmetry_folding(true);
+}
+
+#[test]
+fn scheduler_replay_is_thread_count_invariant() {
+    // End to end through the serving scheduler: the virtual clock, token
+    // throughput and traffic of a whole trace replay must not move with
+    // the DES worker count.
+    let arch = presets::table2(8);
+    let trace = RequestTrace::builtin("builtin", 2).expect("builtin trace");
+    for df in [Dataflow::Flash2, Dataflow::FlatColl] {
+        let mut cfg = SchedulerConfig::new(df);
+        cfg.slots = 4;
+        cfg.group = 2;
+        cfg.chunk = 128;
+        cfg.page_tokens = 32;
+        cfg.heads = 4;
+        cfg.head_dim = 64;
+        cfg.threads = 1;
+        let serial = simulate(&arch, &trace, &cfg);
+        cfg.threads = 4;
+        let parallel = simulate(&arch, &trace, &cfg);
+        assert_eq!(serial.total_cycles, parallel.total_cycles, "{df:?}");
+        assert_eq!(serial.steps, parallel.steps, "{df:?}");
+        assert_eq!(serial.tokens, parallel.tokens, "{df:?}");
+        assert_eq!(serial.hbm_bytes, parallel.hbm_bytes, "{df:?}");
+        assert_eq!(serial.tokens_per_s, parallel.tokens_per_s, "{df:?}");
+    }
+}

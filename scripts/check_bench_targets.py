@@ -1,0 +1,99 @@
+#!/usr/bin/env python3
+"""Assert every in-bench acceptance target recorded in the BENCH_*.json
+reports at the repo root.
+
+Run after the benches (CI's rust-bench job does, with BENCH_SMOKE=1;
+scripts/populate_benches.sh does locally):
+
+    python3 scripts/check_bench_targets.py
+
+Targets (mirroring the asserts/WARNINGs inside the bench harnesses):
+
+  sim_hotpath     e2e_speedup            >= 2.0
+                  fold_e2e_speedup       >= 3.0
+                  parallel_e2e_speedup   >= 2.0 at 8 threads — skipped when
+                                         parallel_cores_available < 3 (on a
+                                         1-2 core runner, >= 2x point-level
+                                         fan-out is arithmetically out of
+                                         reach; the metric is still recorded)
+  serving_sweep   decode_mqa_traffic_reduction >= 10.0
+                  decode_over_prefill_makespan <= 0.1
+  schedule_sweep  continuous_over_static_*     >= 1.5 (every dataflow row)
+
+Exits non-zero listing every violated target; placeholder files (empty
+"metrics") fail loudly — the point of the CI job is that the benches RAN.
+"""
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+failures = []
+notes = []
+
+
+def load(name):
+    path = ROOT / name
+    try:
+        with open(path, encoding="utf-8") as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        failures.append(f"{name}: unreadable ({e})")
+        return {}
+    metrics = report.get("metrics", {})
+    if not metrics:
+        failures.append(f"{name}: no recorded metrics (placeholder? run the bench first)")
+    return metrics
+
+
+def require(name, metrics, key, lo=None, hi=None):
+    if key not in metrics:
+        failures.append(f"{name}: metric '{key}' missing")
+        return
+    v = metrics[key]
+    if lo is not None and v < lo:
+        failures.append(f"{name}: {key} = {v:.3f} below target {lo}")
+    elif hi is not None and v > hi:
+        failures.append(f"{name}: {key} = {v:.3f} above target {hi}")
+    else:
+        bound = f">= {lo}" if lo is not None else f"<= {hi}"
+        notes.append(f"{name}: {key} = {v:.3f} (target {bound}) ok")
+
+
+hot = load("BENCH_sim_hotpath.json")
+if hot:
+    require("sim_hotpath", hot, "e2e_speedup", lo=2.0)
+    require("sim_hotpath", hot, "fold_e2e_speedup", lo=3.0)
+    cores = hot.get("parallel_cores_available", 0)
+    if cores >= 3:
+        require("sim_hotpath", hot, "parallel_e2e_speedup", lo=2.0)
+    elif "parallel_e2e_speedup" in hot:
+        notes.append(
+            f"sim_hotpath: parallel_e2e_speedup = {hot['parallel_e2e_speedup']:.3f} "
+            f"recorded but not gated ({cores:.0f} cores available < 3)"
+        )
+    else:
+        failures.append("sim_hotpath: metric 'parallel_e2e_speedup' missing")
+
+srv = load("BENCH_serving_sweep.json")
+if srv:
+    require("serving_sweep", srv, "decode_mqa_traffic_reduction", lo=10.0)
+    require("serving_sweep", srv, "decode_over_prefill_makespan", hi=0.1)
+
+sch = load("BENCH_schedule_sweep.json")
+if sch:
+    rows = [k for k in sch if k.startswith("continuous_over_static_")]
+    if not rows:
+        failures.append("schedule_sweep: no continuous_over_static_* metrics")
+    for k in rows:
+        require("schedule_sweep", sch, k, lo=1.5)
+
+for line in notes:
+    print(line)
+if failures:
+    print("\nBENCH TARGETS FAILED:", file=sys.stderr)
+    for line in failures:
+        print(f"  {line}", file=sys.stderr)
+    sys.exit(1)
+print("\nall bench targets met")
