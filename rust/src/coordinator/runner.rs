@@ -28,12 +28,16 @@ use super::experiment::{ExperimentResult, ExperimentSpec};
 /// never serves one mode's results for the other (they are bit-identical
 /// by construction — `tests/fold_differential.rs` — but the cache must
 /// not depend on that invariant for correctness).
+/// The active fault plan's fingerprint joins for the same reason: a
+/// faulted run's stats must never be served for the fault-free point (or
+/// for a different plan) — see [`set_fault_plan`].
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct SpecKey {
     arch_name: String,
     dataflow: Dataflow,
     group: usize,
     folding: bool,
+    fault: u64,
     nums: [u64; 28],
 }
 
@@ -68,6 +72,7 @@ pub fn spec_key(spec: &ExperimentSpec) -> SpecKey {
         dataflow: *dataflow,
         group: *group,
         folding: dataflow::symmetry_folding(),
+        fault: fault_plan().map_or(0, |p| p.fingerprint()),
         nums: [
             *mesh_x as u64,
             *mesh_y as u64,
@@ -124,6 +129,26 @@ pub fn engine_threads() -> usize {
     ENGINE_THREADS.load(Ordering::Relaxed)
 }
 
+/// Process-global fault plan applied to every experiment run through the
+/// coordinator (`dataflow::run_faulted` when set). Follows the
+/// symmetry-folding pattern — a global switch rather than an
+/// `ExperimentSpec` field (every figure constructs specs by struct
+/// literal) — and, unlike [`set_engine_threads`], it DOES join
+/// [`SpecKey`]: fault plans change results, so each plan partitions the
+/// memo key space. Empty plans normalize to "no plan" (they are
+/// bit-identical to fault-free runs and must share their cache entries).
+static FAULT_PLAN: Mutex<Option<crate::sim::FaultPlan>> = Mutex::new(None);
+
+/// Install (or clear, with `None`) the global fault plan.
+pub fn set_fault_plan(plan: Option<crate::sim::FaultPlan>) {
+    *FAULT_PLAN.lock().unwrap() = plan.filter(|p| !p.is_none());
+}
+
+/// The active global fault plan, if any.
+pub fn fault_plan() -> Option<crate::sim::FaultPlan> {
+    FAULT_PLAN.lock().unwrap().clone()
+}
+
 /// Global result cache. `Mutex<Option<..>>` because `HashMap::new` is not
 /// const; initialized on first use.
 static MEMO: Mutex<Option<HashMap<SpecKey, ExperimentResult>>> = Mutex::new(None);
@@ -168,13 +193,28 @@ pub fn clear_memo() {
 /// [`engine_threads`] workers (default 1 — sweeps parallelize across
 /// experiments instead).
 pub fn run_one_uncached(spec: &ExperimentSpec) -> ExperimentResult {
-    let stats = dataflow::run_threads(
-        &spec.arch,
-        &spec.workload,
-        spec.dataflow,
-        spec.group,
-        engine_threads(),
-    );
+    let stats = match fault_plan() {
+        Some(plan) => {
+            // Faulted runs report the surviving schedule's stats; killed
+            // and stalled ops simply never contribute (graceful DES exit).
+            dataflow::run_faulted(
+                &spec.arch,
+                &spec.workload,
+                spec.dataflow,
+                spec.group,
+                engine_threads(),
+                &plan,
+            )
+            .0
+        }
+        None => dataflow::run_threads(
+            &spec.arch,
+            &spec.workload,
+            spec.dataflow,
+            spec.group,
+            engine_threads(),
+        ),
+    };
     ExperimentResult::from_stats(spec, &stats)
 }
 
@@ -420,6 +460,45 @@ mod tests {
         crate::dataflow::set_symmetry_folding(true);
         let k_on = spec_key(&spec);
         assert_ne!(k_off, k_on, "folding mode must partition the memo key space");
+    }
+
+    #[test]
+    fn spec_key_tracks_fault_plan() {
+        use crate::sim::FaultPlan;
+        // Serialized with the other global-switch tests: set_fault_plan is
+        // process-global state just like the folding toggle.
+        let _guard = crate::dataflow::GLOBAL_SWITCH_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let spec = ExperimentSpec {
+            arch: table1(),
+            workload: Workload::new(512, 128, 8, 1),
+            dataflow: Dataflow::Flash2,
+            group: 8,
+        };
+        set_fault_plan(None);
+        let k_free = spec_key(&spec);
+        let free = run_one_uncached(&spec);
+        // An empty plan normalizes away: same key, bit-identical result.
+        set_fault_plan(Some(FaultPlan::none()));
+        assert_eq!(spec_key(&spec), k_free);
+        assert_eq!(run_one_uncached(&spec), free);
+        // A real plan partitions the key space and derates the makespan.
+        let mut plan = FaultPlan::none();
+        for c in 0..spec.arch.hbm.total_channels() as u32 {
+            plan = plan.with_derate(c, 0, u64::MAX / 2, 4, 1);
+        }
+        set_fault_plan(Some(plan));
+        let k_fault = spec_key(&spec);
+        let faulted = run_one_uncached(&spec);
+        set_fault_plan(None);
+        assert_ne!(k_fault, k_free, "fault plan must partition the memo key space");
+        assert!(
+            faulted.makespan > free.makespan,
+            "derating channel 0 must slow the run: {} vs {}",
+            faulted.makespan,
+            free.makespan
+        );
     }
 
     #[test]

@@ -63,7 +63,10 @@ pub mod tiling;
 use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::arch::ArchConfig;
-use crate::sim::{execute, execute_parallel, OpId, Program, ProgramArena, RunStats};
+use crate::sim::{
+    execute, execute_faulted, execute_parallel, FaultPlan, FaultReport, OpId, Program,
+    ProgramArena, RunStats,
+};
 
 pub use summa::{summa_program, GemmWorkload};
 pub use tiling::{flash_block_size, flat_slice_size, FlashTiling, FlatTiling};
@@ -678,6 +681,29 @@ pub fn run_threads(
         };
         arena.recycle(program);
         stats
+    })
+}
+
+/// Like [`run_threads`], executing under a fault plan
+/// (`sim::execute_faulted`, §Fault): returns the surviving schedule's
+/// stats plus the killed/stalled op report. `FaultPlan::none()` matches
+/// [`run_threads`] bit for bit at every thread count
+/// (`tests/fault_differential.rs`).
+pub fn run_faulted(
+    arch: &ArchConfig,
+    wl: &Workload,
+    df: Dataflow,
+    group: usize,
+    threads: usize,
+    plan: &FaultPlan,
+) -> (RunStats, FaultReport) {
+    let tracked = tracked_tile(arch, df, group);
+    RUN_ARENA.with(|cell| {
+        let mut arena = cell.borrow_mut();
+        let program = build_program_in(&mut arena, arch, wl, df, group);
+        let out = execute_faulted(&program, tracked, plan, threads);
+        arena.recycle(program);
+        out
     })
 }
 

@@ -61,6 +61,15 @@ impl PageMap {
         }
     }
 
+    /// Drop every allocated page, keeping the page size. This is the
+    /// preemption/eviction primitive: a preempted request's KV pages are
+    /// returned to the pool and its cache must be rebuilt by *real*
+    /// re-prefill traffic (the router re-emits chunked prefill), so the
+    /// cost of eviction is paid in simulated cycles, not waved away.
+    pub fn reset(&mut self) {
+        self.channels.clear();
+    }
+
     /// Channel holding page `page`. Panics if the page was never
     /// allocated — builders must size the map before emission.
     pub fn channel_of_page(&self, page: u64) -> u32 {
@@ -154,5 +163,20 @@ mod tests {
     #[should_panic(expected = "page size")]
     fn zero_page_size_rejected() {
         let _ = PageMap::new(0);
+    }
+
+    #[test]
+    fn reset_drops_pages_but_keeps_page_size() {
+        let mut pm = PageMap::new(16);
+        pm.grow_to(40, |p| p as u32);
+        assert_eq!(pm.num_pages(), 3);
+        pm.reset();
+        assert_eq!(pm.num_pages(), 0);
+        assert_eq!(pm.tokens_capacity(), 0);
+        assert_eq!(pm.page_tokens(), 16);
+        // Regrowth re-asks the allocator from page 0 — a rebuilt cache may
+        // land on entirely different channels.
+        pm.grow_to(20, |p| (p + 7) as u32);
+        assert_eq!(pm.channel_of_page(0), 7);
     }
 }

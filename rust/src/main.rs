@@ -25,8 +25,10 @@ use flatattention::report::{self, ReportOpts};
 use flatattention::runtime::{artifacts_available, default_artifact_dir};
 use flatattention::scheduler::batch::validate_slots;
 use flatattention::scheduler::{
-    simulate, BatchPolicy, PagePlacement, RequestTrace, SchedulerConfig,
+    route, simulate, BatchPolicy, PagePlacement, RequestTrace, RouterConfig, SchedulerConfig,
+    VictimPolicy,
 };
+use flatattention::sim::FaultPlan;
 #[cfg(feature = "pjrt")]
 use flatattention::runtime::Runtime;
 use flatattention::util::cli::{parse, Args};
@@ -68,7 +70,7 @@ fn print_usage() {
         "flatattention — FlatAttention dataflow + fabric collectives co-optimization (reproduction)
 
 USAGE:
-  flatattention report <fig3|fig4|fig5a|fig5b|fig5c|table1|table2|section2|area|headline|ablations|serving|schedule|all>
+  flatattention report <fig3|fig4|fig5a|fig5b|fig5c|table1|table2|section2|area|headline|ablations|serving|schedule|robustness|all>
                       [--quick] [--threads N] [--out results.json]
   flatattention run    --dataflow <fa2|fa3|flat|flatcoll|flatasyn> [--seq 4096] [--d 128]
                       [--heads 32] [--batch 2] [--group 32] [--arch table1] [--threads N]
@@ -79,6 +81,12 @@ USAGE:
                       [--group G] [--window W] [--static] [--threads N] [--arch table1]
                       (continuous batching of a mixed prefill+decode request trace;
                        CSV rows: arrival,prompt,output[,kv_heads])
+                      Router options (any engages the graceful-degradation router):
+                      [--faults SPEC] [--deadline CYC] [--retries N] [--max-batch-tokens N]
+                      [--max-pages N] [--preemption on|off]
+                      [--victim newest|fewest-pages|most-remaining]
+                      SPEC: ';'-separated off:CH@F-U | slow:CH@F-UxN[/D] | noc@F-UxN[/D]
+                      | die:TILE@AT  (e.g. \"slow:8@0-4000000x4;die:60@1200000\")
   flatattention validate [--seq 256] [--d 64] [--group 4] [--pjrt-only]
   flatattention trace  [run options] [--tiles 64] --out trace.json   (chrome://tracing)
   flatattention info
@@ -186,10 +194,13 @@ fn cmd_report(args: &Args) -> i32 {
     if all || which == "schedule" {
         println!("{}", report::schedule::render(&opts, Some(&mut store)));
     }
+    if all || which == "robustness" {
+        println!("{}", report::robustness::render(&opts, Some(&mut store)));
+    }
     if !matches!(
         which,
         "all" | "table1" | "table2" | "section2" | "area" | "fig3" | "fig4" | "fig5a" | "fig5b"
-            | "fig5c" | "headline" | "ablations" | "serving" | "schedule"
+            | "fig5c" | "headline" | "ablations" | "serving" | "schedule" | "robustness"
     ) {
         eprintln!("unknown report '{which}'");
         return 1;
@@ -343,6 +354,40 @@ fn cmd_schedule(args: &Args) -> i32 {
     let window = args.get_u64("window", 0).unwrap_or(0);
     let policy = if args.flag("static") { BatchPolicy::Static } else { BatchPolicy::Continuous };
 
+    // Router options: providing any of them runs the request-lifecycle
+    // router (admission budgets, deadlines, preemption, fault remapping)
+    // instead of the plain scheduler.
+    let router_keys =
+        ["faults", "deadline", "retries", "max-batch-tokens", "max-pages", "preemption", "victim"];
+    let use_router = router_keys.iter().any(|k| args.get(k).is_some());
+    let faults = match args.get("faults") {
+        Some(spec) => match FaultPlan::parse(spec) {
+            Ok(p) => p,
+            Err(e) => return fail(&format!("--faults: {e}")),
+        },
+        None => FaultPlan::none(),
+    };
+    let preemption = match args.get_or("preemption", "on") {
+        "on" | "true" => true,
+        "off" | "false" => false,
+        other => return fail(&format!("--preemption '{other}': expected on|off")),
+    };
+    let victim_arg = args.get_or("victim", "fewest-pages");
+    let Some(victim) = VictimPolicy::from_label(victim_arg) else {
+        return fail(&format!(
+            "unknown --victim '{victim_arg}' (newest|fewest-pages|most-remaining)"
+        ));
+    };
+    let router_cfg = use_router.then(|| RouterConfig {
+        faults,
+        max_batch_total_tokens: args.get_u64("max-batch-tokens", 0).unwrap_or(0),
+        max_total_pages: args.get_u64("max-pages", 0).unwrap_or(0),
+        deadline: args.get_u64("deadline", 0).unwrap_or(0),
+        max_retries: args.get_usize("retries", 1).unwrap_or(1),
+        victim,
+        preemption,
+    });
+
     let df_arg = args.get_or("dataflow", "all");
     let dataflows: Vec<Dataflow> = if df_arg == "all" {
         flatattention::dataflow::ALL_DATAFLOWS.to_vec()
@@ -362,10 +407,55 @@ fn cmd_schedule(args: &Args) -> i32 {
         if policy == BatchPolicy::Static { "static batching" } else { "continuous batching" },
         if window > 0 { format!(", window={window}") } else { String::new() },
     );
-    println!(
-        "{:>9}  {:>10}  {:>9}  {:>9}  {:>9}  {:>8}  {:>6}",
-        "dataflow", "tokens/s", "TTFT_ms", "TPOT_ms", "occup", "HBM_GB", "steps"
-    );
+    if let Some(rc) = &router_cfg {
+        if policy == BatchPolicy::Static {
+            return fail("--static is not supported with router options (continuous only)");
+        }
+        let fault_desc = if rc.faults.is_none() {
+            "none".to_string()
+        } else {
+            format!("{:#x}", rc.faults.fingerprint())
+        };
+        println!(
+            "router: faults={}, deadline={}, retries={}, max-batch-tokens={}, max-pages={}, \
+             preemption={}, victim={}",
+            fault_desc,
+            rc.deadline,
+            rc.max_retries,
+            rc.max_batch_total_tokens,
+            rc.max_total_pages,
+            if rc.preemption { "on" } else { "off" },
+            rc.victim.label()
+        );
+        println!(
+            "{:>9}  {:>10}  {:>10}  {:>9}  {:>9}  {:>9}  {:>9}  {:>4}  {:>4}  {:>5}  {:>5}",
+            "dataflow",
+            "tokens/s",
+            "goodput/s",
+            "TTFT_p50",
+            "TTFT_p95",
+            "TTFT_p99",
+            "TPOT_p95",
+            "done",
+            "exp",
+            "pre",
+            "dead"
+        );
+    } else {
+        println!(
+            "{:>9}  {:>10}  {:>10}  {:>9}  {:>9}  {:>9}  {:>9}  {:>9}  {:>8}  {:>6}",
+            "dataflow",
+            "tokens/s",
+            "goodput/s",
+            "TTFT_ms",
+            "TTFT_p95",
+            "TPOT_ms",
+            "TPOT_p95",
+            "occup",
+            "HBM_GB",
+            "steps"
+        );
+    }
     for df in dataflows {
         let mut cfg = SchedulerConfig::new(df);
         cfg.group = group;
@@ -378,17 +468,40 @@ fn cmd_schedule(args: &Args) -> i32 {
         cfg.head_dim = head_dim;
         cfg.window = window;
         cfg.threads = args.get_usize("threads", 1).unwrap_or(1);
-        let r = simulate(&arch, &trace, &cfg);
-        println!(
-            "{:>9}  {:>10.0}  {:>9.3}  {:>9.4}  {:>8.1}%  {:>8.3}  {:>6}",
-            df.label(),
-            r.tokens_per_s,
-            r.ttft_mean_ms,
-            r.tpot_mean_ms,
-            r.occupancy * 100.0,
-            r.hbm_bytes as f64 / 1e9,
-            r.steps
-        );
+        if let Some(rc) = &router_cfg {
+            let r = route(&arch, &trace, &cfg, rc);
+            println!(
+                "{:>9}  {:>10.0}  {:>10.0}  {:>9.3}  {:>9.3}  {:>9.3}  {:>9.4}  {:>4}  {:>4}  \
+                 {:>5}  {:>5}",
+                df.label(),
+                r.serving.tokens_per_s,
+                r.serving.goodput_tokens_per_s,
+                r.serving.ttft_p50_ms,
+                r.serving.ttft_p95_ms,
+                r.serving.ttft_p99_ms,
+                r.serving.tpot_p95_ms,
+                r.completed,
+                r.expired,
+                r.preemptions,
+                r.dead_bands
+            );
+        } else {
+            let r = simulate(&arch, &trace, &cfg);
+            println!(
+                "{:>9}  {:>10.0}  {:>10.0}  {:>9.3}  {:>9.3}  {:>9.4}  {:>9.4}  {:>8.1}%  \
+                 {:>8.3}  {:>6}",
+                df.label(),
+                r.tokens_per_s,
+                r.goodput_tokens_per_s,
+                r.ttft_mean_ms,
+                r.ttft_p95_ms,
+                r.tpot_mean_ms,
+                r.tpot_p95_ms,
+                r.occupancy * 100.0,
+                r.hbm_bytes as f64 / 1e9,
+                r.steps
+            );
+        }
     }
     0
 }

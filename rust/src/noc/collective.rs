@@ -86,6 +86,17 @@ pub fn unicast_time(noc: &NocConfig, bytes: u64, hops: u64) -> XferTime {
     }
 }
 
+/// True for accounting components that ride the NoC fabric (row/column
+/// buses). `sim::fault` uses this to resolve a [`NoC slowdown`] window to
+/// the bus resources of a concrete program: a bus is exactly a resource
+/// whose ops carry one of these components.
+///
+/// [`NoC slowdown`]: crate::sim::fault::NocSlowdown
+pub fn is_fabric_component(c: crate::sim::Component) -> bool {
+    use crate::sim::Component;
+    matches!(c, Component::Multicast | Component::MaxReduce | Component::SumReduce)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -9,5 +9,7 @@
 pub mod collective;
 pub mod topology;
 
-pub use collective::{collective_time, unicast_time, CollectiveKind, XferTime};
+pub use collective::{
+    collective_time, is_fabric_component, unicast_time, CollectiveKind, XferTime,
+};
 pub use topology::Topology;

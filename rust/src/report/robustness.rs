@@ -1,0 +1,275 @@
+//! Graceful-degradation figure (our extension): serving throughput and
+//! goodput vs fault severity.
+//!
+//! Replays the mixed serving trace through the request router
+//! ([`crate::scheduler::route`]) under an escalating fault ladder — clean,
+//! mildly derated HBM, heavily derated HBM, and derated HBM plus a
+//! mid-trace tile death — for a representative of each dataflow family,
+//! with the page pool under pressure both ways the router supports:
+//! preemption (optimistic admission, evict on pressure) and
+//! admission-only (reservation admission, never evict). The figure the
+//! kernel papers can't show: how much serving throughput survives a
+//! degraded fabric, and what the preemption machinery buys.
+
+use crate::arch::presets;
+use crate::arch::ArchConfig;
+use crate::coordinator::ResultStore;
+use crate::dataflow::Dataflow;
+use crate::report::{ReportOpts, Table};
+use crate::scheduler::{
+    route, RequestTrace, RouterConfig, RouterReport, SchedulerConfig, VictimPolicy,
+};
+use crate::sim::{Cycle, FaultPlan};
+use crate::util::json::Json;
+
+/// Fault-severity ladder size (levels 0..4).
+pub const LEVELS: usize = 4;
+
+/// One grid point: dataflow × admission mode × severity level.
+pub struct RobustnessRow {
+    pub dataflow: Dataflow,
+    pub preemption: bool,
+    pub level: usize,
+    pub severity: &'static str,
+    pub report: RouterReport,
+}
+
+/// The fault plan of severity `level`: derates hit the *last* channels —
+/// the south edge where channel-affine KV pages live — so the ladder
+/// degrades the serving-critical resource, not a bystander.
+fn severity_plan(
+    level: usize,
+    arch: &ArchConfig,
+    slots: usize,
+    death_at: Cycle,
+) -> (FaultPlan, &'static str) {
+    let total = arch.hbm.total_channels() as u32;
+    let derate_last = |plan: FaultPlan, frac: u32, num: u64| {
+        let k = (total / frac).max(1);
+        (total - k..total).fold(plan, |p, c| p.with_derate(c, 0, u64::MAX / 2, num, 1))
+    };
+    match level {
+        0 => (FaultPlan::none(), "clean"),
+        1 => (derate_last(FaultPlan::none(), 8, 2), "derate 1/8 ch x2"),
+        2 => (derate_last(FaultPlan::none(), 4, 4), "derate 1/4 ch x4"),
+        _ => {
+            // Severity 3: the heavy derate plus the last band's
+            // representative tile dying a third of the way into the trace.
+            let rows_per = arch.mesh_y / slots;
+            let tile = ((slots - 1) * rows_per * arch.mesh_x) as u32;
+            let plan = derate_last(FaultPlan::none(), 4, 4).with_tile_death(tile, death_at);
+            (plan, "derate + tile death")
+        }
+    }
+}
+
+/// A page budget that pressures but never starves: 3/4 of the maximal
+/// footprint of the `slots` largest requests, floored at the single
+/// largest request so no request is infeasible on an idle machine.
+fn page_budget(trace: &RequestTrace, cfg: &SchedulerConfig) -> u64 {
+    let mut per: Vec<u64> =
+        trace.requests.iter().map(|r| (r.prompt + r.output).div_ceil(cfg.page_tokens)).collect();
+    per.sort_unstable_by(|a, b| b.cmp(a));
+    let top: u64 = per.iter().take(cfg.slots).sum();
+    (top * 3 / 4).max(per.first().copied().unwrap_or(1))
+}
+
+/// Run the dataflow × admission-mode × severity ladder.
+pub fn run_ladder(
+    arch: &ArchConfig,
+    trace: &RequestTrace,
+    base: &SchedulerConfig,
+) -> Vec<RobustnessRow> {
+    let mut rows = Vec::new();
+    for df in [Dataflow::Flash2, Dataflow::FlatColl] {
+        let cfg = SchedulerConfig { dataflow: df, ..base.clone() };
+        // Size the death time off the clean run so it lands mid-trace.
+        let clean = route(arch, trace, &cfg, &RouterConfig::default());
+        let death_at = (clean.serving.total_cycles / 3).max(1);
+        let budget = page_budget(trace, &cfg);
+        for preemption in [true, false] {
+            for level in 0..LEVELS {
+                let (faults, severity) = severity_plan(level, arch, cfg.slots, death_at);
+                let rc = RouterConfig {
+                    faults,
+                    max_total_pages: budget,
+                    victim: VictimPolicy::FewestPages,
+                    preemption,
+                    ..RouterConfig::default()
+                };
+                let report = route(arch, trace, &cfg, &rc);
+                rows.push(RobustnessRow { dataflow: df, preemption, level, severity, report });
+            }
+        }
+    }
+    rows
+}
+
+/// Throughput of this row's clean (level-0) twin, for the vs-clean ratio.
+fn clean_tps(rows: &[RobustnessRow], r: &RobustnessRow) -> f64 {
+    rows.iter()
+        .find(|c| c.dataflow == r.dataflow && c.preemption == r.preemption && c.level == 0)
+        .map(|c| c.report.serving.tokens_per_s)
+        .unwrap_or(0.0)
+}
+
+fn row_json(r: &RobustnessRow, vs_clean: f64) -> Json {
+    Json::obj([
+        ("dataflow", Json::str(r.dataflow.label())),
+        ("mode", Json::str(if r.preemption { "preemption" } else { "admission-only" })),
+        ("severity", Json::str(r.severity)),
+        ("level", Json::num(r.level as f64)),
+        ("tokens_per_s", Json::num(r.report.serving.tokens_per_s)),
+        ("goodput_tokens_per_s", Json::num(r.report.serving.goodput_tokens_per_s)),
+        ("tokens_per_s_vs_clean", Json::num(vs_clean)),
+        ("completed", Json::num(r.report.completed as f64)),
+        ("expired", Json::num(r.report.expired as f64)),
+        ("preemptions", Json::num(r.report.preemptions as f64)),
+        ("band_evictions", Json::num(r.report.band_evictions as f64)),
+        ("dead_bands", Json::num(r.report.dead_bands as f64)),
+    ])
+}
+
+/// Render the robustness figure; optionally record rows in `store`.
+pub fn render(opts: &ReportOpts, store: Option<&mut ResultStore>) -> String {
+    let (arch, base, setup) = if opts.quick {
+        let mut b = SchedulerConfig::new(Dataflow::Flash2);
+        b.group = 2;
+        b.chunk = 128;
+        b.page_tokens = 32;
+        (presets::table2(8), b, "table2-8x8, slots=4, chunk=128")
+    } else {
+        let b = SchedulerConfig::new(Dataflow::Flash2);
+        (presets::table1(), b, "Table I arch, slots=4, chunk=512")
+    };
+    let mut trace =
+        RequestTrace::builtin("mixed", crate::report::schedule::KV_HEADS).expect("builtin trace");
+    if opts.quick {
+        trace.requests.truncate(6);
+        for r in &mut trace.requests {
+            r.prompt = r.prompt.min(256);
+            r.output = r.output.min(12);
+        }
+    }
+    render_on(&arch, &trace, &base, setup, store)
+}
+
+/// Render a robustness ladder (shared by the CLI figure and the
+/// tiny-mesh smoke tests).
+pub fn render_on(
+    arch: &ArchConfig,
+    trace: &RequestTrace,
+    base: &SchedulerConfig,
+    setup: &str,
+    store: Option<&mut ResultStore>,
+) -> String {
+    let rows = run_ladder(arch, trace, base);
+
+    if let Some(store) = store {
+        let json: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                let clean = clean_tps(&rows, r).max(1e-9);
+                row_json(r, r.report.serving.tokens_per_s / clean)
+            })
+            .collect();
+        store.add_json("robustness", json);
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Serving robustness — degradation under faults ({} requests, {setup})\n\n",
+        trace.requests.len()
+    ));
+    let mut t = Table::new(&[
+        "dataflow",
+        "mode",
+        "severity",
+        "tokens/s",
+        "goodput/s",
+        "vs_clean",
+        "done",
+        "expired",
+        "preempt",
+        "band_evict",
+        "dead",
+    ]);
+    for r in &rows {
+        let clean = clean_tps(&rows, r).max(1e-9);
+        t.row(vec![
+            r.dataflow.label().to_string(),
+            if r.preemption { "preemption" } else { "admission-only" }.to_string(),
+            r.severity.to_string(),
+            format!("{:.0}", r.report.serving.tokens_per_s),
+            format!("{:.0}", r.report.serving.goodput_tokens_per_s),
+            format!("{:.2}", r.report.serving.tokens_per_s / clean),
+            r.report.completed.to_string(),
+            r.report.expired.to_string(),
+            r.report.preemptions.to_string(),
+            r.report.band_evictions.to_string(),
+            r.report.dead_bands.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+    out.push_str(
+        "severity ladder: clean | mild HBM derate | heavy HBM derate | heavy derate + tile death\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_setup() -> (ArchConfig, RequestTrace, SchedulerConfig) {
+        let arch = presets::table2(8);
+        // All-zero arrivals: admission then depends on step events only,
+        // never on the (severity-dependent) clock, so every severity
+        // level replays the same composition sequence and the monotone
+        // degradation assertion below is exact.
+        let trace = RequestTrace::from_rows(
+            &[(0, 160, 4), (0, 96, 8), (0, 200, 3), (0, 64, 6), (0, 128, 5)],
+            2,
+        );
+        let mut cfg = SchedulerConfig::new(Dataflow::Flash2);
+        cfg.slots = 4;
+        cfg.group = 2;
+        cfg.chunk = 96;
+        cfg.page_tokens = 32;
+        cfg.heads = 4;
+        cfg.head_dim = 64;
+        (arch, trace, cfg)
+    }
+
+    /// CI smoke: the full degradation ladder on a tiny mesh — every row
+    /// completes its requests, the dead band registers, and degraded
+    /// throughput never exceeds the clean twin.
+    #[test]
+    fn robustness_ladder_smoke_tiny_mesh() {
+        let (arch, trace, cfg) = smoke_setup();
+        let rows = run_ladder(&arch, &trace, &cfg);
+        assert_eq!(rows.len(), 2 * 2 * LEVELS);
+        for r in &rows {
+            assert_eq!(r.report.expired, 0, "{:?} L{}: nothing dropped", r.dataflow, r.level);
+            assert_eq!(r.report.completed, trace.requests.len(), "{:?} L{}", r.dataflow, r.level);
+            let clean = clean_tps(&rows, r);
+            assert!(clean > 0.0);
+            assert!(
+                r.report.serving.tokens_per_s <= clean + 1e-9,
+                "{:?} L{} ({}): faults must not speed the run up",
+                r.dataflow,
+                r.level,
+                r.severity
+            );
+            if r.level == 3 {
+                assert_eq!(r.report.dead_bands, 1, "{:?}: L3 tile death visible", r.dataflow);
+            } else {
+                assert_eq!(r.report.dead_bands, 0);
+            }
+        }
+        let text = render_on(&arch, &trace, &cfg, "smoke", None);
+        assert!(text.contains("tile death"));
+        assert!(text.contains("preemption") && text.contains("admission-only"));
+    }
+}

@@ -48,6 +48,13 @@ fn row_json(r: &ScheduleRow, mode: &str) -> Json {
         ("tokens_per_s", Json::num(r.report.tokens_per_s)),
         ("ttft_ms", Json::num(r.report.ttft_mean_ms)),
         ("tpot_ms", Json::num(r.report.tpot_mean_ms)),
+        ("ttft_p50_ms", Json::num(r.report.ttft_p50_ms)),
+        ("ttft_p95_ms", Json::num(r.report.ttft_p95_ms)),
+        ("ttft_p99_ms", Json::num(r.report.ttft_p99_ms)),
+        ("tpot_p50_ms", Json::num(r.report.tpot_p50_ms)),
+        ("tpot_p95_ms", Json::num(r.report.tpot_p95_ms)),
+        ("tpot_p99_ms", Json::num(r.report.tpot_p99_ms)),
+        ("goodput_tokens_per_s", Json::num(r.report.goodput_tokens_per_s)),
         ("occupancy", Json::num(r.report.occupancy)),
         ("hbm_gb", Json::num(r.report.hbm_bytes as f64 / 1e9)),
         ("steps", Json::num(r.report.steps as f64)),
@@ -136,15 +143,28 @@ pub fn render_on(
         trace.requests.len()
     ));
     let mut t = Table::new(&[
-        "dataflow", "placement", "tokens/s", "TTFT_ms", "TPOT_ms", "occupancy", "HBM_GB", "steps",
+        "dataflow",
+        "placement",
+        "tokens/s",
+        "goodput/s",
+        "TTFT_ms",
+        "TTFT_p95",
+        "TPOT_ms",
+        "TPOT_p95",
+        "occupancy",
+        "HBM_GB",
+        "steps",
     ]);
     for r in &rows {
         t.row(vec![
             r.dataflow.label().to_string(),
             r.placement.label().to_string(),
             format!("{:.0}", r.report.tokens_per_s),
+            format!("{:.0}", r.report.goodput_tokens_per_s),
             format!("{:.3}", r.report.ttft_mean_ms),
+            format!("{:.3}", r.report.ttft_p95_ms),
             format!("{:.4}", r.report.tpot_mean_ms),
+            format!("{:.4}", r.report.tpot_p95_ms),
             pct(r.report.occupancy),
             format!("{:.3}", r.report.hbm_bytes as f64 / 1e9),
             r.report.steps.to_string(),
@@ -197,6 +217,13 @@ mod tests {
             assert!(r.report.tokens_per_s > 0.0);
             assert!(r.report.ttft_mean_ms >= 0.0 && r.report.tpot_mean_ms >= 0.0);
             assert!(r.report.occupancy > 0.0 && r.report.occupancy <= 1.0);
+            // Tail percentiles are ordered and goodput never exceeds
+            // throughput.
+            assert!(r.report.ttft_p50_ms <= r.report.ttft_p95_ms);
+            assert!(r.report.ttft_p95_ms <= r.report.ttft_p99_ms);
+            assert!(r.report.tpot_p50_ms <= r.report.tpot_p95_ms);
+            assert!(r.report.tpot_p95_ms <= r.report.tpot_p99_ms);
+            assert!(r.report.goodput_tokens_per_s <= r.report.tokens_per_s + 1e-9);
         }
         // Placement changes timing, never token accounting.
         let opts = ReportOpts { quick: true, ..Default::default() };

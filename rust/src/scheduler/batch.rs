@@ -16,7 +16,10 @@
 use crate::arch::ArchConfig;
 use crate::dataflow::{flash, flat, Dataflow, Workload};
 use crate::hbm::PageMap;
-use crate::sim::{execute, execute_parallel, execute_traced, Cycle, Program, ProgramArena, RunStats};
+use crate::sim::{
+    execute, execute_faulted, execute_parallel, execute_traced, Cycle, FaultPlan, FaultReport,
+    Program, ProgramArena, RunStats,
+};
 
 /// One request's contribution to a batch step.
 #[derive(Debug)]
@@ -72,6 +75,27 @@ impl BatchProgram {
         } else {
             execute(&self.program, 0)
         }
+    }
+
+    /// Execute under a fault plan (windows relative to this step's start —
+    /// the router shifts its absolute plan by the virtual clock first).
+    /// Ops of dead tiles are killed and their dependents stall instead of
+    /// completing; the [`FaultReport`] names both sets so the router can
+    /// tell which entries made no progress this step.
+    pub fn run_faulted(&self, threads: usize, plan: &FaultPlan) -> (RunStats, FaultReport) {
+        execute_faulted(&self.program, 0, plan, threads)
+    }
+
+    /// Map a [`FaultReport`] to the entries whose spans contain a killed
+    /// or stalled op — the entries that made no progress this step.
+    pub fn affected_entries(&self, fr: &FaultReport) -> Vec<usize> {
+        let hit =
+            |op: u32| self.spans.iter().position(|&(s, e)| (op as usize) >= s && (op as usize) < e);
+        let mut out: Vec<usize> =
+            fr.killed.iter().chain(&fr.stalled).filter_map(|&op| hit(op)).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
     }
 
     /// Execute with full tracing and split the records per entry span.

@@ -63,11 +63,62 @@
 //! property the tests pin: with per-slot-disjoint channels (wide HBM +
 //! channel-affine pages), a request's op timeline in a mixed batch is
 //! bit-identical to composing it alone.
+//!
+//! # Graceful-degradation router (§Router)
+//!
+//! [`router::route`] wraps the same composition/execution step in a
+//! request-*lifecycle* layer — the part of a serving stack that decides
+//! *whether* work runs, not just where:
+//!
+//! * **Admission** — a token budget (`max_batch_total_tokens`, the
+//!   TGI-style cap on Σ prompt+output across the batch) and a page budget
+//!   (`max_total_pages`) gate the waiting queue. With preemption off, the
+//!   page budget is enforced by *reservation*: a request is admitted only
+//!   if its maximal KV footprint fits alongside every in-flight
+//!   reservation, so pressure can never materialize mid-flight. With
+//!   preemption on, admission is optimistic (current footprints) and
+//!   pressure is resolved by eviction — the throughput/latency trade the
+//!   `report robustness` figure measures. An idle machine always admits
+//!   the front waiter, so no budget setting can deadlock the router.
+//! * **Preemption** — under page pressure a victim
+//!   ([`router::VictimPolicy`]: newest / fewest-pages / most-remaining)
+//!   is evicted: its pages are freed ([`crate::hbm::PageMap::reset`]) and
+//!   it re-queues with `rebuild_to = prompt + generated`. Rebuilding is
+//!   re-emitted as *real chunked-prefill traffic* over the tokens the
+//!   request had already processed — not a free reset. This is
+//!   deliberately **conservative** (an upper bound on recovery cost):
+//!   real stacks snapshot/restore or recompute selectively, and anything
+//!   they do is at most the full recompute we charge, so degradation
+//!   numbers derived from it can only be pessimistic, never flattering.
+//!   Already-delivered tokens stay delivered (they left the server);
+//!   rebuilt prefill produces no new output until the cache again covers
+//!   `rebuild_to`.
+//! * **Deadlines** — `deadline` cycles per attempt: an in-flight or
+//!   waiting request that exceeds it is retried (bounded by
+//!   `max_retries`, eviction semantics as above) and finally *expired* —
+//!   dropped with its slot and pages reclaimed. Expired requests are
+//!   excluded from latency percentiles and goodput (they produced no
+//!   service), but counted in the router report.
+//! * **Fault-aware band remapping** — the step program executes under the
+//!   session [`crate::sim::FaultPlan`] shifted to the step's clock. A
+//!   tile death kills its band's ops mid-step (`affected_entries` on the
+//!   [`batch::BatchProgram`] names the entries that made no progress); those
+//!   requests requeue *keeping pages and progress* — the KV cache lives
+//!   in HBM, only the compute band died — and the dead band leaves the
+//!   usable-slot set, shrinking the machine. When every band is dead the
+//!   remaining requests expire instead of spinning.
+//!
+//! Termination: every step either advances at least one request's state,
+//! frees a slot, consumes a retry, or shrinks the usable-band set — all
+//! monotone — and expiry bounds each request's attempts, so `route`
+//! always terminates even under total-failure plans.
 
 pub mod batch;
+pub mod router;
 pub mod trace;
 
 pub use batch::{compose, BatchEntry, BatchProgram, EntryStats};
+pub use router::{route, RouterConfig, RouterReport, VictimPolicy};
 pub use trace::{Request, RequestTrace};
 
 use crate::arch::ArchConfig;
@@ -141,6 +192,12 @@ pub struct SchedulerConfig {
     /// shard set). Every count produces bit-identical reports — this is a
     /// wall-clock knob only. Default 1 (serial).
     pub threads: usize,
+    /// TTFT service-level objective (ms) for goodput accounting: a
+    /// request contributes to goodput only if its TTFT and TPOT both meet
+    /// their SLOs.
+    pub slo_ttft_ms: f64,
+    /// TPOT service-level objective (ms) for goodput accounting.
+    pub slo_tpot_ms: f64,
 }
 
 impl SchedulerConfig {
@@ -158,6 +215,8 @@ impl SchedulerConfig {
             window: 0,
             seed: 0x5EED,
             threads: 1,
+            slo_ttft_ms: 2.0,
+            slo_tpot_ms: 0.1,
         }
     }
 }
@@ -187,10 +246,87 @@ pub struct ServingReport {
     /// Mean time-per-output-token over requests with more than one output
     /// token (ms).
     pub tpot_mean_ms: f64,
+    /// TTFT tail percentiles (nearest-rank, ms).
+    pub ttft_p50_ms: f64,
+    pub ttft_p95_ms: f64,
+    pub ttft_p99_ms: f64,
+    /// TPOT tail percentiles (nearest-rank, ms; over requests with more
+    /// than one output token).
+    pub tpot_p50_ms: f64,
+    pub tpot_p95_ms: f64,
+    pub tpot_p99_ms: f64,
+    /// Output tokens of requests meeting both SLOs
+    /// ([`SchedulerConfig::slo_ttft_ms`] / [`SchedulerConfig::slo_tpot_ms`])
+    /// per second — the goodput-under-SLO serving headline.
+    pub goodput_tokens_per_s: f64,
     /// Mean fraction of slots occupied, weighted by step makespan.
     pub occupancy: f64,
     pub hbm_bytes: u64,
     pub requests: Vec<RequestMetrics>,
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample (`q` in
+/// `[0, 100]`); 0 for an empty sample.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((q / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Aggregate per-request metrics into a [`ServingReport`]. Shared by
+/// [`simulate`] and [`router::route`] so means, tail percentiles and
+/// goodput are computed one way; `requests` holds *completed* requests
+/// only (the router excludes expired ones — they produced no service).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn finish_report(
+    arch: &ArchConfig,
+    cfg: &SchedulerConfig,
+    clock: Cycle,
+    steps: usize,
+    tokens: u64,
+    hbm_bytes: u64,
+    occupancy: f64,
+    requests: Vec<RequestMetrics>,
+) -> ServingReport {
+    let to_ms = |cycles: f64| cycles / (arch.freq_ghz * 1e6);
+    let ttft_of = |r: &RequestMetrics| to_ms((r.first_token - r.arrival) as f64);
+    let tpot_of =
+        |r: &RequestMetrics| to_ms((r.finish - r.first_token) as f64) / (r.output - 1) as f64;
+    let mut ttfts: Vec<f64> = requests.iter().map(ttft_of).collect();
+    let mut tpots: Vec<f64> = requests.iter().filter(|r| r.output > 1).map(tpot_of).collect();
+    ttfts.sort_by(f64::total_cmp);
+    tpots.sort_by(f64::total_cmp);
+    let mean = |v: &[f64]| if v.is_empty() { 0.0 } else { v.iter().sum::<f64>() / v.len() as f64 };
+    let secs = clock as f64 / (arch.freq_ghz * 1e9);
+    let good_tokens: u64 = requests
+        .iter()
+        .filter(|r| {
+            let tpot = if r.output > 1 { tpot_of(r) } else { 0.0 };
+            ttft_of(r) <= cfg.slo_ttft_ms && tpot <= cfg.slo_tpot_ms
+        })
+        .map(|r| r.output)
+        .sum();
+    let per_s = |t: u64| if secs > 0.0 { t as f64 / secs } else { 0.0 };
+    ServingReport {
+        total_cycles: clock,
+        steps,
+        tokens,
+        tokens_per_s: per_s(tokens),
+        ttft_mean_ms: mean(&ttfts),
+        tpot_mean_ms: mean(&tpots),
+        ttft_p50_ms: percentile(&ttfts, 50.0),
+        ttft_p95_ms: percentile(&ttfts, 95.0),
+        ttft_p99_ms: percentile(&ttfts, 99.0),
+        tpot_p50_ms: percentile(&tpots, 50.0),
+        tpot_p95_ms: percentile(&tpots, 95.0),
+        tpot_p99_ms: percentile(&tpots, 99.0),
+        goodput_tokens_per_s: per_s(good_tokens),
+        occupancy,
+        hbm_bytes,
+        requests,
+    }
 }
 
 struct ReqState {
@@ -379,7 +515,6 @@ pub fn simulate(arch: &ArchConfig, trace: &RequestTrace, cfg: &SchedulerConfig) 
     }
 
     // Aggregate metrics.
-    let to_ms = |cycles: f64| cycles / (arch.freq_ghz * 1e6);
     let requests: Vec<RequestMetrics> = trace
         .requests
         .iter()
@@ -396,35 +531,10 @@ pub fn simulate(arch: &ArchConfig, trace: &RequestTrace, cfg: &SchedulerConfig) 
             }
         })
         .collect();
-    let ttft_mean_ms = requests
-        .iter()
-        .map(|r| to_ms((r.first_token - r.arrival) as f64))
-        .sum::<f64>()
-        / requests.len().max(1) as f64;
-    let multi: Vec<&RequestMetrics> = requests.iter().filter(|r| r.output > 1).collect();
-    let tpot_mean_ms = if multi.is_empty() {
-        0.0
+    let occupancy = if total_slot_cycles > 0 {
+        busy_slot_cycles as f64 / total_slot_cycles as f64
     } else {
-        multi
-            .iter()
-            .map(|r| to_ms((r.finish - r.first_token) as f64) / (r.output - 1) as f64)
-            .sum::<f64>()
-            / multi.len() as f64
+        0.0
     };
-    let secs = clock as f64 / (arch.freq_ghz * 1e9);
-    ServingReport {
-        total_cycles: clock,
-        steps,
-        tokens,
-        tokens_per_s: if secs > 0.0 { tokens as f64 / secs } else { 0.0 },
-        ttft_mean_ms,
-        tpot_mean_ms,
-        occupancy: if total_slot_cycles > 0 {
-            busy_slot_cycles as f64 / total_slot_cycles as f64
-        } else {
-            0.0
-        },
-        hbm_bytes,
-        requests,
-    }
+    finish_report(arch, cfg, clock, steps, tokens, hbm_bytes, occupancy, requests)
 }

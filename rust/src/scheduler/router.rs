@@ -1,0 +1,749 @@
+//! Graceful-degradation request router.
+//!
+//! [`route`] wraps the scheduler's compose/execute step in a request
+//! *lifecycle* layer: token-budget and page-budget admission, preemption
+//! under page pressure, per-attempt deadlines with bounded retries, and
+//! fault-aware band remapping under a [`FaultPlan`]. The design essay
+//! lives in the parent module docs (§Router); this file is the mechanism.
+//!
+//! The router shares [`finish_report`] with [`super::simulate`] so its
+//! latency percentiles and goodput are computed identically; with a
+//! default [`RouterConfig`] (no faults, no budgets, no deadline) it
+//! reproduces `simulate`'s schedule exactly (`unit tests below`).
+
+use std::collections::VecDeque;
+
+use super::{
+    affine_range, batch, finish_report, BatchEntry, PagePlacement, RequestMetrics, RequestTrace,
+    SchedulerConfig, ServingReport,
+};
+use crate::arch::ArchConfig;
+use crate::dataflow::Workload;
+use crate::hbm::PageMap;
+use crate::sim::{Cycle, FaultPlan, ProgramArena};
+use crate::util::Rng;
+
+/// Which in-flight request to evict under page pressure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VictimPolicy {
+    /// Most recently admitted first (vLLM-style recompute preemption:
+    /// the oldest request keeps its head-of-line service).
+    Newest,
+    /// Smallest current KV footprint first — cheapest cache to rebuild.
+    FewestPages,
+    /// Most remaining work first — frees capacity for requests that are
+    /// close to finishing (minimizes wasted service).
+    MostRemaining,
+}
+
+impl VictimPolicy {
+    pub fn label(self) -> &'static str {
+        match self {
+            VictimPolicy::Newest => "newest",
+            VictimPolicy::FewestPages => "fewest-pages",
+            VictimPolicy::MostRemaining => "most-remaining",
+        }
+    }
+
+    pub fn from_label(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "newest" => Some(VictimPolicy::Newest),
+            "fewest-pages" | "fewest" => Some(VictimPolicy::FewestPages),
+            "most-remaining" | "remaining" => Some(VictimPolicy::MostRemaining),
+            _ => None,
+        }
+    }
+}
+
+/// Router configuration: everything here defaults to "off", so a default
+/// router is a transparent wrapper around the plain scheduler.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Fault plan in absolute virtual-clock cycles; sliced per step with
+    /// [`FaultPlan::shifted`].
+    pub faults: FaultPlan,
+    /// Admission cap on Σ (prompt + output) across the batch, TGI's
+    /// `max_batch_total_tokens`. 0 = unlimited.
+    pub max_batch_total_tokens: u64,
+    /// KV page pool size shared by all in-flight requests. 0 = unlimited.
+    pub max_total_pages: u64,
+    /// Per-attempt deadline in cycles; 0 = none.
+    pub deadline: Cycle,
+    /// Deadline retries before a request expires.
+    pub max_retries: usize,
+    pub victim: VictimPolicy,
+    /// Resolve page pressure by eviction (true) or prevent it by
+    /// reservation-based admission (false). See the §Router essay.
+    pub preemption: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            faults: FaultPlan::none(),
+            max_batch_total_tokens: 0,
+            max_total_pages: 0,
+            deadline: 0,
+            max_retries: 1,
+            victim: VictimPolicy::FewestPages,
+            preemption: true,
+        }
+    }
+}
+
+/// [`route`]'s result: the serving metrics of *completed* requests plus
+/// the lifecycle counters the degradation figures plot.
+#[derive(Debug, Clone)]
+pub struct RouterReport {
+    pub serving: ServingReport,
+    pub completed: usize,
+    /// Requests dropped (deadline retries exhausted, or no live band
+    /// remained to run them).
+    pub expired: usize,
+    /// Page-pressure evictions (each re-queues the victim for a full
+    /// cache rebuild).
+    pub preemptions: usize,
+    /// Deadline-triggered retries.
+    pub retries: usize,
+    /// Requests kicked off a band by a mid-step tile death (they keep
+    /// pages and progress and re-queue).
+    pub band_evictions: usize,
+    /// Tile-row bands unusable at the end of the run.
+    pub dead_bands: usize,
+}
+
+/// Per-request lifecycle state (superset of the plain scheduler's).
+struct RState {
+    pages: PageMap,
+    prefill_done: u64,
+    generated: u64,
+    /// Prefill target of the current attempt: `prompt`, raised to
+    /// `prompt + generated` after an eviction so the rebuilt cache covers
+    /// every token the request had already processed.
+    rebuild_to: u64,
+    first_token: Option<Cycle>,
+    finish: Option<Cycle>,
+    /// Start of the current deadline window (arrival, then each retry).
+    deadline_base: Cycle,
+    retries: usize,
+    admit_seq: u64,
+    expired: bool,
+}
+
+/// Which slots are unusable at `clock`: a slot dies with any tile in its
+/// row band.
+fn dead_slots(arch: &ArchConfig, slots: usize, faults: &FaultPlan, clock: Cycle) -> Vec<bool> {
+    let mut dead = vec![false; slots];
+    let rows_per = arch.mesh_y / slots;
+    for tile in faults.dead_tiles_at(clock) {
+        let slot = (tile as usize / arch.mesh_x) / rows_per;
+        if slot < slots {
+            dead[slot] = true;
+        }
+    }
+    dead
+}
+
+/// Eviction candidate snapshot; `idx` indexes the step's entry list.
+struct VictimCand {
+    idx: usize,
+    admit_seq: u64,
+    pages: u64,
+    remaining: u64,
+}
+
+/// Deterministic victim choice: policy key, ties broken by entry order.
+fn choose_victim(policy: VictimPolicy, cands: &[VictimCand]) -> usize {
+    cands
+        .iter()
+        .min_by_key(|c| match policy {
+            VictimPolicy::Newest => (u64::MAX - c.admit_seq, c.idx),
+            VictimPolicy::FewestPages => (c.pages, c.idx),
+            VictimPolicy::MostRemaining => (u64::MAX - c.remaining, c.idx),
+        })
+        .expect("choose_victim: no candidates")
+        .idx
+}
+
+/// Replay `trace` through the graceful-degradation router. Deterministic
+/// for a given `(arch, trace, cfg, rc)` at every thread count.
+pub fn route(
+    arch: &ArchConfig,
+    trace: &RequestTrace,
+    cfg: &SchedulerConfig,
+    rc: &RouterConfig,
+) -> RouterReport {
+    batch::validate_slots(arch, cfg.slots, cfg.group, cfg.dataflow)
+        .unwrap_or_else(|e| panic!("router: {e}"));
+    assert!(cfg.chunk > 0, "prefill chunk must be >= 1 token");
+    for r in &trace.requests {
+        assert!(
+            r.kv_heads <= cfg.heads && cfg.heads % r.kv_heads == 0,
+            "request {}: kv_heads {} must divide the model's {} query heads",
+            r.id,
+            r.kv_heads,
+            cfg.heads
+        );
+    }
+
+    let n = trace.requests.len();
+    let n_chan = arch.hbm.total_channels() as u64;
+    let mut states: Vec<RState> = trace
+        .requests
+        .iter()
+        .map(|r| RState {
+            pages: PageMap::new(cfg.page_tokens),
+            prefill_done: 0,
+            generated: 0,
+            rebuild_to: r.prompt,
+            first_token: None,
+            finish: None,
+            deadline_base: r.arrival,
+            retries: 0,
+            admit_seq: 0,
+            expired: false,
+        })
+        .collect();
+    let mut slots: Vec<Option<usize>> = vec![None; cfg.slots];
+    let mut waiting: VecDeque<usize> = VecDeque::new();
+    let mut next_arrival = 0usize;
+    let mut clock: Cycle = 0;
+    let mut steps = 0usize;
+    let mut tokens = 0u64;
+    let mut hbm_bytes = 0u64;
+    let mut busy_slot_cycles = 0u128;
+    let mut total_slot_cycles = 0u128;
+    let mut rr_next = 0u64;
+    let mut rng = Rng::new(cfg.seed);
+    let mut arena = ProgramArena::new();
+    let mut admit_ctr = 0u64;
+    let (mut expired, mut preemptions, mut retries, mut band_evictions) = (0usize, 0, 0, 0);
+
+    // Reservation footprint for preemption-off page admission: the
+    // maximal cache the request can ever hold.
+    let reserve_pages = |ri: usize| {
+        let r = &trace.requests[ri];
+        (r.prompt + r.output).div_ceil(cfg.page_tokens)
+    };
+
+    loop {
+        // Queue new arrivals (FCFS).
+        while next_arrival < n && trace.requests[next_arrival].arrival <= clock {
+            waiting.push_back(next_arrival);
+            next_arrival += 1;
+        }
+
+        // Fault-aware remapping: kick in-flight requests off bands that
+        // died since the last step. They keep pages and progress — the KV
+        // cache lives in HBM, only the compute band is gone.
+        let dead = dead_slots(arch, cfg.slots, &rc.faults, clock);
+        for (slot, &d) in slots.iter_mut().zip(&dead) {
+            if !d {
+                continue;
+            }
+            if let Some(ri) = slot.take() {
+                waiting.push_front(ri);
+                band_evictions += 1;
+            }
+        }
+
+        // Deadlines: an attempt that overran its window retries (eviction
+        // semantics — pages freed, cache rebuilt) until retries exhaust.
+        if rc.deadline > 0 {
+            for slot in slots.iter_mut() {
+                let Some(ri) = *slot else { continue };
+                let st = &mut states[ri];
+                if clock.saturating_sub(st.deadline_base) <= rc.deadline {
+                    continue;
+                }
+                *slot = None;
+                st.pages.reset();
+                if st.retries < rc.max_retries {
+                    st.retries += 1;
+                    retries += 1;
+                    st.deadline_base = clock;
+                    st.prefill_done = 0;
+                    st.rebuild_to = trace.requests[ri].prompt + st.generated;
+                    waiting.push_back(ri);
+                } else {
+                    st.expired = true;
+                    expired += 1;
+                }
+            }
+            waiting.retain(|&ri| {
+                let st = &mut states[ri];
+                if clock.saturating_sub(st.deadline_base) <= rc.deadline {
+                    return true;
+                }
+                if st.retries < rc.max_retries {
+                    st.retries += 1;
+                    retries += 1;
+                    st.deadline_base = clock;
+                    true
+                } else {
+                    st.pages.reset();
+                    st.expired = true;
+                    expired += 1;
+                    false
+                }
+            });
+        }
+
+        // Admission: front waiter into the lowest free live slot, gated
+        // by the token and page budgets. An idle machine always admits
+        // the front waiter, so no budget can deadlock the router.
+        loop {
+            let Some(&ri) = waiting.front() else { break };
+            let Some(slot) = (0..cfg.slots).find(|&s| slots[s].is_none() && !dead[s]) else {
+                break;
+            };
+            let idle = slots.iter().all(|s| s.is_none());
+            if !idle {
+                if rc.max_batch_total_tokens > 0 {
+                    let load: u64 = slots
+                        .iter()
+                        .flatten()
+                        .map(|&r| trace.requests[r].prompt + trace.requests[r].output)
+                        .sum();
+                    let cand = trace.requests[ri].prompt + trace.requests[ri].output;
+                    if load + cand > rc.max_batch_total_tokens {
+                        break;
+                    }
+                }
+                if rc.max_total_pages > 0 {
+                    let fits = if rc.preemption {
+                        // Optimistic: current footprints + the candidate's
+                        // next step; pressure is resolved by eviction.
+                        let used: u64 = slots
+                            .iter()
+                            .flatten()
+                            .map(|&r| states[r].pages.num_pages() as u64)
+                            .sum();
+                        let st = &states[ri];
+                        let next_kv = if st.prefill_done < st.rebuild_to {
+                            st.prefill_done + cfg.chunk.min(st.rebuild_to - st.prefill_done)
+                        } else {
+                            trace.requests[ri].prompt + st.generated
+                        };
+                        used + st.pages.pages_for(next_kv) <= rc.max_total_pages
+                    } else {
+                        // Reservation: maximal footprints must all fit, so
+                        // pressure can never materialize mid-flight.
+                        let reserved: u64 = slots.iter().flatten().map(|&r| reserve_pages(r)).sum();
+                        reserved + reserve_pages(ri) <= rc.max_total_pages
+                    };
+                    if !fits {
+                        break;
+                    }
+                }
+            }
+            waiting.pop_front();
+            admit_ctr += 1;
+            states[ri].admit_seq = admit_ctr;
+            slots[slot] = Some(ri);
+        }
+
+        let active: Vec<(usize, usize)> =
+            slots.iter().enumerate().filter_map(|(s, r)| r.map(|ri| (s, ri))).collect();
+        if active.is_empty() {
+            if waiting.is_empty() && next_arrival >= n {
+                break;
+            }
+            if dead.iter().all(|&d| d) {
+                // No live band left: the remaining stream can never be
+                // served — expire it rather than spin.
+                while next_arrival < n {
+                    waiting.push_back(next_arrival);
+                    next_arrival += 1;
+                }
+                for ri in waiting.drain(..) {
+                    states[ri].pages.reset();
+                    states[ri].expired = true;
+                    expired += 1;
+                }
+                break;
+            }
+            if waiting.is_empty() {
+                // Idle: jump to the next arrival.
+                clock = clock.max(trace.requests[next_arrival].arrival);
+                continue;
+            }
+            unreachable!("router: idle machine failed to admit a waiter");
+        }
+
+        // Build each active request's step workload (prefill chunks run
+        // until the cache covers `rebuild_to`, so evicted requests pay
+        // their rebuild as real traffic).
+        let mut metas: Vec<(usize, usize, bool, u64)> = Vec::with_capacity(active.len());
+        let mut workloads: Vec<Workload> = Vec::with_capacity(active.len());
+        for &(slot, ri) in &active {
+            let req = &trace.requests[ri];
+            let st = &states[ri];
+            let (is_prefill, len, wl) = if st.prefill_done < st.rebuild_to {
+                let len = cfg.chunk.min(st.rebuild_to - st.prefill_done);
+                let mut wl = Workload::new(len, cfg.head_dim, cfg.heads, 1)
+                    .with_kv_heads(req.kv_heads)
+                    .with_causal(true)
+                    .with_kv_prefix(st.prefill_done);
+                if cfg.window > 0 {
+                    wl = wl.with_window(cfg.window);
+                }
+                (true, len, wl)
+            } else {
+                let cache = req.prompt + st.generated;
+                let mut wl = Workload::new(cache, cfg.head_dim, cfg.heads, 1)
+                    .with_kv_heads(req.kv_heads)
+                    .decode();
+                if cfg.window > 0 {
+                    wl = wl.with_window(cfg.window);
+                }
+                (false, 1, wl)
+            };
+            metas.push((slot, ri, is_prefill, len));
+            workloads.push(wl);
+        }
+
+        // Page pressure: evict until the step's caches fit the pool. A
+        // lone request that cannot fit alone expires (retrying could
+        // never succeed — the pool is simply too small for it).
+        if rc.preemption && rc.max_total_pages > 0 {
+            loop {
+                let need: u64 = metas
+                    .iter()
+                    .zip(&workloads)
+                    .map(|(&(_, ri, _, _), wl)| states[ri].pages.pages_for(wl.kv_len()))
+                    .sum();
+                if need <= rc.max_total_pages {
+                    break;
+                }
+                if metas.len() == 1 {
+                    let (slot, ri, _, _) = metas[0];
+                    slots[slot] = None;
+                    states[ri].pages.reset();
+                    states[ri].expired = true;
+                    expired += 1;
+                    metas.clear();
+                    workloads.clear();
+                    break;
+                }
+                let cands: Vec<VictimCand> = metas
+                    .iter()
+                    .zip(&workloads)
+                    .enumerate()
+                    .map(|(idx, (&(_, ri, _, _), wl))| {
+                        let req = &trace.requests[ri];
+                        let st = &states[ri];
+                        VictimCand {
+                            idx,
+                            admit_seq: st.admit_seq,
+                            pages: st.pages.pages_for(wl.kv_len()),
+                            remaining: (st.rebuild_to - st.prefill_done)
+                                + (req.output - st.generated),
+                        }
+                    })
+                    .collect();
+                let k = choose_victim(rc.victim, &cands);
+                let (slot, ri, _, _) = metas[k];
+                let st = &mut states[ri];
+                slots[slot] = None;
+                st.pages.reset();
+                st.prefill_done = 0;
+                st.rebuild_to = trace.requests[ri].prompt + st.generated;
+                waiting.push_back(ri);
+                preemptions += 1;
+                metas.remove(k);
+                workloads.remove(k);
+            }
+            if metas.is_empty() {
+                continue;
+            }
+        }
+
+        // Grow pages and execute the step under the shifted fault plan.
+        for (&(slot, ri, _, _), wl) in metas.iter().zip(&workloads) {
+            let placement = cfg.placement;
+            let (base, count) = affine_range(arch, slot, cfg.slots);
+            states[ri].pages.grow_to(wl.kv_len(), |page| match placement {
+                PagePlacement::RoundRobin => {
+                    let c = (rr_next % n_chan) as u32;
+                    rr_next += 1;
+                    c
+                }
+                PagePlacement::ChannelAffine => base + (page % count as u64) as u32,
+                PagePlacement::Random => rng.gen_range(n_chan) as u32,
+            });
+        }
+        let (stats, affected) = {
+            let entries: Vec<BatchEntry<'_>> = metas
+                .iter()
+                .zip(&workloads)
+                .map(|(&(slot, ri, _, _), wl)| BatchEntry {
+                    request: ri,
+                    slot,
+                    workload: *wl,
+                    pages: &states[ri].pages,
+                })
+                .collect();
+            let bp =
+                batch::compose_in(&mut arena, arch, cfg.dataflow, cfg.group, cfg.slots, &entries);
+            let plan = rc.faults.shifted(clock);
+            let (stats, affected) = if plan.is_none() {
+                (bp.run_threads(cfg.threads), Vec::new())
+            } else {
+                let (stats, fr) = bp.run_faulted(cfg.threads, &plan);
+                let affected = bp.affected_entries(&fr);
+                (stats, affected)
+            };
+            arena.recycle(bp.program);
+            (stats, affected)
+        };
+        clock += stats.makespan;
+        steps += 1;
+        hbm_bytes += stats.hbm_bytes;
+        busy_slot_cycles += metas.len() as u128 * stats.makespan as u128;
+        total_slot_cycles += cfg.slots as u128 * stats.makespan as u128;
+
+        // Advance request states at the step barrier. Entries whose band
+        // died mid-step made no progress; they re-queue (pages intact) and
+        // the dead-band sweep above retires the band next iteration.
+        for (k, &(slot, ri, is_prefill, len)) in metas.iter().enumerate() {
+            if affected.binary_search(&k).is_ok() {
+                slots[slot] = None;
+                waiting.push_front(ri);
+                band_evictions += 1;
+                continue;
+            }
+            let req = &trace.requests[ri];
+            let st = &mut states[ri];
+            if is_prefill {
+                st.prefill_done += len;
+                if st.prefill_done == st.rebuild_to && st.generated == 0 {
+                    // The last prefill step samples the first output
+                    // token; rebuilds resume with their cache restored
+                    // and emit nothing new until the next decode step.
+                    st.first_token = Some(clock);
+                    st.generated = 1;
+                    tokens += 1;
+                }
+            } else {
+                st.generated += 1;
+                tokens += 1;
+            }
+            if st.generated >= req.output {
+                st.finish = Some(clock);
+                slots[slot] = None;
+            }
+        }
+    }
+
+    // Aggregate: completed requests only — expired ones produced no
+    // service and are excluded from latency/goodput (but counted).
+    let requests: Vec<RequestMetrics> = trace
+        .requests
+        .iter()
+        .enumerate()
+        .filter(|(ri, _)| !states[*ri].expired)
+        .map(|(ri, req)| {
+            let st = &states[ri];
+            RequestMetrics {
+                id: req.id,
+                arrival: req.arrival,
+                first_token: st.first_token.expect("completed request has a first token"),
+                finish: st.finish.expect("completed request has a finish time"),
+                prompt: req.prompt,
+                output: req.output,
+            }
+        })
+        .collect();
+    let completed = requests.len();
+    let occupancy = if total_slot_cycles > 0 {
+        busy_slot_cycles as f64 / total_slot_cycles as f64
+    } else {
+        0.0
+    };
+    let dead_bands =
+        dead_slots(arch, cfg.slots, &rc.faults, clock).iter().filter(|&&d| d).count();
+    RouterReport {
+        serving: finish_report(arch, cfg, clock, steps, tokens, hbm_bytes, occupancy, requests),
+        completed,
+        expired,
+        preemptions,
+        retries,
+        band_evictions,
+        dead_bands,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::dataflow::Dataflow;
+    use crate::scheduler::simulate;
+
+    fn tiny_cfg(df: Dataflow) -> SchedulerConfig {
+        let mut cfg = SchedulerConfig::new(df);
+        cfg.slots = 4;
+        cfg.group = 2;
+        cfg.chunk = 96;
+        cfg.page_tokens = 32;
+        cfg.heads = 4;
+        cfg.head_dim = 64;
+        cfg
+    }
+
+    fn mixed_trace() -> RequestTrace {
+        RequestTrace::from_rows(
+            &[(0, 160, 4), (0, 96, 8), (5_000, 200, 3), (20_000, 64, 6), (40_000, 128, 5)],
+            2,
+        )
+    }
+
+    /// Four arrival-0 requests so every band (slot 3 included) is busy
+    /// when faults land, plus a late arrival.
+    fn burst_trace() -> RequestTrace {
+        RequestTrace::from_rows(
+            &[(0, 160, 4), (0, 96, 8), (0, 200, 3), (0, 64, 6), (40_000, 128, 5)],
+            2,
+        )
+    }
+
+    #[test]
+    fn unconstrained_fault_free_router_matches_simulate() {
+        let arch = presets::table2(8);
+        let trace = mixed_trace();
+        for df in [Dataflow::Flash2, Dataflow::FlatColl] {
+            let cfg = tiny_cfg(df);
+            let want = simulate(&arch, &trace, &cfg);
+            let got = route(&arch, &trace, &cfg, &RouterConfig::default());
+            assert_eq!(got.expired, 0, "{df:?}");
+            assert_eq!(got.completed, trace.requests.len(), "{df:?}");
+            assert_eq!(got.preemptions + got.retries + got.band_evictions, 0, "{df:?}");
+            assert_eq!(got.serving.total_cycles, want.total_cycles, "{df:?}");
+            assert_eq!(got.serving.steps, want.steps, "{df:?}");
+            assert_eq!(got.serving.tokens, want.tokens, "{df:?}");
+            assert_eq!(got.serving.hbm_bytes, want.hbm_bytes, "{df:?}");
+            assert_eq!(got.serving.goodput_tokens_per_s, want.goodput_tokens_per_s, "{df:?}");
+        }
+    }
+
+    #[test]
+    fn tile_death_and_derate_complete_all_requests() {
+        let arch = presets::table2(8);
+        let trace = burst_trace();
+        for df in [Dataflow::Flash2, Dataflow::FlatColl] {
+            let cfg = tiny_cfg(df);
+            let free = route(&arch, &trace, &cfg, &RouterConfig::default());
+            // Band 3 (rows 6-7, first tile 48) dies almost immediately;
+            // every channel runs at half bandwidth for the whole trace.
+            let mut faults = FaultPlan::none().with_tile_death(48, 1);
+            for c in 0..arch.hbm.total_channels() as u32 {
+                faults = faults.with_derate(c, 0, u64::MAX / 2, 2, 1);
+            }
+            let rc = RouterConfig { faults, ..RouterConfig::default() };
+            let got = route(&arch, &trace, &cfg, &rc);
+            assert_eq!(got.expired, 0, "{df:?}: degraded, not dropped");
+            assert_eq!(got.completed, trace.requests.len(), "{df:?}");
+            assert_eq!(got.serving.tokens, free.serving.tokens, "{df:?}");
+            assert_eq!(got.dead_bands, 1, "{df:?}");
+            assert!(got.band_evictions >= 1, "{df:?}: the dying band evicts its request");
+            assert!(
+                got.serving.total_cycles > free.serving.total_cycles,
+                "{df:?}: a dead band + derated channels must lengthen the run \
+                 ({} vs {})",
+                got.serving.total_cycles,
+                free.serving.total_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn page_pressure_preemption_vs_admission_only() {
+        let arch = presets::table2(8);
+        // Four equal requests whose maximal footprints (6 pages each, 24
+        // total) overflow a 12-page pool.
+        let trace =
+            RequestTrace::from_rows(&[(0, 160, 4), (0, 160, 4), (0, 160, 4), (0, 160, 4)], 2);
+        let cfg = tiny_cfg(Dataflow::Flash2);
+        let on = RouterConfig {
+            max_total_pages: 12,
+            victim: VictimPolicy::Newest,
+            preemption: true,
+            ..RouterConfig::default()
+        };
+        let off = RouterConfig { preemption: false, ..on.clone() };
+        let r_on = route(&arch, &trace, &cfg, &on);
+        let r_off = route(&arch, &trace, &cfg, &off);
+        for (label, r) in [("preemption", &r_on), ("admission-only", &r_off)] {
+            assert_eq!(r.expired, 0, "{label}: everyone completes");
+            assert_eq!(r.completed, trace.requests.len(), "{label}");
+            assert_eq!(r.serving.tokens, 16, "{label}: all output delivered");
+        }
+        assert!(r_on.preemptions >= 1, "optimistic admission must hit pressure");
+        assert_eq!(r_off.preemptions, 0, "reservation admission never evicts");
+    }
+
+    #[test]
+    fn infeasible_page_budget_expires_rather_than_deadlocks() {
+        let arch = presets::table2(8);
+        let trace = RequestTrace::from_rows(&[(0, 160, 4), (0, 96, 8)], 2);
+        let cfg = tiny_cfg(Dataflow::Flash2);
+        let rc = RouterConfig { max_total_pages: 1, preemption: true, ..RouterConfig::default() };
+        let r = route(&arch, &trace, &cfg, &rc);
+        assert_eq!(r.expired, trace.requests.len());
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.serving.tokens, 0);
+    }
+
+    #[test]
+    fn deadlines_retry_then_expire() {
+        let arch = presets::table2(8);
+        // Multi-step requests (output >= 2) under a 1-cycle deadline can
+        // never finish an attempt in time.
+        let trace = RequestTrace::from_rows(&[(0, 160, 4), (0, 96, 8), (0, 200, 3)], 2);
+        let cfg = tiny_cfg(Dataflow::Flash2);
+        let rc = RouterConfig { deadline: 1, max_retries: 1, ..RouterConfig::default() };
+        let r = route(&arch, &trace, &cfg, &rc);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.expired, trace.requests.len());
+        assert_eq!(r.retries, trace.requests.len());
+    }
+
+    #[test]
+    fn victim_policies_are_deterministic() {
+        let cands = vec![
+            VictimCand { idx: 0, admit_seq: 3, pages: 5, remaining: 10 },
+            VictimCand { idx: 1, admit_seq: 7, pages: 2, remaining: 40 },
+            VictimCand { idx: 2, admit_seq: 5, pages: 2, remaining: 25 },
+        ];
+        assert_eq!(choose_victim(VictimPolicy::Newest, &cands), 1);
+        assert_eq!(choose_victim(VictimPolicy::FewestPages, &cands), 1);
+        assert_eq!(choose_victim(VictimPolicy::MostRemaining, &cands), 1);
+        let cands2 = vec![
+            VictimCand { idx: 0, admit_seq: 9, pages: 4, remaining: 12 },
+            VictimCand { idx: 1, admit_seq: 2, pages: 6, remaining: 30 },
+        ];
+        assert_eq!(choose_victim(VictimPolicy::Newest, &cands2), 0);
+        assert_eq!(choose_victim(VictimPolicy::FewestPages, &cands2), 0);
+        assert_eq!(choose_victim(VictimPolicy::MostRemaining, &cands2), 1);
+    }
+
+    #[test]
+    fn all_bands_dead_expires_remaining() {
+        let arch = presets::table2(8);
+        let trace = burst_trace();
+        let cfg = tiny_cfg(Dataflow::Flash2);
+        // The representative tile of every band dies at cycle 1.
+        let faults = FaultPlan::none()
+            .with_tile_death(0, 1)
+            .with_tile_death(16, 1)
+            .with_tile_death(32, 1)
+            .with_tile_death(48, 1);
+        let rc = RouterConfig { faults, ..RouterConfig::default() };
+        let r = route(&arch, &trace, &cfg, &rc);
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.expired, trace.requests.len());
+        assert_eq!(r.dead_bands, cfg.slots);
+        assert_eq!(r.serving.tokens, 0, "no step can complete once every band is dead");
+    }
+}

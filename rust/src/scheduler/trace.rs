@@ -37,20 +37,30 @@ impl RequestTrace {
         Self::from_full_rows(&rows)
     }
 
-    /// Build from `(arrival, prompt, output, kv_heads)` rows.
+    /// Build from `(arrival, prompt, output, kv_heads)` rows. Panics on
+    /// invalid rows; library callers with untrusted input should prefer
+    /// [`RequestTrace::try_from_full_rows`].
     pub fn from_full_rows(rows: &[(u64, u64, u64, u64)]) -> Self {
-        let mut requests: Vec<Request> = rows
-            .iter()
-            .enumerate()
-            .map(|(id, &(arrival, prompt, output, kv_heads))| {
-                assert!(prompt > 0, "request {id}: prompt must be >= 1 token");
-                assert!(output > 0, "request {id}: output must be >= 1 token");
-                assert!(kv_heads > 0, "request {id}: kv_heads must be >= 1");
-                Request { id, arrival, prompt, output, kv_heads }
-            })
-            .collect();
+        match Self::try_from_full_rows(rows) {
+            Ok(t) => t,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Fallible variant of [`RequestTrace::from_full_rows`]: names the
+    /// offending request and field instead of panicking.
+    pub fn try_from_full_rows(rows: &[(u64, u64, u64, u64)]) -> Result<Self, String> {
+        let mut requests: Vec<Request> = Vec::with_capacity(rows.len());
+        for (id, &(arrival, prompt, output, kv_heads)) in rows.iter().enumerate() {
+            for (field, value) in [("prompt", prompt), ("output", output), ("kv_heads", kv_heads)] {
+                if value == 0 {
+                    return Err(format!("request {id}: field '{field}' must be >= 1"));
+                }
+            }
+            requests.push(Request { id, arrival, prompt, output, kv_heads });
+        }
         requests.sort_by_key(|r| (r.arrival, r.id));
-        Self { requests }
+        Ok(Self { requests })
     }
 
     /// Built-in synthetic traces. `kv_heads` fills the per-request model
@@ -96,39 +106,58 @@ impl RequestTrace {
     /// Parse a CSV trace: one request per line as
     /// `arrival,prompt,output[,kv_heads]`; blank lines and `#` comments
     /// are skipped. `default_kv_heads` fills the optional column.
+    ///
+    /// Errors carry the 1-based line number and the CSV field name
+    /// (`arrival` / `prompt` / `output` / `kv_heads`) so a bad row in a
+    /// thousand-line trace is findable without bisection.
     pub fn parse(text: &str, default_kv_heads: u64) -> Result<Self, String> {
+        const COLUMNS: [&str; 4] = ["arrival", "prompt", "output", "kv_heads"];
         let mut rows: Vec<(u64, u64, u64, u64)> = Vec::new();
         for (lineno, line) in text.lines().enumerate() {
+            let lineno = lineno + 1;
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
                 continue;
             }
             let fields: Vec<&str> = line.split(',').map(|f| f.trim()).collect();
-            if fields.len() < 3 || fields.len() > 4 {
+            if fields.len() < 3 {
+                let missing = COLUMNS[fields.len()];
                 return Err(format!(
-                    "line {}: expected 'arrival,prompt,output[,kv_heads]', got '{line}'",
-                    lineno + 1
+                    "line {lineno}: missing column '{missing}': expected \
+                     'arrival,prompt,output[,kv_heads]', got '{line}'"
+                ));
+            }
+            if fields.len() > 4 {
+                return Err(format!(
+                    "line {lineno}: {} columns is too many: expected \
+                     'arrival,prompt,output[,kv_heads]', got '{line}'",
+                    fields.len()
                 ));
             }
             let mut nums = [0u64; 4];
             nums[3] = default_kv_heads;
             for (k, f) in fields.iter().enumerate() {
-                nums[k] = f
-                    .parse()
-                    .map_err(|_| format!("line {}: bad integer '{f}'", lineno + 1))?;
+                nums[k] = f.parse().map_err(|_| {
+                    format!(
+                        "line {lineno}: field '{}': expected a non-negative integer, got '{f}'",
+                        COLUMNS[k]
+                    )
+                })?;
             }
-            if nums[1] == 0 || nums[2] == 0 || nums[3] == 0 {
-                return Err(format!(
-                    "line {}: prompt, output and kv_heads must be >= 1",
-                    lineno + 1
-                ));
+            for k in 1..4 {
+                if nums[k] == 0 {
+                    return Err(format!(
+                        "line {lineno}: field '{}': must be >= 1, got 0",
+                        COLUMNS[k]
+                    ));
+                }
             }
             rows.push((nums[0], nums[1], nums[2], nums[3]));
         }
         if rows.is_empty() {
             return Err("trace holds no requests".into());
         }
-        Ok(Self::from_full_rows(&rows))
+        Self::try_from_full_rows(&rows)
     }
 
     /// Total output tokens the trace will generate.
@@ -171,5 +200,44 @@ mod tests {
         assert!(RequestTrace::parse("a,2,3\n", 8).is_err());
         assert!(RequestTrace::parse("1,0,3\n", 8).is_err());
         assert!(RequestTrace::parse("# only a comment\n", 8).is_err());
+    }
+
+    #[test]
+    fn parse_errors_name_the_line_and_field() {
+        // Missing column: names the first absent column.
+        let e = RequestTrace::parse("0,128,4\n40,256\n", 8).unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        assert!(e.contains("missing column 'output'"), "{e}");
+
+        // Non-numeric arrival: names the field and echoes the token.
+        let e = RequestTrace::parse("soon,128,4\n", 8).unwrap_err();
+        assert!(e.contains("line 1"), "{e}");
+        assert!(e.contains("field 'arrival'"), "{e}");
+        assert!(e.contains("'soon'"), "{e}");
+
+        // Zero output tokens: names the field, counts comment lines.
+        let e = RequestTrace::parse("# header\n0,128,0\n", 8).unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        assert!(e.contains("field 'output'"), "{e}");
+
+        // Zero prompt and bad kv_heads column.
+        let e = RequestTrace::parse("0,0,4\n", 8).unwrap_err();
+        assert!(e.contains("field 'prompt'"), "{e}");
+        let e = RequestTrace::parse("0,128,4,zero\n", 8).unwrap_err();
+        assert!(e.contains("field 'kv_heads'"), "{e}");
+        let e = RequestTrace::parse("0,128,4,0\n", 8).unwrap_err();
+        assert!(e.contains("field 'kv_heads'"), "{e}");
+
+        // Too many columns.
+        let e = RequestTrace::parse("0,128,4,8,9\n", 8).unwrap_err();
+        assert!(e.contains("too many"), "{e}");
+    }
+
+    #[test]
+    fn try_from_full_rows_names_the_request_and_field() {
+        let e = RequestTrace::try_from_full_rows(&[(0, 128, 4, 8), (5, 128, 0, 8)]).unwrap_err();
+        assert!(e.contains("request 1"), "{e}");
+        assert!(e.contains("field 'output'"), "{e}");
+        assert!(RequestTrace::try_from_full_rows(&[(0, 128, 4, 8)]).is_ok());
     }
 }

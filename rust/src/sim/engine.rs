@@ -31,6 +31,7 @@ use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use super::breakdown::{Breakdown, Component, RunStats};
+use super::fault::{FaultPlan, FaultReport, ResolvedFaults};
 use super::program::Program;
 use super::queue::EventQueue;
 use super::Cycle;
@@ -53,6 +54,102 @@ pub fn execute_traced(
     tracked_tile: u32,
     trace_tile_limit: Option<u32>,
 ) -> (RunStats, Vec<TraceRecord>) {
+    let (stats, trace, fr) = execute_core(program, tracked_tile, trace_tile_limit, None);
+    if !fr.stalled.is_empty() {
+        stall_panic(program, &fr);
+    }
+    (stats, trace)
+}
+
+/// Execute under a [`FaultPlan`] (§Fault in the module essay): channel
+/// outage windows push affected starts past the window, derate windows
+/// multiply occupancy, and tile deaths drop ops — whose dependents then
+/// never settle. Unlike the fault-free entry points this never panics on a
+/// drained queue: lost ops come back in the [`FaultReport`].
+///
+/// `threads > 1` runs the sharded engine; every fault decision is a pure
+/// function of per-resource cursor state and the epoch timestamp, both of
+/// which the §Shard partition reproduces exactly, so results are
+/// bit-identical at every thread count — and `FaultPlan::none()`
+/// reproduces [`execute`] bit for bit (`tests/fault_differential.rs`).
+pub fn execute_faulted(
+    program: &Program,
+    tracked_tile: u32,
+    plan: &FaultPlan,
+    threads: usize,
+) -> (RunStats, FaultReport) {
+    let (stats, _, fr) = execute_faulted_traced(program, tracked_tile, None, plan, threads);
+    (stats, fr)
+}
+
+/// Traced variant of [`execute_faulted`]; killed ops are never scheduled,
+/// so they emit no trace records.
+pub fn execute_faulted_traced(
+    program: &Program,
+    tracked_tile: u32,
+    trace_tile_limit: Option<u32>,
+    plan: &FaultPlan,
+    threads: usize,
+) -> (RunStats, Vec<TraceRecord>, FaultReport) {
+    let rf = plan.resolve(program);
+    if threads.max(1) == 1 || !program.is_sealed() || program.num_shards() <= 1 {
+        execute_core(program, tracked_tile, trace_tile_limit, Some(&rf))
+    } else {
+        execute_parallel_core(program, tracked_tile, trace_tile_limit, threads, Some(&rf))
+    }
+}
+
+/// Diagnose a drained event queue with unsettled ops: a dependency cycle in
+/// a hand-built DAG, or dependencies lost to tile-death faults reaching a
+/// fault-free entry point. Reports the stuck op ids with their resources
+/// and owning shards instead of a bare count.
+fn stall_panic(program: &Program, fr: &FaultReport) -> ! {
+    panic!("dependency cycle or lost dependency: {}", stall_diagnostics(program, fr));
+}
+
+fn stall_diagnostics(program: &Program, fr: &FaultReport) -> String {
+    let shard_of = program.op_shards();
+    let describe = |ids: &[u32]| -> String {
+        let mut s = String::new();
+        for (k, &i) in ids.iter().take(8).enumerate() {
+            if k > 0 {
+                s.push_str(", ");
+            }
+            let op = &program.ops()[i as usize];
+            let shard = shard_of
+                .get(i as usize)
+                .map_or_else(|| "unsealed".to_string(), |sh| sh.to_string());
+            s.push_str(&format!(
+                "op {i} (resource {}, shard {shard}, {:?}, tile {})",
+                op.resource.0, op.component, op.tile
+            ));
+        }
+        if ids.len() > 8 {
+            s.push_str(&format!(" … +{} more", ids.len() - 8));
+        }
+        s
+    };
+    let mut msg = format!(
+        "{} of {} ops never became ready; stuck: {}",
+        fr.stalled.len(),
+        program.num_ops(),
+        describe(&fr.stalled)
+    );
+    if !fr.killed.is_empty() {
+        msg.push_str(&format!("; killed by tile death: {}", describe(&fr.killed)));
+    }
+    msg
+}
+
+/// Shared serial core. With `faults == None` this is the exact historical
+/// schedule; with a resolved plan, the per-resource cursor arithmetic
+/// gains the window modifiers and tile deaths drop ops (§Fault).
+fn execute_core(
+    program: &Program,
+    tracked_tile: u32,
+    trace_tile_limit: Option<u32>,
+    faults: Option<&ResolvedFaults>,
+) -> (RunStats, Vec<TraceRecord>, FaultReport) {
     let ops = program.ops();
     let n = ops.len();
 
@@ -88,6 +185,7 @@ pub fn execute_traced(
     let mut executed: usize = 0;
     let mut intervals: Vec<(Component, Cycle, Cycle)> = Vec::new();
     let mut trace: Vec<TraceRecord> = Vec::new();
+    let mut killed: Vec<u32> = Vec::new();
 
     // Schedule op `$idx`, ready at `$now`, on its resource cursor.
     // Breakdown attribution (tracked tile only): memory/fabric ops are
@@ -95,39 +193,71 @@ pub fn execute_traced(
     // channel/bus from the moment its DMA is ready); compute ops from
     // their actual start (engine-queue wait is the other stream's overlap,
     // not this component's cost).
+    //
+    // Fault handling (§Fault): a dead tile's op is dropped instead of
+    // scheduled (no completion event — dependents stall); an outage window
+    // containing the computed start pushes it past the window's end
+    // (cascading through later windows, which are sorted); the first
+    // derate window containing the start multiplies the occupancy. All of
+    // it reads only op fields, this resource's cursor and `$now`, so the
+    // sharded engine reproduces each decision exactly.
     macro_rules! schedule {
         ($idx:expr, $now:expr) => {{
             let op_idx: u32 = $idx;
             let op = &ops[op_idx as usize];
-            let r = op.resource.0 as usize;
-            let start = res_free[r].max($now);
-            let released = start + op.occupancy;
-            let complete = released + op.latency;
-            res_free[r] = released;
-            events.push(complete, op_idx);
-            match op.component {
-                Component::RedMule => redmule_busy += op.occupancy,
-                Component::Spatz => spatz_busy += op.occupancy,
-                _ => {}
-            }
-            hbm_bytes += op.hbm_bytes;
-            if op.tile == tracked_tile && complete > $now {
-                let from = match op.component {
-                    Component::HbmAccess
-                    | Component::Multicast
-                    | Component::MaxReduce
-                    | Component::SumReduce => $now,
-                    _ => start,
-                };
-                intervals.push((op.component, from, complete));
-            }
-            if let Some(limit) = trace_tile_limit {
-                if op.tile < limit {
-                    trace.push((op_idx, start, complete));
+            let dead =
+                faults.and_then(|f| f.death_of(op.tile)).is_some_and(|at| $now >= at);
+            if dead {
+                killed.push(op_idx);
+            } else {
+                let r = op.resource.0 as usize;
+                let mut start = res_free[r].max($now);
+                let mut occupancy = op.occupancy;
+                if let Some(f) = faults {
+                    if let Some(ws) = f.outages_of(op.resource.0) {
+                        for &(from, until) in ws {
+                            if start >= from && start < until {
+                                start = until;
+                            }
+                        }
+                    }
+                    if let Some(ws) = f.derates_of(op.resource.0) {
+                        for &(from, until, num, den) in ws {
+                            if start >= from && start < until {
+                                occupancy = occupancy.saturating_mul(num).div_ceil(den);
+                                break;
+                            }
+                        }
+                    }
                 }
+                let released = start + occupancy;
+                let complete = released + op.latency;
+                res_free[r] = released;
+                events.push(complete, op_idx);
+                match op.component {
+                    Component::RedMule => redmule_busy += occupancy,
+                    Component::Spatz => spatz_busy += occupancy,
+                    _ => {}
+                }
+                hbm_bytes += op.hbm_bytes;
+                if op.tile == tracked_tile && complete > $now {
+                    let from = match op.component {
+                        Component::HbmAccess
+                        | Component::Multicast
+                        | Component::MaxReduce
+                        | Component::SumReduce => $now,
+                        _ => start,
+                    };
+                    intervals.push((op.component, from, complete));
+                }
+                if let Some(limit) = trace_tile_limit {
+                    if op.tile < limit {
+                        trace.push((op_idx, start, complete));
+                    }
+                }
+                executed += 1;
+                makespan = makespan.max(complete);
             }
-            executed += 1;
-            makespan = makespan.max(complete);
         }};
     }
 
@@ -177,12 +307,14 @@ pub fn execute_traced(
         }
     }
 
-    assert_eq!(
-        completed, n,
-        "dependency cycle: {} of {} ops never became ready",
-        n - completed,
-        n
-    );
+    // Scheduled ops all completed (`completed`); the remainder were either
+    // killed outright or stalled behind a killed/cyclic dependency.
+    let mut fr = FaultReport { killed, stalled: Vec::new() };
+    fr.killed.sort_unstable();
+    if completed + fr.killed.len() < n {
+        fr.stalled =
+            indeg.iter().enumerate().filter(|&(_, &d)| d > 0).map(|(i, _)| i as u32).collect();
+    }
 
     let fold = program.fold;
     let breakdown = Breakdown::from_intervals(&intervals, makespan);
@@ -197,6 +329,7 @@ pub fn execute_traced(
             ops_executed: executed + fold.ops as usize,
         },
         trace,
+        fr,
     )
 }
 
@@ -269,12 +402,13 @@ struct WorkerOut {
     completed: usize,
     intervals: Vec<(Component, Cycle, Cycle)>,
     trace: Vec<(u64, TraceRecord)>,
+    killed: Vec<u32>,
 }
 
 /// Schedule one op on its shard's resource cursor — the parallel twin of
-/// the serial engine's `schedule!` macro (identical arithmetic and
-/// breakdown attribution; see there for the issue-time vs start-time
-/// rationale).
+/// the serial engine's `schedule!` macro (identical arithmetic, breakdown
+/// attribution and fault handling; see there for the issue-time vs
+/// start-time rationale and the §Fault determinism argument).
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn schedule_op(
@@ -284,19 +418,42 @@ fn schedule_op(
     round: u64,
     tracked_tile: u32,
     trace_tile_limit: Option<u32>,
+    faults: Option<&ResolvedFaults>,
     sr: &mut ShardRun,
     out: &mut WorkerOut,
 ) {
     let op = &program.ops()[op_idx as usize];
+    if faults.and_then(|f| f.death_of(op.tile)).is_some_and(|at| now >= at) {
+        out.killed.push(op_idx);
+        return;
+    }
     let slot = program.res_slot(op.resource);
-    let start = sr.res_free[slot].max(now);
-    let released = start + op.occupancy;
+    let mut start = sr.res_free[slot].max(now);
+    let mut occupancy = op.occupancy;
+    if let Some(f) = faults {
+        if let Some(ws) = f.outages_of(op.resource.0) {
+            for &(from, until) in ws {
+                if start >= from && start < until {
+                    start = until;
+                }
+            }
+        }
+        if let Some(ws) = f.derates_of(op.resource.0) {
+            for &(from, until, num, den) in ws {
+                if start >= from && start < until {
+                    occupancy = occupancy.saturating_mul(num).div_ceil(den);
+                    break;
+                }
+            }
+        }
+    }
+    let released = start + occupancy;
     let complete = released + op.latency;
     sr.res_free[slot] = released;
     sr.queue.push(complete, op_idx);
     match op.component {
-        Component::RedMule => out.redmule_busy += op.occupancy,
-        Component::Spatz => out.spatz_busy += op.occupancy,
+        Component::RedMule => out.redmule_busy += occupancy,
+        Component::Spatz => out.spatz_busy += occupancy,
         _ => {}
     }
     out.hbm_bytes += op.hbm_bytes;
@@ -327,6 +484,7 @@ fn run_worker(
     program: &Program,
     tracked_tile: u32,
     trace_tile_limit: Option<u32>,
+    faults: Option<&ResolvedFaults>,
     w: usize,
     workers: usize,
     indeg: &[AtomicU32],
@@ -354,7 +512,9 @@ fn run_worker(
     for sr in shards.iter_mut() {
         for &op_idx in program.shard_op_list(sr.id) {
             if program.indeg0[op_idx as usize] == 0 {
-                schedule_op(program, op_idx, 0, 0, tracked_tile, trace_tile_limit, sr, &mut out);
+                schedule_op(
+                    program, op_idx, 0, 0, tracked_tile, trace_tile_limit, faults, sr, &mut out,
+                );
             }
         }
     }
@@ -423,7 +583,15 @@ fn run_worker(
             let ready = std::mem::take(&mut sr.ready);
             for &op_idx in &ready {
                 schedule_op(
-                    program, op_idx, now, round, tracked_tile, trace_tile_limit, sr, &mut out,
+                    program,
+                    op_idx,
+                    now,
+                    round,
+                    tracked_tile,
+                    trace_tile_limit,
+                    faults,
+                    sr,
+                    &mut out,
                 );
             }
             sr.ready = ready;
@@ -476,10 +644,28 @@ pub fn execute_parallel_traced(
     trace_tile_limit: Option<u32>,
     threads: usize,
 ) -> (RunStats, Vec<TraceRecord>) {
-    let n_shards = program.num_shards();
-    if threads.max(1) == 1 || !program.is_sealed() || n_shards <= 1 {
+    if threads.max(1) == 1 || !program.is_sealed() || program.num_shards() <= 1 {
         return execute_traced(program, tracked_tile, trace_tile_limit);
     }
+    let (stats, trace, fr) =
+        execute_parallel_core(program, tracked_tile, trace_tile_limit, threads, None);
+    if !fr.stalled.is_empty() {
+        stall_panic(program, &fr);
+    }
+    (stats, trace)
+}
+
+/// Sharded round-protocol core shared by the fault-free and faulted entry
+/// points. Callers guarantee `threads > 1` on a sealed multi-shard
+/// program.
+fn execute_parallel_core(
+    program: &Program,
+    tracked_tile: u32,
+    trace_tile_limit: Option<u32>,
+    threads: usize,
+    faults: Option<&ResolvedFaults>,
+) -> (RunStats, Vec<TraceRecord>, FaultReport) {
+    let n_shards = program.num_shards();
     let n = program.num_ops();
     let workers = threads.min(n_shards);
 
@@ -497,6 +683,7 @@ pub fn execute_parallel_traced(
                         program,
                         tracked_tile,
                         trace_tile_limit,
+                        faults,
                         w,
                         workers,
                         indeg,
@@ -510,13 +697,23 @@ pub fn execute_parallel_traced(
         handles.into_iter().map(|h| h.join().expect("DES worker panicked")).collect()
     });
 
+    // Same accounting as the serial core: scheduled ops all completed;
+    // the rest were killed or stalled. Reports sort by op id, so they
+    // compare bit-for-bit against the serial engine's.
     let completed: usize = outs.iter().map(|o| o.completed).sum();
-    assert_eq!(
-        completed, n,
-        "dependency cycle: {} of {} ops never became ready",
-        n - completed,
-        n
-    );
+    let mut fr = FaultReport::default();
+    for o in &outs {
+        fr.killed.extend_from_slice(&o.killed);
+    }
+    fr.killed.sort_unstable();
+    if completed + fr.killed.len() < n {
+        fr.stalled = indeg
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.load(Ordering::Relaxed) > 0)
+            .map(|(i, _)| i as u32)
+            .collect();
+    }
 
     let mut makespan: Cycle = 0;
     let mut hbm_bytes = 0u64;
@@ -552,6 +749,7 @@ pub fn execute_parallel_traced(
             ops_executed: executed + fold.ops as usize,
         },
         trace,
+        fr,
     )
 }
 
@@ -795,5 +993,102 @@ mod tests {
         p.deps_pool.push(0);
         p.ops.push(proto(1));
         execute(&p, 0);
+    }
+
+    /// Builds the same hand-made 2-op cycle as [`dependency_cycle_panics`].
+    fn cyclic_program() -> Program {
+        let mut p = Program::new();
+        let r = p.resource();
+        let proto = |deps_start: u32| Op {
+            resource: r,
+            occupancy: 1,
+            latency: 0,
+            component: Component::Other,
+            tile: NO_TILE,
+            hbm_bytes: 0,
+            deps_start,
+            deps_len: 1,
+        };
+        p.deps_pool.push(1);
+        p.ops.push(proto(0));
+        p.deps_pool.push(0);
+        p.ops.push(proto(1));
+        p
+    }
+
+    #[test]
+    fn stall_diagnostics_name_the_stuck_ops() {
+        let p = cyclic_program();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| execute(&p, 0)))
+            .expect_err("cycle must panic");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .expect("panic payload is a string");
+        assert!(msg.contains("dependency cycle"), "{msg}");
+        assert!(msg.contains("2 of 2 ops never became ready"), "{msg}");
+        // Both cycle members are listed with resource and shard.
+        assert!(msg.contains("op 0 (resource 0, shard unsealed"), "{msg}");
+        assert!(msg.contains("op 1 (resource 0"), "{msg}");
+    }
+
+    #[test]
+    fn tile_death_mid_flight_stalls_gracefully() {
+        use crate::sim::fault::FaultPlan;
+        // a (tile 0) runs [0,10); b (tile 0, dep a) becomes ready at 10 —
+        // past the death cycle 5 — and is killed; c (tile 1, dep b) stalls.
+        let mut p = Program::new();
+        let r0 = p.resource();
+        let r1 = p.resource();
+        let a = p.op(r0, 10, 0, Component::RedMule, 0, 0, &[]);
+        let b = p.op(r0, 10, 0, Component::RedMule, 0, 0, &[a]);
+        let c = p.op(r1, 5, 0, Component::Spatz, 1, 0, &[b]);
+        let plan = FaultPlan::none().with_tile_death(0, 5);
+        let (stats, fr) = execute_faulted(&p, 0, &plan, 1);
+        assert_eq!(fr.killed, vec![b]);
+        assert_eq!(fr.stalled, vec![c]);
+        assert_eq!(stats.makespan, 10, "only a ran");
+        assert_eq!(stats.ops_executed, 1);
+        // Death in the far future is a no-op and the report is clean.
+        let late = FaultPlan::none().with_tile_death(0, 1_000);
+        let (full, fr2) = execute_faulted(&p, 0, &late, 1);
+        assert!(fr2.is_clean());
+        assert_eq!(full.makespan, 25);
+    }
+
+    #[test]
+    fn outage_window_pushes_starts_past_the_window() {
+        use crate::sim::fault::FaultPlan;
+        let mut p = Program::new();
+        let r = p.resource();
+        p.op(r, 10, 0, Component::HbmAccess, 0, 64, &[]);
+        let plan = FaultPlan::none().with_outage(0, 0, 100);
+        let (stats, fr) = execute_faulted(&p, 0, &plan, 1);
+        assert!(fr.is_clean());
+        assert_eq!(stats.makespan, 110, "start pushed to the window end");
+        // Back-to-back windows cascade: [0,100) then [100,150).
+        let plan2 = FaultPlan::none().with_outage(0, 0, 100).with_outage(0, 100, 150);
+        let (stats2, _) = execute_faulted(&p, 0, &plan2, 1);
+        assert_eq!(stats2.makespan, 160);
+    }
+
+    #[test]
+    fn derate_window_multiplies_occupancy_inside_only() {
+        use crate::sim::fault::FaultPlan;
+        let mut p = Program::new();
+        let r = p.resource();
+        p.op(r, 10, 0, Component::HbmAccess, 0, 64, &[]);
+        p.op(r, 10, 0, Component::HbmAccess, 0, 64, &[]);
+        // First op starts at 0 inside the window (10 → 30); the second
+        // starts at 30, outside, and keeps its nominal occupancy.
+        let plan = FaultPlan::none().with_derate(0, 0, 20, 3, 1);
+        let (stats, fr) = execute_faulted(&p, 0, &plan, 1);
+        assert!(fr.is_clean());
+        assert_eq!(stats.makespan, 40);
+        // none() through the faulted entry point is the baseline schedule.
+        let (base, fr0) = execute_faulted(&p, 0, &FaultPlan::none(), 1);
+        assert!(fr0.is_clean());
+        assert_eq!(base, execute(&p, 0));
     }
 }

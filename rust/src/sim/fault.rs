@@ -1,0 +1,510 @@
+//! Deterministic fault injection for the fabric DES (§Fault in the module
+//! essay).
+//!
+//! A [`FaultPlan`] is a *schedule-time* description of hardware failures:
+//! HBM-channel outage windows, channel service-rate derating windows (FIFO
+//! occupancy multipliers), NoC bus/link slowdowns, and whole-tile (PE)
+//! death at a cycle. Plans are plain data — built explicitly, parsed from a
+//! CLI spec ([`FaultPlan::parse`]), or generated from a seed
+//! ([`FaultPlan::seeded`]) — and are resolved against a concrete
+//! [`Program`] into per-resource modifier tables ([`ResolvedFaults`])
+//! consulted by the engine when it schedules each op.
+//!
+//! Determinism is the design constraint. Every fault decision is a pure
+//! function of (the op's fields, the owning resource's local FIFO cursor,
+//! the epoch timestamp `now`, the plan): an outage window pushes the
+//! computed start past the window's end, a derate window multiplies the
+//! occupancy, and a tile death kills any op of that tile whose ready time
+//! has reached the death cycle (it is simply never scheduled, so its
+//! dependents never settle). No decision reads global engine state, so the
+//! serial and sharded-parallel engines — which by construction agree on
+//! per-resource cursor state and epoch times (§Shard) — make identical
+//! fault decisions, and the PR-5 serial ≡ parallel bit-identity survives
+//! injection (`tests/fault_differential.rs`).
+//!
+//! Resolution leans on two repo-wide invariants: HBM channel `c` is always
+//! `ResourceId(c)` (every dataflow builder allocates channel resources
+//! first — debug-asserted in `dataflow::flash`/`flat`), and NoC bus
+//! resources are exactly those whose ops carry a fabric component
+//! (`noc::is_fabric_component`). Tile deaths key on `Op::tile`. Under
+//! symmetry folding a non-representative private chain is collapsed into
+//! delay ops, so a death targeting a folded-away tile only lands on the
+//! ops that still carry that tile id; target representative tiles (band
+//! row 0 of a scheduler slot) or disable folding for precise PE-death
+//! studies. The router preempts the whole band either way.
+
+use std::collections::HashMap;
+
+use super::program::Program;
+use super::Cycle;
+use crate::noc::is_fabric_component;
+use crate::util::Rng;
+
+/// An HBM channel that serves no requests during `[from, until)`; work
+/// arriving in the window waits for the channel to come back.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChannelOutage {
+    pub channel: u32,
+    pub from: Cycle,
+    pub until: Cycle,
+}
+
+/// An HBM channel running derated during `[from, until)`: occupancy of ops
+/// starting inside the window is multiplied by `num/den` (rounded up).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChannelDerate {
+    pub channel: u32,
+    pub from: Cycle,
+    pub until: Cycle,
+    pub num: u64,
+    pub den: u64,
+}
+
+/// Every NoC row/column bus running derated during `[from, until)` by
+/// `num/den` (fabric congestion, link-level retransmission).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NocSlowdown {
+    pub from: Cycle,
+    pub until: Cycle,
+    pub num: u64,
+    pub den: u64,
+}
+
+/// A whole tile (PE) dying at cycle `at`: none of its ops whose ready time
+/// has reached `at` ever issues.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileDeath {
+    pub tile: u32,
+    pub at: Cycle,
+}
+
+/// A deterministic set of timed hardware faults. [`FaultPlan::none`] is
+/// the empty plan and reproduces fault-free schedules bit-for-bit.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub outages: Vec<ChannelOutage>,
+    pub derates: Vec<ChannelDerate>,
+    pub noc: Vec<NocSlowdown>,
+    pub deaths: Vec<TileDeath>,
+}
+
+impl FaultPlan {
+    /// The empty plan: injection with it is bit-identical to no injection.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.outages.is_empty()
+            && self.derates.is_empty()
+            && self.noc.is_empty()
+            && self.deaths.is_empty()
+    }
+
+    pub fn with_outage(mut self, channel: u32, from: Cycle, until: Cycle) -> Self {
+        assert!(from < until, "outage window must be non-empty");
+        self.outages.push(ChannelOutage { channel, from, until });
+        self
+    }
+
+    pub fn with_derate(
+        mut self,
+        channel: u32,
+        from: Cycle,
+        until: Cycle,
+        num: u64,
+        den: u64,
+    ) -> Self {
+        assert!(from < until, "derate window must be non-empty");
+        assert!(den > 0 && num >= den, "derate ratio must be >= 1");
+        self.derates.push(ChannelDerate { channel, from, until, num, den });
+        self
+    }
+
+    pub fn with_noc_slowdown(mut self, from: Cycle, until: Cycle, num: u64, den: u64) -> Self {
+        assert!(from < until, "NoC slowdown window must be non-empty");
+        assert!(den > 0 && num >= den, "slowdown ratio must be >= 1");
+        self.noc.push(NocSlowdown { from, until, num, den });
+        self
+    }
+
+    pub fn with_tile_death(mut self, tile: u32, at: Cycle) -> Self {
+        self.deaths.push(TileDeath { tile, at });
+        self
+    }
+
+    /// Content fingerprint (FNV-1a), used by the coordinator's memo key so
+    /// faulted and fault-free experiment results never alias.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x1_0000_01b3);
+            }
+        };
+        eat(self.outages.len() as u64);
+        for o in &self.outages {
+            eat(o.channel as u64);
+            eat(o.from);
+            eat(o.until);
+        }
+        eat(self.derates.len() as u64);
+        for d in &self.derates {
+            eat(d.channel as u64);
+            eat(d.from);
+            eat(d.until);
+            eat(d.num);
+            eat(d.den);
+        }
+        eat(self.noc.len() as u64);
+        for s in &self.noc {
+            eat(s.from);
+            eat(s.until);
+            eat(s.num);
+            eat(s.den);
+        }
+        eat(self.deaths.len() as u64);
+        for t in &self.deaths {
+            eat(t.tile as u64);
+            eat(t.at);
+        }
+        h
+    }
+
+    /// Translate every window `clock` cycles into the past — the router
+    /// slices its absolute-virtual-time plan into per-step relative plans
+    /// with this. Windows entirely before `clock` are dropped; deaths in
+    /// the past clamp to cycle 0 (the tile is already dead).
+    pub fn shifted(&self, clock: Cycle) -> FaultPlan {
+        let win = |from: Cycle, until: Cycle| -> Option<(Cycle, Cycle)> {
+            (until > clock).then(|| (from.saturating_sub(clock), until - clock))
+        };
+        FaultPlan {
+            outages: self
+                .outages
+                .iter()
+                .filter_map(|o| {
+                    win(o.from, o.until).map(|(from, until)| ChannelOutage {
+                        channel: o.channel,
+                        from,
+                        until,
+                    })
+                })
+                .collect(),
+            derates: self
+                .derates
+                .iter()
+                .filter_map(|d| {
+                    win(d.from, d.until).map(|(from, until)| ChannelDerate {
+                        channel: d.channel,
+                        from,
+                        until,
+                        num: d.num,
+                        den: d.den,
+                    })
+                })
+                .collect(),
+            noc: self
+                .noc
+                .iter()
+                .filter_map(|s| {
+                    win(s.from, s.until).map(|(from, until)| NocSlowdown {
+                        from,
+                        until,
+                        num: s.num,
+                        den: s.den,
+                    })
+                })
+                .collect(),
+            deaths: self
+                .deaths
+                .iter()
+                .map(|t| TileDeath { tile: t.tile, at: t.at.saturating_sub(clock) })
+                .collect(),
+        }
+    }
+
+    /// Tiles dead at or before `clock` (absolute time).
+    pub fn dead_tiles_at(&self, clock: Cycle) -> Vec<u32> {
+        let mut tiles: Vec<u32> =
+            self.deaths.iter().filter(|d| d.at <= clock).map(|d| d.tile).collect();
+        tiles.sort_unstable();
+        tiles.dedup();
+        tiles
+    }
+
+    /// Parse a CLI fault spec: semicolon-separated clauses
+    ///
+    /// * `off:CH@FROM-UNTIL`        — channel `CH` out during the window
+    /// * `slow:CH@FROM-UNTILxN[/D]` — channel `CH` derated by `N/D`
+    /// * `noc@FROM-UNTILxN[/D]`     — all NoC buses derated by `N/D`
+    /// * `die:TILE@AT`              — tile `TILE` dies at cycle `AT`
+    ///
+    /// e.g. `slow:8@0-4000000x4;die:60@1200000`. Cycle values are virtual
+    /// serving-clock cycles when passed to `schedule --faults`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        fn num(field: &str, s: &str) -> Result<u64, String> {
+            s.trim()
+                .parse::<u64>()
+                .map_err(|_| format!("fault spec: field '{field}': expected an integer, got '{s}'"))
+        }
+        fn window(clause: &str, s: &str) -> Result<(Cycle, Cycle), String> {
+            let (a, b) = s
+                .split_once('-')
+                .ok_or_else(|| format!("fault clause '{clause}': expected FROM-UNTIL, got '{s}'"))?;
+            let (from, until) = (num("from", a)?, num("until", b)?);
+            if from >= until {
+                return Err(format!("fault clause '{clause}': empty window {from}-{until}"));
+            }
+            Ok((from, until))
+        }
+        fn ratio(clause: &str, s: &str) -> Result<(u64, u64), String> {
+            let (num_s, den_s) = match s.split_once('/') {
+                Some((n, d)) => (n, d),
+                None => (s, "1"),
+            };
+            let (n, d) = (num("factor", num_s)?, num("factor denominator", den_s)?);
+            if d == 0 || n < d {
+                return Err(format!("fault clause '{clause}': factor {s} must be >= 1"));
+            }
+            Ok((n, d))
+        }
+        let mut plan = FaultPlan::none();
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            if let Some(rest) = clause.strip_prefix("off:") {
+                let (ch, w) = rest
+                    .split_once('@')
+                    .ok_or_else(|| format!("fault clause '{clause}': expected off:CH@FROM-UNTIL"))?;
+                let (from, until) = window(clause, w)?;
+                plan.outages.push(ChannelOutage {
+                    channel: num("channel", ch)? as u32,
+                    from,
+                    until,
+                });
+            } else if let Some(rest) = clause.strip_prefix("slow:") {
+                let (ch, w) = rest.split_once('@').ok_or_else(|| {
+                    format!("fault clause '{clause}': expected slow:CH@FROM-UNTILxN")
+                })?;
+                let (w, x) = w.split_once('x').ok_or_else(|| {
+                    format!("fault clause '{clause}': expected a xN derate factor")
+                })?;
+                let (from, until) = window(clause, w)?;
+                let (n, d) = ratio(clause, x)?;
+                plan.derates.push(ChannelDerate {
+                    channel: num("channel", ch)? as u32,
+                    from,
+                    until,
+                    num: n,
+                    den: d,
+                });
+            } else if let Some(rest) = clause.strip_prefix("noc@") {
+                let (w, x) = rest.split_once('x').ok_or_else(|| {
+                    format!("fault clause '{clause}': expected a xN slowdown factor")
+                })?;
+                let (from, until) = window(clause, w)?;
+                let (n, d) = ratio(clause, x)?;
+                plan.noc.push(NocSlowdown { from, until, num: n, den: d });
+            } else if let Some(rest) = clause.strip_prefix("die:") {
+                let (tile, at) = rest
+                    .split_once('@')
+                    .ok_or_else(|| format!("fault clause '{clause}': expected die:TILE@AT"))?;
+                plan.deaths.push(TileDeath {
+                    tile: num("tile", tile)? as u32,
+                    at: num("at", at)?,
+                });
+            } else {
+                return Err(format!(
+                    "fault clause '{clause}': unknown kind (expected off:/slow:/noc@/die:)"
+                ));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// A seeded, reproducible plan: derates ~`severity` of `channels` by
+    /// 2-4x over random sub-windows of `[0, horizon)`, and above severity
+    /// 0.5 also kills one random tile mid-horizon. Same seed ⇒ same plan.
+    pub fn seeded(
+        seed: u64,
+        channels: u32,
+        tiles: u32,
+        horizon: Cycle,
+        severity: f64,
+    ) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA17_1A17);
+        let mut plan = FaultPlan::none();
+        let hit = ((channels as f64 * severity).round() as u32).min(channels);
+        let h = horizon.max(4);
+        for _ in 0..hit {
+            let ch = rng.gen_range(channels as u64) as u32;
+            let a = rng.gen_range(h / 2);
+            let b = a + 1 + rng.gen_range(h / 2);
+            let factor = 2 + rng.gen_range(3);
+            plan = plan.with_derate(ch, a, b, factor, 1);
+        }
+        if severity > 0.5 && tiles > 0 {
+            let tile = rng.gen_range(tiles as u64) as u32;
+            plan = plan.with_tile_death(tile, horizon / 2);
+        }
+        plan
+    }
+
+    /// Resolve the logical plan against a concrete program into the
+    /// per-resource tables the engine consults (§Fault).
+    pub fn resolve(&self, program: &Program) -> ResolvedFaults {
+        let n_res = program.num_resources() as u32;
+        let mut rf = ResolvedFaults::default();
+        for o in &self.outages {
+            if o.channel < n_res {
+                rf.outages.entry(o.channel).or_default().push((o.from, o.until));
+            }
+        }
+        for d in &self.derates {
+            if d.channel < n_res {
+                rf.derates.entry(d.channel).or_default().push((d.from, d.until, d.num, d.den));
+            }
+        }
+        if !self.noc.is_empty() {
+            // NoC buses are exactly the resources carrying fabric ops.
+            let mut fabric: Vec<u32> = program
+                .ops()
+                .iter()
+                .filter(|op| is_fabric_component(op.component))
+                .map(|op| op.resource.0)
+                .collect();
+            fabric.sort_unstable();
+            fabric.dedup();
+            for r in fabric {
+                let ws = rf.derates.entry(r).or_default();
+                for s in &self.noc {
+                    ws.push((s.from, s.until, s.num, s.den));
+                }
+            }
+        }
+        for ws in rf.outages.values_mut() {
+            ws.sort_unstable();
+        }
+        for ws in rf.derates.values_mut() {
+            ws.sort_unstable();
+        }
+        for t in &self.deaths {
+            rf.deaths
+                .entry(t.tile)
+                .and_modify(|at| *at = (*at).min(t.at))
+                .or_insert(t.at);
+        }
+        rf
+    }
+}
+
+/// [`FaultPlan`] resolved against one program: per-resource modifier
+/// windows plus the tile death table, in the form the engine's inner
+/// scheduling step consults. Lookups only — iteration order never matters.
+#[derive(Debug, Clone, Default)]
+pub struct ResolvedFaults {
+    outages: HashMap<u32, Vec<(Cycle, Cycle)>>,
+    derates: HashMap<u32, Vec<(Cycle, Cycle, u64, u64)>>,
+    deaths: HashMap<u32, Cycle>,
+}
+
+impl ResolvedFaults {
+    #[inline]
+    pub(crate) fn outages_of(&self, resource: u32) -> Option<&[(Cycle, Cycle)]> {
+        self.outages.get(&resource).map(|v| v.as_slice())
+    }
+
+    #[inline]
+    pub(crate) fn derates_of(&self, resource: u32) -> Option<&[(Cycle, Cycle, u64, u64)]> {
+        self.derates.get(&resource).map(|v| v.as_slice())
+    }
+
+    #[inline]
+    pub(crate) fn death_of(&self, tile: u32) -> Option<Cycle> {
+        self.deaths.get(&tile).copied()
+    }
+}
+
+/// Outcome of a faulted execution: `killed` ops were ready but never
+/// issued (their tile was dead); `stalled` ops never became ready (a
+/// dependency — transitively — was killed). Both are sorted by op id, so
+/// reports compare bit-for-bit across engines and thread counts.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    pub killed: Vec<u32>,
+    pub stalled: Vec<u32>,
+}
+
+impl FaultReport {
+    /// No op was lost: the program ran to completion despite the plan.
+    pub fn is_clean(&self) -> bool {
+        self.killed.is_empty() && self.stalled.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_plan_is_empty_and_stable() {
+        let p = FaultPlan::none();
+        assert!(p.is_none());
+        assert_eq!(p.fingerprint(), FaultPlan::none().fingerprint());
+        let q = p.clone().with_derate(0, 0, 10, 2, 1);
+        assert!(!q.is_none());
+        assert_ne!(q.fingerprint(), p.fingerprint());
+    }
+
+    #[test]
+    fn parse_round_trips_every_clause_kind() {
+        let plan =
+            FaultPlan::parse("off:3@100-200; slow:8@0-4000000x4; noc@50-60x3/2; die:60@1200000")
+                .expect("valid spec");
+        assert_eq!(plan.outages, vec![ChannelOutage { channel: 3, from: 100, until: 200 }]);
+        assert_eq!(
+            plan.derates,
+            vec![ChannelDerate { channel: 8, from: 0, until: 4_000_000, num: 4, den: 1 }]
+        );
+        assert_eq!(plan.noc, vec![NocSlowdown { from: 50, until: 60, num: 3, den: 2 }]);
+        assert_eq!(plan.deaths, vec![TileDeath { tile: 60, at: 1_200_000 }]);
+        assert!(FaultPlan::parse("").expect("empty ok").is_none());
+    }
+
+    #[test]
+    fn parse_names_the_bad_field() {
+        let e = FaultPlan::parse("slow:x@0-10x2").unwrap_err();
+        assert!(e.contains("channel") && e.contains("'x'"), "{e}");
+        let e = FaultPlan::parse("off:0@10-10").unwrap_err();
+        assert!(e.contains("empty window"), "{e}");
+        let e = FaultPlan::parse("slow:0@0-10x1/2").unwrap_err();
+        assert!(e.contains("factor"), "{e}");
+        let e = FaultPlan::parse("boom:1@2-3").unwrap_err();
+        assert!(e.contains("unknown kind"), "{e}");
+    }
+
+    #[test]
+    fn shifted_slices_windows_and_clamps_deaths() {
+        let plan = FaultPlan::none()
+            .with_derate(0, 100, 200, 2, 1)
+            .with_outage(1, 0, 50)
+            .with_tile_death(7, 120);
+        let s = plan.shifted(150);
+        let want = ChannelDerate { channel: 0, from: 0, until: 50, num: 2, den: 1 };
+        assert_eq!(s.derates, vec![want]);
+        assert!(s.outages.is_empty(), "fully-past window dropped");
+        assert_eq!(s.deaths, vec![TileDeath { tile: 7, at: 0 }]);
+        assert_eq!(plan.dead_tiles_at(119), Vec::<u32>::new());
+        assert_eq!(plan.dead_tiles_at(120), vec![7]);
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible() {
+        let a = FaultPlan::seeded(42, 16, 64, 1_000_000, 0.75);
+        let b = FaultPlan::seeded(42, 16, 64, 1_000_000, 0.75);
+        assert_eq!(a, b);
+        assert!(!a.derates.is_empty() && !a.deaths.is_empty());
+        let c = FaultPlan::seeded(43, 16, 64, 1_000_000, 0.75);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+}

@@ -98,10 +98,34 @@
 //! timestamp (congruent unfolded tile streams, multi-band scheduler
 //! batches); sweep-level fan-out (`coordinator::run_all` /
 //! `set_engine_threads`) composes with it.
+//!
+//! # Deterministic fault injection (§Fault)
+//!
+//! `fault::FaultPlan` describes timed hardware failures — HBM-channel
+//! outage and derating windows, NoC bus slowdowns, whole-tile death — and
+//! `engine::execute_faulted` applies them *inside* the scheduling step: an
+//! outage window pushes an affected op's computed start past the window, a
+//! derate window multiplies its occupancy, and a dead tile's ops are
+//! dropped (their dependents then stall and are returned in a
+//! `fault::FaultReport` instead of panicking).
+//!
+//! Why fault windows commute with the §Shard partition: every fault
+//! decision is a pure function of (the op's fields, the owning resource's
+//! local FIFO cursor, the epoch timestamp, the plan). A resource belongs
+//! to exactly one shard, so the cursor is shard-local state the parallel
+//! engine already reproduces exactly; the epoch timestamp is the global
+//! `now` all workers agree on at fence 1; and the plan is immutable. No
+//! fault decision reads any cross-shard state beyond what the fault-free
+//! engine already exchanges, so injecting a plan preserves the serial ≡
+//! parallel bit-identity — and `FaultPlan::none()` takes the identical
+//! arithmetic with empty window tables, reproducing the fault-free
+//! schedule bit for bit. Both properties are pinned across all dataflows ×
+//! folding × thread counts by `tests/fault_differential.rs`.
 
 pub mod arena;
 pub mod breakdown;
 pub mod engine;
+pub mod fault;
 pub mod program;
 pub mod queue;
 pub mod reference;
@@ -109,9 +133,13 @@ pub mod trace;
 
 pub use arena::ProgramArena;
 pub use breakdown::{Breakdown, Component, RunStats};
-pub use engine::{execute, execute_parallel, execute_parallel_traced, execute_traced};
-pub use queue::EventQueue;
+pub use engine::{
+    execute, execute_faulted, execute_faulted_traced, execute_parallel, execute_parallel_traced,
+    execute_traced,
+};
+pub use fault::{FaultPlan, FaultReport};
 pub use program::{FoldStats, Op, OpId, Program, ResourceId, SHARED_SHARD};
+pub use queue::EventQueue;
 pub use reference::{execute_reference, execute_reference_traced};
 
 /// Simulation time in clock cycles (1 GHz in all paper configurations).

@@ -1,0 +1,166 @@
+//! Differential test: fault injection vs the fault-free engines.
+//!
+//! `sim::execute_faulted` threads a resolved `FaultPlan` through the same
+//! scheduling step the fault-free engines use (see `sim`'s §Fault essay).
+//! Two exactness properties fall out and are pinned here:
+//!
+//! 1. **`FaultPlan::none()` is the identity** — the faulted path with an
+//!    empty plan takes the identical arithmetic with empty window tables,
+//!    so it must reproduce the fault-free `RunStats` *and* per-op trace
+//!    records bit for bit, across every dataflow × folding × thread count.
+//! 2. **Faulted runs are deterministic and thread-count-invariant** —
+//!    fault decisions are pure functions of (op fields, shard-local FIFO
+//!    cursor, epoch timestamp, immutable plan), so the parallel engine
+//!    reproduces the serial faulted schedule exactly, `FaultReport`
+//!    included.
+//!
+//! Plus the monotonicity sanity wall: derating every HBM channel must
+//! strictly lengthen a memory-bound schedule, and a tile death mid-run
+//! degrades gracefully (killed + stalled + completed conserves the op
+//! count; no panic, no deadlock).
+//!
+//! Tests here toggle the process-global folding switch, so they
+//! serialize on a local lock (each integration-test binary is its own
+//! process).
+
+use std::sync::Mutex;
+
+use flatattention::arch::presets;
+use flatattention::dataflow::{
+    build_program, set_symmetry_folding, tracked_tile, Dataflow, Workload, ALL_DATAFLOWS,
+};
+use flatattention::sim::{execute_faulted, execute_faulted_traced, execute_traced, FaultPlan};
+
+static SWITCH_LOCK: Mutex<()> = Mutex::new(());
+
+/// Thread counts under test (same env override contract as
+/// `parallel_differential.rs`): serial + even + oversubscribed.
+fn thread_counts() -> Vec<usize> {
+    if let Ok(v) = std::env::var("FLATATTN_PAR_THREADS") {
+        let parsed: Vec<usize> =
+            v.split(',').filter_map(|s| s.trim().parse().ok()).filter(|&n| n >= 1).collect();
+        if !parsed.is_empty() {
+            return parsed;
+        }
+    }
+    vec![1, 2, 8]
+}
+
+#[test]
+fn none_plan_is_bit_identical_to_baseline() {
+    let _guard = SWITCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arch = presets::table2(8);
+    let wl = Workload::new(320, 64, 4, 1).with_causal(true).with_kv_heads(2);
+    let counts = thread_counts();
+    let none = FaultPlan::none();
+    for folding in [true, false] {
+        for df in ALL_DATAFLOWS {
+            set_symmetry_folding(folding);
+            let p = build_program(&arch, &wl, df, 4);
+            set_symmetry_folding(true);
+            let tracked = tracked_tile(&arch, df, 4);
+            let (want, want_trace) = execute_traced(&p, tracked, Some(u32::MAX));
+            for &t in &counts {
+                let (got, got_trace, fr) =
+                    execute_faulted_traced(&p, tracked, Some(u32::MAX), &none, t);
+                assert!(fr.is_clean(), "{df:?} folding={folding} t{t}: clean run reports faults");
+                assert_eq!(want, got, "{df:?} folding={folding} t{t}: RunStats diverge");
+                assert_eq!(want_trace, got_trace, "{df:?} folding={folding} t{t}: trace diverges");
+            }
+        }
+    }
+}
+
+#[test]
+fn faulted_runs_are_thread_count_invariant() {
+    let _guard = SWITCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arch = presets::table2(8);
+    let wl = Workload::new(384, 64, 4, 1).with_kv_heads(2);
+    let counts = thread_counts();
+    for folding in [true, false] {
+        for df in ALL_DATAFLOWS {
+            set_symmetry_folding(folding);
+            let p = build_program(&arch, &wl, df, 4);
+            set_symmetry_folding(true);
+            let tracked = tracked_tile(&arch, df, 4);
+            // Anchor the fault windows to this program's own timescale so
+            // every kind of fault actually lands mid-run.
+            let (free, _) = execute_traced(&p, tracked, Some(u32::MAX));
+            let mid = (free.makespan / 2).max(1);
+            let plan = FaultPlan::none()
+                .with_outage(0, 0, mid)
+                .with_derate(1, 0, free.makespan.max(2), 3, 1)
+                .with_noc_slowdown(0, free.makespan.max(2), 2, 1)
+                .with_tile_death(tracked, mid);
+            let (want, want_trace, want_fr) =
+                execute_faulted_traced(&p, tracked, Some(u32::MAX), &plan, 1);
+            for &t in &counts {
+                let (got, got_trace, got_fr) =
+                    execute_faulted_traced(&p, tracked, Some(u32::MAX), &plan, t);
+                assert_eq!(want, got, "{df:?} folding={folding} t{t}: faulted stats diverge");
+                assert_eq!(
+                    want_trace, got_trace,
+                    "{df:?} folding={folding} t{t}: faulted trace diverges"
+                );
+                assert_eq!(
+                    want_fr, got_fr,
+                    "{df:?} folding={folding} t{t}: FaultReport diverges"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn derated_channels_strictly_dominate_fault_free_twin() {
+    let _guard = SWITCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    set_symmetry_folding(true);
+    let arch = presets::table2(8);
+    // Memory-bound shape: decode against a long KV cache keeps the HBM
+    // channels on the critical path for every dataflow under test.
+    let wl = Workload::new(2048, 128, 8, 1).with_kv_heads(2).decode();
+    let mut plan = FaultPlan::none();
+    for c in 0..arch.hbm.total_channels() as u32 {
+        plan = plan.with_derate(c, 0, u64::MAX / 2, 8, 1);
+    }
+    for df in [Dataflow::Flash2, Dataflow::FlatColl] {
+        let p = build_program(&arch, &wl, df, 4);
+        let tracked = tracked_tile(&arch, df, 4);
+        let (free, _) = execute_traced(&p, tracked, Some(u32::MAX));
+        let (slow, fr) = execute_faulted(&p, tracked, &plan, 1);
+        assert!(fr.is_clean(), "{df:?}: derating kills nothing");
+        assert!(
+            slow.makespan > free.makespan,
+            "{df:?}: 8x-derated channels must strictly lengthen the run \
+             ({} vs {})",
+            slow.makespan,
+            free.makespan
+        );
+    }
+}
+
+#[test]
+fn tile_death_mid_run_degrades_gracefully() {
+    let _guard = SWITCH_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    // Unfolded build: `ops_executed` counts real scheduled ops only, so
+    // the conservation identity is exact without fold re-accounting.
+    set_symmetry_folding(false);
+    let arch = presets::table2(8);
+    let wl = Workload::new(256, 64, 4, 1);
+    let df = Dataflow::Flash2;
+    let p = build_program(&arch, &wl, df, 1);
+    set_symmetry_folding(true);
+    let tracked = tracked_tile(&arch, df, 1);
+    let plan = FaultPlan::none().with_tile_death(tracked, 0);
+    for t in [1usize, 4] {
+        let (stats, fr) = execute_faulted(&p, tracked, &plan, t);
+        assert!(!fr.killed.is_empty(), "t{t}: the dead tile's ops are killed");
+        assert_eq!(
+            stats.ops_executed + fr.killed.len() + fr.stalled.len(),
+            p.num_ops(),
+            "t{t}: completed + killed + stalled conserves the op count"
+        );
+        assert!(fr.killed.windows(2).all(|w| w[0] < w[1]), "t{t}: killed ids sorted");
+        assert!(fr.stalled.windows(2).all(|w| w[0] < w[1]), "t{t}: stalled ids sorted");
+    }
+}

@@ -19,6 +19,9 @@ Targets (mirroring the asserts/WARNINGs inside the bench harnesses):
   serving_sweep   decode_mqa_traffic_reduction >= 10.0
                   decode_over_prefill_makespan <= 0.1
   schedule_sweep  continuous_over_static_*     >= 1.5 (every dataflow row)
+                  degraded_over_faultfree_tokens_per_s >= 0.6 (router keeps
+                                         most throughput with 1/8 of the
+                                         HBM channels at half bandwidth)
 
 Exits non-zero listing every violated target; placeholder files (empty
 "metrics") fail loudly — the point of the CI job is that the benches RAN.
@@ -88,6 +91,7 @@ if sch:
         failures.append("schedule_sweep: no continuous_over_static_* metrics")
     for k in rows:
         require("schedule_sweep", sch, k, lo=1.5)
+    require("schedule_sweep", sch, "degraded_over_faultfree_tokens_per_s", lo=0.6)
 
 for line in notes:
     print(line)
