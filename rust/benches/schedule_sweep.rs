@@ -129,5 +129,22 @@ fn main() {
         "degraded/fault-free throughput {ratio:.3} below the 0.6 target"
     );
 
+    // Roofline cross-check on the fault-free serving replay: the bytes it
+    // moved over the aggregate HBM bandwidth bound any schedule's run
+    // time from below (each step's makespan >= its bytes / peak BW, and
+    // steps are sequential). Utilization against that bound is tracked
+    // across PRs and gated <= 1.0 by scripts/check_bench_targets.py.
+    let hbm_bound = free.serving.hbm_bytes.div_ceil(arch.hbm.peak_bytes_per_cycle());
+    assert!(
+        free.serving.total_cycles >= hbm_bound,
+        "serving replay finished in {} cycles, below the HBM roofline bound {} — \
+         the scheduler moved bytes faster than the hardware could",
+        free.serving.total_cycles,
+        hbm_bound
+    );
+    let rl_util = hbm_bound as f64 / free.serving.total_cycles.max(1) as f64;
+    println!("  roofline (fault-free replay): HBM bound {hbm_bound} cycles, utilization {:.1}%", rl_util * 100.0);
+    rec.metric("roofline_utilization", rl_util);
+
     rec.write_json(OUT_PATH, "schedule_sweep");
 }

@@ -12,6 +12,7 @@
 #[path = "harness.rs"]
 mod harness;
 
+use flatattention::analysis::Roofline;
 use flatattention::arch::presets;
 use flatattention::dataflow::{run, Dataflow, Workload, ALL_DATAFLOWS};
 
@@ -83,6 +84,22 @@ fn main() {
         "decode MQA traffic reduction {kv_reduction:.2}x below the 10x target"
     );
     assert!(ratio < 0.1, "decode/prefill makespan ratio {ratio:.3} above the 0.1 target");
+
+    // Roofline cross-check: the prefill headline must respect the
+    // workload-level analytical lower bounds (flops over peak compute,
+    // compulsory bytes over aggregate HBM bandwidth). Utilization against
+    // the binding bound is tracked across PRs and gated <= 1.0 by
+    // scripts/check_bench_targets.py.
+    let rep = Roofline::from_workload(&arch, &Workload::new(s, 128, 32, 4))
+        .check(pre_mha.makespan)
+        .unwrap_or_else(|d| panic!("prefill S={s} FA-2: {d}"));
+    println!(
+        "  roofline (prefill S={s} FA-2): {} bound {} cycles, utilization {:.1}%",
+        rep.binding,
+        rep.bound,
+        rep.utilization * 100.0
+    );
+    rec.metric("roofline_utilization", rep.utilization);
 
     rec.write_json(OUT_PATH, "serving_sweep");
 }

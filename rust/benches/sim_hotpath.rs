@@ -17,6 +17,7 @@
 #[path = "harness.rs"]
 mod harness;
 
+use flatattention::analysis::Roofline;
 use flatattention::arch::presets;
 use flatattention::coordinator::{run_all_uncached, ExperimentSpec};
 use flatattention::dataflow::{
@@ -221,6 +222,26 @@ fn main() {
     rec.metric("parallel_e2e_serial_s", sweep_serial);
     rec.metric("parallel_e2e_parallel_s", sweep_par);
     rec.metric("parallel_e2e_speedup", parallel_speedup);
+
+    harness::section("roofline cross-check (analysis::Roofline, makespan >= bound)");
+    // Every benched schedule must respect the analytical lower bounds —
+    // a "speedup" that finishes faster than the hardware could move the
+    // bytes or do the flops is a simulator bug, not a win. Checked on the
+    // headline case; utilization against the binding bound is tracked in
+    // the report JSON (gated <= 1.0 by scripts/check_bench_targets.py).
+    let (rl_label, rl_wl, rl_df, rl_g) = &cases[0];
+    let rl_p = build_program(&arch, rl_wl, *rl_df, *rl_g);
+    let rl_stats = execute(&rl_p, tracked_tile(&arch, *rl_df, *rl_g));
+    let rep = Roofline::of(&arch, rl_wl, &rl_p)
+        .check(rl_stats.makespan)
+        .unwrap_or_else(|d| panic!("{rl_label}: {d}"));
+    println!(
+        "  {rl_label}: {} bound {} cycles, utilization {:.1}%",
+        rep.binding,
+        rep.bound,
+        rep.utilization * 100.0
+    );
+    rec.metric("roofline_utilization", rep.utilization);
 
     rec.write_json(OUT_PATH, "sim_hotpath");
     if speedup < 2.0 {

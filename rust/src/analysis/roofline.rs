@@ -1,0 +1,199 @@
+//! Roofline cross-checker: analytical lower bounds on DES makespans
+//! (`crate::analysis` essay, "The roofline cross-check", argues each
+//! bound's soundness — including under folding and slow-faults).
+
+use crate::arch::ArchConfig;
+use crate::dataflow::Workload;
+use crate::noc::is_fabric_component;
+use crate::sim::{Component, Cycle, Program};
+
+use super::Diagnostic;
+
+/// Lower bounds on the makespan of one run, with the resource each
+/// program-level bound binds on (for diagnostics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Roofline {
+    /// Flops over whole-mesh peak FLOP/cycle.
+    pub compute_bound: Cycle,
+    /// Compulsory bytes over aggregate HBM bandwidth (workload-level),
+    /// raised to the busiest channel's occupancy sum when a program is
+    /// given.
+    pub hbm_bound: Cycle,
+    /// Busiest HBM channel resource, when program-derived.
+    pub hbm_resource: Option<u32>,
+    /// Busiest NoC bus occupancy sum (program-level only; a workload
+    /// alone does not determine the collective schedule).
+    pub noc_bound: Cycle,
+    /// Busiest NoC bus resource, when program-derived.
+    pub noc_resource: Option<u32>,
+    /// Busiest resource of *any* kind: every resource is a FIFO, so its
+    /// total occupancy serializes whatever it is.
+    pub serial_bound: Cycle,
+    /// The resource binding `serial_bound`, when program-derived.
+    pub serial_resource: Option<u32>,
+}
+
+/// A passed roofline check: the binding bound and the run's utilization
+/// against it (`bound / makespan`, in `(0, 1]`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RooflineReport {
+    pub bound: Cycle,
+    /// Which bound binds: `"compute"`, `"hbm"`, `"noc"` or `"serial"`.
+    pub binding: &'static str,
+    pub utilization: f64,
+}
+
+fn ceil_div(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        a.div_ceil(b)
+    }
+}
+
+impl Roofline {
+    /// Bounds derivable from the workload and architecture alone:
+    /// compulsory flops over peak compute, compulsory bytes over peak
+    /// aggregate HBM bandwidth.
+    pub fn from_workload(arch: &ArchConfig, wl: &Workload) -> Roofline {
+        Roofline {
+            compute_bound: ceil_div(wl.matmul_flops(), arch.peak_flops_per_cycle()),
+            hbm_bound: ceil_div(wl.compulsory_bytes(), arch.hbm.peak_bytes_per_cycle()),
+            hbm_resource: None,
+            noc_bound: 0,
+            noc_resource: None,
+            serial_bound: 0,
+            serial_resource: None,
+        }
+    }
+
+    /// Workload bounds sharpened by the concrete program: executed flops
+    /// (≥ compulsory — masked blocks compute before masking) and
+    /// per-resource occupancy sums. Resources are classified by the ops
+    /// they carry: HBM if any op is an HBM access, NoC if any op is a
+    /// fabric collective.
+    pub fn of(arch: &ArchConfig, wl: &Workload, p: &Program) -> Roofline {
+        let mut r = Roofline::from_workload(arch, wl);
+        r.fold_in_program(arch, p);
+        r
+    }
+
+    /// Program-only bounds (no workload): a composed batch program has no
+    /// single `Workload`, but `Program::flops` and the occupancy sums
+    /// still bound its makespan.
+    pub fn from_program(arch: &ArchConfig, p: &Program) -> Roofline {
+        let mut r = Roofline {
+            compute_bound: 0,
+            hbm_bound: 0,
+            hbm_resource: None,
+            noc_bound: 0,
+            noc_resource: None,
+            serial_bound: 0,
+            serial_resource: None,
+        };
+        r.fold_in_program(arch, p);
+        r
+    }
+
+    fn fold_in_program(&mut self, arch: &ArchConfig, p: &Program) {
+        self.compute_bound =
+            self.compute_bound.max(ceil_div(p.flops, arch.peak_flops_per_cycle()));
+        let nr = p.num_resources();
+        let mut occ = vec![0u64; nr];
+        let mut is_hbm = vec![false; nr];
+        let mut is_noc = vec![false; nr];
+        for op in p.ops() {
+            let r = op.resource.0 as usize;
+            occ[r] += op.occupancy;
+            is_hbm[r] |= op.component == Component::HbmAccess;
+            is_noc[r] |= is_fabric_component(op.component);
+        }
+        for r in 0..nr {
+            if occ[r] > self.serial_bound {
+                self.serial_bound = occ[r];
+                self.serial_resource = Some(r as u32);
+            }
+            if is_hbm[r] && occ[r] > self.hbm_bound {
+                self.hbm_bound = occ[r];
+                self.hbm_resource = Some(r as u32);
+            }
+            if is_noc[r] && occ[r] > self.noc_bound {
+                self.noc_bound = occ[r];
+                self.noc_resource = Some(r as u32);
+            }
+        }
+    }
+
+    /// The tightest lower bound.
+    pub fn bound(&self) -> Cycle {
+        self.compute_bound.max(self.hbm_bound).max(self.noc_bound).max(self.serial_bound)
+    }
+
+    /// Cross-check one run: `makespan >= max(bounds)` or a diagnostic
+    /// naming the violated bound and its resource. On success, reports
+    /// utilization = `bound / makespan`.
+    pub fn check(&self, makespan: Cycle) -> Result<RooflineReport, Diagnostic> {
+        let bounds: [(&'static str, Cycle, Option<u32>); 4] = [
+            ("compute", self.compute_bound, None),
+            ("hbm", self.hbm_bound, self.hbm_resource),
+            ("noc", self.noc_bound, self.noc_resource),
+            ("serial", self.serial_bound, self.serial_resource),
+        ];
+        let &(binding, bound, resource) =
+            bounds.iter().max_by_key(|&&(_, b, _)| b).expect("non-empty");
+        if makespan < bound {
+            let on = resource.map_or_else(String::new, |r| format!(" (resource {r})"));
+            return Err(Diagnostic {
+                check: "roofline",
+                message: format!(
+                    "makespan {makespan} below the {binding} lower bound {bound}{on} — \
+                     the simulator finished faster than the hardware could"
+                ),
+            });
+        }
+        Ok(RooflineReport {
+            bound,
+            binding,
+            utilization: if makespan == 0 { 1.0 } else { bound as f64 / makespan as f64 },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::dataflow::{build_program, run, tracked_tile, Dataflow, Workload};
+    use crate::sim::execute;
+
+    #[test]
+    fn bounds_hold_and_name_violations() {
+        let arch = presets::table2(8);
+        let wl = Workload::new(512, 64, 8, 1);
+        let df = Dataflow::Flash2;
+        let group = arch.mesh_x;
+        let mut p = build_program(&arch, &wl, df, group);
+        p.seal();
+        let stats = execute(&p, tracked_tile(&arch, df, group));
+        let rl = Roofline::of(&arch, &wl, &p);
+        assert!(rl.bound() > 0);
+        let rep = rl.check(stats.makespan).expect("bound must hold");
+        assert!(rep.utilization > 0.0 && rep.utilization <= 1.0, "{rep:?}");
+        // A makespan below the bound is flagged and names the bound.
+        let err = rl.check(rl.bound() - 1).expect_err("must violate");
+        assert_eq!(err.check, "roofline");
+        assert!(err.message.contains("lower bound"), "{err:?}");
+    }
+
+    #[test]
+    fn workload_bounds_hold_for_every_dataflow() {
+        let arch = presets::table2(8);
+        let wl = Workload::new(256, 64, 4, 1);
+        for df in crate::dataflow::ALL_DATAFLOWS {
+            let stats = run(&arch, &wl, df, arch.mesh_x);
+            let rl = Roofline::from_workload(&arch, &wl);
+            let rep = rl.check(stats.makespan).unwrap_or_else(|d| panic!("{}: {d}", df.label()));
+            assert!(rep.utilization <= 1.0);
+        }
+    }
+}

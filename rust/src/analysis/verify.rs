@@ -1,0 +1,649 @@
+//! Structural verifier over [`Program`] / [`BatchProgram`] DAGs and
+//! [`FaultPlan`]s — the "proven per program" half of `crate::analysis`
+//! (the module essay states each invariant and why it matters).
+//!
+//! Every check appends [`Diagnostic`]s instead of panicking, so callers
+//! choose the failure mode: `Program::seal` panics through
+//! [`crate::analysis::assert_verified`], `flatattention lint` renders a
+//! table, and tests pin exact defect classes.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use crate::scheduler::BatchProgram;
+use crate::sim::{FaultPlan, Program, NO_TILE, SHARED_SHARD};
+
+/// One verifier finding: a stable defect-class tag (`cycle`,
+/// `shard-leak`, `batch-band-overlap`, ...) plus a message naming the
+/// offending ops/resources.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub check: &'static str,
+    pub message: String,
+}
+
+impl Diagnostic {
+    fn new(check: &'static str, message: String) -> Self {
+        Diagnostic { check, message }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.check, self.message)
+    }
+}
+
+/// Verify one program. Well-formedness and acyclicity always run; the
+/// shard wall and the fold-chain precondition additionally run once the
+/// program is sealed (they audit seal's own derived state).
+pub fn verify_program(p: &Program) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    well_formed(p, &mut diags);
+    if diags.is_empty() {
+        // Later passes index by dep id; skip them on malformed input.
+        acyclic(p, &mut diags);
+        if p.is_sealed() {
+            shard_wall(p, &mut diags);
+            fold_chains(p, &mut diags);
+        }
+    }
+    diags
+}
+
+/// Verify a composed batch program: the underlying DAG plus the entry
+/// span/band geometry the scheduler's composition argument requires.
+pub fn verify_batch(bp: &BatchProgram) -> Vec<Diagnostic> {
+    let mut diags = verify_program(&bp.program);
+    let n = bp.program.num_ops();
+    let mut prev_end = 0usize;
+    for (k, &(start, end)) in bp.spans.iter().enumerate() {
+        if start > end || end > n {
+            diags.push(Diagnostic::new(
+                "batch-span",
+                format!("entry {k} spans ops [{start}, {end}) outside the {n}-op program"),
+            ));
+        } else if start < prev_end {
+            diags.push(Diagnostic::new(
+                "batch-span",
+                format!("entry {k} span [{start}, {end}) overlaps the previous entry"),
+            ));
+        }
+        prev_end = prev_end.max(end);
+    }
+
+    // Disjoint tile bands: a tile may carry ops of at most one entry.
+    // (Channel/bus ops are tile-tagged by their *issuing* tile, so they
+    // participate too — sharing a tile across entries would break the
+    // per-entry completion attribution either way.)
+    let ops = bp.program.ops();
+    let mut owner: HashMap<u32, usize> = HashMap::new();
+    let mut reported: Vec<u32> = Vec::new();
+    for (k, &(start, end)) in bp.spans.iter().enumerate() {
+        if start > end || end > n {
+            continue; // already diagnosed above
+        }
+        for op in &ops[start..end] {
+            if op.tile == NO_TILE {
+                continue;
+            }
+            match owner.insert(op.tile, k) {
+                Some(prev) if prev != k && !reported.contains(&op.tile) => {
+                    reported.push(op.tile);
+                    diags.push(Diagnostic::new(
+                        "batch-band-overlap",
+                        format!("tile {} carries ops of entries {prev} and {k}", op.tile),
+                    ));
+                }
+                _ => {}
+            }
+        }
+    }
+    diags
+}
+
+/// Sanity-check a fault plan against the architecture it will be resolved
+/// on: `channels`/`tiles` are the target's HBM channel and tile counts.
+pub fn verify_fault_plan(plan: &FaultPlan, channels: usize, tiles: usize) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let mut window = |kind: &str, ch: Option<u32>, from: u64, until: u64| {
+        if from >= until {
+            let target = ch.map_or_else(String::new, |c| format!(" on channel {c}"));
+            diags.push(Diagnostic::new(
+                "fault-window",
+                format!("{kind}{target}: window [{from}, {until}) is empty or inverted"),
+            ));
+        }
+    };
+    for o in &plan.outages {
+        window("outage", Some(o.channel), o.from, o.until);
+    }
+    for d in &plan.derates {
+        window("derate", Some(d.channel), d.from, d.until);
+    }
+    for s in &plan.noc {
+        window("NoC slowdown", None, s.from, s.until);
+    }
+
+    for (kind, num, den) in plan
+        .derates
+        .iter()
+        .map(|d| ("derate", d.num, d.den))
+        .chain(plan.noc.iter().map(|s| ("NoC slowdown", s.num, s.den)))
+    {
+        if den == 0 || num < den {
+            diags.push(Diagnostic::new(
+                "fault-ratio",
+                format!("{kind} ratio {num}/{den} must be >= 1 (faults only slow things down)"),
+            ));
+        }
+    }
+
+    for (kind, c) in plan
+        .outages
+        .iter()
+        .map(|o| ("outage", o.channel))
+        .chain(plan.derates.iter().map(|d| ("derate", d.channel)))
+    {
+        if c as usize >= channels {
+            diags.push(Diagnostic::new(
+                "fault-channel",
+                format!("{kind} targets channel {c}, but the architecture has {channels}"),
+            ));
+        }
+    }
+
+    let mut seen: Vec<u32> = Vec::new();
+    for t in &plan.deaths {
+        if t.tile as usize >= tiles {
+            diags.push(Diagnostic::new(
+                "fault-tile",
+                format!("death targets tile {}, but the mesh has {tiles} tiles", t.tile),
+            ));
+        }
+        if seen.contains(&t.tile) {
+            diags.push(Diagnostic::new(
+                "fault-duplicate-death",
+                format!("tile {} dies more than once", t.tile),
+            ));
+        } else {
+            seen.push(t.tile);
+        }
+    }
+    diags
+}
+
+/// Every op names an allocated resource; every dependency record stays
+/// inside the deps pool and points at an existing op.
+fn well_formed(p: &Program, diags: &mut Vec<Diagnostic>) {
+    let n = p.num_ops() as u32;
+    let nr = p.num_resources() as u32;
+    let pool = p.deps_pool.len();
+    for (i, op) in p.ops().iter().enumerate() {
+        if op.resource.0 >= nr {
+            diags.push(Diagnostic::new(
+                "resource-range",
+                format!("op {i} runs on resource {}, but only {nr} were allocated", op.resource.0),
+            ));
+        }
+        let end = op.deps_start as usize + op.deps_len as usize;
+        if end > pool {
+            diags.push(Diagnostic::new(
+                "dangling-dep",
+                format!("op {i} dep record [{}..{end}) runs past the deps pool", op.deps_start),
+            ));
+            continue;
+        }
+        for &d in p.deps_of(op) {
+            if d >= n {
+                diags.push(Diagnostic::new(
+                    "dangling-dep",
+                    format!("op {i} depends on op {d}, past the last op ({})", n - 1),
+                ));
+            }
+        }
+    }
+}
+
+/// Kahn pass: every op must settle; otherwise extract a concrete cycle
+/// witness by walking unsettled deps (any unsettled op has one, and the
+/// walk must revisit an op).
+fn acyclic(p: &Program, diags: &mut Vec<Diagnostic>) {
+    let n = p.num_ops();
+    let ops = p.ops();
+    let mut indeg: Vec<u32> = ops.iter().map(|op| op.deps_len).collect();
+    // Dependents CSR derived from the deps themselves — this pass audits
+    // the sealed CSR rather than trusting it.
+    let mut out_count = vec![0u32; n + 1];
+    for op in ops {
+        for &d in p.deps_of(op) {
+            out_count[d as usize + 1] += 1;
+        }
+    }
+    for i in 0..n {
+        out_count[i + 1] += out_count[i];
+    }
+    let mut out_edges = vec![0u32; *out_count.last().unwrap_or(&0) as usize];
+    let mut cursor = out_count.clone();
+    for (i, op) in ops.iter().enumerate() {
+        for &d in p.deps_of(op) {
+            out_edges[cursor[d as usize] as usize] = i as u32;
+            cursor[d as usize] += 1;
+        }
+    }
+
+    let mut stack: Vec<u32> =
+        indeg.iter().enumerate().filter(|&(_, &d)| d == 0).map(|(i, _)| i as u32).collect();
+    let mut settled = 0usize;
+    while let Some(i) = stack.pop() {
+        settled += 1;
+        for &j in &out_edges[out_count[i as usize] as usize..out_count[i as usize + 1] as usize] {
+            indeg[j as usize] -= 1;
+            if indeg[j as usize] == 0 {
+                stack.push(j);
+            }
+        }
+    }
+    if settled == n {
+        return;
+    }
+
+    // Witness: from any unsettled op, repeatedly step to an unsettled dep
+    // until an op repeats; the slice from its first visit is a cycle.
+    let start = indeg.iter().position(|&d| d > 0).expect("unsettled op exists") as u32;
+    let mut path: Vec<u32> = vec![start];
+    let mut pos: HashMap<u32, usize> = HashMap::from([(start, 0)]);
+    let cycle = loop {
+        let cur = *path.last().unwrap();
+        let next = p.deps_of(&ops[cur as usize])
+            .iter()
+            .copied()
+            .find(|&d| indeg[d as usize] > 0)
+            .expect("unsettled op has an unsettled dep");
+        if let Some(&at) = pos.get(&next) {
+            break &path[at..];
+        }
+        pos.insert(next, path.len());
+        path.push(next);
+    };
+    let mut names: Vec<String> = cycle
+        .iter()
+        .take(8)
+        .map(|&i| format!("op {i} (resource {})", ops[i as usize].resource.0))
+        .collect();
+    if cycle.len() > 8 {
+        names.push(format!("... {} more", cycle.len() - 8));
+    }
+    diags.push(Diagnostic::new(
+        "cycle",
+        format!(
+            "dependency cycle of {} ops ({} ops never settle): {}",
+            cycle.len(),
+            n - settled,
+            names.join(" -> ")
+        ),
+    ));
+}
+
+/// The shard-partition wall the parallel executor's bit-identity rests
+/// on (promoted from `tests/parallel_differential.rs`; see the module
+/// essay for the invariant list).
+fn shard_wall(p: &Program, diags: &mut Vec<Diagnostic>) {
+    let n = p.num_ops();
+    let shard_of = p.op_shards();
+    let n_shards = p.num_shards();
+    if shard_of.len() != n {
+        diags.push(Diagnostic::new(
+            "shard-partition",
+            format!("shard map covers {} ops, program has {n}", shard_of.len()),
+        ));
+        return;
+    }
+    if let Some((i, &s)) = shard_of.iter().enumerate().find(|&(_, &s)| s as usize >= n_shards) {
+        diags.push(Diagnostic::new(
+            "shard-partition",
+            format!("op {i} mapped to shard {s}, but only {n_shards} shards exist"),
+        ));
+        return;
+    }
+
+    // The CSR partitions 0..n: each op listed exactly once, ascending,
+    // in the shard the per-op map names.
+    let mut seen = vec![false; n];
+    for s in 0..n_shards as u32 {
+        let mut prev: Option<u32> = None;
+        for &i in p.shard_op_list(s) {
+            let iu = i as usize;
+            if iu >= n || seen[iu] {
+                diags.push(Diagnostic::new(
+                    "shard-partition",
+                    format!("shard {s} lists op {i} out of range or twice"),
+                ));
+                return;
+            }
+            seen[iu] = true;
+            if shard_of[iu] != s {
+                diags.push(Diagnostic::new(
+                    "shard-partition",
+                    format!("op {i} listed in shard {s} but mapped to shard {}", shard_of[iu]),
+                ));
+            }
+            if prev.is_some_and(|pr| pr >= i) {
+                diags.push(Diagnostic::new(
+                    "shard-partition",
+                    format!("shard {s} op list not ascending at op {i}"),
+                ));
+            }
+            prev = Some(i);
+        }
+    }
+    if let Some(i) = seen.iter().position(|&b| !b) {
+        diags.push(Diagnostic::new(
+            "shard-partition",
+            format!("op {i} (shard {}) missing from every shard's op list", shard_of[i]),
+        ));
+    }
+
+    // Resources never span shards; contended resources (>= 2 distinct
+    // owner tiles) live in the shared shard; the per-resource owner
+    // table agrees with the ops.
+    let nr = p.num_resources();
+    let ops = p.ops();
+    let mut res_first_shard = vec![u32::MAX; nr];
+    let mut res_first_tile: Vec<Option<u32>> = vec![None; nr];
+    let mut res_reported = vec![false; nr];
+    for (i, op) in ops.iter().enumerate() {
+        let r = op.resource.0 as usize;
+        let s = shard_of[i];
+        if res_first_shard[r] == u32::MAX {
+            res_first_shard[r] = s;
+        } else if res_first_shard[r] != s && !res_reported[r] {
+            res_reported[r] = true;
+            diags.push(Diagnostic::new(
+                "shard-resource-span",
+                format!(
+                    "resource {r} has ops in shard {} and shard {s} (op {i})",
+                    res_first_shard[r]
+                ),
+            ));
+        }
+        match res_first_tile[r] {
+            None => res_first_tile[r] = Some(op.tile),
+            Some(t) if t != op.tile && res_first_shard[r] != SHARED_SHARD && !res_reported[r] => {
+                res_reported[r] = true;
+                diags.push(Diagnostic::new(
+                    "shard-leak",
+                    format!(
+                        "contended resource {r} (tiles {t} and {}) lives in private shard {}",
+                        op.tile, res_first_shard[r]
+                    ),
+                ));
+            }
+            _ => {}
+        }
+    }
+    let res_shards = p.resource_shards();
+    for r in 0..nr {
+        if res_first_shard[r] != u32::MAX && res_shards[r] != res_first_shard[r] {
+            diags.push(Diagnostic::new(
+                "shard-partition",
+                format!(
+                    "resource {r} owner table says shard {}, its ops sit in shard {}",
+                    res_shards[r], res_first_shard[r]
+                ),
+            ));
+        }
+    }
+
+    // Every cross-shard dependency edge touches the shared shard.
+    for (i, op) in ops.iter().enumerate() {
+        let si = shard_of[i];
+        for &d in p.deps_of(op) {
+            let sd = shard_of[d as usize];
+            if si != sd && si != SHARED_SHARD && sd != SHARED_SHARD {
+                diags.push(Diagnostic::new(
+                    "shard-cross-edge",
+                    format!("private->private edge op {d} (shard {sd}) -> op {i} (shard {si})"),
+                ));
+                return; // one witness is enough; these cascade
+            }
+        }
+    }
+}
+
+/// Fold-exactness precondition on programs that actually folded: on
+/// every private resource, each op transitively depends on the previous
+/// op on that resource, so FIFO order equals dependency order and the
+/// chain can never resource-block (module essay, "fold-chain").
+fn fold_chains(p: &Program, diags: &mut Vec<Diagnostic>) {
+    if p.fold.ops == 0 {
+        return;
+    }
+    let res_shards = p.resource_shards();
+    let ops = p.ops();
+    let mut last = vec![u32::MAX; p.num_resources()];
+    // Epoch-stamped visited set reused across the (op, prev-op) queries.
+    let mut visited = vec![0u32; p.num_ops()];
+    let mut epoch = 0u32;
+    let mut stack: Vec<u32> = Vec::new();
+    for (i, op) in ops.iter().enumerate() {
+        let r = op.resource.0 as usize;
+        if res_shards[r] == SHARED_SHARD {
+            continue; // shared resources simulate verbatim; FIFO contention is the model
+        }
+        let prev = last[r];
+        last[r] = i as u32;
+        if prev == u32::MAX {
+            continue;
+        }
+        // Backward reachability i -> prev. Deps point at strictly smaller
+        // ids, so the search stays within (prev, i] and terminates.
+        epoch += 1;
+        stack.clear();
+        stack.push(i as u32);
+        let mut found = false;
+        while let Some(cur) = stack.pop() {
+            for &d in p.deps_of(&ops[cur as usize]) {
+                if d == prev {
+                    found = true;
+                    stack.clear();
+                    break;
+                }
+                if d > prev && visited[d as usize] != epoch {
+                    visited[d as usize] = epoch;
+                    stack.push(d);
+                }
+            }
+        }
+        if !found {
+            diags.push(Diagnostic::new(
+                "fold-chain",
+                format!(
+                    "private resource {r}: op {i} has no dependency path to op {prev}, the \
+                     previous op on the resource — the chain can resource-block and folding \
+                     would not be exact"
+                ),
+            ));
+            return; // one witness; a broken builder repeats this per block
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{Component, Op, ResourceId};
+
+    fn two_op_chain() -> Program {
+        let mut p = Program::new();
+        let r = p.resource();
+        let a = p.op(r, 4, 0, Component::Other, 0, 0, &[]);
+        let _b = p.op(r, 4, 0, Component::Other, 0, 0, &[a]);
+        p
+    }
+
+    #[test]
+    fn clean_program_verifies() {
+        let mut p = two_op_chain();
+        assert!(verify_program(&p).is_empty());
+        p.seal();
+        assert!(verify_program(&p).is_empty());
+    }
+
+    #[test]
+    fn cycle_is_named_with_its_ops() {
+        // `Program::op` cannot express a cycle; corrupt the pools directly
+        // (op 0 <-> op 1) the way `sim::engine`'s cycle tests do.
+        let mut p = Program::new();
+        let r = p.resource();
+        let proto = |deps_start: u32| Op {
+            resource: r,
+            occupancy: 1,
+            latency: 0,
+            component: Component::Other,
+            tile: NO_TILE,
+            hbm_bytes: 0,
+            deps_start,
+            deps_len: 1,
+        };
+        p.deps_pool.push(1);
+        p.ops.push(proto(0));
+        p.deps_pool.push(0);
+        p.ops.push(proto(1));
+        let diags = verify_program(&p);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].check, "cycle");
+        assert!(diags[0].message.contains("op 0") && diags[0].message.contains("op 1"));
+    }
+
+    #[test]
+    fn dangling_dep_and_bad_resource_are_named() {
+        let mut p = two_op_chain();
+        p.ops[1].deps_start = 0;
+        p.ops[1].deps_len = 2; // runs past the 1-entry pool
+        p.ops[0].resource = ResourceId(7);
+        let diags = verify_program(&p);
+        let checks: Vec<_> = diags.iter().map(|d| d.check).collect();
+        assert!(checks.contains(&"dangling-dep"), "{diags:?}");
+        assert!(checks.contains(&"resource-range"), "{diags:?}");
+    }
+
+    #[test]
+    fn shard_leak_is_named() {
+        // Two tiles on one engine resource is a contended resource; force
+        // it into a private shard by tampering with the sealed state.
+        let mut p = Program::new();
+        let r = p.resource();
+        let a = p.op(r, 1, 0, Component::RedMule, 0, 0, &[]);
+        let _ = p.op(r, 1, 0, Component::RedMule, 1, 0, &[a]);
+        p.seal();
+        assert!(verify_program(&p).is_empty());
+        // Corrupt: pretend the resource's ops live in a private shard 1.
+        for s in p.shard_of.iter_mut() {
+            *s = 1;
+        }
+        p.shard_start = vec![0, 0, 2];
+        p.res_shard[0] = 1;
+        let diags = verify_program(&p);
+        assert!(diags.iter().any(|d| d.check == "shard-leak"), "{diags:?}");
+    }
+
+    #[test]
+    fn private_private_cross_edge_is_named() {
+        // Two genuinely private single-tile chains with a dependency
+        // between them: seal unions them into ONE shard (correct). Tamper
+        // the map to split them so the edge crosses two private shards.
+        let mut p = Program::new();
+        let r0 = p.resource();
+        let r1 = p.resource();
+        let a = p.op(r0, 1, 0, Component::RedMule, 0, 0, &[]);
+        let _b = p.op(r1, 1, 0, Component::RedMule, 1, 0, &[a]);
+        p.seal();
+        assert!(verify_program(&p).is_empty());
+        p.shard_of = vec![1, 2];
+        p.shard_start = vec![0, 0, 1, 2];
+        p.shard_ops = vec![0, 1];
+        p.res_shard = vec![1, 2];
+        let diags = verify_program(&p);
+        assert!(diags.iter().any(|d| d.check == "shard-cross-edge"), "{diags:?}");
+    }
+
+    #[test]
+    fn broken_fold_chain_is_named() {
+        // Two ops on one private resource with no dependency between
+        // them, on a program claiming folded work.
+        let mut p = Program::new();
+        let r = p.resource();
+        let _a = p.op(r, 4, 0, Component::RedMule, 0, 0, &[]);
+        let _b = p.op(r, 4, 0, Component::RedMule, 0, 0, &[]);
+        p.fold.ops = 1;
+        p.seal();
+        let diags = verify_program(&p);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].check, "fold-chain");
+        // The same shape without folding is legal (FIFO handles it).
+        p.fold.ops = 0;
+        assert!(verify_program(&p).is_empty());
+    }
+
+    #[test]
+    fn fold_chain_accepts_transitive_paths() {
+        // redmule -> spatz -> redmule: consecutive RedMulE ops are linked
+        // through the Spatz op, not directly.
+        let mut p = Program::new();
+        let rm = p.resource();
+        let sp = p.resource();
+        let a = p.op(rm, 4, 0, Component::RedMule, 0, 0, &[]);
+        let s = p.op(sp, 2, 0, Component::Spatz, 0, 0, &[a]);
+        let _b = p.op(rm, 4, 0, Component::RedMule, 0, 0, &[s]);
+        p.fold.ops = 1;
+        p.seal();
+        assert!(verify_program(&p).is_empty());
+    }
+
+    #[test]
+    fn batch_span_and_band_overlap_are_named() {
+        let mut p = Program::new();
+        let r0 = p.resource();
+        let r1 = p.resource();
+        let _ = p.op(r0, 1, 0, Component::RedMule, 3, 0, &[]);
+        let _ = p.op(r1, 1, 0, Component::RedMule, 3, 0, &[]);
+        p.seal();
+        let bp = BatchProgram { program: p, spans: vec![(0, 1), (1, 2)] };
+        // Both entries' ops sit on tile 3: band overlap.
+        let diags = verify_batch(&bp);
+        assert!(diags.iter().any(|d| d.check == "batch-band-overlap"), "{diags:?}");
+        // Overlapping spans are a distinct defect class.
+        let bp = BatchProgram { program: bp.program, spans: vec![(0, 2), (1, 2)] };
+        let diags = verify_batch(&bp);
+        assert!(diags.iter().any(|d| d.check == "batch-span"), "{diags:?}");
+    }
+
+    #[test]
+    fn fault_plan_defects_are_named() {
+        let plan = FaultPlan {
+            outages: vec![crate::sim::fault::ChannelOutage { channel: 9, from: 10, until: 10 }],
+            derates: vec![crate::sim::fault::ChannelDerate {
+                channel: 0,
+                from: 0,
+                until: 100,
+                num: 1,
+                den: 2,
+            }],
+            noc: vec![],
+            deaths: vec![
+                crate::sim::fault::TileDeath { tile: 64, at: 5 },
+                crate::sim::fault::TileDeath { tile: 3, at: 5 },
+                crate::sim::fault::TileDeath { tile: 3, at: 9 },
+            ],
+        };
+        let diags = verify_fault_plan(&plan, 8, 64);
+        let checks: Vec<_> = diags.iter().map(|d| d.check).collect();
+        for want in
+            ["fault-window", "fault-ratio", "fault-channel", "fault-tile", "fault-duplicate-death"]
+        {
+            assert!(checks.contains(&want), "missing {want} in {diags:?}");
+        }
+        assert!(verify_fault_plan(&FaultPlan::none(), 8, 64).is_empty());
+    }
+}

@@ -512,10 +512,12 @@ fn build_program_into(
             flat::flat_program_ext_in(prog, &a, wl, group, true, true)
         }
     };
+    // §Analysis: the full structural verifier (well-formedness,
+    // acyclicity with a cycle witness — strictly stronger than the old
+    // `Program::validate` check) runs here on every debug build; sealing
+    // re-runs it with the shard-wall and fold-chain passes added.
     #[cfg(debug_assertions)]
-    if let Err(e) = prog.validate() {
-        panic!("build_program produced an invalid DAG for {df:?}: {e}");
-    }
+    crate::analysis::assert_verified(&prog);
     prog
 }
 

@@ -8,6 +8,7 @@
 //! FlashAttention dataflow family, the NoC fabric collective primitives
 //! co-design, and the paper's complete evaluation harness.
 
+pub mod analysis;
 pub mod arch;
 pub mod sim;
 pub mod noc;

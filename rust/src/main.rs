@@ -36,7 +36,10 @@ use flatattention::util::{pool, Rng, Tensor};
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match parse(&raw, &["quick", "help", "pjrt-only", "causal", "decode", "static"]) {
+    let args = match parse(
+        &raw,
+        &["quick", "help", "pjrt-only", "causal", "decode", "static", "verify"],
+    ) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}");
@@ -47,6 +50,11 @@ fn main() {
         print_usage();
         return;
     }
+    // --verify: re-run the structural verifier on every sealed program in
+    // release builds too (debug builds always verify at seal time).
+    if args.flag("verify") {
+        flatattention::analysis::set_release_verify(true);
+    }
     let cmd = args.positional[0].clone();
     let code = match cmd.as_str() {
         "report" => cmd_report(&args),
@@ -54,6 +62,7 @@ fn main() {
         "sweep" => cmd_sweep(&args),
         "schedule" => cmd_schedule(&args),
         "validate" => cmd_validate(&args),
+        "lint" => cmd_lint(&args),
         "trace" => cmd_trace(&args),
         "info" => cmd_info(),
         other => {
@@ -88,8 +97,15 @@ USAGE:
                       SPEC: ';'-separated off:CH@F-U | slow:CH@F-UxN[/D] | noc@F-UxN[/D]
                       | die:TILE@AT  (e.g. \"slow:8@0-4000000x4;die:60@1200000\")
   flatattention validate [--seq 256] [--d 64] [--group 4] [--pjrt-only]
+  flatattention lint   [--quick]   (structural verifier + roofline cross-check sweep:
+                      dataflows x presets x fold modes x paged batches x fault plans)
   flatattention trace  [run options] [--tiles 64] --out trace.json   (chrome://tracing)
   flatattention info
+
+Global: --verify   re-run the structural program verifier on every sealed
+                   program in release builds (debug builds always verify);
+                   `run --verify` also cross-checks the makespan against the
+                   analytical roofline lower bounds
 
 Architectures: --arch <table1|swcoll|table2-32|table2-16|table2-8> or --arch-file configs/foo.toml
 Workloads: --seq S --d D --heads H --batch B [--causal] [--kv-heads K] [--decode] [--window W]
@@ -257,6 +273,32 @@ fn cmd_run(args: &Args) -> i32 {
         r.tflops
     );
     println!("breakdown: {}", r.breakdown.to_json().to_string());
+    if args.flag("verify") {
+        // Cross-check the reported makespan against the analytical roofline
+        // (run_one memoizes stats only, so rebuild the program for the
+        // occupancy-sum bounds). Tile deaths remove work and invalidate the
+        // lower bounds, so an active killing fault plan skips the check —
+        // see the `analysis` module essay.
+        let kills =
+            flatattention::coordinator::fault_plan().is_some_and(|p| !p.deaths.is_empty());
+        if kills {
+            println!("roofline: skipped (active fault plan kills tiles)");
+        } else {
+            let mut p =
+                flatattention::dataflow::build_program(&arch, &workload, dataflow, group);
+            p.seal();
+            let rl = flatattention::analysis::Roofline::of(&arch, &workload, &p);
+            match rl.check(r.makespan) {
+                Ok(rep) => println!(
+                    "roofline: {} bound {} cycles, utilization {:.1}%",
+                    rep.binding,
+                    rep.bound,
+                    rep.utilization * 100.0
+                ),
+                Err(d) => return fail(&d.to_string()),
+            }
+        }
+    }
     0
 }
 
@@ -598,6 +640,163 @@ fn validate_pjrt(
          rust/Cargo.toml [dependencies] and rebuild with `--features pjrt`",
         dir.display()
     );
+    0
+}
+
+/// `flatattention lint` — sweep the structural verifier and roofline
+/// cross-checker over dataflows × presets × fold modes, paged batch
+/// composition and fault plans, printing one pass/fail row per case.
+/// Exits non-zero if any case fails.
+fn cmd_lint(args: &Args) -> i32 {
+    use flatattention::analysis::{verify_batch, verify_fault_plan, verify_program, Roofline};
+    use flatattention::dataflow::{
+        build_program, run_faulted, set_symmetry_folding, symmetry_folding, tracked_tile,
+        ALL_DATAFLOWS,
+    };
+    use flatattention::hbm::PageMap;
+    use flatattention::scheduler::{compose, BatchEntry};
+    use flatattention::sim::execute;
+
+    let quick = args.flag("quick");
+    // Each row is (case label, Ok(roofline utilization if computed) | Err(first diagnostic)).
+    let mut rows: Vec<(String, Result<Option<f64>, String>)> = Vec::new();
+
+    // Solo programs: presets × dataflows × folding.
+    let presets_list: Vec<(&str, ArchConfig)> = if quick {
+        vec![("table2-8", presets::table2(8))]
+    } else {
+        vec![("table2-8", presets::table2(8)), ("table1", presets::table1())]
+    };
+    let prev_folding = symmetry_folding();
+    for (pname, arch) in &presets_list {
+        let wl = Workload::new(32 * arch.mesh_y as u64, 64, 8, 1).with_causal(true);
+        let group = arch.mesh_x;
+        for df in ALL_DATAFLOWS {
+            for fold in [true, false] {
+                set_symmetry_folding(fold);
+                let label = format!(
+                    "{pname:<9} {:<9} fold={} solo",
+                    df.label(),
+                    if fold { "on " } else { "off" }
+                );
+                let mut p = build_program(arch, &wl, df, group);
+                p.seal();
+                if let Some(d) = verify_program(&p).first() {
+                    rows.push((label, Err(d.to_string())));
+                    continue;
+                }
+                let stats = execute(&p, tracked_tile(arch, df, group));
+                match Roofline::of(arch, &wl, &p).check(stats.makespan) {
+                    Ok(rep) => rows.push((label, Ok(Some(rep.utilization)))),
+                    Err(d) => rows.push((label, Err(d.to_string()))),
+                }
+            }
+        }
+    }
+    set_symmetry_folding(prev_folding);
+
+    // Paged batch composition: two requests on disjoint tile bands
+    // (chunked prefill + GQA decode), verified as a batch and roofline-
+    // checked program-level (a composed batch has no single workload).
+    let arch = presets::table2(8);
+    let nch = arch.hbm.total_channels() as u64;
+    let mut pm0 = PageMap::new(64);
+    pm0.grow_to(256, |i| (i % nch) as u32);
+    let mut pm1 = PageMap::new(64);
+    pm1.grow_to(300, |i| ((i + 1) % nch) as u32);
+    let entries = vec![
+        BatchEntry {
+            request: 0,
+            slot: 0,
+            workload: Workload::new(128, 64, 4, 1).with_causal(true).with_kv_prefix(128),
+            pages: &pm0,
+        },
+        BatchEntry {
+            request: 1,
+            slot: 2,
+            workload: Workload::new(300, 64, 4, 1).with_kv_heads(2).decode(),
+            pages: &pm1,
+        },
+    ];
+    for df in ALL_DATAFLOWS {
+        let label = format!("table2-8  {:<9} paged batch", df.label());
+        let bp = compose(&arch, df, 2, 4, &entries);
+        if let Some(d) = verify_batch(&bp).first() {
+            rows.push((label, Err(d.to_string())));
+            continue;
+        }
+        let (stats, _) = bp.entry_stats();
+        match Roofline::from_program(&arch, &bp.program).check(stats.makespan) {
+            Ok(rep) => rows.push((label, Ok(Some(rep.utilization)))),
+            Err(d) => rows.push((label, Err(d.to_string()))),
+        }
+    }
+
+    // Fault plans: sanity-check the plan itself, then confirm slow-only
+    // faults (stretch, never remove work) still satisfy the fault-free
+    // workload bounds. Killing plans are excluded from roofline checks.
+    let channels = arch.hbm.total_channels();
+    let tiles = arch.num_tiles();
+    let fwl = Workload::new(256, 64, 8, 1).with_causal(true);
+    let plans = [
+        ("slow+noc", "slow:3@0-400000x2;noc@0-200000x3/2"),
+        ("outage", "off:1@1000-30000"),
+    ];
+    for (name, spec) in plans {
+        let label = format!("table2-8  fault plan '{name}'");
+        let plan = match FaultPlan::parse(spec) {
+            Ok(p) => p,
+            Err(e) => {
+                rows.push((label, Err(format!("parse: {e}"))));
+                continue;
+            }
+        };
+        if let Some(d) = verify_fault_plan(&plan, channels, tiles).first() {
+            rows.push((label, Err(d.to_string())));
+            continue;
+        }
+        let (stats, _report) =
+            run_faulted(&arch, &fwl, Dataflow::FlatAsyn, arch.mesh_x, 1, &plan);
+        match Roofline::from_workload(&arch, &fwl).check(stats.makespan) {
+            Ok(rep) => rows.push((label, Ok(Some(rep.utilization)))),
+            Err(d) => rows.push((label, Err(d.to_string()))),
+        }
+    }
+    // A malformed plan must produce diagnostics (negative control).
+    let mut bad = FaultPlan::none();
+    bad.outages.push(flatattention::sim::fault::ChannelOutage {
+        channel: 999,
+        from: 10,
+        until: 5,
+    });
+    let caught = !verify_fault_plan(&bad, channels, tiles).is_empty();
+    rows.push((
+        "table2-8  fault plan 'malformed' rejected".to_string(),
+        if caught {
+            Ok(None)
+        } else {
+            Err("verifier accepted an out-of-range, inverted outage window".to_string())
+        },
+    ));
+
+    println!("flatattention lint — structural verifier + roofline cross-check");
+    println!("{:<44} {:>9}  result", "case", "roofline");
+    let mut failures = 0usize;
+    for (label, res) in &rows {
+        match res {
+            Ok(Some(u)) => println!("{label:<44} {:>8.1}%  PASS", u * 100.0),
+            Ok(None) => println!("{label:<44} {:>9}  PASS", "-"),
+            Err(msg) => {
+                failures += 1;
+                println!("{label:<44} {:>9}  FAIL  {msg}", "-");
+            }
+        }
+    }
+    if failures > 0 {
+        eprintln!("lint: {failures} of {} case(s) failed", rows.len());
+        return 1;
+    }
+    println!("lint: all {} case(s) passed", rows.len());
     0
 }
 

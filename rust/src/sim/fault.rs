@@ -309,10 +309,17 @@ impl FaultPlan {
                 let (tile, at) = rest
                     .split_once('@')
                     .ok_or_else(|| format!("fault clause '{clause}': expected die:TILE@AT"))?;
-                plan.deaths.push(TileDeath {
-                    tile: num("tile", tile)? as u32,
-                    at: num("at", at)?,
-                });
+                let tile = num("tile", tile)? as u32;
+                // Two deaths for one tile are ambiguous in a CLI spec
+                // (resolve() would quietly take the earlier one) — reject
+                // rather than guess the user's intent.
+                if plan.deaths.iter().any(|d| d.tile == tile) {
+                    return Err(format!(
+                        "fault clause '{clause}': duplicate death for tile {tile} \
+                         (each tile may die at most once)"
+                    ));
+                }
+                plan.deaths.push(TileDeath { tile, at: num("at", at)? });
             } else {
                 return Err(format!(
                     "fault clause '{clause}': unknown kind (expected off:/slow:/noc@/die:)"
@@ -481,6 +488,22 @@ mod tests {
         assert!(e.contains("factor"), "{e}");
         let e = FaultPlan::parse("boom:1@2-3").unwrap_err();
         assert!(e.contains("unknown kind"), "{e}");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_and_duplicate_clauses() {
+        // slow: with no @window at all.
+        let e = FaultPlan::parse("slow:3x2").unwrap_err();
+        assert!(e.contains("expected slow:CH@FROM-UNTILxN"), "{e}");
+        // Non-numeric channel on an outage clause.
+        let e = FaultPlan::parse("off:ch@0-10").unwrap_err();
+        assert!(e.contains("channel") && e.contains("'ch'"), "{e}");
+        // Duplicate kill specs for one tile are rejected, not silently
+        // collapsed; distinct tiles stay fine.
+        let e = FaultPlan::parse("die:60@100;die:60@200").unwrap_err();
+        assert!(e.contains("duplicate death for tile 60"), "{e}");
+        let plan = FaultPlan::parse("die:60@100;die:61@200").expect("distinct tiles ok");
+        assert_eq!(plan.deaths.len(), 2);
     }
 
     #[test]

@@ -138,7 +138,7 @@ pub use engine::{
     execute_traced,
 };
 pub use fault::{FaultPlan, FaultReport};
-pub use program::{FoldStats, Op, OpId, Program, ResourceId, SHARED_SHARD};
+pub use program::{FoldStats, Op, OpId, Program, ResourceId, NO_TILE, SHARED_SHARD};
 pub use queue::EventQueue;
 pub use reference::{execute_reference, execute_reference_traced};
 

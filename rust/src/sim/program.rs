@@ -288,8 +288,11 @@ impl Program {
     /// differences afterwards. Returns the index of the first stamped op.
     pub fn stamp_range(&mut self, src_start: u32, src_len: u32, ext_dep: OpId) -> u32 {
         let new_base = self.ops.len() as u32;
-        debug_assert!(src_start + src_len <= new_base, "source range out of bounds");
-        debug_assert!(ext_dep.0 < new_base, "external dep must already exist");
+        // Real asserts (not debug): a bad stamp range copies garbage deps
+        // that the release build would then simulate silently — the same
+        // release-critical class as `EventQueue::push` monotonicity.
+        assert!(src_start + src_len <= new_base, "stamp_range: source range out of bounds");
+        assert!(ext_dep.0 < new_base, "stamp_range: external dep must already exist");
         let delta = new_base - src_start;
         self.sealed = false;
         self.ops.reserve(src_len as usize);
@@ -356,6 +359,13 @@ impl Program {
         self.res_dense = res_dense;
         self.shard_res_count = shard_res_count;
         self.sealed = true;
+
+        // §Analysis: every sealed program re-verifies its own invariants
+        // (acyclicity, shard wall, fold-chain precondition) in debug
+        // builds, and in release builds under the CLI's `--verify` flag.
+        if cfg!(debug_assertions) || crate::analysis::release_verify() {
+            crate::analysis::assert_verified(self);
+        }
     }
 
     /// Partition the DAG into event-loop shards (§Shard on [`Program`]).
@@ -505,6 +515,10 @@ impl Program {
                 res_dense[r] = shard_res_count[s as usize];
                 shard_res_count[s as usize] += 1;
             } else {
+                // Routed through the verifier: `crate::analysis`'s
+                // shard-resource-span check re-proves this on every seal
+                // (debug builds and `--verify` release runs), with a
+                // diagnostic naming the resource and both shards.
                 debug_assert_eq!(res_shard[r], shard_of[i], "resource {r} spans shards");
             }
         }
@@ -741,6 +755,27 @@ mod tests {
         assert_eq!(ops[4].latency, 2);
         assert_eq!(p.deps_of(&ops[4]), &[3]); // internal, offset by delta
         assert!(p.validate().is_ok());
+    }
+
+    // Regression for the promoted (release-mode) stamp_range asserts: an
+    // out-of-bounds source range must panic in every build profile, not
+    // copy garbage dependencies that only a debug build would catch.
+    #[test]
+    #[should_panic(expected = "stamp_range: source range out of bounds")]
+    fn stamp_range_rejects_out_of_bounds_source() {
+        let mut p = Program::new();
+        let r = p.resource();
+        let a = p.op(r, 1, 0, Component::Other, NO_TILE, 0, &[]);
+        let _ = p.stamp_range(a.0, 2, a); // only 1 op exists
+    }
+
+    #[test]
+    #[should_panic(expected = "stamp_range: external dep must already exist")]
+    fn stamp_range_rejects_future_external_dep() {
+        let mut p = Program::new();
+        let r = p.resource();
+        let a = p.op(r, 1, 0, Component::Other, NO_TILE, 0, &[]);
+        let _ = p.stamp_range(a.0, 1, OpId(7)); // dep id past the ops built so far
     }
 
     #[test]

@@ -56,77 +56,19 @@ fn thread_counts() -> Vec<usize> {
 /// resource used by exactly one shard, contended resources (ops from ≥ 2
 /// distinct tiles) all in the shared shard, and no private-to-private
 /// dependency edge crossing shards — the invariants `execute_parallel`'s
-/// exactness argument rests on.
+/// exactness argument rests on. The wall itself now lives in product
+/// code (`analysis::verify_program`, run at every seal in debug builds);
+/// this wrapper pins that the checker stays wired up and clean on every
+/// program shape this suite builds.
 fn assert_shard_wall(p: &Program, label: &str) {
     assert!(p.is_sealed(), "{label}: wall needs a sealed program");
-    let n = p.num_ops();
-    let shards = p.op_shards();
-    assert_eq!(shards.len(), n, "{label}: shard map covers every op");
-    let k = p.num_shards();
-    assert!(k >= 1, "{label}: the shared shard always exists");
-
-    // The shard CSR partitions 0..n, ascending within each shard.
-    let mut seen = vec![false; n];
-    for s in 0..k {
-        let mut prev: Option<u32> = None;
-        for &op in p.shard_op_list(s as u32) {
-            assert_eq!(shards[op as usize], s as u32, "{label}: op {op} listed in wrong shard");
-            assert!(!seen[op as usize], "{label}: op {op} listed twice");
-            seen[op as usize] = true;
-            if let Some(pv) = prev {
-                assert!(op > pv, "{label}: shard {s} op list not ascending");
-            }
-            prev = Some(op);
-        }
-    }
-    assert!(seen.iter().all(|&b| b), "{label}: every op in exactly one shard");
-
-    // Resources never span shards; multi-tile (contended) resources live
-    // in the shared shard.
-    let ops = p.ops();
-    let nr = p.num_resources();
-    let mut res_shard: Vec<Option<u32>> = vec![None; nr];
-    let mut res_tile: Vec<Option<u32>> = vec![None; nr];
-    let mut res_multi: Vec<bool> = vec![false; nr];
-    for (i, op) in ops.iter().enumerate() {
-        let r = op.resource.0 as usize;
-        match res_shard[r] {
-            None => res_shard[r] = Some(shards[i]),
-            Some(s) => assert_eq!(s, shards[i], "{label}: resource {r} spans shards"),
-        }
-        match res_tile[r] {
-            None => res_tile[r] = Some(op.tile),
-            Some(t) if t != op.tile => res_multi[r] = true,
-            _ => {}
-        }
-    }
-    for (r, &multi) in res_multi.iter().enumerate() {
-        if multi {
-            assert_eq!(
-                res_shard[r],
-                Some(SHARED_SHARD),
-                "{label}: contended resource {r} outside the shared shard"
-            );
-        }
-    }
-    for (r, &s) in p.resource_shards().iter().enumerate() {
-        assert_eq!(
-            res_shard[r].unwrap_or(u32::MAX),
-            s,
-            "{label}: recorded owner of resource {r} disagrees"
-        );
-    }
-
-    // Cross-shard dependency edges always touch the shared shard.
-    for (i, op) in ops.iter().enumerate() {
-        for &d in p.deps_of(op) {
-            let (a, b) = (shards[i], shards[d as usize]);
-            assert!(
-                a == b || a == SHARED_SHARD || b == SHARED_SHARD,
-                "{label}: private edge {d}->{i} crosses shards {b}->{a}"
-            );
-        }
-    }
+    let diags = flatattention::analysis::verify_program(p);
+    assert!(
+        diags.is_empty(),
+        "{label}: verifier reported {} diagnostic(s):\n  {}",
+        diags.len(),
+        diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n  ")
+    );
 }
 
 /// Assert parallel == serial (stats + full trace) at every thread count.

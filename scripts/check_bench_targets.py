@@ -22,6 +22,12 @@ Targets (mirroring the asserts/WARNINGs inside the bench harnesses):
                   degraded_over_faultfree_tokens_per_s >= 0.6 (router keeps
                                          most throughput with 1/8 of the
                                          HBM channels at half bandwidth)
+  all three       roofline_utilization   in (0, 1.0]: the analytical lower
+                                         bound (analysis::Roofline) never
+                                         exceeds the simulated run time —
+                                         utilization above 1.0 means the
+                                         simulator beat the hardware's
+                                         roofline, i.e. a modeling bug
 
 Exits non-zero listing every violated target; placeholder files (empty
 "metrics") fail loudly — the point of the CI job is that the benches RAN.
@@ -92,6 +98,14 @@ if sch:
     for k in rows:
         require("schedule_sweep", sch, k, lo=1.5)
     require("schedule_sweep", sch, "degraded_over_faultfree_tokens_per_s", lo=0.6)
+
+# Roofline soundness: every bench records its utilization against the
+# analytical lower bound; > 1.0 would mean the simulated run undercut the
+# roofline (the benches also assert this in-process, but the gate catches
+# a report produced by an older binary).
+for label, metrics in (("sim_hotpath", hot), ("serving_sweep", srv), ("schedule_sweep", sch)):
+    if metrics:
+        require(label, metrics, "roofline_utilization", lo=1e-9, hi=1.0)
 
 for line in notes:
     print(line)
