@@ -11,7 +11,7 @@
 mod harness;
 
 use flatattention::arch::presets;
-use flatattention::dataflow::Dataflow;
+use flatattention::dataflow::{set_template_stamping, Dataflow};
 use flatattention::scheduler::{
     route, simulate, BatchPolicy, RequestTrace, RouterConfig, SchedulerConfig,
 };
@@ -127,6 +127,75 @@ fn main() {
     assert!(
         ratio >= 0.6,
         "degraded/fault-free throughput {ratio:.3} below the 0.6 target"
+    );
+
+    // §Incremental composition: replay a recurring-shape synthetic stream
+    // in the default composer mode (template stamping + in-place cost
+    // patching + solo-run memoization) and in the full-rebuild mode every
+    // step used to pay (stamping off, every step re-emitted, re-sealed
+    // and re-run through the DES). tests/incremental_differential.rs pins
+    // the two bit-identical, so the ratio is pure composition cost.
+    harness::section("incremental step composition (recurring-shape stream)");
+    let n = if smoke { 192 } else { 384 };
+    let stream = RequestTrace::synthetic(n, 1_000);
+    let inc_cfg = SchedulerConfig::new(Dataflow::Flash2);
+    let mut full_cfg = inc_cfg.clone();
+    full_cfg.incremental = false;
+    full_cfg.memoize = false;
+    rec.bench("incremental/replay", iters, || simulate(&arch, &stream, &inc_cfg).tokens);
+    set_template_stamping(false);
+    rec.bench("incremental/full_rebuild", iters, || simulate(&arch, &stream, &full_cfg).tokens);
+    set_template_stamping(true);
+    let fast = rec.min_of("incremental/replay").expect("recorded");
+    let slow = rec.min_of("incremental/full_rebuild").expect("recorded");
+    let speedup = slow / fast.max(1e-12);
+    println!(
+        "  {n}-request stream: full rebuild {:.0} ms vs incremental {:.0} ms -> {speedup:.1}x",
+        slow * 1e3,
+        fast * 1e3
+    );
+    rec.metric("step_compose_speedup", speedup);
+
+    // Target: the incremental composer must beat a per-step full rebuild
+    // by >= 5x on the recurring-shape stream (ISSUE 8 acceptance; the
+    // ROADMAP "Million-request scale" item rides on this ratio).
+    assert!(
+        speedup >= 5.0,
+        "incremental-over-rebuild speedup {speedup:.2} below the 5x target"
+    );
+
+    // Million-request scale: at steady state the recurring shapes turn
+    // nearly every step into a memo merge, so the replay cost is bounded
+    // by the scheduler loop rather than the DES. Smoke mode scales the
+    // stream down but records the actual request count, so the JSON
+    // never overstates what ran; `schedule --trace synthetic:1000000`
+    // replays the full-size stream from the CLI.
+    harness::section("million-request synthetic stream");
+    let m = if smoke { 50_000 } else { 1_000_000 };
+    let mstream = RequestTrace::synthetic(m, 500);
+    let mut mlast = None;
+    let wall = rec.bench("incremental/synthetic_stream", 1, || {
+        let r = simulate(&arch, &mstream, &inc_cfg);
+        let done = r.requests.len();
+        mlast = Some(r);
+        done
+    });
+    let mrep = mlast.expect("ran");
+    assert_eq!(mrep.requests.len(), m, "every synthetic request must complete");
+    let rps = m as f64 / wall.max(1e-12);
+    println!(
+        "  {m} requests replayed in {wall:.2} s wall ({rps:.0} requests/s, {} steps)",
+        mrep.steps
+    );
+    rec.metric("synthetic_stream_requests", m as f64);
+    rec.metric("synthetic_stream_requests_per_s", rps);
+
+    // Target: the stream must complete and replay at a rate only the
+    // incremental path can reach (a full rebuild per step is orders of
+    // magnitude below this floor at scale).
+    assert!(
+        rps >= 1_000.0,
+        "synthetic stream replayed at {rps:.0} requests/s, below the 1000/s floor"
     );
 
     // Roofline cross-check on the fault-free serving replay: the bytes it

@@ -490,6 +490,36 @@ mod tests {
         assert!(verify_program(&p).is_empty());
     }
 
+    /// §Incremental: a sealed batch program whose costs were patched from
+    /// a structurally identical re-emission must still pass every check —
+    /// the shard wall and span geometry audit seal-derived state, which a
+    /// cost patch deliberately keeps.
+    #[test]
+    fn cost_patched_batch_program_still_verifies() {
+        use crate::arch::presets;
+        use crate::dataflow::{Dataflow, Workload};
+        use crate::hbm::PageMap;
+        use crate::scheduler::batch::{compose, compose_unsealed_in, BatchEntry};
+        use crate::sim::ProgramArena;
+
+        let arch = presets::table2(8);
+        let mut pages = PageMap::new(32);
+        pages.grow_to(300, |p| (8 + (p % 2)) as u32);
+        let wl0 = Workload::new(300, 64, 4, 1).with_kv_heads(2).decode();
+        let e0 = [BatchEntry { request: 0, slot: 0, workload: wl0, pages: &pages }];
+        let mut bp = compose(&arch, Dataflow::Flash2, 2, 4, &e0);
+        assert!(verify_batch(&bp).is_empty());
+        // One more cached token: same op structure, new costs.
+        pages.grow_to(301, |p| (8 + (p % 2)) as u32);
+        let wl1 = Workload::new(301, 64, 4, 1).with_kv_heads(2).decode();
+        let e1 = [BatchEntry { request: 0, slot: 0, workload: wl1, pages: &pages }];
+        let mut arena = ProgramArena::new();
+        let scratch = compose_unsealed_in(&mut arena, &arch, Dataflow::Flash2, 2, 4, &e1);
+        assert_eq!(bp.spans, scratch.spans);
+        assert!(bp.program.patch_costs_from(&scratch.program), "structure must be stable");
+        assert!(verify_batch(&bp).is_empty(), "patched programs verify unchanged");
+    }
+
     #[test]
     fn cycle_is_named_with_its_ops() {
         // `Program::op` cannot express a cycle; corrupt the pools directly

@@ -268,9 +268,13 @@ pub(crate) struct FlashBatchEntry<'a> {
 /// round-robin over its own tile band only, and K/V loads are split into
 /// per-page-segment channel transactions through the entry's [`PageMap`].
 /// Per entry, the band's first tile is the fold representative, so the
-/// fold/stamp exactness argument applies per request (stamping itself is
-/// bypassed: paged channel assignment is not a rotation). Returns the
-/// sealed program plus each entry's contiguous op span.
+/// fold/stamp exactness argument applies per request. Template stamping
+/// applies to paged streams too: a block's page segments depend only on
+/// its K/V token range, which the template key pins, so stamped paged
+/// instances are verbatim copies (no channel patch needed). Returns the
+/// *unsealed* program plus each entry's contiguous op span — the caller
+/// (`scheduler::batch`) seals, or cost-patches a previously sealed step
+/// program instead (§Incremental in `scheduler`).
 pub(crate) fn flash_batch_program_in(
     mut prog: Program,
     arch: &ArchConfig,
@@ -293,6 +297,7 @@ pub(crate) fn flash_batch_program_in(
         .collect();
     let eb = Workload::BYTES_PER_ELEM;
     let folding = super::symmetry_folding() && !asynchronous;
+    let stamping = super::template_stamping();
 
     let mut hops_by_chan: Vec<u64> = vec![0; n_chan];
     let mut spans: Vec<(usize, usize)> = Vec::with_capacity(entries.len());
@@ -328,13 +333,13 @@ pub(crate) fn flash_batch_program_in(
                     let list: Vec<_> = stream.into_iter().map(|(_, b)| *b).collect();
                     build_stream(
                         &mut prog, arch, wl, row_ch, &hops_by_chan, &tiles[tid], tid as u32,
-                        &list, &tiling, eb, true, true, false, false, Some(e.pages), None,
+                        &list, &tiling, eb, true, true, false, stamping, Some(e.pages), None,
                     );
                 }
             } else {
                 build_stream(
                     &mut prog, arch, wl, row_ch, &hops_by_chan, &tiles[tid], tid as u32, blocks,
-                    &tiling, eb, false, true, folding && tid as u32 != rep, false,
+                    &tiling, eb, false, true, folding && tid as u32 != rep, stamping,
                     Some(e.pages), None,
                 );
             }
@@ -344,7 +349,6 @@ pub(crate) fn flash_batch_program_in(
     }
 
     prog.flops = flops;
-    prog.seal();
     (prog, spans)
 }
 
@@ -352,10 +356,12 @@ pub(crate) fn flash_batch_program_in(
 /// internally ordered while engines arbitrate across streams. With `fold`
 /// set, private compute chains collapse into delay ops (§Fold) while the
 /// channel op stream stays verbatim. With `pages` set, K/V loads split
-/// into per-page-segment transactions on the page table's channels
-/// (stamping is then bypassed by the caller — channel assignment is no
-/// longer a rotation). `edits` journals every K/V load's prefetch
-/// dependency for the double-buffer variant derivation.
+/// into per-page-segment transactions on the page table's channels; the
+/// segments depend only on the block's token range, which the template
+/// key determines, so stamped paged instances copy verbatim and the
+/// rotation patch never fires (`kv_ops` stays empty). `edits` journals
+/// every K/V load's prefetch dependency for the double-buffer variant
+/// derivation.
 #[allow(clippy::too_many_arguments)]
 fn build_stream(
     prog: &mut Program,
@@ -378,7 +384,7 @@ fn build_stream(
     debug_assert!(!(fold && asynchronous), "async streams never fold");
     let chan_base = |c: usize| ResourceId(c as u32);
     let n_chan = hops_by_chan.len();
-    let stamping = stamping && pages.is_none() && edits.is_none();
+    let stamping = stamping && edits.is_none();
     let d = wl.head_dim;
     let (q_len, kv_len) = (wl.q_len(), wl.kv_len());
     let (b_r, b_c, t_c) = (tiling.b_r, tiling.b_c, tiling.t_c);

@@ -283,8 +283,10 @@ pub(crate) struct FlatBatchEntry<'a> {
 /// entry's blocks are dealt round-robin over its band's groups only, with
 /// the band's first group as the fold representative. K/V slices load
 /// from the channel holding their page (slice granularity — group slices
-/// are small relative to a page). Returns the sealed program plus each
-/// entry's contiguous op span.
+/// are small relative to a page). Returns the *unsealed* program plus
+/// each entry's contiguous op span — the caller (`scheduler::batch`)
+/// seals, or cost-patches a previously sealed step program instead
+/// (§Incremental in `scheduler`).
 pub(crate) fn flat_batch_program_in(
     mut prog: Program,
     arch: &ArchConfig,
@@ -311,6 +313,7 @@ pub(crate) fn flat_batch_program_in(
         })
         .collect();
     let folding = super::symmetry_folding() && !asynchronous;
+    let stamping = super::template_stamping();
 
     let mut spans: Vec<(usize, usize)> = Vec::with_capacity(entries.len());
     let mut flops = 0u64;
@@ -349,13 +352,13 @@ pub(crate) fn flat_batch_program_in(
                     let list: Vec<(u64, u64)> = stream.into_iter().map(|(_, b)| *b).collect();
                     build_group_stream(
                         &mut prog, arch, wl, &hbm_map, &chan_res, gc, &tiling, &list, true, true,
-                        false, false, Some(e.pages), None,
+                        false, stamping, Some(e.pages), None,
                     );
                 }
             } else {
                 build_group_stream(
                     &mut prog, arch, wl, &hbm_map, &chan_res, gc, &tiling, blocks, false, true,
-                    folding && bi != 0, false, Some(e.pages), None,
+                    folding && bi != 0, stamping, Some(e.pages), None,
                 );
             }
         }
@@ -364,16 +367,17 @@ pub(crate) fn flat_batch_program_in(
     }
 
     prog.flops = flops;
-    prog.seal();
     (prog, spans)
 }
 
 /// Emit one serial stream of blocks for a group. With `fold` set, the
 /// `g²` per-tile compute chains collapse into per-row delay ops (§Fold)
 /// while the channel and bus op streams stay verbatim. With `pages` set,
-/// each south-edge K/V slice loads from the channel holding its page
-/// (stamping is then bypassed by the caller). `edits` journals every K/V
-/// load's prefetch dependency for the double-buffer variant derivation.
+/// each south-edge K/V slice loads from the channel holding its page;
+/// the slice's token offset depends only on the block's `(i, share_c)`
+/// template key (via `j`, `lx`), so stamped paged instances are verbatim
+/// copies. `edits` journals every K/V load's prefetch dependency for the
+/// double-buffer variant derivation.
 #[allow(clippy::too_many_arguments)]
 fn build_group_stream(
     prog: &mut Program,
@@ -402,7 +406,7 @@ fn build_group_stream(
     let tid = |lx: usize, ly: usize| arch.tile_id(ox + lx, oy + ly);
     let local = |lx: usize, ly: usize| ly * g + lx;
     let n_dest = (g - 1) as u64;
-    let stamping = stamping && pages.is_none() && edits.is_none();
+    let stamping = stamping && edits.is_none();
     // Channel + hop distance of the (j, lx) K/V slice load issued by the
     // south-edge tile at (gx, gy): the fixed column band normally, or the
     // page holding the slice's first token when the cache is paged.

@@ -178,7 +178,7 @@ impl Phase {
 /// *behind* an existing cache prefix (chunked prefill, the unit of work of
 /// the continuous-batching scheduler in `crate::scheduler`), and `window`
 /// limits attention to the last W positions (sliding-window/local masks).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Workload {
     /// Sequence length S: the query *and* key/value length for prefill,
     /// the KV-cache length for decode.

@@ -61,6 +61,23 @@ impl PageMap {
         }
     }
 
+    /// Per-page channel table, in page order. The §Incremental scheduler
+    /// uses the prefix covering a workload's `kv_len` both as a memo key
+    /// (two steps with equal tables place identical traffic) and to build
+    /// the per-entry channel mask for the disjointness gate.
+    pub fn channels(&self) -> &[u32] {
+        &self.channels
+    }
+
+    /// Drop every allocated page *and* the table's backing allocation,
+    /// keeping the page size. [`PageMap::reset`] keeps capacity for the
+    /// preemption → rebuild cycle; `release` is for requests that are done
+    /// for good — at million-request scale the retired states would
+    /// otherwise pin O(total requests × pages) of dead table memory.
+    pub fn release(&mut self) {
+        self.channels = Vec::new();
+    }
+
     /// Drop every allocated page, keeping the page size. This is the
     /// preemption/eviction primitive: a preempted request's KV pages are
     /// returned to the pool and its cache must be rebuilt by *real*
@@ -163,6 +180,21 @@ mod tests {
     #[should_panic(expected = "page size")]
     fn zero_page_size_rejected() {
         let _ = PageMap::new(0);
+    }
+
+    #[test]
+    fn channels_exposes_the_table_and_release_frees_it() {
+        let mut pm = PageMap::new(16);
+        pm.grow_to(160, |p| p as u32);
+        let want: Vec<u32> = (0..10).collect();
+        assert_eq!(pm.channels(), want.as_slice());
+        pm.release();
+        assert_eq!(pm.num_pages(), 0);
+        assert!(pm.channels().is_empty());
+        assert_eq!(pm.page_tokens(), 16);
+        // A released map still grows correctly from page 0.
+        pm.grow_to(20, |p| (p + 3) as u32);
+        assert_eq!(pm.channel_of_page(0), 3);
     }
 
     #[test]

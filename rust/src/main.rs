@@ -25,8 +25,8 @@ use flatattention::report::{self, ReportOpts};
 use flatattention::runtime::{artifacts_available, default_artifact_dir};
 use flatattention::scheduler::batch::validate_slots;
 use flatattention::scheduler::{
-    route, simulate, BatchPolicy, PagePlacement, RequestTrace, RouterConfig, SchedulerConfig,
-    VictimPolicy,
+    try_route, try_simulate, BatchPolicy, PagePlacement, RequestTrace, RouterConfig,
+    SchedulerConfig, VictimPolicy,
 };
 use flatattention::sim::FaultPlan;
 #[cfg(feature = "pjrt")]
@@ -85,11 +85,13 @@ USAGE:
                       [--heads 32] [--batch 2] [--group 32] [--arch table1] [--threads N]
                       (--threads shards the DES event loop; results are bit-identical)
   flatattention sweep  [--seq 4096] [--d 128] [--heads 32] [--batch 2] [--dataflow flatasyn]
-  flatattention schedule [--trace builtin|burst|FILE.csv] [--dataflow all] [--slots 4]
-                      [--chunk 512] [--page-tokens 64] [--placement affine|rr|random]
-                      [--group G] [--window W] [--static] [--threads N] [--arch table1]
+  flatattention schedule [--trace builtin|burst|synthetic:N[:GAP]|FILE.csv] [--dataflow all]
+                      [--slots 4] [--chunk 512] [--page-tokens 64]
+                      [--placement affine|rr|random] [--group G] [--window W] [--static]
+                      [--threads N] [--arch table1]
                       (continuous batching of a mixed prefill+decode request trace;
-                       CSV rows: arrival,prompt,output[,kv_heads])
+                       CSV rows: arrival,prompt,output[,kv_heads]; synthetic:N streams N
+                       recurring-shape requests GAP cycles apart — scales to millions)
                       Router options (any engages the graceful-degradation router):
                       [--faults SPEC] [--deadline CYC] [--retries N] [--max-batch-tokens N]
                       [--max-pages N] [--preemption on|off]
@@ -352,20 +354,36 @@ fn cmd_schedule(args: &Args) -> i32 {
         ));
     }
     let trace_arg = args.get_or("trace", "builtin");
-    let trace = match RequestTrace::builtin(trace_arg, kv_default) {
-        Some(t) => t,
-        None => match std::fs::read_to_string(trace_arg) {
-            Ok(text) => match RequestTrace::parse(&text, kv_default) {
-                Ok(t) => t,
-                Err(e) => return fail(&format!("parsing trace {trace_arg}: {e}")),
+    let trace = if let Some(spec) = trace_arg.strip_prefix("synthetic:") {
+        // `synthetic:N[:GAP]` — the deterministic recurring-shape stream
+        // (scheduler::RequestTrace::synthetic); the million-request-scale
+        // replay path the bench gates.
+        let mut parts = spec.splitn(2, ':');
+        let n = parts.next().and_then(|s| s.parse::<usize>().ok());
+        let gap = match parts.next() {
+            Some(g) => g.parse::<u64>().ok(),
+            None => Some(1_000),
+        };
+        match (n, gap) {
+            (Some(n), Some(gap)) if n > 0 => RequestTrace::synthetic(n, gap),
+            _ => return fail(&format!("--trace {trace_arg}: expected synthetic:N[:GAP], N >= 1")),
+        }
+    } else {
+        match RequestTrace::builtin(trace_arg, kv_default) {
+            Some(t) => t,
+            None => match std::fs::read_to_string(trace_arg) {
+                Ok(text) => match RequestTrace::parse(&text, kv_default) {
+                    Ok(t) => t,
+                    Err(e) => return fail(&format!("parsing trace {trace_arg}: {e}")),
+                },
+                Err(e) => {
+                    return fail(&format!(
+                        "--trace {trace_arg}: not a builtin trace (builtin|mixed|burst), not \
+                         synthetic:N[:GAP], and not a readable file ({e})"
+                    ))
+                }
             },
-            Err(e) => {
-                return fail(&format!(
-                    "--trace {trace_arg}: not a builtin trace (builtin|mixed|burst) and not a \
-                     readable file ({e})"
-                ))
-            }
-        },
+        }
     };
     let slots = args.get_usize("slots", 4).unwrap_or(4);
     // Slot geometry alone first (group-agnostic: Flash2 ignores it).
@@ -511,7 +529,12 @@ fn cmd_schedule(args: &Args) -> i32 {
         cfg.window = window;
         cfg.threads = args.get_usize("threads", 1).unwrap_or(1);
         if let Some(rc) = &router_cfg {
-            let r = route(&arch, &trace, &cfg, rc);
+            // Invalid configs surface as one clean diagnostic + exit 1
+            // (no panic backtrace), pinned by tests/cli_integration.rs.
+            let r = match try_route(&arch, &trace, &cfg, rc) {
+                Ok(r) => r,
+                Err(e) => return fail(&e.to_string()),
+            };
             println!(
                 "{:>9}  {:>10.0}  {:>10.0}  {:>9.3}  {:>9.3}  {:>9.3}  {:>9.4}  {:>4}  {:>4}  \
                  {:>5}  {:>5}",
@@ -528,7 +551,10 @@ fn cmd_schedule(args: &Args) -> i32 {
                 r.dead_bands
             );
         } else {
-            let r = simulate(&arch, &trace, &cfg);
+            let r = match try_simulate(&arch, &trace, &cfg) {
+                Ok(r) => r,
+                Err(e) => return fail(&e.to_string()),
+            };
             println!(
                 "{:>9}  {:>10.0}  {:>10.0}  {:>9.3}  {:>9.3}  {:>9.4}  {:>9.4}  {:>8.1}%  \
                  {:>8.3}  {:>6}",

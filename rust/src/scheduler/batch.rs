@@ -169,6 +169,25 @@ pub fn compose_in(
     slots: usize,
     entries: &[BatchEntry<'_>],
 ) -> BatchProgram {
+    let mut bp = compose_unsealed_in(arena, arch, df, group, slots, entries);
+    bp.program.seal();
+    bp
+}
+
+/// Like [`compose_in`] but the returned program is *unsealed*: the
+/// §Incremental step composer (`scheduler::incremental`) compares it
+/// structurally against the previous step's sealed program and either
+/// cost-patches that one in place — skipping the seal (dependents +
+/// §Shard CSR derivation) entirely — or seals this one as the new
+/// persistent step program.
+pub(crate) fn compose_unsealed_in(
+    arena: &mut ProgramArena,
+    arch: &ArchConfig,
+    df: Dataflow,
+    group: usize,
+    slots: usize,
+    entries: &[BatchEntry<'_>],
+) -> BatchProgram {
     let rows_per = match validate_slots(arch, slots, group, df) {
         Ok(r) => r,
         Err(e) => panic!("compose: {e}"),
@@ -263,6 +282,52 @@ mod tests {
             // Span traffic partitions the program traffic.
             assert_eq!(per.iter().map(|e| e.hbm_bytes).sum::<u64>(), stats.hbm_bytes, "{df:?}");
         }
+    }
+
+    #[test]
+    fn stamped_paged_compose_is_identical_to_naive() {
+        // Template stamping now applies to paged batch entries: a block's
+        // page segments depend only on its K/V token range, which the
+        // template key pins, so stamped instances copy verbatim. The
+        // composed program must match the naive per-block emission op for
+        // op under both folding modes. Heads are sized so every stream
+        // holds ≥3 same-key blocks (template registered at the second,
+        // stamped from the third).
+        use crate::dataflow::{assert_programs_equal, set_symmetry_folding, set_template_stamping};
+        let _guard = crate::dataflow::GLOBAL_SWITCH_TEST_LOCK
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let arch = presets::table2(8);
+        let mut p0 = PageMap::new(32);
+        p0.grow_to(512, |page| (page % 4) as u32);
+        let mut p1 = PageMap::new(32);
+        p1.grow_to(700, |page| 4 + (page % 4) as u32);
+        let entries = vec![
+            BatchEntry {
+                request: 0,
+                slot: 0,
+                workload: Workload::new(256, 64, 48, 1).with_causal(true).with_kv_prefix(256),
+                pages: &p0,
+            },
+            BatchEntry {
+                request: 1,
+                slot: 2,
+                workload: Workload::new(700, 64, 48, 1).with_kv_heads(12).decode(),
+                pages: &p1,
+            },
+        ];
+        for folding in [true, false] {
+            set_symmetry_folding(folding);
+            for df in ALL_DATAFLOWS {
+                let stamped = compose(&arch, df, 2, 4, &entries);
+                set_template_stamping(false);
+                let naive = compose(&arch, df, 2, 4, &entries);
+                set_template_stamping(true);
+                assert_programs_equal(&stamped.program, &naive.program);
+                assert_eq!(stamped.spans, naive.spans, "{df:?}");
+            }
+        }
+        set_symmetry_folding(true);
     }
 
     #[test]

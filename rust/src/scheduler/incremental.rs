@@ -1,0 +1,442 @@
+//! §Incremental step composition and memoized delta re-simulation.
+//!
+//! The scheduler's step loop used to rebuild and re-simulate the whole
+//! batch program from scratch every step, making step cost linear in the
+//! total in-flight op count — fine for a five-request smoke trace, fatal
+//! for the ROADMAP's million-request horizon. [`StepComposer`] removes
+//! both rebuild taxes while staying **bit-identical** to the full-rebuild
+//! path (pinned by `tests/incremental_differential.rs`):
+//!
+//! 1. **Incremental compose.** The composer keeps the previous step's
+//!    *sealed* [`BatchProgram`] alive. Each step it re-emits the entries
+//!    into an unsealed scratch program (`batch::compose_unsealed_in`;
+//!    template stamping makes the emission itself cheap) and compares it
+//!    structurally against the cached program. When every op matches in
+//!    resource/component/tile/dependency topology — the common case: a
+//!    steady decode step moves latencies and byte counts, not the op
+//!    graph — the cached program is cost-patched in place
+//!    (`Program::patch_costs_from`) and its dependents + §Shard CSRs from
+//!    the previous seal stay valid verbatim, both partitions being
+//!    functions of op structure only. Any structural change (admit or
+//!    finish, a tiling boundary, a new page segment) falls back to
+//!    sealing the scratch program as the new cached step program.
+//!    Correctness never depends on *predicting* stability; it is checked
+//!    op for op, and the check is the cheap part of a build.
+//! 2. **Memoized delta re-simulation.** Batch composition is conservative
+//!    (PR 4, pinned by `tests/scheduler_integration.rs`): entries own
+//!    private tile bands and couple only through shared HBM channel
+//!    FIFOs, so when the entries' channel sets are pairwise disjoint each
+//!    entry's op timeline in the batch is bit-identical to composing it
+//!    alone. Under that gate the step outcome is a pure function of the
+//!    per-entry solo runs: makespan is the max of solo makespans, the
+//!    additive totals (HBM bytes, FLOPs, engine busy, ops) are sums, and
+//!    the tracked-tile breakdown is slot 0's solo breakdown with the
+//!    extra barrier wait folded into `other`. Solo runs are memoized by
+//!    `(slot, workload, page-table prefix)`, so a steady-state decode
+//!    step over recurring request shapes costs a few hash lookups and a
+//!    merge — no compose, no DES. The gate uses a *superset* channel
+//!    mask built analytically from the page table and the band's row
+//!    channels (disjoint supersets imply disjoint actual sets), and the
+//!    memo path is disabled for any step with a live fault window, where
+//!    a dead tile stalls timelines across the step barrier.
+//!
+//! Both levers are config knobs ([`SchedulerConfig::incremental`] /
+//! [`SchedulerConfig::memoize`], default on) so the differential wall can
+//! force the full-rebuild path and compare reports field by field.
+
+use std::collections::HashMap;
+
+use super::batch::{self, BatchEntry, BatchProgram};
+use super::SchedulerConfig;
+use crate::arch::ArchConfig;
+use crate::dataflow::Workload;
+use crate::hbm::HbmMap;
+use crate::sim::{Breakdown, FaultPlan, ProgramArena, RunStats};
+
+/// Memo key of one entry's solo run: the slot pins the tile band (hence
+/// hop distances and the fold representative), the workload pins the op
+/// graph and costs, and the page-table prefix pins every K/V transfer's
+/// channel. The key stores the actual channel prefix, not a hash of it,
+/// so a collision can never alias two different placements.
+#[derive(PartialEq, Eq, Hash)]
+struct SoloKey {
+    slot: usize,
+    workload: Workload,
+    page_tokens: u64,
+    chans: Box<[u32]>,
+}
+
+/// Solo-memo capacity: on overflow the map is cleared outright — crude
+/// but deterministic (eviction order can never shape results because
+/// cached and recomputed solo stats are identical by construction).
+const SOLO_CACHE_CAP: usize = 1 << 14;
+
+/// Per-run step composer: owns the persistent sealed step program, the
+/// solo-run memo and the recycled build buffers. Construct one per
+/// `simulate`/`route` call — cached state is specific to one
+/// `(arch, cfg)` pair and must not leak across runs. Public so the bench
+/// harness can price the compose paths in isolation; scheduler callers
+/// go through [`super::simulate`] / [`super::router::route`].
+pub struct StepComposer {
+    incremental: bool,
+    memoize: bool,
+    /// Buffers cycling between the scratch emission and the retired
+    /// cached program (promote/patch keeps exactly one set in flight).
+    arena: ProgramArena,
+    /// Separate buffers for solo composes on memo misses.
+    solo_arena: ProgramArena,
+    cached: Option<BatchProgram>,
+    solo: HashMap<SoloKey, RunStats>,
+    /// Union + per-entry scratch for the channel-mask disjointness gate.
+    mask_union: Vec<u64>,
+    mask_entry: Vec<u64>,
+    patched: usize,
+    resealed: usize,
+    memo_steps: usize,
+    memo_hits: usize,
+}
+
+impl StepComposer {
+    pub fn new(cfg: &SchedulerConfig) -> Self {
+        Self {
+            incremental: cfg.incremental,
+            memoize: cfg.memoize,
+            arena: ProgramArena::new(),
+            solo_arena: ProgramArena::new(),
+            cached: None,
+            solo: HashMap::new(),
+            mask_union: Vec::new(),
+            mask_entry: Vec::new(),
+            patched: 0,
+            resealed: 0,
+            memo_steps: 0,
+            memo_hits: 0,
+        }
+    }
+
+    /// Steps whose program was cost-patched in place (seal skipped).
+    pub fn patched_steps(&self) -> usize {
+        self.patched
+    }
+
+    /// Steps that rebuilt + resealed (structure changed, or first step).
+    pub fn resealed_steps(&self) -> usize {
+        self.resealed
+    }
+
+    /// Steps served entirely from the solo-merge path (no batch DES run).
+    pub fn memo_steps(&self) -> usize {
+        self.memo_steps
+    }
+
+    /// Solo-run memo hits across all memoized steps.
+    pub fn memo_hits(&self) -> usize {
+        self.memo_hits
+    }
+
+    /// Compose (incrementally) and execute one fault-free step, serving
+    /// it from the solo memo when the disjointness gate allows.
+    pub fn run_step(
+        &mut self,
+        arch: &ArchConfig,
+        cfg: &SchedulerConfig,
+        entries: &[BatchEntry<'_>],
+    ) -> RunStats {
+        if self.memoize {
+            if let Some(stats) = self.try_memoized(arch, cfg, entries) {
+                self.memo_steps += 1;
+                return stats;
+            }
+        }
+        let threads = cfg.threads;
+        self.with_composed(arch, cfg, entries, |bp| bp.run_threads(threads))
+    }
+
+    /// Compose (incrementally) and execute one step under a shifted fault
+    /// plan; returns the entries that made no progress. The solo memo
+    /// never applies here: faults couple timelines across entries.
+    pub fn run_step_faulted(
+        &mut self,
+        arch: &ArchConfig,
+        cfg: &SchedulerConfig,
+        entries: &[BatchEntry<'_>],
+        plan: &FaultPlan,
+    ) -> (RunStats, Vec<usize>) {
+        let threads = cfg.threads;
+        self.with_composed(arch, cfg, entries, |bp| {
+            let (stats, fr) = bp.run_faulted(threads, plan);
+            let affected = bp.affected_entries(&fr);
+            (stats, affected)
+        })
+    }
+
+    /// Produce this step's sealed [`BatchProgram`] — cost-patching the
+    /// cached one, promoting the scratch emission, or (with
+    /// `incremental` off) plain full rebuild — and hand it to `f`.
+    fn with_composed<R>(
+        &mut self,
+        arch: &ArchConfig,
+        cfg: &SchedulerConfig,
+        entries: &[BatchEntry<'_>],
+        f: impl FnOnce(&BatchProgram) -> R,
+    ) -> R {
+        let (df, group, slots) = (cfg.dataflow, cfg.group, cfg.slots);
+        if !self.incremental {
+            let bp = batch::compose_in(&mut self.arena, arch, df, group, slots, entries);
+            let out = f(&bp);
+            self.arena.recycle(bp.program);
+            return out;
+        }
+        let scratch = batch::compose_unsealed_in(&mut self.arena, arch, df, group, slots, entries);
+        // `patch_costs_from` verifies structure before touching costs, so
+        // a `false` here leaves the cached program intact — and the
+        // failure path below discards it whole anyway.
+        let patched = match self.cached.as_mut() {
+            Some(prev) if prev.spans == scratch.spans => {
+                prev.program.patch_costs_from(&scratch.program)
+            }
+            _ => false,
+        };
+        if patched {
+            self.patched += 1;
+            self.arena.recycle(scratch.program);
+        } else {
+            if let Some(p) = self.cached.take() {
+                self.arena.recycle(p.program);
+            }
+            self.resealed += 1;
+            let mut bp = scratch;
+            bp.program.seal();
+            self.cached = Some(bp);
+        }
+        f(self.cached.as_ref().expect("step program just installed"))
+    }
+
+    /// The memoized delta path: gate on pairwise-disjoint channel masks,
+    /// then merge (cached or freshly computed) solo runs. `None` means
+    /// the gate failed and the batch must actually run.
+    fn try_memoized(
+        &mut self,
+        arch: &ArchConfig,
+        cfg: &SchedulerConfig,
+        entries: &[BatchEntry<'_>],
+    ) -> Option<RunStats> {
+        if entries.is_empty() || !self.masks_disjoint(arch, cfg, entries) {
+            return None;
+        }
+        let mut makespan = 0;
+        let mut slot0: Option<RunStats> = None;
+        let mut out = RunStats {
+            makespan: 0,
+            breakdown: Breakdown::default(),
+            hbm_bytes: 0,
+            flops: 0,
+            redmule_busy_total: 0,
+            spatz_busy_total: 0,
+            ops_executed: 0,
+        };
+        for e in entries {
+            let solo = self.solo_stats(arch, cfg, e);
+            makespan = makespan.max(solo.makespan);
+            out.hbm_bytes += solo.hbm_bytes;
+            out.flops += solo.flops;
+            out.redmule_busy_total += solo.redmule_busy_total;
+            out.spatz_busy_total += solo.spatz_busy_total;
+            out.ops_executed += solo.ops_executed;
+            if e.slot == 0 {
+                slot0 = Some(solo);
+            }
+        }
+        out.makespan = makespan;
+        // The tracked tile (0) belongs to slot 0's band: its intervals in
+        // the batch equal its solo intervals, so the batch breakdown is
+        // the solo one re-closed over the longer step — the added barrier
+        // wait is uncovered time, i.e. `other`. With slot 0 empty the
+        // tracked tile runs nothing and the whole step is `other`.
+        out.breakdown = match slot0 {
+            Some(s0) => {
+                let mut bd = s0.breakdown;
+                bd.other += makespan - s0.makespan;
+                bd
+            }
+            None => Breakdown { other: makespan, ..Breakdown::default() },
+        };
+        Some(out)
+    }
+
+    /// Superset channel masks, pairwise-disjointness gate: an entry can
+    /// only ever touch the channels its K/V pages live on plus the row
+    /// channels of its band's tiles (Q loads / O stores / stats), so
+    /// disjoint masks imply the entries share no resource at all.
+    fn masks_disjoint(
+        &mut self,
+        arch: &ArchConfig,
+        cfg: &SchedulerConfig,
+        entries: &[BatchEntry<'_>],
+    ) -> bool {
+        let hbm_map = HbmMap::new(arch);
+        let words = hbm_map.total_channels().div_ceil(64);
+        self.mask_union.clear();
+        self.mask_union.resize(words, 0);
+        let rows_per = arch.mesh_y / cfg.slots;
+        for e in entries {
+            self.mask_entry.clear();
+            self.mask_entry.resize(words, 0);
+            let pages = e.pages.pages_for(e.workload.kv_len()) as usize;
+            for &c in &e.pages.channels()[..pages] {
+                self.mask_entry[c as usize / 64] |= 1u64 << (c % 64);
+            }
+            for y in e.slot * rows_per..(e.slot + 1) * rows_per {
+                for x in 0..arch.mesh_x {
+                    let c = hbm_map.row_channel(x, y).index;
+                    self.mask_entry[c / 64] |= 1u64 << (c % 64);
+                }
+            }
+            if self.mask_entry.iter().zip(&self.mask_union).any(|(m, u)| m & u != 0) {
+                return false;
+            }
+            for (u, m) in self.mask_union.iter_mut().zip(&self.mask_entry) {
+                *u |= m;
+            }
+        }
+        true
+    }
+
+    /// One entry's solo [`RunStats`], from the memo or a fresh
+    /// compose+execute. Results are thread-count invariant (pinned by
+    /// `tests/parallel_differential.rs`), so the memo never needs to key
+    /// on `cfg.threads`.
+    fn solo_stats(
+        &mut self,
+        arch: &ArchConfig,
+        cfg: &SchedulerConfig,
+        e: &BatchEntry<'_>,
+    ) -> RunStats {
+        let pages = e.pages.pages_for(e.workload.kv_len()) as usize;
+        let key = SoloKey {
+            slot: e.slot,
+            workload: e.workload,
+            page_tokens: e.pages.page_tokens(),
+            chans: e.pages.channels()[..pages].into(),
+        };
+        if let Some(s) = self.solo.get(&key) {
+            self.memo_hits += 1;
+            return s.clone();
+        }
+        let one = [BatchEntry {
+            request: e.request,
+            slot: e.slot,
+            workload: e.workload,
+            pages: e.pages,
+        }];
+        let (df, group, slots) = (cfg.dataflow, cfg.group, cfg.slots);
+        let bp = batch::compose_in(&mut self.solo_arena, arch, df, group, slots, &one);
+        let stats = bp.run_threads(cfg.threads);
+        self.solo_arena.recycle(bp.program);
+        if self.solo.len() >= SOLO_CACHE_CAP {
+            self.solo.clear();
+        }
+        self.solo.insert(key, stats.clone());
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::dataflow::Dataflow;
+    use crate::hbm::PageMap;
+
+    fn tiny_cfg(df: Dataflow) -> SchedulerConfig {
+        let mut cfg = SchedulerConfig::new(df);
+        cfg.slots = 4;
+        cfg.group = 2;
+        cfg.chunk = 96;
+        cfg.page_tokens = 32;
+        cfg.heads = 4;
+        cfg.head_dim = 64;
+        cfg
+    }
+
+    /// Pages on the slot's affine south-channel partition of table2-8
+    /// (8 west + 8 south channels, 4 slots ⇒ 2 south channels per slot).
+    fn affine_pages(slot: usize, tokens: u64) -> PageMap {
+        let mut pm = PageMap::new(32);
+        pm.grow_to(tokens, |p| (8 + slot as u32 * 2) + (p % 2) as u32);
+        pm
+    }
+
+    /// A growing decode cache that stays inside one tiling/page shape
+    /// only changes op *costs*: the composer must cost-patch the sealed
+    /// step program instead of resealing, and every step must match the
+    /// full-rebuild path bit for bit.
+    #[test]
+    fn decode_growth_patches_in_place_and_matches_rebuild() {
+        let arch = presets::table2(8);
+        let mut cfg = tiny_cfg(Dataflow::Flash2);
+        cfg.memoize = false;
+        let mut full_cfg = cfg.clone();
+        full_cfg.incremental = false;
+        let mut inc = StepComposer::new(&cfg);
+        let mut full = StepComposer::new(&full_cfg);
+        let mut pages = PageMap::new(32);
+        for kv in [300u64, 301, 302] {
+            pages.grow_to(kv, |p| (8 + (p % 2)) as u32);
+            let wl = Workload::new(kv, 64, 4, 1).with_kv_heads(2).decode();
+            let entries = [BatchEntry { request: 0, slot: 0, workload: wl, pages: &pages }];
+            let a = inc.run_step(&arch, &cfg, &entries);
+            let b = full.run_step(&arch, &full_cfg, &entries);
+            assert_eq!(a, b, "kv={kv}");
+        }
+        assert_eq!(inc.resealed_steps(), 1, "only the first step seals");
+        assert_eq!(inc.patched_steps(), 2, "pure-cost steps patch in place");
+        assert_eq!(full.patched_steps(), 0);
+    }
+
+    /// Channel-disjoint entries take the solo-merge path, hit the memo on
+    /// repeats, and reproduce the batch execution exactly.
+    #[test]
+    fn memoized_steps_match_batch_execution() {
+        let arch = presets::table2(8);
+        let cfg = tiny_cfg(Dataflow::Flash2);
+        let mut full_cfg = cfg.clone();
+        full_cfg.incremental = false;
+        full_cfg.memoize = false;
+        let mut memo = StepComposer::new(&cfg);
+        let mut full = StepComposer::new(&full_cfg);
+        let wl0 = Workload::new(128, 64, 4, 1).with_kv_heads(2).with_causal(true);
+        let wl2 = Workload::new(300, 64, 4, 1).with_kv_heads(1).decode();
+        let (p0, p2) = (affine_pages(0, wl0.kv_len()), affine_pages(2, wl2.kv_len()));
+        let entries = [
+            BatchEntry { request: 0, slot: 0, workload: wl0, pages: &p0 },
+            BatchEntry { request: 1, slot: 2, workload: wl2, pages: &p2 },
+        ];
+        for round in 0..2 {
+            let a = memo.run_step(&arch, &cfg, &entries);
+            let b = full.run_step(&arch, &full_cfg, &entries);
+            assert_eq!(a, b, "round {round}");
+        }
+        assert_eq!(memo.memo_steps(), 2, "disjoint masks take the solo path");
+        assert_eq!(memo.memo_hits(), 2, "the repeat round is pure memo hits");
+    }
+
+    /// Entries sharing a K/V channel fail the disjointness gate and run
+    /// as a real batch (the contention they model is real).
+    #[test]
+    fn overlapping_channels_bypass_the_memo() {
+        let arch = presets::table2(8);
+        let cfg = tiny_cfg(Dataflow::Flash2);
+        let mut memo = StepComposer::new(&cfg);
+        let wl = Workload::new(128, 64, 4, 1).with_kv_heads(2).with_causal(true);
+        let shared0 = affine_pages(0, wl.kv_len());
+        let shared2 = affine_pages(0, wl.kv_len()); // slot 2 on slot 0's channels
+        let entries = [
+            BatchEntry { request: 0, slot: 0, workload: wl, pages: &shared0 },
+            BatchEntry { request: 1, slot: 2, workload: wl, pages: &shared2 },
+        ];
+        let _ = memo.run_step(&arch, &cfg, &entries);
+        assert_eq!(memo.memo_steps(), 0);
+        assert_eq!(memo.resealed_steps(), 1);
+    }
+}

@@ -56,13 +56,31 @@
 //! never resource-block (the band's engines serve only that request), and
 //! the band's first tile/group is that request's representative stream.
 //! Folded and unfolded *batch* programs therefore execute bit-identically
-//! (`tests/fold_differential.rs` mixed-batch axis). Template stamping is
-//! bypassed in batch programs — paged channel assignment is a table
-//! lookup, not the rotation the stamp patch encodes — which costs build
-//! time only, never fidelity. The same locality gives the conservation
-//! property the tests pin: with per-slot-disjoint channels (wide HBM +
-//! channel-affine pages), a request's op timeline in a mixed batch is
-//! bit-identical to composing it alone.
+//! (`tests/fold_differential.rs` mixed-batch axis). Batch entries are
+//! template-stamped like solo programs: the stamp cache patches each K/V
+//! transfer's channel per page segment, so a paged entry is a
+//! table-driven re-point of a cached skeleton, not a fresh emission
+//! (pinned against naive emission by `batch::tests`). The same locality
+//! gives the conservation property the tests pin: with per-slot-disjoint
+//! channels (wide HBM + channel-affine pages), a request's op timeline in
+//! a mixed batch is bit-identical to composing it alone.
+//!
+//! # Incremental composition (§Incremental)
+//!
+//! Replaying a trace used to rebuild, reseal and fully re-simulate the
+//! batch program every step — step cost linear in total in-flight ops,
+//! fatal at the million-request scale the ROADMAP targets. The
+//! [`incremental::StepComposer`] keeps the previous step's *sealed*
+//! program alive and cost-patches it in place whenever the op structure
+//! is unchanged (the steady-decode common case), reusing the PR-5 shard
+//! CSR and the dependents CSR verbatim instead of re-deriving them; and
+//! when the entries' channel masks are pairwise disjoint it skips batch
+//! execution entirely, merging memoized per-request *solo* runs — exact
+//! by the conservation property above. Both levers are config knobs
+//! ([`SchedulerConfig::incremental`] / [`SchedulerConfig::memoize`],
+//! default on), faulted steps always run the real batch, and
+//! `tests/incremental_differential.rs` pins every mode against the
+//! full-rebuild path bit for bit, reports compared field by field.
 //!
 //! # Graceful-degradation router (§Router)
 //!
@@ -93,6 +111,13 @@
 //!   Already-delivered tokens stay delivered (they left the server);
 //!   rebuilt prefill produces no new output until the cache again covers
 //!   `rebuild_to`.
+//! * **TTFT is per-attempt** — every requeue (band eviction, deadline
+//!   retry, preemption) clears the request's first-token mark, and the
+//!   next token it actually delivers re-arms it. TTFT therefore measures
+//!   arrival → first token delivered *after the last disruption*: the
+//!   service the client experienced once the stream finally flowed, not
+//!   a stale pre-eviction timestamp
+//!   (`router::tests::requeued_requests_restart_ttft_per_attempt`).
 //! * **Deadlines** — `deadline` cycles per attempt: an in-flight or
 //!   waiting request that exceeds it is retried (bounded by
 //!   `max_retries`, eviction semantics as above) and finally *expired* —
@@ -114,17 +139,19 @@
 //! always terminates even under total-failure plans.
 
 pub mod batch;
+pub mod incremental;
 pub mod router;
 pub mod trace;
 
 pub use batch::{compose, BatchEntry, BatchProgram, EntryStats};
-pub use router::{route, RouterConfig, RouterReport, VictimPolicy};
+pub use incremental::StepComposer;
+pub use router::{route, try_route, RouterConfig, RouterReport, VictimPolicy};
 pub use trace::{Request, RequestTrace};
 
 use crate::arch::ArchConfig;
 use crate::dataflow::{Dataflow, Workload};
 use crate::hbm::PageMap;
-use crate::sim::{Cycle, ProgramArena};
+use crate::sim::Cycle;
 use crate::util::Rng;
 
 /// KV-cache page → HBM-channel placement policy (see the module docs).
@@ -198,6 +225,15 @@ pub struct SchedulerConfig {
     pub slo_ttft_ms: f64,
     /// TPOT service-level objective (ms) for goodput accounting.
     pub slo_tpot_ms: f64,
+    /// §Incremental: keep the previous step's sealed program and
+    /// cost-patch it in place when the op structure is unchanged,
+    /// resealing only on structural change. Bit-identical to the
+    /// full-rebuild path (`tests/incremental_differential.rs`).
+    pub incremental: bool,
+    /// §Incremental: serve channel-disjoint fault-free steps by merging
+    /// memoized per-request solo runs instead of executing the batch
+    /// DES. Bit-identical by the conservative-composition property.
+    pub memoize: bool,
 }
 
 impl SchedulerConfig {
@@ -217,12 +253,14 @@ impl SchedulerConfig {
             threads: 1,
             slo_ttft_ms: 2.0,
             slo_tpot_ms: 0.1,
+            incremental: true,
+            memoize: true,
         }
     }
 }
 
 /// Per-request serving metrics (cycles are absolute virtual-clock times).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RequestMetrics {
     pub id: usize,
     pub arrival: Cycle,
@@ -235,7 +273,7 @@ pub struct RequestMetrics {
 }
 
 /// Aggregate serving metrics of one trace replay.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServingReport {
     pub total_cycles: Cycle,
     pub steps: usize,
@@ -358,22 +396,86 @@ fn affine_range(arch: &ArchConfig, slot: usize, slots: usize) -> (u32, u32) {
     }
 }
 
-/// Replay a request trace through the scheduler and report serving
-/// metrics. Deterministic for a given `(arch, trace, cfg)`.
-pub fn simulate(arch: &ArchConfig, trace: &RequestTrace, cfg: &SchedulerConfig) -> ServingReport {
-    batch::validate_slots(arch, cfg.slots, cfg.group, cfg.dataflow)
-        .unwrap_or_else(|e| panic!("scheduler: {e}"));
-    assert!(cfg.chunk > 0, "prefill chunk must be >= 1 token");
-    for r in &trace.requests {
-        assert!(
-            r.kv_heads <= cfg.heads && cfg.heads % r.kv_heads == 0,
-            "request {}: kv_heads {} must divide the model's {} query heads",
-            r.id,
-            r.kv_heads,
-            cfg.heads
-        );
-    }
+/// Structured rejection of an impossible `(arch, trace, cfg)`
+/// combination. [`try_simulate`] / [`try_route`] return these instead of
+/// panicking so the `schedule` CLI can print one clean diagnostic and
+/// exit 1; the panicking wrappers [`simulate`] / [`router::route`] remain
+/// for callers that treat a bad config as a programming error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScheduleError {
+    /// Slot/group geometry incompatible with the mesh or dataflow
+    /// (from [`batch::validate_slots`]).
+    BadGeometry(String),
+    /// `chunk == 0`: a prefill chunk must carry at least one token.
+    ZeroChunk,
+    /// A trace request's `kv_heads` does not divide the model's query
+    /// heads (GQA requires an integer group size).
+    BadKvHeads { request: usize, kv_heads: u64, heads: u64 },
+}
 
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScheduleError::BadGeometry(msg) => f.write_str(msg),
+            ScheduleError::ZeroChunk => f.write_str("prefill chunk must be >= 1 token"),
+            ScheduleError::BadKvHeads { request, kv_heads, heads } => write!(
+                f,
+                "request {request}: kv_heads {kv_heads} must divide the model's \
+                 {heads} query heads"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {}
+
+/// Shared `(arch, trace, cfg)` validation behind [`try_simulate`] and
+/// [`try_route`]. Every rejection path is pinned by `mod tests` below.
+pub(crate) fn validate_config(
+    arch: &ArchConfig,
+    trace: &RequestTrace,
+    cfg: &SchedulerConfig,
+) -> Result<(), ScheduleError> {
+    batch::validate_slots(arch, cfg.slots, cfg.group, cfg.dataflow)
+        .map_err(ScheduleError::BadGeometry)?;
+    if cfg.chunk == 0 {
+        return Err(ScheduleError::ZeroChunk);
+    }
+    for r in &trace.requests {
+        if r.kv_heads == 0 || r.kv_heads > cfg.heads || cfg.heads % r.kv_heads != 0 {
+            return Err(ScheduleError::BadKvHeads {
+                request: r.id,
+                kv_heads: r.kv_heads,
+                heads: cfg.heads,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Replay a request trace through the scheduler and report serving
+/// metrics, rejecting impossible configurations up front. Deterministic
+/// for a given `(arch, trace, cfg)`.
+pub fn try_simulate(
+    arch: &ArchConfig,
+    trace: &RequestTrace,
+    cfg: &SchedulerConfig,
+) -> Result<ServingReport, ScheduleError> {
+    validate_config(arch, trace, cfg)?;
+    Ok(simulate_validated(arch, trace, cfg))
+}
+
+/// Panicking wrapper of [`try_simulate`] for callers that treat an
+/// invalid configuration as a programming error.
+pub fn simulate(arch: &ArchConfig, trace: &RequestTrace, cfg: &SchedulerConfig) -> ServingReport {
+    try_simulate(arch, trace, cfg).unwrap_or_else(|e| panic!("scheduler: {e}"))
+}
+
+fn simulate_validated(
+    arch: &ArchConfig,
+    trace: &RequestTrace,
+    cfg: &SchedulerConfig,
+) -> ServingReport {
     let n = trace.requests.len();
     let n_chan = arch.hbm.total_channels() as u64;
     let mut states: Vec<ReqState> = (0..n)
@@ -395,7 +497,13 @@ pub fn simulate(arch: &ArchConfig, trace: &RequestTrace, cfg: &SchedulerConfig) 
     let mut total_slot_cycles = 0u128;
     let mut rr_next = 0u64;
     let mut rng = Rng::new(cfg.seed);
-    let mut arena = ProgramArena::new();
+    let mut composer = StepComposer::new(cfg);
+    // Step scratch hoisted out of the loop (§Incremental): a
+    // million-request replay must not pay a round of Vec reallocation
+    // per step. `entries` alone stays per-step — it borrows `states`.
+    let mut active: Vec<(usize, usize)> = Vec::new();
+    let mut metas: Vec<(usize, usize, bool, u64)> = Vec::new();
+    let mut workloads: Vec<Workload> = Vec::new();
 
     loop {
         // Admission: continuous fills any free slot; static only admits
@@ -412,11 +520,8 @@ pub fn simulate(arch: &ArchConfig, trace: &RequestTrace, cfg: &SchedulerConfig) 
                 }
             }
         }
-        let active: Vec<(usize, usize)> = slots
-            .iter()
-            .enumerate()
-            .filter_map(|(s, r)| r.map(|ri| (s, ri)))
-            .collect();
+        active.clear();
+        active.extend(slots.iter().enumerate().filter_map(|(s, r)| r.map(|ri| (s, ri))));
         if active.is_empty() {
             if next_arrival >= n {
                 break;
@@ -427,8 +532,8 @@ pub fn simulate(arch: &ArchConfig, trace: &RequestTrace, cfg: &SchedulerConfig) 
         }
 
         // Build each active request's step workload and grow its pages.
-        let mut metas: Vec<(usize, usize, bool, u64)> = Vec::with_capacity(active.len());
-        let mut workloads: Vec<Workload> = Vec::with_capacity(active.len());
+        metas.clear();
+        workloads.clear();
         for &(slot, ri) in &active {
             let req = &trace.requests[ri];
             let st = &mut states[ri];
@@ -479,13 +584,10 @@ pub fn simulate(arch: &ArchConfig, trace: &RequestTrace, cfg: &SchedulerConfig) 
                     pages: &states[ri].pages,
                 })
                 .collect();
-            let bp =
-                batch::compose_in(&mut arena, arch, cfg.dataflow, cfg.group, cfg.slots, &entries);
-            let stats = bp.run_threads(cfg.threads);
-            arena.recycle(bp.program);
-            stats
+            composer.run_step(arch, cfg, &entries)
         };
-        clock += stats.makespan;
+        debug_assert!(stats.makespan > 0, "a non-empty step must advance the clock");
+        clock = clock.checked_add(stats.makespan).expect("virtual clock overflowed u64 cycles");
         steps += 1;
         hbm_bytes += stats.hbm_bytes;
         busy_slot_cycles += active.len() as u128 * stats.makespan as u128;
@@ -509,6 +611,9 @@ pub fn simulate(arch: &ArchConfig, trace: &RequestTrace, cfg: &SchedulerConfig) 
             }
             if st.generated >= req.output {
                 st.finish = Some(clock);
+                // Retired for good: free the page table's allocation so a
+                // long trace holds page state for in-flight requests only.
+                st.pages.release();
                 slots[slot] = None;
             }
         }
@@ -537,4 +642,74 @@ pub fn simulate(arch: &ArchConfig, trace: &RequestTrace, cfg: &SchedulerConfig) 
         0.0
     };
     finish_report(arch, cfg, clock, steps, tokens, hbm_bytes, occupancy, requests)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    fn cfg4(df: Dataflow) -> SchedulerConfig {
+        let mut cfg = SchedulerConfig::new(df);
+        cfg.slots = 4;
+        cfg.group = 2;
+        cfg.heads = 4;
+        cfg.head_dim = 64;
+        cfg
+    }
+
+    fn one_request() -> RequestTrace {
+        RequestTrace::from_rows(&[(0, 64, 2)], 2)
+    }
+
+    #[test]
+    fn bad_slot_count_is_a_structured_error() {
+        let arch = presets::table2(8);
+        let mut cfg = cfg4(Dataflow::Flash2);
+        cfg.slots = 3; // does not divide the 8-row mesh
+        let err = try_simulate(&arch, &one_request(), &cfg).unwrap_err();
+        assert!(matches!(err, ScheduleError::BadGeometry(_)), "{err:?}");
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn bad_group_edge_is_a_structured_error() {
+        let arch = presets::table2(8);
+        let mut cfg = cfg4(Dataflow::FlatColl);
+        cfg.group = 3; // flat groups must divide the slot band edge
+        let err = try_simulate(&arch, &one_request(), &cfg).unwrap_err();
+        assert!(matches!(err, ScheduleError::BadGeometry(_)), "{err:?}");
+    }
+
+    #[test]
+    fn zero_prefill_chunk_is_a_structured_error() {
+        let arch = presets::table2(8);
+        let mut cfg = cfg4(Dataflow::Flash2);
+        cfg.chunk = 0;
+        let err = try_simulate(&arch, &one_request(), &cfg).unwrap_err();
+        assert_eq!(err, ScheduleError::ZeroChunk);
+        assert_eq!(err.to_string(), "prefill chunk must be >= 1 token");
+    }
+
+    #[test]
+    fn non_dividing_kv_heads_is_a_structured_error() {
+        let arch = presets::table2(8);
+        let cfg = cfg4(Dataflow::Flash2);
+        let bad = RequestTrace::from_rows(&[(0, 64, 2), (0, 64, 2)], 3); // 3 ∤ 4
+        let err = try_simulate(&arch, &bad, &cfg).unwrap_err();
+        assert_eq!(err, ScheduleError::BadKvHeads { request: 0, kv_heads: 3, heads: 4 });
+        assert_eq!(
+            err.to_string(),
+            "request 0: kv_heads 3 must divide the model's 4 query heads"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduler: prefill chunk must be >= 1 token")]
+    fn panicking_wrapper_carries_the_same_message() {
+        let arch = presets::table2(8);
+        let mut cfg = cfg4(Dataflow::Flash2);
+        cfg.chunk = 0;
+        let _ = simulate(&arch, &one_request(), &cfg);
+    }
 }

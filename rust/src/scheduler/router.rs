@@ -14,13 +14,13 @@
 use std::collections::VecDeque;
 
 use super::{
-    affine_range, batch, finish_report, BatchEntry, PagePlacement, RequestMetrics, RequestTrace,
-    SchedulerConfig, ServingReport,
+    affine_range, finish_report, validate_config, BatchEntry, PagePlacement, RequestMetrics,
+    RequestTrace, ScheduleError, SchedulerConfig, ServingReport, StepComposer,
 };
 use crate::arch::ArchConfig;
 use crate::dataflow::Workload;
 use crate::hbm::PageMap;
-use crate::sim::{Cycle, FaultPlan, ProgramArena};
+use crate::sim::{Cycle, FaultPlan};
 use crate::util::Rng;
 
 /// Which in-flight request to evict under page pressure.
@@ -93,7 +93,7 @@ impl Default for RouterConfig {
 
 /// [`route`]'s result: the serving metrics of *completed* requests plus
 /// the lifecycle counters the degradation figures plot.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RouterReport {
     pub serving: ServingReport,
     pub completed: usize,
@@ -165,27 +165,37 @@ fn choose_victim(policy: VictimPolicy, cands: &[VictimCand]) -> usize {
         .idx
 }
 
-/// Replay `trace` through the graceful-degradation router. Deterministic
-/// for a given `(arch, trace, cfg, rc)` at every thread count.
+/// Replay `trace` through the graceful-degradation router, rejecting
+/// impossible configurations with a structured [`ScheduleError`] up
+/// front. Deterministic for a given `(arch, trace, cfg, rc)` at every
+/// thread count.
+pub fn try_route(
+    arch: &ArchConfig,
+    trace: &RequestTrace,
+    cfg: &SchedulerConfig,
+    rc: &RouterConfig,
+) -> Result<RouterReport, ScheduleError> {
+    validate_config(arch, trace, cfg)?;
+    Ok(route_validated(arch, trace, cfg, rc))
+}
+
+/// Panicking wrapper of [`try_route`] for callers that treat an invalid
+/// configuration as a programming error.
 pub fn route(
     arch: &ArchConfig,
     trace: &RequestTrace,
     cfg: &SchedulerConfig,
     rc: &RouterConfig,
 ) -> RouterReport {
-    batch::validate_slots(arch, cfg.slots, cfg.group, cfg.dataflow)
-        .unwrap_or_else(|e| panic!("router: {e}"));
-    assert!(cfg.chunk > 0, "prefill chunk must be >= 1 token");
-    for r in &trace.requests {
-        assert!(
-            r.kv_heads <= cfg.heads && cfg.heads % r.kv_heads == 0,
-            "request {}: kv_heads {} must divide the model's {} query heads",
-            r.id,
-            r.kv_heads,
-            cfg.heads
-        );
-    }
+    try_route(arch, trace, cfg, rc).unwrap_or_else(|e| panic!("router: {e}"))
+}
 
+fn route_validated(
+    arch: &ArchConfig,
+    trace: &RequestTrace,
+    cfg: &SchedulerConfig,
+    rc: &RouterConfig,
+) -> RouterReport {
     let n = trace.requests.len();
     let n_chan = arch.hbm.total_channels() as u64;
     let mut states: Vec<RState> = trace
@@ -215,7 +225,13 @@ pub fn route(
     let mut total_slot_cycles = 0u128;
     let mut rr_next = 0u64;
     let mut rng = Rng::new(cfg.seed);
-    let mut arena = ProgramArena::new();
+    let mut composer = StepComposer::new(cfg);
+    // Step scratch hoisted out of the loop (§Incremental): a
+    // million-request replay must not pay a round of Vec reallocation
+    // per step. `entries` alone stays per-step — it borrows `states`.
+    let mut active: Vec<(usize, usize)> = Vec::new();
+    let mut metas: Vec<(usize, usize, bool, u64)> = Vec::new();
+    let mut workloads: Vec<Workload> = Vec::new();
     let mut admit_ctr = 0u64;
     let (mut expired, mut preemptions, mut retries, mut band_evictions) = (0usize, 0, 0, 0);
 
@@ -242,6 +258,8 @@ pub fn route(
                 continue;
             }
             if let Some(ri) = slot.take() {
+                // Per-attempt TTFT: the next delivered token re-arms it.
+                states[ri].first_token = None;
                 waiting.push_front(ri);
                 band_evictions += 1;
             }
@@ -264,8 +282,10 @@ pub fn route(
                     st.deadline_base = clock;
                     st.prefill_done = 0;
                     st.rebuild_to = trace.requests[ri].prompt + st.generated;
+                    st.first_token = None; // per-attempt TTFT
                     waiting.push_back(ri);
                 } else {
+                    st.pages.release();
                     st.expired = true;
                     expired += 1;
                 }
@@ -279,9 +299,10 @@ pub fn route(
                     st.retries += 1;
                     retries += 1;
                     st.deadline_base = clock;
+                    st.first_token = None; // per-attempt TTFT
                     true
                 } else {
-                    st.pages.reset();
+                    st.pages.release();
                     st.expired = true;
                     expired += 1;
                     false
@@ -343,8 +364,8 @@ pub fn route(
             slots[slot] = Some(ri);
         }
 
-        let active: Vec<(usize, usize)> =
-            slots.iter().enumerate().filter_map(|(s, r)| r.map(|ri| (s, ri))).collect();
+        active.clear();
+        active.extend(slots.iter().enumerate().filter_map(|(s, r)| r.map(|ri| (s, ri))));
         if active.is_empty() {
             if waiting.is_empty() && next_arrival >= n {
                 break;
@@ -357,7 +378,7 @@ pub fn route(
                     next_arrival += 1;
                 }
                 for ri in waiting.drain(..) {
-                    states[ri].pages.reset();
+                    states[ri].pages.release();
                     states[ri].expired = true;
                     expired += 1;
                 }
@@ -374,8 +395,8 @@ pub fn route(
         // Build each active request's step workload (prefill chunks run
         // until the cache covers `rebuild_to`, so evicted requests pay
         // their rebuild as real traffic).
-        let mut metas: Vec<(usize, usize, bool, u64)> = Vec::with_capacity(active.len());
-        let mut workloads: Vec<Workload> = Vec::with_capacity(active.len());
+        metas.clear();
+        workloads.clear();
         for &(slot, ri) in &active {
             let req = &trace.requests[ri];
             let st = &states[ri];
@@ -419,7 +440,7 @@ pub fn route(
                 if metas.len() == 1 {
                     let (slot, ri, _, _) = metas[0];
                     slots[slot] = None;
-                    states[ri].pages.reset();
+                    states[ri].pages.release();
                     states[ri].expired = true;
                     expired += 1;
                     metas.clear();
@@ -449,6 +470,7 @@ pub fn route(
                 st.pages.reset();
                 st.prefill_done = 0;
                 st.rebuild_to = trace.requests[ri].prompt + st.generated;
+                st.first_token = None; // per-attempt TTFT
                 waiting.push_back(ri);
                 preemptions += 1;
                 metas.remove(k);
@@ -484,20 +506,14 @@ pub fn route(
                     pages: &states[ri].pages,
                 })
                 .collect();
-            let bp =
-                batch::compose_in(&mut arena, arch, cfg.dataflow, cfg.group, cfg.slots, &entries);
             let plan = rc.faults.shifted(clock);
-            let (stats, affected) = if plan.is_none() {
-                (bp.run_threads(cfg.threads), Vec::new())
+            if plan.is_none() {
+                (composer.run_step(arch, cfg, &entries), Vec::new())
             } else {
-                let (stats, fr) = bp.run_faulted(cfg.threads, &plan);
-                let affected = bp.affected_entries(&fr);
-                (stats, affected)
-            };
-            arena.recycle(bp.program);
-            (stats, affected)
+                composer.run_step_faulted(arch, cfg, &entries, &plan)
+            }
         };
-        clock += stats.makespan;
+        clock = clock.checked_add(stats.makespan).expect("virtual clock overflowed u64 cycles");
         steps += 1;
         hbm_bytes += stats.hbm_bytes;
         busy_slot_cycles += metas.len() as u128 * stats.makespan as u128;
@@ -509,6 +525,8 @@ pub fn route(
         for (k, &(slot, ri, is_prefill, len)) in metas.iter().enumerate() {
             if affected.binary_search(&k).is_ok() {
                 slots[slot] = None;
+                // Per-attempt TTFT: the next delivered token re-arms it.
+                states[ri].first_token = None;
                 waiting.push_front(ri);
                 band_evictions += 1;
                 continue;
@@ -526,11 +544,19 @@ pub fn route(
                     tokens += 1;
                 }
             } else {
+                if st.first_token.is_none() {
+                    // First token delivered by this attempt: a mid-decode
+                    // requeue cleared the mark, so TTFT measures service
+                    // after the last disruption (§Router, per-attempt).
+                    st.first_token = Some(clock);
+                }
                 st.generated += 1;
                 tokens += 1;
             }
             if st.generated >= req.output {
                 st.finish = Some(clock);
+                // Retired for good: free the page table's allocation.
+                st.pages.release();
                 slots[slot] = None;
             }
         }
@@ -707,6 +733,30 @@ mod tests {
         assert_eq!(r.completed, 0);
         assert_eq!(r.expired, trace.requests.len());
         assert_eq!(r.retries, trace.requests.len());
+    }
+
+    /// §Router per-attempt TTFT: a request band-evicted *mid-decode* must
+    /// not keep the first-token timestamp of its aborted attempt. Before
+    /// the fix `first_token` survived the requeue, so the faulted run
+    /// reported the same TTFT as the fault-free one — this test fails on
+    /// that behavior.
+    #[test]
+    fn requeued_requests_restart_ttft_per_attempt() {
+        let arch = presets::table2(8);
+        let trace = RequestTrace::from_rows(&[(0, 96, 6)], 2);
+        let cfg = tiny_cfg(Dataflow::Flash2);
+        let free = route(&arch, &trace, &cfg, &RouterConfig::default());
+        let t1 = free.serving.requests[0].first_token;
+        // Kill the request's band (slot 0 starts at tile 0) one cycle
+        // after the first token was delivered: the decoding request is
+        // re-queued onto a live band and must re-earn its first token.
+        let faults = FaultPlan::none().with_tile_death(0, t1 + 1);
+        let rc = RouterConfig { faults, ..RouterConfig::default() };
+        let got = route(&arch, &trace, &cfg, &rc);
+        assert_eq!(got.completed, 1);
+        assert!(got.band_evictions >= 1, "the death must actually evict");
+        let ft = got.serving.requests[0].first_token;
+        assert!(ft > t1, "per-attempt TTFT: first token {ft} must postdate the eviction at {t1}");
     }
 
     #[test]

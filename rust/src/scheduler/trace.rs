@@ -164,6 +164,30 @@ impl RequestTrace {
     pub fn total_output_tokens(&self) -> u64 {
         self.requests.iter().map(|r| r.output).sum()
     }
+
+    /// Deterministic synthetic stream of `n` requests for scale testing
+    /// (§Incremental in `crate::scheduler`): shapes cycle through a small
+    /// `(prompt, output, kv_heads)` palette — recurring shapes are what a
+    /// production stream looks like, and exactly what the step composer's
+    /// solo memo feeds on — with arrivals staggered `gap` cycles apart.
+    /// Every palette `kv_heads` divides 4 (and hence any larger
+    /// power-of-two head count), so the default model configs accept it.
+    pub fn synthetic(n: usize, gap: u64) -> Self {
+        const PALETTE: [(u64, u64, u64); 6] = [
+            (384, 6, 2),
+            (768, 8, 4),
+            (256, 4, 1),
+            (512, 6, 2),
+            (640, 8, 4),
+            (128, 12, 1),
+        ];
+        let mut requests = Vec::with_capacity(n);
+        for id in 0..n {
+            let (prompt, output, kv_heads) = PALETTE[id % PALETTE.len()];
+            requests.push(Request { id, arrival: id as u64 * gap, prompt, output, kv_heads });
+        }
+        Self { requests }
+    }
 }
 
 #[cfg(test)]
@@ -231,6 +255,19 @@ mod tests {
         // Too many columns.
         let e = RequestTrace::parse("0,128,4,8,9\n", 8).unwrap_err();
         assert!(e.contains("too many"), "{e}");
+    }
+
+    #[test]
+    fn synthetic_traces_are_deterministic_valid_and_recurrent() {
+        let t = RequestTrace::synthetic(1000, 64);
+        assert_eq!(t.requests.len(), 1000);
+        assert!(t.requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert!(t.requests.iter().all(|r| r.prompt > 0 && r.output > 0 && r.kv_heads > 0));
+        assert_eq!(t.requests, RequestTrace::synthetic(1000, 64).requests);
+        // Shapes recur with the palette period — the §Incremental solo
+        // memo depends on a bounded shape set.
+        assert_eq!(t.requests[0].prompt, t.requests[6].prompt);
+        assert_eq!(t.requests[1].kv_heads, t.requests[7].kv_heads);
     }
 
     #[test]

@@ -599,6 +599,38 @@ impl Program {
         self.sealed = false;
     }
 
+    /// §Incremental: overwrite this sealed program's *cost* fields
+    /// (occupancy, latency, `hbm_bytes`, plus `flops`/`fold`) with those
+    /// of `src`, keeping the sealed dependents + §Shard CSRs — legal
+    /// because both partitions depend only on op *structure* (resource,
+    /// component, tile, dependency topology), which is verified identical
+    /// op for op first. Returns `false` without mutating anything when
+    /// the structures differ; the caller must then rebuild and reseal.
+    pub(crate) fn patch_costs_from(&mut self, src: &Program) -> bool {
+        debug_assert!(self.sealed, "patch_costs_from targets a sealed program");
+        if self.ops.len() != src.ops.len() || self.n_resources != src.n_resources {
+            return false;
+        }
+        for (a, b) in self.ops.iter().zip(src.ops.iter()) {
+            if a.resource != b.resource
+                || a.component != b.component
+                || a.tile != b.tile
+                || self.deps_pool[a.deps_start as usize..(a.deps_start + a.deps_len) as usize]
+                    != src.deps_pool[b.deps_start as usize..(b.deps_start + b.deps_len) as usize]
+            {
+                return false;
+            }
+        }
+        for (a, b) in self.ops.iter_mut().zip(src.ops.iter()) {
+            a.occupancy = b.occupancy;
+            a.latency = b.latency;
+            a.hbm_bytes = b.hbm_bytes;
+        }
+        self.flops = src.flops;
+        self.fold = src.fold;
+        true
+    }
+
     /// Dependency ids of an op (raw op indices).
     #[inline]
     pub fn deps_of(&self, op: &Op) -> &[u32] {

@@ -1,0 +1,97 @@
+//! CLI-level pins for the `schedule` subcommand's structured rejection
+//! paths: an impossible configuration must produce one clean
+//! `error: ...` diagnostic on stderr and exit code 1 — never a panic
+//! backtrace. The library-level rejection paths themselves are pinned in
+//! `scheduler::tests`; these tests cover the surfacing.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_flatattention"))
+}
+
+fn write_trace(name: &str, body: &str) -> PathBuf {
+    let path = std::env::temp_dir().join(name);
+    std::fs::write(&path, body).expect("write trace file");
+    path
+}
+
+/// The per-request `kv_heads` CSV column can violate the model config
+/// even when the CLI's own `--kv-heads` pre-check passes — this is the
+/// rejection that must flow out of `try_simulate` as a clean exit 1.
+#[test]
+fn schedule_rejects_non_dividing_trace_kv_heads_cleanly() {
+    let path = write_trace("flatattn_cli_bad_kv.csv", "0,64,2,3\n");
+    let out = bin()
+        .args(["schedule", "--trace"])
+        .arg(&path)
+        .args(["--heads", "4", "--d", "64", "--dataflow", "flash2"])
+        .output()
+        .expect("run schedule");
+    assert_eq!(out.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        err.contains("error: request 0: kv_heads 3 must divide the model's 4 query heads"),
+        "stderr: {err}"
+    );
+    assert!(!err.contains("panicked"), "no backtrace wanted: {err}");
+}
+
+/// Router options route through `try_route`, which shares the same
+/// validation — and the same clean surfacing.
+#[test]
+fn schedule_router_path_rejects_the_same_way() {
+    let path = write_trace("flatattn_cli_bad_kv_router.csv", "0,64,2,3\n");
+    let out = bin()
+        .args(["schedule", "--trace"])
+        .arg(&path)
+        .args(["--heads", "4", "--d", "64", "--dataflow", "flash2", "--deadline", "1000000"])
+        .output()
+        .expect("run schedule");
+    assert_eq!(out.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("kv_heads 3 must divide"), "stderr: {err}");
+    assert!(!err.contains("panicked"), "no backtrace wanted: {err}");
+}
+
+/// `--trace synthetic:N[:GAP]` streams the deterministic recurring-shape
+/// trace (the bench's million-request path) straight from the CLI; a
+/// malformed spec gets the same clean exit-1 surfacing as a bad config.
+#[test]
+fn schedule_replays_a_synthetic_stream_and_rejects_bad_specs() {
+    let out = bin()
+        .args(["schedule", "--trace", "synthetic:12", "--arch", "table2-8", "--slots", "4"])
+        .args(["--group", "2", "--chunk", "128", "--page-tokens", "32", "--heads", "4"])
+        .args(["--d", "64", "--dataflow", "flash2"])
+        .output()
+        .expect("run schedule");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {err}");
+    assert!(String::from_utf8_lossy(&out.stdout).contains("FA-2"));
+
+    let out = bin()
+        .args(["schedule", "--trace", "synthetic:zero", "--heads", "4", "--d", "64"])
+        .output()
+        .expect("run schedule");
+    assert_eq!(out.status.code(), Some(1));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("expected synthetic:N[:GAP]"), "stderr: {err}");
+    assert!(!err.contains("panicked"), "no backtrace wanted: {err}");
+}
+
+#[test]
+fn schedule_runs_a_tiny_trace_end_to_end() {
+    let path = write_trace("flatattn_cli_ok.csv", "0,64,2\n");
+    let out = bin()
+        .args(["schedule", "--trace"])
+        .arg(&path)
+        .args(["--heads", "4", "--kv-heads", "2", "--d", "64", "--chunk", "64"])
+        .args(["--dataflow", "flash2"])
+        .output()
+        .expect("run schedule");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert_eq!(out.status.code(), Some(0), "stderr: {err}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("FA-2"), "{stdout}");
+}

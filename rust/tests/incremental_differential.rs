@@ -1,0 +1,148 @@
+//! §Incremental replay differential wall.
+//!
+//! The step composer's two levers — in-place cost patching of the sealed
+//! step program and memoized solo-run merging — are pure optimizations:
+//! every mode must reproduce the full-rebuild scheduler **bit for bit**,
+//! reports compared field by field (`ServingReport`/`RouterReport`
+//! derive `PartialEq`, so `f64` metrics must match exactly, not within a
+//! tolerance). The axes here follow the serving feature matrix: page
+//! placements × dataflows × preemption on/off × fault plans, including
+//! the band-death requeue and deadline-retry lifecycle paths.
+
+use flatattention::arch::presets;
+use flatattention::dataflow::{Dataflow, ALL_DATAFLOWS};
+use flatattention::scheduler::{
+    route, simulate, RequestTrace, RouterConfig, SchedulerConfig, VictimPolicy, ALL_PLACEMENTS,
+};
+use flatattention::sim::FaultPlan;
+
+/// (incremental, memoize) — every lever combination beyond the baseline.
+const MODES: [(bool, bool); 3] = [(true, false), (false, true), (true, true)];
+
+fn tiny_cfg(df: Dataflow) -> SchedulerConfig {
+    let mut cfg = SchedulerConfig::new(df);
+    cfg.slots = 4;
+    cfg.group = 2;
+    cfg.chunk = 96;
+    cfg.page_tokens = 32;
+    cfg.heads = 4;
+    cfg.head_dim = 64;
+    cfg
+}
+
+/// The reference mode: full rebuild + full DES every step.
+fn full_rebuild(cfg: &SchedulerConfig) -> SchedulerConfig {
+    let mut c = cfg.clone();
+    c.incremental = false;
+    c.memoize = false;
+    c
+}
+
+fn mixed_trace() -> RequestTrace {
+    RequestTrace::from_rows(
+        &[(0, 160, 4), (0, 96, 8), (5_000, 200, 3), (20_000, 64, 6), (40_000, 128, 5)],
+        2,
+    )
+}
+
+#[test]
+fn simulate_modes_match_across_placements_and_dataflows() {
+    let arch = presets::table2(8);
+    let trace = mixed_trace();
+    for df in ALL_DATAFLOWS {
+        for placement in ALL_PLACEMENTS {
+            let mut cfg = tiny_cfg(df);
+            cfg.placement = placement;
+            let want = simulate(&arch, &trace, &full_rebuild(&cfg));
+            for (inc, memo) in MODES {
+                let mut c = cfg.clone();
+                c.incremental = inc;
+                c.memoize = memo;
+                let got = simulate(&arch, &trace, &c);
+                assert_eq!(got, want, "{df:?}/{placement:?} inc={inc} memo={memo}");
+            }
+        }
+    }
+}
+
+/// Faulted steps compose incrementally but never memoize; a mid-step
+/// band death re-queues its request (the §Router band-eviction path) and
+/// page pressure evicts or gates admission depending on `preemption`.
+/// All of it must replay identically in every composer mode.
+#[test]
+fn router_modes_match_under_faults_preemption_and_band_death() {
+    let arch = presets::table2(8);
+    let trace = RequestTrace::from_rows(
+        &[(0, 160, 4), (0, 96, 8), (0, 200, 3), (0, 64, 6), (40_000, 128, 5)],
+        2,
+    );
+    // Band 3 (first tile 48) dies almost immediately; every channel runs
+    // at half bandwidth for the whole trace.
+    let mut death = FaultPlan::none().with_tile_death(48, 1);
+    for c in 0..arch.hbm.total_channels() as u32 {
+        death = death.with_derate(c, 0, u64::MAX / 2, 2, 1);
+    }
+    for df in [Dataflow::Flash2, Dataflow::FlatColl] {
+        let cfg = tiny_cfg(df);
+        for preemption in [true, false] {
+            for plan in [FaultPlan::none(), death.clone()] {
+                let faulted = !plan.is_none();
+                let rc = RouterConfig {
+                    faults: plan,
+                    max_total_pages: 12,
+                    victim: VictimPolicy::Newest,
+                    preemption,
+                    ..RouterConfig::default()
+                };
+                let want = route(&arch, &trace, &full_rebuild(&cfg), &rc);
+                if faulted {
+                    assert!(want.band_evictions >= 1, "the dying band must requeue its request");
+                }
+                for (inc, memo) in MODES {
+                    let mut c = cfg.clone();
+                    c.incremental = inc;
+                    c.memoize = memo;
+                    let got = route(&arch, &trace, &c, &rc);
+                    assert_eq!(
+                        got, want,
+                        "{df:?} preemption={preemption} faulted={faulted} inc={inc} memo={memo}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn router_modes_match_under_deadline_retries() {
+    let arch = presets::table2(8);
+    let trace = mixed_trace();
+    let cfg = tiny_cfg(Dataflow::Flash2);
+    let rc = RouterConfig { deadline: 1, max_retries: 1, ..RouterConfig::default() };
+    let want = route(&arch, &trace, &full_rebuild(&cfg), &rc);
+    assert!(want.retries >= 1, "the 1-cycle deadline must trigger retries");
+    for (inc, memo) in MODES {
+        let mut c = cfg.clone();
+        c.incremental = inc;
+        c.memoize = memo;
+        assert_eq!(route(&arch, &trace, &c, &rc), want, "inc={inc} memo={memo}");
+    }
+}
+
+/// The recurrent synthetic stream is the memo's best case (a bounded
+/// shape palette at steady state) — and exactly where a subtly wrong
+/// merge rule would silently skew the serving metrics.
+#[test]
+fn synthetic_stream_replays_identically_in_every_mode() {
+    let arch = presets::table2(8);
+    let trace = RequestTrace::synthetic(48, 2_000);
+    let cfg = tiny_cfg(Dataflow::Flash2);
+    let want = simulate(&arch, &trace, &full_rebuild(&cfg));
+    assert_eq!(want.requests.len(), 48, "everyone completes");
+    for (inc, memo) in MODES {
+        let mut c = cfg.clone();
+        c.incremental = inc;
+        c.memoize = memo;
+        assert_eq!(simulate(&arch, &trace, &c), want, "inc={inc} memo={memo}");
+    }
+}

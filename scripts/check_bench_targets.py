@@ -22,6 +22,16 @@ Targets (mirroring the asserts/WARNINGs inside the bench harnesses):
                   degraded_over_faultfree_tokens_per_s >= 0.6 (router keeps
                                          most throughput with 1/8 of the
                                          HBM channels at half bandwidth)
+                  step_compose_speedup   >= 5.0 (incremental compose +
+                                         memoized delta re-simulation vs a
+                                         full per-step rebuild on the
+                                         recurring-shape stream)
+                  synthetic_stream_requests_per_s >= 1000 (the >= 1M-request
+                                         synthetic replay completes and is
+                                         bounded by the scheduler loop,
+                                         not the DES; smoke runs a scaled
+                                         stream, recorded honestly in
+                                         synthetic_stream_requests)
   all three       roofline_utilization   in (0, 1.0]: the analytical lower
                                          bound (analysis::Roofline) never
                                          exceeds the simulated run time —
@@ -98,6 +108,8 @@ if sch:
     for k in rows:
         require("schedule_sweep", sch, k, lo=1.5)
     require("schedule_sweep", sch, "degraded_over_faultfree_tokens_per_s", lo=0.6)
+    require("schedule_sweep", sch, "step_compose_speedup", lo=5.0)
+    require("schedule_sweep", sch, "synthetic_stream_requests_per_s", lo=1000.0)
 
 # Roofline soundness: every bench records its utilization against the
 # analytical lower bound; > 1.0 would mean the simulated run undercut the
