@@ -13,9 +13,10 @@ mod harness;
 use flatattention::arch::presets;
 use flatattention::dataflow::{set_template_stamping, Dataflow};
 use flatattention::scheduler::{
-    route, simulate, BatchPolicy, RequestTrace, RouterConfig, SchedulerConfig,
+    route, simulate, try_simulate_with, BatchPolicy, RequestTrace, RouterConfig, SchedulerConfig,
 };
 use flatattention::sim::FaultPlan;
+use flatattention::telemetry::RunTelemetry;
 
 const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_schedule_sweep.json");
 
@@ -197,6 +198,43 @@ fn main() {
         rps >= 1_000.0,
         "synthetic stream replayed at {rps:.0} requests/s, below the 1000/s floor"
     );
+
+    // §Telemetry: replay the mixed trace with no sink (the default path —
+    // the scheduler entry points take Option<&mut RunTelemetry> and None
+    // must stay free) and with the full sink attached (windowed metrics +
+    // lifecycle trace). The off/on wall-clock ratio is recorded and gated
+    // >= 0.95 by scripts/check_bench_targets.py: instrumentation may cost
+    // at most ~5%. The sink's engine_ counters also expose the composer's
+    // patch/memo effectiveness as hit-rate metrics.
+    harness::section("telemetry overhead (mixed trace, flash2)");
+    rec.bench("telemetry/off", iters, || simulate(&arch, &trace, &inc_cfg).tokens);
+    let mut tel_last = None;
+    rec.bench("telemetry/on", iters, || {
+        let mut tel = RunTelemetry::new().with_trace();
+        let r =
+            try_simulate_with(&arch, &trace, &inc_cfg, Some(&mut tel)).expect("valid config");
+        tel_last = Some(tel);
+        r.tokens
+    });
+    let t_off = rec.min_of("telemetry/off").expect("recorded");
+    let t_on = rec.min_of("telemetry/on").expect("recorded");
+    let retained = t_off / t_on.max(1e-12);
+    println!(
+        "  off {:.1} ms vs on {:.1} ms -> off/on {retained:.3} (target >= 0.95)",
+        t_off * 1e3,
+        t_on * 1e3
+    );
+    rec.metric("telemetry_overhead", retained);
+    let tel = tel_last.expect("ran");
+    let hits = tel.metrics.counter("engine_solo_memo_hits") as f64;
+    let misses = tel.metrics.counter("engine_solo_memo_misses") as f64;
+    let patched = tel.metrics.counter("engine_steps_patched") as f64;
+    let resealed = tel.metrics.counter("engine_steps_resealed") as f64;
+    let memo_hit_rate = hits / (hits + misses).max(1.0);
+    let patch_hit_rate = patched / (patched + resealed).max(1.0);
+    println!("  memo hit rate {memo_hit_rate:.3}, patch hit rate {patch_hit_rate:.3}");
+    rec.metric("memo_hit_rate", memo_hit_rate);
+    rec.metric("patch_hit_rate", patch_hit_rate);
 
     // Roofline cross-check on the fault-free serving replay: the bytes it
     // moved over the aggregate HBM bandwidth bound any schedule's run

@@ -18,6 +18,7 @@ pub mod dataflow;
 pub mod functional;
 pub mod runtime;
 pub mod scheduler;
+pub mod telemetry;
 pub mod coordinator;
 pub mod analytics;
 pub mod report;

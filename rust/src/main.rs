@@ -25,10 +25,11 @@ use flatattention::report::{self, ReportOpts};
 use flatattention::runtime::{artifacts_available, default_artifact_dir};
 use flatattention::scheduler::batch::validate_slots;
 use flatattention::scheduler::{
-    try_route, try_simulate, BatchPolicy, PagePlacement, RequestTrace, RouterConfig,
-    SchedulerConfig, VictimPolicy,
+    try_route, try_route_with, try_simulate, try_simulate_with, BatchPolicy, PagePlacement,
+    RequestTrace, RouterConfig, SchedulerConfig, VictimPolicy,
 };
 use flatattention::sim::FaultPlan;
+use flatattention::telemetry::RunTelemetry;
 #[cfg(feature = "pjrt")]
 use flatattention::runtime::Runtime;
 use flatattention::util::cli::{parse, Args};
@@ -38,7 +39,7 @@ fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = match parse(
         &raw,
-        &["quick", "help", "pjrt-only", "causal", "decode", "static", "verify"],
+        &["quick", "help", "pjrt-only", "causal", "decode", "static", "verify", "profile"],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -79,7 +80,7 @@ fn print_usage() {
         "flatattention — FlatAttention dataflow + fabric collectives co-optimization (reproduction)
 
 USAGE:
-  flatattention report <fig3|fig4|fig5a|fig5b|fig5c|table1|table2|section2|area|headline|ablations|serving|schedule|robustness|all>
+  flatattention report <fig3|fig4|fig5a|fig5b|fig5c|table1|table2|section2|area|headline|ablations|serving|schedule|robustness|telemetry|all>
                       [--quick] [--threads N] [--out results.json]
   flatattention run    --dataflow <fa2|fa3|flat|flatcoll|flatasyn> [--seq 4096] [--d 128]
                       [--heads 32] [--batch 2] [--group 32] [--arch table1] [--threads N]
@@ -98,6 +99,14 @@ USAGE:
                       [--victim newest|fewest-pages|most-remaining]
                       SPEC: ';'-separated off:CH@F-U | slow:CH@F-UxN[/D] | noc@F-UxN[/D]
                       | die:TILE@AT  (e.g. \"slow:8@0-4000000x4;die:60@1200000\")
+                      Telemetry (needs a single --dataflow, not 'all'):
+                      [--trace-out FILE]    request-lifecycle chrome-trace JSON
+                                            (open in chrome://tracing or Perfetto)
+                      [--metrics-out FILE]  Prometheus text snapshot of the run metrics
+                      [--profile]           wall-clock phase table (compose/patch/seal/
+                                            verify/execute/metrics) on stdout
+                      `report telemetry` renders utilization-over-time + lifecycle
+                      waterfall tables for a canned fault-injected router run
   flatattention validate [--seq 256] [--d 64] [--group 4] [--pjrt-only]
   flatattention lint   [--quick]   (structural verifier + roofline cross-check sweep:
                       dataflows x presets x fold modes x paged batches x fault plans)
@@ -215,10 +224,14 @@ fn cmd_report(args: &Args) -> i32 {
     if all || which == "robustness" {
         println!("{}", report::robustness::render(&opts, Some(&mut store)));
     }
+    if all || which == "telemetry" {
+        println!("{}", report::telemetry::render(&opts, Some(&mut store)));
+    }
     if !matches!(
         which,
         "all" | "table1" | "table2" | "section2" | "area" | "fig3" | "fig4" | "fig5a" | "fig5b"
             | "fig5c" | "headline" | "ablations" | "serving" | "schedule" | "robustness"
+            | "telemetry"
     ) {
         eprintln!("unknown report '{which}'");
         return 1;
@@ -448,6 +461,13 @@ fn cmd_schedule(args: &Args) -> i32 {
         preemption,
     });
 
+    // Telemetry exports: any of these attaches a per-run sink (metrics
+    // registry + optional lifecycle trace / phase profiler) to the run.
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let metrics_out = args.get("metrics-out").map(str::to_string);
+    let profile = args.flag("profile");
+    let telemetry_on = trace_out.is_some() || metrics_out.is_some() || profile;
+
     let df_arg = args.get_or("dataflow", "all");
     let dataflows: Vec<Dataflow> = if df_arg == "all" {
         flatattention::dataflow::ALL_DATAFLOWS.to_vec()
@@ -457,6 +477,9 @@ fn cmd_schedule(args: &Args) -> i32 {
             None => return fail(&format!("unknown dataflow '{df_arg}'")),
         }
     };
+    if telemetry_on && dataflows.len() != 1 {
+        return fail("--trace-out/--metrics-out/--profile need a single --dataflow (not 'all')");
+    }
 
     println!(
         "serving schedule on {}: {} requests, slots={slots}, chunk={chunk}, pages={page_tokens} \
@@ -528,10 +551,22 @@ fn cmd_schedule(args: &Args) -> i32 {
         cfg.head_dim = head_dim;
         cfg.window = window;
         cfg.threads = args.get_usize("threads", 1).unwrap_or(1);
-        if let Some(rc) = &router_cfg {
+        let mut tel = if telemetry_on {
+            let mut t = RunTelemetry::new();
+            if trace_out.is_some() {
+                t = t.with_trace();
+            }
+            if profile {
+                t = t.with_profile();
+            }
+            Some(t)
+        } else {
+            None
+        };
+        let steps = if let Some(rc) = &router_cfg {
             // Invalid configs surface as one clean diagnostic + exit 1
             // (no panic backtrace), pinned by tests/cli_integration.rs.
-            let r = match try_route(&arch, &trace, &cfg, rc) {
+            let r = match try_route_with(&arch, &trace, &cfg, rc, tel.as_mut()) {
                 Ok(r) => r,
                 Err(e) => return fail(&e.to_string()),
             };
@@ -550,8 +585,9 @@ fn cmd_schedule(args: &Args) -> i32 {
                 r.preemptions,
                 r.dead_bands
             );
+            r.serving.steps
         } else {
-            let r = match try_simulate(&arch, &trace, &cfg) {
+            let r = match try_simulate_with(&arch, &trace, &cfg, tel.as_mut()) {
                 Ok(r) => r,
                 Err(e) => return fail(&e.to_string()),
             };
@@ -569,9 +605,42 @@ fn cmd_schedule(args: &Args) -> i32 {
                 r.hbm_bytes as f64 / 1e9,
                 r.steps
             );
+            r.steps
+        };
+        if let Some(t) = &tel {
+            let res = emit_telemetry(t, trace_out.as_deref(), metrics_out.as_deref(), steps);
+            if let Err(e) = res {
+                return fail(&e);
+            }
         }
     }
     0
+}
+
+/// Write the telemetry artifacts requested on `schedule`: the chrome-trace
+/// JSON (`--trace-out`), the Prometheus text snapshot (`--metrics-out`,
+/// including the mode-dependent `engine_*` section), and the `--profile`
+/// phase table on stdout.
+fn emit_telemetry(
+    tel: &RunTelemetry,
+    trace_out: Option<&str>,
+    metrics_out: Option<&str>,
+    steps: usize,
+) -> Result<(), String> {
+    if let Some(path) = trace_out {
+        let doc = tel.trace_json().expect("--trace-out enables the trace collector");
+        std::fs::write(path, doc.to_string()).map_err(|e| format!("writing {path}: {e}"))?;
+        println!("wrote {path} — open in chrome://tracing or Perfetto");
+    }
+    if let Some(path) = metrics_out {
+        std::fs::write(path, tel.metrics.to_prometheus(true))
+            .map_err(|e| format!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    if let Some(p) = &tel.profile {
+        print!("{}", p.render(steps as u64));
+    }
+    Ok(())
 }
 
 fn cmd_validate(args: &Args) -> i32 {

@@ -18,6 +18,7 @@ pub mod schedule;
 pub mod section2;
 pub mod serving;
 pub mod tables;
+pub mod telemetry;
 
 pub use ascii::Table;
 

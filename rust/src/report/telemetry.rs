@@ -1,0 +1,290 @@
+//! Telemetry figure (our extension): utilization-over-time and request
+//! lifecycle waterfall for one serving run.
+//!
+//! Replays the built-in mixed trace through the graceful-degradation
+//! router with a telemetry sink attached ([`crate::telemetry`]) and a
+//! mid-run tile death (so the lifecycle stream shows a band death and the
+//! resulting requeue), then renders what the raw `ServingReport` cannot
+//! show: how occupancy, HBM traffic and NoC-collective traffic evolve
+//! over virtual time, and where each request spent its life
+//! (queued → admitted → first token → completed, with requeue counts).
+
+use crate::arch::{presets, ArchConfig};
+use crate::coordinator::ResultStore;
+use crate::dataflow::Dataflow;
+use crate::report::{pct, ReportOpts, Table};
+use crate::scheduler::{simulate, try_route_with, RequestTrace, RouterConfig, SchedulerConfig};
+use crate::sim::{Cycle, FaultPlan};
+use crate::telemetry::{LifeEvent, RunTelemetry};
+use crate::util::json::Json;
+
+/// Display cap on utilization rows: windows are grouped so the table never
+/// exceeds this many rows regardless of run length.
+const MAX_UTIL_ROWS: usize = 12;
+
+/// Per-request waterfall record assembled from the lifecycle stream.
+#[derive(Default, Clone)]
+struct Waterfall {
+    arrival: Option<Cycle>,
+    admitted: Option<Cycle>,
+    first_token: Option<Cycle>,
+    end: Option<Cycle>,
+    outcome: &'static str,
+    requeues: u32,
+}
+
+fn waterfalls(events: &[LifeEvent]) -> Vec<(u32, Waterfall)> {
+    let mut map: std::collections::BTreeMap<u32, Waterfall> = Default::default();
+    for ev in events {
+        match *ev {
+            LifeEvent::Queued { req, t } => {
+                let w = map.entry(req).or_default();
+                if w.arrival.is_none() {
+                    w.arrival = Some(t);
+                }
+            }
+            LifeEvent::Admitted { req, t, .. } => {
+                let w = map.entry(req).or_default();
+                if w.admitted.is_none() {
+                    w.admitted = Some(t);
+                }
+            }
+            LifeEvent::FirstToken { req, t } => {
+                map.entry(req).or_default().first_token = Some(t);
+            }
+            LifeEvent::Completed { req, t } => {
+                let w = map.entry(req).or_default();
+                w.end = Some(t);
+                w.outcome = "completed";
+            }
+            LifeEvent::Dropped { req, t, cause } => {
+                let w = map.entry(req).or_default();
+                w.end = Some(t);
+                w.outcome = cause.label();
+            }
+            LifeEvent::Requeued { req, .. } => {
+                map.entry(req).or_default().requeues += 1;
+            }
+            _ => {}
+        }
+    }
+    map.into_iter().collect()
+}
+
+fn fmt_opt(c: Option<Cycle>) -> String {
+    c.map(|v| v.to_string()).unwrap_or_else(|| "-".to_string())
+}
+
+/// Render the telemetry figure; optionally record rows in `store`.
+pub fn render(opts: &ReportOpts, store: Option<&mut ResultStore>) -> String {
+    let (arch, mut cfg, setup) = if opts.quick {
+        let mut c = SchedulerConfig::new(Dataflow::Flash2);
+        c.group = 2;
+        c.chunk = 128;
+        c.page_tokens = 32;
+        (presets::table2(8), c, "table2-8x8, slots=4, chunk=128")
+    } else {
+        (presets::table1(), SchedulerConfig::new(Dataflow::Flash2), "Table I arch, slots=4")
+    };
+    cfg.threads = opts.threads;
+    let mut trace =
+        RequestTrace::builtin("mixed", super::schedule::KV_HEADS).expect("builtin trace");
+    if opts.quick {
+        trace.requests.truncate(6);
+        for r in &mut trace.requests {
+            r.prompt = r.prompt.min(256);
+            r.output = r.output.min(12);
+        }
+    }
+    render_on(&arch, &trace, &cfg, setup, store)
+}
+
+/// Render the telemetry figure for one `(arch, trace, cfg)` (shared by the
+/// CLI figure and the tiny-mesh smoke test).
+pub fn render_on(
+    arch: &ArchConfig,
+    trace: &RequestTrace,
+    cfg: &SchedulerConfig,
+    setup: &str,
+    store: Option<&mut ResultStore>,
+) -> String {
+    // Place a single tile death at a third of the fault-free makespan so
+    // the lifecycle stream exercises the degradation events.
+    let free = simulate(arch, trace, cfg);
+    let death_at = (free.total_cycles / 3).max(1);
+    let rows_per = arch.mesh_y / cfg.slots;
+    let dying_tile = ((cfg.slots - 1) * rows_per * arch.mesh_x) as u32;
+    let rc = RouterConfig {
+        faults: FaultPlan::none().with_tile_death(dying_tile, death_at),
+        ..RouterConfig::default()
+    };
+    let mut tel = RunTelemetry::new().with_trace();
+    let rep = try_route_with(arch, trace, cfg, &rc, Some(&mut tel)).expect("validated config");
+    let m = &tel.metrics;
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Telemetry — router run, mixed trace ({} requests, {setup}), tile {dying_tile} dies at \
+         cycle {death_at}\n\n",
+        trace.requests.len()
+    ));
+
+    // Lifecycle counters.
+    let mut t = Table::new(&["metric", "value"]);
+    for name in [
+        "requests_queued",
+        "requests_admitted",
+        "requests_completed",
+        "requests_expired",
+        "requeue_band_death",
+        "requeue_deadline_retry",
+        "requeue_preemption",
+        "bands_died",
+        "steps_total",
+        "tokens_generated",
+    ] {
+        t.row(vec![name.to_string(), m.counter(name).to_string()]);
+    }
+    t.row(vec!["peak_queue_depth".to_string(), m.gauge("peak_queue_depth").to_string()]);
+    t.row(vec!["peak_pages_in_use".to_string(), m.gauge("peak_pages_in_use").to_string()]);
+    if let Some(h) = m.hist("ttft_cycles") {
+        t.row(vec!["ttft_p50_cycles<=".to_string(), h.quantile_upper(500).to_string()]);
+    }
+    if let Some(h) = m.hist("tpot_cycles") {
+        t.row(vec!["tpot_p50_cycles<=".to_string(), h.quantile_upper(500).to_string()]);
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+
+    // Utilization over virtual time: slot occupancy plus HBM / NoC busy
+    // cycles (scheduled demand), grouped so the table stays bounded.
+    let busy = m.series("busy_slot_cycles");
+    let cap = m.series("slot_cycles");
+    if let (Some(busy), Some(cap)) = (busy, cap) {
+        let window = cap.window();
+        let n = cap.values().len();
+        let group = n.div_ceil(MAX_UTIL_ROWS).max(1);
+        let sum_lanes = |lanes: &[crate::telemetry::WindowSeries], lo: usize, hi: usize| -> u64 {
+            let mut acc = 0u64;
+            for w in lanes {
+                let v = w.values();
+                acc += v[lo.min(v.len())..hi.min(v.len())].iter().sum::<u64>();
+            }
+            acc
+        };
+        let mut t = Table::new(&["cycles", "occupancy", "hbm_busy_cyc", "noc_busy_cyc"]);
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + group).min(n);
+            let bv = busy.values();
+            let b: u64 = bv[lo.min(bv.len())..hi.min(bv.len())].iter().sum();
+            let c: u64 = cap.values()[lo..hi].iter().sum();
+            let occ = if c > 0 { b as f64 / c as f64 } else { 0.0 };
+            let hbm = sum_lanes(m.hbm_chan_busy.windows(), lo, hi);
+            let noc = sum_lanes(m.noc_slot_busy.windows(), lo, hi);
+            t.row(vec![
+                format!("{}..{}", lo as u64 * window, hi as u64 * window),
+                pct(occ),
+                hbm.to_string(),
+                noc.to_string(),
+            ]);
+            lo = hi;
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+
+    // Lifecycle waterfall.
+    let wf = tel.trace.as_ref().map(|tc| waterfalls(tc.events())).unwrap_or_default();
+    let mut t = Table::new(&[
+        "req",
+        "arrival",
+        "admitted",
+        "queue_wait",
+        "first_token",
+        "end",
+        "outcome",
+        "requeues",
+    ]);
+    for (req, w) in &wf {
+        let wait = match (w.arrival, w.admitted) {
+            (Some(a), Some(b)) => (b.saturating_sub(a)).to_string(),
+            _ => "-".to_string(),
+        };
+        t.row(vec![
+            req.to_string(),
+            fmt_opt(w.arrival),
+            fmt_opt(w.admitted),
+            wait,
+            fmt_opt(w.first_token),
+            fmt_opt(w.end),
+            w.outcome.to_string(),
+            w.requeues.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push_str(&format!(
+        "\nrouter: {} completed, {} expired, {} band evictions, {} dead bands at end\n",
+        rep.completed, rep.expired, rep.band_evictions, rep.dead_bands
+    ));
+
+    if let Some(store) = store {
+        let mut json: Vec<Json> = Vec::new();
+        for (req, w) in &wf {
+            json.push(Json::obj([
+                ("request", Json::num(*req as f64)),
+                ("arrival", Json::num(w.arrival.unwrap_or(0) as f64)),
+                ("admitted", Json::num(w.admitted.map(|v| v as f64).unwrap_or(-1.0))),
+                ("first_token", Json::num(w.first_token.map(|v| v as f64).unwrap_or(-1.0))),
+                ("end", Json::num(w.end.map(|v| v as f64).unwrap_or(-1.0))),
+                ("outcome", Json::str(w.outcome.to_string())),
+                ("requeues", Json::num(w.requeues as f64)),
+            ]));
+        }
+        json.push(Json::obj([
+            ("mode", Json::str("counters")),
+            ("requests_completed", Json::num(m.counter("requests_completed") as f64)),
+            ("requeue_band_death", Json::num(m.counter("requeue_band_death") as f64)),
+            ("bands_died", Json::num(m.counter("bands_died") as f64)),
+            ("steps_total", Json::num(m.counter("steps_total") as f64)),
+        ]));
+        store.add_json("telemetry", json);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// CI smoke: the full telemetry figure path on a tiny mesh — counters,
+    /// utilization windows and a waterfall row per request.
+    #[test]
+    fn telemetry_figure_smoke_tiny_mesh() {
+        let arch = presets::table2(8);
+        let trace = RequestTrace::from_rows(
+            &[(0, 160, 4), (0, 96, 8), (5_000, 200, 3), (20_000, 64, 6)],
+            2,
+        );
+        let mut cfg = SchedulerConfig::new(Dataflow::Flash2);
+        cfg.slots = 4;
+        cfg.group = 2;
+        cfg.chunk = 96;
+        cfg.page_tokens = 32;
+        cfg.heads = 4;
+        cfg.head_dim = 64;
+        let text = render_on(&arch, &trace, &cfg, "smoke", None);
+        assert!(text.contains("requests_completed"));
+        assert!(text.contains("occupancy"));
+        assert!(text.contains("first_token"));
+        // Every request appears in the waterfall (first column is the
+        // request id, left-aligned).
+        for req in 0..trace.requests.len() {
+            let marker = format!("{req} ");
+            assert!(
+                text.lines().any(|l| l.starts_with(&marker)),
+                "request {req} missing from waterfall:\n{text}"
+            );
+        }
+    }
+}

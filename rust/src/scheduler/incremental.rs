@@ -45,13 +45,17 @@
 //! force the full-rebuild path and compare reports field by field.
 
 use std::collections::HashMap;
+use std::time::Instant;
 
 use super::batch::{self, BatchEntry, BatchProgram};
 use super::SchedulerConfig;
 use crate::arch::ArchConfig;
 use crate::dataflow::Workload;
 use crate::hbm::HbmMap;
+use crate::sim::breakdown::Component;
+use crate::sim::program::Program;
 use crate::sim::{Breakdown, FaultPlan, ProgramArena, RunStats};
+use crate::telemetry::{profile, FaultNote, ProfPhase, Profiler, StepMode, StepProbe};
 
 /// Memo key of one entry's solo run: the slot pins the tile band (hence
 /// hop distances and the fold representative), the workload pins the op
@@ -71,6 +75,20 @@ struct SoloKey {
 /// cached and recomputed solo stats are identical by construction).
 const SOLO_CACHE_CAP: usize = 1 << 14;
 
+/// Memoized result of one solo run. Besides the [`RunStats`] the scheduler
+/// consumes, it carries the per-channel / NoC-collective occupancy sums the
+/// telemetry probe needs: on a memo hit no program exists to scan, and the
+/// conservation property (an entry's op costs are bit-identical solo vs in
+/// a batch) makes these sums additive, so merging them reproduces the batch
+/// scan exactly. Busy fields stay empty while the probe is disabled.
+struct SoloRun {
+    stats: RunStats,
+    /// Sparse `(channel, busy_cycles)` pairs of the entry's HBM traffic.
+    chan_busy: Box<[(u32, u64)]>,
+    /// Total NoC-collective (SumReduce/MaxReduce/Multicast) busy cycles.
+    noc_busy: u64,
+}
+
 /// Per-run step composer: owns the persistent sealed step program, the
 /// solo-run memo and the recycled build buffers. Construct one per
 /// `simulate`/`route` call — cached state is specific to one
@@ -86,7 +104,7 @@ pub struct StepComposer {
     /// Separate buffers for solo composes on memo misses.
     solo_arena: ProgramArena,
     cached: Option<BatchProgram>,
-    solo: HashMap<SoloKey, RunStats>,
+    solo: HashMap<SoloKey, SoloRun>,
     /// Union + per-entry scratch for the channel-mask disjointness gate.
     mask_union: Vec<u64>,
     mask_entry: Vec<u64>,
@@ -94,6 +112,12 @@ pub struct StepComposer {
     resealed: usize,
     memo_steps: usize,
     memo_hits: usize,
+    memo_misses: usize,
+    /// Telemetry probe, enabled by [`Self::enable_probe`]; when `None`
+    /// (the default) no per-step attribution work happens at all.
+    probe: Option<StepProbe>,
+    /// Wall-clock phase timers, enabled by [`Self::enable_profiling`].
+    profiler: Option<Profiler>,
 }
 
 impl StepComposer {
@@ -111,7 +135,36 @@ impl StepComposer {
             resealed: 0,
             memo_steps: 0,
             memo_hits: 0,
+            memo_misses: 0,
+            probe: None,
+            profiler: None,
         }
+    }
+
+    /// Attach the telemetry probe: every subsequent step fills per-channel
+    /// and per-slot busy attribution into [`Self::probe`]. Clears the solo
+    /// memo so cached entries (stored without busy data) are recomputed.
+    pub fn enable_probe(&mut self, n_chan: usize, slots: usize) {
+        self.probe = Some(StepProbe::new(n_chan, slots));
+        self.solo.clear();
+    }
+
+    /// The last executed step's probe, if [`Self::enable_probe`] was called.
+    pub fn probe(&self) -> Option<&StepProbe> {
+        self.probe.as_ref()
+    }
+
+    /// Attach wall-clock phase timers (also arms the global profiling gate
+    /// so `Program::seal` reports verify time).
+    pub fn enable_profiling(&mut self) {
+        profile::set_profiling(true);
+        self.profiler = Some(Profiler::new());
+    }
+
+    /// The accumulated phase timings, if [`Self::enable_profiling`] was
+    /// called.
+    pub fn profiler(&self) -> Option<&Profiler> {
+        self.profiler.as_ref()
     }
 
     /// Steps whose program was cost-patched in place (seal skipped).
@@ -134,6 +187,35 @@ impl StepComposer {
         self.memo_hits
     }
 
+    /// Solo-run memo misses (fresh solo compose + execute) across all
+    /// memoized steps.
+    pub fn memo_misses(&self) -> usize {
+        self.memo_misses
+    }
+
+    /// Start a wall-clock lap if profiling is on.
+    fn t0(&self) -> Option<Instant> {
+        self.profiler.as_ref().map(|_| Instant::now())
+    }
+
+    /// Close a lap into `phase`.
+    fn lap(&mut self, phase: ProfPhase, t: Option<Instant>) {
+        if let (Some(p), Some(t)) = (self.profiler.as_mut(), t) {
+            p.add_nanos(phase, t.elapsed().as_nanos() as u64);
+        }
+    }
+
+    /// Close a seal lap, splitting out the verify time `Program::seal`
+    /// reported through the thread-local accumulator.
+    fn lap_seal(&mut self, t: Option<Instant>) {
+        if let (Some(p), Some(t)) = (self.profiler.as_mut(), t) {
+            let total = t.elapsed().as_nanos() as u64;
+            let verify = profile::take_verify_nanos();
+            p.add_nanos(ProfPhase::Verify, verify);
+            p.add_nanos(ProfPhase::Seal, total.saturating_sub(verify));
+        }
+    }
+
     /// Compose (incrementally) and execute one fault-free step, serving
     /// it from the solo memo when the disjointness gate allows.
     pub fn run_step(
@@ -142,6 +224,10 @@ impl StepComposer {
         cfg: &SchedulerConfig,
         entries: &[BatchEntry<'_>],
     ) -> RunStats {
+        if let Some(p) = self.probe.as_mut() {
+            p.reset();
+            p.mode = StepMode::Memoized;
+        }
         if self.memoize {
             if let Some(stats) = self.try_memoized(arch, cfg, entries) {
                 self.memo_steps += 1;
@@ -163,11 +249,30 @@ impl StepComposer {
         plan: &FaultPlan,
     ) -> (RunStats, Vec<usize>) {
         let threads = cfg.threads;
-        self.with_composed(arch, cfg, entries, |bp| {
+        let want_note = self.probe.is_some();
+        let (stats, affected, note) = self.with_composed(arch, cfg, entries, |bp| {
             let (stats, fr) = bp.run_faulted(threads, plan);
             let affected = bp.affected_entries(&fr);
-            (stats, affected)
-        })
+            // Route the DES stall diagnostics (previously stderr-only via
+            // the fault-free panic path) into the telemetry event stream.
+            let note = (want_note && !(fr.killed.is_empty() && fr.stalled.is_empty())).then(|| {
+                let detail = if fr.stalled.is_empty() {
+                    format!("{} op(s) killed by tile death", fr.killed.len())
+                } else {
+                    crate::sim::engine::stall_diagnostics(&bp.program, &fr)
+                };
+                FaultNote {
+                    killed: fr.killed.len() as u32,
+                    stalled: fr.stalled.len() as u32,
+                    detail,
+                }
+            });
+            (stats, affected, note)
+        });
+        if let Some(p) = self.probe.as_mut() {
+            p.fault = note;
+        }
+        (stats, affected)
     }
 
     /// Produce this step's sealed [`BatchProgram`] — cost-patching the
@@ -182,21 +287,36 @@ impl StepComposer {
     ) -> R {
         let (df, group, slots) = (cfg.dataflow, cfg.group, cfg.slots);
         if !self.incremental {
-            let bp = batch::compose_in(&mut self.arena, arch, df, group, slots, entries);
+            let t = self.t0();
+            let mut bp =
+                batch::compose_unsealed_in(&mut self.arena, arch, df, group, slots, entries);
+            self.lap(ProfPhase::Compose, t);
+            let t = self.t0();
+            bp.program.seal();
+            self.lap_seal(t);
+            if let Some(probe) = self.probe.as_mut() {
+                fill_probe(probe, &bp.program, &bp.spans, entries, StepMode::Rebuilt);
+            }
+            let t = self.t0();
             let out = f(&bp);
+            self.lap(ProfPhase::Execute, t);
             self.arena.recycle(bp.program);
             return out;
         }
+        let t = self.t0();
         let scratch = batch::compose_unsealed_in(&mut self.arena, arch, df, group, slots, entries);
+        self.lap(ProfPhase::Compose, t);
         // `patch_costs_from` verifies structure before touching costs, so
         // a `false` here leaves the cached program intact — and the
         // failure path below discards it whole anyway.
+        let t = self.t0();
         let patched = match self.cached.as_mut() {
             Some(prev) if prev.spans == scratch.spans => {
                 prev.program.patch_costs_from(&scratch.program)
             }
             _ => false,
         };
+        self.lap(ProfPhase::Patch, t);
         if patched {
             self.patched += 1;
             self.arena.recycle(scratch.program);
@@ -206,10 +326,20 @@ impl StepComposer {
             }
             self.resealed += 1;
             let mut bp = scratch;
+            let t = self.t0();
             bp.program.seal();
+            self.lap_seal(t);
             self.cached = Some(bp);
         }
-        f(self.cached.as_ref().expect("step program just installed"))
+        if let Some(probe) = self.probe.as_mut() {
+            let bp = self.cached.as_ref().expect("step program just installed");
+            let mode = if patched { StepMode::Patched } else { StepMode::Rebuilt };
+            fill_probe(probe, &bp.program, &bp.spans, entries, mode);
+        }
+        let t = self.t0();
+        let out = f(self.cached.as_ref().expect("step program just installed"));
+        self.lap(ProfPhase::Execute, t);
+        out
     }
 
     /// The memoized delta path: gate on pairwise-disjoint channel masks,
@@ -247,6 +377,9 @@ impl StepComposer {
                 slot0 = Some(solo);
             }
         }
+        // `solo_stats` accumulated each entry's busy attribution into the
+        // probe (additive by the conservation property), so the probe now
+        // equals what a scan of the batch program would have produced.
         out.makespan = makespan;
         // The tracked tile (0) belongs to slot 0's band: its intervals in
         // the batch equal its solo intervals, so the batch breakdown is
@@ -321,8 +454,15 @@ impl StepComposer {
         };
         if let Some(s) = self.solo.get(&key) {
             self.memo_hits += 1;
-            return s.clone();
+            if let Some(probe) = self.probe.as_mut() {
+                for &(c, b) in s.chan_busy.iter() {
+                    probe.chan_busy[c as usize] += b;
+                }
+                probe.noc_slot_busy[e.slot] += s.noc_busy;
+            }
+            return s.stats.clone();
         }
+        self.memo_misses += 1;
         let one = [BatchEntry {
             request: e.request,
             slot: e.slot,
@@ -330,15 +470,106 @@ impl StepComposer {
             pages: e.pages,
         }];
         let (df, group, slots) = (cfg.dataflow, cfg.group, cfg.slots);
-        let bp = batch::compose_in(&mut self.solo_arena, arch, df, group, slots, &one);
+        let t = self.t0();
+        let mut bp = batch::compose_unsealed_in(&mut self.solo_arena, arch, df, group, slots, &one);
+        self.lap(ProfPhase::Compose, t);
+        let t = self.t0();
+        bp.program.seal();
+        self.lap_seal(t);
+        let t = self.t0();
         let stats = bp.run_threads(cfg.threads);
+        self.lap(ProfPhase::Execute, t);
+        let (chan_busy, noc_busy) = if let Some(probe) = self.probe.as_mut() {
+            let (chan, noc) = solo_busy(&bp.program, &bp.spans, probe.chan_busy.len());
+            for &(c, b) in chan.iter() {
+                probe.chan_busy[c as usize] += b;
+            }
+            probe.noc_slot_busy[e.slot] += noc;
+            (chan, noc)
+        } else {
+            (Box::default(), 0)
+        };
         self.solo_arena.recycle(bp.program);
         if self.solo.len() >= SOLO_CACHE_CAP {
             self.solo.clear();
         }
-        self.solo.insert(key, stats.clone());
+        self.solo.insert(key, SoloRun { stats: stats.clone(), chan_busy, noc_busy });
         stats
     }
+}
+
+/// True for NoC-fabric collective components (row/col buses have no stable
+/// global `ResourceId` across solo-vs-batch composes, so telemetry
+/// attributes their traffic per batch slot instead of per bus).
+fn is_noc(c: Component) -> bool {
+    matches!(c, Component::SumReduce | Component::MaxReduce | Component::Multicast)
+}
+
+/// Scan a composed batch program into the probe: per-HBM-channel occupancy
+/// (the batch builders allocate channel resources first, so
+/// `ResourceId(c) == channel c`) plus per-slot NoC-collective occupancy via
+/// the entry spans. Occupancy sums are schedule-independent, hence
+/// identical across thread counts, and additive across entries — see the
+/// determinism argument in `crate::telemetry`.
+fn fill_probe(
+    probe: &mut StepProbe,
+    program: &Program,
+    spans: &[(usize, usize)],
+    entries: &[BatchEntry<'_>],
+    mode: StepMode,
+) {
+    probe.reset();
+    probe.mode = mode;
+    let n_chan = probe.chan_busy.len();
+    for op in program.ops() {
+        let r = op.resource.0 as usize;
+        if r < n_chan {
+            probe.chan_busy[r] += op.occupancy;
+        }
+    }
+    for (k, &(s, e)) in spans.iter().enumerate() {
+        let slot = entries[k].slot;
+        let mut busy = 0u64;
+        for op in &program.ops()[s..e] {
+            if is_noc(op.component) {
+                busy += op.occupancy;
+            }
+        }
+        probe.noc_slot_busy[slot] += busy;
+    }
+}
+
+/// A solo program's busy attribution: sparse per-channel occupancy plus the
+/// entry's NoC-collective occupancy. Counted exactly like [`fill_probe`]
+/// (channels over all ops, NoC over the entry span) so memo-merged sums
+/// reproduce the batch scan bit for bit.
+fn solo_busy(
+    program: &Program,
+    spans: &[(usize, usize)],
+    n_chan: usize,
+) -> (Box<[(u32, u64)]>, u64) {
+    let mut dense = vec![0u64; n_chan];
+    for op in program.ops() {
+        let r = op.resource.0 as usize;
+        if r < n_chan {
+            dense[r] += op.occupancy;
+        }
+    }
+    let mut noc = 0u64;
+    for &(s, e) in spans {
+        for op in &program.ops()[s..e] {
+            if is_noc(op.component) {
+                noc += op.occupancy;
+            }
+        }
+    }
+    let sparse: Box<[(u32, u64)]> = dense
+        .iter()
+        .enumerate()
+        .filter(|&(_, &b)| b != 0)
+        .map(|(c, &b)| (c as u32, b))
+        .collect();
+    (sparse, noc)
 }
 
 #[cfg(test)]

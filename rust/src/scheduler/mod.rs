@@ -145,13 +145,14 @@ pub mod trace;
 
 pub use batch::{compose, BatchEntry, BatchProgram, EntryStats};
 pub use incremental::StepComposer;
-pub use router::{route, try_route, RouterConfig, RouterReport, VictimPolicy};
+pub use router::{route, try_route, try_route_with, RouterConfig, RouterReport, VictimPolicy};
 pub use trace::{Request, RequestTrace};
 
 use crate::arch::ArchConfig;
 use crate::dataflow::{Dataflow, Workload};
 use crate::hbm::PageMap;
 use crate::sim::Cycle;
+use crate::telemetry::{RunTelemetry, StepObs};
 use crate::util::Rng;
 
 /// KV-cache page → HBM-channel placement policy (see the module docs).
@@ -301,6 +302,13 @@ pub struct ServingReport {
     pub occupancy: f64,
     pub hbm_bytes: u64,
     pub requests: Vec<RequestMetrics>,
+    /// Compact JSON of the run's deterministic telemetry snapshot
+    /// ([`crate::telemetry::RunTelemetry::snapshot_json`]), present when
+    /// the run was invoked through [`try_simulate_with`] /
+    /// [`router::try_route_with`] with a sink attached. Deterministic
+    /// content only, so reports stay comparable across thread counts and
+    /// composer modes.
+    pub telemetry: Option<String>,
 }
 
 /// Nearest-rank percentile of an ascending-sorted sample (`q` in
@@ -364,6 +372,22 @@ pub(crate) fn finish_report(
         occupancy,
         hbm_bytes,
         requests,
+        telemetry: None,
+    }
+}
+
+/// Fold the composer's mode-dependent counters (`engine_` section) and its
+/// profiler, if any, into the telemetry sink at the end of a run. Shared by
+/// [`simulate`] and [`router::route`].
+pub(crate) fn absorb_composer(tel: &mut RunTelemetry, composer: &StepComposer) {
+    let m = &mut tel.metrics;
+    m.set_counter("engine_steps_patched", composer.patched_steps() as u64);
+    m.set_counter("engine_steps_resealed", composer.resealed_steps() as u64);
+    m.set_counter("engine_steps_memoized", composer.memo_steps() as u64);
+    m.set_counter("engine_solo_memo_hits", composer.memo_hits() as u64);
+    m.set_counter("engine_solo_memo_misses", composer.memo_misses() as u64);
+    if let Some(p) = composer.profiler() {
+        tel.merge_profile(p);
     }
 }
 
@@ -461,8 +485,21 @@ pub fn try_simulate(
     trace: &RequestTrace,
     cfg: &SchedulerConfig,
 ) -> Result<ServingReport, ScheduleError> {
+    try_simulate_with(arch, trace, cfg, None)
+}
+
+/// Like [`try_simulate`], optionally attaching a telemetry sink: with
+/// `Some`, the run streams lifecycle events and windowed metrics into it
+/// and embeds the deterministic snapshot in [`ServingReport::telemetry`];
+/// with `None`, no telemetry work happens at all.
+pub fn try_simulate_with(
+    arch: &ArchConfig,
+    trace: &RequestTrace,
+    cfg: &SchedulerConfig,
+    tel: Option<&mut RunTelemetry>,
+) -> Result<ServingReport, ScheduleError> {
     validate_config(arch, trace, cfg)?;
-    Ok(simulate_validated(arch, trace, cfg))
+    Ok(simulate_validated(arch, trace, cfg, tel))
 }
 
 /// Panicking wrapper of [`try_simulate`] for callers that treat an
@@ -475,6 +512,7 @@ fn simulate_validated(
     arch: &ArchConfig,
     trace: &RequestTrace,
     cfg: &SchedulerConfig,
+    mut tel: Option<&mut RunTelemetry>,
 ) -> ServingReport {
     let n = trace.requests.len();
     let n_chan = arch.hbm.total_channels() as u64;
@@ -498,6 +536,12 @@ fn simulate_validated(
     let mut rr_next = 0u64;
     let mut rng = Rng::new(cfg.seed);
     let mut composer = StepComposer::new(cfg);
+    if let Some(t) = tel.as_deref_mut() {
+        composer.enable_probe(n_chan as usize, cfg.slots);
+        if t.profile.is_some() {
+            composer.enable_profiling();
+        }
+    }
     // Step scratch hoisted out of the loop (§Incremental): a
     // million-request replay must not pay a round of Vec reallocation
     // per step. `entries` alone stays per-step — it borrows `states`.
@@ -510,12 +554,16 @@ fn simulate_validated(
         // into an idle machine.
         let all_free = slots.iter().all(|s| s.is_none());
         if cfg.policy == BatchPolicy::Continuous || all_free {
-            for slot in slots.iter_mut() {
+            for (si, slot) in slots.iter_mut().enumerate() {
                 if slot.is_none()
                     && next_arrival < n
                     && trace.requests[next_arrival].arrival <= clock
                 {
                     *slot = Some(next_arrival);
+                    if let Some(t) = tel.as_deref_mut() {
+                        t.on_queued(next_arrival, trace.requests[next_arrival].arrival);
+                        t.on_admitted(next_arrival, si, clock);
+                    }
                     next_arrival += 1;
                 }
             }
@@ -587,11 +635,29 @@ fn simulate_validated(
             composer.run_step(arch, cfg, &entries)
         };
         debug_assert!(stats.makespan > 0, "a non-empty step must advance the clock");
+        let step_start = clock;
         clock = clock.checked_add(stats.makespan).expect("virtual clock overflowed u64 cycles");
         steps += 1;
         hbm_bytes += stats.hbm_bytes;
         busy_slot_cycles += active.len() as u128 * stats.makespan as u128;
         total_slot_cycles += cfg.slots as u128 * stats.makespan as u128;
+        if let Some(t) = tel.as_deref_mut() {
+            let queue_depth = trace.requests[next_arrival..]
+                .partition_point(|r| r.arrival <= clock) as u64;
+            let pages_in_use: u64 =
+                active.iter().map(|&(_, ri)| states[ri].pages.num_pages() as u64).sum();
+            t.record_step(&StepObs {
+                index: (steps - 1) as u64,
+                start: step_start,
+                end: clock,
+                stats: &stats,
+                entries: &metas,
+                queue_depth,
+                pages_in_use,
+                slots: cfg.slots as u64,
+                probe: composer.probe(),
+            });
+        }
 
         // Advance request states at the step barrier.
         for &(slot, ri, is_prefill, len) in &metas {
@@ -604,13 +670,24 @@ fn simulate_validated(
                     st.first_token = Some(clock);
                     st.generated = 1;
                     tokens += 1;
+                    if let Some(t) = tel.as_deref_mut() {
+                        t.on_token();
+                        t.on_first_token(ri, clock);
+                    }
                 }
             } else {
                 st.generated += 1;
                 tokens += 1;
+                if let Some(t) = tel.as_deref_mut() {
+                    t.on_token();
+                }
             }
             if st.generated >= req.output {
                 st.finish = Some(clock);
+                if let Some(t) = tel.as_deref_mut() {
+                    let first = st.first_token.expect("finished request saw a first token");
+                    t.on_completed(ri, clock, req.arrival, first, req.output);
+                }
                 // Retired for good: free the page table's allocation so a
                 // long trace holds page state for in-flight requests only.
                 st.pages.release();
@@ -641,7 +718,14 @@ fn simulate_validated(
     } else {
         0.0
     };
-    finish_report(arch, cfg, clock, steps, tokens, hbm_bytes, occupancy, requests)
+    let mut report =
+        finish_report(arch, cfg, clock, steps, tokens, hbm_bytes, occupancy, requests);
+    if let Some(t) = tel {
+        t.finish_run(clock);
+        absorb_composer(t, &composer);
+        report.telemetry = Some(t.snapshot_json().to_string());
+    }
+    report
 }
 
 #[cfg(test)]

@@ -21,6 +21,7 @@ use crate::arch::ArchConfig;
 use crate::dataflow::Workload;
 use crate::hbm::PageMap;
 use crate::sim::{Cycle, FaultPlan};
+use crate::telemetry::{DropCause, RequeueCause, RunTelemetry, StepObs};
 use crate::util::Rng;
 
 /// Which in-flight request to evict under page pressure.
@@ -175,8 +176,23 @@ pub fn try_route(
     cfg: &SchedulerConfig,
     rc: &RouterConfig,
 ) -> Result<RouterReport, ScheduleError> {
+    try_route_with(arch, trace, cfg, rc, None)
+}
+
+/// Like [`try_route`], optionally attaching a telemetry sink: with `Some`,
+/// the run streams lifecycle events (admissions, requeues with cause
+/// labels, band deaths, drops) and windowed metrics into it and embeds the
+/// deterministic snapshot in the report; with `None`, no telemetry work
+/// happens at all.
+pub fn try_route_with(
+    arch: &ArchConfig,
+    trace: &RequestTrace,
+    cfg: &SchedulerConfig,
+    rc: &RouterConfig,
+    tel: Option<&mut RunTelemetry>,
+) -> Result<RouterReport, ScheduleError> {
     validate_config(arch, trace, cfg)?;
-    Ok(route_validated(arch, trace, cfg, rc))
+    Ok(route_validated(arch, trace, cfg, rc, tel))
 }
 
 /// Panicking wrapper of [`try_route`] for callers that treat an invalid
@@ -195,6 +211,7 @@ fn route_validated(
     trace: &RequestTrace,
     cfg: &SchedulerConfig,
     rc: &RouterConfig,
+    mut tel: Option<&mut RunTelemetry>,
 ) -> RouterReport {
     let n = trace.requests.len();
     let n_chan = arch.hbm.total_channels() as u64;
@@ -226,6 +243,15 @@ fn route_validated(
     let mut rr_next = 0u64;
     let mut rng = Rng::new(cfg.seed);
     let mut composer = StepComposer::new(cfg);
+    if let Some(t) = tel.as_deref_mut() {
+        composer.enable_probe(n_chan as usize, cfg.slots);
+        if t.profile.is_some() {
+            composer.enable_profiling();
+        }
+    }
+    // Telemetry-only memory of which bands were already reported dead, so
+    // each band death is announced exactly once.
+    let mut known_dead: Vec<bool> = vec![false; if tel.is_some() { cfg.slots } else { 0 }];
     // Step scratch hoisted out of the loop (§Incremental): a
     // million-request replay must not pay a round of Vec reallocation
     // per step. `entries` alone stays per-step — it borrows `states`.
@@ -245,6 +271,9 @@ fn route_validated(
     loop {
         // Queue new arrivals (FCFS).
         while next_arrival < n && trace.requests[next_arrival].arrival <= clock {
+            if let Some(t) = tel.as_deref_mut() {
+                t.on_queued(next_arrival, trace.requests[next_arrival].arrival);
+            }
             waiting.push_back(next_arrival);
             next_arrival += 1;
         }
@@ -253,6 +282,14 @@ fn route_validated(
         // died since the last step. They keep pages and progress — the KV
         // cache lives in HBM, only the compute band is gone.
         let dead = dead_slots(arch, cfg.slots, &rc.faults, clock);
+        if let Some(t) = tel.as_deref_mut() {
+            for (s, &d) in dead.iter().enumerate() {
+                if d && !known_dead[s] {
+                    known_dead[s] = true;
+                    t.on_band_dead(s, clock);
+                }
+            }
+        }
         for (slot, &d) in slots.iter_mut().zip(&dead) {
             if !d {
                 continue;
@@ -260,6 +297,9 @@ fn route_validated(
             if let Some(ri) = slot.take() {
                 // Per-attempt TTFT: the next delivered token re-arms it.
                 states[ri].first_token = None;
+                if let Some(t) = tel.as_deref_mut() {
+                    t.on_requeued(ri, clock, RequeueCause::BandDeath);
+                }
                 waiting.push_front(ri);
                 band_evictions += 1;
             }
@@ -283,11 +323,17 @@ fn route_validated(
                     st.prefill_done = 0;
                     st.rebuild_to = trace.requests[ri].prompt + st.generated;
                     st.first_token = None; // per-attempt TTFT
+                    if let Some(t) = tel.as_deref_mut() {
+                        t.on_requeued(ri, clock, RequeueCause::DeadlineRetry);
+                    }
                     waiting.push_back(ri);
                 } else {
                     st.pages.release();
                     st.expired = true;
                     expired += 1;
+                    if let Some(t) = tel.as_deref_mut() {
+                        t.on_dropped(ri, clock, DropCause::RetriesExhausted);
+                    }
                 }
             }
             waiting.retain(|&ri| {
@@ -300,11 +346,17 @@ fn route_validated(
                     retries += 1;
                     st.deadline_base = clock;
                     st.first_token = None; // per-attempt TTFT
+                    if let Some(t) = tel.as_deref_mut() {
+                        t.on_requeued(ri, clock, RequeueCause::DeadlineRetry);
+                    }
                     true
                 } else {
                     st.pages.release();
                     st.expired = true;
                     expired += 1;
+                    if let Some(t) = tel.as_deref_mut() {
+                        t.on_dropped(ri, clock, DropCause::RetriesExhausted);
+                    }
                     false
                 }
             });
@@ -362,6 +414,9 @@ fn route_validated(
             admit_ctr += 1;
             states[ri].admit_seq = admit_ctr;
             slots[slot] = Some(ri);
+            if let Some(t) = tel.as_deref_mut() {
+                t.on_admitted(ri, slot, clock);
+            }
         }
 
         active.clear();
@@ -381,6 +436,9 @@ fn route_validated(
                     states[ri].pages.release();
                     states[ri].expired = true;
                     expired += 1;
+                    if let Some(t) = tel.as_deref_mut() {
+                        t.on_dropped(ri, clock, DropCause::NoLiveBand);
+                    }
                 }
                 break;
             }
@@ -443,6 +501,9 @@ fn route_validated(
                     states[ri].pages.release();
                     states[ri].expired = true;
                     expired += 1;
+                    if let Some(t) = tel.as_deref_mut() {
+                        t.on_dropped(ri, clock, DropCause::PoolTooSmall);
+                    }
                     metas.clear();
                     workloads.clear();
                     break;
@@ -471,6 +532,9 @@ fn route_validated(
                 st.prefill_done = 0;
                 st.rebuild_to = trace.requests[ri].prompt + st.generated;
                 st.first_token = None; // per-attempt TTFT
+                if let Some(t) = tel.as_deref_mut() {
+                    t.on_requeued(ri, clock, RequeueCause::Preemption);
+                }
                 waiting.push_back(ri);
                 preemptions += 1;
                 metas.remove(k);
@@ -513,11 +577,27 @@ fn route_validated(
                 composer.run_step_faulted(arch, cfg, &entries, &plan)
             }
         };
+        let step_start = clock;
         clock = clock.checked_add(stats.makespan).expect("virtual clock overflowed u64 cycles");
         steps += 1;
         hbm_bytes += stats.hbm_bytes;
         busy_slot_cycles += metas.len() as u128 * stats.makespan as u128;
         total_slot_cycles += cfg.slots as u128 * stats.makespan as u128;
+        if let Some(t) = tel.as_deref_mut() {
+            let pages_in_use: u64 =
+                metas.iter().map(|&(_, ri, _, _)| states[ri].pages.num_pages() as u64).sum();
+            t.record_step(&StepObs {
+                index: (steps - 1) as u64,
+                start: step_start,
+                end: clock,
+                stats: &stats,
+                entries: &metas,
+                queue_depth: waiting.len() as u64,
+                pages_in_use,
+                slots: cfg.slots as u64,
+                probe: composer.probe(),
+            });
+        }
 
         // Advance request states at the step barrier. Entries whose band
         // died mid-step made no progress; they re-queue (pages intact) and
@@ -527,6 +607,9 @@ fn route_validated(
                 slots[slot] = None;
                 // Per-attempt TTFT: the next delivered token re-arms it.
                 states[ri].first_token = None;
+                if let Some(t) = tel.as_deref_mut() {
+                    t.on_requeued(ri, clock, RequeueCause::BandDeath);
+                }
                 waiting.push_front(ri);
                 band_evictions += 1;
                 continue;
@@ -542,6 +625,10 @@ fn route_validated(
                     st.first_token = Some(clock);
                     st.generated = 1;
                     tokens += 1;
+                    if let Some(t) = tel.as_deref_mut() {
+                        t.on_token();
+                        t.on_first_token(ri, clock);
+                    }
                 }
             } else {
                 if st.first_token.is_none() {
@@ -549,12 +636,22 @@ fn route_validated(
                     // requeue cleared the mark, so TTFT measures service
                     // after the last disruption (§Router, per-attempt).
                     st.first_token = Some(clock);
+                    if let Some(t) = tel.as_deref_mut() {
+                        t.on_first_token(ri, clock);
+                    }
                 }
                 st.generated += 1;
                 tokens += 1;
+                if let Some(t) = tel.as_deref_mut() {
+                    t.on_token();
+                }
             }
             if st.generated >= req.output {
                 st.finish = Some(clock);
+                if let Some(t) = tel.as_deref_mut() {
+                    let first = st.first_token.expect("completed request has a first token");
+                    t.on_completed(ri, clock, req.arrival, first, req.output);
+                }
                 // Retired for good: free the page table's allocation.
                 st.pages.release();
                 slots[slot] = None;
@@ -589,8 +686,16 @@ fn route_validated(
     };
     let dead_bands =
         dead_slots(arch, cfg.slots, &rc.faults, clock).iter().filter(|&&d| d).count();
+    let mut serving =
+        finish_report(arch, cfg, clock, steps, tokens, hbm_bytes, occupancy, requests);
+    if let Some(t) = tel {
+        t.metrics.gauge_set("dead_bands", dead_bands as u64);
+        t.finish_run(clock);
+        super::absorb_composer(t, &composer);
+        serving.telemetry = Some(t.snapshot_json().to_string());
+    }
     RouterReport {
-        serving: finish_report(arch, cfg, clock, steps, tokens, hbm_bytes, occupancy, requests),
+        serving,
         completed,
         expired,
         preemptions,

@@ -107,7 +107,9 @@ fn stall_panic(program: &Program, fr: &FaultReport) -> ! {
     panic!("dependency cycle or lost dependency: {}", stall_diagnostics(program, fr));
 }
 
-fn stall_diagnostics(program: &Program, fr: &FaultReport) -> String {
+/// Crate-visible so the telemetry layer can route the same diagnostics into
+/// the serving-run event stream instead of only panicking to stderr.
+pub(crate) fn stall_diagnostics(program: &Program, fr: &FaultReport) -> String {
     let shard_of = program.op_shards();
     let describe = |ids: &[u32]| -> String {
         let mut s = String::new();

@@ -364,7 +364,11 @@ impl Program {
         // (acyclicity, shard wall, fold-chain precondition) in debug
         // builds, and in release builds under the CLI's `--verify` flag.
         if cfg!(debug_assertions) || crate::analysis::release_verify() {
+            // Under `--profile` the verify cost is reported separately from
+            // the rest of seal (timer is None when profiling is off).
+            let vt = crate::telemetry::profile::verify_timer();
             crate::analysis::assert_verified(self);
+            crate::telemetry::profile::verify_done(vt);
         }
     }
 

@@ -9,11 +9,13 @@
 
 use crate::sim::engine::TraceRecord;
 use crate::sim::program::{Program, NO_TILE};
+use crate::telemetry::chrome_trace_doc;
 use crate::util::json::Json;
 
 /// Convert trace records into Chrome-trace JSON ("traceEvents" array of
-/// complete events). Timestamps are cycles reported as microseconds (1
-/// cycle = 1 "µs" in the viewer — at 1 GHz the numbers read as ns).
+/// complete events). Time units follow the crate-wide convention documented
+/// in [`crate::telemetry::events`]: 1 cycle = 1 µs in `ts`/`dur`, with
+/// `displayTimeUnit: "ms"` ("1 ms" on screen = 1000 cycles).
 pub fn to_chrome_trace(program: &Program, records: &[TraceRecord]) -> Json {
     let ops = program.ops();
     let events: Vec<Json> = records
@@ -33,7 +35,7 @@ pub fn to_chrome_trace(program: &Program, records: &[TraceRecord]) -> Json {
             ])
         })
         .collect();
-    Json::obj([("traceEvents", Json::Arr(events)), ("displayTimeUnit", Json::str("ms"))])
+    chrome_trace_doc(events)
 }
 
 #[cfg(test)]
@@ -69,6 +71,11 @@ mod tests {
         assert_eq!(events.len(), 2);
         assert_eq!(events[0].get("ph").unwrap().as_str(), Some("X"));
         assert_eq!(events[0].get("name").unwrap().as_str(), Some("HBM"));
+        // Shares the crate-wide time-unit convention with the serving export.
+        assert_eq!(
+            json.get("displayTimeUnit").unwrap().as_str(),
+            Some(crate::telemetry::CHROME_DISPLAY_UNIT)
+        );
         // Round-trips through the JSON parser.
         assert!(Json::parse(&json.to_string()).is_ok());
     }

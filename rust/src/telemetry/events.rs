@@ -1,0 +1,351 @@
+//! Request-lifecycle event stream and its chrome-trace export.
+//!
+//! The scheduler/router push [`LifeEvent`]s anchored on the virtual clock;
+//! [`TraceCollector`] buffers them and renders one Perfetto/chrome-trace
+//! JSON for the whole serving run: the machine is pid 0 (step slices and
+//! fault/band-death instants), each request is its own pid (`request + 1`)
+//! carrying queued spans, per-step prefill/decode slices, and
+//! first-token/completed/requeue instants with cause labels.
+//!
+//! §Time units — the one convention shared with `sim::trace`: chrome-trace
+//! `ts`/`dur` fields are microseconds by definition, and we write **one
+//! simulated cycle per microsecond**. With [`CHROME_DISPLAY_UNIT`] `"ms"`
+//! the viewer's readout of "1 ms" therefore means 1000 cycles (1 µs of real
+//! time at the 1 GHz reference clock). Build the top-level document through
+//! [`chrome_trace_doc`] so every exporter stays on this convention.
+
+use crate::sim::Cycle;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// `displayTimeUnit` for every chrome-trace export in this crate. See the
+/// module doc: 1 cycle = 1 µs in `ts`/`dur`, so "1 ms" on screen = 1000
+/// cycles.
+pub const CHROME_DISPLAY_UNIT: &str = "ms";
+
+/// Wrap a `traceEvents` array in the crate-wide chrome-trace envelope.
+pub fn chrome_trace_doc(events: Vec<Json>) -> Json {
+    Json::obj([
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str(CHROME_DISPLAY_UNIT)),
+    ])
+}
+
+/// Why a request went back to the waiting queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequeueCause {
+    /// The tile-row band hosting the request died mid-run.
+    BandDeath,
+    /// Deadline overrun with retries remaining; restarted from scratch.
+    DeadlineRetry,
+    /// Preempted to relieve KV page pressure.
+    Preemption,
+}
+
+impl RequeueCause {
+    pub fn label(self) -> &'static str {
+        match self {
+            RequeueCause::BandDeath => "band-death",
+            RequeueCause::DeadlineRetry => "deadline-retry",
+            RequeueCause::Preemption => "preemption",
+        }
+    }
+}
+
+/// Why a request was dropped from the run entirely.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropCause {
+    /// Deadline overrun with no retries left.
+    RetriesExhausted,
+    /// Every band was dead; nothing could ever run it.
+    NoLiveBand,
+    /// Its KV footprint alone exceeds the page pool.
+    PoolTooSmall,
+}
+
+impl DropCause {
+    pub fn label(self) -> &'static str {
+        match self {
+            DropCause::RetriesExhausted => "retries-exhausted",
+            DropCause::NoLiveBand => "no-live-band",
+            DropCause::PoolTooSmall => "pool-too-small",
+        }
+    }
+}
+
+/// One virtual-clock-stamped lifecycle event. The stream is generated in
+/// scheduling order, which is deterministic across thread counts and
+/// composer modes, so the exported trace is too.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LifeEvent {
+    /// Request entered the waiting queue (at its arrival, or on requeue).
+    Queued { req: u32, t: Cycle },
+    /// Request admitted into a batch slot.
+    Admitted { req: u32, slot: u32, t: Cycle },
+    /// One step's worth of work for one request (a prefill chunk or a
+    /// decode step), spanning the composed step's interval.
+    Slice { req: u32, prefill: bool, tokens: u64, start: Cycle, end: Cycle },
+    /// First output token produced (TTFT anchor; re-armed after requeues).
+    FirstToken { req: u32, t: Cycle },
+    /// Request finished its full output.
+    Completed { req: u32, t: Cycle },
+    /// Request pushed back to the queue with a cause.
+    Requeued { req: u32, t: Cycle, cause: RequeueCause },
+    /// Request dropped from the run with a cause.
+    Dropped { req: u32, t: Cycle, cause: DropCause },
+    /// A tile-row band was first observed dead.
+    BandDead { slot: u32, t: Cycle },
+    /// One composed step on the machine lane.
+    Step { index: u64, start: Cycle, end: Cycle, entries: u32, hbm_bytes: u64 },
+    /// A fault-plan window hit this step; `detail` carries the DES stall
+    /// diagnostics that previously went only to stderr.
+    Fault { t: Cycle, killed: u32, stalled: u32, detail: String },
+}
+
+/// Buffers the run's event stream. Memory is O(steps + lifecycle events) —
+/// proportional to the trace being exported, never per token — and the
+/// collector only exists when `--trace-out` asked for it.
+#[derive(Clone, Debug, Default)]
+pub struct TraceCollector {
+    events: Vec<LifeEvent>,
+}
+
+/// Machine-lane tid for step slices.
+const TID_STEPS: u32 = 0;
+/// Machine-lane tid for fault / band-death instants.
+const TID_EVENTS: u32 = 1;
+
+impl TraceCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, ev: LifeEvent) {
+        self.events.push(ev);
+    }
+
+    pub fn events(&self) -> &[LifeEvent] {
+        &self.events
+    }
+
+    fn slice(name: &str, ts: Cycle, dur: Cycle, pid: u32, tid: u32, args: Json) -> Json {
+        Json::obj([
+            ("name", Json::str(name.to_string())),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(ts as f64)),
+            ("dur", Json::num(dur as f64)),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+            ("args", args),
+        ])
+    }
+
+    fn instant(name: &str, ts: Cycle, pid: u32, tid: u32, args: Json) -> Json {
+        Json::obj([
+            ("name", Json::str(name.to_string())),
+            ("ph", Json::str("i")),
+            ("s", Json::str("t")),
+            ("ts", Json::num(ts as f64)),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+            ("args", args),
+        ])
+    }
+
+    fn meta_process(pid: u32, name: &str) -> Json {
+        Json::obj([
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(0.0)),
+            ("args", Json::obj([("name", Json::str(name.to_string()))])),
+        ])
+    }
+
+    fn pid_of(req: u32) -> u32 {
+        req + 1
+    }
+
+    /// Render the buffered stream as one chrome-trace document.
+    pub fn to_chrome_trace(&self) -> Json {
+        let mut out: Vec<Json> = Vec::new();
+        let mut pids: BTreeMap<u32, ()> = BTreeMap::new();
+        let mut queued_since: BTreeMap<u32, Cycle> = BTreeMap::new();
+        let mut saw_machine = false;
+
+        for ev in &self.events {
+            match *ev {
+                LifeEvent::Queued { req, t } => {
+                    pids.insert(Self::pid_of(req), ());
+                    queued_since.insert(req, t);
+                }
+                LifeEvent::Admitted { req, slot, t } => {
+                    let pid = Self::pid_of(req);
+                    pids.insert(pid, ());
+                    if let Some(q) = queued_since.remove(&req) {
+                        out.push(Self::slice(
+                            "queued",
+                            q,
+                            t.saturating_sub(q),
+                            pid,
+                            0,
+                            Json::obj([("slot", Json::num(slot as f64))]),
+                        ));
+                    }
+                }
+                LifeEvent::Slice { req, prefill, tokens, start, end } => {
+                    out.push(Self::slice(
+                        if prefill { "prefill" } else { "decode" },
+                        start,
+                        end.saturating_sub(start),
+                        Self::pid_of(req),
+                        0,
+                        Json::obj([("tokens", Json::num(tokens as f64))]),
+                    ));
+                }
+                LifeEvent::FirstToken { req, t } => {
+                    out.push(Self::instant(
+                        "first-token",
+                        t,
+                        Self::pid_of(req),
+                        0,
+                        Json::obj([]),
+                    ));
+                }
+                LifeEvent::Completed { req, t } => {
+                    out.push(Self::instant("completed", t, Self::pid_of(req), 0, Json::obj([])));
+                }
+                LifeEvent::Requeued { req, t, cause } => {
+                    out.push(Self::instant(
+                        "requeue",
+                        t,
+                        Self::pid_of(req),
+                        0,
+                        Json::obj([("cause", Json::str(cause.label()))]),
+                    ));
+                    queued_since.insert(req, t);
+                }
+                LifeEvent::Dropped { req, t, cause } => {
+                    let pid = Self::pid_of(req);
+                    if let Some(q) = queued_since.remove(&req) {
+                        out.push(Self::slice(
+                            "queued",
+                            q,
+                            t.saturating_sub(q),
+                            pid,
+                            0,
+                            Json::obj([]),
+                        ));
+                    }
+                    out.push(Self::instant(
+                        "expired",
+                        t,
+                        pid,
+                        0,
+                        Json::obj([("cause", Json::str(cause.label()))]),
+                    ));
+                }
+                LifeEvent::BandDead { slot, t } => {
+                    saw_machine = true;
+                    out.push(Self::instant(
+                        "band-dead",
+                        t,
+                        0,
+                        TID_EVENTS,
+                        Json::obj([("slot", Json::num(slot as f64))]),
+                    ));
+                }
+                LifeEvent::Step { index, start, end, entries, hbm_bytes } => {
+                    saw_machine = true;
+                    out.push(Self::slice(
+                        "step",
+                        start,
+                        end.saturating_sub(start),
+                        0,
+                        TID_STEPS,
+                        Json::obj([
+                            ("index", Json::num(index as f64)),
+                            ("entries", Json::num(entries as f64)),
+                            ("hbm_bytes", Json::num(hbm_bytes as f64)),
+                        ]),
+                    ));
+                }
+                LifeEvent::Fault { t, killed, stalled, ref detail } => {
+                    saw_machine = true;
+                    out.push(Self::instant(
+                        "fault",
+                        t,
+                        0,
+                        TID_EVENTS,
+                        Json::obj([
+                            ("killed", Json::num(killed as f64)),
+                            ("stalled", Json::num(stalled as f64)),
+                            ("detail", Json::str(detail.clone())),
+                        ]),
+                    ));
+                }
+            }
+        }
+
+        let mut events = Vec::with_capacity(out.len() + pids.len() + 1);
+        if saw_machine {
+            events.push(Self::meta_process(0, "machine"));
+        }
+        for &pid in pids.keys() {
+            events.push(Self::meta_process(pid, &format!("request {}", pid - 1)));
+        }
+        events.extend(out);
+        chrome_trace_doc(events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queued_spans_pair_and_reopen() {
+        let mut tc = TraceCollector::new();
+        tc.push(LifeEvent::Queued { req: 3, t: 10 });
+        tc.push(LifeEvent::Admitted { req: 3, slot: 1, t: 25 });
+        tc.push(LifeEvent::Slice { req: 3, prefill: true, tokens: 96, start: 25, end: 40 });
+        tc.push(LifeEvent::Requeued { req: 3, t: 40, cause: RequeueCause::BandDeath });
+        tc.push(LifeEvent::Admitted { req: 3, slot: 2, t: 55 });
+        tc.push(LifeEvent::FirstToken { req: 3, t: 70 });
+        tc.push(LifeEvent::Completed { req: 3, t: 70 });
+        let doc = tc.to_chrome_trace();
+        assert_eq!(doc.get("displayTimeUnit").unwrap().as_str(), Some(CHROME_DISPLAY_UNIT));
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let queued: Vec<(f64, f64)> = evs
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some("queued"))
+            .map(|e| {
+                (e.get("ts").unwrap().as_f64().unwrap(), e.get("dur").unwrap().as_f64().unwrap())
+            })
+            .collect();
+        assert_eq!(queued, vec![(10.0, 15.0), (40.0, 15.0)]);
+        // Everything lives on the request's pid (req + 1).
+        for e in evs.iter().filter(|e| e.get("ph").and_then(Json::as_str) != Some("M")) {
+            assert_eq!(e.get("pid").unwrap().as_f64(), Some(4.0));
+        }
+        assert!(Json::parse(&doc.to_string()).is_ok());
+    }
+
+    #[test]
+    fn machine_lane_and_metadata() {
+        let mut tc = TraceCollector::new();
+        tc.push(LifeEvent::Step { index: 0, start: 0, end: 100, entries: 2, hbm_bytes: 4096 });
+        tc.push(LifeEvent::Fault { t: 50, killed: 1, stalled: 2, detail: "x".into() });
+        tc.push(LifeEvent::BandDead { slot: 3, t: 60 });
+        let doc = tc.to_chrome_trace();
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(
+            evs[0].get("args").unwrap().get("name").unwrap().as_str(),
+            Some("machine")
+        );
+        let step = evs.iter().find(|e| e.get("name").and_then(Json::as_str) == Some("step"));
+        assert_eq!(step.unwrap().get("dur").unwrap().as_f64(), Some(100.0));
+        let fault = evs.iter().find(|e| e.get("name").and_then(Json::as_str) == Some("fault"));
+        assert_eq!(fault.unwrap().get("tid").unwrap().as_f64(), Some(1.0));
+    }
+}

@@ -1,0 +1,485 @@
+//! Deterministic, memory-bounded metrics registry.
+//!
+//! Everything here is a pure function of the virtual-clock event stream the
+//! scheduler feeds in: counters and gauges are `u64`, histograms use fixed
+//! log2 buckets, and timeseries use windowed aggregation whose re-bucketing
+//! rule commutes with attribution (see [`WindowSeries`]). No wall-clock is
+//! ever read, so two runs that produce the same serving schedule — e.g. the
+//! same workload at different `--threads`, or full-rebuild vs incremental vs
+//! memoized composition — export byte-identical snapshots.
+//!
+//! The one deliberate exception is the `engine_` name prefix: counters under
+//! it describe *how the simulator computed* the run (composer patch/memo hit
+//! rates), which is mode-dependent by design. `to_prometheus(false)` /
+//! `to_json(false)` exclude them; the determinism wall compares those
+//! deterministic snapshots, while the full export (`include_engine = true`)
+//! is what the CLI and benches read.
+
+use crate::sim::Cycle;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Name prefix for mode-dependent simulator-internals metrics, excluded from
+/// the deterministic snapshot.
+pub const ENGINE_PREFIX: &str = "engine_";
+
+/// Hard cap on windows per series; on overflow the window length doubles and
+/// adjacent windows merge, keeping memory O(1) for arbitrarily long runs.
+pub const MAX_WINDOWS: usize = 256;
+
+/// Default window length in cycles for per-run timeseries.
+pub const DEFAULT_WINDOW_CYCLES: Cycle = 4096;
+
+/// Number of log2 histogram buckets (bucket `i` holds values with bit-length
+/// `i`, i.e. `v in [2^(i-1), 2^i)`; bucket 0 holds exactly 0).
+pub const HIST_BUCKETS: usize = 65;
+
+/// Fixed-bucket log2 histogram of `u64` samples.
+///
+/// Bucket index is the sample's bit length, so recording is branch-free and
+/// the footprint is a constant 65 counters regardless of sample count.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hist {
+    counts: [u64; HIST_BUCKETS],
+    sum: u128,
+    n: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist { counts: [0; HIST_BUCKETS], sum: 0, n: 0 }
+    }
+}
+
+impl Hist {
+    fn bucket(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    pub fn observe(&mut self, v: u64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.sum += v as u128;
+        self.n += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    /// Inclusive upper bound of bucket `i` (`2^i - 1`); the last bucket is
+    /// unbounded and rendered as `+Inf`.
+    fn upper(i: usize) -> u64 {
+        if i >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    /// Deterministic upper bound (exclusive of empty tail) on the sample
+    /// distribution: the smallest bucket bound at or below which a fraction
+    /// `q` (in per-mille to stay integral) of samples fall.
+    pub fn quantile_upper(&self, per_mille: u64) -> u64 {
+        if self.n == 0 {
+            return 0;
+        }
+        let target = (self.n * per_mille).div_ceil(1000);
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::upper(i);
+            }
+        }
+        u64::MAX
+    }
+
+    fn to_json(&self) -> Json {
+        let hi = self.counts.iter().rposition(|&c| c != 0).map(|i| i + 1).unwrap_or(0);
+        let buckets: Vec<Json> = self.counts[..hi]
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| Json::Arr(vec![Json::num(Self::upper(i) as f64), Json::num(c as f64)]))
+            .collect();
+        Json::obj([
+            ("count", Json::num(self.n as f64)),
+            ("sum", Json::num(self.sum as f64)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// Windowed timeseries over virtual time with a hard window-count cap.
+///
+/// Each `add(at, amount)` attributes the whole amount to the window that
+/// contains `at`. When an index would exceed [`MAX_WINDOWS`], the window
+/// length doubles and adjacent windows merge pairwise. Because windows are
+/// aligned at cycle 0 and only ever double, `floor(at / w)` after a doubling
+/// equals `floor(floor(at / w_old) / 2)` — attribution commutes with
+/// re-bucketing, so the final series is a function of the event stream alone,
+/// independent of when (or whether) doublings happened mid-run.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WindowSeries {
+    window: Cycle,
+    vals: Vec<u64>,
+}
+
+impl WindowSeries {
+    pub fn new(window: Cycle) -> Self {
+        WindowSeries { window: window.max(1), vals: Vec::new() }
+    }
+
+    pub fn add(&mut self, at: Cycle, amount: u64) {
+        let mut idx = (at / self.window) as usize;
+        while idx >= MAX_WINDOWS {
+            self.rebucket();
+            idx = (at / self.window) as usize;
+        }
+        if self.vals.len() <= idx {
+            self.vals.resize(idx + 1, 0);
+        }
+        self.vals[idx] += amount;
+    }
+
+    fn rebucket(&mut self) {
+        self.window = self.window.saturating_mul(2);
+        let half = self.vals.len().div_ceil(2);
+        for i in 0..half {
+            let a = self.vals[2 * i];
+            let b = self.vals.get(2 * i + 1).copied().unwrap_or(0);
+            self.vals[i] = a + b;
+        }
+        self.vals.truncate(half);
+    }
+
+    pub fn window(&self) -> Cycle {
+        self.window
+    }
+
+    pub fn values(&self) -> &[u64] {
+        &self.vals
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("window_cycles", Json::num(self.window as f64)),
+            ("values", Json::Arr(self.vals.iter().map(|&v| Json::num(v as f64)).collect())),
+        ])
+    }
+}
+
+/// A set of parallel windowed lanes (one per HBM channel / per slot), all
+/// sharing the same window length because every step feeds every lane.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct LaneSet {
+    totals: Vec<u64>,
+    windows: Vec<WindowSeries>,
+}
+
+impl LaneSet {
+    pub fn ensure(&mut self, lanes: usize) {
+        while self.totals.len() < lanes {
+            self.totals.push(0);
+            self.windows.push(WindowSeries::new(DEFAULT_WINDOW_CYCLES));
+        }
+    }
+
+    /// Add one step's per-lane amounts, attributed at virtual time `at`.
+    /// Zero amounts are added too so every lane keeps the same window shape.
+    pub fn add(&mut self, at: Cycle, amounts: &[u64]) {
+        self.ensure(amounts.len());
+        for (lane, &v) in amounts.iter().enumerate() {
+            self.totals[lane] += v;
+            self.windows[lane].add(at, v);
+        }
+    }
+
+    pub fn totals(&self) -> &[u64] {
+        &self.totals
+    }
+
+    pub fn windows(&self) -> &[WindowSeries] {
+        &self.windows
+    }
+
+    fn footprint(&self) -> usize {
+        self.totals.len() + self.windows.iter().map(|w| w.vals.len()).sum::<usize>()
+    }
+
+    fn to_json(&self) -> Json {
+        let window = self.windows.first().map(|w| w.window).unwrap_or(DEFAULT_WINDOW_CYCLES);
+        Json::obj([
+            ("totals", Json::Arr(self.totals.iter().map(|&v| Json::num(v as f64)).collect())),
+            ("window_cycles", Json::num(window as f64)),
+            (
+                "windows",
+                Json::Arr(
+                    self.windows
+                        .iter()
+                        .map(|w| {
+                            Json::Arr(w.vals.iter().map(|&v| Json::num(v as f64)).collect())
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The run-wide registry. Names are `&'static str` so recording never
+/// allocates; iteration order (BTreeMap) is stable, so text exports are
+/// deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<&'static str, u64>,
+    gauges: BTreeMap<&'static str, u64>,
+    hists: BTreeMap<&'static str, Hist>,
+    series: BTreeMap<&'static str, WindowSeries>,
+    /// Per-HBM-channel busy cycles (scheduled occupancy demand).
+    pub hbm_chan_busy: LaneSet,
+    /// Per-slot NoC-collective busy cycles (SumReduce/MaxReduce/Multicast).
+    pub noc_slot_busy: LaneSet,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &'static str, v: u64) {
+        *self.counters.entry(name).or_insert(0) += v;
+    }
+
+    pub fn set_counter(&mut self, name: &'static str, v: u64) {
+        self.counters.insert(name, v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_set(&mut self, name: &'static str, v: u64) {
+        self.gauges.insert(name, v);
+    }
+
+    pub fn gauge_max(&mut self, name: &'static str, v: u64) {
+        let g = self.gauges.entry(name).or_insert(0);
+        *g = (*g).max(v);
+    }
+
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn observe(&mut self, name: &'static str, v: u64) {
+        self.hists.entry(name).or_default().observe(v);
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Hist> {
+        self.hists.get(name)
+    }
+
+    pub fn series_add(&mut self, name: &'static str, at: Cycle, amount: u64) {
+        self.series
+            .entry(name)
+            .or_insert_with(|| WindowSeries::new(DEFAULT_WINDOW_CYCLES))
+            .add(at, amount);
+    }
+
+    pub fn series(&self, name: &str) -> Option<&WindowSeries> {
+        self.series.get(name)
+    }
+
+    /// Approximate element count of everything stored — the memory-bound
+    /// test asserts this is O(windows + buckets), never O(requests).
+    pub fn footprint(&self) -> usize {
+        self.counters.len()
+            + self.gauges.len()
+            + self.hists.len() * HIST_BUCKETS
+            + self.series.values().map(|s| s.vals.len()).sum::<usize>()
+            + self.hbm_chan_busy.footprint()
+            + self.noc_slot_busy.footprint()
+    }
+
+    fn keep(name: &str, include_engine: bool) -> bool {
+        include_engine || !name.starts_with(ENGINE_PREFIX)
+    }
+
+    /// Prometheus-style text snapshot. Integer-formatted throughout, so the
+    /// deterministic subset (`include_engine = false`) is byte-comparable.
+    pub fn to_prometheus(&self, include_engine: bool) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            if Self::keep(name, include_engine) {
+                let _ = writeln!(out, "# TYPE flatattn_{name} counter");
+                let _ = writeln!(out, "flatattn_{name} {v}");
+            }
+        }
+        for (name, v) in &self.gauges {
+            if Self::keep(name, include_engine) {
+                let _ = writeln!(out, "# TYPE flatattn_{name} gauge");
+                let _ = writeln!(out, "flatattn_{name} {v}");
+            }
+        }
+        for (name, h) in &self.hists {
+            if !Self::keep(name, include_engine) {
+                continue;
+            }
+            let _ = writeln!(out, "# TYPE flatattn_{name} histogram");
+            let mut cum = 0u64;
+            let hi = h.counts.iter().rposition(|&c| c != 0).map(|i| i + 1).unwrap_or(0);
+            for (i, &c) in h.counts[..hi].iter().enumerate() {
+                cum += c;
+                let _ = writeln!(out, "flatattn_{name}_bucket{{le=\"{}\"}} {cum}", Hist::upper(i));
+            }
+            let _ = writeln!(out, "flatattn_{name}_bucket{{le=\"+Inf\"}} {}", h.n);
+            let _ = writeln!(out, "flatattn_{name}_sum {}", h.sum);
+            let _ = writeln!(out, "flatattn_{name}_count {}", h.n);
+        }
+        for (lane, &v) in self.hbm_chan_busy.totals().iter().enumerate() {
+            let _ = writeln!(out, "flatattn_hbm_channel_busy_cycles{{channel=\"{lane}\"}} {v}");
+        }
+        for (lane, &v) in self.noc_slot_busy.totals().iter().enumerate() {
+            let _ = writeln!(out, "flatattn_noc_slot_busy_cycles{{slot=\"{lane}\"}} {v}");
+        }
+        out
+    }
+
+    /// JSON snapshot mirroring the Prometheus export plus the windowed
+    /// series (which have no Prometheus text form).
+    pub fn to_json(&self, include_engine: bool) -> Json {
+        let pick = |m: &BTreeMap<&'static str, u64>| {
+            Json::Obj(
+                m.iter()
+                    .filter(|(k, _)| Self::keep(k, include_engine))
+                    .map(|(k, v)| (k.to_string(), Json::num(*v as f64)))
+                    .collect(),
+            )
+        };
+        Json::obj([
+            ("counters", pick(&self.counters)),
+            ("gauges", pick(&self.gauges)),
+            (
+                "histograms",
+                Json::Obj(
+                    self.hists
+                        .iter()
+                        .filter(|(k, _)| Self::keep(k, include_engine))
+                        .map(|(k, h)| (k.to_string(), h.to_json()))
+                        .collect(),
+                ),
+            ),
+            (
+                "series",
+                Json::Obj(
+                    self.series
+                        .iter()
+                        .filter(|(k, _)| Self::keep(k, include_engine))
+                        .map(|(k, s)| (k.to_string(), s.to_json()))
+                        .collect(),
+                ),
+            ),
+            ("hbm_channel_busy", self.hbm_chan_busy.to_json()),
+            ("noc_slot_busy", self.noc_slot_busy.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_buckets_by_bit_length() {
+        let mut h = Hist::default();
+        for v in [0u64, 1, 2, 3, 4, 7, 8, 1 << 40] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.sum(), 25 + (1u128 << 40));
+        assert_eq!(h.counts[0], 1); // 0
+        assert_eq!(h.counts[1], 1); // 1
+        assert_eq!(h.counts[2], 2); // 2, 3
+        assert_eq!(h.counts[3], 2); // 4, 7
+        assert_eq!(h.counts[4], 1); // 8
+        assert_eq!(h.counts[41], 1); // 2^40
+    }
+
+    #[test]
+    fn hist_quantiles_are_bucket_bounds() {
+        let mut h = Hist::default();
+        for v in 1..=100u64 {
+            h.observe(v);
+        }
+        // p50 of 1..=100 lands in the bucket holding 32..63 (cum 63 ≥ 50);
+        // p100 in the bucket holding 64..127.
+        assert_eq!(h.quantile_upper(500), 63);
+        assert_eq!(h.quantile_upper(1000), 127);
+        assert_eq!(Hist::default().quantile_upper(500), 0);
+    }
+
+    #[test]
+    fn window_series_rebucket_commutes() {
+        // Feed the same stream into a series with a tiny window (forcing
+        // many doublings) and one pre-sized so no doubling happens; final
+        // shapes must agree after aligning window lengths.
+        let mut a = WindowSeries::new(1);
+        let mut b = WindowSeries::new(1 << 10);
+        for t in (0..100_000u64).step_by(97) {
+            a.add(t, t % 13);
+            b.add(t, t % 13);
+        }
+        while a.window() < b.window() {
+            a.rebucket();
+        }
+        while b.window() < a.window() {
+            b.rebucket();
+        }
+        assert_eq!(a.window(), b.window());
+        // Trailing zeros may differ (resize happens lazily); compare sums.
+        let pad = |v: &[u64], n: usize| {
+            let mut v = v.to_vec();
+            v.resize(n, 0);
+            v
+        };
+        let n = a.values().len().max(b.values().len());
+        assert_eq!(pad(a.values(), n), pad(b.values(), n));
+        assert!(a.values().len() <= MAX_WINDOWS);
+    }
+
+    #[test]
+    fn window_series_is_bounded() {
+        let mut s = WindowSeries::new(DEFAULT_WINDOW_CYCLES);
+        for t in (0..1u64 << 42).step_by(1 << 30) {
+            s.add(t, 1);
+        }
+        assert!(s.values().len() <= MAX_WINDOWS);
+    }
+
+    #[test]
+    fn registry_snapshot_is_deterministic_and_filters_engine() {
+        let mk = || {
+            let mut r = MetricsRegistry::new();
+            r.inc("steps_total", 3);
+            r.inc("engine_steps_patched", 2);
+            r.gauge_max("peak_queue_depth", 5);
+            r.observe("step_makespan_cycles", 1000);
+            r.series_add("hbm_bytes", 0, 64);
+            r.hbm_chan_busy.add(0, &[10, 0, 3]);
+            r
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.to_prometheus(false), b.to_prometheus(false));
+        assert!(!a.to_prometheus(false).contains("engine_"));
+        assert!(a.to_prometheus(true).contains("engine_steps_patched"));
+        assert!(a.to_json(false).to_string() == b.to_json(false).to_string());
+        assert_eq!(a.counter("engine_steps_patched"), 2);
+        assert_eq!(a.hbm_chan_busy.totals(), &[10, 0, 3]);
+    }
+}

@@ -1,0 +1,394 @@
+//! Run-wide observability for serving runs: lifecycle tracing, streaming
+//! metrics, and simulator self-profiling.
+//!
+//! # §Telemetry design
+//!
+//! ## Event model
+//!
+//! The scheduler and router narrate a run as a stream of
+//! [`LifeEvent`]s anchored on the **virtual clock** (cycles): every request
+//! moves `queued → admitted → prefill-chunk×N → decode-step×M → completed`,
+//! with `requeue`/`expired` detours carrying cause labels (band death,
+//! deadline retry, preemption, pool exhaustion), and the machine lane records
+//! one `step` slice per composed batch plus `fault`/`band-dead` instants.
+//! The same stream drives both exports: the chrome-trace JSON written by
+//! `schedule --trace-out` (requests as pids, phases as slices — see
+//! [`events`] for the time-unit convention shared with `sim::trace`) and the
+//! lifecycle counters/histograms in the metrics registry.
+//!
+//! ## Determinism argument
+//!
+//! Everything in the deterministic snapshot is a pure function of the
+//! serving schedule, which PR-7/8's differential walls already pin to be
+//! identical across `--threads` and across full-rebuild/incremental/memoized
+//! composition. Two details make the *resource* metrics hold to the same
+//! standard:
+//!
+//! - **Busy fractions are occupancy sums, not achieved service.** Summing
+//!   `op.occupancy` per resource over the composed program is independent of
+//!   the DES's execution order, hence thread-invariant. It also survives
+//!   fault derating (we report nominal scheduled demand; the makespan
+//!   stretch shows up in the step slices instead).
+//! - **Attribution uses stable identities only.** The batch builders
+//!   allocate HBM channel resources first, so `ResourceId(c) == channel c` —
+//!   exact per-channel totals fall out of the op table. NoC row/col buses
+//!   have *no* stable global id across solo-vs-batch composes, so collective
+//!   traffic (SumReduce/MaxReduce/Multicast) is attributed per batch *slot*
+//!   via the entry spans instead. Both quantities are additive between a
+//!   solo-composed entry and the same entry inside a batch (the conservation
+//!   property memoization relies on), so the memo path merges per-entry
+//!   contributions bit-identically to scanning the full batch program.
+//!
+//! Counters that describe *how the simulator computed* the run — composer
+//! patch/memo hit rates — are mode-dependent by design; they live under the
+//! `engine_` prefix and are excluded from the deterministic snapshot
+//! ([`metrics::ENGINE_PREFIX`]).
+//!
+//! ## Why windows, not raw series
+//!
+//! A 1M-request stream takes millions of steps; storing anything per step
+//! (let alone per token) would make observability the biggest allocation in
+//! the simulator. Timeseries therefore use [`metrics::WindowSeries`]: at
+//! most [`metrics::MAX_WINDOWS`] windows whose length doubles (merging
+//! pairwise) when the run outgrows them. Attributing each step's amount to
+//! the window containing the step's start commutes with that re-bucketing,
+//! so the bounded series stays a deterministic function of the event stream
+//! no matter when doublings happen. Histograms are fixed 65-bucket log2
+//! (HDR-style); the registry footprint is O(windows + buckets + names) —
+//! asserted by the memory-bound test — never O(requests).
+//!
+//! ## Cost model
+//!
+//! Telemetry is opt-in per run: the scheduler entry points take
+//! `Option<&mut RunTelemetry>`, and `None` (the default path) does no work
+//! and no allocation — the composer's probe stays disabled and the only
+//! residue is a handful of `is_some()` checks. When on, per-step cost is
+//! O(channels + entries) on memoized steps and one O(ops) scan otherwise.
+//! Wall-clock phase timers ([`profile`]) are a further opt-in (`--profile`)
+//! and are never part of deterministic output.
+
+pub mod events;
+pub mod metrics;
+pub mod profile;
+
+pub use events::{
+    chrome_trace_doc, DropCause, LifeEvent, RequeueCause, TraceCollector, CHROME_DISPLAY_UNIT,
+};
+pub use metrics::{Hist, LaneSet, MetricsRegistry, WindowSeries, ENGINE_PREFIX, MAX_WINDOWS};
+pub use profile::{ProfPhase, Profiler, ALL_PHASES};
+
+use crate::sim::{Cycle, RunStats};
+use crate::util::json::Json;
+
+/// How the composer produced a step's stats.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepMode {
+    /// Composed from scratch and sealed.
+    Rebuilt,
+    /// Cached sealed program with costs patched in place.
+    Patched,
+    /// Merged from per-entry solo memo results; no batch program existed.
+    Memoized,
+}
+
+/// Diagnostics captured on a faulted step (counts plus the DES stall
+/// report that previously went only to stderr).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultNote {
+    pub killed: u32,
+    pub stalled: u32,
+    pub detail: String,
+}
+
+/// Per-step resource attribution filled in by the `StepComposer` when a
+/// telemetry sink is attached. Vectors are preallocated once and reused
+/// every step; nothing here allocates on the hot path.
+#[derive(Clone, Debug)]
+pub struct StepProbe {
+    /// Scheduled busy cycles per HBM channel (`ResourceId(c) == channel c`).
+    pub chan_busy: Vec<u64>,
+    /// Scheduled NoC-collective busy cycles per batch slot.
+    pub noc_slot_busy: Vec<u64>,
+    pub mode: StepMode,
+    pub fault: Option<FaultNote>,
+}
+
+impl StepProbe {
+    pub fn new(n_chan: usize, slots: usize) -> Self {
+        StepProbe {
+            chan_busy: vec![0; n_chan],
+            noc_slot_busy: vec![0; slots],
+            mode: StepMode::Rebuilt,
+            fault: None,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.chan_busy.iter_mut().for_each(|v| *v = 0);
+        self.noc_slot_busy.iter_mut().for_each(|v| *v = 0);
+        self.mode = StepMode::Rebuilt;
+        self.fault = None;
+    }
+}
+
+/// Everything the scheduler observes about one composed step, handed to
+/// [`RunTelemetry::record_step`].
+pub struct StepObs<'a> {
+    pub index: u64,
+    pub start: Cycle,
+    pub end: Cycle,
+    pub stats: &'a RunStats,
+    /// Per-entry `(slot, request, is_prefill, tokens)` of the step batch.
+    pub entries: &'a [(usize, usize, bool, u64)],
+    pub queue_depth: u64,
+    pub pages_in_use: u64,
+    pub slots: u64,
+    pub probe: Option<&'a StepProbe>,
+}
+
+/// The per-run telemetry sink threaded through `scheduler::simulate` /
+/// `scheduler::route`. Metrics are always on once a sink exists; the trace
+/// collector and profiler are further opt-ins.
+#[derive(Debug, Default)]
+pub struct RunTelemetry {
+    pub metrics: MetricsRegistry,
+    pub trace: Option<TraceCollector>,
+    pub profile: Option<Profiler>,
+}
+
+impl RunTelemetry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Also collect the lifecycle event stream for a chrome-trace export.
+    pub fn with_trace(mut self) -> Self {
+        self.trace = Some(TraceCollector::new());
+        self
+    }
+
+    /// Also collect wall-clock phase timings (enables the global profiling
+    /// gate so `Program::seal` reports verify time).
+    pub fn with_profile(mut self) -> Self {
+        profile::set_profiling(true);
+        self.profile = Some(Profiler::new());
+        self
+    }
+
+    fn event(&mut self, ev: LifeEvent) {
+        if let Some(t) = self.trace.as_mut() {
+            t.push(ev);
+        }
+    }
+
+    pub fn on_queued(&mut self, req: usize, t: Cycle) {
+        self.metrics.inc("requests_queued", 1);
+        self.event(LifeEvent::Queued { req: req as u32, t });
+    }
+
+    pub fn on_admitted(&mut self, req: usize, slot: usize, t: Cycle) {
+        self.metrics.inc("requests_admitted", 1);
+        self.event(LifeEvent::Admitted { req: req as u32, slot: slot as u32, t });
+    }
+
+    pub fn on_first_token(&mut self, req: usize, t: Cycle) {
+        self.event(LifeEvent::FirstToken { req: req as u32, t });
+    }
+
+    /// One output token produced (first or decode).
+    pub fn on_token(&mut self) {
+        self.metrics.inc("tokens_generated", 1);
+    }
+
+    /// Completion with final per-request metrics (matches `RequestMetrics`
+    /// semantics: TTFT from arrival, TPOT over `output - 1` decode tokens).
+    pub fn on_completed(
+        &mut self,
+        req: usize,
+        t: Cycle,
+        arrival: Cycle,
+        first: Cycle,
+        output: u64,
+    ) {
+        self.metrics.inc("requests_completed", 1);
+        self.metrics.observe("ttft_cycles", first.saturating_sub(arrival));
+        if output > 1 {
+            self.metrics.observe("tpot_cycles", t.saturating_sub(first) / (output - 1));
+        }
+        self.event(LifeEvent::Completed { req: req as u32, t });
+    }
+
+    pub fn on_requeued(&mut self, req: usize, t: Cycle, cause: RequeueCause) {
+        self.metrics.inc(
+            match cause {
+                RequeueCause::BandDeath => "requeue_band_death",
+                RequeueCause::DeadlineRetry => "requeue_deadline_retry",
+                RequeueCause::Preemption => "requeue_preemption",
+            },
+            1,
+        );
+        self.event(LifeEvent::Requeued { req: req as u32, t, cause });
+    }
+
+    pub fn on_dropped(&mut self, req: usize, t: Cycle, cause: DropCause) {
+        self.metrics.inc("requests_expired", 1);
+        self.event(LifeEvent::Dropped { req: req as u32, t, cause });
+    }
+
+    pub fn on_band_dead(&mut self, slot: usize, t: Cycle) {
+        self.metrics.inc("bands_died", 1);
+        self.event(LifeEvent::BandDead { slot: slot as u32, t });
+    }
+
+    /// Sample one composed step into the registry (and the trace, if on).
+    pub fn record_step(&mut self, obs: &StepObs) {
+        let t0 = self.profile.as_ref().map(|_| std::time::Instant::now());
+        let mk = obs.end.saturating_sub(obs.start);
+        let m = &mut self.metrics;
+        m.inc("steps_total", 1);
+        m.inc("hbm_bytes_total", obs.stats.hbm_bytes);
+        m.inc("busy_slot_cycles", obs.entries.len() as u64 * mk);
+        m.inc("slot_cycles", obs.slots * mk);
+        m.observe("step_makespan_cycles", mk);
+        m.observe("queue_depth", obs.queue_depth);
+        m.observe("batch_entries", obs.entries.len() as u64);
+        m.observe("pages_in_use", obs.pages_in_use);
+        m.gauge_max("peak_queue_depth", obs.queue_depth);
+        m.gauge_max("peak_pages_in_use", obs.pages_in_use);
+        m.series_add("busy_slot_cycles", obs.start, obs.entries.len() as u64 * mk);
+        m.series_add("slot_cycles", obs.start, obs.slots * mk);
+        m.series_add("hbm_bytes", obs.start, obs.stats.hbm_bytes);
+        let mut tokens = 0u64;
+        for &(_, _, is_prefill, len) in obs.entries {
+            if is_prefill {
+                m.inc("prefill_entries", 1);
+                m.inc("prefill_tokens", len);
+            } else {
+                m.inc("decode_entries", 1);
+                tokens += 1;
+            }
+        }
+        m.series_add("decode_tokens", obs.start, tokens);
+        if let Some(p) = obs.probe {
+            m.hbm_chan_busy.add(obs.start, &p.chan_busy);
+            m.noc_slot_busy.add(obs.start, &p.noc_slot_busy);
+            match p.mode {
+                StepMode::Rebuilt => m.inc("engine_steps_rebuilt", 1),
+                StepMode::Patched => m.inc("engine_steps_patched_live", 1),
+                StepMode::Memoized => m.inc("engine_steps_memoized_live", 1),
+            }
+            if let Some(f) = &p.fault {
+                m.inc("steps_faulted", 1);
+                m.inc("ops_killed", f.killed as u64);
+                m.inc("ops_stalled", f.stalled as u64);
+                if self.trace.is_some() {
+                    let ev = LifeEvent::Fault {
+                        t: obs.start,
+                        killed: f.killed,
+                        stalled: f.stalled,
+                        detail: f.detail.clone(),
+                    };
+                    self.event(ev);
+                }
+            }
+        }
+        if self.trace.is_some() {
+            let step = LifeEvent::Step {
+                index: obs.index,
+                start: obs.start,
+                end: obs.end,
+                entries: obs.entries.len() as u32,
+                hbm_bytes: obs.stats.hbm_bytes,
+            };
+            self.event(step);
+            for &(_, req, is_prefill, len) in obs.entries {
+                self.event(LifeEvent::Slice {
+                    req: req as u32,
+                    prefill: is_prefill,
+                    tokens: len,
+                    start: obs.start,
+                    end: obs.end,
+                });
+            }
+        }
+        if let (Some(p), Some(t0)) = (self.profile.as_mut(), t0) {
+            p.add_nanos(ProfPhase::Metrics, t0.elapsed().as_nanos() as u64);
+        }
+    }
+
+    /// Final-clock bookkeeping once the run loop exits.
+    pub fn finish_run(&mut self, clock: Cycle) {
+        self.metrics.gauge_set("final_cycles", clock);
+    }
+
+    pub fn merge_profile(&mut self, other: &Profiler) {
+        if let Some(p) = self.profile.as_mut() {
+            p.merge(other);
+        }
+    }
+
+    /// Deterministic JSON snapshot (the block embedded in `ServingReport`).
+    pub fn snapshot_json(&self) -> Json {
+        self.metrics.to_json(false)
+    }
+
+    /// Chrome-trace document of the collected lifecycle stream, if tracing.
+    pub fn trace_json(&self) -> Option<Json> {
+        self.trace.as_ref().map(|t| t.to_chrome_trace())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::RunStats;
+
+    #[test]
+    fn record_step_updates_registry_and_trace() {
+        let mut tel = RunTelemetry::new().with_trace();
+        let stats = RunStats {
+            makespan: 500,
+            breakdown: Default::default(),
+            hbm_bytes: 4096,
+            flops: 0,
+            redmule_busy_total: 0,
+            spatz_busy_total: 0,
+            ops_executed: 0,
+        };
+        let mut probe = StepProbe::new(4, 2);
+        probe.chan_busy[1] = 77;
+        probe.mode = StepMode::Memoized;
+        tel.on_queued(0, 0);
+        tel.on_admitted(0, 0, 0);
+        tel.record_step(&StepObs {
+            index: 0,
+            start: 0,
+            end: 500,
+            stats: &stats,
+            entries: &[(0, 0, true, 96), (1, 1, false, 1)],
+            queue_depth: 3,
+            pages_in_use: 7,
+            slots: 4,
+            probe: Some(&probe),
+        });
+        tel.on_first_token(0, 500);
+        tel.on_completed(0, 900, 0, 500, 5);
+        tel.finish_run(900);
+        let m = &tel.metrics;
+        assert_eq!(m.counter("steps_total"), 1);
+        assert_eq!(m.counter("busy_slot_cycles"), 1000);
+        assert_eq!(m.counter("slot_cycles"), 2000);
+        assert_eq!(m.counter("prefill_entries"), 1);
+        assert_eq!(m.counter("decode_entries"), 1);
+        assert_eq!(m.counter("engine_steps_memoized_live"), 1);
+        assert_eq!(m.gauge("peak_queue_depth"), 3);
+        assert_eq!(m.gauge("final_cycles"), 900);
+        assert_eq!(m.hbm_chan_busy.totals(), &[0, 77, 0, 0]);
+        assert_eq!(m.hist("ttft_cycles").unwrap().count(), 1);
+        assert_eq!(m.hist("tpot_cycles").unwrap().count(), 1);
+        let doc = tel.trace_json().unwrap();
+        assert!(doc.to_string().contains("prefill"));
+        // The deterministic snapshot hides the engine_* section.
+        assert!(!tel.snapshot_json().to_string().contains("engine_"));
+    }
+}

@@ -1,0 +1,186 @@
+//! §Telemetry determinism wall.
+//!
+//! The deterministic telemetry snapshot (Prometheus text with `engine_*`
+//! hidden) and the exported chrome-trace document must be **byte-identical**
+//! across DES thread counts and composer modes — telemetry is a pure
+//! function of the serving schedule, which the PR-7/8 differential walls
+//! already pin. On top of that: the registry must stay O(windows + buckets)
+//! regardless of request count, and the exported trace must reconcile
+//! exactly with the per-request TTFT/TPOT numbers in the `ServingReport`.
+
+use flatattention::arch::presets;
+use flatattention::dataflow::Dataflow;
+use flatattention::scheduler::{
+    try_route_with, try_simulate_with, RequestTrace, RouterConfig, SchedulerConfig,
+};
+use flatattention::sim::FaultPlan;
+use flatattention::telemetry::RunTelemetry;
+use flatattention::util::json::Json;
+
+/// (incremental, memoize) — the baseline plus every lever combination.
+const MODES: [(bool, bool); 4] = [(false, false), (true, false), (false, true), (true, true)];
+const THREADS: [usize; 3] = [1, 2, 8];
+
+fn tiny_cfg(df: Dataflow) -> SchedulerConfig {
+    let mut cfg = SchedulerConfig::new(df);
+    cfg.slots = 4;
+    cfg.group = 2;
+    cfg.chunk = 96;
+    cfg.page_tokens = 32;
+    cfg.heads = 4;
+    cfg.head_dim = 64;
+    cfg
+}
+
+fn mixed_trace() -> RequestTrace {
+    RequestTrace::from_rows(
+        &[(0, 160, 4), (0, 96, 8), (5_000, 200, 3), (20_000, 64, 6), (40_000, 128, 5)],
+        2,
+    )
+}
+
+/// One instrumented scheduler run → (deterministic metrics text, trace doc).
+fn snap_simulate(threads: usize, inc: bool, memo: bool) -> (String, String) {
+    let arch = presets::table2(8);
+    let trace = mixed_trace();
+    let mut cfg = tiny_cfg(Dataflow::Flash2);
+    cfg.threads = threads;
+    cfg.incremental = inc;
+    cfg.memoize = memo;
+    let mut tel = RunTelemetry::new().with_trace();
+    let rep = try_simulate_with(&arch, &trace, &cfg, Some(&mut tel)).expect("valid config");
+    assert!(rep.telemetry.is_some(), "instrumented run embeds the snapshot");
+    (tel.metrics.to_prometheus(false), tel.trace_json().unwrap().to_string())
+}
+
+/// One instrumented router run with a mid-run band death → same pair.
+fn snap_route(threads: usize, inc: bool, memo: bool) -> (String, String) {
+    let arch = presets::table2(8);
+    let trace = RequestTrace::from_rows(
+        &[(0, 160, 4), (0, 96, 8), (0, 200, 3), (0, 64, 6), (40_000, 128, 5)],
+        2,
+    );
+    let mut cfg = tiny_cfg(Dataflow::Flash2);
+    cfg.threads = threads;
+    cfg.incremental = inc;
+    cfg.memoize = memo;
+    // Band 3 (first tile 48) dies almost immediately — the lifecycle
+    // stream must carry the band death and the resulting requeue.
+    let rc = RouterConfig {
+        faults: FaultPlan::none().with_tile_death(48, 1),
+        ..RouterConfig::default()
+    };
+    let mut tel = RunTelemetry::new().with_trace();
+    let rep = try_route_with(&arch, &trace, &cfg, &rc, Some(&mut tel)).expect("valid config");
+    assert!(rep.serving.telemetry.is_some());
+    assert!(rep.band_evictions >= 1, "the dying band must requeue its request");
+    (tel.metrics.to_prometheus(false), tel.trace_json().unwrap().to_string())
+}
+
+#[test]
+fn scheduler_snapshots_bit_identical_across_threads_and_modes() {
+    let (want_m, want_t) = snap_simulate(1, false, false);
+    assert!(want_m.contains("flatattn_requests_completed"));
+    assert!(want_t.contains("prefill"));
+    for threads in THREADS {
+        for (inc, memo) in MODES {
+            let (m, t) = snap_simulate(threads, inc, memo);
+            assert_eq!(m, want_m, "metrics diverged: threads={threads} inc={inc} memo={memo}");
+            assert_eq!(t, want_t, "trace diverged: threads={threads} inc={inc} memo={memo}");
+        }
+    }
+}
+
+#[test]
+fn router_snapshots_bit_identical_across_threads_and_modes_under_faults() {
+    let (want_m, want_t) = snap_route(1, false, false);
+    assert!(want_m.contains("flatattn_bands_died"));
+    assert!(want_t.contains("band-dead"));
+    for threads in THREADS {
+        for (inc, memo) in MODES {
+            let (m, t) = snap_route(threads, inc, memo);
+            assert_eq!(m, want_m, "metrics diverged: threads={threads} inc={inc} memo={memo}");
+            assert_eq!(t, want_t, "trace diverged: threads={threads} inc={inc} memo={memo}");
+        }
+    }
+}
+
+/// The registry is windowed + log-bucketed: a 20x bigger request stream
+/// must not grow it remotely proportionally, and its absolute size stays
+/// within the O(windows + buckets + names) budget.
+#[test]
+fn registry_memory_bounded_by_windows_not_requests() {
+    let arch = presets::table2(8);
+    let mut cfg = tiny_cfg(Dataflow::Flash2);
+    cfg.incremental = true;
+    cfg.memoize = true;
+    let footprint = |n: usize| {
+        let trace = RequestTrace::synthetic(n, 500);
+        let mut tel = RunTelemetry::new();
+        try_simulate_with(&arch, &trace, &cfg, Some(&mut tel)).expect("valid config");
+        assert_eq!(tel.metrics.counter("requests_completed"), n as u64);
+        tel.metrics.footprint()
+    };
+    let small = footprint(24);
+    let big = footprint(480);
+    assert!(big <= small * 8, "footprint scaled with requests: {small} -> {big} for 20x load");
+    assert!(big < 16_384, "footprint exceeds the windows+buckets budget: {big}");
+}
+
+fn fnum(e: &Json, key: &str) -> f64 {
+    e.get(key).and_then(Json::as_f64).unwrap_or(f64::NAN)
+}
+
+fn is_named(e: &Json, name: &str) -> bool {
+    e.get("name").and_then(Json::as_str) == Some(name)
+}
+
+/// The exported chrome trace must agree with the report's per-request
+/// metrics: the queued span starts at arrival, the first-token instant is
+/// the TTFT anchor, the completed instant is the finish clock, and the
+/// prefill/decode slices tile [admitted, finish] with no gaps.
+#[test]
+fn exported_trace_reconciles_with_ttft_and_tpot() {
+    let arch = presets::table2(8);
+    let trace = mixed_trace();
+    let cfg = tiny_cfg(Dataflow::Flash2);
+    let mut tel = RunTelemetry::new().with_trace();
+    let rep = try_simulate_with(&arch, &trace, &cfg, Some(&mut tel)).expect("valid config");
+    // Round-trip through text: this is exactly what `--trace-out` writes.
+    let doc = Json::parse(&tel.trace_json().unwrap().to_string()).expect("well-formed JSON");
+    assert_eq!(doc.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(rep.requests.len(), trace.requests.len(), "everyone completes fault-free");
+    for r in &rep.requests {
+        let pid = (r.id + 1) as f64;
+        let mine: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("pid").and_then(Json::as_f64) == Some(pid))
+            .filter(|e| e.get("ph").and_then(Json::as_str) != Some("M"))
+            .collect();
+        let queued: Vec<&&Json> = mine.iter().filter(|e| is_named(e, "queued")).collect();
+        assert_eq!(queued.len(), 1, "request {} re-queued in a fault-free run", r.id);
+        assert_eq!(fnum(queued[0], "ts"), r.arrival as f64, "request {} arrival", r.id);
+        let first: Vec<&&Json> = mine.iter().filter(|e| is_named(e, "first-token")).collect();
+        assert_eq!(first.len(), 1);
+        assert_eq!(fnum(first[0], "ts"), r.first_token as f64, "request {} TTFT", r.id);
+        let done: Vec<&&Json> = mine.iter().filter(|e| is_named(e, "completed")).collect();
+        assert_eq!(done.len(), 1);
+        assert_eq!(fnum(done[0], "ts"), r.finish as f64, "request {} finish", r.id);
+        // Slices tile the admitted..finish interval (TPOT is finish minus
+        // first-token over output-1 tokens, so gap-free slices pin it too).
+        let mut slices: Vec<(f64, f64)> = mine
+            .iter()
+            .filter(|e| is_named(e, "prefill") || is_named(e, "decode"))
+            .map(|e| (fnum(e, "ts"), fnum(e, "dur")))
+            .collect();
+        slices.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(!slices.is_empty());
+        let mut cursor = fnum(queued[0], "ts") + fnum(queued[0], "dur");
+        for (ts, dur) in &slices {
+            assert_eq!(*ts, cursor, "gap in request {} timeline at {ts}", r.id);
+            cursor = ts + dur;
+        }
+        assert_eq!(cursor, r.finish as f64, "request {} last slice != finish", r.id);
+    }
+}

@@ -32,6 +32,16 @@ Targets (mirroring the asserts/WARNINGs inside the bench harnesses):
                                          not the DES; smoke runs a scaled
                                          stream, recorded honestly in
                                          synthetic_stream_requests)
+                  telemetry_overhead     >= 0.95 (off/on wall-clock ratio of
+                                         the mixed-trace replay: a full
+                                         telemetry sink — windowed metrics +
+                                         lifecycle trace — may cost at most
+                                         ~5%)
+                  memo_hit_rate          present (composer solo-memo hits /
+                  patch_hit_rate         lookups and patched / patch-eligible
+                                         steps, read from the sink's engine_
+                                         counters; recorded for trend
+                                         tracking, only presence is gated)
   all three       roofline_utilization   in (0, 1.0]: the analytical lower
                                          bound (analysis::Roofline) never
                                          exceeds the simulated run time —
@@ -110,6 +120,10 @@ if sch:
     require("schedule_sweep", sch, "degraded_over_faultfree_tokens_per_s", lo=0.6)
     require("schedule_sweep", sch, "step_compose_speedup", lo=5.0)
     require("schedule_sweep", sch, "synthetic_stream_requests_per_s", lo=1000.0)
+    require("schedule_sweep", sch, "telemetry_overhead", lo=0.95)
+    # Hit rates are trend metrics: any value in [0, 1] passes, absence fails.
+    require("schedule_sweep", sch, "memo_hit_rate", lo=0.0)
+    require("schedule_sweep", sch, "patch_hit_rate", lo=0.0)
 
 # Roofline soundness: every bench records its utilization against the
 # analytical lower bound; > 1.0 would mean the simulated run undercut the

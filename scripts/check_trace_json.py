@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Structurally validate a chrome-trace JSON exported by `flatattention`.
+
+Usage:
+
+    python3 scripts/check_trace_json.py TRACE.json
+
+Checks the shape every consumer (chrome://tracing, Perfetto, and
+tests/telemetry_determinism.rs's reconciliation pass) relies on:
+
+  - top level is an object with a non-empty "traceEvents" array and a
+    "displayTimeUnit" of "ms" or "ns" (this repo always writes "ms" —
+    see the time-unit convention in rust/src/telemetry/events.rs);
+  - every event is an object with a non-empty "name", a "ph" in
+    {X, i, I, M}, and integer "pid"/"tid" >= 0;
+  - complete events (ph=X) carry integer "ts" and "dur" >= 0, and within
+    each (pid, tid) lane they are sorted by ts and non-overlapping
+    (chrome://tracing silently mis-renders overlapping X slices);
+  - instants (ph=i/I) carry an integer "ts" >= 0;
+  - at least one metadata event (ph=M) names a process.
+
+Exits non-zero with one line per violation. CI's rust-analysis job runs
+this on the trace exported by the `schedule --trace-out` smoke.
+"""
+
+import json
+import sys
+
+
+def fail(msgs):
+    print("TRACE VALIDATION FAILED:", file=sys.stderr)
+    for m in msgs:
+        print(f"  {m}", file=sys.stderr)
+    sys.exit(1)
+
+
+def is_count(v):
+    return isinstance(v, int) and not isinstance(v, bool) and v >= 0
+
+
+def main():
+    if len(sys.argv) != 2:
+        print("usage: check_trace_json.py TRACE.json", file=sys.stderr)
+        sys.exit(2)
+    path = sys.argv[1]
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail([f"{path}: unreadable ({e})"])
+
+    errors = []
+    if not isinstance(doc, dict):
+        fail([f"{path}: top level must be an object, got {type(doc).__name__}"])
+    unit = doc.get("displayTimeUnit")
+    if unit not in ("ms", "ns"):
+        errors.append(f"displayTimeUnit must be 'ms' or 'ns', got {unit!r}")
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(errors + ["traceEvents must be a non-empty array"])
+
+    lanes = {}  # (pid, tid) -> [(ts, dur, name)]
+    meta = 0
+    for i, e in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(e, dict):
+            errors.append(f"{where}: not an object")
+            continue
+        name = e.get("name")
+        if not isinstance(name, str) or not name:
+            errors.append(f"{where}: missing or empty 'name'")
+        ph = e.get("ph")
+        if ph not in ("X", "i", "I", "M"):
+            errors.append(f"{where} ({name}): unknown ph {ph!r}")
+            continue
+        if not is_count(e.get("pid")) or not is_count(e.get("tid")):
+            errors.append(f"{where} ({name}): pid/tid must be integers >= 0")
+            continue
+        if ph == "M":
+            meta += 1
+            continue
+        if not is_count(e.get("ts")):
+            errors.append(f"{where} ({name}): ph={ph} needs an integer ts >= 0")
+            continue
+        if ph == "X":
+            if not is_count(e.get("dur")):
+                errors.append(f"{where} ({name}): ph=X needs an integer dur >= 0")
+                continue
+            lanes.setdefault((e["pid"], e["tid"]), []).append((e["ts"], e["dur"], name))
+
+    if meta == 0:
+        errors.append("no metadata events (ph=M): process names are missing")
+
+    for (pid, tid), slices in sorted(lanes.items()):
+        prev_end, prev_name = None, None
+        for ts, dur, name in slices:
+            if prev_end is not None and ts < prev_end:
+                errors.append(
+                    f"lane pid={pid} tid={tid}: '{name}' at ts={ts} overlaps "
+                    f"'{prev_name}' ending at {prev_end} (unsorted or overlapping X slices)"
+                )
+            prev_end, prev_name = ts + dur, name
+
+    if errors:
+        fail(errors)
+    n_slices = sum(len(s) for s in lanes.values())
+    print(
+        f"{path}: ok — {len(events)} events, {n_slices} slices across "
+        f"{len(lanes)} lanes, {meta} metadata records, displayTimeUnit={unit}"
+    )
+
+
+if __name__ == "__main__":
+    main()
