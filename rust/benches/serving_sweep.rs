@@ -14,7 +14,11 @@ mod harness;
 
 use flatattention::analysis::Roofline;
 use flatattention::arch::presets;
-use flatattention::dataflow::{run, Dataflow, Workload, ALL_DATAFLOWS};
+use flatattention::dataflow::{
+    layer_program, run, Dataflow, LayerWorkload, WeightResidency, Workload, ALL_DATAFLOWS,
+};
+use flatattention::scheduler::{simulate, RequestTrace, SchedulerConfig};
+use flatattention::sim::execute;
 
 const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving_sweep.json");
 
@@ -100,6 +104,55 @@ fn main() {
         rep.utilization * 100.0
     );
     rec.metric("roofline_utilization", rep.utilization);
+
+    // Layer serving: full transformer layers per step (attention + the
+    // four projection/FFN GEMM tails per request band), two layers deep so
+    // requests pipeline across bands at different layer depths. Gated
+    // metrics: the layered run's mesh occupancy (pipeline utilization, in
+    // (0, 1]) and the roofline utilization of a GEMM-bearing composed
+    // layer program — both must stay physical (<= 1.0).
+    harness::section("layer serving (2 layers/token, FFN x2, table2-8x8)");
+    let sarch = presets::table2(8);
+    let mut cfg = SchedulerConfig::new(Dataflow::FlatColl);
+    cfg.group = 2;
+    cfg.slots = 4;
+    cfg.chunk = 128;
+    cfg.page_tokens = 32;
+    cfg.heads = 8;
+    cfg.head_dim = 64;
+    cfg.layers = 2;
+    cfg.ffn_mult = 2;
+    cfg.weights = WeightResidency::HbmStream;
+    let trace = RequestTrace::from_rows(
+        &[(0, 160, 4), (0, 96, 6), (5_000, 200, 3), (20_000, 128, 5)],
+        2,
+    );
+    let mut occupancy = 0.0f64;
+    rec.bench("layered serving replay (4 requests)", iters, || {
+        let r = simulate(&sarch, &trace, &cfg);
+        occupancy = r.occupancy;
+        r.steps as u64
+    });
+    println!("  layered replay occupancy {:.1}%", occupancy * 100.0);
+    rec.metric("layer_pipeline_utilization", occupancy);
+
+    let lw = LayerWorkload::new(
+        Workload::new(512, 64, 8, 1).with_kv_heads(2).with_causal(true),
+        2,
+        WeightResidency::HbmStream,
+    );
+    let lp = layer_program(&sarch, &lw, Dataflow::FlatColl, 2);
+    let layer_stats = execute(&lp.program, 0);
+    let layer_rep = Roofline::from_program(&sarch, &lp.program)
+        .check(layer_stats.makespan)
+        .unwrap_or_else(|d| panic!("composed layer: {d}"));
+    println!(
+        "  roofline (composed layer, FlatColl g2): {} bound {} cycles, utilization {:.1}%",
+        layer_rep.binding,
+        layer_rep.bound,
+        layer_rep.utilization * 100.0
+    );
+    rec.metric("layer_roofline_utilization", layer_rep.utilization);
 
     rec.write_json(OUT_PATH, "serving_sweep");
 }

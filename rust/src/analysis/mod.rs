@@ -1,112 +1,34 @@
 //! §Analysis: static program verifier + roofline cross-checker.
 //!
-//! Every headline this repo reports — the paper's utilization and
-//! HBM-traffic claims, the fold/parallel/fault bit-identity walls of the
-//! earlier PRs — rests on invariants of sealed [`Program`] DAGs that were
-//! previously enforced only by randomized differential tests and scattered
-//! `debug_assert!`s. This module turns those invariants into a checkable
-//! artifact: a linter that *proves* them per program and a roofline model
-//! that cross-checks every DES makespan against analytical lower bounds.
+//! [`verify_program`] / [`verify_batch`] prove, in one linear pass over a
+//! sealed [`Program`] DAG, the invariants the differential-test walls
+//! assume: well-formedness (`resource-range`, `dangling-dep`), acyclicity
+//! with a cycle witness (`cycle`), §Shard partition soundness
+//! (`shard-partition`, `shard-resource-span`, `shard-leak`,
+//! `shard-cross-edge`), the fold-exactness chain precondition
+//! (`fold-chain`), batch band disjointness (`batch-span`,
+//! `batch-band-overlap`), and fault-plan sanity ([`verify_fault_plan`]).
+//! What stays tested rather than proven — and why the verifier cannot
+//! replace the differential walls — is argued in `docs/ARCHITECTURE.md`
+//! §"Static verification and the roofline cross-check".
 //!
-//! # What is proven vs what stays tested
-//!
-//! **Proven per program** (by [`verify_program`] / [`verify_batch`], a
-//! linear-time pass over the concrete DAG at hand):
-//!
-//! - *Well-formedness*: every op names an allocated resource and every
-//!   dependency points at an existing op (`resource-range`,
-//!   `dangling-dep`).
-//! - *Acyclicity*: a Kahn pass settles every op or the diagnostic carries
-//!   a cycle witness naming the ops on it (`cycle`). Builder programs are
-//!   topologically ordered by construction (`Program::op` requires deps
-//!   to precede the op), so this guards the hand-built and
-//!   template-stamped paths.
-//! - *Shard-partition soundness* — the invariant wall the parallel
-//!   executor's bit-identity proof stands on, promoted here from
-//!   `tests/parallel_differential.rs`: the shard CSR partitions the ops
-//!   (ascending within each shard), no resource's ops span two shards,
-//!   every contended resource (ops from ≥ 2 distinct owner tiles) lives
-//!   in [`SHARED_SHARD`], the per-resource owner table agrees with the
-//!   per-op map, and every cross-shard dependency edge touches the shared
-//!   shard (`shard-partition`, `shard-resource-span`, `shard-leak`,
-//!   `shard-cross-edge`).
-//! - *Fold-exactness precondition* (`fold-chain`): symmetry folding
-//!   (see `crate::dataflow`) is exact iff synchronous private chains
-//!   never resource-block. The static sufficient condition: for each
-//!   private resource, every op transitively depends on the previous op
-//!   on that resource — then FIFO order equals dependency order and an op
-//!   is never ready before its resource is free. Dependency edges always
-//!   point at smaller op ids, so the reachability search for consecutive
-//!   ops `a < b` is confined to `(a, b]` and the whole pass stays near
-//!   linear. Checked on programs that actually folded (`fold.ops > 0`):
-//!   the surviving representative stream is congruent to every elided
-//!   one, so proving its chains proves theirs.
-//! - *Batch geometry*: entry op spans are ascending, disjoint and
-//!   contained in the program, and no tile carries ops of two entries —
-//!   the disjoint-band property the scheduler's conservative-composition
-//!   argument requires (`batch-span`, `batch-band-overlap`).
-//! - *Fault-plan sanity* ([`verify_fault_plan`]): windows are non-empty,
-//!   derate/slowdown ratios are ≥ 1, channels and killed tiles exist in
-//!   the target architecture, and no tile dies twice (`fault-window`,
-//!   `fault-ratio`, `fault-channel`, `fault-tile`,
-//!   `fault-duplicate-death`).
-//!
-//! **Still tested, not proven**: that the DES *executes* a verified
-//! program correctly (engine differential tests), that folding/parallel
-//! runs are bit-identical (fold/parallel/fault differential tests), and
-//! data-race freedom of the parallel executor (the determinism matrix
-//! plus the nightly ThreadSanitizer CI job). The verifier checks the
-//! *inputs* those proofs assume; it cannot replace them.
-//!
-//! # The roofline cross-check
-//!
-//! [`Roofline`] computes lower bounds on the makespan of any run and
+//! [`Roofline`] computes analytical lower bounds on any run's makespan
+//! (compute, HBM, NoC, per-resource serialization) and
 //! [`Roofline::check`] asserts `makespan ≥ max(bounds)` — a violation is
 //! a simulator bug by construction, and the diagnostic names the
-//! offending bound and resource. Bounds:
+//! offending bound and resource. The bounds are sound under folding and
+//! under slow-faults, and are skipped for plans with tile deaths (which
+//! remove work); the soundness arguments live in the same ARCHITECTURE
+//! section.
 //!
-//! - *Compute*: `flops / peak_flops_per_cycle`. Sound because every
-//!   RedMulE op's occupancy is at least its flops divided by the tile's
-//!   peak (the timing model only adds fill/drain overhead), so one tile
-//!   cannot retire more than `tile_peak` flops per busy cycle and the
-//!   mesh cannot retire more than `peak_flops_per_cycle` per makespan
-//!   cycle. Uses the workload's compulsory matmul flops and, when a
-//!   program is given, the program's (≥ compulsory) executed flops.
-//! - *HBM*: compulsory bytes over aggregate bandwidth
-//!   (workload-level), and per-channel occupancy sums (program-level) —
-//!   each channel is a FIFO resource, so its total occupancy serializes.
-//! - *NoC*: per-bus occupancy sums over resources carrying fabric
-//!   collective ops.
-//! - *Serialization*: the same per-resource occupancy sum over *every*
-//!   resource — the binding FIFO is a lower bound whatever kind of
-//!   resource it is.
+//! Wiring: `Program::seal` re-verifies every program it seals in debug
+//! builds, and in release when [`set_release_verify`] is on (the
+//! `--verify` CLI flag). `flatattention lint` sweeps dataflows × presets
+//! × fold/solo/paged modes × fault plans and prints a pass/fail table;
+//! CI runs it in the `rust-analysis` job, and the benches record
+//! `roofline_utilization` gated by `scripts/check_bench_targets.py`.
 //!
-//! **Sound under folding**: folded and unfolded runs have identical
-//! makespans (the fold differential wall), shared-resource ops are kept
-//! verbatim (channel/bus occupancy sums unchanged), `Program::flops`
-//! counts elided work, and a folded delay op's occupancy equals the real
-//! chain residency it stands for — every bound is computed against
-//! quantities folding preserves.
-//!
-//! **Sound under slow-faults, skipped under deaths**: outages, derates
-//! and NoC slowdowns only delay ops or stretch their occupancy, so a
-//! faulted makespan only grows and every fault-free lower bound still
-//! holds. Tile deaths *remove* work, so the bounds above (which count all
-//! of it) are no longer lower bounds; callers skip the roofline check for
-//! plans with deaths ([`FaultPlan::deaths`] non-empty).
-//!
-//! # Wiring
-//!
-//! `Program::seal` re-verifies every program it seals in debug builds,
-//! and in release builds when [`set_release_verify`] is on (the `--verify`
-//! CLI flag on `run` / `schedule` / `report`). `flatattention lint`
-//! sweeps dataflows × presets × fold/solo/paged modes × fault plans and
-//! prints a pass/fail table; CI runs it in the `rust-analysis` job, and
-//! the benches record `roofline_utilization` gated by
-//! `scripts/check_bench_targets.py`.
-//!
-//! [`SHARED_SHARD`]: crate::sim::SHARED_SHARD
-//! [`FaultPlan::deaths`]: crate::sim::FaultPlan
+//! [`Program`]: crate::sim::Program
 
 mod roofline;
 mod verify;

@@ -1,6 +1,7 @@
 //! Roofline cross-checker: analytical lower bounds on DES makespans
-//! (`crate::analysis` essay, "The roofline cross-check", argues each
-//! bound's soundness — including under folding and slow-faults).
+//! (`docs/ARCHITECTURE.md` §"Static verification and the roofline
+//! cross-check" argues each bound's soundness — including under folding
+//! and slow-faults).
 
 use crate::arch::ArchConfig;
 use crate::dataflow::Workload;
@@ -37,9 +38,11 @@ pub struct Roofline {
 /// against it (`bound / makespan`, in `(0, 1]`).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RooflineReport {
+    /// The binding lower bound (cycles).
     pub bound: Cycle,
     /// Which bound binds: `"compute"`, `"hbm"`, `"noc"` or `"serial"`.
     pub binding: &'static str,
+    /// `bound / makespan`, in `(0, 1]`.
     pub utilization: f64,
 }
 
@@ -132,6 +135,18 @@ impl Roofline {
     /// Cross-check one run: `makespan >= max(bounds)` or a diagnostic
     /// naming the violated bound and its resource. On success, reports
     /// utilization = `bound / makespan`.
+    ///
+    /// ```
+    /// use flatattention::analysis::Roofline;
+    /// use flatattention::arch::presets;
+    /// use flatattention::dataflow::{run, Dataflow, Workload};
+    ///
+    /// let arch = presets::table2(8);
+    /// let wl = Workload::new(256, 64, 4, 1);
+    /// let stats = run(&arch, &wl, Dataflow::Flash2, 1);
+    /// let rep = Roofline::from_workload(&arch, &wl).check(stats.makespan).unwrap();
+    /// assert!(rep.utilization > 0.0 && rep.utilization <= 1.0);
+    /// ```
     pub fn check(&self, makespan: Cycle) -> Result<RooflineReport, Diagnostic> {
         let bounds: [(&'static str, Cycle, Option<u32>); 4] = [
             ("compute", self.compute_bound, None),

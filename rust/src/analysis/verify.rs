@@ -18,7 +18,9 @@ use crate::sim::{FaultPlan, Program, NO_TILE, SHARED_SHARD};
 /// offending ops/resources.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Diagnostic {
+    /// Stable defect-class tag.
     pub check: &'static str,
+    /// Names the offending ops/resources.
     pub message: String,
 }
 
@@ -72,14 +74,52 @@ pub fn verify_batch(bp: &BatchProgram) -> Vec<Diagnostic> {
         prev_end = prev_end.max(end);
     }
 
-    // Disjoint tile bands: a tile may carry ops of at most one entry.
+    // GEMM tails (layered composition): one tail per entry or none at
+    // all, every tail after every attention span, tails pairwise ordered.
+    if !bp.tail_spans.is_empty() && bp.tail_spans.len() != bp.spans.len() {
+        diags.push(Diagnostic::new(
+            "batch-tail",
+            format!(
+                "{} tail spans for {} entries (must be 0 or one per entry)",
+                bp.tail_spans.len(),
+                bp.spans.len()
+            ),
+        ));
+    }
+    let attn_end = prev_end;
+    let mut prev_tail_end = attn_end;
+    for (k, &(start, end)) in bp.tail_spans.iter().enumerate() {
+        if start > end || end > n {
+            diags.push(Diagnostic::new(
+                "batch-tail",
+                format!("entry {k} tail spans ops [{start}, {end}) outside the {n}-op program"),
+            ));
+        } else if start < prev_tail_end {
+            diags.push(Diagnostic::new(
+                "batch-tail",
+                format!(
+                    "entry {k} tail [{start}, {end}) overlaps a previous span (attention ends at {attn_end})"
+                ),
+            ));
+        }
+        prev_tail_end = prev_tail_end.max(end);
+    }
+
+    // Disjoint tile bands: a tile may carry ops of at most one entry —
+    // counting the entry's GEMM tail, which must stay on the same band.
     // (Channel/bus ops are tile-tagged by their *issuing* tile, so they
     // participate too — sharing a tile across entries would break the
     // per-entry completion attribution either way.)
     let ops = bp.program.ops();
     let mut owner: HashMap<u32, usize> = HashMap::new();
     let mut reported: Vec<u32> = Vec::new();
-    for (k, &(start, end)) in bp.spans.iter().enumerate() {
+    let entry_ranges = bp
+        .spans
+        .iter()
+        .enumerate()
+        .chain(bp.tail_spans.iter().enumerate())
+        .map(|(k, &(s, e))| (k, s, e));
+    for (k, start, end) in entry_ranges {
         if start > end || end > n {
             continue; // already diagnosed above
         }
@@ -639,14 +679,71 @@ mod tests {
         let _ = p.op(r0, 1, 0, Component::RedMule, 3, 0, &[]);
         let _ = p.op(r1, 1, 0, Component::RedMule, 3, 0, &[]);
         p.seal();
-        let bp = BatchProgram { program: p, spans: vec![(0, 1), (1, 2)] };
+        let bp = BatchProgram { program: p, spans: vec![(0, 1), (1, 2)], tail_spans: vec![] };
         // Both entries' ops sit on tile 3: band overlap.
         let diags = verify_batch(&bp);
         assert!(diags.iter().any(|d| d.check == "batch-band-overlap"), "{diags:?}");
         // Overlapping spans are a distinct defect class.
-        let bp = BatchProgram { program: bp.program, spans: vec![(0, 2), (1, 2)] };
+        let bp =
+            BatchProgram { program: bp.program, spans: vec![(0, 2), (1, 2)], tail_spans: vec![] };
         let diags = verify_batch(&bp);
         assert!(diags.iter().any(|d| d.check == "batch-span"), "{diags:?}");
+    }
+
+    #[test]
+    fn batch_tail_defects_are_named() {
+        let mut p = Program::new();
+        let r0 = p.resource();
+        let r1 = p.resource();
+        let _ = p.op(r0, 1, 0, Component::RedMule, 0, 0, &[]);
+        let _ = p.op(r1, 1, 0, Component::RedMule, 8, 0, &[]);
+        p.seal();
+        // Tail count must match the entry count.
+        let bp = BatchProgram { program: p, spans: vec![(0, 1), (1, 2)], tail_spans: vec![(2, 2)] };
+        let diags = verify_batch(&bp);
+        assert!(diags.iter().any(|d| d.check == "batch-tail"), "{diags:?}");
+        // A tail overlapping the attention spans is named too.
+        let bp = BatchProgram {
+            program: bp.program,
+            spans: vec![(0, 1)],
+            tail_spans: vec![(0, 2)],
+        };
+        let diags = verify_batch(&bp);
+        assert!(diags.iter().any(|d| d.check == "batch-tail"), "{diags:?}");
+    }
+
+    /// A real layered compose (attention + per-entry GEMM tails across
+    /// two bands) passes every batch rule, including the extended
+    /// tail/band geometry.
+    #[test]
+    fn layered_batch_compose_verifies_clean() {
+        use crate::arch::presets;
+        use crate::dataflow::{Dataflow, WeightResidency, Workload};
+        use crate::hbm::PageMap;
+        use crate::scheduler::batch::{compose_layered, BatchEntry, LayerParams};
+
+        let arch = presets::table2(8);
+        let mut p0 = PageMap::new(32);
+        p0.grow_to(256, |p| (8 + (p % 2)) as u32);
+        let mut p1 = PageMap::new(32);
+        p1.grow_to(300, |p| (12 + (p % 2)) as u32);
+        let entries = [
+            BatchEntry {
+                request: 0,
+                slot: 0,
+                workload: Workload::new(128, 64, 4, 1).with_causal(true).with_kv_prefix(128),
+                pages: &p0,
+            },
+            BatchEntry {
+                request: 1,
+                slot: 2,
+                workload: Workload::new(300, 64, 4, 1).with_kv_heads(2).decode(),
+                pages: &p1,
+            },
+        ];
+        let lp = LayerParams { ffn_mult: 4, weights: WeightResidency::HbmStream };
+        let bp = compose_layered(&arch, Dataflow::Flash2, 2, 4, &entries, lp);
+        assert!(verify_batch(&bp).is_empty());
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub struct ProcessNode {
 }
 
 impl ProcessNode {
+    /// The process point used by the paper's area estimate.
     pub fn tsmc_5nm() -> Self {
         Self {
             transistors_per_ge: 4.0,
@@ -48,6 +49,7 @@ pub struct AreaModel {
     pub ge_per_spatz_fpu: f64,
     /// Scalar (Snitch) cores per tile and GE per core.
     pub snitch_cores_per_tile: f64,
+    /// GE per Snitch scalar core.
     pub ge_per_snitch: f64,
     /// GE for the iDMA engine.
     pub ge_idma: f64,
@@ -55,6 +57,7 @@ pub struct AreaModel {
     pub ge_router: f64,
     /// GE for tile-local interconnect, control, and instruction cache logic.
     pub ge_tile_misc: f64,
+    /// Process node the GE counts are converted with.
     pub process: ProcessNode,
 }
 
@@ -76,10 +79,13 @@ impl Default for AreaModel {
 /// Die-area estimate decomposition (mm²).
 #[derive(Debug, Clone)]
 pub struct DieArea {
+    /// Logic area (GE-derived).
     pub logic_mm2: f64,
+    /// SRAM macro area.
     pub sram_mm2: f64,
     /// Total including the utilization factor.
     pub total_mm2: f64,
+    /// Total logic gate-equivalents.
     pub total_ge: f64,
 }
 

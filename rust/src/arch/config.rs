@@ -58,6 +58,7 @@ impl TileConfig {
         }
     }
 
+    /// Tile L1 capacity in bytes.
     pub fn l1_bytes(&self) -> u64 {
         self.l1_kib as u64 * 1024
     }
@@ -92,6 +93,7 @@ pub struct HbmConfig {
 }
 
 impl HbmConfig {
+    /// West + south channel count.
     pub fn total_channels(&self) -> usize {
         self.channels_west + self.channels_south
     }
@@ -110,19 +112,24 @@ impl HbmConfig {
 /// A full accelerator instance.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArchConfig {
+    /// Preset name (reports and JSON).
     pub name: String,
     /// Mesh width (tiles in x).
     pub mesh_x: usize,
     /// Mesh height (tiles in y).
     pub mesh_y: usize,
+    /// Per-tile compute/memory configuration.
     pub tile: TileConfig,
+    /// Mesh NoC configuration.
     pub noc: NocConfig,
+    /// HBM channel configuration.
     pub hbm: HbmConfig,
     /// Clock frequency (paper: 1 GHz).
     pub freq_ghz: f64,
 }
 
 impl ArchConfig {
+    /// Total tiles in the mesh.
     pub fn num_tiles(&self) -> usize {
         self.mesh_x * self.mesh_y
     }
@@ -188,6 +195,7 @@ impl ArchConfig {
         problems
     }
 
+    /// Serialize for result stores and reports.
     pub fn to_json(&self) -> Json {
         Json::obj([
             ("name", Json::str(self.name.clone())),

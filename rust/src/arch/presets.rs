@@ -7,6 +7,7 @@ use super::config::{ArchConfig, HbmConfig, NocConfig, TileConfig};
 /// so a 16×128×16 slice lands near the paper's reported 23% active
 /// utilization (32×32 group, S=512) while 128×128×128 blocks exceed 85%.
 pub const REDMULE_FILL: u64 = 8;
+/// Per-invocation RedMulE offload/setup overhead in cycles (see [`REDMULE_FILL`]).
 pub const REDMULE_SETUP: u64 = 120;
 
 /// Table I tile: RedMulE 32×16 CE (1 TFLOPS @ FP16), Spatz 16 FPU

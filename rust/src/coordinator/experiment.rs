@@ -8,14 +8,18 @@ use crate::util::json::Json;
 /// One simulation to run: a workload × architecture × dataflow (+ group).
 #[derive(Debug, Clone)]
 pub struct ExperimentSpec {
+    /// Architecture instance to simulate.
     pub arch: ArchConfig,
+    /// Attention workload shape.
     pub workload: Workload,
+    /// Dataflow mapping to evaluate.
     pub dataflow: Dataflow,
     /// FlatAttention group edge (ignored for FlashAttention variants).
     pub group: usize,
 }
 
 impl ExperimentSpec {
+    /// Stable key naming this spec (memoization and result-row joins).
     pub fn id(&self) -> String {
         if self.dataflow.is_flat() {
             format!(
@@ -36,13 +40,21 @@ impl ExperimentSpec {
 /// tests assert cached results are bit-identical to recomputed ones.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentResult {
+    /// The spec's [`ExperimentSpec::id`].
     pub id: String,
+    /// Dataflow that ran.
     pub dataflow: Dataflow,
+    /// Workload that ran.
     pub workload: Workload,
+    /// FlatAttention group edge used (1 for FlashAttention variants).
     pub group: usize,
+    /// End-to-end modeled cycles.
     pub makespan: u64,
+    /// Host wall-clock spent simulating (not modeled time).
     pub runtime_ms: f64,
+    /// Per-component busy time on the tracked tile.
     pub breakdown: Breakdown,
+    /// Total HBM traffic of the run.
     pub hbm_bytes: u64,
     /// System compute utilization (matrix FLOPs vs whole-chip peak).
     pub utilization: f64,
@@ -52,10 +64,12 @@ pub struct ExperimentResult {
     pub hbm_bw_util: f64,
     /// Achieved TFLOPS at the architecture clock.
     pub tflops: f64,
+    /// DES ops executed (folded runs execute fewer).
     pub ops_executed: usize,
 }
 
 impl ExperimentResult {
+    /// Derive the result row from a finished run's stats.
     pub fn from_stats(spec: &ExperimentSpec, stats: &RunStats) -> Self {
         let arch = &spec.arch;
         let util = stats.compute_utilization(arch.peak_flops_per_cycle());
@@ -77,6 +91,7 @@ impl ExperimentResult {
         }
     }
 
+    /// Serialize for the [`crate::coordinator::ResultStore`].
     pub fn to_json(&self) -> Json {
         Json::obj([
             ("id", Json::str(self.id.clone())),

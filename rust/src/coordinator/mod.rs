@@ -17,8 +17,8 @@ pub mod store;
 
 pub use experiment::{ExperimentResult, ExperimentSpec};
 pub use runner::{
-    best_group, clear_memo, engine_threads, fault_plan, memo_len, memo_stats, run_all,
-    run_all_uncached, run_one, run_one_uncached, set_engine_threads, set_fault_plan, spec_key,
-    valid_groups, SpecKey,
+    best_group, clear_memo, engine_threads, fault_plan, layer_key, memo_len, memo_stats, run_all,
+    run_all_uncached, run_layer, run_one, run_one_uncached, set_engine_threads, set_fault_plan,
+    spec_key, valid_groups, LayerKey, LayerResult, SpecKey,
 };
 pub use store::ResultStore;

@@ -19,6 +19,7 @@ pub struct ResultStore {
 }
 
 impl ResultStore {
+    /// An empty store.
     pub fn new() -> Self {
         Self::default()
     }
@@ -37,6 +38,7 @@ impl ResultStore {
         }
     }
 
+    /// Serialize every section into one JSON object.
     pub fn to_json(&self) -> Json {
         Json::Obj(
             self.sections
@@ -68,6 +70,7 @@ impl ResultStore {
         Ok(store)
     }
 
+    /// Rows of a named section, if present.
     pub fn section(&self, name: &str) -> Option<&[Json]> {
         self.sections
             .iter()

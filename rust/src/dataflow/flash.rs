@@ -255,10 +255,13 @@ fn flash_build(
 /// a serving workload emitted onto a horizontal band of tile rows, with
 /// its KV cache channel-placed page by page.
 pub(crate) struct FlashBatchEntry<'a> {
+    /// This request's serving workload slice.
     pub wl: Workload,
+    /// KV-cache page table (page -> HBM channel).
     pub pages: &'a PageMap,
     /// Tile-row band `[y0, y1)` this entry's blocks are dealt over.
     pub y0: usize,
+    /// Exclusive band end (see `y0`).
     pub y1: usize,
 }
 

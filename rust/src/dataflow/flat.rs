@@ -270,10 +270,13 @@ fn flat_build(
 /// rows fall inside the entry's tile-row band, with its KV cache
 /// channel-placed by a page table.
 pub(crate) struct FlatBatchEntry<'a> {
+    /// This request's serving workload slice.
     pub wl: Workload,
+    /// KV-cache page table (page -> HBM channel).
     pub pages: &'a PageMap,
     /// Tile-row band `[y0, y1)`; must be aligned to the group edge.
     pub y0: usize,
+    /// Exclusive band end (see `y0`).
     pub y1: usize,
 }
 

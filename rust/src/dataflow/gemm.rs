@@ -1,0 +1,363 @@
+//! Band-scoped tiled GEMM kernels for the transformer projection / FFN
+//! workloads that surround attention in a full layer (see
+//! `crate::dataflow::layer` for the composition).
+//!
+//! Unlike [`crate::dataflow::summa`], which owns the full mesh, these
+//! kernels are emitted onto a horizontal *band* of tile rows — the same
+//! band a scheduler slot owns for attention — so a composed serving step
+//! can run request A's projections while request B's attention occupies a
+//! different band. The mapping is output-stationary and band-local:
+//!
+//! - **M** (activation rows) partitions across the band's tile rows;
+//! - **N** (output columns) partitions across the mesh columns, so each
+//!   tile owns an `mb × nt` block of C;
+//! - **K** streams in panels sized by [`gemm_panel_kb`] to fit L1 with
+//!   double buffering.
+//!
+//! Per K panel, each band row loads its `A` panel once through the row's
+//! west HBM channel and row-multicasts it to the row's tiles (the fabric
+//! collective); `B` weight panels stream per tile through the same row
+//! channel when [`WeightResidency::HbmStream`], and are elided entirely
+//! under [`WeightResidency::Resident`] (weights pinned on-tile — the
+//! sweepable axis). `C` stores leave through the row channel. Restricting
+//! *all* traffic to the band's own west row channels keeps a batch
+//! entry's channel footprint band-local, which is what the conservative-
+//! composition / disjoint-channel differential story (and the scheduler's
+//! channel masks) rely on. The cost of that choice is honest: `B` panels
+//! are re-streamed once per band row instead of column-multicast across
+//! bands — cross-band collectives would contend on physical column buses
+//! shared with other entries' bands.
+//!
+//! GEMM ops never fold or stamp: symmetry folding is an attention-stream
+//! concept (see `crate::dataflow` §fold); every GEMM op is emitted
+//! verbatim, so cross-kernel dependency edges always attach to real ops.
+
+use crate::arch::ArchConfig;
+use crate::engines::{dma_hbm_time, matmul_cycles, SpatzOp};
+use crate::hbm::HbmMap;
+use crate::noc::{collective_time, CollectiveKind};
+use crate::sim::{Component, OpId, Program, ResourceId, NO_TILE};
+
+use super::summa::GemmWorkload;
+
+/// FP16 element size (matches `Workload::BYTES_PER_ELEM`).
+const EB: u64 = 2;
+
+/// Where a GEMM kernel's `B` (weight) operand lives — the sweepable
+/// weights axis of the layer workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WeightResidency {
+    /// Weights stream from HBM through the band's row channels each time
+    /// the kernel runs (the honest serving default: layer weights do not
+    /// fit in SRAM).
+    HbmStream,
+    /// Weights are pinned in on-tile memory; the kernel moves only
+    /// activations. An idealized upper bound — the other end of the
+    /// sweep.
+    Resident,
+}
+
+/// The residency values a sweep iterates over.
+pub const ALL_RESIDENCIES: [WeightResidency; 2] =
+    [WeightResidency::HbmStream, WeightResidency::Resident];
+
+impl WeightResidency {
+    /// Stable CLI / report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            WeightResidency::HbmStream => "hbm",
+            WeightResidency::Resident => "resident",
+        }
+    }
+
+    /// Parse a [`WeightResidency::label`] (the `--weights` grammar).
+    pub fn from_label(s: &str) -> Option<Self> {
+        match s {
+            "hbm" => Some(WeightResidency::HbmStream),
+            "resident" => Some(WeightResidency::Resident),
+            _ => None,
+        }
+    }
+}
+
+/// K-panel depth for a band GEMM tile: the largest multiple of 16 whose
+/// double-buffered footprint fits L1 (at least 16 even when nothing
+/// fits — degenerate tiles still make progress).
+///
+/// The footprint formula is the L1 tiling contract shared with the SUMMA
+/// builder: `A` and `B` panels are double-buffered, the `C` block is
+/// resident once:
+///
+/// ```
+/// use flatattention::dataflow::gemm_panel_kb;
+///
+/// let (l1, mb, nt) = (512 * 1024, 128, 448);
+/// let kb = gemm_panel_kb(l1, mb, nt);
+/// // 2 bytes/elem · (2·A + 2·B + C) must fit in L1:
+/// assert!(2 * (2 * mb * kb + 2 * kb * nt + mb * nt) <= l1);
+/// assert!(kb >= 16 && kb % 16 == 0);
+/// ```
+pub fn gemm_panel_kb(l1_bytes: u64, mb: u64, nt: u64) -> u64 {
+    let mut kb = 16u64;
+    while kb < 1024 {
+        let next = kb + 16;
+        if EB * (2 * mb * next + 2 * next * nt + mb * nt) > l1_bytes {
+            break;
+        }
+        kb = next;
+    }
+    kb
+}
+
+/// Append one band-scoped GEMM kernel to `prog` and return the id of its
+/// zero-cost *sink barrier* — the single op every later kernel hangs its
+/// cross-kernel dependency on.
+///
+/// `prog` must already own the architecture's HBM channel resources at
+/// indices `0..n_chan` (the attention builders' channel-first invariant);
+/// engine and bus resources are allocated fresh per call, which is exact
+/// because the entry barrier serializes this kernel behind `deps` anyway
+/// — by the time any GEMM op can issue, the previous kernel's engines
+/// are drained.
+///
+/// `deps` are the cross-kernel edges (the previous kernel's sinks, or
+/// empty for a solo kernel). They are joined by a zero-cost *entry
+/// barrier* which every root op of this kernel depends on, so the whole
+/// kernel issues no earlier than `max(completion of deps)` — the fact
+/// the layer-additivity differential test pins.
+pub(crate) fn append_gemm_band(
+    prog: &mut Program,
+    arch: &ArchConfig,
+    gemm: &GemmWorkload,
+    y0: usize,
+    y1: usize,
+    residency: WeightResidency,
+    deps: &[OpId],
+) -> OpId {
+    let hbm_map = HbmMap::new(arch);
+    let n_chan = hbm_map.total_channels();
+    debug_assert!(
+        prog.num_resources() >= n_chan,
+        "append_gemm_band: program must own the channel resources first"
+    );
+    debug_assert!(y0 < y1 && y1 <= arch.mesh_y, "append_gemm_band: bad band {y0}..{y1}");
+
+    let rows = y1 - y0;
+    let cols = arch.mesh_x;
+
+    // Fresh private resources for this kernel instance.
+    let barrier_res = prog.resource();
+    let redmule = prog.resources(rows * cols);
+    let spatz = prog.resources(rows * cols);
+    let row_bus = prog.resources(rows);
+
+    let entry = prog.op(barrier_res, 0, 0, Component::Other, NO_TILE, 0, deps);
+
+    let mb = gemm.m.div_ceil(rows as u64);
+    let nt = gemm.n.div_ceil(cols as u64);
+    let kb = gemm_panel_kb(arch.tile.l1_bytes(), mb.max(1), nt.max(1));
+    let k_steps = gemm.k.div_ceil(kb);
+    let local = |lx: usize, ly: usize| ly * cols + lx;
+
+    // Double-buffer chain per tile (same discipline as SUMMA).
+    let mut gemm_prev: Vec<Option<OpId>> = vec![None; rows * cols];
+    let mut gemm_prev2: Vec<Option<OpId>> = vec![None; rows * cols];
+    let mut stores: Vec<OpId> = Vec::with_capacity(rows * cols);
+    let mut deps_buf: Vec<OpId> = Vec::with_capacity(4);
+
+    for ly in 0..rows {
+        let y = y0 + ly;
+        let mb_cur = (gemm.m - (mb * ly as u64).min(gemm.m)).min(mb);
+        if mb_cur == 0 {
+            continue; // short M: band rows past the activation rows idle
+        }
+        let ch = hbm_map.row_channel(0, y);
+        for step in 0..k_steps {
+            let kb_cur = (gemm.k - step * kb).min(kb);
+
+            // A(row, k) panel: load at the row head, row-multicast.
+            let a_bytes = mb_cur * kb_cur * EB;
+            let ta = dma_hbm_time(&arch.hbm, &arch.noc, a_bytes, ch.hops);
+            deps_buf.clear();
+            deps_buf.push(entry);
+            deps_buf.extend(gemm_prev2[local(0, ly)]);
+            let a_load = prog.op(
+                ResourceId(ch.index as u32),
+                ta.occupancy,
+                ta.latency,
+                Component::HbmAccess,
+                arch.tile_id(0, y),
+                a_bytes,
+                &deps_buf,
+            );
+            let mt = collective_time(
+                &arch.noc,
+                a_bytes,
+                (cols - 1).max(1) as u64,
+                CollectiveKind::Multicast,
+            );
+            let a_mc = prog.op(
+                row_bus[ly],
+                mt.occupancy,
+                mt.latency,
+                Component::Multicast,
+                arch.tile_id(0, y),
+                0,
+                &[a_load],
+            );
+
+            for lx in 0..cols {
+                let nt_cur = (gemm.n - (nt * lx as u64).min(gemm.n)).min(nt);
+                if nt_cur == 0 {
+                    continue;
+                }
+                let tl = local(lx, ly);
+                deps_buf.clear();
+                deps_buf.push(a_mc);
+                if residency == WeightResidency::HbmStream {
+                    // B(k, col) weight panel through the band row channel.
+                    let b_bytes = kb_cur * nt_cur * EB;
+                    let bch = hbm_map.row_channel(lx, y);
+                    let tb = dma_hbm_time(&arch.hbm, &arch.noc, b_bytes, bch.hops);
+                    let mut bdeps = vec![entry];
+                    bdeps.extend(gemm_prev2[tl]);
+                    let b_load = prog.op(
+                        ResourceId(bch.index as u32),
+                        tb.occupancy,
+                        tb.latency,
+                        Component::HbmAccess,
+                        arch.tile_id(lx, y),
+                        b_bytes,
+                        &bdeps,
+                    );
+                    deps_buf.push(b_load);
+                }
+                deps_buf.extend(gemm_prev[tl]);
+                let op = prog.op(
+                    redmule[tl],
+                    matmul_cycles(&arch.tile, mb_cur, kb_cur, nt_cur),
+                    0,
+                    Component::RedMule,
+                    arch.tile_id(lx, y),
+                    0,
+                    &deps_buf,
+                );
+                gemm_prev2[tl] = gemm_prev[tl];
+                gemm_prev[tl] = Some(op);
+            }
+        }
+
+        // Epilogue + C store per tile of the row.
+        for lx in 0..cols {
+            let nt_cur = (gemm.n - (nt * lx as u64).min(gemm.n)).min(nt);
+            if nt_cur == 0 {
+                continue;
+            }
+            let tl = local(lx, ly);
+            let last = gemm_prev[tl].expect("k loop emitted at least one matmul");
+            let ep = prog.op(
+                spatz[tl],
+                SpatzOp::Scale { elems: mb_cur * nt_cur }.cycles(&arch.tile),
+                0,
+                Component::Spatz,
+                arch.tile_id(lx, y),
+                0,
+                &[last],
+            );
+            let c_bytes = mb_cur * nt_cur * EB;
+            let sch = hbm_map.row_channel(lx, y);
+            let tc = dma_hbm_time(&arch.hbm, &arch.noc, c_bytes, sch.hops);
+            stores.push(prog.op(
+                ResourceId(sch.index as u32),
+                tc.occupancy,
+                tc.latency,
+                Component::HbmAccess,
+                arch.tile_id(lx, y),
+                c_bytes,
+                &[ep],
+            ));
+        }
+    }
+
+    // Sink barrier: the kernel's single downstream handle. A GEMM over an
+    // empty band (m == 0) still yields a well-formed chain through the
+    // entry barrier.
+    if stores.is_empty() {
+        return prog.op(barrier_res, 0, 0, Component::Other, NO_TILE, 0, &[entry]);
+    }
+    prog.op(barrier_res, 0, 0, Component::Other, NO_TILE, 0, &stores)
+}
+
+/// Build a solo band GEMM program (channel resources first, one kernel,
+/// sealed) — the differential-test and roofline harness entry point.
+pub fn gemm_band_program(
+    arch: &ArchConfig,
+    gemm: &GemmWorkload,
+    y0: usize,
+    y1: usize,
+    residency: WeightResidency,
+) -> Program {
+    let mut prog = Program::new();
+    let hbm_map = HbmMap::new(arch);
+    prog.resources(hbm_map.total_channels());
+    append_gemm_band(&mut prog, arch, gemm, y0, y1, residency, &[]);
+    prog.flops = gemm.flops();
+    prog.seal();
+    prog
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::sim::execute;
+
+    #[test]
+    fn residency_labels_round_trip() {
+        for r in ALL_RESIDENCIES {
+            assert_eq!(WeightResidency::from_label(r.label()), Some(r));
+        }
+        assert_eq!(WeightResidency::from_label("l2"), None);
+    }
+
+    #[test]
+    fn band_gemm_builds_and_runs() {
+        let arch = presets::table2(8);
+        let g = GemmWorkload::new(512, 4096, 4096, "out-proj");
+        for res in ALL_RESIDENCIES {
+            let p = gemm_band_program(&arch, &g, 0, 2, res);
+            assert!(p.validate().is_ok(), "{res:?}");
+            let st = execute(&p, 0);
+            assert!(st.makespan > 0, "{res:?}");
+        }
+    }
+
+    #[test]
+    fn resident_weights_move_fewer_bytes() {
+        let arch = presets::table2(8);
+        let g = GemmWorkload::new(512, 4096, 4096, "ffn-up");
+        let stream = execute(&gemm_band_program(&arch, &g, 0, 4, WeightResidency::HbmStream), 0);
+        let resident = execute(&gemm_band_program(&arch, &g, 0, 4, WeightResidency::Resident), 0);
+        // Streaming moves at least the weight matrix on top of activations.
+        assert!(stream.hbm_bytes >= resident.hbm_bytes + EB * g.k * g.n);
+        assert!(resident.makespan <= stream.makespan);
+    }
+
+    #[test]
+    fn short_m_decode_gemm_still_works() {
+        // Decode projections have m == 1: only band row 0 computes.
+        let arch = presets::table2(8);
+        let g = GemmWorkload::new(1, 4096, 4096, "decode-proj");
+        let p = gemm_band_program(&arch, &g, 4, 8, WeightResidency::HbmStream);
+        assert!(p.validate().is_ok());
+        let st = execute(&p, 0);
+        assert!(st.makespan > 0);
+        // All tile-owned ops sit inside the band.
+        for op in p.ops() {
+            if op.tile != crate::sim::NO_TILE {
+                let y = op.tile as usize / arch.mesh_x;
+                assert!((4..8).contains(&y), "tile row {y} outside band");
+            }
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Full transformer-layer composition: attention + projections + FFN
+//! chained into ONE [`Program`] with explicit cross-kernel dependencies.
+//!
+//! §Kernel rotation. The op DAG forbids forward dependencies (an op's
+//! deps must already exist), and the attention builders must run first
+//! (they own the channel-resource-index invariant), so a layer is
+//! emitted in the rotation
+//!
+//! ```text
+//! attention → out-proj → FFN-up → FFN-down → QKV-proj (next layer)
+//! ```
+//!
+//! i.e. the QKV projection emitted at the *end* of layer `l` produces
+//! the Q/K/V consumed by layer `l+1`'s attention. Over `L` layers the
+//! rotation carries exactly the same per-layer cost as the textbook
+//! order (each layer runs one attention kernel and the same four GEMMs)
+//! while keeping every dependency backward.
+//!
+//! §Cross-kernel edges and fold exactness. Each kernel ends in a
+//! zero-cost *sink barrier* and starts with a zero-cost *entry barrier*
+//! depending on the previous kernel's sinks, so kernels serialize
+//! strictly. Symmetry folding stays exact under this composition because
+//! it only ever elides ops *inside* an attention stream's private
+//! compute chain — the per-stream store ops (the attention sinks) are
+//! emitted verbatim in both folded and unfolded programs and complete at
+//! identical cycles (fold ≡ unfold), so the cross-kernel edges attach to
+//! the same ops at the same times in both modes. GEMM kernels never fold.
+//! `tests/layer_differential.rs` pins both facts: the composed layer
+//! reproduces the solo attention and solo GEMM timelines bit-for-bit
+//! (strict-barrier additivity), folded or not.
+
+use crate::arch::ArchConfig;
+use crate::sim::{Component, OpId, Program, NO_TILE};
+
+use super::gemm::{append_gemm_band, WeightResidency};
+use super::summa::GemmWorkload;
+use super::{build_program, Dataflow, Workload};
+
+/// An attention workload plus the projection/FFN GEMMs that complete a
+/// transformer layer around it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerWorkload {
+    /// The layer's attention kernel (defines `d_model = heads·head_dim`
+    /// and the activation row count `batch·q_len`).
+    pub attn: Workload,
+    /// FFN expansion factor (hidden = `ffn_mult · d_model`; ≥ 1).
+    pub ffn_mult: u64,
+    /// Where the projection/FFN weights live (the sweepable axis).
+    pub weights: WeightResidency,
+}
+
+impl LayerWorkload {
+    /// Bundle an attention workload into a layer. Panics on
+    /// `ffn_mult == 0` — an FFN-less layer is just the attention
+    /// workload.
+    pub fn new(attn: Workload, ffn_mult: u64, weights: WeightResidency) -> Self {
+        assert!(ffn_mult >= 1, "LayerWorkload: ffn_mult must be >= 1");
+        Self { attn, ffn_mult, weights }
+    }
+
+    /// Model width `d_model = heads · head_dim`.
+    pub fn d_model(&self) -> u64 {
+        self.attn.heads * self.attn.head_dim
+    }
+
+    /// K/V projection width `kv_heads · head_dim` (< `d_model` under
+    /// GQA/MQA — the QKV projection output narrows accordingly).
+    pub fn kv_dim(&self) -> u64 {
+        self.attn.kv_heads * self.attn.head_dim
+    }
+
+    /// Activation rows through every GEMM: `batch · q_len` (1·batch for
+    /// decode steps).
+    pub fn gemm_rows(&self) -> u64 {
+        self.attn.batch * self.attn.q_len()
+    }
+
+    /// The layer's GEMMs in §Kernel-rotation order: output projection,
+    /// FFN up, FFN down, then the *next* layer's QKV projection (GQA
+    /// narrows its output to `d_model + 2·kv_dim`).
+    pub fn gemms(&self) -> [GemmWorkload; 4] {
+        let m = self.gemm_rows();
+        let dm = self.d_model();
+        let hidden = self.ffn_mult * dm;
+        [
+            GemmWorkload::new(m, dm, dm, "out-proj"),
+            GemmWorkload::new(m, dm, hidden, "ffn-up"),
+            GemmWorkload::new(m, hidden, dm, "ffn-down"),
+            GemmWorkload::new(m, dm, dm + 2 * self.kv_dim(), "qkv-proj"),
+        ]
+    }
+
+    /// Useful FLOPs of the whole layer (attention + all four GEMMs).
+    pub fn flops(&self) -> u64 {
+        self.attn.matmul_flops() + self.gemms().iter().map(GemmWorkload::flops).sum::<u64>()
+    }
+}
+
+/// A composed layer program plus per-kernel op spans (attention first,
+/// then the GEMMs in [`LayerWorkload::gemms`] order).
+#[derive(Debug)]
+pub struct LayerProgram {
+    /// The sealed composed program.
+    pub program: Program,
+    /// Per kernel: `[start, end)` op range. `spans[0]` is attention;
+    /// GEMM spans include their entry and sink barriers.
+    pub spans: Vec<(usize, usize)>,
+    /// Kernel labels parallel to `spans` (`"attention"`, then GEMM
+    /// labels).
+    pub labels: Vec<String>,
+}
+
+/// Ops in `[lo, hi)` with no dependent inside `[lo, hi)` — the range's
+/// sinks, i.e. where a cross-kernel barrier must attach.
+pub(crate) fn sinks_in(prog: &Program, lo: usize, hi: usize) -> Vec<OpId> {
+    let mut has_dependent = vec![false; hi - lo];
+    for op in &prog.ops()[lo..hi] {
+        for &d in prog.deps_of(op) {
+            let d = d as usize;
+            if d >= lo {
+                has_dependent[d - lo] = true;
+            }
+        }
+    }
+    (lo..hi).filter(|&i| !has_dependent[i - lo]).map(|i| OpId(i as u32)).collect()
+}
+
+/// Compose one full layer on the whole mesh: the solo attention program
+/// for `lw.attn` under `df`/`group`, then the four projection/FFN GEMMs
+/// appended behind strict barriers (§Cross-kernel edges).
+pub fn layer_program(
+    arch: &ArchConfig,
+    lw: &LayerWorkload,
+    df: Dataflow,
+    group: usize,
+) -> LayerProgram {
+    let attn = build_program(arch, &lw.attn, df, group);
+    let mut prog = attn.unsealed_clone();
+    let n_attn = prog.num_ops();
+    let mut spans = vec![(0, n_attn)];
+    let mut labels = vec!["attention".to_string()];
+
+    let mut deps = sinks_in(&prog, 0, n_attn);
+    for g in lw.gemms() {
+        let begin = prog.num_ops();
+        let sink = append_gemm_band(&mut prog, arch, &g, 0, arch.mesh_y, lw.weights, &deps);
+        prog.flops += g.flops();
+        spans.push((begin, prog.num_ops()));
+        labels.push(g.label.clone());
+        deps = vec![sink];
+    }
+    prog.seal();
+    LayerProgram { program: prog, spans, labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::sim::execute;
+
+    fn lw(weights: WeightResidency) -> LayerWorkload {
+        LayerWorkload::new(
+            Workload::new(512, 64, 8, 1).with_kv_heads(2).with_causal(true),
+            4,
+            weights,
+        )
+    }
+
+    #[test]
+    fn gemm_shapes_follow_the_rotation() {
+        let l = lw(WeightResidency::HbmStream);
+        let dm = 8 * 64;
+        let [op, up, down, qkv] = l.gemms();
+        assert_eq!((op.m, op.k, op.n), (512, dm, dm));
+        assert_eq!((up.m, up.k, up.n), (512, dm, 4 * dm));
+        assert_eq!((down.m, down.k, down.n), (512, 4 * dm, dm));
+        // GQA: kv_dim = 2 heads · 64 = 128, so QKV output is dm + 256.
+        assert_eq!((qkv.m, qkv.k, qkv.n), (512, dm, dm + 256));
+        let gemm_flops: u64 = l.gemms().iter().map(|g| g.flops()).sum();
+        assert_eq!(l.flops(), l.attn.matmul_flops() + gemm_flops);
+    }
+
+    #[test]
+    fn layer_program_builds_for_every_dataflow() {
+        let arch = presets::table2(8);
+        for df in crate::dataflow::ALL_DATAFLOWS {
+            let l = lw(WeightResidency::HbmStream);
+            let lp = layer_program(&arch, &l, df, 2);
+            assert!(lp.program.validate().is_ok(), "{df:?}");
+            assert_eq!(lp.spans.len(), 5, "{df:?}");
+            assert_eq!(lp.labels[0], "attention");
+            assert_eq!(lp.program.flops, l.flops(), "{df:?}");
+            // Spans tile the program contiguously.
+            assert_eq!(lp.spans[0].0, 0);
+            for w in lp.spans.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "{df:?}");
+            }
+            assert_eq!(lp.spans.last().unwrap().1, lp.program.num_ops());
+            let st = execute(&lp.program, 0);
+            assert!(st.makespan > 0, "{df:?}");
+        }
+    }
+
+    #[test]
+    fn resident_layer_is_no_slower() {
+        let arch = presets::table2(8);
+        let stream = layer_program(&arch, &lw(WeightResidency::HbmStream), Dataflow::FlatColl, 2);
+        let resident = layer_program(&arch, &lw(WeightResidency::Resident), Dataflow::FlatColl, 2);
+        let ms = execute(&stream.program, 0).makespan;
+        let mr = execute(&resident.program, 0).makespan;
+        assert!(mr <= ms, "resident {mr} vs streamed {ms}");
+    }
+
+    #[test]
+    fn sinks_are_real_sinks() {
+        let arch = presets::table2(8);
+        let l = lw(WeightResidency::HbmStream);
+        let lp = layer_program(&arch, &l, Dataflow::Flash2, 2);
+        let (lo, hi) = lp.spans[0];
+        let sinks = sinks_in(&lp.program, lo, hi);
+        assert!(!sinks.is_empty());
+        // No op in the attention span depends on a sink.
+        for op in &lp.program.ops()[lo..hi] {
+            for &d in lp.program.deps_of(op) {
+                assert!(!sinks.iter().any(|s| s.0 == d));
+            }
+        }
+    }
+}

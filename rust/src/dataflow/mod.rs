@@ -57,6 +57,8 @@
 
 pub mod flash;
 pub mod flat;
+pub mod gemm;
+pub mod layer;
 pub mod summa;
 pub mod tiling;
 
@@ -68,6 +70,8 @@ use crate::sim::{
     ProgramArena, RunStats,
 };
 
+pub use gemm::{gemm_band_program, gemm_panel_kb, WeightResidency, ALL_RESIDENCIES};
+pub use layer::{layer_program, LayerProgram, LayerWorkload};
 pub use summa::{summa_program, GemmWorkload};
 pub use tiling::{flash_block_size, flat_slice_size, FlashTiling, FlatTiling};
 
@@ -158,6 +162,7 @@ pub enum Phase {
 }
 
 impl Phase {
+    /// Stable lowercase name (`"prefill"` / `"decode"`).
     pub fn label(self) -> &'static str {
         match self {
             Phase::Prefill => "prefill",
@@ -361,6 +366,7 @@ impl Workload {
         self.heads / self.kv_heads
     }
 
+    /// True when the workload is a decode step.
     pub fn is_decode(&self) -> bool {
         self.phase == Phase::Decode
     }
@@ -410,13 +416,19 @@ impl Workload {
 /// The evaluated MHA dataflow variants.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dataflow {
+    /// FlashAttention-2: tile-local Q blocks, synchronous K/V streaming.
     Flash2,
+    /// FlashAttention-2 dataflow with asynchronous (double-buffered) streaming.
     Flash3,
+    /// FlatAttention group dataflow without fabric collectives.
     Flat,
+    /// FlatAttention with single-cycle-per-hop fabric collectives.
     FlatColl,
+    /// FlatAttention with collectives and asynchronous streaming.
     FlatAsyn,
 }
 
+/// Every dataflow, in the order reports print them.
 pub const ALL_DATAFLOWS: [Dataflow; 5] = [
     Dataflow::Flash2,
     Dataflow::Flash3,
@@ -426,6 +438,7 @@ pub const ALL_DATAFLOWS: [Dataflow; 5] = [
 ];
 
 impl Dataflow {
+    /// Stable display/CLI name.
     pub fn label(self) -> &'static str {
         match self {
             Dataflow::Flash2 => "FA-2",
@@ -436,6 +449,7 @@ impl Dataflow {
         }
     }
 
+    /// Parse a (case-insensitive) label, e.g. from the CLI.
     pub fn from_label(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "fa-2" | "fa2" | "flash2" => Some(Dataflow::Flash2),

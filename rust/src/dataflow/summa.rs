@@ -23,17 +23,23 @@ use crate::sim::{Component, OpId, Program};
 /// A GEMM workload `C[M×N] = A[M×K] · B[K×N]` (FP16).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GemmWorkload {
+    /// Output rows (M).
     pub m: u64,
+    /// Inner/reduction dimension (K).
     pub k: u64,
+    /// Output columns (N).
     pub n: u64,
+    /// Display name used in reports and benches.
     pub label: String,
 }
 
 impl GemmWorkload {
+    /// A GEMM of shape `M x K x N`.
     pub fn new(m: u64, k: u64, n: u64, label: impl Into<String>) -> Self {
         Self { m, k, n, label: label.into() }
     }
 
+    /// `2 * M * K * N` multiply-accumulate FLOPs.
     pub fn flops(&self) -> u64 {
         2 * self.m * self.k * self.n
     }

@@ -137,6 +137,7 @@ pub struct FlashTiling {
 }
 
 impl FlashTiling {
+    /// Pick block sizes for `wl` that fit the tile's L1 budget.
     pub fn resolve(tile: &TileConfig, wl: &Workload, asynchronous: bool) -> Self {
         let budget = tile.l1_bytes();
         let d = wl.head_dim;
@@ -195,6 +196,7 @@ pub struct FlatTiling {
 }
 
 impl FlatTiling {
+    /// Pick group-level block/chunk sizes for `wl` on `arch`.
     pub fn resolve(arch: &ArchConfig, wl: &Workload, group: usize, asynchronous: bool) -> Self {
         assert!(
             group > 0 && arch.mesh_x % group == 0 && arch.mesh_y % group == 0,

@@ -51,6 +51,7 @@ impl TileCompute for NativeCompute {
 /// equivalent for any finite scores.
 #[cfg(feature = "pjrt")]
 pub struct RuntimeCompute<'rt> {
+    /// The loaded PJRT runtime the kernels execute on.
     pub runtime: &'rt Runtime,
 }
 

@@ -39,6 +39,7 @@ pub struct SoftmaxState {
 }
 
 impl SoftmaxState {
+    /// Fresh accumulator state for a `[br, d]` output block.
     pub fn init(br: usize, d: usize) -> Self {
         Self {
             m: vec![f32::NEG_INFINITY; br],

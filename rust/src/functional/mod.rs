@@ -11,10 +11,12 @@
 //! + compiled JAX/Pallas math.
 
 pub mod compute;
+pub mod gemm;
 pub mod golden;
 pub mod group;
 
 pub use compute::{NativeCompute, TileCompute};
+pub use gemm::{concat_heads, gemm_band_functional, qkv_split};
 #[cfg(feature = "pjrt")]
 pub use compute::RuntimeCompute;
 pub use golden::{

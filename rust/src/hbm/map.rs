@@ -6,7 +6,9 @@ use crate::noc::Topology;
 /// Which die edge a channel is attached to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Edge {
+    /// West edge (x = 0).
     West,
+    /// South edge (y = y_dim - 1).
     South,
 }
 
@@ -15,7 +17,9 @@ pub enum Edge {
 /// channel's edge attachment point.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ChannelRef {
+    /// Global channel index (west channels first, then south).
     pub index: usize,
+    /// XY hop distance from the requesting tile.
     pub hops: u64,
 }
 
@@ -48,6 +52,7 @@ impl HbmMap {
         }
     }
 
+    /// West + south channel count.
     pub fn total_channels(&self) -> usize {
         self.channels_west + self.channels_south
     }

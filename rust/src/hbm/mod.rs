@@ -8,7 +8,6 @@
 //! the west edge and column-streamed tensors (K, V) through the south edge
 //! — this is what makes FlatAttention's edge-loading scheme contention
 //! free when slices are distributed over a group.
-
 //!
 //! Serving extension: [`paged::PageMap`] generalizes the static mappings
 //! to page-granular KV-cache placement — each request's cache pages land

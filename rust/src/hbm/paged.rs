@@ -26,15 +26,18 @@ pub struct PageMap {
 }
 
 impl PageMap {
+    /// An empty map with the given page size (tokens).
     pub fn new(page_tokens: u64) -> Self {
         assert!(page_tokens > 0, "page size must be >= 1 token");
         Self { page_tokens, channels: Vec::new() }
     }
 
+    /// Page size in tokens.
     pub fn page_tokens(&self) -> u64 {
         self.page_tokens
     }
 
+    /// Pages currently mapped.
     pub fn num_pages(&self) -> usize {
         self.channels.len()
     }

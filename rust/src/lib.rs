@@ -7,6 +7,11 @@
 //! stack for tile-based many-PE accelerators, the FlatAttention /
 //! FlashAttention dataflow family, the NoC fabric collective primitives
 //! co-design, and the paper's complete evaluation harness.
+//!
+//! A guided tour of the module graph lives in `docs/ARCHITECTURE.md`; the
+//! CLI surface (the `flatattention` binary) is documented in `docs/CLI.md`.
+
+#![warn(missing_docs)]
 
 pub mod analysis;
 pub mod arch;

@@ -17,7 +17,7 @@ use flatattention::arch::{presets, ArchConfig};
 use flatattention::coordinator::{
     best_group, run_one, set_engine_threads, valid_groups, ExperimentSpec, ResultStore,
 };
-use flatattention::dataflow::{Dataflow, FlatTiling, Phase, Workload};
+use flatattention::dataflow::{Dataflow, FlatTiling, Phase, WeightResidency, Workload};
 use flatattention::functional::{attention_golden, run_flat_group_functional, NativeCompute};
 #[cfg(feature = "pjrt")]
 use flatattention::functional::RuntimeCompute;
@@ -80,7 +80,7 @@ fn print_usage() {
         "flatattention — FlatAttention dataflow + fabric collectives co-optimization (reproduction)
 
 USAGE:
-  flatattention report <fig3|fig4|fig5a|fig5b|fig5c|table1|table2|section2|area|headline|ablations|serving|schedule|robustness|telemetry|all>
+  flatattention report <fig3|fig4|fig5a|fig5b|fig5c|table1|table2|section2|area|headline|ablations|serving|schedule|robustness|telemetry|layers|all>
                       [--quick] [--threads N] [--out results.json]
   flatattention run    --dataflow <fa2|fa3|flat|flatcoll|flatasyn> [--seq 4096] [--d 128]
                       [--heads 32] [--batch 2] [--group 32] [--arch table1] [--threads N]
@@ -99,6 +99,14 @@ USAGE:
                       [--victim newest|fewest-pages|most-remaining]
                       SPEC: ';'-separated off:CH@F-U | slow:CH@F-UxN[/D] | noc@F-UxN[/D]
                       | die:TILE@AT  (e.g. \"slow:8@0-4000000x4;die:60@1200000\")
+                      Layer serving (full transformer layers per step):
+                      [--layers L] [--ffn-mult M] [--weights hbm|resident]
+                      (--ffn-mult >= 1 appends each request's out-proj/FFN/QKV
+                       GEMM tail to its band; --layers L > 1 runs L layers per
+                       token, pipelining requests at different layer depths
+                       across bands; --weights picks streamed vs resident
+                       projection/FFN weights. Plain `schedule` only — the
+                       router serves attention-only steps)
                       Telemetry (needs a single --dataflow, not 'all'):
                       [--trace-out FILE]    request-lifecycle chrome-trace JSON
                                             (open in chrome://tracing or Perfetto)
@@ -227,11 +235,14 @@ fn cmd_report(args: &Args) -> i32 {
     if all || which == "telemetry" {
         println!("{}", report::telemetry::render(&opts, Some(&mut store)));
     }
+    if all || which == "layers" {
+        println!("{}", report::layers::render(&opts, Some(&mut store)));
+    }
     if !matches!(
         which,
         "all" | "table1" | "table2" | "section2" | "area" | "fig3" | "fig4" | "fig5a" | "fig5b"
             | "fig5c" | "headline" | "ablations" | "serving" | "schedule" | "robustness"
-            | "telemetry"
+            | "telemetry" | "layers"
     ) {
         eprintln!("unknown report '{which}'");
         return 1;
@@ -427,6 +438,17 @@ fn cmd_schedule(args: &Args) -> i32 {
     let window = args.get_u64("window", 0).unwrap_or(0);
     let policy = if args.flag("static") { BatchPolicy::Static } else { BatchPolicy::Continuous };
 
+    // Layer serving: --ffn-mult >= 1 turns each step into a full
+    // transformer layer (attention + GEMM tails); --layers L runs L of
+    // them per token. Combination validity is checked by the scheduler
+    // (`ScheduleError::BadLayers`).
+    let layers = args.get_usize("layers", 1).unwrap_or(1);
+    let ffn_mult = args.get_u64("ffn-mult", 0).unwrap_or(0);
+    let weights_arg = args.get_or("weights", "hbm");
+    let Some(weights) = WeightResidency::from_label(weights_arg) else {
+        return fail(&format!("unknown --weights '{weights_arg}' (hbm|resident)"));
+    };
+
     // Router options: providing any of them runs the request-lifecycle
     // router (admission budgets, deadlines, preemption, fault remapping)
     // instead of the plain scheduler.
@@ -490,6 +512,12 @@ fn cmd_schedule(args: &Args) -> i32 {
         if policy == BatchPolicy::Static { "static batching" } else { "continuous batching" },
         if window > 0 { format!(", window={window}") } else { String::new() },
     );
+    if ffn_mult > 0 {
+        println!(
+            "layer serving: {layers} layer(s)/token, FFN x{ffn_mult}, weights {}",
+            weights.label()
+        );
+    }
     if let Some(rc) = &router_cfg {
         if policy == BatchPolicy::Static {
             return fail("--static is not supported with router options (continuous only)");
@@ -550,6 +578,9 @@ fn cmd_schedule(args: &Args) -> i32 {
         cfg.heads = heads;
         cfg.head_dim = head_dim;
         cfg.window = window;
+        cfg.layers = layers;
+        cfg.ffn_mult = ffn_mult;
+        cfg.weights = weights;
         cfg.threads = args.get_usize("threads", 1).unwrap_or(1);
         let mut tel = if telemetry_on {
             let mut t = RunTelemetry::new();
@@ -824,6 +855,28 @@ fn cmd_lint(args: &Args) -> i32 {
         match Roofline::from_program(&arch, &bp.program).check(stats.makespan) {
             Ok(rep) => rows.push((label, Ok(Some(rep.utilization)))),
             Err(d) => rows.push((label, Err(d.to_string()))),
+        }
+    }
+
+    // Layered batch composition: the projection/FFN GEMM tails ride each
+    // entry's tile-row band, so `verify_batch`'s batch-tail rules apply,
+    // and the program-level roofline must hold for GEMM-bearing programs
+    // (the case `check_bench_targets.py` gates via the serving sweep).
+    {
+        use flatattention::scheduler::{compose_layered, LayerParams};
+        let lp = LayerParams { ffn_mult: 2, weights: WeightResidency::HbmStream };
+        for df in ALL_DATAFLOWS {
+            let label = format!("table2-8  {:<9} layered batch", df.label());
+            let bp = compose_layered(&arch, df, 2, 4, &entries, lp);
+            if let Some(d) = verify_batch(&bp).first() {
+                rows.push((label, Err(d.to_string())));
+                continue;
+            }
+            let (stats, _) = bp.entry_stats();
+            match Roofline::from_program(&arch, &bp.program).check(stats.makespan) {
+                Ok(rep) => rows.push((label, Ok(Some(rep.utilization)))),
+                Err(d) => rows.push((label, Err(d.to_string()))),
+            }
         }
     }
 

@@ -28,8 +28,11 @@ use crate::sim::Cycle;
 /// but they are accounted to different breakdown components.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CollectiveKind {
+    /// One-to-many replication along the group row/column.
     Multicast,
+    /// Many-to-one max-combine (softmax running max).
     MaxReduce,
+    /// Many-to-one sum-combine (softmax denominator / PV partials).
     SumReduce,
 }
 
@@ -38,11 +41,14 @@ pub enum CollectiveKind {
 /// (propagation; overlappable with independent work).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct XferTime {
+    /// Path-serializing cycles.
     pub occupancy: Cycle,
+    /// Overlappable propagation cycles.
     pub latency: Cycle,
 }
 
 impl XferTime {
+    /// `occupancy + latency`.
     pub fn total(&self) -> Cycle {
         self.occupancy + self.latency
     }

@@ -7,16 +7,20 @@
 /// only need per-axis hop counts.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Topology {
+    /// Tiles in x.
     pub x_dim: usize,
+    /// Tiles in y.
     pub y_dim: usize,
 }
 
 impl Topology {
+    /// A mesh of `x_dim × y_dim` tiles.
     pub fn new(x_dim: usize, y_dim: usize) -> Self {
         assert!(x_dim > 0 && y_dim > 0);
         Self { x_dim, y_dim }
     }
 
+    /// Total tile count.
     pub fn num_tiles(&self) -> usize {
         self.x_dim * self.y_dim
     }

@@ -14,13 +14,19 @@ use crate::report::{pct, ReportOpts, Table};
 use crate::sim::execute;
 use crate::util::json::Json;
 
+/// One ablation grid point.
 pub struct AblationRow {
+    /// Ablation label.
     pub name: String,
+    /// Modeled runtime in milliseconds.
     pub runtime_ms: f64,
+    /// System compute utilization.
     pub utilization: f64,
+    /// Runtime ratio vs the un-ablated base.
     pub slowdown_vs_base: f64,
 }
 
+/// Run the ablation grid (see the module docs).
 pub fn run_ablations(opts: &ReportOpts) -> Vec<AblationRow> {
     let arch = presets::table1();
     let wl = if opts.quick {
@@ -103,6 +109,7 @@ pub fn run_ablations(opts: &ReportOpts) -> Vec<AblationRow> {
     rows
 }
 
+/// Render the ablation table, optionally persisting rows.
 pub fn render(opts: &ReportOpts, store: Option<&mut ResultStore>) -> String {
     let rows = run_ablations(opts);
     if let Some(store) = store {

@@ -10,13 +10,16 @@ use crate::dataflow::{Dataflow, FlatTiling, Workload};
 use crate::report::{pct, ReportOpts, Table};
 use crate::util::json::Json;
 
+/// Group edges swept in Fig. 4.
 pub const GROUPS: [usize; 4] = [4, 8, 16, 32];
 
+/// Fig. 4 workload grid (sequence-length sweep; `quick` = CI-sized).
 pub fn workloads(quick: bool) -> Vec<Workload> {
     let seqs: &[u64] = if quick { &[512, 4096] } else { &[512, 1024, 2048, 4096] };
     seqs.iter().map(|&s| Workload::new(s, 128, 32, 4)).collect()
 }
 
+/// Run the Fig. 4 grid.
 pub fn run(opts: &ReportOpts) -> Vec<(usize, ExperimentResult)> {
     let arch = presets::table1();
     let specs: Vec<ExperimentSpec> = workloads(opts.quick)
@@ -36,6 +39,7 @@ pub fn run(opts: &ReportOpts) -> Vec<(usize, ExperimentResult)> {
         .collect()
 }
 
+/// Render the Fig. 4 table, optionally persisting rows.
 pub fn render(opts: &ReportOpts, store: Option<&mut ResultStore>) -> String {
     let arch = presets::table1();
     let results = run(opts);

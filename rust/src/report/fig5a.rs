@@ -8,7 +8,9 @@ use crate::dataflow::{Dataflow, Workload};
 use crate::report::{pct, ReportOpts, Table};
 use crate::util::json::Json;
 
+/// Tile granularities (mesh edge) swept on one heatmap axis.
 pub const GRANULARITIES: [usize; 3] = [32, 16, 8];
+/// HBM channels per die edge swept on the other heatmap axis.
 pub const CHANNELS_PER_EDGE: [usize; 3] = [4, 8, 16];
 
 /// Evaluation workloads for the heatmap (paper: "multiple MHA layers").
@@ -27,12 +29,17 @@ pub fn workloads(quick: bool) -> Vec<Workload> {
 /// One heatmap cell: the best achievable utilization over dataflows
 /// (FA-3 and FlatAsyn with group search), averaged over the workloads.
 pub struct Cell {
+    /// The cell's architecture instance.
     pub arch: ArchConfig,
+    /// Best utilization achieved over dataflows and groups.
     pub utilization: f64,
+    /// Label of the winning dataflow.
     pub best_dataflow: String,
+    /// Winning FlatAttention group edge (1 for FlashAttention).
     pub best_group: usize,
 }
 
+/// Evaluate one heatmap cell over the workload set.
 pub fn evaluate_cell(arch: &ArchConfig, wls: &[Workload], threads: usize) -> Cell {
     let mut util_sum = 0.0;
     let mut best_label = String::new();
@@ -62,6 +69,7 @@ pub fn evaluate_cell(arch: &ArchConfig, wls: &[Workload], threads: usize) -> Cel
     }
 }
 
+/// Run the full granularity × channels grid.
 pub fn run(opts: &ReportOpts) -> Vec<Cell> {
     let wls = workloads(opts.quick);
     let cells: Vec<ArchConfig> = GRANULARITIES
@@ -80,6 +88,7 @@ pub fn run(opts: &ReportOpts) -> Vec<Cell> {
         .collect()
 }
 
+/// Render the Fig. 5a heatmap, optionally persisting rows.
 pub fn render(opts: &ReportOpts, store: Option<&mut ResultStore>) -> String {
     let cells = run(opts);
     if let Some(store) = store {

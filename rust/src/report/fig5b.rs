@@ -12,6 +12,7 @@ use crate::dataflow::{Dataflow, Workload};
 use crate::report::{pct, ratio, ReportOpts, Table};
 use crate::util::json::Json;
 
+/// Fig. 5b MHA shape set (`quick` = CI-sized).
 pub fn workloads(quick: bool) -> Vec<Workload> {
     let mut v = vec![Workload::new(4096, 128, 32, 2)];
     if !quick {
@@ -27,14 +28,21 @@ pub fn workloads(quick: bool) -> Vec<Workload> {
     v
 }
 
+/// One BestArch-vs-H100 MHA comparison row.
 pub struct Comparison {
+    /// The compared workload.
     pub workload: Workload,
+    /// Winning FlatAttention group edge.
     pub best_group: usize,
     /// BestArch TFLOPS including the K pre-transposition time.
     pub ours_tflops: f64,
+    /// BestArch utilization (including pre-transposition time).
     pub ours_util: f64,
+    /// Published H100 FlashAttention-3 TFLOPS.
     pub h100_tflops: f64,
+    /// H100 utilization against its peak.
     pub h100_util: f64,
+    /// `ours_util / h100_util`.
     pub util_ratio: f64,
 }
 
@@ -45,6 +53,7 @@ fn pretranspose_cycles(wl: &Workload, hbm_bytes_per_cycle: u64) -> u64 {
     (2 * k_bytes).div_ceil(hbm_bytes_per_cycle)
 }
 
+/// Build every comparison row.
 pub fn run(opts: &ReportOpts) -> Vec<Comparison> {
     let arch = presets::best_arch();
     workloads(opts.quick)
@@ -71,6 +80,7 @@ pub fn run(opts: &ReportOpts) -> Vec<Comparison> {
         .collect()
 }
 
+/// Render the Fig. 5b table, optionally persisting rows.
 pub fn render(opts: &ReportOpts, store: Option<&mut ResultStore>) -> String {
     let arch = presets::best_arch();
     let rows = run(opts);

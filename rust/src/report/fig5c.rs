@@ -21,13 +21,19 @@ pub fn gemms(quick: bool) -> Vec<GemmWorkload> {
     v
 }
 
+/// One BestArch-vs-H100 GEMM comparison row.
 pub struct GemmComparison {
+    /// The compared GEMM shape.
     pub gemm: GemmWorkload,
+    /// BestArch SUMMA utilization.
     pub ours_util: f64,
+    /// H100 cuBLAS utilization against its peak.
     pub h100_util: f64,
+    /// `ours_util / h100_util`.
     pub util_ratio: f64,
 }
 
+/// Build every GEMM comparison row.
 pub fn run(opts: &ReportOpts) -> Vec<GemmComparison> {
     let arch = presets::best_arch();
     let list = gemms(opts.quick);
@@ -44,6 +50,7 @@ pub fn run(opts: &ReportOpts) -> Vec<GemmComparison> {
     })
 }
 
+/// Render the Fig. 5c table, optionally persisting rows.
 pub fn render(opts: &ReportOpts, store: Option<&mut ResultStore>) -> String {
     let rows = run(opts);
     if let Some(store) = store {

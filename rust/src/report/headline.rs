@@ -8,6 +8,7 @@ use crate::dataflow::{Dataflow, Workload};
 use crate::report::{pct, ReportOpts, Table};
 use crate::util::json::Json;
 
+/// Render the headline utilization/runtime table, optionally persisting rows.
 pub fn render(opts: &ReportOpts, store: Option<&mut ResultStore>) -> String {
     let arch = presets::table1();
     // The abstract's strongest point: D=128, S=4096.

@@ -1,0 +1,165 @@
+//! Layer composition sweep: full transformer layers (attention + the
+//! four projection/FFN GEMMs, `dataflow::layer_program`) across
+//! dataflows × weight residency, with the per-kernel share of the layer
+//! critical path.
+//!
+//! Strict cross-kernel barriers make the shares exact: each kernel's
+//! solo makespan is its contribution to the composed layer (additivity,
+//! pinned by `tests/layer_differential.rs`), so the "share" columns are
+//! a true breakdown, not an attribution heuristic.
+
+use crate::arch::presets;
+use crate::coordinator::{run_layer, ResultStore};
+use crate::dataflow::{Dataflow, LayerWorkload, WeightResidency, Workload, ALL_RESIDENCIES};
+use crate::report::{pct, ReportOpts, Table};
+use crate::util::json::Json;
+use crate::util::pool;
+
+/// One swept layer point.
+pub struct LayerRow {
+    /// Attention dataflow of the composed layer.
+    pub dataflow: Dataflow,
+    /// Projection/FFN weight residency.
+    pub weights: WeightResidency,
+    /// Composed layer makespan (cycles).
+    pub makespan: u64,
+    /// Compute utilization of the whole layer (useful FLOPs over peak).
+    pub utilization: f64,
+    /// `(kernel label, share of the layer makespan)`.
+    pub shares: Vec<(String, f64)>,
+}
+
+/// The swept attention shape: a GQA causal prefill layer with a 4×
+/// FFN (quick mode shrinks the sequence).
+pub fn layer_workload(quick: bool, weights: WeightResidency) -> LayerWorkload {
+    let seq = if quick { 512 } else { 2048 };
+    LayerWorkload::new(
+        Workload::new(seq, 128, 16, 1).with_kv_heads(4).with_causal(true),
+        4,
+        weights,
+    )
+}
+
+/// Sweep dataflows × weight residencies over the composed layer.
+pub fn run(opts: &ReportOpts) -> Vec<LayerRow> {
+    let arch = presets::table2(8);
+    let dataflows = if opts.quick {
+        vec![Dataflow::Flash2, Dataflow::FlatColl]
+    } else {
+        vec![
+            Dataflow::Flash2,
+            Dataflow::Flash3,
+            Dataflow::Flat,
+            Dataflow::FlatColl,
+            Dataflow::FlatAsyn,
+        ]
+    };
+    let points: Vec<(Dataflow, WeightResidency)> = dataflows
+        .iter()
+        .flat_map(|&df| ALL_RESIDENCIES.map(|r| (df, r)))
+        .collect();
+    pool::par_map(&points, opts.threads, |&(df, weights)| {
+        let lw = layer_workload(opts.quick, weights);
+        let r = run_layer(&arch, &lw, df, 2);
+        let shares = r
+            .kernels
+            .iter()
+            .map(|(label, ms)| (label.clone(), *ms as f64 / r.makespan as f64))
+            .collect();
+        LayerRow {
+            dataflow: df,
+            weights,
+            makespan: r.makespan,
+            utilization: r.flops as f64 / (r.makespan as f64 * arch.peak_flops_per_cycle()),
+            shares,
+        }
+    })
+}
+
+/// Render the layer table, optionally persisting rows.
+pub fn render(opts: &ReportOpts, store: Option<&mut ResultStore>) -> String {
+    let rows = run(opts);
+    if let Some(store) = store {
+        store.add_json(
+            "layers",
+            rows.iter()
+                .map(|r| {
+                    Json::obj([
+                        ("dataflow", Json::str(r.dataflow.label())),
+                        ("weights", Json::str(r.weights.label())),
+                        ("makespan", Json::num(r.makespan as f64)),
+                        ("utilization", Json::num(r.utilization)),
+                        (
+                            "shares",
+                            Json::Obj(
+                                r.shares.iter().map(|(l, s)| (l.clone(), Json::num(*s))).collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        );
+    }
+
+    let lw = layer_workload(opts.quick, WeightResidency::HbmStream);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Layer sweep — {} + 4 GEMMs (d_model {}, FFN x{}) on table2-8x8\n\n",
+        lw.attn.label(),
+        lw.d_model(),
+        lw.ffn_mult
+    ));
+    let mut t = Table::new(&[
+        "dataflow", "weights", "makespan", "util", "attn", "out-proj", "ffn-up", "ffn-down",
+        "qkv-proj",
+    ]);
+    for r in &rows {
+        let mut cells = vec![
+            r.dataflow.label().to_string(),
+            r.weights.label().to_string(),
+            r.makespan.to_string(),
+            pct(r.utilization),
+        ];
+        cells.extend(r.shares.iter().map(|(_, s)| pct(*s)));
+        t.row(cells);
+    }
+    out.push_str(&t.render());
+    out.push_str(
+        "\nShares are exact: strict cross-kernel barriers make the composed layer\n\
+         the sum of its solo kernels (tests/layer_differential.rs).\n",
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_shares_sum_to_one() {
+        let opts = ReportOpts { quick: true, ..Default::default() };
+        let rows = run(&opts);
+        assert_eq!(rows.len(), 4); // 2 dataflows × 2 residencies
+        for r in &rows {
+            assert!(r.makespan > 0);
+            assert!(r.utilization > 0.0 && r.utilization <= 1.0, "{:?}", r.dataflow);
+            assert_eq!(r.shares.len(), 5);
+            assert_eq!(r.shares[0].0, "attention");
+            let total: f64 = r.shares.iter().map(|(_, s)| s).sum();
+            // Additivity: shares partition the makespan exactly (integer
+            // division noise only).
+            assert!((total - 1.0).abs() < 1e-9, "{:?} shares sum {total}", r.dataflow);
+        }
+    }
+
+    #[test]
+    fn resident_weights_never_slower() {
+        let opts = ReportOpts { quick: true, ..Default::default() };
+        let rows = run(&opts);
+        for pair in rows.chunks(2) {
+            let (hbm, res) = (&pair[0], &pair[1]);
+            assert_eq!(hbm.dataflow, res.dataflow);
+            assert!(res.makespan <= hbm.makespan, "{:?}", hbm.dataflow);
+        }
+    }
+}

@@ -13,6 +13,7 @@ pub mod fig5a;
 pub mod fig5b;
 pub mod fig5c;
 pub mod headline;
+pub mod layers;
 pub mod robustness;
 pub mod schedule;
 pub mod section2;

@@ -27,10 +27,15 @@ pub const LEVELS: usize = 4;
 
 /// One grid point: dataflow × admission mode × severity level.
 pub struct RobustnessRow {
+    /// Dataflow under test.
     pub dataflow: Dataflow,
+    /// True when the router may preempt to relieve page pressure.
     pub preemption: bool,
+    /// Severity level index (0 = fault-free).
     pub level: usize,
+    /// Human label of the level.
     pub severity: &'static str,
+    /// Router outcome at this point.
     pub report: RouterReport,
 }
 

@@ -23,8 +23,11 @@ pub const KV_HEADS: u64 = 8;
 
 /// One rendered grid point.
 pub struct ScheduleRow {
+    /// Dataflow under test.
     pub dataflow: Dataflow,
+    /// KV page placement policy.
     pub placement: PagePlacement,
+    /// Serving outcome at this point.
     pub report: ServingReport,
 }
 

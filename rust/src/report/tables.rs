@@ -4,6 +4,7 @@
 use crate::arch::presets;
 use crate::report::Table;
 
+/// Render Table I (the 32×32 mesh instance).
 pub fn render_table1() -> String {
     let a = presets::table1();
     let mut out = String::new();
@@ -54,6 +55,7 @@ pub fn render_table1() -> String {
     out
 }
 
+/// Render Table II (tile-granularity instances).
 pub fn render_table2() -> String {
     let mut out = String::new();
     out.push_str("Table II — Fabric granularity and tile specifications (iso 1024 TFLOPS, iso on-chip memory)\n\n");

@@ -44,10 +44,12 @@ impl Runtime {
         Manifest::load(dir).is_some()
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// Name of the PJRT platform backing this client.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

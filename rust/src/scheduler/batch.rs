@@ -14,7 +14,9 @@
 //! `tests/scheduler_integration.rs`).
 
 use crate::arch::ArchConfig;
-use crate::dataflow::{flash, flat, Dataflow, Workload};
+use crate::dataflow::gemm::append_gemm_band;
+use crate::dataflow::layer::sinks_in;
+use crate::dataflow::{flash, flat, Dataflow, LayerWorkload, WeightResidency, Workload};
 use crate::hbm::PageMap;
 use crate::sim::{
     execute, execute_faulted, execute_parallel, execute_traced, Cycle, FaultPlan, FaultReport,
@@ -40,9 +42,17 @@ pub struct BatchEntry<'a> {
 /// A composed batch program plus each entry's contiguous op span.
 #[derive(Debug)]
 pub struct BatchProgram {
+    /// The composed step program.
     pub program: Program,
-    /// Per entry: `[start, end)` op range, in `entries` order.
+    /// Per entry: `[start, end)` op range of the entry's *attention*
+    /// kernel, in `entries` order.
     pub spans: Vec<(usize, usize)>,
+    /// Per entry: `[start, end)` op range of the entry's projection/FFN
+    /// GEMM *tail* (see [`compose_layered`]); empty for attention-only
+    /// batches. Tail spans follow all attention spans and stay on their
+    /// entry's tile-row band, so the band-disjointness story (and
+    /// `analysis::verify_batch`'s rules) extend to them unchanged.
+    pub tail_spans: Vec<(usize, usize)>,
 }
 
 /// Per-entry execution summary extracted from a traced run.
@@ -86,11 +96,17 @@ impl BatchProgram {
         execute_faulted(&self.program, 0, plan, threads)
     }
 
-    /// Map a [`FaultReport`] to the entries whose spans contain a killed
-    /// or stalled op — the entries that made no progress this step.
+    /// Map a [`FaultReport`] to the entries whose spans (attention or
+    /// GEMM tail) contain a killed or stalled op — the entries that made
+    /// no progress this step.
     pub fn affected_entries(&self, fr: &FaultReport) -> Vec<usize> {
-        let hit =
-            |op: u32| self.spans.iter().position(|&(s, e)| (op as usize) >= s && (op as usize) < e);
+        let hit = |op: u32| {
+            let op = op as usize;
+            self.spans
+                .iter()
+                .position(|&(s, e)| op >= s && op < e)
+                .or_else(|| self.tail_spans.iter().position(|&(s, e)| op >= s && op < e))
+        };
         let mut out: Vec<usize> =
             fr.killed.iter().chain(&fr.stalled).filter_map(|&op| hit(op)).collect();
         out.sort_unstable();
@@ -98,23 +114,35 @@ impl BatchProgram {
         out
     }
 
-    /// Execute with full tracing and split the records per entry span.
+    /// Execute with full tracing and split the records per entry. Tail
+    /// ops continue the entry's span-relative id space (tail op `t` maps
+    /// to `span_len + (t - tail_start)`), so an entry's trace is one
+    /// contiguous observable across both kernels.
     pub fn entry_stats(&self) -> (RunStats, Vec<EntryStats>) {
         let (stats, mut records) = execute_traced(&self.program, 0, Some(u32::MAX));
         records.sort_unstable_by_key(|r| r.0);
+        let slice = |s: usize, e: usize, base: u32, out: &mut Vec<(u32, Cycle, Cycle)>| {
+            let lo = records.partition_point(|r| (r.0 as usize) < s);
+            let hi = records.partition_point(|r| (r.0 as usize) < e);
+            out.extend(records[lo..hi].iter().map(|&(op, st, en)| (op - s as u32 + base, st, en)));
+        };
         let out = self
             .spans
             .iter()
-            .map(|&(s, e)| {
-                let lo = records.partition_point(|r| (r.0 as usize) < s);
-                let hi = records.partition_point(|r| (r.0 as usize) < e);
-                let trace: Vec<(u32, Cycle, Cycle)> = records[lo..hi]
-                    .iter()
-                    .map(|&(op, st, en)| (op - s as u32, st, en))
-                    .collect();
+            .enumerate()
+            .map(|(k, &(s, e))| {
+                let mut trace = Vec::new();
+                slice(s, e, 0, &mut trace);
+                let mut hbm_bytes: u64 =
+                    self.program.ops()[s..e].iter().map(|o| o.hbm_bytes).sum();
+                if let Some(&(ts, te)) = self.tail_spans.get(k) {
+                    slice(ts, te, (e - s) as u32, &mut trace);
+                    hbm_bytes +=
+                        self.program.ops()[ts..te].iter().map(|o| o.hbm_bytes).sum::<u64>();
+                }
                 EntryStats {
                     completion: trace.iter().map(|r| r.2).max().unwrap_or(0),
-                    hbm_bytes: self.program.ops()[s..e].iter().map(|o| o.hbm_bytes).sum(),
+                    hbm_bytes,
                     trace,
                 }
             })
@@ -237,7 +265,66 @@ pub(crate) fn compose_unsealed_in(
             flat::flat_batch_program_in(prog, &a, &fe, group, df == Dataflow::FlatAsyn)
         }
     };
-    BatchProgram { program, spans }
+    BatchProgram { program, spans, tail_spans: Vec::new() }
+}
+
+/// Layer-serving parameters shared by every entry of a composed step:
+/// the FFN expansion factor and where the projection/FFN weights live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerParams {
+    /// FFN hidden width = `ffn_mult · d_model` (≥ 1).
+    pub ffn_mult: u64,
+    /// Weight residency of every GEMM tail.
+    pub weights: WeightResidency,
+}
+
+/// Like [`compose`], additionally appending each entry's transformer-
+/// layer GEMM tail (out-proj → FFN-up → FFN-down → next-layer QKV, see
+/// `dataflow::layer` §Kernel rotation) onto the entry's own tile-row
+/// band behind strict cross-kernel barriers. The result carries
+/// per-entry [`BatchProgram::tail_spans`].
+pub fn compose_layered(
+    arch: &ArchConfig,
+    df: Dataflow,
+    group: usize,
+    slots: usize,
+    entries: &[BatchEntry<'_>],
+    lp: LayerParams,
+) -> BatchProgram {
+    compose_layered_in(&mut ProgramArena::new(), arch, df, group, slots, entries, lp)
+}
+
+/// Like [`compose_layered`], constructing into buffers recycled by
+/// `arena` — the scheduler's layered-step entry point. Always seals (the
+/// layered path never cost-patches; see `StepComposer::run_step_layered`).
+pub(crate) fn compose_layered_in(
+    arena: &mut ProgramArena,
+    arch: &ArchConfig,
+    df: Dataflow,
+    group: usize,
+    slots: usize,
+    entries: &[BatchEntry<'_>],
+    lp: LayerParams,
+) -> BatchProgram {
+    let mut bp = compose_unsealed_in(arena, arch, df, group, slots, entries);
+    let rows_per = validate_slots(arch, slots, group, df).expect("validated by compose");
+    for (k, e) in entries.iter().enumerate() {
+        let (s, end) = bp.spans[k];
+        // Cross-kernel edges attach to the entry's attention sinks —
+        // per entry, not batch-wide: bands stay independent.
+        let mut deps = sinks_in(&bp.program, s, end);
+        let begin = bp.program.num_ops();
+        let lw = LayerWorkload::new(e.workload, lp.ffn_mult, lp.weights);
+        let (y0, y1) = (e.slot * rows_per, (e.slot + 1) * rows_per);
+        for g in lw.gemms() {
+            let sink = append_gemm_band(&mut bp.program, arch, &g, y0, y1, lp.weights, &deps);
+            bp.program.flops += g.flops();
+            deps = vec![sink];
+        }
+        bp.tail_spans.push((begin, bp.program.num_ops()));
+    }
+    bp.program.seal();
+    bp
 }
 
 #[cfg(test)]
@@ -328,6 +415,55 @@ mod tests {
             }
         }
         set_symmetry_folding(true);
+    }
+
+    #[test]
+    fn layered_compose_appends_band_local_tails() {
+        let arch = presets::table2(8);
+        let p0 = pages_for(256, 8);
+        let p1 = pages_for(300, 9);
+        let entries = vec![
+            BatchEntry {
+                request: 0,
+                slot: 0,
+                workload: Workload::new(128, 64, 4, 1).with_causal(true).with_kv_prefix(128),
+                pages: &p0,
+            },
+            BatchEntry {
+                request: 1,
+                slot: 2,
+                workload: Workload::new(300, 64, 4, 1).with_kv_heads(2).decode(),
+                pages: &p1,
+            },
+        ];
+        let lp = LayerParams { ffn_mult: 4, weights: WeightResidency::HbmStream };
+        let rows_per = arch.mesh_y / 4;
+        for df in ALL_DATAFLOWS {
+            let bp = compose_layered(&arch, df, 2, 4, &entries, lp);
+            assert!(bp.program.validate().is_ok(), "{df:?}");
+            assert_eq!(bp.tail_spans.len(), 2, "{df:?}");
+            // Tails follow every attention span and tile contiguously.
+            assert!(bp.tail_spans[0].0 >= bp.spans[1].1, "{df:?}");
+            assert_eq!(bp.tail_spans[0].1, bp.tail_spans[1].0, "{df:?}");
+            assert_eq!(bp.tail_spans[1].1, bp.program.num_ops(), "{df:?}");
+            // Tail ops stay on their entry's tile-row band.
+            for (k, &(s, e)) in bp.tail_spans.iter().enumerate() {
+                let slot = entries[k].slot;
+                for op in &bp.program.ops()[s..e] {
+                    if op.tile != crate::sim::NO_TILE {
+                        let y = op.tile as usize / arch.mesh_x;
+                        assert!(
+                            (slot * rows_per..(slot + 1) * rows_per).contains(&y),
+                            "{df:?}: tail op on row {y} outside slot {slot}'s band"
+                        );
+                    }
+                }
+            }
+            // Per-entry traffic (span + tail) still partitions the total.
+            let (stats, per) = bp.entry_stats();
+            assert!(stats.makespan > 0, "{df:?}");
+            assert_eq!(per.iter().map(|e| e.hbm_bytes).sum::<u64>(), stats.hbm_bytes, "{df:?}");
+        }
     }
 
     #[test]

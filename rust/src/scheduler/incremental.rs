@@ -1,48 +1,25 @@
 //! §Incremental step composition and memoized delta re-simulation.
 //!
-//! The scheduler's step loop used to rebuild and re-simulate the whole
-//! batch program from scratch every step, making step cost linear in the
-//! total in-flight op count — fine for a five-request smoke trace, fatal
-//! for the ROADMAP's million-request horizon. [`StepComposer`] removes
-//! both rebuild taxes while staying **bit-identical** to the full-rebuild
-//! path (pinned by `tests/incremental_differential.rs`):
+//! [`StepComposer`] removes the per-step rebuild taxes of trace replay
+//! while staying **bit-identical** to the full-rebuild path (pinned by
+//! `tests/incremental_differential.rs`):
 //!
-//! 1. **Incremental compose.** The composer keeps the previous step's
-//!    *sealed* [`BatchProgram`] alive. Each step it re-emits the entries
-//!    into an unsealed scratch program (`batch::compose_unsealed_in`;
-//!    template stamping makes the emission itself cheap) and compares it
-//!    structurally against the cached program. When every op matches in
-//!    resource/component/tile/dependency topology — the common case: a
-//!    steady decode step moves latencies and byte counts, not the op
-//!    graph — the cached program is cost-patched in place
-//!    (`Program::patch_costs_from`) and its dependents + §Shard CSRs from
-//!    the previous seal stay valid verbatim, both partitions being
-//!    functions of op structure only. Any structural change (admit or
-//!    finish, a tiling boundary, a new page segment) falls back to
-//!    sealing the scratch program as the new cached step program.
-//!    Correctness never depends on *predicting* stability; it is checked
-//!    op for op, and the check is the cheap part of a build.
-//! 2. **Memoized delta re-simulation.** Batch composition is conservative
-//!    (PR 4, pinned by `tests/scheduler_integration.rs`): entries own
-//!    private tile bands and couple only through shared HBM channel
-//!    FIFOs, so when the entries' channel sets are pairwise disjoint each
-//!    entry's op timeline in the batch is bit-identical to composing it
-//!    alone. Under that gate the step outcome is a pure function of the
-//!    per-entry solo runs: makespan is the max of solo makespans, the
-//!    additive totals (HBM bytes, FLOPs, engine busy, ops) are sums, and
-//!    the tracked-tile breakdown is slot 0's solo breakdown with the
-//!    extra barrier wait folded into `other`. Solo runs are memoized by
-//!    `(slot, workload, page-table prefix)`, so a steady-state decode
-//!    step over recurring request shapes costs a few hash lookups and a
-//!    merge — no compose, no DES. The gate uses a *superset* channel
-//!    mask built analytically from the page table and the band's row
-//!    channels (disjoint supersets imply disjoint actual sets), and the
-//!    memo path is disabled for any step with a live fault window, where
-//!    a dead tile stalls timelines across the step barrier.
+//! 1. **Incremental compose** — keep the previous step's *sealed*
+//!    [`BatchProgram`] alive; when an op-for-op structural compare
+//!    against a freshly-emitted scratch program shows the topology is
+//!    unchanged (the steady-decode common case), cost-patch the cached
+//!    program in place (`Program::patch_costs_from`), reusing its sealed
+//!    dependents and §Shard CSRs verbatim. Correctness never depends on
+//!    predicting stability — it is checked op for op.
+//! 2. **Memoized delta re-simulation** — when the entries' analytic
+//!    channel masks are pairwise disjoint, skip batch execution and
+//!    merge memoized per-request *solo* runs, exact by the conservation
+//!    property. Disabled for any step with a live fault window.
 //!
 //! Both levers are config knobs ([`SchedulerConfig::incremental`] /
-//! [`SchedulerConfig::memoize`], default on) so the differential wall can
-//! force the full-rebuild path and compare reports field by field.
+//! [`SchedulerConfig::memoize`], default on); faulted steps always run
+//! the real batch. The full design essay lives in `docs/ARCHITECTURE.md`
+//! §"Incremental composition and memoized delta re-simulation".
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -121,6 +98,7 @@ pub struct StepComposer {
 }
 
 impl StepComposer {
+    /// A composer for the given scheduler configuration.
     pub fn new(cfg: &SchedulerConfig) -> Self {
         Self {
             incremental: cfg.incremental,
@@ -275,6 +253,53 @@ impl StepComposer {
         (stats, affected)
     }
 
+    /// Compose and execute one *layered* step: every entry's attention
+    /// kernel plus its four projection/FFN GEMMs appended on the entry's
+    /// own tile-row band (`batch::compose_layered_in`).
+    ///
+    /// The layered path always rebuilds and reseals. Neither shortcut
+    /// pays for its bookkeeping here: the GEMM tails re-shape with every
+    /// prefill chunk (cost-patching would almost never apply), and the
+    /// cross-kernel barriers make an entry's tail timeline a function of
+    /// its own attention sinks, which the solo memo could honour but only
+    /// by doubling its key space. Correctness is pinned directly instead:
+    /// `tests/layer_differential.rs` asserts the composed layer
+    /// reproduces the solo attention + solo GEMM timelines bit for bit.
+    pub fn run_step_layered(
+        &mut self,
+        arch: &ArchConfig,
+        cfg: &SchedulerConfig,
+        entries: &[BatchEntry<'_>],
+        lp: batch::LayerParams,
+    ) -> RunStats {
+        // Drop any cached attention-only step program; its structure can
+        // never match a layered step's.
+        if let Some(p) = self.cached.take() {
+            self.arena.recycle(p.program);
+        }
+        let (df, group, slots) = (cfg.dataflow, cfg.group, cfg.slots);
+        let t = self.t0();
+        let bp = batch::compose_layered_in(&mut self.arena, arch, df, group, slots, entries, lp);
+        // `compose_layered_in` seals internally, so one wall-clock lap
+        // covers compose + seal; the verify share is split back out via
+        // the same thread-local channel `lap_seal` drains.
+        if let (Some(p), Some(t)) = (self.profiler.as_mut(), t) {
+            let total = t.elapsed().as_nanos() as u64;
+            let verify = profile::take_verify_nanos();
+            p.add_nanos(ProfPhase::Verify, verify);
+            p.add_nanos(ProfPhase::Compose, total.saturating_sub(verify));
+        }
+        self.resealed += 1;
+        if let Some(probe) = self.probe.as_mut() {
+            fill_probe(probe, &bp.program, &bp.spans, &bp.tail_spans, entries, StepMode::Rebuilt);
+        }
+        let t = self.t0();
+        let out = bp.run_threads(cfg.threads);
+        self.lap(ProfPhase::Execute, t);
+        self.arena.recycle(bp.program);
+        out
+    }
+
     /// Produce this step's sealed [`BatchProgram`] — cost-patching the
     /// cached one, promoting the scratch emission, or (with
     /// `incremental` off) plain full rebuild — and hand it to `f`.
@@ -295,7 +320,14 @@ impl StepComposer {
             bp.program.seal();
             self.lap_seal(t);
             if let Some(probe) = self.probe.as_mut() {
-                fill_probe(probe, &bp.program, &bp.spans, entries, StepMode::Rebuilt);
+                fill_probe(
+                    probe,
+                    &bp.program,
+                    &bp.spans,
+                    &bp.tail_spans,
+                    entries,
+                    StepMode::Rebuilt,
+                );
             }
             let t = self.t0();
             let out = f(&bp);
@@ -334,7 +366,7 @@ impl StepComposer {
         if let Some(probe) = self.probe.as_mut() {
             let bp = self.cached.as_ref().expect("step program just installed");
             let mode = if patched { StepMode::Patched } else { StepMode::Rebuilt };
-            fill_probe(probe, &bp.program, &bp.spans, entries, mode);
+            fill_probe(probe, &bp.program, &bp.spans, &bp.tail_spans, entries, mode);
         }
         let t = self.t0();
         let out = f(self.cached.as_ref().expect("step program just installed"));
@@ -508,13 +540,16 @@ fn is_noc(c: Component) -> bool {
 /// Scan a composed batch program into the probe: per-HBM-channel occupancy
 /// (the batch builders allocate channel resources first, so
 /// `ResourceId(c) == channel c`) plus per-slot NoC-collective occupancy via
-/// the entry spans. Occupancy sums are schedule-independent, hence
-/// identical across thread counts, and additive across entries — see the
-/// determinism argument in `crate::telemetry`.
+/// the entry spans (attention spans plus GEMM tail spans, both indexed in
+/// `entries` order; `tails` is empty for attention-only steps). Occupancy
+/// sums are schedule-independent, hence identical across thread counts,
+/// and additive across entries — see the determinism argument in
+/// `crate::telemetry`.
 fn fill_probe(
     probe: &mut StepProbe,
     program: &Program,
     spans: &[(usize, usize)],
+    tails: &[(usize, usize)],
     entries: &[BatchEntry<'_>],
     mode: StepMode,
 ) {
@@ -527,7 +562,7 @@ fn fill_probe(
             probe.chan_busy[r] += op.occupancy;
         }
     }
-    for (k, &(s, e)) in spans.iter().enumerate() {
+    for (k, &(s, e)) in spans.iter().enumerate().chain(tails.iter().enumerate()) {
         let slot = entries[k].slot;
         let mut busy = 0u64;
         for op in &program.ops()[s..e] {

@@ -5,151 +5,74 @@
 //! serving system sees a **stream of requests** instead. This subsystem
 //! turns a [`trace::RequestTrace`] into a sequence of simulated batch
 //! programs and serving metrics (tokens/s, TTFT, TPOT, batch occupancy),
-//! converting the kernel simulator into a serving simulator. Design:
+//! converting the kernel simulator into a serving simulator.
 //!
 //! # Admission and chunking
 //!
 //! The scheduler owns `slots` request slots, each mapped to a horizontal
-//! band of `mesh_y / slots` tile rows. Arrived requests are admitted FCFS
-//! into free slots (continuous batching; the `Static` policy instead
-//! waits for the whole batch to drain — the classic baseline continuous
-//! batching was invented to beat). Each step composes ONE program
+//! band of `mesh_y / slots` tile rows. Arrived requests are admitted
+//! FCFS into free slots (continuous batching; the `Static` policy is the
+//! drain-the-whole-batch baseline). Each step composes ONE program
 //! ([`batch::compose`]) holding, per in-flight request, either the next
-//! `chunk`-token **prefill chunk** (`Workload` with `kv_prefix` = tokens
-//! already prefilled, causal — chunked prefill is exactly the rectangular
-//! decode geometry PR 3 built, with the query span mid-cache instead of a
-//! single end row) or one **decode row** over the request's full cache.
-//! The DES executes the composed program; the virtual clock advances by
-//! its makespan (iteration-level scheduling à la vLLM/Orca: a step is a
-//! barrier, so a decode step stretches to the slowest co-scheduled chunk
-//! — the honest cost of mixing prefill into decode batches, visible in
-//! the TPOT metric).
+//! `chunk`-token prefill chunk or one decode row over the request's full
+//! cache; the DES executes it and the virtual clock advances by its
+//! makespan (iteration-level scheduling à la vLLM/Orca — a step is a
+//! barrier, and the stretch from mixing prefill into decode batches is
+//! visible in the TPOT metric).
 //!
 //! # Paged-KV placement
 //!
 //! Each request's KV cache grows page by page ([`crate::hbm::PageMap`],
-//! `page_tokens` per page) and every page is pinned to an HBM channel at
-//! allocation by the [`PagePlacement`] policy:
+//! `page_tokens` per page); every page is pinned to an HBM channel at
+//! allocation by the [`PagePlacement`] policy (channel-affine /
+//! round-robin / random). Builders emit paged K/V transfers on the
+//! page's *actual* channel, so placement differences are real FIFO
+//! contention in the DES, not an analytic penalty
+//! (`tests/scheduler_integration.rs`).
 //!
-//! * [`PagePlacement::ChannelAffine`] — pages stay on the slot's own
-//!   partition of the south channels: maximal locality, zero cross-
-//!   request interference (and the policy under which composition is
-//!   exactly conservative — see below), but a single request can only
-//!   ever draw its partition's bandwidth.
-//! * [`PagePlacement::RoundRobin`] — pages stripe every channel in
-//!   global allocation order: each request reads at full-chip bandwidth
-//!   but fragments across everyone else's channels.
-//! * [`PagePlacement::Random`] — seeded uniform placement, the
-//!   fragmentation worst case.
+//! # Fold exactness and conservation
 //!
-//! Because the dataflow builders emit paged K/V transfers on the page's
-//! *actual* channel, placement differences show up as real FIFO channel
-//! contention in the DES, not as an analytic penalty — on a narrow-HBM
-//! architecture the three policies produce measurably different
-//! makespans (`tests/scheduler_integration.rs`).
-//!
-//! # Why fold exactness carries over per request
-//!
-//! Composition shares HBM channels but gives each request private tile
-//! bands, so every argument in the PR-2 fold essay localizes: within one
-//! request's band the non-representative streams' private chains still
-//! never resource-block (the band's engines serve only that request), and
-//! the band's first tile/group is that request's representative stream.
-//! Folded and unfolded *batch* programs therefore execute bit-identically
-//! (`tests/fold_differential.rs` mixed-batch axis). Batch entries are
-//! template-stamped like solo programs: the stamp cache patches each K/V
-//! transfer's channel per page segment, so a paged entry is a
-//! table-driven re-point of a cached skeleton, not a fresh emission
-//! (pinned against naive emission by `batch::tests`). The same locality
-//! gives the conservation property the tests pin: with per-slot-disjoint
-//! channels (wide HBM + channel-affine pages), a request's op timeline in
-//! a mixed batch is bit-identical to composing it alone.
+//! Composition shares HBM channels but gives each request a private tile
+//! band, so the fold-exactness argument localizes per request — folded
+//! and unfolded batch programs execute bit-identically
+//! (`tests/fold_differential.rs`, mixed-batch axis) — and with
+//! per-slot-disjoint channels a request's in-batch op timeline is
+//! bit-identical to composing it alone (the **conservation property**).
+//! The full essay lives in `docs/ARCHITECTURE.md` §"Serving scheduler".
 //!
 //! # Incremental composition (§Incremental)
 //!
-//! Replaying a trace used to rebuild, reseal and fully re-simulate the
-//! batch program every step — step cost linear in total in-flight ops,
-//! fatal at the million-request scale the ROADMAP targets. The
-//! [`incremental::StepComposer`] keeps the previous step's *sealed*
-//! program alive and cost-patches it in place whenever the op structure
-//! is unchanged (the steady-decode common case), reusing the PR-5 shard
-//! CSR and the dependents CSR verbatim instead of re-deriving them; and
-//! when the entries' channel masks are pairwise disjoint it skips batch
-//! execution entirely, merging memoized per-request *solo* runs — exact
-//! by the conservation property above. Both levers are config knobs
-//! ([`SchedulerConfig::incremental`] / [`SchedulerConfig::memoize`],
-//! default on), faulted steps always run the real batch, and
-//! `tests/incremental_differential.rs` pins every mode against the
-//! full-rebuild path bit for bit, reports compared field by field.
+//! [`incremental::StepComposer`] keeps the previous step's sealed
+//! program alive and cost-patches it in place when the op structure is
+//! unchanged, and merges memoized per-request solo runs when the
+//! entries' channel masks are pairwise disjoint — both bit-identical to
+//! the full-rebuild path (`tests/incremental_differential.rs`). Essay:
+//! `docs/ARCHITECTURE.md` §"Incremental composition and memoized delta
+//! re-simulation".
 //!
 //! # Graceful-degradation router (§Router)
 //!
-//! [`router::route`] wraps the same composition/execution step in a
-//! request-*lifecycle* layer — the part of a serving stack that decides
-//! *whether* work runs, not just where:
-//!
-//! * **Admission** — a token budget (`max_batch_total_tokens`, the
-//!   TGI-style cap on Σ prompt+output across the batch) and a page budget
-//!   (`max_total_pages`) gate the waiting queue. With preemption off, the
-//!   page budget is enforced by *reservation*: a request is admitted only
-//!   if its maximal KV footprint fits alongside every in-flight
-//!   reservation, so pressure can never materialize mid-flight. With
-//!   preemption on, admission is optimistic (current footprints) and
-//!   pressure is resolved by eviction — the throughput/latency trade the
-//!   `report robustness` figure measures. An idle machine always admits
-//!   the front waiter, so no budget setting can deadlock the router.
-//! * **Preemption** — under page pressure a victim
-//!   ([`router::VictimPolicy`]: newest / fewest-pages / most-remaining)
-//!   is evicted: its pages are freed ([`crate::hbm::PageMap::reset`]) and
-//!   it re-queues with `rebuild_to = prompt + generated`. Rebuilding is
-//!   re-emitted as *real chunked-prefill traffic* over the tokens the
-//!   request had already processed — not a free reset. This is
-//!   deliberately **conservative** (an upper bound on recovery cost):
-//!   real stacks snapshot/restore or recompute selectively, and anything
-//!   they do is at most the full recompute we charge, so degradation
-//!   numbers derived from it can only be pessimistic, never flattering.
-//!   Already-delivered tokens stay delivered (they left the server);
-//!   rebuilt prefill produces no new output until the cache again covers
-//!   `rebuild_to`.
-//! * **TTFT is per-attempt** — every requeue (band eviction, deadline
-//!   retry, preemption) clears the request's first-token mark, and the
-//!   next token it actually delivers re-arms it. TTFT therefore measures
-//!   arrival → first token delivered *after the last disruption*: the
-//!   service the client experienced once the stream finally flowed, not
-//!   a stale pre-eviction timestamp
-//!   (`router::tests::requeued_requests_restart_ttft_per_attempt`).
-//! * **Deadlines** — `deadline` cycles per attempt: an in-flight or
-//!   waiting request that exceeds it is retried (bounded by
-//!   `max_retries`, eviction semantics as above) and finally *expired* —
-//!   dropped with its slot and pages reclaimed. Expired requests are
-//!   excluded from latency percentiles and goodput (they produced no
-//!   service), but counted in the router report.
-//! * **Fault-aware band remapping** — the step program executes under the
-//!   session [`crate::sim::FaultPlan`] shifted to the step's clock. A
-//!   tile death kills its band's ops mid-step (`affected_entries` on the
-//!   [`batch::BatchProgram`] names the entries that made no progress); those
-//!   requests requeue *keeping pages and progress* — the KV cache lives
-//!   in HBM, only the compute band died — and the dead band leaves the
-//!   usable-slot set, shrinking the machine. When every band is dead the
-//!   remaining requests expire instead of spinning.
-//!
-//! Termination: every step either advances at least one request's state,
-//! frees a slot, consumes a retry, or shrinks the usable-band set — all
-//! monotone — and expiry bounds each request's attempts, so `route`
-//! always terminates even under total-failure plans.
+//! [`router::route`] wraps the step loop in a request-lifecycle layer:
+//! token/page-budget admission (reservation-based without preemption,
+//! optimistic with it), preemption with conservatively-charged
+//! chunked-prefill rebuild, per-attempt TTFT, per-attempt deadlines with
+//! bounded retries and expiry, and fault-aware band remapping that
+//! shrinks the machine as bands die. Design rationale and the
+//! termination argument: `docs/ARCHITECTURE.md` §"Graceful-degradation
+//! router".
 
 pub mod batch;
 pub mod incremental;
 pub mod router;
 pub mod trace;
 
-pub use batch::{compose, BatchEntry, BatchProgram, EntryStats};
+pub use batch::{compose, compose_layered, BatchEntry, BatchProgram, EntryStats, LayerParams};
 pub use incremental::StepComposer;
 pub use router::{route, try_route, try_route_with, RouterConfig, RouterReport, VictimPolicy};
 pub use trace::{Request, RequestTrace};
 
 use crate::arch::ArchConfig;
-use crate::dataflow::{Dataflow, Workload};
+use crate::dataflow::{Dataflow, WeightResidency, Workload};
 use crate::hbm::PageMap;
 use crate::sim::Cycle;
 use crate::telemetry::{RunTelemetry, StepObs};
@@ -158,15 +81,20 @@ use crate::util::Rng;
 /// KV-cache page → HBM-channel placement policy (see the module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PagePlacement {
+    /// Pages dealt over channels in order.
     RoundRobin,
+    /// Pages pinned to the channels nearest the request's band.
     ChannelAffine,
+    /// Uniform pseudo-random placement (deterministic seed).
     Random,
 }
 
+/// Every placement policy, in report order.
 pub const ALL_PLACEMENTS: [PagePlacement; 3] =
     [PagePlacement::RoundRobin, PagePlacement::ChannelAffine, PagePlacement::Random];
 
 impl PagePlacement {
+    /// Stable CLI/report name.
     pub fn label(self) -> &'static str {
         match self {
             PagePlacement::RoundRobin => "round-robin",
@@ -175,6 +103,7 @@ impl PagePlacement {
         }
     }
 
+    /// Parse a (case-insensitive) label, e.g. from the CLI.
     pub fn from_label(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "round-robin" | "roundrobin" | "rr" => Some(PagePlacement::RoundRobin),
@@ -189,13 +118,16 @@ impl PagePlacement {
 /// static (admit a batch, run it to completion, then admit the next).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BatchPolicy {
+    /// Admit into any free slot every step.
     Continuous,
+    /// Run each admitted batch to completion before admitting more.
     Static,
 }
 
 /// Scheduler configuration.
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
+    /// Attention dataflow of every step.
     pub dataflow: Dataflow,
     /// FlatAttention group edge (must divide the slot band).
     pub group: usize,
@@ -205,11 +137,14 @@ pub struct SchedulerConfig {
     pub chunk: u64,
     /// KV page size in tokens.
     pub page_tokens: u64,
+    /// KV page -> channel placement policy.
     pub placement: PagePlacement,
+    /// Batch admission policy.
     pub policy: BatchPolicy,
     /// Model configuration: query heads and head dimension (per-request
     /// `kv_heads` comes from the trace).
     pub heads: u64,
+    /// Head dimension.
     pub head_dim: u64,
     /// Sliding-window extent (0 = unlimited).
     pub window: u64,
@@ -235,9 +170,25 @@ pub struct SchedulerConfig {
     /// memoized per-request solo runs instead of executing the batch
     /// DES. Bit-identical by the conservative-composition property.
     pub memoize: bool,
+    /// §Layer serving: FFN expansion factor. `0` (the default) serves
+    /// attention-only steps — the pre-layer behaviour, bit for bit.
+    /// `>= 1` turns every step into a full transformer layer: each
+    /// entry's attention kernel plus its projection/FFN GEMM tail
+    /// (out-proj → FFN-up → FFN-down → next-layer QKV; see
+    /// `dataflow::layer` §Kernel rotation) on the entry's tile-row band.
+    pub ffn_mult: u64,
+    /// §Layer serving: transformer layers per token (≥ 1). A request's
+    /// token state advances only after it has run `layers` layer steps;
+    /// requests at different depths share a batch, so layer `l` decode
+    /// overlaps layer `l'` prefill across tile bands. Requires
+    /// `ffn_mult >= 1` when `> 1`.
+    pub layers: usize,
+    /// §Layer serving: weight residency of the GEMM tails.
+    pub weights: WeightResidency,
 }
 
 impl SchedulerConfig {
+    /// Defaults for the given dataflow (see the field docs).
     pub fn new(dataflow: Dataflow) -> Self {
         Self {
             dataflow,
@@ -256,29 +207,51 @@ impl SchedulerConfig {
             slo_tpot_ms: 0.1,
             incremental: true,
             memoize: true,
+            ffn_mult: 0,
+            layers: 1,
+            weights: WeightResidency::HbmStream,
         }
+    }
+
+    /// True when this config serves full transformer layers (§Layer
+    /// serving) rather than attention-only steps.
+    pub fn layered(&self) -> bool {
+        self.ffn_mult > 0
+    }
+
+    /// The per-step [`LayerParams`] of a layered config.
+    pub(crate) fn layer_params(&self) -> LayerParams {
+        LayerParams { ffn_mult: self.ffn_mult, weights: self.weights }
     }
 }
 
 /// Per-request serving metrics (cycles are absolute virtual-clock times).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RequestMetrics {
+    /// Trace index of the request.
     pub id: usize,
+    /// Arrival time (cycles).
     pub arrival: Cycle,
     /// Clock at the end of the step that produced the first output token.
     pub first_token: Cycle,
     /// Clock at the end of the step that produced the last output token.
     pub finish: Cycle,
+    /// Prompt length in tokens.
     pub prompt: u64,
+    /// Output budget in tokens.
     pub output: u64,
 }
 
 /// Aggregate serving metrics of one trace replay.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingReport {
+    /// Virtual clock when the last step finished.
     pub total_cycles: Cycle,
+    /// Composed steps executed.
     pub steps: usize,
+    /// Total tokens produced (prefill + decode).
     pub tokens: u64,
+    /// Token throughput at the architecture clock.
     pub tokens_per_s: f64,
     /// Mean time-to-first-token over all requests (ms).
     pub ttft_mean_ms: f64,
@@ -287,12 +260,16 @@ pub struct ServingReport {
     pub tpot_mean_ms: f64,
     /// TTFT tail percentiles (nearest-rank, ms).
     pub ttft_p50_ms: f64,
+    /// TTFT p95 (nearest-rank, ms).
     pub ttft_p95_ms: f64,
+    /// TTFT p99 (nearest-rank, ms).
     pub ttft_p99_ms: f64,
     /// TPOT tail percentiles (nearest-rank, ms; over requests with more
     /// than one output token).
     pub tpot_p50_ms: f64,
+    /// TPOT p95 (nearest-rank, ms).
     pub tpot_p95_ms: f64,
+    /// TPOT p99 (nearest-rank, ms).
     pub tpot_p99_ms: f64,
     /// Output tokens of requests meeting both SLOs
     /// ([`SchedulerConfig::slo_ttft_ms`] / [`SchedulerConfig::slo_tpot_ms`])
@@ -300,7 +277,9 @@ pub struct ServingReport {
     pub goodput_tokens_per_s: f64,
     /// Mean fraction of slots occupied, weighted by step makespan.
     pub occupancy: f64,
+    /// Total HBM traffic across every step.
     pub hbm_bytes: u64,
+    /// Per-request metrics, in trace order.
     pub requests: Vec<RequestMetrics>,
     /// Compact JSON of the run's deterministic telemetry snapshot
     /// ([`crate::telemetry::RunTelemetry::snapshot_json`]), present when
@@ -397,6 +376,10 @@ struct ReqState {
     first_token: Option<Cycle>,
     finish: Option<Cycle>,
     pages: PageMap,
+    /// §Layer serving: index of the transformer layer the request runs
+    /// next (always 0 for attention-only runs). Token/prefill state
+    /// advances only when this wraps past `SchedulerConfig::layers`.
+    layer: usize,
 }
 
 /// The per-slot affine channel range `(base, count)`: the slot's
@@ -435,6 +418,13 @@ pub enum ScheduleError {
     /// A trace request's `kv_heads` does not divide the model's query
     /// heads (GQA requires an integer group size).
     BadKvHeads { request: usize, kv_heads: u64, heads: u64 },
+    /// `layers == 0`, or `layers > 1` without an FFN (`ffn_mult == 0`):
+    /// multi-layer serving needs the projection/FFN tail that carries
+    /// activations between layers.
+    BadLayers { layers: usize, ffn_mult: u64 },
+    /// Layer serving requested under the graceful-degradation router,
+    /// which serves attention-only steps.
+    LayeredRouting,
 }
 
 impl std::fmt::Display for ScheduleError {
@@ -446,6 +436,15 @@ impl std::fmt::Display for ScheduleError {
                 f,
                 "request {request}: kv_heads {kv_heads} must divide the model's \
                  {heads} query heads"
+            ),
+            ScheduleError::BadLayers { layers, ffn_mult } => write!(
+                f,
+                "layers {layers} with ffn-mult {ffn_mult}: layer serving needs \
+                 layers >= 1, and layers > 1 needs ffn-mult >= 1"
+            ),
+            ScheduleError::LayeredRouting => f.write_str(
+                "the router serves attention-only steps; layer serving \
+                 (ffn-mult >= 1 or layers > 1) runs under plain `schedule`",
             ),
         }
     }
@@ -464,6 +463,9 @@ pub(crate) fn validate_config(
         .map_err(ScheduleError::BadGeometry)?;
     if cfg.chunk == 0 {
         return Err(ScheduleError::ZeroChunk);
+    }
+    if cfg.layers == 0 || (cfg.layers > 1 && cfg.ffn_mult == 0) {
+        return Err(ScheduleError::BadLayers { layers: cfg.layers, ffn_mult: cfg.ffn_mult });
     }
     for r in &trace.requests {
         if r.kv_heads == 0 || r.kv_heads > cfg.heads || cfg.heads % r.kv_heads != 0 {
@@ -516,6 +518,7 @@ fn simulate_validated(
 ) -> ServingReport {
     let n = trace.requests.len();
     let n_chan = arch.hbm.total_channels() as u64;
+    let layered = cfg.layered();
     let mut states: Vec<ReqState> = (0..n)
         .map(|_| ReqState {
             prefill_done: 0,
@@ -523,6 +526,7 @@ fn simulate_validated(
             first_token: None,
             finish: None,
             pages: PageMap::new(cfg.page_tokens),
+            layer: 0,
         })
         .collect();
     let mut slots: Vec<Option<usize>> = vec![None; cfg.slots];
@@ -548,6 +552,7 @@ fn simulate_validated(
     let mut active: Vec<(usize, usize)> = Vec::new();
     let mut metas: Vec<(usize, usize, bool, u64)> = Vec::new();
     let mut workloads: Vec<Workload> = Vec::new();
+    let mut layer_counts: Vec<u64> = Vec::new();
 
     loop {
         // Admission: continuous fills any free slot; static only admits
@@ -632,7 +637,11 @@ fn simulate_validated(
                     pages: &states[ri].pages,
                 })
                 .collect();
-            composer.run_step(arch, cfg, &entries)
+            if layered {
+                composer.run_step_layered(arch, cfg, &entries, cfg.layer_params())
+            } else {
+                composer.run_step(arch, cfg, &entries)
+            }
         };
         debug_assert!(stats.makespan > 0, "a non-empty step must advance the clock");
         let step_start = clock;
@@ -646,6 +655,13 @@ fn simulate_validated(
                 .partition_point(|r| r.arrival <= clock) as u64;
             let pages_in_use: u64 =
                 active.iter().map(|&(_, ri)| states[ri].pages.num_pages() as u64).sum();
+            if layered {
+                layer_counts.clear();
+                layer_counts.resize(cfg.layers, 0);
+                for &(_, ri, _, _) in &metas {
+                    layer_counts[states[ri].layer] += 1;
+                }
+            }
             t.record_step(&StepObs {
                 index: (steps - 1) as u64,
                 start: step_start,
@@ -656,13 +672,25 @@ fn simulate_validated(
                 pages_in_use,
                 slots: cfg.slots as u64,
                 probe: composer.probe(),
+                layer_counts: layered.then_some(layer_counts.as_slice()),
             });
         }
 
-        // Advance request states at the step barrier.
+        // Advance request states at the step barrier. Under layer serving
+        // a step is one transformer layer: the request's layer index
+        // advances every step, but its token/prefill state (and hence its
+        // workload shape) only moves when the index wraps — the same
+        // chunk or decode row runs once per layer.
         for &(slot, ri, is_prefill, len) in &metas {
             let req = &trace.requests[ri];
             let st = &mut states[ri];
+            if layered {
+                st.layer += 1;
+                if st.layer < cfg.layers {
+                    continue;
+                }
+                st.layer = 0;
+            }
             if is_prefill {
                 st.prefill_done += len;
                 if st.prefill_done == req.prompt {
@@ -795,5 +823,70 @@ mod tests {
         let mut cfg = cfg4(Dataflow::Flash2);
         cfg.chunk = 0;
         let _ = simulate(&arch, &one_request(), &cfg);
+    }
+
+    #[test]
+    fn bad_layer_configs_are_structured_errors() {
+        let arch = presets::table2(8);
+        let mut cfg = cfg4(Dataflow::Flash2);
+        cfg.layers = 0;
+        let err = try_simulate(&arch, &one_request(), &cfg).unwrap_err();
+        assert!(matches!(err, ScheduleError::BadLayers { .. }), "{err:?}");
+        // Multi-layer depth without an FFN: there is no GEMM tail to
+        // distinguish the layers, so the config is rejected, not silently
+        // multiplied.
+        cfg.layers = 2;
+        cfg.ffn_mult = 0;
+        let err = try_simulate(&arch, &one_request(), &cfg).unwrap_err();
+        assert_eq!(err, ScheduleError::BadLayers { layers: 2, ffn_mult: 0 });
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn layered_serving_takes_layers_times_the_steps() {
+        // One step = one transformer layer: a request's token advances
+        // only every `layers` steps, so the layered replay runs (about —
+        // admission timing can add a step) `layers`× the attention-only
+        // step count, and every step still makes progress.
+        let arch = presets::table2(8);
+        let trace = RequestTrace::from_rows(&[(0, 64, 2), (0, 96, 3)], 2);
+        let plain = simulate(&arch, &trace, &cfg4(Dataflow::Flash2));
+        let mut cfg = cfg4(Dataflow::Flash2);
+        cfg.ffn_mult = 2;
+        cfg.layers = 3;
+        let layered = simulate(&arch, &trace, &cfg);
+        assert!(
+            layered.steps >= 3 * plain.steps,
+            "layered {} vs plain {} steps",
+            layered.steps,
+            plain.steps
+        );
+        assert!(layered.tokens_per_s > 0.0);
+        // The GEMM tails add HBM traffic on top of the attention-only run.
+        assert!(layered.hbm_bytes > plain.hbm_bytes);
+    }
+
+    #[test]
+    fn single_layer_without_ffn_is_the_legacy_path_bit_for_bit() {
+        // `layers = 1, ffn_mult = 0` (the defaults) must be the exact
+        // attention-only scheduler — the layered branch never engages.
+        let arch = presets::table2(8);
+        let trace = RequestTrace::from_rows(&[(0, 64, 2), (1_000, 96, 3)], 2);
+        let base = simulate(&arch, &trace, &cfg4(Dataflow::FlatColl));
+        let mut cfg = cfg4(Dataflow::FlatColl);
+        cfg.layers = 1;
+        cfg.ffn_mult = 0;
+        assert_eq!(simulate(&arch, &trace, &cfg), base);
+    }
+
+    #[test]
+    fn router_rejects_layered_configs() {
+        let arch = presets::table2(8);
+        let mut cfg = cfg4(Dataflow::Flash2);
+        cfg.ffn_mult = 1;
+        let rc = RouterConfig::default();
+        let err = try_route(&arch, &one_request(), &cfg, &rc).unwrap_err();
+        assert_eq!(err, ScheduleError::LayeredRouting);
+        assert!(err.to_string().contains("attention-only"));
     }
 }

@@ -4,7 +4,8 @@
 //! *lifecycle* layer: token-budget and page-budget admission, preemption
 //! under page pressure, per-attempt deadlines with bounded retries, and
 //! fault-aware band remapping under a [`FaultPlan`]. The design essay
-//! lives in the parent module docs (§Router); this file is the mechanism.
+//! lives in `docs/ARCHITECTURE.md` §"Graceful-degradation router"; this
+//! file is the mechanism.
 //!
 //! The router shares [`finish_report`] with [`super::simulate`] so its
 //! latency percentiles and goodput are computed identically; with a
@@ -38,6 +39,7 @@ pub enum VictimPolicy {
 }
 
 impl VictimPolicy {
+    /// Stable CLI/report name.
     pub fn label(self) -> &'static str {
         match self {
             VictimPolicy::Newest => "newest",
@@ -46,6 +48,7 @@ impl VictimPolicy {
         }
     }
 
+    /// Parse a (case-insensitive) label, e.g. from the CLI.
     pub fn from_label(s: &str) -> Option<Self> {
         match s.to_ascii_lowercase().as_str() {
             "newest" => Some(VictimPolicy::Newest),
@@ -72,6 +75,7 @@ pub struct RouterConfig {
     pub deadline: Cycle,
     /// Deadline retries before a request expires.
     pub max_retries: usize,
+    /// Which running request to evict under page pressure.
     pub victim: VictimPolicy,
     /// Resolve page pressure by eviction (true) or prevent it by
     /// reservation-based admission (false). See the §Router essay.
@@ -96,7 +100,9 @@ impl Default for RouterConfig {
 /// the lifecycle counters the degradation figures plot.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RouterReport {
+    /// Serving metrics over completed requests.
     pub serving: ServingReport,
+    /// Requests that ran to completion.
     pub completed: usize,
     /// Requests dropped (deadline retries exhausted, or no live band
     /// remained to run them).
@@ -192,6 +198,12 @@ pub fn try_route_with(
     tel: Option<&mut RunTelemetry>,
 ) -> Result<RouterReport, ScheduleError> {
     validate_config(arch, trace, cfg)?;
+    // The router's lifecycle machinery (preemption, rebuild, band death)
+    // reasons about attention-only steps; layer serving runs under the
+    // plain scheduler.
+    if cfg.layered() || cfg.layers > 1 {
+        return Err(super::ScheduleError::LayeredRouting);
+    }
     Ok(route_validated(arch, trace, cfg, rc, tel))
 }
 
@@ -596,6 +608,7 @@ fn route_validated(
                 pages_in_use,
                 slots: cfg.slots as u64,
                 probe: composer.probe(),
+                layer_counts: None,
             });
         }
 

@@ -25,6 +25,7 @@ pub struct Request {
 /// A request trace, sorted by arrival time.
 #[derive(Debug, Clone)]
 pub struct RequestTrace {
+    /// Every request, sorted by arrival.
     pub requests: Vec<Request>,
 }
 

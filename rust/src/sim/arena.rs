@@ -28,6 +28,7 @@ pub struct ProgramArena {
 }
 
 impl ProgramArena {
+    /// An empty arena.
     pub fn new() -> Self {
         Self::default()
     }

@@ -31,6 +31,7 @@ pub enum Component {
     Other,
 }
 
+/// Every component, in breakdown/report order.
 pub const ALL_COMPONENTS: [Component; 7] = [
     Component::RedMule,
     Component::Spatz,
@@ -42,6 +43,7 @@ pub const ALL_COMPONENTS: [Component; 7] = [
 ];
 
 impl Component {
+    /// Stable lowercase name.
     pub fn label(self) -> &'static str {
         match self {
             Component::RedMule => "RedMulE",
@@ -58,16 +60,24 @@ impl Component {
 /// Per-component exclusive time (cycles) on the tracked tile.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Breakdown {
+    /// RedMulE (matrix) busy cycles.
     pub redmule: Cycle,
+    /// Spatz (vector) busy cycles.
     pub spatz: Cycle,
+    /// Sum-reduce collective cycles.
     pub sum_reduce: Cycle,
+    /// Max-reduce collective cycles.
     pub max_reduce: Cycle,
+    /// Multicast collective cycles.
     pub multicast: Cycle,
+    /// HBM access cycles.
     pub hbm: Cycle,
+    /// Unattributed (sync/scheduling) cycles.
     pub other: Cycle,
 }
 
 impl Breakdown {
+    /// Cycles of one component.
     pub fn get(&self, c: Component) -> Cycle {
         match c {
             Component::RedMule => self.redmule,
@@ -92,6 +102,7 @@ impl Breakdown {
         }
     }
 
+    /// Sum over every component.
     pub fn total(&self) -> Cycle {
         ALL_COMPONENTS.iter().map(|&c| self.get(c)).sum()
     }
@@ -130,6 +141,7 @@ impl Breakdown {
         bd
     }
 
+    /// Serialize as a `label -> cycles` object.
     pub fn to_json(&self) -> Json {
         Json::obj(ALL_COMPONENTS.map(|c| (c.label(), Json::num(self.get(c) as f64))))
     }

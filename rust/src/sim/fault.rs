@@ -44,8 +44,11 @@ use crate::util::Rng;
 /// arriving in the window waits for the channel to come back.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ChannelOutage {
+    /// Global HBM channel index.
     pub channel: u32,
+    /// Window start (inclusive, cycles).
     pub from: Cycle,
+    /// Window end (exclusive, cycles).
     pub until: Cycle,
 }
 
@@ -53,10 +56,15 @@ pub struct ChannelOutage {
 /// starting inside the window is multiplied by `num/den` (rounded up).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ChannelDerate {
+    /// Global HBM channel index.
     pub channel: u32,
+    /// Window start (inclusive, cycles).
     pub from: Cycle,
+    /// Window end (exclusive, cycles).
     pub until: Cycle,
+    /// Slowdown numerator (occupancy scales by `num/den`).
     pub num: u64,
+    /// Slowdown denominator.
     pub den: u64,
 }
 
@@ -64,9 +72,13 @@ pub struct ChannelDerate {
 /// `num/den` (fabric congestion, link-level retransmission).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct NocSlowdown {
+    /// Window start (inclusive, cycles).
     pub from: Cycle,
+    /// Window end (exclusive, cycles).
     pub until: Cycle,
+    /// Slowdown numerator (occupancy scales by `num/den`).
     pub num: u64,
+    /// Slowdown denominator.
     pub den: u64,
 }
 
@@ -74,7 +86,9 @@ pub struct NocSlowdown {
 /// has reached `at` ever issues.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TileDeath {
+    /// Flat tile id.
     pub tile: u32,
+    /// Death time (cycles).
     pub at: Cycle,
 }
 
@@ -82,9 +96,13 @@ pub struct TileDeath {
 /// the empty plan and reproduces fault-free schedules bit-for-bit.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FaultPlan {
+    /// Channel outage windows.
     pub outages: Vec<ChannelOutage>,
+    /// Channel derate windows.
     pub derates: Vec<ChannelDerate>,
+    /// Fabric-wide NoC slowdown windows.
     pub noc: Vec<NocSlowdown>,
+    /// Tile deaths.
     pub deaths: Vec<TileDeath>,
 }
 
@@ -94,6 +112,7 @@ impl FaultPlan {
         Self::default()
     }
 
+    /// True for the empty plan.
     pub fn is_none(&self) -> bool {
         self.outages.is_empty()
             && self.derates.is_empty()
@@ -101,12 +120,14 @@ impl FaultPlan {
             && self.deaths.is_empty()
     }
 
+    /// Add a channel outage over `[from, until)`.
     pub fn with_outage(mut self, channel: u32, from: Cycle, until: Cycle) -> Self {
         assert!(from < until, "outage window must be non-empty");
         self.outages.push(ChannelOutage { channel, from, until });
         self
     }
 
+    /// Add a channel derate (`num/den >= 1`) over `[from, until)`.
     pub fn with_derate(
         mut self,
         channel: u32,
@@ -121,6 +142,7 @@ impl FaultPlan {
         self
     }
 
+    /// Add a fabric-wide NoC slowdown (`num/den >= 1`) over `[from, until)`.
     pub fn with_noc_slowdown(mut self, from: Cycle, until: Cycle, num: u64, den: u64) -> Self {
         assert!(from < until, "NoC slowdown window must be non-empty");
         assert!(den > 0 && num >= den, "slowdown ratio must be >= 1");
@@ -128,6 +150,7 @@ impl FaultPlan {
         self
     }
 
+    /// Kill a tile at cycle `at`.
     pub fn with_tile_death(mut self, tile: u32, at: Cycle) -> Self {
         self.deaths.push(TileDeath { tile, at });
         self
@@ -243,6 +266,15 @@ impl FaultPlan {
     ///
     /// e.g. `slow:8@0-4000000x4;die:60@1200000`. Cycle values are virtual
     /// serving-clock cycles when passed to `schedule --faults`.
+    ///
+    /// ```
+    /// use flatattention::sim::FaultPlan;
+    ///
+    /// let plan = FaultPlan::parse("slow:8@0-4000x4;die:60@1200").unwrap();
+    /// assert_eq!((plan.derates.len(), plan.deaths.len()), (1, 1));
+    /// assert_eq!(plan.deaths[0].tile, 60);
+    /// assert!(FaultPlan::parse("explode:everything").is_err());
+    /// ```
     pub fn parse(spec: &str) -> Result<FaultPlan, String> {
         fn num(field: &str, s: &str) -> Result<u64, String> {
             s.trim()
@@ -438,7 +470,9 @@ impl ResolvedFaults {
 /// reports compare bit-for-bit across engines and thread counts.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FaultReport {
+    /// Op ids never issued (their tile was dead), sorted.
     pub killed: Vec<u32>,
+    /// Op ids stuck behind killed dependencies, sorted.
     pub stalled: Vec<u32>,
 }
 

@@ -21,106 +21,40 @@
 //!
 //! # Sweep-scale hot path (§Perf)
 //!
-//! A Fig. 5-style co-exploration sweep pushes hundreds of `(arch,
-//! workload, dataflow, group)` points through this engine, so the whole
-//! path is organized around *reuse of repeated structure*:
-//!
-//! * **Template stamping** — the dataflow builders emit the per-head
-//!   (Flash) / per-group-iteration (Flat) op subgraph once and instantiate
-//!   every further repetition with [`Program::stamp_range`], which copies
-//!   ops into preallocated buffers while offset-patching dependency ids
-//!   (and, for Flash, rotating HBM-channel resources). Stamped and
-//!   naively-built programs are op-for-op identical — asserted by tests.
-//! * **Sealed dependents CSR** — [`Program::seal`] derives the dependents
-//!   adjacency and initial in-degrees once at construction; every
-//!   [`execute`] call then starts immediately instead of re-deriving them.
-//! * **Indexed event queue** — [`queue::EventQueue`] is a monotone
-//!   radix-bucket queue replacing the `BinaryHeap`, exploiting the
-//!   near-monotonic completion times these schedules produce. The seed
-//!   heap engine survives in [`reference`] and a differential test proves
-//!   schedule equivalence.
-//! * **Symmetry folding** — the Flash grid simulates ~1024 congruent tile
-//!   streams (and every Flat group beyond the first repeats the same
-//!   block schedule). With `dataflow::set_symmetry_folding` enabled (the
-//!   default), builders emit all shared-resource ops (HBM channels, NoC
-//!   buses) verbatim but collapse non-representative streams' private
-//!   compute chains into single delay ops; the elided accounting travels
-//!   in [`Program::fold`] and is re-added by the executors. The collapse
-//!   is exact — folded and unfolded builds produce bit-identical
-//!   `RunStats` (`tests/fold_differential.rs`) — because synchronous
-//!   private chains are never resource-blocked and both engines schedule
-//!   same-cycle-ready ops in op-id order.
-//! * **[`arena`]** — [`ProgramArena`] recycles `ops`/`deps_pool`/CSR
-//!   allocations across the experiments of a sweep (one arena per worker
-//!   thread, used by `dataflow::run`).
-//! * One level up, `crate::coordinator` memoizes experiment results by
-//!   content key (including the folding switch) so identical points
-//!   shared between figures simulate once.
-//!
-//! The `double_buffer` ablation pair is now derived from one builder
-//! pass (`dataflow::double_buffer_programs`): the variants share their op
-//! topology and differ only in K/V prefetch dependencies, so the second
-//! program is a buffer clone + dependency retarget + reseal instead of a
-//! full rebuild.
+//! Repeated structure is reused everywhere: template stamping
+//! ([`Program::stamp_range`]) instantiates congruent op subgraphs from one
+//! emission; [`Program::seal`] derives the dependents CSR once; the
+//! monotone radix-bucket [`queue::EventQueue`] replaces the seed heap
+//! (which survives in [`reference`], pinned equivalent by a differential
+//! test); symmetry folding collapses congruent tile streams' private
+//! compute chains exactly — folded and unfolded builds produce
+//! bit-identical `RunStats` (`tests/fold_differential.rs`), the elided
+//! accounting travelling in [`Program::fold`]; and [`ProgramArena`]
+//! recycles allocations across a sweep. The full design essay lives in
+//! `docs/ARCHITECTURE.md` §"The DES hot path".
 //!
 //! # Sharded multi-worker execution (§Shard)
 //!
-//! FlatAttention's premise — heads, groups and tile-bands are independent
-//! between fabric collectives — holds inside the simulator too, and
-//! [`execute_parallel`] exploits it. [`Program::seal`] partitions every
-//! DAG into *shards*: the connected components of the op graph restricted
-//! to **private** resources (a resource whose ops all carry one owner
-//! tile: a tile's RedMulE/Spatz/scalar engines, a folded stream's delay
-//! chain, a group's barrier), plus one **shared** shard holding every op
-//! on a *contended* resource (ops from ≥ 2 tiles: HBM channel FIFOs, NoC
-//! row/column buses). Three structural invariants fall out of the
-//! construction, not the heuristic: every op is in exactly one shard,
-//! every resource is used by exactly one shard, and every cross-shard
-//! dependency edge has an endpoint in the shared shard.
-//!
-//! Why cross-shard timestamps commute: the engine's schedule is fully
-//! determined by, per resource, the `(ready time, generation, op id)`
-//! order of its ops — the PR-2 tie-break argument. Since no resource
-//! spans shards, that order is a *per-shard* property; shards influence
-//! each other only through the completion times flowing across the
-//! partition edges, i.e. through the shared shard's FIFO arbitration.
-//! [`execute_parallel`] therefore advances all workers in epochs pinned
-//! to the global minimum pending completion time: drain every completion
-//! of that timestamp, exchange the cross-shard releases, then schedule
-//! each shard's released ops in op-id order. Rounds map one-to-one onto
-//! the serial engine's same-timestamp generations, so the PR-2 tie-break
-//! localizes per shard and the parallel schedule is **bit-identical** to
-//! the serial one — `RunStats`, breakdowns and traces alike
-//! (`tests/parallel_differential.rs` pins this against both [`execute`]
-//! and [`reference`] across dataflows × folding × paged batch programs ×
-//! thread counts). The win is shape-dependent: epochs synchronize all
-//! workers, so throughput comes from many shards being busy at the same
-//! timestamp (congruent unfolded tile streams, multi-band scheduler
-//! batches); sweep-level fan-out (`coordinator::run_all` /
-//! `set_engine_threads`) composes with it.
+//! [`Program::seal`] partitions every DAG into private-resource shards
+//! plus one shared shard (no resource spans shards; every cross-shard
+//! edge touches the shared shard), and [`execute_parallel`] advances all
+//! workers in epochs pinned to the global minimum pending completion
+//! time. The engine's tie-break localizes per shard, so the parallel
+//! schedule is **bit-identical** to the serial one — `RunStats`,
+//! breakdowns and traces alike (`tests/parallel_differential.rs`). Why
+//! cross-shard timestamps commute: `docs/ARCHITECTURE.md` §"Sharded
+//! multi-worker execution".
 //!
 //! # Deterministic fault injection (§Fault)
 //!
-//! `fault::FaultPlan` describes timed hardware failures — HBM-channel
-//! outage and derating windows, NoC bus slowdowns, whole-tile death — and
-//! `engine::execute_faulted` applies them *inside* the scheduling step: an
-//! outage window pushes an affected op's computed start past the window, a
-//! derate window multiplies its occupancy, and a dead tile's ops are
-//! dropped (their dependents then stall and are returned in a
-//! `fault::FaultReport` instead of panicking).
-//!
-//! Why fault windows commute with the §Shard partition: every fault
-//! decision is a pure function of (the op's fields, the owning resource's
-//! local FIFO cursor, the epoch timestamp, the plan). A resource belongs
-//! to exactly one shard, so the cursor is shard-local state the parallel
-//! engine already reproduces exactly; the epoch timestamp is the global
-//! `now` all workers agree on at fence 1; and the plan is immutable. No
-//! fault decision reads any cross-shard state beyond what the fault-free
-//! engine already exchanges, so injecting a plan preserves the serial ≡
-//! parallel bit-identity — and `FaultPlan::none()` takes the identical
-//! arithmetic with empty window tables, reproducing the fault-free
-//! schedule bit for bit. Both properties are pinned across all dataflows ×
-//! folding × thread counts by `tests/fault_differential.rs`.
+//! [`fault::FaultPlan`] describes timed hardware failures — HBM-channel
+//! outages/derates, NoC slowdowns, tile deaths — and
+//! [`engine::execute_faulted`] applies them *inside* the scheduling step
+//! (dead tiles' dependents stall into a [`fault::FaultReport`]). Every
+//! fault decision is shard-local, so injection preserves the serial ≡
+//! parallel bit-identity, and `FaultPlan::none()` reproduces the
+//! fault-free schedule bit for bit (`tests/fault_differential.rs`). Full
+//! argument: `docs/ARCHITECTURE.md` §"Deterministic fault injection".
 
 pub mod arena;
 pub mod breakdown;

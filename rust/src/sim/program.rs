@@ -93,16 +93,27 @@ pub const SHARED_SHARD: u32 = 0;
 /// sweep (op table, dependency pool, dependents CSR, shard CSR).
 #[derive(Debug, Default)]
 pub(crate) struct ProgramBuffers {
+    /// Op table.
     pub ops: Vec<Op>,
+    /// Flattened dependency lists.
     pub deps_pool: Vec<u32>,
+    /// CSR row starts into `out_edges`.
     pub out_start: Vec<u32>,
+    /// Dependents CSR.
     pub out_edges: Vec<u32>,
+    /// Ops with zero in-degree.
     pub indeg0: Vec<u32>,
+    /// Op -> shard.
     pub shard_of: Vec<u32>,
+    /// CSR row starts into `shard_ops`.
     pub shard_start: Vec<u32>,
+    /// Shard -> op list CSR.
     pub shard_ops: Vec<u32>,
+    /// Resource -> owning shard.
     pub res_shard: Vec<u32>,
+    /// Resource -> dense per-shard slot.
     pub res_dense: Vec<u32>,
+    /// Resources per shard.
     pub shard_res_count: Vec<u32>,
 }
 
@@ -192,6 +203,7 @@ pub struct Program {
 }
 
 impl Program {
+    /// An empty, unsealed program.
     pub fn new() -> Self {
         Self::default()
     }
@@ -245,6 +257,28 @@ impl Program {
     /// Allocate `n` fresh resources.
     pub fn resources(&mut self, n: usize) -> Vec<ResourceId> {
         (0..n).map(|_| self.resource()).collect()
+    }
+
+    /// Copy this program's op table, dependency pool and resource count
+    /// into a fresh *unsealed* program, ready for further `op` /
+    /// `stamp_range` appends. `flops` and fold accounting carry over; the
+    /// sealed CSRs are not copied (the clone re-derives them at `seal`).
+    ///
+    /// This is the cross-kernel composition primitive: the attention
+    /// builders allocate the HBM channel resources first and seal on
+    /// return, so a layer composer (see `crate::dataflow::layer`) clones
+    /// the sealed attention program unsealed and appends the projection /
+    /// FFN GEMM kernels behind a barrier, reusing the channel resources
+    /// by index.
+    pub fn unsealed_clone(&self) -> Program {
+        Program {
+            ops: self.ops.clone(),
+            deps_pool: self.deps_pool.clone(),
+            n_resources: self.n_resources,
+            flops: self.flops,
+            fold: self.fold,
+            ..Program::default()
+        }
     }
 
     /// Append an op; returns its id.
@@ -703,14 +737,17 @@ impl Program {
         self.res_dense[r.0 as usize] as usize
     }
 
+    /// Ops added so far.
     pub fn num_ops(&self) -> usize {
         self.ops.len()
     }
 
+    /// Distinct resources referenced.
     pub fn num_resources(&self) -> usize {
         self.n_resources as usize
     }
 
+    /// The op table.
     pub fn ops(&self) -> &[Op] {
         &self.ops
     }

@@ -41,6 +41,7 @@ impl Default for EventQueue {
 }
 
 impl EventQueue {
+    /// An empty queue.
     pub fn new() -> Self {
         let mut ubound = Vec::with_capacity(LEVELS);
         for i in 0..LEVELS {
@@ -54,10 +55,12 @@ impl EventQueue {
         }
     }
 
+    /// Pending events.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when no event is pending.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

@@ -43,6 +43,7 @@ pub enum RequeueCause {
 }
 
 impl RequeueCause {
+    /// Stable lowercase name for counters and trace JSON.
     pub fn label(self) -> &'static str {
         match self {
             RequeueCause::BandDeath => "band-death",
@@ -64,6 +65,7 @@ pub enum DropCause {
 }
 
 impl DropCause {
+    /// Stable lowercase name for counters and trace JSON.
     pub fn label(self) -> &'static str {
         match self {
             DropCause::RetriesExhausted => "retries-exhausted",
@@ -116,14 +118,17 @@ const TID_STEPS: u32 = 0;
 const TID_EVENTS: u32 = 1;
 
 impl TraceCollector {
+    /// An empty collector.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append a lifecycle event.
     pub fn push(&mut self, ev: LifeEvent) {
         self.events.push(ev);
     }
 
+    /// Every recorded event, in arrival order.
     pub fn events(&self) -> &[LifeEvent] {
         &self.events
     }

@@ -57,16 +57,19 @@ impl Hist {
         (64 - v.leading_zeros()) as usize
     }
 
+    /// Record one sample.
     pub fn observe(&mut self, v: u64) {
         self.counts[Self::bucket(v)] += 1;
         self.sum += v as u128;
         self.n += 1;
     }
 
+    /// Number of samples.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Sum of all samples.
     pub fn sum(&self) -> u128 {
         self.sum
     }
@@ -130,10 +133,12 @@ pub struct WindowSeries {
 }
 
 impl WindowSeries {
+    /// An empty series with the given window width (cycles; min 1).
     pub fn new(window: Cycle) -> Self {
         WindowSeries { window: window.max(1), vals: Vec::new() }
     }
 
+    /// Accumulate `amount` into the window containing cycle `at`.
     pub fn add(&mut self, at: Cycle, amount: u64) {
         let mut idx = (at / self.window) as usize;
         while idx >= MAX_WINDOWS {
@@ -157,10 +162,12 @@ impl WindowSeries {
         self.vals.truncate(half);
     }
 
+    /// Current window width in cycles (doubles as the series compacts).
     pub fn window(&self) -> Cycle {
         self.window
     }
 
+    /// Per-window accumulated values.
     pub fn values(&self) -> &[u64] {
         &self.vals
     }
@@ -182,6 +189,7 @@ pub struct LaneSet {
 }
 
 impl LaneSet {
+    /// Grow to at least `lanes` lanes.
     pub fn ensure(&mut self, lanes: usize) {
         while self.totals.len() < lanes {
             self.totals.push(0);
@@ -199,10 +207,12 @@ impl LaneSet {
         }
     }
 
+    /// Per-lane running totals.
     pub fn totals(&self) -> &[u64] {
         &self.totals
     }
 
+    /// Per-lane windowed series.
     pub fn windows(&self) -> &[WindowSeries] {
         &self.windows
     }
@@ -244,46 +254,60 @@ pub struct MetricsRegistry {
     pub hbm_chan_busy: LaneSet,
     /// Per-slot NoC-collective busy cycles (SumReduce/MaxReduce/Multicast).
     pub noc_slot_busy: LaneSet,
+    /// Per-transformer-layer batch entries (lane = layer index): how many
+    /// step entries ran each layer, over virtual time. Empty unless the
+    /// run serves full layers (`SchedulerConfig::ffn_mult >= 1`).
+    pub layer_entries: LaneSet,
 }
 
 impl MetricsRegistry {
+    /// An empty registry.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Add `v` to a counter.
     pub fn inc(&mut self, name: &'static str, v: u64) {
         *self.counters.entry(name).or_insert(0) += v;
     }
 
+    /// Overwrite a counter.
     pub fn set_counter(&mut self, name: &'static str, v: u64) {
         self.counters.insert(name, v);
     }
 
+    /// Counter value (0 when never touched).
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
+    /// Overwrite a gauge.
     pub fn gauge_set(&mut self, name: &'static str, v: u64) {
         self.gauges.insert(name, v);
     }
 
+    /// Raise a gauge to at least `v`.
     pub fn gauge_max(&mut self, name: &'static str, v: u64) {
         let g = self.gauges.entry(name).or_insert(0);
         *g = (*g).max(v);
     }
 
+    /// Gauge value (0 when never touched).
     pub fn gauge(&self, name: &str) -> u64 {
         self.gauges.get(name).copied().unwrap_or(0)
     }
 
+    /// Record a sample into a named histogram.
     pub fn observe(&mut self, name: &'static str, v: u64) {
         self.hists.entry(name).or_default().observe(v);
     }
 
+    /// Named histogram, if any sample was recorded.
     pub fn hist(&self, name: &str) -> Option<&Hist> {
         self.hists.get(name)
     }
 
+    /// Accumulate into a named windowed series.
     pub fn series_add(&mut self, name: &'static str, at: Cycle, amount: u64) {
         self.series
             .entry(name)
@@ -291,6 +315,7 @@ impl MetricsRegistry {
             .add(at, amount);
     }
 
+    /// Named windowed series, if ever written.
     pub fn series(&self, name: &str) -> Option<&WindowSeries> {
         self.series.get(name)
     }
@@ -304,6 +329,7 @@ impl MetricsRegistry {
             + self.series.values().map(|s| s.vals.len()).sum::<usize>()
             + self.hbm_chan_busy.footprint()
             + self.noc_slot_busy.footprint()
+            + self.layer_entries.footprint()
     }
 
     fn keep(name: &str, include_engine: bool) -> bool {
@@ -347,6 +373,9 @@ impl MetricsRegistry {
         for (lane, &v) in self.noc_slot_busy.totals().iter().enumerate() {
             let _ = writeln!(out, "flatattn_noc_slot_busy_cycles{{slot=\"{lane}\"}} {v}");
         }
+        for (lane, &v) in self.layer_entries.totals().iter().enumerate() {
+            let _ = writeln!(out, "flatattn_layer_entries{{layer=\"{lane}\"}} {v}");
+        }
         out
     }
 
@@ -386,6 +415,7 @@ impl MetricsRegistry {
             ),
             ("hbm_channel_busy", self.hbm_chan_busy.to_json()),
             ("noc_slot_busy", self.noc_slot_busy.to_json()),
+            ("layer_entries", self.layer_entries.to_json()),
         ])
     }
 }

@@ -3,69 +3,24 @@
 //!
 //! # §Telemetry design
 //!
-//! ## Event model
-//!
-//! The scheduler and router narrate a run as a stream of
-//! [`LifeEvent`]s anchored on the **virtual clock** (cycles): every request
-//! moves `queued → admitted → prefill-chunk×N → decode-step×M → completed`,
-//! with `requeue`/`expired` detours carrying cause labels (band death,
-//! deadline retry, preemption, pool exhaustion), and the machine lane records
-//! one `step` slice per composed batch plus `fault`/`band-dead` instants.
-//! The same stream drives both exports: the chrome-trace JSON written by
-//! `schedule --trace-out` (requests as pids, phases as slices — see
-//! [`events`] for the time-unit convention shared with `sim::trace`) and the
-//! lifecycle counters/histograms in the metrics registry.
-//!
-//! ## Determinism argument
-//!
-//! Everything in the deterministic snapshot is a pure function of the
-//! serving schedule, which PR-7/8's differential walls already pin to be
-//! identical across `--threads` and across full-rebuild/incremental/memoized
-//! composition. Two details make the *resource* metrics hold to the same
-//! standard:
-//!
-//! - **Busy fractions are occupancy sums, not achieved service.** Summing
-//!   `op.occupancy` per resource over the composed program is independent of
-//!   the DES's execution order, hence thread-invariant. It also survives
-//!   fault derating (we report nominal scheduled demand; the makespan
-//!   stretch shows up in the step slices instead).
-//! - **Attribution uses stable identities only.** The batch builders
-//!   allocate HBM channel resources first, so `ResourceId(c) == channel c` —
-//!   exact per-channel totals fall out of the op table. NoC row/col buses
-//!   have *no* stable global id across solo-vs-batch composes, so collective
-//!   traffic (SumReduce/MaxReduce/Multicast) is attributed per batch *slot*
-//!   via the entry spans instead. Both quantities are additive between a
-//!   solo-composed entry and the same entry inside a batch (the conservation
-//!   property memoization relies on), so the memo path merges per-entry
-//!   contributions bit-identically to scanning the full batch program.
-//!
-//! Counters that describe *how the simulator computed* the run — composer
-//! patch/memo hit rates — are mode-dependent by design; they live under the
-//! `engine_` prefix and are excluded from the deterministic snapshot
-//! ([`metrics::ENGINE_PREFIX`]).
-//!
-//! ## Why windows, not raw series
-//!
-//! A 1M-request stream takes millions of steps; storing anything per step
-//! (let alone per token) would make observability the biggest allocation in
-//! the simulator. Timeseries therefore use [`metrics::WindowSeries`]: at
-//! most [`metrics::MAX_WINDOWS`] windows whose length doubles (merging
-//! pairwise) when the run outgrows them. Attributing each step's amount to
-//! the window containing the step's start commutes with that re-bucketing,
-//! so the bounded series stays a deterministic function of the event stream
-//! no matter when doublings happen. Histograms are fixed 65-bucket log2
-//! (HDR-style); the registry footprint is O(windows + buckets + names) —
-//! asserted by the memory-bound test — never O(requests).
-//!
-//! ## Cost model
-//!
-//! Telemetry is opt-in per run: the scheduler entry points take
-//! `Option<&mut RunTelemetry>`, and `None` (the default path) does no work
-//! and no allocation — the composer's probe stays disabled and the only
-//! residue is a handful of `is_some()` checks. When on, per-step cost is
-//! O(channels + entries) on memoized steps and one O(ops) scan otherwise.
-//! Wall-clock phase timers ([`profile`]) are a further opt-in (`--profile`)
-//! and are never part of deterministic output.
+//! The scheduler and router narrate a run as a stream of [`LifeEvent`]s
+//! anchored on the virtual clock (request lifecycle transitions plus
+//! machine-lane step slices and fault instants); the same stream drives
+//! both the chrome-trace JSON written by `schedule --trace-out` (time-unit
+//! convention in [`events`]) and the lifecycle counters/histograms in the
+//! metrics registry. The deterministic snapshot is a pure function of the
+//! serving schedule: busy fractions are occupancy sums (not achieved
+//! service, hence thread-invariant), attribution uses stable identities
+//! only (HBM channels by resource id, collective traffic per batch slot),
+//! and mode-dependent composer counters live under the `engine_` prefix
+//! and are excluded ([`metrics::ENGINE_PREFIX`]). Timeseries are bounded
+//! by doubling windows ([`metrics::WindowSeries`]) so the registry
+//! footprint is never O(requests). Telemetry is opt-in per run
+//! (`Option<&mut RunTelemetry>`; `None` does no work and no allocation),
+//! and wall-clock [`profile`] timers (`--profile`) are never part of
+//! deterministic output. The full design essay — determinism argument,
+//! window re-bucketing proof, cost model — lives in
+//! `docs/ARCHITECTURE.md` §"Telemetry".
 
 pub mod events;
 pub mod metrics;
@@ -95,8 +50,11 @@ pub enum StepMode {
 /// report that previously went only to stderr).
 #[derive(Clone, Debug, PartialEq)]
 pub struct FaultNote {
+    /// Ops killed outright (their tile died before issue).
     pub killed: u32,
+    /// Ops stalled forever behind killed dependencies.
     pub stalled: u32,
+    /// Human-readable stall report.
     pub detail: String,
 }
 
@@ -109,11 +67,14 @@ pub struct StepProbe {
     pub chan_busy: Vec<u64>,
     /// Scheduled NoC-collective busy cycles per batch slot.
     pub noc_slot_busy: Vec<u64>,
+    /// How the step program was obtained (rebuilt / memoized / patched).
     pub mode: StepMode,
+    /// Fault diagnostics when the step ran degraded.
     pub fault: Option<FaultNote>,
 }
 
 impl StepProbe {
+    /// A zeroed probe sized for `n_chan` channels and `slots` bands.
     pub fn new(n_chan: usize, slots: usize) -> Self {
         StepProbe {
             chan_busy: vec![0; n_chan],
@@ -123,6 +84,7 @@ impl StepProbe {
         }
     }
 
+    /// Zero every per-step accumulator in place.
     pub fn reset(&mut self) {
         self.chan_busy.iter_mut().for_each(|v| *v = 0);
         self.noc_slot_busy.iter_mut().for_each(|v| *v = 0);
@@ -134,16 +96,29 @@ impl StepProbe {
 /// Everything the scheduler observes about one composed step, handed to
 /// [`RunTelemetry::record_step`].
 pub struct StepObs<'a> {
+    /// 0-based step number.
     pub index: u64,
+    /// Virtual clock at step start.
     pub start: Cycle,
+    /// Virtual clock at step end.
     pub end: Cycle,
+    /// DES stats of the step's composed program.
     pub stats: &'a RunStats,
     /// Per-entry `(slot, request, is_prefill, tokens)` of the step batch.
     pub entries: &'a [(usize, usize, bool, u64)],
+    /// Requests waiting for admission after this step.
     pub queue_depth: u64,
+    /// KV pages allocated across live requests.
     pub pages_in_use: u64,
+    /// Batch slots occupied this step.
     pub slots: u64,
+    /// Optional per-channel / per-slot busy probe of this step.
     pub probe: Option<&'a StepProbe>,
+    /// §Layer serving: per-transformer-layer entry counts of this step
+    /// (`counts[l]` = entries that ran layer `l`), `None` for
+    /// attention-only steps. Feeds the [`MetricsRegistry::layer_entries`]
+    /// lanes and the pipelining counters.
+    pub layer_counts: Option<&'a [u64]>,
 }
 
 /// The per-run telemetry sink threaded through `scheduler::simulate` /
@@ -151,12 +126,16 @@ pub struct StepObs<'a> {
 /// collector and profiler are further opt-ins.
 #[derive(Debug, Default)]
 pub struct RunTelemetry {
+    /// Always-on counters / gauges / histograms / series.
     pub metrics: MetricsRegistry,
+    /// Optional lifecycle trace collector.
     pub trace: Option<TraceCollector>,
+    /// Optional self-profiler (wall-clock per scheduler phase).
     pub profile: Option<Profiler>,
 }
 
 impl RunTelemetry {
+    /// A metrics-only sink (no trace, no profiler).
     pub fn new() -> Self {
         Self::default()
     }
@@ -181,16 +160,19 @@ impl RunTelemetry {
         }
     }
 
+    /// A request entered the admission queue.
     pub fn on_queued(&mut self, req: usize, t: Cycle) {
         self.metrics.inc("requests_queued", 1);
         self.event(LifeEvent::Queued { req: req as u32, t });
     }
 
+    /// A request was admitted into a batch slot.
     pub fn on_admitted(&mut self, req: usize, slot: usize, t: Cycle) {
         self.metrics.inc("requests_admitted", 1);
         self.event(LifeEvent::Admitted { req: req as u32, slot: slot as u32, t });
     }
 
+    /// A request produced its first output token.
     pub fn on_first_token(&mut self, req: usize, t: Cycle) {
         self.event(LifeEvent::FirstToken { req: req as u32, t });
     }
@@ -218,6 +200,7 @@ impl RunTelemetry {
         self.event(LifeEvent::Completed { req: req as u32, t });
     }
 
+    /// A request was bumped back to the queue.
     pub fn on_requeued(&mut self, req: usize, t: Cycle, cause: RequeueCause) {
         self.metrics.inc(
             match cause {
@@ -230,11 +213,13 @@ impl RunTelemetry {
         self.event(LifeEvent::Requeued { req: req as u32, t, cause });
     }
 
+    /// A request was permanently dropped.
     pub fn on_dropped(&mut self, req: usize, t: Cycle, cause: DropCause) {
         self.metrics.inc("requests_expired", 1);
         self.event(LifeEvent::Dropped { req: req as u32, t, cause });
     }
 
+    /// A slot's tile band was declared dead by the router.
     pub fn on_band_dead(&mut self, slot: usize, t: Cycle) {
         self.metrics.inc("bands_died", 1);
         self.event(LifeEvent::BandDead { slot: slot as u32, t });
@@ -269,6 +254,15 @@ impl RunTelemetry {
             }
         }
         m.series_add("decode_tokens", obs.start, tokens);
+        if let Some(counts) = obs.layer_counts {
+            m.inc("layered_steps", 1);
+            m.layer_entries.add(obs.start, counts);
+            // A step whose entries sit at two or more distinct layer
+            // indices is genuinely pipelining layers across tile bands.
+            if counts.iter().filter(|&&c| c > 0).count() >= 2 {
+                m.inc("pipelined_steps", 1);
+            }
+        }
         if let Some(p) = obs.probe {
             m.hbm_chan_busy.add(obs.start, &p.chan_busy);
             m.noc_slot_busy.add(obs.start, &p.noc_slot_busy);
@@ -321,6 +315,7 @@ impl RunTelemetry {
         self.metrics.gauge_set("final_cycles", clock);
     }
 
+    /// Fold another profiler's laps into this sink's profiler (if enabled).
     pub fn merge_profile(&mut self, other: &Profiler) {
         if let Some(p) = self.profile.as_mut() {
             p.merge(other);
@@ -370,6 +365,7 @@ mod tests {
             pages_in_use: 7,
             slots: 4,
             probe: Some(&probe),
+            layer_counts: Some(&[1, 1]),
         });
         tel.on_first_token(0, 500);
         tel.on_completed(0, 900, 0, 500, 5);
@@ -384,6 +380,9 @@ mod tests {
         assert_eq!(m.gauge("peak_queue_depth"), 3);
         assert_eq!(m.gauge("final_cycles"), 900);
         assert_eq!(m.hbm_chan_busy.totals(), &[0, 77, 0, 0]);
+        assert_eq!(m.counter("layered_steps"), 1);
+        assert_eq!(m.counter("pipelined_steps"), 1);
+        assert_eq!(m.layer_entries.totals(), &[1, 1]);
         assert_eq!(m.hist("ttft_cycles").unwrap().count(), 1);
         assert_eq!(m.hist("tpot_cycles").unwrap().count(), 1);
         let doc = tel.trace_json().unwrap();

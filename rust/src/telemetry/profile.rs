@@ -33,6 +33,7 @@ pub enum ProfPhase {
     Metrics,
 }
 
+/// Every profiled phase, in report order.
 pub const ALL_PHASES: [ProfPhase; 6] = [
     ProfPhase::Compose,
     ProfPhase::Patch,
@@ -43,6 +44,7 @@ pub const ALL_PHASES: [ProfPhase; 6] = [
 ];
 
 impl ProfPhase {
+    /// Stable lowercase name.
     pub fn label(self) -> &'static str {
         match self {
             ProfPhase::Compose => "compose",
@@ -67,6 +69,7 @@ pub fn set_profiling(on: bool) {
     PROFILING.store(on, Ordering::Relaxed);
 }
 
+/// True while self-profiling is globally enabled.
 pub fn profiling() -> bool {
     PROFILING.load(Ordering::Relaxed)
 }
@@ -102,6 +105,7 @@ pub struct Profiler {
 }
 
 impl Profiler {
+    /// A zeroed profiler.
     pub fn new() -> Self {
         Self::default()
     }
@@ -110,16 +114,19 @@ impl Profiler {
         ALL_PHASES.iter().position(|&p| p == phase).unwrap()
     }
 
+    /// Add one lap to a phase.
     pub fn add_nanos(&mut self, phase: ProfPhase, nanos: u64) {
         let i = Self::idx(phase);
         self.nanos[i] += nanos;
         self.calls[i] += 1;
     }
 
+    /// Accumulated wall-clock of a phase.
     pub fn nanos(&self, phase: ProfPhase) -> u64 {
         self.nanos[Self::idx(phase)]
     }
 
+    /// Fold another profiler's laps into this one.
     pub fn merge(&mut self, other: &Profiler) {
         for i in 0..ALL_PHASES.len() {
             self.nanos[i] += other.nanos[i];
@@ -127,6 +134,7 @@ impl Profiler {
         }
     }
 
+    /// Wall-clock summed over every phase.
     pub fn total_nanos(&self) -> u64 {
         self.nanos.iter().sum()
     }

@@ -9,8 +9,11 @@ use std::collections::BTreeMap;
 /// Parsed arguments: positionals in order, plus `--key [value]` options.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Positional arguments, in order.
     pub positional: Vec<String>,
+    /// `--key value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches, in order of appearance.
     pub flags: Vec<String>,
 }
 
@@ -43,18 +46,22 @@ pub fn parse(raw: &[String], spec_flags: &[&str]) -> Result<Args, String> {
 }
 
 impl Args {
+    /// True if `--name` was passed as a bare switch.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name`, if the option was passed.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name`, or `default` when absent.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Parse `--name` as `usize`, defaulting when absent; the error names the flag.
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
         match self.get(name) {
             None => Ok(default),
@@ -64,6 +71,7 @@ impl Args {
         }
     }
 
+    /// Parse `--name` as `u64`, defaulting when absent; the error names the flag.
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
         match self.get(name) {
             None => Ok(default),

@@ -11,27 +11,37 @@ use std::fmt::Write as _;
 /// to 2^53, far beyond any cycle count we serialize at report granularity).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// A number (stored as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object; `BTreeMap` keys give deterministic serialization.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Build an object from static-key pairs.
     pub fn obj(pairs: impl IntoIterator<Item = (&'static str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a number.
     pub fn num(v: impl Into<f64>) -> Json {
         Json::Num(v.into())
     }
 
+    /// Build a string.
     pub fn str(v: impl Into<String>) -> Json {
         Json::Str(v.into())
     }
 
+    /// Numeric value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(v) => Some(*v),
@@ -39,6 +49,7 @@ impl Json {
         }
     }
 
+    /// String slice, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -46,6 +57,7 @@ impl Json {
         }
     }
 
+    /// Element slice, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -53,6 +65,7 @@ impl Json {
         }
     }
 
+    /// Member lookup, if this is an `Obj`.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),

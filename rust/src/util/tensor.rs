@@ -46,29 +46,35 @@ impl Tensor {
         Self { rows, cols, data }
     }
 
+    /// Number of rows.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Number of columns.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Row-major backing slice.
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable row-major backing slice.
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
     #[inline]
+    /// Element at `(r, c)`.
     pub fn at(&self, r: usize, c: usize) -> f32 {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c]
     }
 
     #[inline]
+    /// Set the element at `(r, c)`.
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
         debug_assert!(r < self.rows && c < self.cols);
         self.data[r * self.cols + c] = v;

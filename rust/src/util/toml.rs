@@ -11,13 +11,18 @@ use std::collections::BTreeMap;
 /// A parsed TOML value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// A boolean.
     Bool(bool),
 }
 
 impl TomlValue {
+    /// String value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             TomlValue::Str(s) => Some(s),
@@ -25,6 +30,7 @@ impl TomlValue {
         }
     }
 
+    /// Non-negative integer value, if this is an `Int >= 0`.
     pub fn as_u64(&self) -> Option<u64> {
         match *self {
             TomlValue::Int(i) if i >= 0 => Some(i as u64),
@@ -32,10 +38,12 @@ impl TomlValue {
         }
     }
 
+    /// [`Self::as_u64`] narrowed to `usize`.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|v| v as usize)
     }
 
+    /// Float value (integers widen), if numeric.
     pub fn as_f64(&self) -> Option<f64> {
         match *self {
             TomlValue::Float(f) => Some(f),
@@ -44,6 +52,7 @@ impl TomlValue {
         }
     }
 
+    /// Boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match *self {
             TomlValue::Bool(b) => Some(b),
@@ -56,6 +65,7 @@ impl TomlValue {
 /// in the `""` table.
 #[derive(Debug, Default, Clone)]
 pub struct TomlDoc {
+    /// `table name -> key -> value`; top-level keys live under `""`.
     pub tables: BTreeMap<String, BTreeMap<String, TomlValue>>,
 }
 
@@ -70,14 +80,17 @@ impl TomlDoc {
         self.get(table, key).and_then(|v| v.as_usize()).unwrap_or(default)
     }
 
+    /// `u64` at `table.key`, or `default`.
     pub fn u64_or(&self, table: &str, key: &str, default: u64) -> u64 {
         self.get(table, key).and_then(|v| v.as_u64()).unwrap_or(default)
     }
 
+    /// `f64` at `table.key`, or `default`.
     pub fn f64_or(&self, table: &str, key: &str, default: f64) -> f64 {
         self.get(table, key).and_then(|v| v.as_f64()).unwrap_or(default)
     }
 
+    /// `bool` at `table.key`, or `default`.
     pub fn bool_or(&self, table: &str, key: &str, default: bool) -> bool {
         self.get(table, key).and_then(|v| v.as_bool()).unwrap_or(default)
     }

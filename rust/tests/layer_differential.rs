@@ -1,0 +1,225 @@
+//! §Layer composition differential wall.
+//!
+//! A composed transformer layer (`dataflow::layer_program`) chains the
+//! attention kernel and the four projection/FFN GEMMs behind strict
+//! cross-kernel barriers. Strictness is the whole correctness story, so
+//! it is pinned from four directions:
+//!
+//! 1. **Additivity** — the composed makespan equals the solo attention
+//!    makespan plus the solo GEMM makespans, *exactly*, for every
+//!    dataflow × weight residency. The entry barrier completes at the
+//!    previous kernel's last sink completion and all shared resources
+//!    (HBM channels) have drained by then, so each kernel's sub-DAG
+//!    replays its solo schedule shifted by the running total.
+//! 2. **Trace shift** — per-op start/completion cycles of each composed
+//!    GEMM kernel are the solo program's records shifted by that running
+//!    total, op for op; the attention span's records match the solo
+//!    attention build verbatim.
+//! 3. **Fold exactness** — folding elides only attention-private compute
+//!    chains and GEMM kernels never fold, so folded and unfolded layer
+//!    builds execute to bit-identical `RunStats`.
+//! 4. **Batch conservation** — `compose_layered` on channel-disjoint
+//!    entries reproduces each entry's solo layered timeline bit for bit
+//!    (the attention-only conservation wall extended to GEMM tails).
+//!
+//! Tests toggling the process-global folding switch serialize on a local
+//! lock (each integration-test binary is its own process).
+
+use std::sync::Mutex;
+
+use flatattention::arch::presets;
+use flatattention::dataflow::{
+    build_program, gemm_band_program, layer_program, set_symmetry_folding, tracked_tile, Dataflow,
+    LayerWorkload, Workload, ALL_DATAFLOWS, ALL_RESIDENCIES,
+};
+use flatattention::hbm::PageMap;
+use flatattention::scheduler::batch::{compose_layered, BatchEntry, LayerParams};
+use flatattention::sim::{execute, execute_traced};
+
+static FOLD_LOCK: Mutex<()> = Mutex::new(());
+
+fn layer_wl(weights: flatattention::dataflow::WeightResidency) -> LayerWorkload {
+    LayerWorkload::new(
+        Workload::new(256, 64, 4, 1).with_kv_heads(2).with_causal(true),
+        2,
+        weights,
+    )
+}
+
+#[test]
+fn composed_layer_makespan_is_strictly_additive() {
+    // ISSUE acceptance: the layer-composed program reproduces the solo
+    // kernel timelines under strict barriers — makespan, HBM traffic and
+    // FLOPs all partition exactly, for every dataflow × residency.
+    let _guard = FOLD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arch = presets::table2(8);
+    for df in ALL_DATAFLOWS {
+        for res in ALL_RESIDENCIES {
+            let lw = layer_wl(res);
+            let lp = layer_program(&arch, &lw, df, 2);
+            let tracked = tracked_tile(&arch, df, 2);
+            let composed = execute(&lp.program, tracked);
+
+            let attn = execute(&build_program(&arch, &lw.attn, df, 2), tracked);
+            let mut makespan = attn.makespan;
+            let mut hbm_bytes = attn.hbm_bytes;
+            for g in lw.gemms() {
+                let solo = execute(&gemm_band_program(&arch, &g, 0, arch.mesh_y, res), 0);
+                makespan += solo.makespan;
+                hbm_bytes += solo.hbm_bytes;
+            }
+            assert_eq!(
+                composed.makespan, makespan,
+                "{df:?}/{}: composed layer must equal the sum of solo kernel makespans",
+                res.label()
+            );
+            assert_eq!(composed.hbm_bytes, hbm_bytes, "{df:?}/{}", res.label());
+            assert_eq!(lp.program.flops, lw.flops(), "{df:?}/{}", res.label());
+        }
+    }
+}
+
+#[test]
+fn composed_kernel_traces_are_solo_traces_shifted() {
+    // Stronger than additivity: every tile-owned op of composed kernel i
+    // starts and completes at its solo cycle plus the running total of
+    // the preceding kernels' makespans. Barriers are `NO_TILE`, so they
+    // never appear in either trace and op indices line up span-relative.
+    let _guard = FOLD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arch = presets::table2(8);
+    for (df, group) in [(Dataflow::Flash2, 1usize), (Dataflow::FlatColl, 2)] {
+        for res in ALL_RESIDENCIES {
+            let lw = layer_wl(res);
+            let lp = layer_program(&arch, &lw, df, group);
+            let tracked = tracked_tile(&arch, df, group);
+            let (_, composed) = execute_traced(&lp.program, tracked, Some(u32::MAX));
+
+            // Attention span: composed records restricted to spans[0]
+            // must equal the solo attention build's records verbatim
+            // (same op ids, zero shift).
+            let attn_prog = build_program(&arch, &lw.attn, df, group);
+            let (attn_stats, attn_trace) = execute_traced(&attn_prog, tracked, Some(u32::MAX));
+            let (s0, e0) = lp.spans[0];
+            let mut in_span: Vec<_> = composed
+                .iter()
+                .filter(|r| (r.0 as usize) >= s0 && (r.0 as usize) < e0)
+                .copied()
+                .collect();
+            in_span.sort_unstable();
+            let mut want = attn_trace.clone();
+            want.sort_unstable();
+            assert_eq!(in_span, want, "{df:?}/{}: attention span trace", res.label());
+
+            // GEMM spans: solo records shifted by the running total.
+            let mut shift = attn_stats.makespan;
+            for (i, g) in lw.gemms().iter().enumerate() {
+                let solo_prog = gemm_band_program(&arch, g, 0, arch.mesh_y, res);
+                let (solo_stats, solo_trace) = execute_traced(&solo_prog, 0, Some(u32::MAX));
+                let (s, e) = lp.spans[i + 1];
+                let mut got: Vec<_> = composed
+                    .iter()
+                    .filter(|r| (r.0 as usize) >= s && (r.0 as usize) < e)
+                    .map(|&(op, st, en)| (op - s as u32, st, en))
+                    .collect();
+                got.sort_unstable();
+                let mut want: Vec<_> =
+                    solo_trace.iter().map(|&(op, st, en)| (op, st + shift, en + shift)).collect();
+                want.sort_unstable();
+                assert_eq!(
+                    got,
+                    want,
+                    "{df:?}/{}: kernel {} ({}) trace must be the solo trace shifted by {shift}",
+                    res.label(),
+                    i + 1,
+                    g.label
+                );
+                shift += solo_stats.makespan;
+            }
+        }
+    }
+}
+
+#[test]
+fn folded_layer_matches_unfolded_layer() {
+    // Fold exactness survives cross-kernel composition: folding elides
+    // only attention-private compute chains, the per-stream attention
+    // sinks (where the first GEMM's entry barrier attaches) are emitted
+    // verbatim in both modes, and GEMM kernels never fold.
+    let _guard = FOLD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arch = presets::table2(8);
+    for (df, group) in [(Dataflow::Flash2, 1usize), (Dataflow::Flat, 2), (Dataflow::FlatColl, 4)] {
+        for res in ALL_RESIDENCIES {
+            let lw = layer_wl(res);
+            let tracked = tracked_tile(&arch, df, group);
+            set_symmetry_folding(true);
+            let folded = layer_program(&arch, &lw, df, group);
+            set_symmetry_folding(false);
+            let unfolded = layer_program(&arch, &lw, df, group);
+            set_symmetry_folding(true);
+            assert!(
+                folded.program.num_ops() <= unfolded.program.num_ops(),
+                "{df:?}/{}",
+                res.label()
+            );
+            assert_eq!(
+                execute(&folded.program, tracked),
+                execute(&unfolded.program, tracked),
+                "{df:?}/{}: folded layer diverges from unfolded",
+                res.label()
+            );
+        }
+    }
+}
+
+/// A page map on the given slot's affine south-channel partition of the
+/// table2-8x8 arch (8 west + 8 south channels, 4 slots ⇒ 2 south
+/// channels per slot): entry K/V channels are pairwise disjoint, and the
+/// GEMM tails ride each band's own west row channels — no resource is
+/// shared between entries.
+fn affine_pages(slot: usize, tokens: u64) -> PageMap {
+    let mut pm = PageMap::new(32);
+    pm.grow_to(tokens, |p| (8 + slot as u32 * 2) + (p % 2) as u32);
+    pm
+}
+
+#[test]
+fn layered_batch_per_request_stats_match_solo_runs() {
+    // The attention-only conservation wall extended to GEMM tails: under
+    // channel-disjoint placement, each entry's composed attention+tail
+    // trace (span-relative ids, absolute cycles) is bit-identical to
+    // composing that entry alone on the same slot.
+    let _guard = FOLD_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let arch = presets::table2(8);
+    let wls = [
+        Workload::new(128, 64, 4, 1).with_kv_heads(2).with_causal(true),
+        Workload::new(300, 64, 4, 1).with_kv_heads(1).decode(),
+    ];
+    let slots = [0usize, 2];
+    let pages: Vec<PageMap> =
+        slots.iter().zip(&wls).map(|(&s, wl)| affine_pages(s, wl.kv_len())).collect();
+    let lp = LayerParams {
+        ffn_mult: 2,
+        weights: flatattention::dataflow::WeightResidency::HbmStream,
+    };
+    for df in ALL_DATAFLOWS {
+        let entries: Vec<BatchEntry<'_>> = (0..2)
+            .map(|k| BatchEntry { request: k, slot: slots[k], workload: wls[k], pages: &pages[k] })
+            .collect();
+        let mixed = compose_layered(&arch, df, 2, 4, &entries, lp);
+        let (_, mixed_stats) = mixed.entry_stats();
+        for k in 0..2 {
+            let solo_entry = vec![BatchEntry {
+                request: k,
+                slot: slots[k],
+                workload: wls[k],
+                pages: &pages[k],
+            }];
+            let solo = compose_layered(&arch, df, 2, 4, &solo_entry, lp);
+            let (_, solo_stats) = solo.entry_stats();
+            assert_eq!(
+                mixed_stats[k], solo_stats[0],
+                "{df:?} entry {k}: layered mixed-batch stats diverge from the solo compose"
+            );
+        }
+    }
+}

@@ -18,6 +18,14 @@ Targets (mirroring the asserts/WARNINGs inside the bench harnesses):
                                          reach; the metric is still recorded)
   serving_sweep   decode_mqa_traffic_reduction >= 10.0
                   decode_over_prefill_makespan <= 0.1
+                  layer_pipeline_utilization   in (0, 1.0]: mesh occupancy of
+                                         the layered serving replay (full
+                                         transformer layers per step, requests
+                                         pipelined across bands at different
+                                         layer depths)
+                  layer_roofline_utilization   in (0, 1.0]: roofline check of a
+                                         GEMM-bearing composed layer program
+                                         (attention + projection/FFN tails)
   schedule_sweep  continuous_over_static_*     >= 1.5 (every dataflow row)
                   degraded_over_faultfree_tokens_per_s >= 0.6 (router keeps
                                          most throughput with 1/8 of the
@@ -109,6 +117,8 @@ srv = load("BENCH_serving_sweep.json")
 if srv:
     require("serving_sweep", srv, "decode_mqa_traffic_reduction", lo=10.0)
     require("serving_sweep", srv, "decode_over_prefill_makespan", hi=0.1)
+    require("serving_sweep", srv, "layer_pipeline_utilization", lo=1e-9, hi=1.0)
+    require("serving_sweep", srv, "layer_roofline_utilization", lo=1e-9, hi=1.0)
 
 sch = load("BENCH_schedule_sweep.json")
 if sch:

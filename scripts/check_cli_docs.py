@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Keep docs/CLI.md in sync with the binary's --help output.
+
+Extracts every `--flag` token (and every subcommand named on a
+`flatattention <sub>` usage line) from the help text and from docs/CLI.md
+and diffs the two sets, in both directions. CI runs this in the
+`rust-analysis` job; a flag added to the parser must be added both to
+`print_usage()` and to docs/CLI.md before this passes.
+
+Usage:
+    check_cli_docs.py [HELP_FILE]
+
+HELP_FILE is a file containing the output of `flatattention --help`
+(CI captures one with `cargo run --release --quiet -- --help`). Without
+the argument, the script runs `cargo run` itself from rust/ — handy
+locally, but it requires a toolchain and a built target.
+"""
+
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+CLI_DOC = ROOT / "docs" / "CLI.md"
+
+# `--` followed by a letter, then letters/digits with single-dash
+# separators. The lookbehind rejects the inner dashes of `---` markdown
+# table rules; requiring a leading letter rejects `---` itself.
+FLAG_RE = re.compile(r"(?<![-\w])--([a-z][a-z0-9]*(?:-[a-z0-9]+)*)")
+
+# Flags that intentionally appear on only one side of the diff.
+IGNORE = {
+    "help",  # --help is how the help text is obtained; usage omits it
+    "release",  # cargo's own flags, quoted in invocation examples
+    "quiet",
+}
+
+
+def flags_in(text: str) -> set[str]:
+    return {m.group(1) for m in FLAG_RE.finditer(text)} - IGNORE
+
+
+def subcommands_in_help(text: str) -> set[str]:
+    return {
+        m.group(1)
+        for m in re.finditer(r"^\s*flatattention\s+([a-z]+)\b", text, re.M)
+    }
+
+
+def help_text(argv: list[str]) -> str:
+    if len(argv) > 1:
+        return Path(argv[1]).read_text(encoding="utf-8")
+    proc = subprocess.run(
+        ["cargo", "run", "--release", "--quiet", "--", "--help"],
+        cwd=ROOT / "rust",
+        capture_output=True,
+        text=True,
+        check=True,
+    )
+    return proc.stdout
+
+
+def main(argv: list[str]) -> int:
+    help_txt = help_text(argv)
+    doc_txt = CLI_DOC.read_text(encoding="utf-8")
+
+    help_flags = flags_in(help_txt)
+    doc_flags = flags_in(doc_txt)
+    failures = []
+
+    undocumented = sorted(help_flags - doc_flags)
+    if undocumented:
+        failures.append(
+            "flags in --help but missing from docs/CLI.md: "
+            + ", ".join("--" + f for f in undocumented)
+        )
+    phantom = sorted(doc_flags - help_flags)
+    if phantom:
+        failures.append(
+            "flags documented in docs/CLI.md but absent from --help: "
+            + ", ".join("--" + f for f in phantom)
+        )
+
+    missing_subs = sorted(
+        s for s in subcommands_in_help(help_txt)
+        if f"flatattention {s}" not in doc_txt
+    )
+    if missing_subs:
+        failures.append(
+            "subcommands in --help but missing from docs/CLI.md: "
+            + ", ".join(missing_subs)
+        )
+
+    if failures:
+        for f in failures:
+            print(f"check_cli_docs: FAIL: {f}")
+        return 1
+    print(
+        f"check_cli_docs: OK ({len(help_flags)} flags, "
+        f"{len(subcommands_in_help(help_txt))} subcommands in sync)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
